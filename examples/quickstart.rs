@@ -1,0 +1,59 @@
+//! Quickstart: sketch a synthetic clustered dataset, recover centroids with
+//! CKM, and compare against Lloyd-Max — the paper's headline workflow.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use ckm::baselines::{kmeans, KmInit, KmOptions};
+use ckm::ckm::{solve, CkmOptions};
+use ckm::data::gmm::GmmConfig;
+use ckm::metrics::{adjusted_rand_index, labels_for, sse};
+use ckm::sketch::sketch_dataset;
+use ckm::util::logging::Stopwatch;
+use ckm::util::rng::Rng;
+
+fn main() {
+    // Paper §4.1 defaults (scaled-down N for a quick demo): K = 10 unit
+    // Gaussians in dimension 10, m = 1000 frequencies.
+    let (k, n_dims, n_points, m) = (10, 10, 30_000, 1000);
+    let mut rng = Rng::new(0xCAFE);
+    let g = GmmConfig::paper_default(k, n_dims, n_points).generate(&mut rng);
+    println!("dataset: N={n_points} n={n_dims} K={k}   sketch: m={m}");
+
+    // --- CKM: one pass to sketch, then N-independent recovery.
+    let sw = Stopwatch::start();
+    let sk = sketch_dataset(&g.dataset.points, n_dims, m, 7, None);
+    let t_sketch = sw.seconds();
+    let sw = Stopwatch::start();
+    let sol = solve(&sk, k, &CkmOptions::default());
+    let t_solve = sw.seconds();
+    let sse_ckm = sse(&g.dataset.points, n_dims, &sol.centroids);
+
+    // --- Lloyd-Max with 5 replicates (the paper's baseline protocol).
+    let sw = Stopwatch::start();
+    let km = kmeans(
+        &g.dataset.points,
+        n_dims,
+        k,
+        &KmOptions { init: KmInit::Range, replicates: 5, seed: 1, ..Default::default() },
+    );
+    let t_km = sw.seconds();
+
+    let ari_ckm = adjusted_rand_index(
+        &labels_for(&g.dataset.points, n_dims, &sol.centroids),
+        &g.dataset.labels,
+    );
+    let ari_km = adjusted_rand_index(&km.assignments, &g.dataset.labels);
+
+    println!("                 SSE/N        ARI     time");
+    println!(
+        "CKM        {:12.4}  {:9.3}   {:.2}s sketch + {:.2}s solve",
+        sse_ckm / n_points as f64,
+        ari_ckm,
+        t_sketch,
+        t_solve
+    );
+    println!("kmeans x5  {:12.4}  {:9.3}   {:.2}s", km.sse / n_points as f64, ari_km, t_km);
+    let rel = sse_ckm / km.sse;
+    println!("relative SSE (CKM / kmeans) = {rel:.3}");
+    assert!(rel.is_finite());
+}

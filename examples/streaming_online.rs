@@ -1,0 +1,87 @@
+//! Online / mergeable sketching demo: data arrives in several "days" of
+//! streams (possibly on different machines); each day is sketched
+//! independently, the accumulators are merged, and the centroids are
+//! recovered from the merged sketch only — no day's raw data is ever
+//! revisited. The result matches sketching everything at once, exactly.
+//!
+//! Run with: `cargo run --release --example streaming_online`
+
+use ckm::ckm::{solve_with_engine, CkmOptions};
+use ckm::data::gmm::GmmConfig;
+use ckm::engine::NativeEngine;
+use ckm::sketch::{FreqDist, SketchAccumulator, SketchOp};
+use ckm::util::rng::Rng;
+
+fn main() {
+    let (k, n_dims, m) = (5usize, 6usize, 512usize);
+    let days = 4;
+    let per_day = 50_000;
+
+    // One shared frequency matrix fixes the sketch domain forever — new
+    // data can keep arriving and merging indefinitely.
+    let mut rng = Rng::new(3);
+    let data_cfg = GmmConfig::paper_default(k, n_dims, days * per_day);
+    let op = SketchOp::new(FreqDist::adapted(1.0).draw(m, n_dims, &mut rng));
+
+    // Whole-dataset reference sketch (what a single pass would produce).
+    let mut whole_src = data_cfg.stream(99);
+    let mut whole = SketchAccumulator::new(m, n_dims);
+    let mut buf = vec![0.0; 8192 * n_dims];
+    loop {
+        let rows = ckm::data::dataset::PointSource::next_chunk(&mut whole_src, &mut buf);
+        if rows == 0 {
+            break;
+        }
+        whole.update(&op, &buf[..rows * n_dims]);
+    }
+
+    // Day-by-day: independent accumulators, merged at the end.
+    let mut day_accs: Vec<SketchAccumulator> = Vec::new();
+    let mut day_src = data_cfg.stream(99); // same underlying stream
+    for day in 0..days {
+        let mut acc = SketchAccumulator::new(m, n_dims);
+        let mut seen = 0;
+        while seen < per_day {
+            let want = (per_day - seen).min(8192);
+            let rows =
+                ckm::data::dataset::PointSource::next_chunk(&mut day_src, &mut buf[..want * n_dims]);
+            if rows == 0 {
+                break;
+            }
+            acc.update(&op, &buf[..rows * n_dims]);
+            seen += rows;
+        }
+        println!("day {day}: sketched {} points (|sum| norm {:.3})", acc.count, acc.sum.norm2());
+        day_accs.push(acc);
+    }
+    let mut merged = day_accs.remove(0);
+    for acc in &day_accs {
+        merged.merge(acc);
+    }
+    println!("\nmerged {} points across {days} days", merged.count);
+
+    let z_whole = whole.finalize();
+    let z_merged = merged.finalize();
+    let max_diff = z_whole
+        .re
+        .iter()
+        .zip(&z_merged.re)
+        .chain(z_whole.im.iter().zip(&z_merged.im))
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("max |merged - single-pass| = {max_diff:.3e} (exact up to fp addition order)");
+    assert!(max_diff < 1e-10);
+
+    // Recover the centroids from the merged sketch alone.
+    let engine = NativeEngine::new(op);
+    let sol = solve_with_engine(
+        &z_merged,
+        &engine,
+        &merged.bounds,
+        k,
+        None,
+        &CkmOptions { replicates: 2, seed: 5, ..CkmOptions::default() },
+    );
+    println!("\nrecovered {} centroids from the merged sketch (cost {:.3e})", sol.centroids.rows, sol.cost);
+    println!("weights: {:?}", sol.normalized_weights());
+}

@@ -1,0 +1,154 @@
+"""AOT lowering: jax (L2 + L1) -> HLO text artifacts + manifest.json.
+
+Run once at build time (`make artifacts`); the rust runtime loads the
+text with `HloModuleProto::from_text_file` and compiles it on the PJRT
+CPU client. HLO *text* (not a serialized proto) is the interchange
+format: jax >= 0.5 emits 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects, while the text parser reassigns ids
+(see /opt/xla-example/README.md).
+
+Artifact matrix (DESIGN.md §2):
+  sketch_b{B}_n{N}_m{M}     B=4096, n_pad=16, m in {256, 1024, 4096}
+  step1_n{N}_m{M}           n_pad=16, m in {256, 1024}, 120 Adam iters
+  step5_k{K}_n{N}_m{M}      K_pad=32, n_pad=16, m in {256, 1024}, 150 iters
+  cost_k{K}_n{N}_m{M}       K_pad=32, cost-only evaluation
+
+Every entry is recorded in artifacts/manifest.json with its input/output
+shapes so the rust side can validate at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+CHUNK_B = 4096
+N_PAD = 16
+K_PAD = 32
+SKETCH_MS = (256, 1024, 4096)
+SOLVER_MS = (256, 1024)
+STEP1_ITERS = 80
+STEP5_ITERS = 100
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-clean round trip)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def shapes_of(specs):
+    return [list(s.shape) for s in specs]
+
+
+def build_entries():
+    """(name, jitted fn, example args, meta) for every artifact."""
+    entries = []
+    for m in SKETCH_MS:
+        args = (f32(CHUNK_B, N_PAD), f32(CHUNK_B), f32(m, N_PAD))
+        entries.append(
+            (
+                f"sketch_b{CHUNK_B}_n{N_PAD}_m{m}",
+                jax.jit(model.sketch_chunk),
+                args,
+                {"entry": "sketch", "b": CHUNK_B, "n": N_PAD, "m": m,
+                 "outputs": [[2, m]]},
+            )
+        )
+        # XLA-fused variant of the same math (kernels/ref.py oracle): the
+        # CPU-deployment fast path. interpret=True Pallas is a correctness
+        # vehicle on CPU; on a real TPU the Pallas kernel IS the fast path
+        # and this variant is unnecessary (DESIGN.md §Perf).
+        entries.append(
+            (
+                f"sketch_xla_b{CHUNK_B}_n{N_PAD}_m{m}",
+                jax.jit(ref.sketch_sums_ref),
+                args,
+                {"entry": "sketch_xla", "b": CHUNK_B, "n": N_PAD, "m": m,
+                 "outputs": [[2, m]]},
+            )
+        )
+    for m in SOLVER_MS:
+        args = (f32(N_PAD), f32(2, m), f32(m, N_PAD), f32(N_PAD), f32(N_PAD), f32())
+        entries.append(
+            (
+                f"step1_n{N_PAD}_m{m}",
+                jax.jit(lambda c0, r, w, lo, hi, lr, _m=m: model.step1_ascend(
+                    c0, r, w, lo, hi, lr, iters=STEP1_ITERS)),
+                args,
+                {"entry": "step1", "n": N_PAD, "m": m, "iters": STEP1_ITERS,
+                 "outputs": [[N_PAD], []]},
+            )
+        )
+        args5 = (
+            f32(K_PAD, N_PAD), f32(K_PAD), f32(K_PAD), f32(2, m), f32(m, N_PAD),
+            f32(N_PAD), f32(N_PAD), f32(), f32(),
+        )
+        entries.append(
+            (
+                f"step5_k{K_PAD}_n{N_PAD}_m{m}",
+                jax.jit(lambda c0, a0, mask, z, w, lo, hi, lrc, lra, _m=m:
+                        model.step5_descend(c0, a0, mask, z, w, lo, hi, lrc, lra,
+                                            iters=STEP5_ITERS)),
+                args5,
+                {"entry": "step5", "k": K_PAD, "n": N_PAD, "m": m,
+                 "iters": STEP5_ITERS,
+                 "outputs": [[K_PAD, N_PAD], [K_PAD], []]},
+            )
+        )
+        argsc = (f32(K_PAD, N_PAD), f32(K_PAD), f32(K_PAD), f32(2, m), f32(m, N_PAD))
+        entries.append(
+            (
+                f"cost_k{K_PAD}_n{N_PAD}_m{m}",
+                jax.jit(model.mixture_cost),
+                argsc,
+                {"entry": "cost", "k": K_PAD, "n": N_PAD, "m": m,
+                 "outputs": [[]]},
+            )
+        )
+    return entries
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    args = p.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"chunk_b": CHUNK_B, "n_pad": N_PAD, "k_pad": K_PAD, "artifacts": {}}
+    for name, fn, example_args, meta in build_entries():
+        lowered = fn.lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["file"] = fname
+        meta["inputs"] = shapes_of(example_args)
+        manifest["artifacts"][name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')} "
+          f"({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every kernel in this package has its semantics defined HERE, in plain
+jax.numpy; pytest (python/tests/) asserts the Pallas implementations match
+to float32 tolerance across a hypothesis sweep of shapes. The rust native
+engine implements the same math in f64 (rust/src/sketch/operator.rs).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sketch_sums_ref(x: jnp.ndarray, beta: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Weighted Fourier-moment sums of a block of points (paper eq. 3).
+
+    Args:
+      x:    (B, n) points (rows may be zero padding -- give them beta = 0).
+      beta: (B,) per-point weights.
+      w:    (m, n) frequency matrix.
+
+    Returns:
+      (2, m): row 0 = sum_b beta_b * cos(x_b @ w_j),
+              row 1 = -sum_b beta_b * sin(x_b @ w_j)
+      (the real/imag parts of sum_b beta_b * exp(-i w x_b)).
+    """
+    theta = x @ w.T  # (B, m)
+    re = jnp.sum(beta[:, None] * jnp.cos(theta), axis=0)
+    im = -jnp.sum(beta[:, None] * jnp.sin(theta), axis=0)
+    return jnp.stack([re, im])
+
+
+def atom_ref(c: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """A delta_c = exp(-i w c) as a (2, m) real tensor."""
+    theta = w @ c
+    return jnp.stack([jnp.cos(theta), -jnp.sin(theta)])
+
+
+def step1_objective_ref(c: jnp.ndarray, r: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Re <A delta_c / ||A delta_c||, r> with r as a (2, m) tensor."""
+    m = w.shape[0]
+    theta = w @ c
+    val = jnp.sum(jnp.cos(theta) * r[0] - jnp.sin(theta) * r[1])
+    return val / jnp.sqrt(float(m))
+
+
+def mixture_cost_ref(
+    centroids: jnp.ndarray,
+    alpha: jnp.ndarray,
+    mask: jnp.ndarray,
+    z: jnp.ndarray,
+    w: jnp.ndarray,
+) -> jnp.ndarray:
+    """||z - sum_k mask_k alpha_k A delta_{c_k}||^2 (step-5 objective).
+
+    centroids: (K, n); alpha, mask: (K,); z: (2, m); w: (m, n).
+    """
+    theta = centroids @ w.T  # (K, m)
+    wk = (mask * alpha)[:, None]
+    re = jnp.sum(wk * jnp.cos(theta), axis=0)
+    im = -jnp.sum(wk * jnp.sin(theta), axis=0)
+    return jnp.sum((z[0] - re) ** 2) + jnp.sum((z[1] - im) ** 2)

@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: the sketch hot-spot.
+
+The compute bottleneck of compressive K-means is the one-pass sketch
+`z_j = sum_b beta_b exp(-i w_j . x_b)` — a dense (B x n)·(n x m) product
+followed by elementwise cos/sin and a weighted batch-reduction.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the Matlab original runs
+one giant GEMM `W^T X`; here the HBM<->VMEM schedule is explicit:
+
+  grid = (m_tiles, batch_tiles)
+    - axis 0 tiles the frequency dimension (parallel),
+    - axis 1 tiles the batch (sequential accumulation into the same
+      output tile, initialised at the first batch step via pl.when).
+
+Per grid step, a (BLK_B x n_pad) tile of X and a (BLK_M x n_pad) tile of W
+sit in VMEM; the (BLK_B x BLK_M) theta tile feeds the MXU, and the cos/sin
+reduction runs on the VPU. Everything is lowered with interpret=True so
+the CPU PJRT client can execute it (real-TPU lowering would emit a Mosaic
+custom-call; see /opt/xla-example/README.md).
+
+VMEM footprint per step (f32, defaults BLK_B=512, BLK_M=256, n_pad=16):
+  X tile 32 KiB + W tile 16 KiB + theta 512 KiB + out 2 KiB  ~ 0.56 MiB,
+comfortably inside the ~16 MiB/core budget; BLK_M=256 keeps the lane
+dimension a multiple of 128 and BLK_B=512 the sublane a multiple of 8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes (overridable per call for tests / tuning).
+BLK_B = 512
+BLK_M = 256
+
+
+def _sketch_kernel(x_ref, beta_ref, w_ref, out_ref):
+    """One (m-tile, batch-tile) grid step.
+
+    x_ref:    (BLK_B, n)   VMEM tile of points
+    beta_ref: (BLK_B, 1)   per-point weights (0 for padding rows)
+    w_ref:    (BLK_M, n)   VMEM tile of frequencies
+    out_ref:  (2, BLK_M)   accumulator tile (revisited across batch steps)
+    """
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    beta = beta_ref[...]  # (BLK_B, 1)
+    # MXU: (BLK_B, n) @ (n, BLK_M) -> theta tile.
+    theta = jax.lax.dot_general(
+        x,
+        w,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    # VPU: weighted trig reduction over the batch tile.
+    re = jnp.sum(beta * jnp.cos(theta), axis=0)
+    im = -jnp.sum(beta * jnp.sin(theta), axis=0)
+    out_ref[0, :] += re
+    out_ref[1, :] += im
+
+
+@functools.partial(jax.jit, static_argnames=("blk_b", "blk_m", "interpret"))
+def sketch_sums(
+    x: jnp.ndarray,
+    beta: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    blk_b: int = BLK_B,
+    blk_m: int = BLK_M,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Pallas-tiled weighted Fourier sums; semantics = ref.sketch_sums_ref.
+
+    Shapes: x (B, n), beta (B,), w (m, n) with B % blk_b == 0 and
+    m % blk_m == 0 (the AOT wrapper pads); returns (2, m) float32.
+    """
+    b, n = x.shape
+    m = w.shape[0]
+    blk_b = min(blk_b, b)
+    blk_m = min(blk_m, m)
+    assert b % blk_b == 0, f"batch {b} not a multiple of {blk_b}"
+    assert m % blk_m == 0, f"m {m} not a multiple of {blk_m}"
+    grid = (m // blk_m, b // blk_b)
+    return pl.pallas_call(
+        _sketch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk_b, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((blk_b, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((blk_m, n), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, blk_m), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((2, m), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), beta.astype(jnp.float32)[:, None], w.astype(jnp.float32))
+
+
+def vmem_bytes(blk_b: int = BLK_B, blk_m: int = BLK_M, n_pad: int = 16) -> int:
+    """Estimated per-step VMEM footprint in bytes (f32) — used by the
+    DESIGN.md §Perf roofline discussion and asserted sane in tests."""
+    x_tile = blk_b * n_pad * 4
+    w_tile = blk_m * n_pad * 4
+    beta_tile = blk_b * 4
+    theta = blk_b * blk_m * 4
+    out = 2 * blk_m * 4
+    return x_tile + w_tile + beta_tile + theta + out

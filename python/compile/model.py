@@ -1,0 +1,109 @@
+"""L2: the jax compute graphs AOT-compiled for the rust runtime.
+
+Three entry points, all fixed-shape (DESIGN.md §2 "Fixed-shape AOT +
+padding"):
+
+  sketch_chunk   -- weighted Fourier sums of a (B, n_pad) block, via the
+                    L1 Pallas kernel. The N-dependent hot path.
+  step1_ascend   -- CLOMPR step 1: box-projected Adam ascent of the
+                    residual correlation, unrolled as a lax.scan.
+  step5_descend  -- CLOMPR step 5: joint box-projected Adam descent of
+                    (C, alpha) on the sketch-matching cost, masked so one
+                    artifact serves any support size <= K_pad.
+
+The rust native engine implements the same math with a backtracking line
+search; the fixed-iteration Adam here is what fits a static HLO graph.
+EXPERIMENTS.md §ablations quantifies the difference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.sketch_pallas import sketch_sums
+
+
+def sketch_chunk(x: jnp.ndarray, beta: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """(2, m) weighted Fourier sums of one padded chunk (L1 kernel)."""
+    return sketch_sums(x, beta, w)
+
+
+def _adam_update(g, m, v, t, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * g * g
+    mhat = m / (1.0 - b1**t)
+    vhat = v / (1.0 - b2**t)
+    return lr * mhat / (jnp.sqrt(vhat) + eps), m, v
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def step1_ascend(
+    c0: jnp.ndarray,   # (n,)
+    r: jnp.ndarray,    # (2, m) residual
+    w: jnp.ndarray,    # (m, n)
+    lo: jnp.ndarray,   # (n,)
+    hi: jnp.ndarray,   # (n,)
+    lr: jnp.ndarray,   # scalar
+    *,
+    iters: int = 120,
+):
+    """Maximize Re<A delta_c/||.||, r> over the box; returns (c*, f(c*))."""
+    grad_f = jax.value_and_grad(lambda c: ref.step1_objective_ref(c, r, w))
+
+    def body(carry, t):
+        c, m, v = carry
+        val, g = grad_f(c)
+        step, m, v = _adam_update(g, m, v, t, lr)
+        c = jnp.clip(c + step, lo, hi)  # ascent
+        return (c, m, v), val
+
+    c0 = jnp.clip(c0, lo, hi)
+    init = (c0, jnp.zeros_like(c0), jnp.zeros_like(c0))
+    (c, _, _), _ = jax.lax.scan(body, init, jnp.arange(1, iters + 1, dtype=jnp.float32))
+    return c, ref.step1_objective_ref(c, r, w)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def step5_descend(
+    c0: jnp.ndarray,    # (K_pad, n)
+    a0: jnp.ndarray,    # (K_pad,)
+    mask: jnp.ndarray,  # (K_pad,) 1.0 for live atoms
+    z: jnp.ndarray,     # (2, m) dataset sketch
+    w: jnp.ndarray,     # (m, n)
+    lo: jnp.ndarray,    # (n,)
+    hi: jnp.ndarray,    # (n,)
+    lr_c: jnp.ndarray,  # scalar
+    lr_a: jnp.ndarray,  # scalar
+    *,
+    iters: int = 150,
+):
+    """Jointly minimize ||z - Sk(C, alpha)||^2; returns (C*, alpha*, cost)."""
+    cost_fn = lambda c, a: ref.mixture_cost_ref(c, a, mask, z, w)
+    grads = jax.value_and_grad(cost_fn, argnums=(0, 1))
+
+    def body(carry, t):
+        c, a, mc, vc, ma, va = carry
+        val, (gc, ga) = grads(c, a)
+        step_c, mc, vc = _adam_update(gc, mc, vc, t, lr_c)
+        step_a, ma, va = _adam_update(ga, ma, va, t, lr_a)
+        c = jnp.clip(c - step_c, lo[None, :], hi[None, :])
+        a = jnp.maximum(a - step_a, 0.0) * mask
+        return (c, a, mc, vc, ma, va), val
+
+    c0 = jnp.clip(c0, lo[None, :], hi[None, :])
+    a0 = jnp.maximum(a0, 0.0) * mask
+    init = (c0, a0, jnp.zeros_like(c0), jnp.zeros_like(c0), jnp.zeros_like(a0), jnp.zeros_like(a0))
+    (c, a, *_), _ = jax.lax.scan(body, init, jnp.arange(1, iters + 1, dtype=jnp.float32))
+    return c, a, cost_fn(c, a)
+
+
+@jax.jit
+def mixture_cost(
+    c: jnp.ndarray, a: jnp.ndarray, mask: jnp.ndarray, z: jnp.ndarray, w: jnp.ndarray
+):
+    """Cost (4) evaluation — replicate selection on the rust side."""
+    return ref.mixture_cost_ref(c, a, mask, z, w)

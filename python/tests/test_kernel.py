@@ -1,0 +1,109 @@
+"""L1 correctness: the Pallas sketch kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes and tile sizes; numpy asserts float32-level
+agreement. This is the core correctness signal for the compiled hot path.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import sketch_sums_ref
+from compile.kernels.sketch_pallas import sketch_sums, vmem_bytes
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(scale * rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def test_single_block_matches_ref():
+    x = rand((64, 8), 0)
+    beta = jnp.full((64,), 1.0 / 64, dtype=jnp.float32)
+    w = rand((128, 8), 1)
+    got = sketch_sums(x, beta, w, blk_b=64, blk_m=128)
+    want = sketch_sums_ref(x, beta, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_multi_tile_accumulation():
+    # 4 batch tiles x 2 m tiles exercises the pl.when init + accumulate path.
+    x = rand((256, 16), 2)
+    beta = rand((256,), 3, scale=0.1) ** 2
+    w = rand((64, 16), 4)
+    got = sketch_sums(x, beta, w, blk_b=64, blk_m=32)
+    want = sketch_sums_ref(x, beta, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_zero_weight_rows_are_padding():
+    # Rows with beta = 0 must not contribute: this is how the runtime pads
+    # the final partial chunk.
+    x_real = rand((32, 4), 5)
+    beta_real = jnp.full((32,), 0.5, dtype=jnp.float32)
+    w = rand((32, 4), 6)
+    x_pad = jnp.concatenate([x_real, 1e3 * jnp.ones((32, 4), jnp.float32)])
+    beta_pad = jnp.concatenate([beta_real, jnp.zeros((32,), jnp.float32)])
+    got = sketch_sums(x_pad, beta_pad, w, blk_b=32, blk_m=32)
+    want = sketch_sums_ref(x_real, beta_real, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_zero_padded_dims_are_exact():
+    # Zero-padding BOTH x and w in the feature dimension leaves theta
+    # unchanged — the runtime's n -> n_pad trick.
+    x = rand((64, 5), 7)
+    w = rand((32, 5), 8)
+    beta = jnp.full((64,), 1.0 / 64, dtype=jnp.float32)
+    xp = jnp.pad(x, ((0, 0), (0, 11)))
+    wp = jnp.pad(w, ((0, 0), (0, 11)))
+    got = sketch_sums(xp, beta, wp, blk_b=64, blk_m=32)
+    want = sketch_sums_ref(x, beta, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b_tiles=st.integers(1, 4),
+    m_tiles=st.integers(1, 4),
+    blk_b=st.sampled_from([8, 32, 64]),
+    blk_m=st.sampled_from([16, 32, 128]),
+    n=st.integers(1, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes_match_ref(b_tiles, m_tiles, blk_b, blk_m, n, seed):
+    b, m = b_tiles * blk_b, m_tiles * blk_m
+    x = rand((b, n), seed)
+    beta = rand((b,), seed + 1, scale=0.3) ** 2
+    w = rand((m, n), seed + 2, scale=1.5)
+    got = sketch_sums(x, beta, w, blk_b=blk_b, blk_m=blk_m)
+    want = sketch_sums_ref(x, beta, w)
+    assert got.shape == (2, m)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+def test_modulus_bound():
+    # |sum beta_b e^{-i theta}| <= sum beta_b for every frequency.
+    x = rand((128, 8), 9)
+    beta = jnp.full((128,), 1.0 / 128, dtype=jnp.float32)
+    w = rand((64, 8), 10)
+    z = sketch_sums(x, beta, w, blk_b=64, blk_m=64)
+    mod = jnp.sqrt(z[0] ** 2 + z[1] ** 2)
+    assert float(jnp.max(mod)) <= 1.0 + 1e-5
+
+
+def test_rejects_non_divisible_tiles():
+    x = rand((100, 4), 11)
+    beta = jnp.ones((100,), jnp.float32)
+    w = rand((64, 4), 12)
+    with pytest.raises(AssertionError):
+        sketch_sums(x, beta, w, blk_b=64, blk_m=64)
+
+
+def test_vmem_estimate_within_budget():
+    # Default tiling must sit far below a TPU core's ~16 MiB VMEM.
+    assert vmem_bytes() < 4 * 1024 * 1024

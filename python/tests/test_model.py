@@ -1,0 +1,86 @@
+"""L2 correctness: the AOT-able optimizer graphs do what CLOMPR needs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(scale * rng.standard_normal(shape), dtype=jnp.float32)
+
+
+def test_step1_finds_planted_atom():
+    # Residual = atom at c_true: the ascent must recover c_true.
+    n, m = 4, 256
+    w = rand((m, n), 0)
+    c_true = jnp.asarray([0.5, -0.3, 0.2, 0.1], jnp.float32)
+    r = ref.atom_ref(c_true, w)
+    lo = -jnp.ones((n,)) * 2.0
+    hi = jnp.ones((n,)) * 2.0
+    c0 = jnp.zeros((n,))
+    c, val = model.step1_ascend(c0, r, w, lo, hi, jnp.float32(0.02), iters=300)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(c_true), atol=0.05)
+    # objective at optimum = sqrt(m) * (1/sqrt m) * m... value = m/sqrt(m) = sqrt(m)
+    assert float(val) > 0.9 * np.sqrt(m)
+
+
+def test_step1_respects_box():
+    n, m = 3, 128
+    w = rand((m, n), 1)
+    c_true = jnp.asarray([3.0, 0.0, 0.0], jnp.float32)  # outside the box
+    r = ref.atom_ref(c_true, w)
+    lo = -jnp.ones((n,))
+    hi = jnp.ones((n,))
+    c, _ = model.step1_ascend(jnp.zeros((n,)), r, w, lo, hi, jnp.float32(0.05), iters=200)
+    assert float(jnp.max(jnp.abs(c))) <= 1.0 + 1e-6
+
+
+def test_step5_reduces_cost_and_respects_constraints():
+    k_pad, n, m = 8, 4, 256
+    w = rand((m, n), 2)
+    # target: 3 live atoms
+    c_true = rand((3, n), 3, scale=0.8)
+    a_true = jnp.asarray([0.5, 0.3, 0.2], jnp.float32)
+    z = jnp.zeros((2, m))
+    for i in range(3):
+        z = z + a_true[i] * ref.atom_ref(c_true[i], w)
+    mask = jnp.asarray([1.0] * 3 + [0.0] * (k_pad - 3), jnp.float32)
+    c0 = jnp.pad(c_true + 0.2 * rand((3, n), 4), ((0, k_pad - 3), (0, 0)))
+    a0 = jnp.pad(a_true * 0.5, (0, k_pad - 3))
+    lo = -3.0 * jnp.ones((n,))
+    hi = 3.0 * jnp.ones((n,))
+    cost0 = ref.mixture_cost_ref(c0, a0, mask, z, w)
+    c, a, cost = model.step5_descend(
+        c0, a0, mask, z, w, lo, hi, jnp.float32(0.01), jnp.float32(0.01), iters=300
+    )
+    assert float(cost) < 0.2 * float(cost0), (float(cost), float(cost0))
+    # masked atoms stay dead, live weights non-negative, box respected
+    np.testing.assert_allclose(np.asarray(a[3:]), 0.0)
+    assert float(jnp.min(a)) >= 0.0
+    assert float(jnp.max(jnp.abs(c))) <= 3.0 + 1e-6
+
+
+def test_mixture_cost_matches_ref_and_zero_at_exact_fit():
+    k_pad, n, m = 4, 3, 64
+    w = rand((m, n), 5)
+    c = rand((k_pad, n), 6)
+    a = jnp.asarray([0.4, 0.6, 0.0, 0.0], jnp.float32)
+    mask = jnp.asarray([1.0, 1.0, 0.0, 0.0], jnp.float32)
+    z = a[0] * ref.atom_ref(c[0], w) + a[1] * ref.atom_ref(c[1], w)
+    cost = model.mixture_cost(c, a, mask, z, w)
+    assert float(cost) < 1e-8
+
+
+def test_sketch_chunk_is_kernel():
+    x = rand((64, 16), 7)
+    beta = jnp.full((64,), 1.0 / 64, jnp.float32)
+    w = rand((256, 16), 8)
+    got = model.sketch_chunk(x, beta, w)
+    want = ref.sketch_sums_ref(x, beta, w)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)

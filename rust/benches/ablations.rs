@@ -1,0 +1,18 @@
+//! Ablation benches: frequency law, engine, batching, optimizer.
+use ckm::experiments::ablate::{run, AblateConfig};
+
+fn main() {
+    ckm::util::logging::init();
+    let cfg = AblateConfig {
+        k: 5,
+        n_dims: 8,
+        n_points: 20_000,
+        m: 500,
+        runs: 3,
+        seed: 99,
+        with_pjrt: true,
+    };
+    for t in run(&cfg) {
+        t.emit("ablations_bench", true);
+    }
+}

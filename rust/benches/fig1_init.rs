@@ -1,0 +1,17 @@
+//! Bench target regenerating Fig. 1 (init strategies). Bench-profile sizes
+//! are reduced; `ckm exp fig1 --full` runs the paper-scale version.
+use ckm::experiments::fig1::{run, Fig1Config};
+
+fn main() {
+    ckm::util::logging::init();
+    let cfg = Fig1Config {
+        k: 10,
+        n_dims: 10,
+        n_points: 20_000,
+        m: 1000,
+        runs: 5,
+        digit_images: 500,
+        seed: 42,
+    };
+    run(&cfg).emit("fig1_bench", true);
+}

@@ -1,0 +1,17 @@
+//! Bench target regenerating Fig. 2 (relative SSE vs m/(Kn)).
+use ckm::experiments::fig2::{run, Fig2Config};
+
+fn main() {
+    ckm::util::logging::init();
+    let cfg = Fig2Config {
+        n_points: 10_000,
+        runs: 3,
+        ks: vec![2, 5, 10, 15],
+        n_fixed: 10,
+        ns: vec![2, 4, 8, 12],
+        k_fixed: 10,
+        ratios: vec![0.5, 1.0, 2.0, 3.0, 5.0, 8.0],
+        seed: 1234,
+    };
+    run(&cfg).emit("fig2_bench", true);
+}

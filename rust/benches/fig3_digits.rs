@@ -1,0 +1,15 @@
+//! Bench target regenerating Fig. 3 (digits-spectral SSE + ARI vs N).
+use ckm::experiments::fig3::{run, Fig3Config};
+
+fn main() {
+    ckm::util::logging::init();
+    let cfg = Fig3Config {
+        sizes: vec![500, 1500, 4000],
+        m: 1000,
+        k: 10,
+        runs: 3,
+        replicate_counts: vec![1, 5],
+        seed: 77,
+    };
+    run(&cfg).emit("fig3_bench", true);
+}

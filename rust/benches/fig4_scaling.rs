@@ -1,0 +1,16 @@
+//! Bench target regenerating Fig. 4 (relative time / memory / SSE vs N).
+use ckm::experiments::fig4::{run, Fig4Config};
+
+fn main() {
+    ckm::util::logging::init();
+    let cfg = Fig4Config {
+        k: 10,
+        n_dims: 10,
+        n_sweep: vec![10_000, 30_000, 100_000, 300_000, 1_000_000],
+        ms: vec![1000],
+        materialize_cap: 300_000,
+        workers: 4,
+        seed: 2024,
+    };
+    run(&cfg).emit("fig4_bench", true);
+}

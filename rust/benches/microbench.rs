@@ -1,0 +1,77 @@
+//! Microbenchmarks of the hot paths: native sketch throughput, PJRT sketch
+//! throughput, step-1/step-5 gradient evaluation, NNLS. §Perf's raw data.
+use ckm::bench::{measure, throughput};
+use ckm::data::gmm::GmmConfig;
+use ckm::engine::CkmEngine;
+use ckm::linalg::Mat;
+use ckm::sketch::{FreqDist, SketchOp};
+use ckm::util::rng::Rng;
+
+fn main() {
+    ckm::util::logging::init();
+    let n_dims = 10;
+    let m = 1024;
+    let n_points = 100_000;
+    let mut rng = Rng::new(1);
+    let g = GmmConfig::paper_default(10, n_dims, n_points).generate(&mut rng);
+    let pts = &g.dataset.points;
+    let op = SketchOp::new(FreqDist::adapted(1.0).draw(m, n_dims, &mut rng));
+
+    // Native sketch (threaded).
+    let meas = measure("native sketch 100k x n10 x m1024", 1, 5, || {
+        let z = op.sketch_points(pts, None);
+        std::hint::black_box(z);
+    });
+    println!("  -> {:.2} Mpts/s", throughput(&meas, n_points) / 1e6);
+
+    // PJRT sketch (compiled Pallas kernel), if artifacts exist.
+    let dir = ckm::runtime::PjrtRuntime::default_dir();
+    if dir.join("manifest.json").exists() {
+        let rt = std::sync::Arc::new(ckm::runtime::PjrtRuntime::new(&dir).unwrap());
+        let pe = ckm::engine::PjrtEngine::from_op(rt, op.clone()).unwrap();
+        let _warm = pe.sketch_points(&pts[..4096 * n_dims], None);
+        let meas = measure("pjrt sketch 100k x n10 x m1024", 1, 5, || {
+            let z = pe.sketch_points(pts, None);
+            std::hint::black_box(z);
+        });
+        println!("  -> {:.2} Mpts/s", throughput(&meas, n_points) / 1e6);
+    } else {
+        eprintln!("(skipping pjrt sketch bench: run `make artifacts`)");
+    }
+
+    // Step-1 value+grad.
+    let z = op.sketch_points(&pts[..20_000 * n_dims], None);
+    let c: Vec<f64> = (0..n_dims).map(|_| rng.normal()).collect();
+    measure("step1 value+grad (m=1024, n=10)", 10, 50, || {
+        let (v, g) = op.step1_value_grad(&c, &z);
+        std::hint::black_box((v, g));
+    });
+
+    // Step-5 value+grads at K=10.
+    let cmat = Mat::from_vec(10, n_dims, (0..10 * n_dims).map(|_| rng.normal()).collect());
+    let alpha = vec![0.1; 10];
+    measure("step5 value+grads (K=10, m=1024)", 5, 30, || {
+        let out = op.step5_value_grads(&z, &cmat, &alpha);
+        std::hint::black_box(out);
+    });
+
+    // NNLS on the CLOMPR design (2m x 2K).
+    let design = {
+        let mut a = Mat::zeros(2 * m, 20);
+        for j in 0..20 {
+            let atom = op.atom(cmat.row(j % 10));
+            for i in 0..m {
+                *a.at_mut(i, j) = atom.re[i];
+                *a.at_mut(m + i, j) = atom.im[i];
+            }
+        }
+        a
+    };
+    let mut b = Vec::with_capacity(2 * m);
+    b.extend_from_slice(&z.re);
+    b.extend_from_slice(&z.im);
+    measure("nnls 2048x20", 2, 20, || {
+        let x = ckm::linalg::nnls::nnls(&design, &b);
+        std::hint::black_box(x);
+    });
+}

@@ -1,0 +1,290 @@
+//! Lloyd-Max K-means (the paper's `kmeans` baseline) with K-means++ and
+//! random seeding, parallel assignment, and empty-cluster repair.
+
+use crate::linalg::matrix::dist2;
+use crate::linalg::Mat;
+use crate::util::{parallel, rng::Rng};
+
+/// Seeding rule for Lloyd-Max.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KmInit {
+    /// K points uniform in the data's bounding box (paper's "Range").
+    Range,
+    /// K distinct data points (paper's "Sample").
+    Sample,
+    /// K-means++ (Arthur & Vassilvitskii 2007; paper's "K++").
+    KmeansPp,
+}
+
+impl KmInit {
+    pub fn parse(s: &str) -> anyhow::Result<KmInit> {
+        match s {
+            "range" => Ok(KmInit::Range),
+            "sample" => Ok(KmInit::Sample),
+            "k++" | "kpp" => Ok(KmInit::KmeansPp),
+            _ => anyhow::bail!("unknown kmeans init '{s}' (range|sample|k++)"),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            KmInit::Range => "range",
+            KmInit::Sample => "sample",
+            KmInit::KmeansPp => "k++",
+        }
+    }
+}
+
+/// Options for [`kmeans`].
+#[derive(Clone, Debug)]
+pub struct KmOptions {
+    pub init: KmInit,
+    pub max_iters: usize,
+    /// Relative SSE improvement below which we stop.
+    pub tol: f64,
+    pub replicates: usize,
+    pub seed: u64,
+}
+
+impl Default for KmOptions {
+    fn default() -> Self {
+        KmOptions { init: KmInit::Range, max_iters: 100, tol: 1e-7, replicates: 1, seed: 0 }
+    }
+}
+
+/// Result of a K-means run.
+#[derive(Clone, Debug)]
+pub struct KmResult {
+    pub centroids: Mat,
+    pub assignments: Vec<usize>,
+    pub sse: f64,
+    pub iters: usize,
+}
+
+/// Lloyd-Max on row-major `points` (`N × n_dims`). Picks the best of
+/// `opts.replicates` runs by SSE (the baseline protocol in §4.4).
+pub fn kmeans(points: &[f64], n_dims: usize, k: usize, opts: &KmOptions) -> KmResult {
+    assert!(n_dims > 0 && points.len() % n_dims == 0);
+    let n = points.len() / n_dims;
+    assert!(k >= 1 && k <= n, "k={k} out of range for {n} points");
+    let mut master = Rng::new(opts.seed);
+    let mut best: Option<KmResult> = None;
+    for _ in 0..opts.replicates.max(1) {
+        let mut rng = master.split();
+        let res = lloyd_once(points, n_dims, k, opts, &mut rng);
+        if best.as_ref().map(|b| res.sse < b.sse).unwrap_or(true) {
+            best = Some(res);
+        }
+    }
+    best.unwrap()
+}
+
+fn lloyd_once(points: &[f64], n_dims: usize, k: usize, opts: &KmOptions, rng: &mut Rng) -> KmResult {
+    let n = points.len() / n_dims;
+    let mut centroids = seed(points, n_dims, k, opts.init, rng);
+    let mut assignments = vec![0usize; n];
+    let mut sse = f64::INFINITY;
+    let mut iters = 0;
+    for it in 0..opts.max_iters {
+        iters = it + 1;
+        // Assignment step (parallel).
+        let new_sse = assign(points, n_dims, &centroids, &mut assignments);
+        // Update step.
+        let mut sums = vec![0.0; k * n_dims];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let a = assignments[i];
+            counts[a] += 1;
+            for d in 0..n_dims {
+                sums[a * n_dims + d] += points[i * n_dims + d];
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Empty cluster: re-seed at the point farthest from its centroid.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = dist2(&points[a * n_dims..(a + 1) * n_dims], centroids.row(assignments[a]));
+                        let db = dist2(&points[b * n_dims..(b + 1) * n_dims], centroids.row(assignments[b]));
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids.row_mut(c).copy_from_slice(&points[far * n_dims..(far + 1) * n_dims]);
+            } else {
+                for d in 0..n_dims {
+                    *centroids.at_mut(c, d) = sums[c * n_dims + d] / counts[c] as f64;
+                }
+            }
+        }
+        if (sse - new_sse).abs() <= opts.tol * sse.max(1e-300) {
+            sse = new_sse;
+            break;
+        }
+        sse = new_sse;
+    }
+    // Final consistent assignment + SSE for the returned centroids.
+    let final_sse = assign(points, n_dims, &centroids, &mut assignments);
+    KmResult { centroids, assignments, sse: final_sse.min(sse), iters }
+}
+
+/// Assign each point to its nearest centroid; returns the SSE.
+pub fn assign(points: &[f64], n_dims: usize, centroids: &Mat, out: &mut [usize]) -> f64 {
+    let n = points.len() / n_dims;
+    assert_eq!(out.len(), n);
+    let threads = parallel::default_threads();
+    let k = centroids.rows;
+    let partials = {
+        let ranges = parallel::split_ranges(n, threads);
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            let mut rest: &mut [usize] = out;
+            for r in ranges {
+                let (head, tail) = rest.split_at_mut(r.len());
+                rest = tail;
+                handles.push(s.spawn(move || {
+                    let mut sse = 0.0;
+                    for (li, i) in r.clone().enumerate() {
+                        let x = &points[i * n_dims..(i + 1) * n_dims];
+                        let mut best = (0usize, f64::INFINITY);
+                        for c in 0..k {
+                            let d = dist2(x, centroids.row(c));
+                            if d < best.1 {
+                                best = (c, d);
+                            }
+                        }
+                        head[li] = best.0;
+                        sse += best.1;
+                    }
+                    sse
+                }));
+            }
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        })
+    };
+    partials.into_iter().sum()
+}
+
+/// Seed `k` centroids.
+pub fn seed(points: &[f64], n_dims: usize, k: usize, init: KmInit, rng: &mut Rng) -> Mat {
+    let n = points.len() / n_dims;
+    match init {
+        KmInit::Range => {
+            // bounding box
+            let mut lo = vec![f64::INFINITY; n_dims];
+            let mut hi = vec![f64::NEG_INFINITY; n_dims];
+            for i in 0..n {
+                for d in 0..n_dims {
+                    let v = points[i * n_dims + d];
+                    lo[d] = lo[d].min(v);
+                    hi[d] = hi[d].max(v);
+                }
+            }
+            Mat::from_fn(k, n_dims, |_, d| rng.uniform_in(lo[d], hi[d].max(lo[d])))
+        }
+        KmInit::Sample => {
+            let idx = rng.sample_indices(n, k);
+            let mut c = Mat::zeros(k, n_dims);
+            for (r, &i) in idx.iter().enumerate() {
+                c.row_mut(r).copy_from_slice(&points[i * n_dims..(i + 1) * n_dims]);
+            }
+            c
+        }
+        KmInit::KmeansPp => kmeanspp_seed(points, n_dims, k, rng),
+    }
+}
+
+/// K-means++ seeding: first center uniform, then ∝ D(x)².
+pub fn kmeanspp_seed(points: &[f64], n_dims: usize, k: usize, rng: &mut Rng) -> Mat {
+    let n = points.len() / n_dims;
+    let mut c = Mat::zeros(k, n_dims);
+    let first = rng.below(n);
+    c.row_mut(0).copy_from_slice(&points[first * n_dims..(first + 1) * n_dims]);
+    let mut d2: Vec<f64> =
+        (0..n).map(|i| dist2(&points[i * n_dims..(i + 1) * n_dims], c.row(0))).collect();
+    for r in 1..k {
+        let pick = rng.categorical(&d2).unwrap_or_else(|| rng.below(n));
+        c.row_mut(r).copy_from_slice(&points[pick * n_dims..(pick + 1) * n_dims]);
+        for i in 0..n {
+            let d = dist2(&points[i * n_dims..(i + 1) * n_dims], c.row(r));
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gmm::GmmConfig;
+
+    #[test]
+    fn three_point_exact() {
+        // k = n: each point its own cluster, SSE = 0.
+        let pts = vec![0.0, 0.0, 5.0, 5.0, -3.0, 4.0];
+        let res = kmeans(&pts, 2, 3, &KmOptions { init: KmInit::Sample, ..Default::default() });
+        assert!(res.sse < 1e-20, "sse={}", res.sse);
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let pts = vec![
+            0.0, 0.1, 0.1, -0.1, -0.1, 0.0, // blob A near origin
+            10.0, 10.1, 10.1, 9.9, 9.9, 10.0, // blob B near (10,10)
+        ];
+        let res = kmeans(&pts, 2, 2, &KmOptions { init: KmInit::KmeansPp, seed: 3, ..Default::default() });
+        // assignments split 3/3 and first three share a label
+        assert_eq!(res.assignments[0], res.assignments[1]);
+        assert_eq!(res.assignments[1], res.assignments[2]);
+        assert_ne!(res.assignments[0], res.assignments[3]);
+        assert!(res.sse < 0.3);
+    }
+
+    #[test]
+    fn replicates_never_hurt() {
+        let mut rng = Rng::new(1);
+        let g = GmmConfig::paper_default(5, 4, 2000).generate(&mut rng);
+        let one = kmeans(&g.dataset.points, 4, 5, &KmOptions { seed: 7, replicates: 1, ..Default::default() });
+        let five = kmeans(&g.dataset.points, 4, 5, &KmOptions { seed: 7, replicates: 5, ..Default::default() });
+        assert!(five.sse <= one.sse + 1e-9);
+    }
+
+    #[test]
+    fn kpp_spreads_seeds() {
+        // Two far blobs: k++ almost always picks one seed in each.
+        let mut pts = Vec::new();
+        for i in 0..50 {
+            pts.extend_from_slice(&[i as f64 * 0.01, 0.0]);
+        }
+        for i in 0..50 {
+            pts.extend_from_slice(&[100.0 + i as f64 * 0.01, 0.0]);
+        }
+        let mut hits = 0;
+        for seed in 0..20 {
+            let mut rng = Rng::new(seed);
+            let c = kmeanspp_seed(&pts, 2, 2, &mut rng);
+            let far = (c.at(0, 0) - c.at(1, 0)).abs() > 50.0;
+            hits += usize::from(far);
+        }
+        assert!(hits >= 19, "k++ split blobs only {hits}/20 times");
+    }
+
+    #[test]
+    fn sse_decreases_monotonically_enough() {
+        let mut rng = Rng::new(2);
+        let g = GmmConfig::paper_default(4, 3, 1500).generate(&mut rng);
+        let quick = kmeans(&g.dataset.points, 3, 4, &KmOptions { max_iters: 1, seed: 1, ..Default::default() });
+        let long = kmeans(&g.dataset.points, 3, 4, &KmOptions { max_iters: 50, seed: 1, ..Default::default() });
+        assert!(long.sse <= quick.sse + 1e-9);
+    }
+
+    #[test]
+    fn assign_consistent_with_sse() {
+        let pts = vec![0.0, 1.0, 2.0, 3.0];
+        let c = Mat::from_vec(2, 1, vec![0.5, 2.5]);
+        let mut a = vec![0usize; 4];
+        let sse = assign(&pts, 1, &c, &mut a);
+        assert_eq!(a, vec![0, 0, 1, 1]);
+        assert!((sse - 4.0 * 0.25).abs() < 1e-12);
+    }
+}

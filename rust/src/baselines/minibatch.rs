@@ -1,0 +1,82 @@
+//! Mini-batch K-means (Sculley 2010) — an additional large-N baseline for
+//! the scaling benches: like CKM it avoids full passes per iteration, but
+//! unlike CKM it must keep (streaming access to) the data.
+
+use super::lloyd::{assign, kmeanspp_seed, KmResult};
+use crate::linalg::matrix::dist2;
+use crate::util::rng::Rng;
+
+/// Options for [`minibatch_kmeans`].
+#[derive(Clone, Debug)]
+pub struct MbOptions {
+    pub batch: usize,
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for MbOptions {
+    fn default() -> Self {
+        MbOptions { batch: 1024, iters: 100, seed: 0 }
+    }
+}
+
+/// Mini-batch K-means over row-major points.
+pub fn minibatch_kmeans(points: &[f64], n_dims: usize, k: usize, opts: &MbOptions) -> KmResult {
+    let n = points.len() / n_dims;
+    assert!(k >= 1 && k <= n);
+    let mut rng = Rng::new(opts.seed);
+    let mut centroids = kmeanspp_seed(points, n_dims, k, &mut rng);
+    let mut counts = vec![1.0f64; k];
+    for _ in 0..opts.iters {
+        // Sample a batch and apply per-center running-average updates.
+        for _ in 0..opts.batch {
+            let i = rng.below(n);
+            let x = &points[i * n_dims..(i + 1) * n_dims];
+            let mut best = (0usize, f64::INFINITY);
+            for c in 0..k {
+                let d = dist2(x, centroids.row(c));
+                if d < best.1 {
+                    best = (c, d);
+                }
+            }
+            let c = best.0;
+            counts[c] += 1.0;
+            let eta = 1.0 / counts[c];
+            let row = centroids.row_mut(c);
+            for d in 0..n_dims {
+                row[d] += eta * (x[d] - row[d]);
+            }
+        }
+    }
+    let mut assignments = vec![0usize; n];
+    let sse = assign(points, n_dims, &centroids, &mut assignments);
+    KmResult { centroids, assignments, sse, iters: opts.iters }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::lloyd::{kmeans, KmOptions};
+    use crate::data::gmm::GmmConfig;
+
+    #[test]
+    fn close_to_lloyd_on_easy_data() {
+        let mut rng = Rng::new(3);
+        let mut cfg = GmmConfig::paper_default(4, 4, 4000);
+        cfg.separation = 4.0;
+        let g = cfg.generate(&mut rng);
+        let mb = minibatch_kmeans(&g.dataset.points, 4, 4, &MbOptions::default());
+        let km = kmeans(&g.dataset.points, 4, 4, &KmOptions { replicates: 3, ..Default::default() });
+        assert!(mb.sse < 2.0 * km.sse, "mb={} lloyd={}", mb.sse, km.sse);
+    }
+
+    #[test]
+    fn deterministic_and_finite() {
+        let mut rng = Rng::new(4);
+        let g = GmmConfig::paper_default(3, 2, 500).generate(&mut rng);
+        let a = minibatch_kmeans(&g.dataset.points, 2, 3, &MbOptions { seed: 8, ..Default::default() });
+        let b = minibatch_kmeans(&g.dataset.points, 2, 3, &MbOptions { seed: 8, ..Default::default() });
+        assert_eq!(a.centroids.data, b.centroids.data);
+        assert!(a.sse.is_finite());
+    }
+}

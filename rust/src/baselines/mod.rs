@@ -1,0 +1,9 @@
+//! Baseline clustering algorithms the paper compares against (Lloyd-Max
+//! with Range/Sample/K++ seeding) plus mini-batch K-means for the scaling
+//! ablation.
+
+pub mod lloyd;
+pub mod minibatch;
+
+pub use lloyd::{kmeans, KmInit, KmOptions, KmResult};
+pub use minibatch::{minibatch_kmeans, MbOptions};

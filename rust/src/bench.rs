@@ -1,0 +1,87 @@
+//! Benchmark harness (criterion substitute): warmup + sampled timing with
+//! median/MAD reporting, used by the `rust/benches/*.rs` targets
+//! (`harness = false`).
+
+use crate::util::logging::{fmt_duration, Stopwatch};
+
+/// Timing summary over samples.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>,
+}
+
+impl Measurement {
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if s.is_empty() {
+            return 0.0;
+        }
+        s[s.len() / 2]
+    }
+
+    /// Median absolute deviation (robust spread).
+    pub fn mad(&self) -> f64 {
+        let med = self.median();
+        let mut dev: Vec<f64> = self.samples.iter().map(|x| (x - med).abs()).collect();
+        dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if dev.is_empty() {
+            0.0
+        } else {
+            dev[dev.len() / 2]
+        }
+    }
+
+    pub fn report(&self) {
+        println!(
+            "bench {:40} median {:>10}  ± {:>9}  ({} samples)",
+            self.name,
+            fmt_duration(self.median()),
+            fmt_duration(self.mad()),
+            self.samples.len()
+        );
+    }
+}
+
+/// Time `f` after `warmup` throwaway runs; `samples` measured runs.
+pub fn measure<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples.max(1) {
+        let sw = Stopwatch::start();
+        f();
+        out.push(sw.seconds());
+    }
+    let m = Measurement { name: name.to_string(), samples: out };
+    m.report();
+    m
+}
+
+/// Throughput helper: items/second at the median.
+pub fn throughput(m: &Measurement, items: usize) -> f64 {
+    items as f64 / m.median().max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_and_mad() {
+        let m = Measurement { name: "t".into(), samples: vec![1.0, 2.0, 100.0] };
+        assert_eq!(m.median(), 2.0);
+        assert_eq!(m.mad(), 1.0);
+    }
+
+    #[test]
+    fn measure_runs_function() {
+        let mut count = 0;
+        let m = measure("noop", 2, 3, || count += 1);
+        assert_eq!(count, 5);
+        assert_eq!(m.samples.len(), 3);
+        assert!(throughput(&m, 10) > 0.0);
+    }
+}

@@ -1,0 +1,328 @@
+//! CLOMPR for K-means — Algorithm 1 of the paper (CKM).
+//!
+//! Greedy sparse recovery of a mixture of `K` Diracs from the sketch
+//! `ẑ`: per iteration, (1) gradient-ascend a new centroid against the
+//! residual, (2) expand the support, (3) hard-threshold back to `K` atoms
+//! via non-negative least squares when the support exceeds `K`,
+//! (4) re-fit the weights by NNLS, (5) jointly descend all centroids and
+//! weights on `‖ẑ − Σ_k α_k A δ_{c_k}‖²`, then update the residual.
+//! All gradient steps honour the data bounds `l ≤ c ≤ u`.
+
+use super::init::{draw_init, InitStrategy};
+use super::optim::OptimOptions;
+use crate::data::dataset::Bounds;
+use crate::engine::{CkmEngine, NativeEngine};
+use crate::linalg::nnls::nnls_gram;
+use crate::linalg::{CVec, Mat};
+use crate::sketch::{DatasetSketch, SketchOp};
+use crate::util::rng::Rng;
+
+/// Options for the CKM solver.
+#[derive(Clone, Debug)]
+pub struct CkmOptions {
+    pub strategy: InitStrategy,
+    /// Step-1 ascent options.
+    pub step1: OptimOptions,
+    /// Step-5 joint descent options.
+    pub step5: OptimOptions,
+    /// Number of independent replicates; the solution with the lowest
+    /// sketch cost (4) is kept — the paper's replicate rule (§4.4): the SSE
+    /// is unavailable once the data are discarded.
+    pub replicates: usize,
+    pub seed: u64,
+}
+
+impl Default for CkmOptions {
+    fn default() -> Self {
+        CkmOptions {
+            strategy: InitStrategy::Range,
+            step1: OptimOptions { max_iters: 60, tol: 1e-7, step0: 1.0 },
+            step5: OptimOptions { max_iters: 80, tol: 1e-8, step0: 1.0 },
+            replicates: 1,
+            seed: 0,
+        }
+    }
+}
+
+/// A recovered mixture of Diracs: centroids (row-major `K × n`), weights,
+/// and the sketch-domain cost `‖ẑ − Sk(C, α)‖²`.
+#[derive(Clone, Debug)]
+pub struct Solution {
+    pub centroids: Mat,
+    pub alpha: Vec<f64>,
+    pub cost: f64,
+}
+
+impl Solution {
+    /// Weights normalized to sum 1 — the cluster-proportion estimates.
+    ///
+    /// Raw `alpha` absorbs the characteristic-function decay of the true
+    /// clusters (a Dirac fit to a Gaussian cluster scales by
+    /// `E e^{-σ²‖ω‖²/2} < 1`), so only the *relative* weights are
+    /// interpretable as mixture proportions.
+    pub fn normalized_weights(&self) -> Vec<f64> {
+        let s: f64 = self.alpha.iter().sum();
+        if s <= 0.0 {
+            return vec![1.0 / self.alpha.len().max(1) as f64; self.alpha.len()];
+        }
+        self.alpha.iter().map(|a| a / s).collect()
+    }
+}
+
+/// Solve CKM from a dataset sketch (convenience wrapper).
+pub fn solve(sketch: &DatasetSketch, k: usize, opts: &CkmOptions) -> Solution {
+    solve_full(&sketch.z, &sketch.op, &sketch.bounds, k, None, opts)
+}
+
+/// Full-control solve: `data` enables the Sample/K++ init strategies.
+/// Runs on the native engine; see [`solve_with_engine`] for PJRT.
+pub fn solve_full(
+    z_hat: &CVec,
+    op: &SketchOp,
+    bounds: &Bounds,
+    k: usize,
+    data: Option<(&[f64], usize)>,
+    opts: &CkmOptions,
+) -> Solution {
+    let engine =
+        NativeEngine::with_options(op.clone(), opts.step1.clone(), opts.step5.clone());
+    solve_with_engine(z_hat, &engine, bounds, k, data, opts)
+}
+
+/// Solve CKM on an arbitrary compute engine (native or PJRT).
+pub fn solve_with_engine(
+    z_hat: &CVec,
+    engine: &dyn CkmEngine,
+    bounds: &Bounds,
+    k: usize,
+    data: Option<(&[f64], usize)>,
+    opts: &CkmOptions,
+) -> Solution {
+    assert!(k >= 1, "need at least one centroid");
+    assert!(opts.replicates >= 1);
+    assert_eq!(
+        z_hat.len(),
+        engine.m(),
+        "sketch length {} != engine m {}",
+        z_hat.len(),
+        engine.m()
+    );
+    let mut master = Rng::new(opts.seed);
+    let mut best: Option<Solution> = None;
+    for _rep in 0..opts.replicates {
+        let mut rng = master.split();
+        let sol = clompr_once(z_hat, engine, bounds, k, data, opts, &mut rng);
+        if best.as_ref().map(|b| sol.cost < b.cost).unwrap_or(true) {
+            best = Some(sol);
+        }
+    }
+    best.unwrap()
+}
+
+fn clompr_once(
+    z_hat: &CVec,
+    engine: &dyn CkmEngine,
+    bounds: &Bounds,
+    k: usize,
+    data: Option<(&[f64], usize)>,
+    opts: &CkmOptions,
+    rng: &mut Rng,
+) -> Solution {
+    let op = engine.op();
+    let n_dims = op.n_dims();
+    let mut centroids = Mat::zeros(0, n_dims);
+    let mut alpha: Vec<f64> = Vec::new();
+    let mut residual = z_hat.clone();
+
+    for t in 1..=(2 * k) {
+        // -- Step 1: find a new centroid by ascending the residual correlation.
+        let c0 = draw_init(opts.strategy, bounds, data, &centroids, rng);
+        let c_new = engine.step1_optimize(&c0, &residual, bounds);
+
+        // -- Step 2: expand support.
+        push_row(&mut centroids, &c_new);
+        alpha.push(0.0);
+
+        // -- Step 3: hard thresholding when the support exceeds K.
+        if t > k && centroids.rows > k {
+            let beta = fit_weights(op, z_hat, &centroids, true);
+            let keep = top_k_indices(&beta, k);
+            centroids = select_rows(&centroids, &keep);
+            alpha.clear();
+            alpha.extend(keep.iter().map(|&i| beta[i]));
+        }
+
+        // -- Step 4: project to find α (NNLS on unnormalized atoms).
+        alpha = fit_weights(op, z_hat, &centroids, false);
+
+        // -- Step 5: global gradient descent on (C, α) under the box.
+        // Only keep the engine's result if it actually improved the cost
+        // (the fixed-iteration PJRT Adam can over- or under-shoot).
+        let cost_before = z_hat.sub(&op.mixture_sketch(&centroids, &alpha)).norm2_sq();
+        let (c_opt, a_opt) = engine.step5_optimize(&centroids, &alpha, z_hat, bounds);
+        let cost_after = z_hat.sub(&op.mixture_sketch(&c_opt, &a_opt)).norm2_sq();
+        if cost_after <= cost_before {
+            centroids = c_opt;
+            alpha = a_opt;
+        }
+
+        // -- Residual update.
+        residual = z_hat.sub(&op.mixture_sketch(&centroids, &alpha));
+    }
+
+    // Final cost (4).
+    let cost = residual.norm2_sq();
+    Solution { centroids, alpha, cost }
+}
+
+/// NNLS weight fit: `min_{β ≥ 0} ‖ẑ − Σ β_j u_j‖` with atoms optionally
+/// normalized (step 3 uses normalized atoms, step 4 raw atoms).
+///
+/// PERF: works on the normal equations of the real-stacked complex system
+/// directly — `G_ij = Re⟨u_i, u_j⟩`, `h_j = Re⟨u_j, ẑ⟩` — so the 2m×K
+/// design matrix is never materialized (EXPERIMENTS.md §Perf).
+fn fit_weights(op: &SketchOp, z_hat: &CVec, centroids: &Mat, normalized: bool) -> Vec<f64> {
+    let kk = centroids.rows;
+    let scale = if normalized { 1.0 / op.atom_norm() } else { 1.0 };
+    let atoms: Vec<CVec> = (0..kk).map(|j| op.atom(centroids.row(j))).collect();
+    let mut g = Mat::zeros(kk, kk);
+    for i in 0..kk {
+        for j in 0..=i {
+            let v = scale * scale * atoms[i].re_dot(&atoms[j]);
+            *g.at_mut(i, j) = v;
+            *g.at_mut(j, i) = v;
+        }
+    }
+    let h: Vec<f64> = atoms.iter().map(|u| scale * u.re_dot(z_hat)).collect();
+    nnls_gram(&g, &h)
+}
+
+fn top_k_indices(vals: &[f64], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..vals.len()).collect();
+    idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap());
+    idx.truncate(k);
+    idx.sort_unstable(); // keep stable order of surviving atoms
+    idx
+}
+
+fn push_row(m: &mut Mat, row: &[f64]) {
+    assert_eq!(row.len(), m.cols);
+    m.data.extend_from_slice(row);
+    m.rows += 1;
+}
+
+fn select_rows(m: &Mat, rows: &[usize]) -> Mat {
+    let mut out = Mat::zeros(0, m.cols);
+    for &r in rows {
+        push_row(&mut out, m.row(r));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gmm::GmmConfig;
+    use crate::linalg::matrix::dist2;
+    use crate::sketch::sketch_dataset;
+
+    /// Match each true mean to the nearest recovered centroid; return the
+    /// worst distance.
+    fn worst_match(means: &[Vec<f64>], sol: &Solution) -> f64 {
+        means
+            .iter()
+            .map(|mu| {
+                (0..sol.centroids.rows)
+                    .map(|k| dist2(mu, sol.centroids.row(k)).sqrt())
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn recovers_well_separated_clusters() {
+        let mut rng = Rng::new(42);
+        let mut cfg = GmmConfig::paper_default(4, 5, 8000);
+        cfg.separation = 4.0; // generous separation for a deterministic test
+        let g = cfg.generate(&mut rng);
+        let sk = sketch_dataset(&g.dataset.points, 5, 400, 7, None);
+        let sol = solve(&sk, 4, &CkmOptions { replicates: 2, ..CkmOptions::default() });
+        assert_eq!(sol.centroids.rows, 4);
+        let wm = worst_match(&g.means, &sol);
+        assert!(wm < 0.8, "worst centroid-mean distance {wm}");
+        // normalized weights near uniform 1/4
+        for &a in &sol.normalized_weights() {
+            assert!(a > 0.12 && a < 0.45, "weights {:?}", sol.normalized_weights());
+        }
+    }
+
+    #[test]
+    fn cost_decreases_with_replicates() {
+        let mut rng = Rng::new(1);
+        let g = GmmConfig::paper_default(3, 4, 4000).generate(&mut rng);
+        let sk = sketch_dataset(&g.dataset.points, 4, 200, 3, None);
+        let one = solve(&sk, 3, &CkmOptions { replicates: 1, seed: 5, ..CkmOptions::default() });
+        let five = solve(&sk, 3, &CkmOptions { replicates: 5, seed: 5, ..CkmOptions::default() });
+        assert!(five.cost <= one.cost + 1e-12);
+    }
+
+    #[test]
+    fn centroids_respect_bounds() {
+        let mut rng = Rng::new(2);
+        let g = GmmConfig::paper_default(3, 3, 3000).generate(&mut rng);
+        let sk = sketch_dataset(&g.dataset.points, 3, 150, 11, None);
+        let sol = solve(&sk, 3, &CkmOptions::default());
+        for k in 0..sol.centroids.rows {
+            for d in 0..3 {
+                let v = sol.centroids.at(k, d);
+                assert!(v >= sk.bounds.lo[d] - 1e-12 && v <= sk.bounds.hi[d] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn k_equals_one() {
+        // Single Gaussian: centroid ≈ mean, alpha ≈ 1.
+        let mut rng = Rng::new(3);
+        let mut cfg = GmmConfig::paper_default(1, 2, 4000);
+        cfg.separation = 1.0;
+        let g = cfg.generate(&mut rng);
+        let sk = sketch_dataset(&g.dataset.points, 2, 100, 13, None);
+        let sol = solve(&sk, 1, &CkmOptions::default());
+        assert_eq!(sol.centroids.rows, 1);
+        let d = dist2(sol.centroids.row(0), &g.means[0]).sqrt();
+        assert!(d < 0.5, "centroid off by {d}");
+        // Raw alpha absorbs the char-fn decay of the unit cluster; it is
+        // positive and bounded by 1, and normalizes to exactly 1.
+        assert!(sol.alpha[0] > 0.15 && sol.alpha[0] <= 1.0 + 1e-9, "alpha {:?}", sol.alpha);
+        assert_eq!(sol.normalized_weights(), vec![1.0]);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Rng::new(4);
+        let g = GmmConfig::paper_default(2, 3, 2000).generate(&mut rng);
+        let sk = sketch_dataset(&g.dataset.points, 3, 100, 17, None);
+        let a = solve(&sk, 2, &CkmOptions { seed: 9, ..CkmOptions::default() });
+        let b = solve(&sk, 2, &CkmOptions { seed: 9, ..CkmOptions::default() });
+        assert_eq!(a.centroids.data, b.centroids.data);
+        assert_eq!(a.alpha, b.alpha);
+    }
+
+    #[test]
+    fn sample_init_works_with_data() {
+        let mut rng = Rng::new(5);
+        let g = GmmConfig::paper_default(3, 4, 3000).generate(&mut rng);
+        let sk = sketch_dataset(&g.dataset.points, 4, 200, 19, None);
+        let opts = CkmOptions { strategy: InitStrategy::Sample, ..CkmOptions::default() };
+        let sol = solve_full(&sk.z, &sk.op, &sk.bounds, 3, Some((&g.dataset.points, 4)), &opts);
+        assert_eq!(sol.centroids.rows, 3);
+        assert!(sol.cost.is_finite());
+    }
+
+    #[test]
+    fn top_k_selects_largest() {
+        assert_eq!(top_k_indices(&[0.1, 0.9, 0.5, 0.7], 2), vec![1, 3]);
+        assert_eq!(top_k_indices(&[1.0], 1), vec![0]);
+    }
+}

@@ -1,0 +1,167 @@
+//! Initialization strategies for CLOMPR's step-1 gradient ascent
+//! (paper §4.2): Range, Sample and K++-analog. Sample/K++ need access to
+//! (a subsample of) the data and therefore leave the pure "sketch and
+//! discard" regime — the paper implements them "for testing purpose"; so
+//! do we, for the Fig-1 comparison.
+
+use crate::data::dataset::Bounds;
+use crate::linalg::matrix::dist2;
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// How to pick the starting point of each step-1 ascent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InitStrategy {
+    /// Uniform in the box `[l, u]` (the compressive default).
+    Range,
+    /// A data point drawn uniformly at random.
+    Sample,
+    /// A data point drawn ∝ squared distance to the current centroid set
+    /// (the K-means++ rule, applied per CLOMPR iteration).
+    KppAnalog,
+}
+
+impl InitStrategy {
+    pub fn parse(s: &str) -> anyhow::Result<InitStrategy> {
+        match s {
+            "range" => Ok(InitStrategy::Range),
+            "sample" => Ok(InitStrategy::Sample),
+            "k++" | "kpp" => Ok(InitStrategy::KppAnalog),
+            _ => anyhow::bail!("unknown init strategy '{s}' (range|sample|k++)"),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            InitStrategy::Range => "range",
+            InitStrategy::Sample => "sample",
+            InitStrategy::KppAnalog => "k++",
+        }
+    }
+    /// Whether this strategy needs data access (beyond the sketch).
+    pub fn needs_data(&self) -> bool {
+        !matches!(self, InitStrategy::Range)
+    }
+}
+
+/// Draw an initial centroid.
+///
+/// `data` is required (non-empty) for `Sample`/`KppAnalog`; `current` is the
+/// row-major set of already-selected centroids (used by `KppAnalog`).
+pub fn draw_init(
+    strategy: InitStrategy,
+    bounds: &Bounds,
+    data: Option<(&[f64], usize)>,
+    current: &Mat,
+    rng: &mut Rng,
+) -> Vec<f64> {
+    let n_dims = bounds.lo.len();
+    match strategy {
+        InitStrategy::Range => {
+            (0..n_dims).map(|d| rng.uniform_in(bounds.lo[d], bounds.hi[d].max(bounds.lo[d]))).collect()
+        }
+        InitStrategy::Sample => {
+            let (pts, nd) = expect_data(data, n_dims);
+            let n = pts.len() / nd;
+            let i = rng.below(n);
+            pts[i * nd..(i + 1) * nd].to_vec()
+        }
+        InitStrategy::KppAnalog => {
+            let (pts, nd) = expect_data(data, n_dims);
+            let n = pts.len() / nd;
+            if current.rows == 0 {
+                let i = rng.below(n);
+                return pts[i * nd..(i + 1) * nd].to_vec();
+            }
+            // Weights ∝ D(x)² on a bounded subsample (keeps O(n·K) in check).
+            let cap = 4096.min(n);
+            let idx = rng.sample_indices(n, cap);
+            let mut weights = Vec::with_capacity(cap);
+            for &i in &idx {
+                let x = &pts[i * nd..(i + 1) * nd];
+                let dmin = (0..current.rows)
+                    .map(|k| dist2(x, current.row(k)))
+                    .fold(f64::INFINITY, f64::min);
+                weights.push(dmin);
+            }
+            match rng.categorical(&weights) {
+                Some(w) => pts[idx[w] * nd..(idx[w] + 1) * nd].to_vec(),
+                None => {
+                    // All points coincide with centroids; fall back to Range.
+                    draw_init(InitStrategy::Range, bounds, data, current, rng)
+                }
+            }
+        }
+    }
+}
+
+fn expect_data(data: Option<(&[f64], usize)>, n_dims: usize) -> (&[f64], usize) {
+    let (pts, nd) = data.expect("Sample/K++ init requires data access (see CkmOptions::data)");
+    assert_eq!(nd, n_dims, "data dims mismatch");
+    assert!(!pts.is_empty(), "Sample/K++ init with empty data");
+    (pts, nd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_bounds() -> Bounds {
+        Bounds { lo: vec![-1.0, 0.0], hi: vec![1.0, 4.0] }
+    }
+
+    #[test]
+    fn range_inside_box() {
+        let b = toy_bounds();
+        let mut rng = Rng::new(0);
+        for _ in 0..200 {
+            let c = draw_init(InitStrategy::Range, &b, None, &Mat::zeros(0, 2), &mut rng);
+            assert!(c[0] >= -1.0 && c[0] <= 1.0 && c[1] >= 0.0 && c[1] <= 4.0);
+        }
+    }
+
+    #[test]
+    fn sample_returns_data_point() {
+        let b = toy_bounds();
+        let data = vec![0.5, 1.0, -0.5, 3.0];
+        let mut rng = Rng::new(1);
+        for _ in 0..20 {
+            let c = draw_init(InitStrategy::Sample, &b, Some((&data, 2)), &Mat::zeros(0, 2), &mut rng);
+            assert!(c == vec![0.5, 1.0] || c == vec![-0.5, 3.0]);
+        }
+    }
+
+    #[test]
+    fn kpp_prefers_far_points() {
+        let b = Bounds { lo: vec![0.0], hi: vec![10.0] };
+        // data: cluster at 0 and one point at 10; current centroid at 0
+        let mut data = vec![0.0; 50];
+        data.push(10.0);
+        let current = Mat::from_vec(1, 1, vec![0.0]);
+        let mut rng = Rng::new(2);
+        let mut far = 0;
+        for _ in 0..100 {
+            let c = draw_init(InitStrategy::KppAnalog, &b, Some((&data, 1)), &current, &mut rng);
+            if c[0] == 10.0 {
+                far += 1;
+            }
+        }
+        assert!(far > 90, "far point picked {far}/100");
+    }
+
+    #[test]
+    fn kpp_first_pick_is_uniform_sample() {
+        let b = Bounds { lo: vec![0.0], hi: vec![1.0] };
+        let data = vec![0.25, 0.75];
+        let mut rng = Rng::new(3);
+        let c = draw_init(InitStrategy::KppAnalog, &b, Some((&data, 1)), &Mat::zeros(0, 1), &mut rng);
+        assert!(c[0] == 0.25 || c[0] == 0.75);
+    }
+
+    #[test]
+    fn parse_names_roundtrip() {
+        for s in [InitStrategy::Range, InitStrategy::Sample, InitStrategy::KppAnalog] {
+            assert_eq!(InitStrategy::parse(s.name()).unwrap(), s);
+        }
+        assert!(InitStrategy::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! The paper's contribution: Compressive K-means = CLOMPR (Algorithm 1)
+//! over the Fourier sketch, with box constraints and initialization
+//! strategies (§3.2, §4.2).
+
+pub mod clompr;
+pub mod hierarchical;
+pub mod init;
+pub mod optim;
+
+pub use clompr::{solve, solve_full, solve_with_engine, CkmOptions, Solution};
+pub use hierarchical::solve_hierarchical;
+pub use init::InitStrategy;

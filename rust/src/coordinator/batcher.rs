@@ -1,0 +1,112 @@
+//! Chunk batcher: turns arbitrary-sized row pushes into fixed-size chunks
+//! for the compute engines (the PJRT sketch artifact wants exactly
+//! `chunk_b` rows; the native engine just likes big blocks).
+
+/// Accumulates rows and emits full chunks.
+#[derive(Debug)]
+pub struct Batcher {
+    n_dims: usize,
+    chunk_rows: usize,
+    buf: Vec<f64>,
+    emitted_rows: usize,
+}
+
+impl Batcher {
+    pub fn new(n_dims: usize, chunk_rows: usize) -> Batcher {
+        assert!(n_dims > 0 && chunk_rows > 0);
+        Batcher { n_dims, chunk_rows, buf: Vec::new(), emitted_rows: 0 }
+    }
+
+    /// Push rows (row-major, any count); returns zero or more full chunks.
+    pub fn push(&mut self, rows: &[f64]) -> Vec<Vec<f64>> {
+        assert_eq!(rows.len() % self.n_dims, 0, "non-integral row push");
+        self.buf.extend_from_slice(rows);
+        let chunk_len = self.chunk_rows * self.n_dims;
+        let mut out = Vec::new();
+        while self.buf.len() >= chunk_len {
+            let rest = self.buf.split_off(chunk_len);
+            let full = std::mem::replace(&mut self.buf, rest);
+            self.emitted_rows += self.chunk_rows;
+            out.push(full);
+        }
+        out
+    }
+
+    /// Emit whatever is left (possibly empty).
+    pub fn flush(&mut self) -> Option<Vec<f64>> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let out = std::mem::take(&mut self.buf);
+        self.emitted_rows += out.len() / self.n_dims;
+        Some(out)
+    }
+
+    /// Rows emitted so far (full chunks + flushes).
+    pub fn emitted_rows(&self) -> usize {
+        self.emitted_rows
+    }
+
+    /// Rows currently buffered.
+    pub fn pending_rows(&self) -> usize {
+        self.buf.len() / self.n_dims
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{self, Config};
+
+    #[test]
+    fn exact_chunks() {
+        let mut b = Batcher::new(2, 3);
+        let chunks = b.push(&[1.0; 12]); // 6 rows = 2 chunks
+        assert_eq!(chunks.len(), 2);
+        assert!(chunks.iter().all(|c| c.len() == 6));
+        assert_eq!(b.pending_rows(), 0);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    fn partial_then_flush() {
+        let mut b = Batcher::new(1, 4);
+        assert!(b.push(&[1.0, 2.0]).is_empty());
+        let chunks = b.push(&[3.0, 4.0, 5.0]);
+        assert_eq!(chunks, vec![vec![1.0, 2.0, 3.0, 4.0]]);
+        assert_eq!(b.flush(), Some(vec![5.0]));
+        assert_eq!(b.emitted_rows(), 5);
+    }
+
+    #[test]
+    fn prop_conservation() {
+        testing::check("batcher conserves rows", Config::default().cases(32).max_size(60), |rng, size| {
+            let n_dims = 1 + rng.below(4);
+            let chunk_rows = 1 + rng.below(8);
+            let mut b = Batcher::new(n_dims, chunk_rows);
+            let mut input = Vec::new();
+            let mut output = Vec::new();
+            for _ in 0..size {
+                let rows = rng.below(6);
+                let push: Vec<f64> = (0..rows * n_dims).map(|_| rng.normal()).collect();
+                input.extend_from_slice(&push);
+                for c in b.push(&push) {
+                    if c.len() % (chunk_rows * n_dims) != 0 {
+                        return Err("non-full chunk emitted by push".into());
+                    }
+                    output.extend_from_slice(&c);
+                }
+            }
+            if let Some(tail) = b.flush() {
+                output.extend_from_slice(&tail);
+            }
+            if input != output {
+                return Err(format!("lost/reordered data: {} in, {} out", input.len(), output.len()));
+            }
+            if b.emitted_rows() != input.len() / n_dims {
+                return Err("emitted_rows miscount".into());
+            }
+            Ok(())
+        });
+    }
+}

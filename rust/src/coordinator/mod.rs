@@ -1,0 +1,15 @@
+//! L3 coordinator: the systems layer around the sketch.
+//!
+//! - [`batcher`] — fixed-size chunking of arbitrary row streams.
+//! - [`sketcher`] — leader/worker sharded sketching over bounded queues
+//!   (backpressure), exact merge of partial sketches.
+//! - [`state`] — job phase tracking + the replicate manager (paper §4.4).
+//! - [`pipeline`] — the end-to-end driver (sketch → solve → report).
+
+pub mod batcher;
+pub mod pipeline;
+pub mod sketcher;
+pub mod state;
+
+pub use pipeline::{run_pipeline, Backend, PipelineConfig, PipelineResult};
+pub use sketcher::{distributed_sketch, SketchStats, SketcherConfig};

@@ -1,0 +1,219 @@
+//! End-to-end pipeline: frequency fitting → sharded streaming sketch →
+//! CLOMPR solve → metrics. This is the binary's `run` command and the
+//! e2e example's entry point.
+
+use super::sketcher::{distributed_sketch, SketchStats, SketcherConfig};
+use super::state::{JobState, Phase, ReplicateManager};
+use crate::ckm::{solve_with_engine, CkmOptions, InitStrategy, Solution};
+use crate::data::dataset::{Bounds, PointSource};
+use crate::engine::{EngineFactory, NativeFactory, PjrtFactory};
+use crate::linalg::CVec;
+use crate::sketch::{FreqDist, RadiusKind, SketchOp};
+use crate::util::rng::Rng;
+
+/// Compute backend selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Native,
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> anyhow::Result<Backend> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            _ => anyhow::bail!("unknown backend '{s}' (native|pjrt)"),
+        }
+    }
+}
+
+/// Full pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub k: usize,
+    pub m: usize,
+    /// Frequency scale; `None` = estimate from `scale_sample`.
+    pub sigma2: Option<f64>,
+    pub radius: RadiusKind,
+    pub backend: Backend,
+    pub sketcher: SketcherConfig,
+    pub replicates: usize,
+    pub strategy: InitStrategy,
+    pub seed: u64,
+    /// Artifacts dir for the PJRT backend (`None` = default).
+    pub artifacts_dir: Option<std::path::PathBuf>,
+}
+
+impl PipelineConfig {
+    pub fn new(k: usize, m: usize) -> PipelineConfig {
+        PipelineConfig {
+            k,
+            m,
+            sigma2: None,
+            radius: RadiusKind::AdaptedRadius,
+            backend: Backend::Native,
+            sketcher: SketcherConfig::default(),
+            replicates: 1,
+            strategy: InitStrategy::Range,
+            seed: 0,
+            artifacts_dir: None,
+        }
+    }
+}
+
+/// Pipeline output: solution + artifacts of the run for reporting.
+pub struct PipelineResult {
+    pub solution: Solution,
+    pub z: CVec,
+    pub bounds: Bounds,
+    pub n_points: usize,
+    pub sigma2: f64,
+    pub sketch_stats: SketchStats,
+    pub replicate_costs: Vec<f64>,
+    pub job: JobState,
+}
+
+/// Run the full compressive-K-means pipeline over a streaming source.
+///
+/// `scale_sample` (row-major, same dims) feeds the σ² estimator when
+/// `cfg.sigma2` is `None` — the paper's "sketch a small fraction of X"
+/// step; callers with a materialized dataset pass a slice of it.
+pub fn run_pipeline(
+    cfg: &PipelineConfig,
+    source: &mut dyn PointSource,
+    scale_sample: Option<&[f64]>,
+) -> anyhow::Result<PipelineResult> {
+    let n_dims = source.n_dims();
+    let mut rng = Rng::new(cfg.seed);
+    let mut job = JobState::new();
+
+    // -- σ² + frequency draw.
+    let sigma2 = match cfg.sigma2 {
+        Some(s) => s,
+        None => {
+            let sample = scale_sample.ok_or_else(|| {
+                anyhow::anyhow!("sigma2 not given and no scale_sample provided")
+            })?;
+            crate::sketch::scale::ScaleEstimator::default().estimate(sample, n_dims, &mut rng)
+        }
+    };
+    let dist = FreqDist::new(cfg.radius, sigma2);
+
+    // -- Build the engine factory (W drawn once, shared by all workers).
+    let factory: Box<dyn EngineFactory> = match cfg.backend {
+        Backend::Native => {
+            let op = SketchOp::new(dist.draw(cfg.m, n_dims, &mut rng));
+            Box::new(NativeFactory { op })
+        }
+        Backend::Pjrt => {
+            let dir = cfg
+                .artifacts_dir
+                .clone()
+                .unwrap_or_else(crate::runtime::pjrt::PjrtRuntime::default_dir);
+            let rt = crate::runtime::pjrt::PjrtRuntime::new(&dir)?;
+            let m = crate::engine::PjrtEngine::bucketed_m(&rt, cfg.m)?;
+            let op = SketchOp::new(dist.draw(m, n_dims, &mut rng));
+            Box::new(PjrtFactory { dir, op })
+        }
+    };
+
+    // -- Distributed sketch.
+    job.advance(Phase::Sketching);
+    let (acc, sketch_stats) = distributed_sketch(factory.as_ref(), source, &cfg.sketcher)?;
+    anyhow::ensure!(acc.count > 0, "source yielded no points");
+    let z = acc.finalize();
+    let bounds = acc.bounds.clone();
+
+    // -- Solve (replicates tracked for the stability report).
+    job.advance(Phase::Solving);
+    let engine = factory.make()?;
+    let mut rm = ReplicateManager::new();
+    let mut rep_rng = Rng::new(cfg.seed ^ 0x5EED);
+    for _ in 0..cfg.replicates.max(1) {
+        let opts = CkmOptions {
+            strategy: cfg.strategy,
+            replicates: 1,
+            seed: rep_rng.next_u64(),
+            ..CkmOptions::default()
+        };
+        let sol = solve_with_engine(&z, engine.as_ref(), &bounds, cfg.k, None, &opts);
+        rm.offer(sol);
+    }
+    job.advance(Phase::Done);
+
+    let replicate_costs = rm.costs.clone();
+    Ok(PipelineResult {
+        solution: rm.into_best().expect("at least one replicate"),
+        z,
+        bounds,
+        n_points: acc.count,
+        sigma2,
+        sketch_stats,
+        replicate_costs,
+        job,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gmm::GmmConfig;
+    use crate::metrics::sse;
+
+    #[test]
+    fn native_pipeline_end_to_end() {
+        let mut cfg_data = GmmConfig::paper_default(4, 5, 20_000);
+        cfg_data.separation = 4.0;
+        let mut source = cfg_data.stream(11);
+        // scale sample from a sibling stream
+        let mut sampler = cfg_data.stream(11);
+        let mut sample = vec![0.0; 2000 * 5];
+        let got = sampler.next_chunk(&mut sample);
+        sample.truncate(got * 5);
+
+        let mut cfg = PipelineConfig::new(4, 300);
+        cfg.replicates = 2;
+        cfg.sketcher = SketcherConfig { n_workers: 3, chunk_rows: 1024, queue_depth: 4 };
+        let res = run_pipeline(&cfg, &mut source, Some(&sample)).unwrap();
+        assert_eq!(res.n_points, 20_000);
+        assert_eq!(res.replicate_costs.len(), 2);
+        assert!(res.solution.cost.is_finite());
+        assert_eq!(res.job.phase(), Phase::Done);
+        assert!(res.job.seconds_in(Phase::Sketching) > 0.0);
+
+        // Quality: SSE close to a fresh materialization clustered by the
+        // ground truth means is hard to check streaming; instead check the
+        // centroids land inside bounds and produce a finite SSE on a sample.
+        let mut checker = cfg_data.stream(11);
+        let mut pts = vec![0.0; 5000 * 5];
+        let rows = checker.next_chunk(&mut pts);
+        pts.truncate(rows * 5);
+        let s = sse(&pts, 5, &res.solution.centroids);
+        assert!(s.is_finite() && s > 0.0);
+        // well-separated K=4: per-point SSE should be near n (unit clusters)
+        let per_point = s / rows as f64;
+        assert!(per_point < 5.0 * 2.0, "per-point sse {per_point}");
+    }
+
+    #[test]
+    fn sigma2_required_without_sample() {
+        let mut source = GmmConfig::paper_default(2, 3, 100).stream(1);
+        let cfg = PipelineConfig::new(2, 50);
+        let err = match run_pipeline(&cfg, &mut source, None) {
+            Err(e) => e,
+            Ok(_) => panic!("expected sigma2 error"),
+        };
+        assert!(err.to_string().contains("sigma2"));
+    }
+
+    #[test]
+    fn explicit_sigma2_skips_sample() {
+        let mut source = GmmConfig::paper_default(2, 3, 2000).stream(2);
+        let mut cfg = PipelineConfig::new(2, 64);
+        cfg.sigma2 = Some(1.0);
+        let res = run_pipeline(&cfg, &mut source, None).unwrap();
+        assert_eq!(res.sigma2, 1.0);
+        assert_eq!(res.n_points, 2000);
+    }
+}

@@ -1,0 +1,218 @@
+//! Distributed sketching: a leader thread streams chunks from a
+//! [`PointSource`] into a bounded queue; worker threads (each with its own
+//! compute engine) sketch chunks into partial accumulators; the leader
+//! merges them exactly (the sketch is linear — DESIGN.md §1).
+//!
+//! Backpressure: the queue is a bounded `sync_channel`, so a slow worker
+//! pool stalls the reader instead of ballooning memory — the paper's
+//! "distributed/online" sketching claim as an actual mechanism.
+
+use super::batcher::Batcher;
+use crate::data::dataset::PointSource;
+use crate::engine::EngineFactory;
+use crate::sketch::SketchAccumulator;
+use crate::util::logging::Stopwatch;
+use std::sync::mpsc;
+
+/// Configuration for the sketching pipeline.
+#[derive(Clone, Debug)]
+pub struct SketcherConfig {
+    pub n_workers: usize,
+    /// Rows per queued chunk.
+    pub chunk_rows: usize,
+    /// Max queued chunks (bounded queue = backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for SketcherConfig {
+    fn default() -> Self {
+        SketcherConfig { n_workers: 4, chunk_rows: 4096, queue_depth: 8 }
+    }
+}
+
+/// Metrics from a distributed sketch run.
+#[derive(Clone, Debug)]
+pub struct SketchStats {
+    pub total_rows: usize,
+    pub chunks: usize,
+    pub wall_seconds: f64,
+    /// Rows processed per worker (routing coverage diagnostics).
+    pub rows_per_worker: Vec<usize>,
+    pub backend: &'static str,
+}
+
+impl SketchStats {
+    pub fn throughput(&self) -> f64 {
+        self.total_rows as f64 / self.wall_seconds.max(1e-12)
+    }
+}
+
+/// Sketch a streaming source across `cfg.n_workers` threads.
+///
+/// Returns the merged accumulator (normalize with `.finalize()`) and stats.
+/// Deterministic in *value* regardless of scheduling: partial sums commute.
+pub fn distributed_sketch(
+    factory: &dyn EngineFactory,
+    source: &mut dyn PointSource,
+    cfg: &SketcherConfig,
+) -> anyhow::Result<(SketchAccumulator, SketchStats)> {
+    let n_dims = source.n_dims();
+    let workers = cfg.n_workers.max(1);
+    let sw = Stopwatch::start();
+
+    let (merged, rows_per_worker, chunks) = std::thread::scope(
+        |s| -> anyhow::Result<(SketchAccumulator, Vec<usize>, usize)> {
+            let (tx, rx) = mpsc::sync_channel::<Vec<f64>>(cfg.queue_depth.max(1));
+            let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+
+            let mut handles = Vec::new();
+            for wid in 0..workers {
+                let rx = rx.clone();
+                handles.push(s.spawn(move || -> anyhow::Result<(SketchAccumulator, usize)> {
+                    let engine = factory.make()?;
+                    let mut acc = SketchAccumulator::new(engine.m(), n_dims);
+                    let mut rows = 0usize;
+                    loop {
+                        // Hold the lock only to receive, not to compute.
+                        let chunk = { rx.lock().unwrap().recv() };
+                        let Ok(chunk) = chunk else { break };
+                        let chunk_rows = chunk.len() / n_dims;
+                        // Unnormalized update: rows * uniform block sketch.
+                        let z = engine.sketch_points(&chunk, None);
+                        acc.sum.axpy(chunk_rows as f64, &z);
+                        for r in 0..chunk_rows {
+                            acc.bounds.update(&chunk[r * n_dims..(r + 1) * n_dims]);
+                        }
+                        acc.count += chunk_rows;
+                        rows += chunk_rows;
+                    }
+                    log::debug!("worker {wid}: {rows} rows sketched");
+                    Ok((acc, rows))
+                }));
+            }
+
+            // Leader: read the source, batch, enqueue (blocking on full queue).
+            let mut batcher = Batcher::new(n_dims, cfg.chunk_rows);
+            let mut buf = vec![0.0; cfg.chunk_rows.max(1) * n_dims];
+            let mut chunks = 0usize;
+            loop {
+                let rows = source.next_chunk(&mut buf);
+                if rows == 0 {
+                    break;
+                }
+                for chunk in batcher.push(&buf[..rows * n_dims]) {
+                    chunks += 1;
+                    tx.send(chunk).expect("workers died before end of stream");
+                }
+            }
+            if let Some(tail) = batcher.flush() {
+                chunks += 1;
+                tx.send(tail).expect("workers died before end of stream");
+            }
+            drop(tx); // close the queue; workers drain and exit
+
+            let mut merged: Option<SketchAccumulator> = None;
+            let mut rows_per_worker = Vec::with_capacity(workers);
+            for h in handles {
+                let (acc, rows) = h.join().expect("worker panicked")?;
+                rows_per_worker.push(rows);
+                match merged.as_mut() {
+                    None => merged = Some(acc),
+                    Some(mr) => mr.merge(&acc),
+                }
+            }
+            Ok((merged.expect("at least one worker"), rows_per_worker, chunks))
+        },
+    )?;
+
+    let stats = SketchStats {
+        total_rows: merged.count,
+        chunks,
+        wall_seconds: sw.seconds(),
+        rows_per_worker,
+        backend: factory.backend_name(),
+    };
+    Ok((merged, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::SliceSource;
+    use crate::data::gmm::GmmConfig;
+    use crate::engine::NativeFactory;
+    use crate::sketch::{FreqDist, SketchOp};
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn factory(m: usize, n: usize, seed: u64) -> NativeFactory {
+        let mut rng = Rng::new(seed);
+        NativeFactory { op: SketchOp::new(FreqDist::adapted(1.0).draw(m, n, &mut rng)) }
+    }
+
+    #[test]
+    fn matches_sequential_sketch() {
+        let f = factory(64, 5, 1);
+        let mut rng = Rng::new(2);
+        let g = GmmConfig::paper_default(3, 5, 3011).generate(&mut rng); // non-divisible N
+        let mut src = SliceSource::new(&g.dataset.points, 5);
+        let cfg = SketcherConfig { n_workers: 4, chunk_rows: 256, queue_depth: 4 };
+        let (acc, stats) = distributed_sketch(&f, &mut src, &cfg).unwrap();
+        assert_eq!(acc.count, 3011);
+        assert_eq!(stats.total_rows, 3011);
+        assert_eq!(stats.rows_per_worker.iter().sum::<usize>(), 3011);
+        let z = acc.finalize();
+        let z_seq = f.op.sketch_points(&g.dataset.points, None);
+        testing::all_close(&z.re, &z_seq.re, 1e-9).unwrap();
+        testing::all_close(&z.im, &z_seq.im, 1e-9).unwrap();
+        // bounds identical to one-pass bounds
+        assert_eq!(acc.bounds, g.dataset.bounds());
+    }
+
+    #[test]
+    fn single_worker_and_tiny_queue() {
+        let f = factory(32, 3, 3);
+        let mut rng = Rng::new(4);
+        let g = GmmConfig::paper_default(2, 3, 777).generate(&mut rng);
+        let mut src = SliceSource::new(&g.dataset.points, 3);
+        let cfg = SketcherConfig { n_workers: 1, chunk_rows: 64, queue_depth: 1 };
+        let (acc, stats) = distributed_sketch(&f, &mut src, &cfg).unwrap();
+        assert_eq!(acc.count, 777);
+        assert_eq!(stats.rows_per_worker, vec![777]);
+        let z = acc.finalize();
+        let z_seq = f.op.sketch_points(&g.dataset.points, None);
+        testing::all_close(&z.re, &z_seq.re, 1e-9).unwrap();
+    }
+
+    #[test]
+    fn worker_count_does_not_change_value() {
+        let f = factory(48, 4, 5);
+        let mut rng = Rng::new(6);
+        let g = GmmConfig::paper_default(3, 4, 2048).generate(&mut rng);
+        let mut z_ref = None;
+        for workers in [1usize, 2, 7] {
+            let mut src = SliceSource::new(&g.dataset.points, 4);
+            let cfg = SketcherConfig { n_workers: workers, chunk_rows: 100, queue_depth: 2 };
+            let (acc, _) = distributed_sketch(&f, &mut src, &cfg).unwrap();
+            let z = acc.finalize();
+            match &z_ref {
+                None => z_ref = Some(z),
+                Some(zr) => {
+                    testing::all_close(&z.re, &zr.re, 1e-9).unwrap();
+                    testing::all_close(&z.im, &zr.im, 1e-9).unwrap();
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_source_yields_empty_accumulator() {
+        let f = factory(16, 2, 7);
+        let pts: Vec<f64> = vec![];
+        let mut src = SliceSource::new(&pts, 2);
+        let (acc, stats) = distributed_sketch(&f, &mut src, &SketcherConfig::default()).unwrap();
+        assert_eq!(acc.count, 0);
+        assert_eq!(stats.chunks, 0);
+        assert!(!acc.bounds.is_valid());
+    }
+}

@@ -1,0 +1,161 @@
+//! Job state tracking for the pipeline: phase transitions with wall-clock
+//! accounting, and the replicate manager implementing the paper's §4.4
+//! selection rule (argmin sketch cost — the SSE is unavailable once the
+//! data are discarded).
+
+use crate::ckm::Solution;
+use crate::util::logging::Stopwatch;
+
+/// Pipeline phases, in order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    Created,
+    Sketching,
+    Solving,
+    Done,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Created => "created",
+            Phase::Sketching => "sketching",
+            Phase::Solving => "solving",
+            Phase::Done => "done",
+        }
+    }
+}
+
+/// A job record: enforces forward-only transitions and accumulates
+/// per-phase elapsed time.
+#[derive(Debug)]
+pub struct JobState {
+    phase: Phase,
+    sw: Stopwatch,
+    /// (phase, seconds spent in it)
+    pub history: Vec<(Phase, f64)>,
+}
+
+impl JobState {
+    pub fn new() -> JobState {
+        JobState { phase: Phase::Created, sw: Stopwatch::start(), history: Vec::new() }
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    /// Advance to `next`; panics on a backward transition (a logic bug).
+    pub fn advance(&mut self, next: Phase) {
+        assert!(next > self.phase, "illegal transition {:?} -> {next:?}", self.phase);
+        let spent = self.sw.restart();
+        self.history.push((self.phase, spent));
+        log::debug!("job: {} -> {} ({spent:.3}s)", self.phase.name(), next.name());
+        self.phase = next;
+    }
+
+    pub fn seconds_in(&self, phase: Phase) -> f64 {
+        self.history.iter().filter(|(p, _)| *p == phase).map(|(_, s)| s).sum()
+    }
+}
+
+impl Default for JobState {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Tracks replicate solutions and selects the best by sketch cost.
+#[derive(Debug, Default)]
+pub struct ReplicateManager {
+    pub costs: Vec<f64>,
+    best: Option<Solution>,
+}
+
+impl ReplicateManager {
+    pub fn new() -> ReplicateManager {
+        ReplicateManager { costs: Vec::new(), best: None }
+    }
+
+    /// Offer a replicate's solution; keeps it iff it improves the cost.
+    pub fn offer(&mut self, sol: Solution) -> bool {
+        self.costs.push(sol.cost);
+        let better = self.best.as_ref().map(|b| sol.cost < b.cost).unwrap_or(true);
+        if better {
+            self.best = Some(sol);
+        }
+        better
+    }
+
+    pub fn best(&self) -> Option<&Solution> {
+        self.best.as_ref()
+    }
+
+    pub fn into_best(self) -> Option<Solution> {
+        self.best
+    }
+
+    /// Spread of replicate costs (max/min) — the paper's stability story:
+    /// CKM's spread stays near 1 while Lloyd-Max's grows.
+    pub fn cost_spread(&self) -> f64 {
+        let (mut lo, mut hi) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &c in &self.costs {
+            lo = lo.min(c);
+            hi = hi.max(c);
+        }
+        if self.costs.is_empty() || lo <= 0.0 {
+            1.0
+        } else {
+            hi / lo
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn sol(cost: f64) -> Solution {
+        Solution { centroids: Mat::zeros(1, 1), alpha: vec![1.0], cost }
+    }
+
+    #[test]
+    fn phases_advance_and_account() {
+        let mut j = JobState::new();
+        assert_eq!(j.phase(), Phase::Created);
+        j.advance(Phase::Sketching);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        j.advance(Phase::Solving);
+        j.advance(Phase::Done);
+        assert_eq!(j.phase(), Phase::Done);
+        assert_eq!(j.history.len(), 3);
+        assert!(j.seconds_in(Phase::Sketching) > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal transition")]
+    fn backward_transition_panics() {
+        let mut j = JobState::new();
+        j.advance(Phase::Solving);
+        j.advance(Phase::Sketching);
+    }
+
+    #[test]
+    fn replicates_keep_best() {
+        let mut rm = ReplicateManager::new();
+        assert!(rm.offer(sol(5.0)));
+        assert!(!rm.offer(sol(7.0)));
+        assert!(rm.offer(sol(2.0)));
+        assert_eq!(rm.best().unwrap().cost, 2.0);
+        assert_eq!(rm.costs, vec![5.0, 7.0, 2.0]);
+        assert!((rm.cost_spread() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_manager() {
+        let rm = ReplicateManager::new();
+        assert!(rm.best().is_none());
+        assert_eq!(rm.cost_spread(), 1.0);
+    }
+}

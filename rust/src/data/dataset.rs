@@ -1,0 +1,278 @@
+//! In-memory datasets, one-pass bounds, binary file I/O and streaming
+//! point sources.
+//!
+//! The sketch is a one-pass statistic, so the coordinator never needs the
+//! whole dataset in memory: anything implementing [`PointSource`] can be
+//! sketched chunk by chunk (an in-memory dataset, a binary file reader, or
+//! a generator that synthesizes points on the fly for the 10⁷-point
+//! scaling experiment).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// An in-memory dataset: `n_points` rows of dimension `n_dims`, row-major.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub n_dims: usize,
+    /// Row-major points, length `n_points * n_dims`.
+    pub points: Vec<f64>,
+    /// Ground-truth labels when known (synthetic data), else empty.
+    pub labels: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn new(n_dims: usize, points: Vec<f64>) -> Dataset {
+        assert!(n_dims > 0 && points.len() % n_dims == 0);
+        Dataset { n_dims, points, labels: Vec::new() }
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.points.len() / self.n_dims
+    }
+
+    pub fn point(&self, i: usize) -> &[f64] {
+        &self.points[i * self.n_dims..(i + 1) * self.n_dims]
+    }
+
+    /// Elementwise bounds `(l, u)` with `l ≤ x_i ≤ u` for all points —
+    /// computed in one pass, exactly as the paper prescribes alongside the
+    /// sketch (used as box constraints in CLOMPR's gradient steps).
+    pub fn bounds(&self) -> Bounds {
+        let mut b = Bounds::empty(self.n_dims);
+        for i in 0..self.n_points() {
+            b.update(self.point(i));
+        }
+        b
+    }
+
+    /// Write as little-endian f64 binary with a 16-byte header.
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(&(self.n_points() as u64).to_le_bytes())?;
+        f.write_all(&(self.n_dims as u64).to_le_bytes())?;
+        for &x in &self.points {
+            f.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    /// Read back a [`Dataset::save`] file.
+    pub fn load(path: &Path) -> anyhow::Result<Dataset> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut h = [0u8; 8];
+        f.read_exact(&mut h)?;
+        let n_points = u64::from_le_bytes(h) as usize;
+        f.read_exact(&mut h)?;
+        let n_dims = u64::from_le_bytes(h) as usize;
+        anyhow::ensure!(n_dims > 0, "corrupt header: n_dims = 0");
+        let mut points = vec![0.0f64; n_points * n_dims];
+        let mut buf = [0u8; 8];
+        for p in points.iter_mut() {
+            f.read_exact(&mut buf)?;
+            *p = f64::from_le_bytes(buf);
+        }
+        Ok(Dataset { n_dims, points, labels: Vec::new() })
+    }
+}
+
+/// Elementwise box bounds of a point cloud (paper's `l`, `u`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bounds {
+    pub lo: Vec<f64>,
+    pub hi: Vec<f64>,
+}
+
+impl Bounds {
+    pub fn empty(n_dims: usize) -> Bounds {
+        Bounds { lo: vec![f64::INFINITY; n_dims], hi: vec![f64::NEG_INFINITY; n_dims] }
+    }
+
+    pub fn update(&mut self, x: &[f64]) {
+        debug_assert_eq!(x.len(), self.lo.len());
+        for (i, &v) in x.iter().enumerate() {
+            if v < self.lo[i] {
+                self.lo[i] = v;
+            }
+            if v > self.hi[i] {
+                self.hi[i] = v;
+            }
+        }
+    }
+
+    pub fn merge(&mut self, other: &Bounds) {
+        for i in 0..self.lo.len() {
+            self.lo[i] = self.lo[i].min(other.lo[i]);
+            self.hi[i] = self.hi[i].max(other.hi[i]);
+        }
+    }
+
+    /// Whether any point was ever observed.
+    pub fn is_valid(&self) -> bool {
+        self.lo.iter().zip(&self.hi).all(|(l, h)| l <= h)
+    }
+
+    /// Clamp a point into the box, in place.
+    pub fn clamp(&self, x: &mut [f64]) {
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = v.clamp(self.lo[i], self.hi[i]);
+        }
+    }
+}
+
+/// A streaming source of points: fills caller-provided row-major buffers.
+///
+/// Implementations must be deterministic for a given construction so that
+/// sharded (coordinator) and sequential sketching agree in tests.
+pub trait PointSource: Send {
+    /// Dimension of each point.
+    fn n_dims(&self) -> usize;
+    /// Total number of points this source will yield.
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    /// Fill `buf` (capacity = chunk_rows * n_dims) with the next points;
+    /// returns the number of rows written (0 = exhausted).
+    fn next_chunk(&mut self, buf: &mut [f64]) -> usize;
+}
+
+/// Stream over an in-memory dataset.
+pub struct SliceSource<'a> {
+    data: &'a [f64],
+    n_dims: usize,
+    pos: usize,
+}
+
+impl<'a> SliceSource<'a> {
+    pub fn new(data: &'a [f64], n_dims: usize) -> Self {
+        assert!(n_dims > 0 && data.len() % n_dims == 0);
+        SliceSource { data, n_dims, pos: 0 }
+    }
+}
+
+impl<'a> PointSource for SliceSource<'a> {
+    fn n_dims(&self) -> usize {
+        self.n_dims
+    }
+    fn len(&self) -> usize {
+        self.data.len() / self.n_dims
+    }
+    fn next_chunk(&mut self, buf: &mut [f64]) -> usize {
+        let rows_cap = buf.len() / self.n_dims;
+        let remaining = (self.data.len() - self.pos) / self.n_dims;
+        let rows = rows_cap.min(remaining);
+        let nv = rows * self.n_dims;
+        buf[..nv].copy_from_slice(&self.data[self.pos..self.pos + nv]);
+        self.pos += nv;
+        rows
+    }
+}
+
+/// A contiguous shard `[start, end)` of a dataset slice, for the
+/// coordinator's leader/worker split.
+pub struct ShardSource<'a> {
+    inner: SliceSource<'a>,
+}
+
+impl<'a> ShardSource<'a> {
+    pub fn new(data: &'a [f64], n_dims: usize, start: usize, end: usize) -> Self {
+        ShardSource { inner: SliceSource::new(&data[start * n_dims..end * n_dims], n_dims) }
+    }
+}
+
+impl<'a> PointSource for ShardSource<'a> {
+    fn n_dims(&self) -> usize {
+        self.inner.n_dims()
+    }
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+    fn next_chunk(&mut self, buf: &mut [f64]) -> usize {
+        self.inner.next_chunk(buf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(2, vec![0.0, 1.0, -2.0, 5.0, 3.0, -1.0])
+    }
+
+    #[test]
+    fn dataset_accessors() {
+        let d = toy();
+        assert_eq!(d.n_points(), 3);
+        assert_eq!(d.point(1), &[-2.0, 5.0]);
+    }
+
+    #[test]
+    fn bounds_one_pass() {
+        let b = toy().bounds();
+        assert_eq!(b.lo, vec![-2.0, -1.0]);
+        assert_eq!(b.hi, vec![3.0, 5.0]);
+        assert!(b.is_valid());
+        let mut x = vec![10.0, -10.0];
+        b.clamp(&mut x);
+        assert_eq!(x, vec![3.0, -1.0]);
+    }
+
+    #[test]
+    fn bounds_merge_equals_whole() {
+        let d = toy();
+        let mut b1 = Bounds::empty(2);
+        b1.update(d.point(0));
+        let mut b2 = Bounds::empty(2);
+        b2.update(d.point(1));
+        b2.update(d.point(2));
+        b1.merge(&b2);
+        assert_eq!(b1, d.bounds());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let d = toy();
+        let path = std::env::temp_dir().join("ckm_test_ds.bin");
+        d.save(&path).unwrap();
+        let back = Dataset::load(&path).unwrap();
+        assert_eq!(back.n_dims, d.n_dims);
+        assert_eq!(back.points, d.points);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn slice_source_chunks_cover() {
+        let d = toy();
+        let mut src = SliceSource::new(&d.points, 2);
+        assert_eq!(src.len(), 3);
+        let mut buf = vec![0.0; 4]; // 2 rows per chunk
+        let mut collected = Vec::new();
+        loop {
+            let rows = src.next_chunk(&mut buf);
+            if rows == 0 {
+                break;
+            }
+            collected.extend_from_slice(&buf[..rows * 2]);
+        }
+        assert_eq!(collected, d.points);
+    }
+
+    #[test]
+    fn shards_partition() {
+        let d = toy();
+        let mut buf = vec![0.0; 64];
+        let mut all = Vec::new();
+        for (s, e) in [(0usize, 1usize), (1, 3)] {
+            let mut sh = ShardSource::new(&d.points, 2, s, e);
+            loop {
+                let rows = sh.next_chunk(&mut buf);
+                if rows == 0 {
+                    break;
+                }
+                all.extend_from_slice(&buf[..rows * 2]);
+            }
+        }
+        assert_eq!(all, d.points);
+    }
+}

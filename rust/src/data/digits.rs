@@ -1,0 +1,258 @@
+//! Procedural handwritten-digit surrogate (MNIST + infMNIST substitution).
+//!
+//! The paper evaluates on MNIST grown to 3·10⁵ / 10⁶ images by random
+//! distortions (infMNIST). Neither dataset is available offline, so this
+//! module synthesizes the same *shape* of problem: ten digit prototypes
+//! rendered as anti-aliased seven-segment-style strokes on a 28×28 grid,
+//! then expanded by random affine distortions (rotation/scale/shear/
+//! translation — the same family infMNIST uses) plus stroke-thickness
+//! jitter and pixel noise. Downstream, the images go through the identical
+//! pipeline the paper uses: feature extraction → kNN graph → normalized
+//! Laplacian → 10-dim spectral embedding → (C)KM. See DESIGN.md §3.
+//!
+//! Features are 7×7 block averages (4×4 pooling) of the image — a cheap
+//! stand-in for the paper's SIFT descriptors that preserves the 10-class
+//! cluster structure the clustering stage consumes.
+
+use super::dataset::Dataset;
+use crate::util::rng::Rng;
+
+pub const IMG_SIDE: usize = 28;
+pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+pub const FEAT_SIDE: usize = 7;
+pub const FEAT_DIM: usize = FEAT_SIDE * FEAT_SIDE;
+
+/// Seven-segment geometry in the unit square (x right, y down).
+/// Segments: A top, B top-right, C bottom-right, D bottom, E bottom-left,
+/// F top-left, G middle.
+const SEGS: [((f64, f64), (f64, f64)); 7] = [
+    ((0.25, 0.15), (0.75, 0.15)), // A
+    ((0.75, 0.15), (0.75, 0.50)), // B
+    ((0.75, 0.50), (0.75, 0.85)), // C
+    ((0.25, 0.85), (0.75, 0.85)), // D
+    ((0.25, 0.50), (0.25, 0.85)), // E
+    ((0.25, 0.15), (0.25, 0.50)), // F
+    ((0.25, 0.50), (0.75, 0.50)), // G
+];
+
+/// Active segments per digit (A..G bitmask order as in `SEGS`).
+const DIGIT_SEGS: [[bool; 7]; 10] = [
+    [true, true, true, true, true, true, false],    // 0
+    [false, true, true, false, false, false, false], // 1
+    [true, true, false, true, true, false, true],   // 2
+    [true, true, true, true, false, false, true],   // 3
+    [false, true, true, false, false, true, true],  // 4
+    [true, false, true, true, false, true, true],   // 5
+    [true, false, true, true, true, true, true],    // 6
+    [true, true, true, false, false, false, false], // 7
+    [true, true, true, true, true, true, true],     // 8
+    [true, true, true, true, false, true, true],    // 9
+];
+
+/// Distortion parameters (std-devs of the random transform draws).
+#[derive(Clone, Debug)]
+pub struct Distortion {
+    pub rotate: f64,    // radians
+    pub scale: f64,     // log-scale
+    pub shear: f64,
+    pub translate: f64, // fraction of the unit square
+    pub thickness: f64, // stroke half-width jitter
+    pub noise: f64,     // additive pixel noise
+}
+
+impl Default for Distortion {
+    fn default() -> Self {
+        Distortion {
+            rotate: 0.12,
+            scale: 0.07,
+            shear: 0.08,
+            translate: 0.035,
+            thickness: 0.010,
+            noise: 0.05,
+        }
+    }
+}
+
+/// Configuration for the digit-set generator.
+#[derive(Clone, Debug)]
+pub struct DigitConfig {
+    pub n_images: usize,
+    pub distortion: Distortion,
+}
+
+impl DigitConfig {
+    pub fn new(n_images: usize) -> DigitConfig {
+        DigitConfig { n_images, distortion: Distortion::default() }
+    }
+
+    /// Generate images (`n × 784`, values in [0,1]) with balanced labels.
+    pub fn generate_images(&self, rng: &mut Rng) -> (Vec<f64>, Vec<usize>) {
+        let mut images = Vec::with_capacity(self.n_images * IMG_PIXELS);
+        let mut labels = Vec::with_capacity(self.n_images);
+        for i in 0..self.n_images {
+            let digit = i % 10; // balanced classes, shuffled order not needed
+            labels.push(digit);
+            render_digit(digit, &self.distortion, rng, &mut images);
+        }
+        (images, labels)
+    }
+
+    /// Generate the pooled-feature dataset the clustering pipeline consumes.
+    pub fn generate(&self, rng: &mut Rng) -> Dataset {
+        let (images, labels) = self.generate_images(rng);
+        let feats = pool_features(&images);
+        let mut ds = Dataset::new(FEAT_DIM, feats);
+        ds.labels = labels;
+        ds
+    }
+}
+
+/// Render one distorted digit, appending 784 pixels to `out`.
+fn render_digit(digit: usize, d: &Distortion, rng: &mut Rng, out: &mut Vec<f64>) {
+    // Random affine (inverse-mapped at raster time): rotation + log-scale +
+    // shear + translation about the glyph center (0.5, 0.5).
+    let ang = d.rotate * rng.normal();
+    let sc = (d.scale * rng.normal()).exp();
+    let sh = d.shear * rng.normal();
+    let (tx, ty) = (d.translate * rng.normal(), d.translate * rng.normal());
+    let (ca, sa) = (ang.cos(), ang.sin());
+    // forward matrix M = R·Shear·Scale ; we transform segment endpoints.
+    let map = |x: f64, y: f64| -> (f64, f64) {
+        let (x, y) = (x - 0.5, y - 0.5);
+        let (x, y) = (sc * (x + sh * y), sc * y);
+        let (x, y) = (ca * x - sa * y, sa * x + ca * y);
+        (x + 0.5 + tx, y + 0.5 + ty)
+    };
+    let half_w = (0.055 + d.thickness * rng.normal()).max(0.02);
+
+    let mut segs: Vec<((f64, f64), (f64, f64))> = Vec::new();
+    for (s, &on) in SEGS.iter().zip(&DIGIT_SEGS[digit]) {
+        if on {
+            segs.push((map(s.0 .0, s.0 .1), map(s.1 .0, s.1 .1)));
+        }
+    }
+
+    let inv = 1.0 / IMG_SIDE as f64;
+    for py in 0..IMG_SIDE {
+        for px in 0..IMG_SIDE {
+            let x = (px as f64 + 0.5) * inv;
+            let y = (py as f64 + 0.5) * inv;
+            let mut dist = f64::INFINITY;
+            for &(a, b) in &segs {
+                dist = dist.min(point_segment_dist(x, y, a, b));
+            }
+            // Soft stroke edge over ~1.5 pixels.
+            let edge = 1.5 * inv;
+            let v = if dist <= half_w {
+                1.0
+            } else if dist <= half_w + edge {
+                1.0 - (dist - half_w) / edge
+            } else {
+                0.0
+            };
+            let noisy = v + d.noise * rng.normal();
+            out.push(noisy.clamp(0.0, 1.0));
+        }
+    }
+}
+
+fn point_segment_dist(x: f64, y: f64, a: (f64, f64), b: (f64, f64)) -> f64 {
+    let (dx, dy) = (b.0 - a.0, b.1 - a.1);
+    let len2 = dx * dx + dy * dy;
+    let t = if len2 > 0.0 { (((x - a.0) * dx + (y - a.1) * dy) / len2).clamp(0.0, 1.0) } else { 0.0 };
+    let (cx, cy) = (a.0 + t * dx, a.1 + t * dy);
+    ((x - cx).powi(2) + (y - cy).powi(2)).sqrt()
+}
+
+/// 4×4 average pooling: 784-pixel images → 49-dim features.
+pub fn pool_features(images: &[f64]) -> Vec<f64> {
+    assert_eq!(images.len() % IMG_PIXELS, 0);
+    let n = images.len() / IMG_PIXELS;
+    let mut out = Vec::with_capacity(n * FEAT_DIM);
+    for i in 0..n {
+        let img = &images[i * IMG_PIXELS..(i + 1) * IMG_PIXELS];
+        for by in 0..FEAT_SIDE {
+            for bx in 0..FEAT_SIDE {
+                let mut s = 0.0;
+                for dy in 0..4 {
+                    for dx in 0..4 {
+                        s += img[(by * 4 + dy) * IMG_SIDE + bx * 4 + dx];
+                    }
+                }
+                out.push(s / 16.0);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::dist2;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let mut rng = Rng::new(0);
+        let (imgs, labels) = DigitConfig::new(30).generate_images(&mut rng);
+        assert_eq!(imgs.len(), 30 * IMG_PIXELS);
+        assert_eq!(labels.len(), 30);
+        assert!(imgs.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        // balanced labels
+        for d in 0..10 {
+            assert_eq!(labels.iter().filter(|&&l| l == d).count(), 3);
+        }
+    }
+
+    #[test]
+    fn digits_have_ink() {
+        let mut rng = Rng::new(1);
+        let (imgs, _) = DigitConfig::new(10).generate_images(&mut rng);
+        for i in 0..10 {
+            let ink: f64 = imgs[i * IMG_PIXELS..(i + 1) * IMG_PIXELS].iter().sum();
+            assert!(ink > 20.0, "digit {i} has almost no ink: {ink}");
+        }
+    }
+
+    #[test]
+    fn same_digit_closer_than_different() {
+        // Class structure: mean within-class feature distance < between-class.
+        let mut rng = Rng::new(2);
+        let ds = DigitConfig::new(200).generate(&mut rng);
+        let mut within = (0.0, 0usize);
+        let mut between = (0.0, 0usize);
+        for i in 0..ds.n_points() {
+            for j in (i + 1)..ds.n_points() {
+                let d = dist2(ds.point(i), ds.point(j));
+                if ds.labels[i] == ds.labels[j] {
+                    within.0 += d;
+                    within.1 += 1;
+                } else {
+                    between.0 += d;
+                    between.1 += 1;
+                }
+            }
+        }
+        let (w, b) = (within.0 / within.1 as f64, between.0 / between.1 as f64);
+        assert!(w < 0.65 * b, "within={w} between={b}");
+    }
+
+    #[test]
+    fn feature_pooling_averages() {
+        // constant image pools to constant features
+        let img = vec![0.5; IMG_PIXELS];
+        let f = pool_features(&img);
+        assert_eq!(f.len(), FEAT_DIM);
+        assert!(f.iter().all(|&v| (v - 0.5).abs() < 1e-12));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mk = |seed| {
+            let mut rng = Rng::new(seed);
+            DigitConfig::new(20).generate(&mut rng).points
+        };
+        assert_eq!(mk(5), mk(5));
+        assert_ne!(mk(5), mk(6));
+    }
+}

@@ -1,0 +1,201 @@
+//! Synthetic clustered data, following the paper's §4.1 protocol:
+//! a mixture of `K` unit-variance Gaussians in dimension `n` with uniform
+//! weights, means drawn from `N(0, c·K^{1/n}·Id)` with `c = 1.5` "so that
+//! clusters are sufficiently separated with high probability".
+
+use super::dataset::{Dataset, PointSource};
+use crate::util::rng::Rng;
+
+/// Configuration for the synthetic Gaussian-mixture generator.
+#[derive(Clone, Debug)]
+pub struct GmmConfig {
+    pub k: usize,
+    pub n_dims: usize,
+    pub n_points: usize,
+    /// Separation constant `c` scaling the means' covariance (paper: 1.5).
+    pub separation: f64,
+    /// Per-cluster standard deviation (paper: unit Gaussians).
+    pub cluster_std: f64,
+    /// Mixture weights; `None` = uniform.
+    pub weights: Option<Vec<f64>>,
+}
+
+impl GmmConfig {
+    /// The paper's default artificial-data setup for given sizes.
+    pub fn paper_default(k: usize, n_dims: usize, n_points: usize) -> GmmConfig {
+        GmmConfig { k, n_dims, n_points, separation: 1.5, cluster_std: 1.0, weights: None }
+    }
+
+    /// Draw the mixture means: `μ_k ~ N(0, c·K^{1/n}·Id)`.
+    pub fn draw_means(&self, rng: &mut Rng) -> Vec<Vec<f64>> {
+        // Covariance c·K^{1/n}·Id → std = sqrt(c·K^{1/n}).
+        let std = (self.separation * (self.k as f64).powf(1.0 / self.n_dims as f64)).sqrt();
+        (0..self.k)
+            .map(|_| (0..self.n_dims).map(|_| rng.normal_with(0.0, std)).collect())
+            .collect()
+    }
+
+    /// Materialize a full dataset (with ground-truth labels).
+    pub fn generate(&self, rng: &mut Rng) -> GmmDataset {
+        let means = self.draw_means(rng);
+        let mut points = Vec::with_capacity(self.n_points * self.n_dims);
+        let mut labels = Vec::with_capacity(self.n_points);
+        let weights = self.normalized_weights();
+        for _ in 0..self.n_points {
+            let k = sample_component(rng, &weights);
+            labels.push(k);
+            for d in 0..self.n_dims {
+                points.push(means[k][d] + self.cluster_std * rng.normal());
+            }
+        }
+        let mut ds = Dataset::new(self.n_dims, points);
+        ds.labels = labels;
+        GmmDataset { means, dataset: ds }
+    }
+
+    /// A deterministic streaming source over the same distribution — the
+    /// 10⁷-point scaling experiment sketches this without materializing.
+    pub fn stream(&self, seed: u64) -> GmmStream {
+        let mut rng = Rng::new(seed);
+        let means = self.draw_means(&mut rng);
+        GmmStream {
+            means,
+            cluster_std: self.cluster_std,
+            weights: self.normalized_weights(),
+            n_dims: self.n_dims,
+            remaining: self.n_points,
+            total: self.n_points,
+            rng,
+        }
+    }
+
+    fn normalized_weights(&self) -> Vec<f64> {
+        match &self.weights {
+            None => vec![1.0 / self.k as f64; self.k],
+            Some(w) => {
+                assert_eq!(w.len(), self.k);
+                let s: f64 = w.iter().sum();
+                w.iter().map(|x| x / s).collect()
+            }
+        }
+    }
+}
+
+fn sample_component(rng: &mut Rng, weights: &[f64]) -> usize {
+    rng.categorical(weights).expect("weights sum to 1")
+}
+
+/// A generated dataset together with its ground-truth means.
+pub struct GmmDataset {
+    pub means: Vec<Vec<f64>>,
+    pub dataset: Dataset,
+}
+
+/// Streaming GMM sampler ([`PointSource`] impl).
+pub struct GmmStream {
+    pub means: Vec<Vec<f64>>,
+    cluster_std: f64,
+    weights: Vec<f64>,
+    n_dims: usize,
+    remaining: usize,
+    total: usize,
+    rng: Rng,
+}
+
+impl PointSource for GmmStream {
+    fn n_dims(&self) -> usize {
+        self.n_dims
+    }
+    fn len(&self) -> usize {
+        self.total
+    }
+    fn next_chunk(&mut self, buf: &mut [f64]) -> usize {
+        let rows = (buf.len() / self.n_dims).min(self.remaining);
+        for r in 0..rows {
+            let k = sample_component(&mut self.rng, &self.weights);
+            for d in 0..self.n_dims {
+                buf[r * self.n_dims + d] = self.means[k][d] + self.cluster_std * self.rng.normal();
+            }
+        }
+        self.remaining -= rows;
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::dist2;
+
+    #[test]
+    fn shapes_and_labels() {
+        let mut rng = Rng::new(0);
+        let g = GmmConfig::paper_default(4, 3, 500).generate(&mut rng);
+        assert_eq!(g.dataset.n_points(), 500);
+        assert_eq!(g.dataset.n_dims, 3);
+        assert_eq!(g.dataset.labels.len(), 500);
+        assert!(g.dataset.labels.iter().all(|&l| l < 4));
+        assert_eq!(g.means.len(), 4);
+    }
+
+    #[test]
+    fn points_cluster_near_their_means() {
+        let mut rng = Rng::new(1);
+        let g = GmmConfig::paper_default(3, 8, 2000).generate(&mut rng);
+        // Mean squared distance from a point to its own mean ≈ n (unit
+        // Gaussians): E‖x−μ‖² = n = 8.
+        let mut acc = 0.0;
+        for i in 0..g.dataset.n_points() {
+            acc += dist2(g.dataset.point(i), &g.means[g.dataset.labels[i]]);
+        }
+        let msd = acc / g.dataset.n_points() as f64;
+        assert!((msd - 8.0).abs() < 0.8, "msd={msd}");
+    }
+
+    #[test]
+    fn uniform_weights_balanced() {
+        let mut rng = Rng::new(2);
+        let g = GmmConfig::paper_default(5, 2, 10_000).generate(&mut rng);
+        let mut counts = vec![0usize; 5];
+        for &l in &g.dataset.labels {
+            counts[l] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 2000.0).abs() < 300.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn custom_weights_respected() {
+        let mut cfg = GmmConfig::paper_default(2, 2, 20_000);
+        cfg.weights = Some(vec![3.0, 1.0]);
+        let mut rng = Rng::new(3);
+        let g = cfg.generate(&mut rng);
+        let c0 = g.dataset.labels.iter().filter(|&&l| l == 0).count();
+        assert!((c0 as f64 / 20_000.0 - 0.75).abs() < 0.02);
+    }
+
+    #[test]
+    fn stream_is_deterministic_and_sized() {
+        let cfg = GmmConfig::paper_default(3, 4, 1000);
+        let collect = |seed| {
+            let mut s = cfg.stream(seed);
+            let mut buf = vec![0.0; 128 * 4];
+            let mut out = Vec::new();
+            loop {
+                let rows = s.next_chunk(&mut buf);
+                if rows == 0 {
+                    break;
+                }
+                out.extend_from_slice(&buf[..rows * 4]);
+            }
+            out
+        };
+        let a = collect(42);
+        let b = collect(42);
+        let c = collect(43);
+        assert_eq!(a.len(), 1000 * 4);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

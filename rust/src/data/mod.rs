@@ -1,0 +1,10 @@
+//! Data layer: in-memory datasets, streaming sources, synthetic generators
+//! (paper §4.1 GMM protocol; procedural digits standing in for MNIST —
+//! see DESIGN.md §3 for the substitution rationale).
+
+pub mod dataset;
+pub mod digits;
+pub mod projection;
+pub mod gmm;
+
+pub use dataset::{Bounds, Dataset, PointSource, SliceSource};

@@ -1,0 +1,182 @@
+//! Random-projection dimensionality reduction — the paper's outlook
+//! ("it is possible to combine the proposed approach with dimension
+//! reduction [8] ... as a preprocessing step", citing Boutsidis et al.,
+//! *Random Projections for k-means Clustering*).
+//!
+//! A Gaussian projection `P ∈ R^{d×n}` scaled by `1/√d` approximately
+//! preserves pairwise distances (Johnson–Lindenstrauss), so clustering in
+//! the projected space approximately preserves the SSE landscape; the
+//! theory needs only `d = O(log K / ε²)` for K-means. Project, sketch the
+//! projected stream, run CKM at dimension `d` — the sketch cost drops
+//! from `O(mn)` per point to `O(nd + md)`.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// A Gaussian random projection `R^n → R^d`.
+#[derive(Clone, Debug)]
+pub struct RandomProjection {
+    /// `d × n`, entries N(0, 1/d).
+    pub p: Mat,
+}
+
+impl RandomProjection {
+    pub fn new(n_dims: usize, d: usize, rng: &mut Rng) -> RandomProjection {
+        assert!(d >= 1 && n_dims >= 1);
+        let scale = 1.0 / (d as f64).sqrt();
+        let p = Mat::from_fn(d, n_dims, |_, _| scale * rng.normal());
+        RandomProjection { p }
+    }
+
+    /// Suggested target dimension for `k` clusters: `max(⌈8·ln k⌉, 2)`.
+    pub fn suggested_dim(k: usize) -> usize {
+        ((8.0 * (k.max(2) as f64).ln()).ceil() as usize).max(2)
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.p.cols
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.p.rows
+    }
+
+    /// Project a row-major point block `N×n → N×d`.
+    pub fn project(&self, points: &[f64]) -> Vec<f64> {
+        let n = self.in_dim();
+        assert_eq!(points.len() % n, 0);
+        let rows = points.len() / n;
+        let x = Mat::from_vec(rows, n, points.to_vec());
+        x.matmul_bt(&self.p).data
+    }
+}
+
+/// A [`PointSource`] adapter that projects another source on the fly —
+/// lets the streaming sketcher consume projected data without ever
+/// materializing either representation.
+pub struct ProjectedSource<S> {
+    inner: S,
+    proj: RandomProjection,
+    buf: Vec<f64>,
+}
+
+impl<S: crate::data::dataset::PointSource> ProjectedSource<S> {
+    pub fn new(inner: S, proj: RandomProjection) -> Self {
+        assert_eq!(inner.n_dims(), proj.in_dim());
+        ProjectedSource { inner, proj, buf: Vec::new() }
+    }
+}
+
+impl<S: crate::data::dataset::PointSource> crate::data::dataset::PointSource
+    for ProjectedSource<S>
+{
+    fn n_dims(&self) -> usize {
+        self.proj.out_dim()
+    }
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+    fn next_chunk(&mut self, out: &mut [f64]) -> usize {
+        let d = self.proj.out_dim();
+        let n = self.proj.in_dim();
+        let rows_cap = out.len() / d;
+        self.buf.resize(rows_cap * n, 0.0);
+        let rows = self.inner.next_chunk(&mut self.buf[..rows_cap * n]);
+        if rows == 0 {
+            return 0;
+        }
+        let projected = self.proj.project(&self.buf[..rows * n]);
+        out[..rows * d].copy_from_slice(&projected);
+        rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::{PointSource, SliceSource};
+    use crate::data::gmm::GmmConfig;
+    use crate::linalg::matrix::dist2;
+    use crate::testing::{self, gen, Config};
+
+    #[test]
+    fn shapes_and_linearity() {
+        let mut rng = Rng::new(1);
+        let rp = RandomProjection::new(8, 3, &mut rng);
+        let x = gen::vec_normal(&mut rng, 8);
+        let y = gen::vec_normal(&mut rng, 8);
+        let px = rp.project(&x);
+        let py = rp.project(&y);
+        let sum: Vec<f64> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        let psum = rp.project(&sum);
+        let manual: Vec<f64> = px.iter().zip(&py).map(|(a, b)| a + b).collect();
+        testing::all_close(&psum, &manual, 1e-12).unwrap();
+        assert_eq!(px.len(), 3);
+    }
+
+    #[test]
+    fn prop_jl_distance_preservation_in_expectation() {
+        // E‖Px−Py‖² = ‖x−y‖²; check the empirical mean over projections.
+        testing::check("JL expectation", Config::default().cases(8).max_size(12), |rng, size| {
+            let n = 4 + size;
+            let x = gen::vec_normal(rng, n);
+            let y = gen::vec_normal(rng, n);
+            let true_d2 = dist2(&x, &y);
+            let trials = 60;
+            let d = 8;
+            let mut acc = 0.0;
+            for _ in 0..trials {
+                let rp = RandomProjection::new(n, d, rng);
+                acc += dist2(&rp.project(&x), &rp.project(&y));
+            }
+            let mean = acc / trials as f64;
+            testing::close(mean, true_d2, 0.35)
+        });
+    }
+
+    #[test]
+    fn projected_source_streams() {
+        let mut rng = Rng::new(2);
+        let g = GmmConfig::paper_default(3, 10, 500).generate(&mut rng);
+        let rp = RandomProjection::new(10, 4, &mut rng);
+        let expected = rp.project(&g.dataset.points);
+        let src = SliceSource::new(&g.dataset.points, 10);
+        let mut ps = ProjectedSource::new(src, rp);
+        assert_eq!(ps.n_dims(), 4);
+        let mut out = Vec::new();
+        let mut buf = vec![0.0; 64 * 4];
+        loop {
+            let rows = ps.next_chunk(&mut buf);
+            if rows == 0 {
+                break;
+            }
+            out.extend_from_slice(&buf[..rows * 4]);
+        }
+        testing::all_close(&out, &expected, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn ckm_on_projected_data_still_clusters() {
+        // End-to-end: project 16-d separated clusters to 6-d, sketch, CKM;
+        // ARI on projected assignments vs truth stays high.
+        let mut rng = Rng::new(3);
+        let mut cfg = GmmConfig::paper_default(4, 16, 6000);
+        cfg.separation = 5.0;
+        let g = cfg.generate(&mut rng);
+        let rp = RandomProjection::new(16, RandomProjection::suggested_dim(4).min(8), &mut rng);
+        let proj = rp.project(&g.dataset.points);
+        let d = rp.out_dim();
+        let sk = crate::sketch::sketch_dataset(&proj, d, 300, 5, None);
+        let sol = crate::ckm::solve(&sk, 4, &crate::ckm::CkmOptions::default());
+        let labels = crate::metrics::labels_for(&proj, d, &sol.centroids);
+        let ari = crate::metrics::adjusted_rand_index(&labels, &g.dataset.labels);
+        assert!(ari > 0.8, "ari={ari}");
+    }
+
+    #[test]
+    fn suggested_dim_sane() {
+        assert!(RandomProjection::suggested_dim(2) >= 2);
+        assert!(RandomProjection::suggested_dim(10) >= 8);
+        assert!(RandomProjection::suggested_dim(10) <= 32);
+    }
+}

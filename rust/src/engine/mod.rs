@@ -1,0 +1,87 @@
+//! Compute engines: the same CLOMPR math behind one trait, implemented
+//! (a) natively in rust (f64, backtracking line search — the reference)
+//! and (b) on PJRT via the AOT artifacts (f32, fixed-iteration Adam — the
+//! compiled hot path). Integration tests assert the two agree on easy
+//! recovery problems; the ablation bench quantifies the gap.
+
+pub mod native;
+pub mod pjrt_engine;
+
+use crate::data::dataset::Bounds;
+use crate::linalg::{CVec, Mat};
+use crate::sketch::SketchOp;
+
+pub use native::NativeEngine;
+pub use pjrt_engine::PjrtEngine;
+
+/// Builds per-thread engines for the coordinator's workers. The factory
+/// itself crosses threads; the engines it makes do not.
+pub trait EngineFactory: Send + Sync {
+    fn make(&self) -> anyhow::Result<Box<dyn CkmEngine>>;
+    fn backend_name(&self) -> &'static str;
+}
+
+/// Factory for native engines sharing one frequency matrix.
+pub struct NativeFactory {
+    pub op: SketchOp,
+}
+
+impl EngineFactory for NativeFactory {
+    fn make(&self) -> anyhow::Result<Box<dyn CkmEngine>> {
+        Ok(Box::new(NativeEngine::new(self.op.clone())))
+    }
+    fn backend_name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Factory for PJRT engines: each worker gets its own PJRT client (the
+/// client is thread-affine) but all share one frequency matrix, so the
+/// partial sketches merge exactly.
+pub struct PjrtFactory {
+    pub dir: std::path::PathBuf,
+    pub op: SketchOp,
+}
+
+impl EngineFactory for PjrtFactory {
+    fn make(&self) -> anyhow::Result<Box<dyn CkmEngine>> {
+        let rt = std::sync::Arc::new(crate::runtime::pjrt::PjrtRuntime::new(&self.dir)?);
+        Ok(Box::new(PjrtEngine::from_op(rt, self.op.clone())?))
+    }
+    fn backend_name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// The operations CLOMPR needs from a compute backend.
+///
+/// NOTE: not `Sync` — the PJRT client wraps thread-affine C++ state (`Rc`
+/// + raw pointers). Multi-threaded users (the coordinator) build one
+/// engine per worker via [`EngineFactory`].
+pub trait CkmEngine {
+    /// Human-readable backend name ("native" / "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// The frequency operator (always materialized rust-side: atoms, NNLS
+    /// design matrices and residual updates are small and stay in f64).
+    fn op(&self) -> &SketchOp;
+
+    /// Sketch a row-major point block with optional weights (uniform 1/N
+    /// otherwise). The N-dependent hot path.
+    fn sketch_points(&self, points: &[f64], weights: Option<&[f64]>) -> CVec;
+
+    /// CLOMPR step 1: maximize `Re⟨Aδ_c/‖·‖, r⟩` over the box from `c0`.
+    fn step1_optimize(&self, c0: &[f64], r: &CVec, bounds: &Bounds) -> Vec<f64>;
+
+    /// CLOMPR step 5: jointly minimize `‖ẑ − Σ α_k Aδ_{c_k}‖²` over the box
+    /// (centroids) and `α ≥ 0`. Returns the improved `(C, α)`.
+    fn step5_optimize(&self, c0: &Mat, a0: &[f64], z: &CVec, bounds: &Bounds)
+        -> (Mat, Vec<f64>);
+
+    fn n_dims(&self) -> usize {
+        self.op().n_dims()
+    }
+    fn m(&self) -> usize {
+        self.op().m()
+    }
+}

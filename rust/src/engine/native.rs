@@ -1,0 +1,130 @@
+//! The native (pure-rust, f64) engine: reference implementation and
+//! fallback for shapes outside the AOT matrix.
+
+use super::CkmEngine;
+use crate::ckm::optim::{maximize_box, minimize_box, OptimOptions};
+use crate::data::dataset::Bounds;
+use crate::linalg::{CVec, Mat};
+use crate::sketch::SketchOp;
+
+/// Native engine: wraps a [`SketchOp`] plus optimizer options.
+pub struct NativeEngine {
+    pub op: SketchOp,
+    pub step1: OptimOptions,
+    pub step5: OptimOptions,
+}
+
+impl NativeEngine {
+    pub fn new(op: SketchOp) -> NativeEngine {
+        NativeEngine {
+            op,
+            step1: OptimOptions { max_iters: 60, tol: 1e-7, step0: 1.0 },
+            step5: OptimOptions { max_iters: 80, tol: 1e-8, step0: 1.0 },
+        }
+    }
+
+    pub fn with_options(op: SketchOp, step1: OptimOptions, step5: OptimOptions) -> NativeEngine {
+        NativeEngine { op, step1, step5 }
+    }
+}
+
+impl CkmEngine for NativeEngine {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn op(&self) -> &SketchOp {
+        &self.op
+    }
+
+    fn sketch_points(&self, points: &[f64], weights: Option<&[f64]>) -> CVec {
+        self.op.sketch_points(points, weights)
+    }
+
+    fn step1_optimize(&self, c0: &[f64], r: &CVec, bounds: &Bounds) -> Vec<f64> {
+        let (c, _val) = maximize_box(
+            |c| self.op.step1_value_grad(c, r),
+            c0,
+            &bounds.lo,
+            &bounds.hi,
+            &self.step1,
+        );
+        c
+    }
+
+    fn step5_optimize(
+        &self,
+        c0: &Mat,
+        a0: &[f64],
+        z: &CVec,
+        bounds: &Bounds,
+    ) -> (Mat, Vec<f64>) {
+        let kk = c0.rows;
+        let n_dims = self.op.n_dims();
+        let mut x0 = c0.data.clone();
+        x0.extend_from_slice(a0);
+        let (mut lo, mut hi) = (Vec::with_capacity(x0.len()), Vec::with_capacity(x0.len()));
+        for _ in 0..kk {
+            lo.extend_from_slice(&bounds.lo);
+            hi.extend_from_slice(&bounds.hi);
+        }
+        lo.extend(std::iter::repeat(0.0).take(kk));
+        hi.extend(std::iter::repeat(f64::INFINITY).take(kk));
+        let (x_opt, _cost) = minimize_box(
+            |x| {
+                let c = Mat::from_vec(kk, n_dims, x[..kk * n_dims].to_vec());
+                let a = &x[kk * n_dims..];
+                let (cost, gc, ga) = self.op.step5_value_grads(z, &c, a);
+                let mut g = gc.data;
+                g.extend_from_slice(&ga);
+                (cost, g)
+            },
+            &x0,
+            &lo,
+            &hi,
+            &self.step5,
+        );
+        let c = Mat::from_vec(kk, n_dims, x_opt[..kk * n_dims].to_vec());
+        let a = x_opt[kk * n_dims..].to_vec();
+        (c, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::FreqDist;
+    use crate::testing;
+    use crate::util::rng::Rng;
+
+    fn engine(m: usize, n: usize, seed: u64) -> NativeEngine {
+        let mut rng = Rng::new(seed);
+        NativeEngine::new(SketchOp::new(FreqDist::adapted(1.0).draw(m, n, &mut rng)))
+    }
+
+    #[test]
+    fn step1_recovers_planted_atom() {
+        let e = engine(128, 3, 1);
+        let c_true = vec![0.4, -0.2, 0.6];
+        let r = e.op.atom(&c_true);
+        let bounds = Bounds { lo: vec![-2.0; 3], hi: vec![2.0; 3] };
+        let c = e.step1_optimize(&[0.0, 0.0, 0.0], &r, &bounds);
+        testing::all_close(&c, &c_true, 0.05).unwrap();
+    }
+
+    #[test]
+    fn step5_improves_cost() {
+        let e = engine(96, 2, 2);
+        let c_true = Mat::from_vec(2, 2, vec![1.0, 0.5, -0.8, -0.2]);
+        let a_true = vec![0.6, 0.4];
+        let z = e.op.mixture_sketch(&c_true, &a_true);
+        let bounds = Bounds { lo: vec![-2.0; 2], hi: vec![2.0; 2] };
+        let c0 = Mat::from_vec(2, 2, vec![0.8, 0.6, -0.6, -0.1]);
+        let a0 = vec![0.5, 0.5];
+        let cost0 = z.sub(&e.op.mixture_sketch(&c0, &a0)).norm2_sq();
+        let (c, a) = e.step5_optimize(&c0, &a0, &z, &bounds);
+        let cost = z.sub(&e.op.mixture_sketch(&c, &a)).norm2_sq();
+        assert!(cost < 0.1 * cost0, "{cost} !< 0.1*{cost0}");
+        assert!(a.iter().all(|&v| v >= 0.0));
+    }
+}

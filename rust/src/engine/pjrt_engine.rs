@@ -1,0 +1,376 @@
+//! The PJRT engine: CLOMPR's compute steps executed through the AOT
+//! artifacts (L1 Pallas sketch kernel + L2 optimizer scans).
+//!
+//! Padding contract (DESIGN.md §2):
+//! - `n → n_pad` by zero-padding both data and frequencies (exact: inner
+//!   products are unchanged);
+//! - `m` rounds UP to the nearest compiled bucket — the engine draws that
+//!   many *real* frequencies and uses them all, so no masking bias;
+//! - sketch batches are fixed at `chunk_b` rows, the final partial chunk
+//!   zero-padded with zero weights (exact: weighted sums);
+//! - step-5 support is padded to `k_pad` with an α-mask; supports larger
+//!   than `k_pad` fall back to the native optimizer.
+
+use super::native::NativeEngine;
+use super::CkmEngine;
+use crate::data::dataset::Bounds;
+use crate::linalg::{CVec, Mat};
+use crate::runtime::pjrt::{PjrtRuntime, Tensor};
+use crate::sketch::{FreqDist, SketchOp};
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// PJRT-backed engine. Holds the f64 operator (for atoms/NNLS/residuals),
+/// the padded f32 frequency tensor, and a native fallback.
+pub struct PjrtEngine {
+    rt: Arc<PjrtRuntime>,
+    fallback: NativeEngine,
+    /// Real dimension of the data (≤ n_pad).
+    n_real: usize,
+    /// Padded frequency tensor, shape (m, n_pad), f32.
+    w_padded: Vec<f32>,
+    sketch_artifact: String,
+    step1_artifact: Option<String>,
+    step5_artifact: Option<String>,
+    k_pad: usize,
+    chunk_b: usize,
+    n_pad: usize,
+    /// Adam learning-rate scale relative to the box span.
+    pub lr_scale: f64,
+}
+
+impl PjrtEngine {
+    /// Draw frequencies from `dist` (m rounded up to a compiled bucket) and
+    /// bind them to the AOT artifacts.
+    pub fn new(
+        rt: Arc<PjrtRuntime>,
+        dist: &FreqDist,
+        m_requested: usize,
+        n_dims: usize,
+        rng: &mut Rng,
+    ) -> anyhow::Result<PjrtEngine> {
+        let m = Self::bucketed_m(&rt, m_requested)?;
+        let w = dist.draw(m, n_dims, rng);
+        Self::from_op(rt, SketchOp::new(w))
+    }
+
+    /// Round `m_requested` up to the nearest compiled sketch bucket.
+    pub fn bucketed_m(rt: &PjrtRuntime, m_requested: usize) -> anyhow::Result<usize> {
+        rt.manifest
+            .bucket_for("sketch", m_requested)
+            .map(|a| a.m)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "m={m_requested} exceeds every compiled sketch bucket {:?}",
+                    rt.manifest.buckets("sketch")
+                )
+            })
+    }
+
+    /// Bind an already-drawn operator (whose m must equal a compiled
+    /// bucket) to the artifacts — lets every coordinator worker share one
+    /// frequency matrix.
+    pub fn from_op(rt: Arc<PjrtRuntime>, op: SketchOp) -> anyhow::Result<PjrtEngine> {
+        let man = &rt.manifest;
+        let n_dims = op.n_dims();
+        let m = op.m();
+        anyhow::ensure!(
+            n_dims <= man.n_pad,
+            "n={n_dims} exceeds compiled n_pad={}",
+            man.n_pad
+        );
+        // Prefer the XLA-fused sketch variant on CPU (the interpret-mode
+        // Pallas artifact is the correctness vehicle; on a real TPU the
+        // Pallas kernel is the fast path). CKM_FORCE_PALLAS=1 overrides.
+        let force_pallas = std::env::var("CKM_FORCE_PALLAS").ok().as_deref() == Some("1");
+        let sketch_meta = (if force_pallas { None } else { man.bucket_for("sketch_xla", m) })
+            .filter(|a| a.m == m)
+            .or_else(|| man.bucket_for("sketch", m).filter(|a| a.m == m))
+            .ok_or_else(|| anyhow::anyhow!("operator m={m} is not a compiled bucket"))?
+            .clone();
+        let w = &op.w;
+        let mut w_padded = vec![0.0f32; m * man.n_pad];
+        for j in 0..m {
+            for d in 0..n_dims {
+                w_padded[j * man.n_pad + d] = w.at(j, d) as f32;
+            }
+        }
+        let step1_artifact = man.bucket_for("step1", m).filter(|a| a.m == m).map(|a| a.name.clone());
+        let step5_artifact = man.bucket_for("step5", m).filter(|a| a.m == m).map(|a| a.name.clone());
+        Ok(PjrtEngine {
+            fallback: NativeEngine::new(op),
+            n_real: n_dims,
+            w_padded,
+            sketch_artifact: sketch_meta.name,
+            step1_artifact,
+            step5_artifact,
+            k_pad: man.k_pad,
+            chunk_b: man.chunk_b,
+            n_pad: man.n_pad,
+            lr_scale: 0.03,
+            rt,
+        })
+    }
+
+    /// The (bucketed) number of frequencies actually in use.
+    pub fn m_bucketed(&self) -> usize {
+        self.fallback.op.m()
+    }
+
+    /// Whether the optimizer steps run on PJRT (vs native fallback only for
+    /// the sketch).
+    pub fn has_compiled_solver(&self) -> bool {
+        self.step1_artifact.is_some() && self.step5_artifact.is_some()
+    }
+
+    fn pad_point(&self, src: &[f64], dst: &mut [f32]) {
+        for d in 0..self.n_real {
+            dst[d] = src[d] as f32;
+        }
+        for d in self.n_real..self.n_pad {
+            dst[d] = 0.0;
+        }
+    }
+
+    fn bounds_tensors(&self, bounds: &Bounds) -> (Tensor, Tensor) {
+        // Padded dims get [0, 0] so the optimizer keeps them at zero.
+        let mut lo = vec![0.0f32; self.n_pad];
+        let mut hi = vec![0.0f32; self.n_pad];
+        for d in 0..self.n_real {
+            lo[d] = bounds.lo[d] as f32;
+            hi[d] = bounds.hi[d] as f32;
+        }
+        (Tensor::new(vec![self.n_pad], lo), Tensor::new(vec![self.n_pad], hi))
+    }
+
+    fn span(&self, bounds: &Bounds) -> f64 {
+        let mut s = 0.0;
+        for d in 0..self.n_real {
+            s += bounds.hi[d] - bounds.lo[d];
+        }
+        (s / self.n_real as f64).max(1e-6)
+    }
+}
+
+impl CkmEngine for PjrtEngine {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn op(&self) -> &SketchOp {
+        &self.fallback.op
+    }
+
+    /// Sketch via the compiled Pallas kernel, chunk by chunk.
+    fn sketch_points(&self, points: &[f64], weights: Option<&[f64]>) -> CVec {
+        let n = self.n_real;
+        assert_eq!(points.len() % n, 0);
+        let n_points = points.len() / n;
+        let m = self.m_bucketed();
+        if n_points == 0 {
+            return CVec::zeros(m);
+        }
+        let w_tensor = Tensor::new(vec![m, self.n_pad], self.w_padded.clone());
+        let uniform = 1.0 / n_points as f64;
+        let mut acc = CVec::zeros(m);
+        let mut x_buf = vec![0.0f32; self.chunk_b * self.n_pad];
+        let mut b_buf = vec![0.0f32; self.chunk_b];
+        let mut row = 0;
+        while row < n_points {
+            let rows = (n_points - row).min(self.chunk_b);
+            for r in 0..rows {
+                let src = &points[(row + r) * n..(row + r + 1) * n];
+                self.pad_point(src, &mut x_buf[r * self.n_pad..(r + 1) * self.n_pad]);
+                b_buf[r] = weights.map(|w| w[row + r]).unwrap_or(uniform) as f32;
+            }
+            // zero out the padded tail (weights 0 ⇒ no contribution)
+            for r in rows..self.chunk_b {
+                b_buf[r] = 0.0;
+                x_buf[r * self.n_pad..(r + 1) * self.n_pad].fill(0.0);
+            }
+            let out = self
+                .rt
+                .run(
+                    &self.sketch_artifact,
+                    &[
+                        Tensor::new(vec![self.chunk_b, self.n_pad], x_buf.clone()),
+                        Tensor::new(vec![self.chunk_b], b_buf.clone()),
+                        w_tensor.clone(),
+                    ],
+                )
+                .expect("sketch artifact execution failed");
+            let z = &out[0];
+            for j in 0..m {
+                acc.re[j] += z[j] as f64;
+                acc.im[j] += z[m + j] as f64;
+            }
+            row += rows;
+        }
+        acc
+    }
+
+    fn step1_optimize(&self, c0: &[f64], r: &CVec, bounds: &Bounds) -> Vec<f64> {
+        let Some(name) = &self.step1_artifact else {
+            return self.fallback.step1_optimize(c0, r, bounds);
+        };
+        let m = self.m_bucketed();
+        let mut c0p = vec![0.0f32; self.n_pad];
+        self.pad_point(c0, &mut c0p);
+        let mut r_stack = Vec::with_capacity(2 * m);
+        r_stack.extend(r.re.iter().map(|&x| x as f32));
+        r_stack.extend(r.im.iter().map(|&x| x as f32));
+        let (lo, hi) = self.bounds_tensors(bounds);
+        let lr = (self.lr_scale * self.span(bounds)) as f32;
+        let out = self
+            .rt
+            .run(
+                name,
+                &[
+                    Tensor::new(vec![self.n_pad], c0p),
+                    Tensor::new(vec![2, m], r_stack),
+                    Tensor::new(vec![m, self.n_pad], self.w_padded.clone()),
+                    lo,
+                    hi,
+                    Tensor::scalar(lr),
+                ],
+            )
+            .expect("step1 artifact execution failed");
+        out[0][..self.n_real].iter().map(|&x| x as f64).collect()
+    }
+
+    fn step5_optimize(&self, c0: &Mat, a0: &[f64], z: &CVec, bounds: &Bounds) -> (Mat, Vec<f64>) {
+        let kk = c0.rows;
+        let Some(name) = &self.step5_artifact else {
+            return self.fallback.step5_optimize(c0, a0, z, bounds);
+        };
+        if kk > self.k_pad {
+            return self.fallback.step5_optimize(c0, a0, z, bounds);
+        }
+        let m = self.m_bucketed();
+        let mut c_pad = vec![0.0f32; self.k_pad * self.n_pad];
+        for k in 0..kk {
+            self.pad_point(c0.row(k), &mut c_pad[k * self.n_pad..(k + 1) * self.n_pad]);
+        }
+        let mut a_pad = vec![0.0f32; self.k_pad];
+        let mut mask = vec![0.0f32; self.k_pad];
+        for k in 0..kk {
+            a_pad[k] = a0[k] as f32;
+            mask[k] = 1.0;
+        }
+        let mut z_stack = Vec::with_capacity(2 * m);
+        z_stack.extend(z.re.iter().map(|&x| x as f32));
+        z_stack.extend(z.im.iter().map(|&x| x as f32));
+        let (lo, hi) = self.bounds_tensors(bounds);
+        let lr_c = (self.lr_scale * self.span(bounds)) as f32;
+        let a_scale = a0.iter().sum::<f64>().max(0.1) / kk as f64;
+        let lr_a = (self.lr_scale * a_scale) as f32;
+        let out = self
+            .rt
+            .run(
+                name,
+                &[
+                    Tensor::new(vec![self.k_pad, self.n_pad], c_pad),
+                    Tensor::new(vec![self.k_pad], a_pad),
+                    Tensor::new(vec![self.k_pad], mask),
+                    Tensor::new(vec![2, m], z_stack),
+                    Tensor::new(vec![m, self.n_pad], self.w_padded.clone()),
+                    lo,
+                    hi,
+                    Tensor::scalar(lr_c),
+                    Tensor::scalar(lr_a),
+                ],
+            )
+            .expect("step5 artifact execution failed");
+        let mut c = Mat::zeros(kk, self.n_real);
+        for k in 0..kk {
+            for d in 0..self.n_real {
+                *c.at_mut(k, d) = out[0][k * self.n_pad + d] as f64;
+            }
+        }
+        let a: Vec<f64> = (0..kk).map(|k| out[1][k] as f64).collect();
+        (c, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::CkmEngine;
+    use crate::testing;
+
+    fn engine(m: usize, n: usize) -> Option<PjrtEngine> {
+        let dir = PjrtRuntime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping pjrt engine test: run `make artifacts`");
+            return None;
+        }
+        let rt = Arc::new(PjrtRuntime::new(&dir).unwrap());
+        let mut rng = Rng::new(42);
+        Some(PjrtEngine::new(rt, &FreqDist::adapted(1.0), m, n, &mut rng).unwrap())
+    }
+
+    #[test]
+    fn sketch_matches_native_math() {
+        let Some(e) = engine(200, 6) else { return };
+        assert_eq!(e.m_bucketed(), 256); // bucketed up
+        let mut rng = Rng::new(1);
+        let pts: Vec<f64> = (0..500 * 6).map(|_| rng.normal()).collect();
+        let z_pjrt = e.sketch_points(&pts, None);
+        let z_native = e.op().sketch_points(&pts, None);
+        testing::all_close(&z_pjrt.re, &z_native.re, 1e-4).unwrap();
+        testing::all_close(&z_pjrt.im, &z_native.im, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn sketch_weighted_and_multichunk() {
+        let Some(e) = engine(256, 4) else { return };
+        let mut rng = Rng::new(2);
+        // 2.5 chunks worth of points
+        let n_pts = 4096 * 2 + 1234;
+        let pts: Vec<f64> = (0..n_pts * 4).map(|_| rng.normal()).collect();
+        let w: Vec<f64> = (0..n_pts).map(|_| rng.uniform() / n_pts as f64).collect();
+        let z_pjrt = e.sketch_points(&pts, Some(&w));
+        let z_native = e.op().sketch_points(&pts, Some(&w));
+        testing::all_close(&z_pjrt.re, &z_native.re, 1e-4).unwrap();
+        testing::all_close(&z_pjrt.im, &z_native.im, 1e-4).unwrap();
+    }
+
+    #[test]
+    fn step1_recovers_planted_atom() {
+        let Some(e) = engine(256, 4) else { return };
+        let c_true = vec![0.5, -0.3, 0.2, 0.4];
+        let r = e.op().atom(&c_true);
+        let bounds = Bounds { lo: vec![-2.0; 4], hi: vec![2.0; 4] };
+        let c = e.step1_optimize(&[0.0; 4], &r, &bounds);
+        testing::all_close(&c, &c_true, 0.1).unwrap();
+    }
+
+    #[test]
+    fn step5_improves_cost_pjrt() {
+        let Some(e) = engine(256, 3) else { return };
+        let c_true = Mat::from_vec(2, 3, vec![0.8, 0.2, -0.5, -0.7, 0.4, 0.1]);
+        let a_true = vec![0.55, 0.45];
+        let z = e.op().mixture_sketch(&c_true, &a_true);
+        let bounds = Bounds { lo: vec![-2.0; 3], hi: vec![2.0; 3] };
+        let c0 = Mat::from_vec(2, 3, vec![0.6, 0.4, -0.3, -0.5, 0.2, 0.3]);
+        let a0 = vec![0.5, 0.5];
+        let cost0 = z.sub(&e.op().mixture_sketch(&c0, &a0)).norm2_sq();
+        let (c, a) = e.step5_optimize(&c0, &a0, &z, &bounds);
+        let cost = z.sub(&e.op().mixture_sketch(&c, &a)).norm2_sq();
+        assert!(cost < 0.5 * cost0, "pjrt step5: {cost} !< 0.5*{cost0}");
+        assert!(a.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn oversized_support_falls_back_to_native() {
+        let Some(e) = engine(256, 2) else { return };
+        let kk = e.k_pad + 1;
+        let c0 = Mat::zeros(kk, 2);
+        let a0 = vec![1.0 / kk as f64; kk];
+        let z = CVec::zeros(e.m_bucketed());
+        let bounds = Bounds { lo: vec![-1.0; 2], hi: vec![1.0; 2] };
+        let (c, a) = e.step5_optimize(&c0, &a0, &z, &bounds);
+        assert_eq!(c.rows, kk);
+        assert_eq!(a.len(), kk);
+    }
+}

@@ -1,0 +1,295 @@
+//! Ablations beyond the paper's figures, for the design choices DESIGN.md
+//! calls out:
+//!   (a) frequency radial law — Adapted-radius vs Gaussian vs Folded;
+//!   (b) engine — native PGD/Armijo vs PJRT fixed-iteration Adam;
+//!   (c) coordinator batching — chunk size × workers vs sketch throughput;
+//!   (d) step-1 optimizer — backtracking PGD vs fixed-iteration Adam
+//!       (native, isolating the optimizer from the f32/engine change).
+
+use super::common::{Row, Stats, Table};
+use super::workloads::gaussian_workload;
+use crate::ckm::optim::{adam_maximize_box, maximize_box, OptimOptions};
+use crate::ckm::{solve_with_engine, CkmOptions};
+use crate::coordinator::{distributed_sketch, SketcherConfig};
+use crate::data::dataset::SliceSource;
+use crate::engine::{NativeEngine, NativeFactory};
+use crate::metrics::sse;
+use crate::sketch::{sketch_dataset, FreqDist, RadiusKind, SketchOp};
+use crate::util::logging::Stopwatch;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct AblateConfig {
+    pub k: usize,
+    pub n_dims: usize,
+    pub n_points: usize,
+    pub m: usize,
+    pub runs: usize,
+    pub seed: u64,
+    /// Run the PJRT-engine comparison (needs `make artifacts`).
+    pub with_pjrt: bool,
+}
+
+impl Default for AblateConfig {
+    fn default() -> Self {
+        AblateConfig { k: 10, n_dims: 10, n_points: 20_000, m: 1000, runs: 5, seed: 99, with_pjrt: true }
+    }
+}
+
+/// (a) Frequency radial law.
+pub fn radius_kinds(cfg: &AblateConfig) -> Table {
+    let mut table = Table::new("Ablation: frequency radial law");
+    for kind in [RadiusKind::AdaptedRadius, RadiusKind::Gaussian, RadiusKind::FoldedGaussian] {
+        let mut sses = Vec::new();
+        for run in 0..cfg.runs {
+            let g = gaussian_workload(cfg.k, cfg.n_dims, cfg.n_points, cfg.seed + run as u64);
+            let pts = &g.dataset.points;
+            let mut rng = Rng::new(cfg.seed ^ (run as u64) << 2);
+            // Estimate σ² once, then draw with the candidate law.
+            let sigma2 =
+                crate::sketch::scale::ScaleEstimator::default().estimate(pts, cfg.n_dims, &mut rng);
+            let op = SketchOp::new(FreqDist::new(kind, sigma2).draw(cfg.m, cfg.n_dims, &mut rng));
+            let mut acc = crate::sketch::SketchAccumulator::new(cfg.m, cfg.n_dims);
+            acc.update(&op, pts);
+            let engine = NativeEngine::new(op);
+            let sol = solve_with_engine(
+                &acc.finalize(),
+                &engine,
+                &acc.bounds,
+                cfg.k,
+                None,
+                &CkmOptions { seed: cfg.seed + run as u64, ..CkmOptions::default() },
+            );
+            sses.push(sse(pts, cfg.n_dims, &sol.centroids) / cfg.n_points as f64);
+        }
+        table.push(Row::new().cell("radius law", kind.name()).stat("SSE/N", &Stats::from(&sses)));
+    }
+    table
+}
+
+/// (b) Engine: native vs PJRT on the same problem.
+pub fn engines(cfg: &AblateConfig) -> Table {
+    let mut table = Table::new("Ablation: native PGD vs PJRT Adam engine");
+    let dir = crate::runtime::PjrtRuntime::default_dir();
+    let pjrt_ok = cfg.with_pjrt && dir.join("manifest.json").exists();
+    for run in 0..cfg.runs {
+        let g = gaussian_workload(cfg.k, cfg.n_dims, cfg.n_points, cfg.seed + 50 + run as u64);
+        let pts = &g.dataset.points;
+        let mut rng = Rng::new(cfg.seed ^ 0xE1 ^ run as u64);
+        let dist = FreqDist::adapted(1.0);
+        // Bucket m so both engines use identical frequencies.
+        let m_eff = if pjrt_ok {
+            let rt = crate::runtime::PjrtRuntime::new(&dir).unwrap();
+            crate::engine::PjrtEngine::bucketed_m(&rt, cfg.m).unwrap()
+        } else {
+            cfg.m
+        };
+        let op = SketchOp::new(dist.draw(m_eff, cfg.n_dims, &mut rng));
+        let mut acc = crate::sketch::SketchAccumulator::new(m_eff, cfg.n_dims);
+        acc.update(&op, pts);
+        let z = acc.finalize();
+        let opts = CkmOptions { seed: cfg.seed + run as u64, ..CkmOptions::default() };
+
+        let native = NativeEngine::new(op.clone());
+        let sw = Stopwatch::start();
+        let sol_n = solve_with_engine(&z, &native, &acc.bounds, cfg.k, None, &opts);
+        let t_native = sw.seconds();
+        let mut row = Row::new()
+            .cell("run", run)
+            .num("native SSE/N", sse(pts, cfg.n_dims, &sol_n.centroids) / cfg.n_points as f64)
+            .num("native t(s)", t_native);
+
+        if pjrt_ok {
+            let rt = std::sync::Arc::new(crate::runtime::PjrtRuntime::new(&dir).unwrap());
+            let pe = crate::engine::PjrtEngine::from_op(rt, op).unwrap();
+            let sw = Stopwatch::start();
+            let sol_p = solve_with_engine(&z, &pe, &acc.bounds, cfg.k, None, &opts);
+            let t_pjrt = sw.seconds();
+            row = row
+                .num("pjrt SSE/N", sse(pts, cfg.n_dims, &sol_p.centroids) / cfg.n_points as f64)
+                .num("pjrt t(s)", t_pjrt);
+        }
+        table.push(row);
+    }
+    table
+}
+
+/// (c) Coordinator batching: throughput vs chunk size × workers.
+pub fn batching(cfg: &AblateConfig) -> Table {
+    let mut table = Table::new("Ablation: sketch throughput vs chunk size and workers");
+    let g = gaussian_workload(cfg.k, cfg.n_dims, cfg.n_points.max(50_000), cfg.seed + 7);
+    let pts = &g.dataset.points;
+    let mut rng = Rng::new(cfg.seed);
+    let op = SketchOp::new(FreqDist::adapted(1.0).draw(cfg.m, cfg.n_dims, &mut rng));
+    for workers in [1usize, 2, 4] {
+        for chunk in [512usize, 4096, 16384] {
+            let factory = NativeFactory { op: op.clone() };
+            let mut src = SliceSource::new(pts, cfg.n_dims);
+            let (acc, stats) = distributed_sketch(
+                &factory,
+                &mut src,
+                &SketcherConfig { n_workers: workers, chunk_rows: chunk, queue_depth: 8 },
+            )
+            .unwrap();
+            assert_eq!(acc.count, pts.len() / cfg.n_dims);
+            table.push(
+                Row::new()
+                    .cell("workers", workers)
+                    .cell("chunk", chunk)
+                    .num("Mpts/s", stats.throughput() / 1e6)
+                    .num("wall s", stats.wall_seconds),
+            );
+        }
+    }
+    table
+}
+
+/// (d) Step-1 optimizer: PGD/Armijo vs fixed-iteration Adam (both native).
+pub fn optimizers(cfg: &AblateConfig) -> Table {
+    let mut table = Table::new("Ablation: step-1 optimizer (PGD/Armijo vs Adam)");
+    let mut pgd_val = Vec::new();
+    let mut adam_val = Vec::new();
+    let mut pgd_t = Vec::new();
+    let mut adam_t = Vec::new();
+    for run in 0..cfg.runs.max(3) {
+        let g = gaussian_workload(cfg.k, cfg.n_dims, 5000, cfg.seed + 80 + run as u64);
+        let sk = sketch_dataset(&g.dataset.points, cfg.n_dims, cfg.m.min(500), cfg.seed + run as u64, None);
+        let r = sk.z.clone();
+        let mut rng = Rng::new(cfg.seed + run as u64);
+        let c0: Vec<f64> = (0..cfg.n_dims)
+            .map(|d| rng.uniform_in(sk.bounds.lo[d], sk.bounds.hi[d]))
+            .collect();
+        let sw = Stopwatch::start();
+        let (_, v1) = maximize_box(
+            |c| sk.op.step1_value_grad(c, &r),
+            &c0,
+            &sk.bounds.lo,
+            &sk.bounds.hi,
+            &OptimOptions { max_iters: 100, tol: 1e-9, step0: 1.0 },
+        );
+        pgd_t.push(sw.seconds());
+        pgd_val.push(v1);
+        let span: f64 = sk
+            .bounds
+            .hi
+            .iter()
+            .zip(&sk.bounds.lo)
+            .map(|(h, l)| h - l)
+            .sum::<f64>()
+            / cfg.n_dims as f64;
+        let sw = Stopwatch::start();
+        let (_, v2) = adam_maximize_box(
+            |c| sk.op.step1_value_grad(c, &r),
+            &c0,
+            &sk.bounds.lo,
+            &sk.bounds.hi,
+            120,
+            0.03 * span,
+        );
+        adam_t.push(sw.seconds());
+        adam_val.push(v2);
+    }
+    table.push(
+        Row::new()
+            .cell("optimizer", "pgd-armijo")
+            .stat("step1 objective", &Stats::from(&pgd_val))
+            .stat("t(s)", &Stats::from(&pgd_t)),
+    );
+    table.push(
+        Row::new()
+            .cell("optimizer", "adam-120")
+            .stat("step1 objective", &Stats::from(&adam_val))
+            .stat("t(s)", &Stats::from(&adam_t)),
+    );
+    table
+}
+
+/// (e) Solver: flat CLOMPR vs hierarchical splitting (paper §3.3 outlook).
+pub fn solvers(cfg: &AblateConfig) -> Table {
+    let mut table = Table::new("Ablation: flat CLOMPR vs hierarchical CKM");
+    let mut flat_sse = Vec::new();
+    let mut hier_sse = Vec::new();
+    let mut flat_t = Vec::new();
+    let mut hier_t = Vec::new();
+    for run in 0..cfg.runs {
+        let g = gaussian_workload(cfg.k, cfg.n_dims, cfg.n_points, cfg.seed + 300 + run as u64);
+        let pts = &g.dataset.points;
+        let sk = sketch_dataset(pts, cfg.n_dims, cfg.m, cfg.seed + run as u64, None);
+        let engine = NativeEngine::new(sk.op.clone());
+        let opts = CkmOptions { seed: cfg.seed + run as u64, ..CkmOptions::default() };
+        let sw = Stopwatch::start();
+        let flat = solve_with_engine(&sk.z, &engine, &sk.bounds, cfg.k, None, &opts);
+        flat_t.push(sw.seconds());
+        flat_sse.push(sse(pts, cfg.n_dims, &flat.centroids) / cfg.n_points as f64);
+        let sw = Stopwatch::start();
+        let hier =
+            crate::ckm::solve_hierarchical(&sk.z, &engine, &sk.bounds, cfg.k, &opts);
+        hier_t.push(sw.seconds());
+        hier_sse.push(sse(pts, cfg.n_dims, &hier.centroids) / cfg.n_points as f64);
+    }
+    table.push(
+        Row::new()
+            .cell("solver", "flat CLOMPR (2K iters)")
+            .stat("SSE/N", &Stats::from(&flat_sse))
+            .stat("t(s)", &Stats::from(&flat_t)),
+    );
+    table.push(
+        Row::new()
+            .cell("solver", "hierarchical (log2 K + K/2)")
+            .stat("SSE/N", &Stats::from(&hier_sse))
+            .stat("t(s)", &Stats::from(&hier_t)),
+    );
+    table
+}
+
+/// All ablations (the `ckm exp ablate` command).
+pub fn run(cfg: &AblateConfig) -> Vec<Table> {
+    vec![radius_kinds(cfg), engines(cfg), batching(cfg), optimizers(cfg), solvers(cfg)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> AblateConfig {
+        AblateConfig { k: 2, n_dims: 3, n_points: 1500, m: 64, runs: 2, seed: 4, with_pjrt: false }
+    }
+
+    #[test]
+    fn radius_table_has_three_rows() {
+        let t = radius_kinds(&tiny());
+        assert_eq!(t.rows.len(), 3);
+    }
+
+    #[test]
+    fn batching_table_covers_grid() {
+        let t = batching(&tiny());
+        assert_eq!(t.rows.len(), 9);
+        for r in &t.rows {
+            assert!(r.raw["Mpts/s"] > 0.0);
+        }
+    }
+
+    #[test]
+    fn optimizer_table_two_rows() {
+        let t = optimizers(&tiny());
+        assert_eq!(t.rows.len(), 2);
+    }
+
+    #[test]
+    fn solver_table_two_rows() {
+        let t = solvers(&tiny());
+        assert_eq!(t.rows.len(), 2);
+        for r in &t.rows {
+            assert!(r.raw["SSE/N.mean"].is_finite());
+        }
+    }
+
+    #[test]
+    fn solve_helper_used() {
+        let g = gaussian_workload(2, 3, 800, 1);
+        let sk = sketch_dataset(&g.dataset.points, 3, 48, 2, None);
+        let sol = crate::ckm::solve(&sk, 2, &CkmOptions::default());
+        assert_eq!(sol.centroids.rows, 2);
+    }
+}

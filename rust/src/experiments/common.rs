@@ -1,0 +1,192 @@
+//! Shared experiment machinery: run statistics, table printing and JSON
+//! result dumps. Each figure driver (fig1–fig4, ablations) builds rows of
+//! named values; the CLI and the benches print/persist them identically,
+//! so `cargo bench` regenerates exactly what `ckm exp figN` reports.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Mean/std/min/max of a sample.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Stats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl Stats {
+    pub fn from(xs: &[f64]) -> Stats {
+        let n = xs.len();
+        if n == 0 {
+            return Stats::default();
+        }
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        Stats {
+            mean,
+            std: var.sqrt(),
+            min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+            max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+            n,
+        }
+    }
+
+    pub fn fmt(&self) -> String {
+        format!("{:.4} ± {:.4}", self.mean, self.std)
+    }
+}
+
+/// One result row: ordered (column, value) pairs.
+#[derive(Clone, Debug, Default)]
+pub struct Row {
+    pub cells: Vec<(String, String)>,
+    pub raw: BTreeMap<String, f64>,
+}
+
+impl Row {
+    pub fn new() -> Row {
+        Row::default()
+    }
+    pub fn cell(mut self, key: &str, value: impl std::fmt::Display) -> Row {
+        self.cells.push((key.to_string(), value.to_string()));
+        self
+    }
+    pub fn num(mut self, key: &str, value: f64) -> Row {
+        self.cells.push((key.to_string(), format!("{value:.4}")));
+        self.raw.insert(key.to_string(), value);
+        self
+    }
+    pub fn stat(mut self, key: &str, s: &Stats) -> Row {
+        self.cells.push((key.to_string(), s.fmt()));
+        self.raw.insert(format!("{key}.mean"), s.mean);
+        self.raw.insert(format!("{key}.std"), s.std);
+        self
+    }
+}
+
+/// A titled result table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub rows: Vec<Row>,
+}
+
+impl Table {
+    pub fn new(title: &str) -> Table {
+        Table { title: title.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    /// Render as an aligned text table.
+    pub fn render(&self) -> String {
+        let mut out = format!("== {} ==\n", self.title);
+        if self.rows.is_empty() {
+            out.push_str("(no rows)\n");
+            return out;
+        }
+        // Column order = first row's order; widths = max over rows.
+        let cols: Vec<String> = self.rows[0].cells.iter().map(|(k, _)| k.clone()).collect();
+        let mut widths: Vec<usize> = cols.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, col) in cols.iter().enumerate() {
+                if let Some((_, v)) = row.cells.iter().find(|(k, _)| k == col) {
+                    widths[i] = widths[i].max(v.len());
+                }
+            }
+        }
+        for (i, c) in cols.iter().enumerate() {
+            out.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            for (i, col) in cols.iter().enumerate() {
+                let v = row
+                    .cells
+                    .iter()
+                    .find(|(k, _)| k == col)
+                    .map(|(_, v)| v.as_str())
+                    .unwrap_or("-");
+                out.push_str(&format!("{:>w$}  ", v, w = widths[i]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Machine-readable dump.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            let mut obj: Vec<(&str, Json)> = Vec::new();
+                            for (k, v) in &r.cells {
+                                if let Some(x) = r.raw.get(k) {
+                                    obj.push((k.as_str(), Json::Num(*x)));
+                                } else {
+                                    obj.push((k.as_str(), Json::Str(v.clone())));
+                                }
+                            }
+                            Json::Obj(
+                                obj.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Print to stdout and append to `results/<name>.json` if `persist`.
+    pub fn emit(&self, name: &str, persist: bool) {
+        println!("{}", self.render());
+        if persist {
+            let dir = std::path::Path::new("results");
+            let _ = std::fs::create_dir_all(dir);
+            let path = dir.join(format!("{name}.json"));
+            if let Err(e) = std::fs::write(&path, self.to_json().to_pretty()) {
+                eprintln!("warning: cannot write {path:?}: {e}");
+            } else {
+                eprintln!("(results written to {path:?})");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let s = Stats::from(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert_eq!(s.n, 3);
+        let e = Stats::from(&[]);
+        assert_eq!(e.n, 0);
+    }
+
+    #[test]
+    fn table_renders_aligned_and_json_roundtrips() {
+        let mut t = Table::new("demo");
+        t.push(Row::new().cell("algo", "ckm").num("sse", 1.25).stat("ari", &Stats::from(&[0.5, 0.7])));
+        t.push(Row::new().cell("algo", "kmeans").num("sse", 2.5));
+        let txt = t.render();
+        assert!(txt.contains("demo") && txt.contains("ckm") && txt.contains("kmeans"));
+        let j = t.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("title").as_str(), Some("demo"));
+        assert_eq!(parsed.get("rows").as_arr().unwrap().len(), 2);
+    }
+}

@@ -1,0 +1,138 @@
+//! Fig. 1 — initialization strategies (§4.2).
+//!
+//! Compares Range / Sample / K++ inits for both CKM and Lloyd-Max, on
+//! (a) the Gaussian protocol and (b) digits spectral features, reporting
+//! mean ± std of the SSE over `runs` experiments. Paper finding: CKM is
+//! nearly insensitive to the strategy; kmeans is not (it only catches up
+//! with K++).
+
+use super::common::{Row, Stats, Table};
+use super::workloads::{digits_spectral_workload, gaussian_workload};
+use crate::baselines::{kmeans, KmInit, KmOptions};
+use crate::ckm::{solve_full, CkmOptions, InitStrategy};
+use crate::metrics::sse;
+use crate::sketch::sketch_dataset;
+
+/// Parameters (paper: K=10, n=10, N=3·10⁵, m=1000, 100 runs).
+#[derive(Clone, Debug)]
+pub struct Fig1Config {
+    pub k: usize,
+    pub n_dims: usize,
+    pub n_points: usize,
+    pub m: usize,
+    pub runs: usize,
+    pub digit_images: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig1Config {
+    fn default() -> Self {
+        Fig1Config { k: 10, n_dims: 10, n_points: 30_000, m: 1000, runs: 10, digit_images: 600, seed: 42 }
+    }
+}
+
+const STRATEGIES: [(InitStrategy, KmInit); 3] = [
+    (InitStrategy::Range, KmInit::Range),
+    (InitStrategy::Sample, KmInit::Sample),
+    (InitStrategy::KppAnalog, KmInit::KmeansPp),
+];
+
+pub fn run(cfg: &Fig1Config) -> Table {
+    let mut table = Table::new(&format!(
+        "Fig 1: init strategies (K={} n={} N={} m={} runs={})",
+        cfg.k, cfg.n_dims, cfg.n_points, cfg.m, cfg.runs
+    ));
+
+    // ---- (a) Gaussian data: fresh dataset per run (paper protocol).
+    let mut per_cell: Vec<(Vec<f64>, Vec<f64>)> = vec![(vec![], vec![]); STRATEGIES.len()];
+    for run in 0..cfg.runs {
+        let g = gaussian_workload(cfg.k, cfg.n_dims, cfg.n_points, cfg.seed + run as u64);
+        let pts = &g.dataset.points;
+        let sk = sketch_dataset(pts, cfg.n_dims, cfg.m, cfg.seed ^ (run as u64) << 8, None);
+        for (si, (ckm_init, km_init)) in STRATEGIES.iter().enumerate() {
+            let opts = CkmOptions {
+                strategy: *ckm_init,
+                seed: cfg.seed + 1000 + run as u64,
+                ..CkmOptions::default()
+            };
+            let sol = solve_full(&sk.z, &sk.op, &sk.bounds, cfg.k, Some((pts, cfg.n_dims)), &opts);
+            per_cell[si].0.push(sse(pts, cfg.n_dims, &sol.centroids) / cfg.n_points as f64);
+            let km = kmeans(
+                pts,
+                cfg.n_dims,
+                cfg.k,
+                &KmOptions { init: *km_init, seed: cfg.seed + 2000 + run as u64, ..Default::default() },
+            );
+            per_cell[si].1.push(km.sse / cfg.n_points as f64);
+        }
+    }
+    for (si, (ckm_init, _)) in STRATEGIES.iter().enumerate() {
+        table.push(
+            Row::new()
+                .cell("dataset", "gaussian")
+                .cell("strategy", ckm_init.name())
+                .stat("ckm SSE/N", &Stats::from(&per_cell[si].0))
+                .stat("kmeans SSE/N", &Stats::from(&per_cell[si].1)),
+        );
+    }
+
+    // ---- (b) Digits spectral features: dataset fixed, seeds vary.
+    let (feats, _labels) = digits_spectral_workload(cfg.digit_images, cfg.seed ^ 0xD161);
+    let nd = 10;
+    let n = feats.len() / nd;
+    let mut per_cell: Vec<(Vec<f64>, Vec<f64>)> = vec![(vec![], vec![]); STRATEGIES.len()];
+    for run in 0..cfg.runs {
+        let sk = sketch_dataset(&feats, nd, cfg.m, cfg.seed ^ 0xF00 ^ (run as u64) << 4, None);
+        for (si, (ckm_init, km_init)) in STRATEGIES.iter().enumerate() {
+            let opts = CkmOptions {
+                strategy: *ckm_init,
+                seed: cfg.seed + 3000 + run as u64,
+                ..CkmOptions::default()
+            };
+            let sol = solve_full(&sk.z, &sk.op, &sk.bounds, cfg.k, Some((&feats, nd)), &opts);
+            per_cell[si].0.push(sse(&feats, nd, &sol.centroids) / n as f64);
+            let km = kmeans(
+                &feats,
+                nd,
+                cfg.k,
+                &KmOptions { init: *km_init, seed: cfg.seed + 4000 + run as u64, ..Default::default() },
+            );
+            per_cell[si].1.push(km.sse / n as f64);
+        }
+    }
+    for (si, (ckm_init, _)) in STRATEGIES.iter().enumerate() {
+        table.push(
+            Row::new()
+                .cell("dataset", "digits-spectral")
+                .cell("strategy", ckm_init.name())
+                .stat("ckm SSE/N", &Stats::from(&per_cell[si].0))
+                .stat("kmeans SSE/N", &Stats::from(&per_cell[si].1)),
+        );
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_fig1_runs() {
+        let cfg = Fig1Config {
+            k: 3,
+            n_dims: 4,
+            n_points: 2000,
+            m: 120,
+            runs: 2,
+            digit_images: 120,
+            seed: 7,
+        };
+        let t = run(&cfg);
+        assert_eq!(t.rows.len(), 6); // 2 datasets x 3 strategies
+        // CKM mean SSE must be finite and positive everywhere.
+        for r in &t.rows {
+            let m = r.raw["ckm SSE/N.mean"];
+            assert!(m.is_finite() && m > 0.0);
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Fig. 2 — how many frequencies are needed (§4.3).
+//!
+//! Sweeps the relative sketch size `m/(Kn)` against K (at n=10) and
+//! against n (at K=10), reporting the relative SSE (CKM / Lloyd-Max) and
+//! the smallest ratio where it drops below 2. Paper finding: the m ≈ 5·Kn
+//! line is flat in K and (mostly) in n.
+
+use super::common::{Row, Stats, Table};
+use super::workloads::gaussian_workload;
+use crate::baselines::{kmeans, KmInit, KmOptions};
+use crate::ckm::{solve, CkmOptions};
+use crate::metrics::sse;
+use crate::sketch::sketch_dataset;
+
+/// Parameters (paper: N=3·10⁵, 100 runs, K ∈ 2..30 / n ∈ 2..20).
+#[derive(Clone, Debug)]
+pub struct Fig2Config {
+    pub n_points: usize,
+    pub runs: usize,
+    /// K sweep (n fixed at `n_fixed`).
+    pub ks: Vec<usize>,
+    pub n_fixed: usize,
+    /// n sweep (K fixed at `k_fixed`).
+    pub ns: Vec<usize>,
+    pub k_fixed: usize,
+    /// m/(Kn) ratios to probe.
+    pub ratios: Vec<f64>,
+    pub seed: u64,
+}
+
+impl Default for Fig2Config {
+    fn default() -> Self {
+        Fig2Config {
+            n_points: 20_000,
+            runs: 3,
+            ks: vec![2, 5, 10, 15],
+            n_fixed: 10,
+            ns: vec![2, 4, 8, 12],
+            k_fixed: 10,
+            ratios: vec![0.5, 1.0, 2.0, 3.0, 5.0, 8.0],
+            seed: 1234,
+        }
+    }
+}
+
+/// One sweep cell: mean relative SSE over runs.
+fn rel_sse_cell(
+    k: usize,
+    n_dims: usize,
+    m: usize,
+    n_points: usize,
+    runs: usize,
+    seed: u64,
+) -> Stats {
+    let mut rels = Vec::with_capacity(runs);
+    for run in 0..runs {
+        let g = gaussian_workload(k, n_dims, n_points, seed + 17 * run as u64);
+        let pts = &g.dataset.points;
+        let sk = sketch_dataset(pts, n_dims, m, seed ^ (run as u64) << 3, None);
+        let sol = solve(&sk, k, &CkmOptions { seed: seed + run as u64, ..CkmOptions::default() });
+        let s_ckm = sse(pts, n_dims, &sol.centroids);
+        // kmeans does not depend on m; still re-run per cell for symmetric
+        // noise (cheap relative to CKM at these sizes).
+        let km = kmeans(
+            pts,
+            n_dims,
+            k,
+            &KmOptions { init: KmInit::Range, seed: seed + 999 + run as u64, ..Default::default() },
+        );
+        rels.push(s_ckm / km.sse.max(1e-300));
+    }
+    Stats::from(&rels)
+}
+
+pub fn run(cfg: &Fig2Config) -> Table {
+    let mut table = Table::new(&format!(
+        "Fig 2: relative SSE vs m/(Kn) (N={} runs={})",
+        cfg.n_points, cfg.runs
+    ));
+    // Left panel: n fixed, K sweeps.
+    for &k in &cfg.ks {
+        let mut row = Row::new().cell("sweep", "K").cell("K", k).cell("n", cfg.n_fixed);
+        let mut threshold = f64::NAN;
+        for &r in &cfg.ratios {
+            let m = ((r * (k * cfg.n_fixed) as f64).ceil() as usize).max(4);
+            let s = rel_sse_cell(k, cfg.n_fixed, m, cfg.n_points, cfg.runs, cfg.seed + k as u64);
+            row = row.num(&format!("r={r}"), s.mean);
+            if threshold.is_nan() && s.mean < 2.0 {
+                threshold = r;
+            }
+        }
+        row = row.num("first r: rel<2", threshold);
+        table.push(row);
+    }
+    // Right panel: K fixed, n sweeps.
+    for &n in &cfg.ns {
+        let mut row = Row::new().cell("sweep", "n").cell("K", cfg.k_fixed).cell("n", n);
+        let mut threshold = f64::NAN;
+        for &r in &cfg.ratios {
+            let m = ((r * (cfg.k_fixed * n) as f64).ceil() as usize).max(4);
+            let s = rel_sse_cell(cfg.k_fixed, n, m, cfg.n_points, cfg.runs, cfg.seed + 7 * n as u64);
+            row = row.num(&format!("r={r}"), s.mean);
+            if threshold.is_nan() && s.mean < 2.0 {
+                threshold = r;
+            }
+        }
+        row = row.num("first r: rel<2", threshold);
+        table.push(row);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_fig2_runs_and_more_freqs_help() {
+        let cfg = Fig2Config {
+            n_points: 3000,
+            runs: 2,
+            ks: vec![3],
+            n_fixed: 4,
+            ns: vec![3],
+            k_fixed: 3,
+            ratios: vec![0.5, 4.0],
+            seed: 5,
+        };
+        let t = run(&cfg);
+        assert_eq!(t.rows.len(), 2);
+        for r in &t.rows {
+            let low = r.raw["r=0.5"];
+            let high = r.raw["r=4"];
+            assert!(low.is_finite() && high.is_finite());
+            // at a generous ratio CKM should be within 2.5x of kmeans
+            assert!(high < 2.5, "high-ratio rel SSE {high}");
+        }
+    }
+}

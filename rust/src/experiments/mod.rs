@@ -1,0 +1,14 @@
+//! Experiment drivers — one module per figure in the paper's evaluation
+//! (§4), plus ablations. Shared by the CLI (`ckm exp <fig>`) and the
+//! bench targets (`cargo bench`), so both regenerate the same tables.
+//! Observed-vs-paper numbers are recorded in EXPERIMENTS.md.
+
+pub mod ablate;
+pub mod common;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod workloads;
+
+pub use common::{Row, Stats, Table};

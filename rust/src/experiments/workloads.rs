@@ -1,0 +1,46 @@
+//! Shared experiment workloads: the paper's §4.1 Gaussian protocol and the
+//! digits→spectral-features pipeline (MNIST substitution, DESIGN.md §3).
+
+use crate::data::digits::DigitConfig;
+use crate::data::gmm::{GmmConfig, GmmDataset};
+use crate::spectral::{spectral_embed, SpectralConfig};
+use crate::util::rng::Rng;
+
+/// Paper §4.1 artificial data: K unit Gaussians, means ~ N(0, 1.5·K^{1/n}).
+pub fn gaussian_workload(k: usize, n_dims: usize, n_points: usize, seed: u64) -> GmmDataset {
+    let mut rng = Rng::new(seed);
+    GmmConfig::paper_default(k, n_dims, n_points).generate(&mut rng)
+}
+
+/// Digit images → pooled features → 10-dim spectral embedding + labels.
+///
+/// This is the paper's MNIST/SIFT/spectral protocol with the in-repo
+/// substitutes. The embedding is the expensive part (exact kNN is O(N²));
+/// fig-1/fig-3 compute it once per dataset size and reuse it across runs,
+/// exactly as the paper fixes the dataset and varies the initialization.
+pub fn digits_spectral_workload(n_images: usize, seed: u64) -> (Vec<f64>, Vec<usize>) {
+    let mut rng = Rng::new(seed);
+    let ds = DigitConfig::new(n_images).generate(&mut rng);
+    let cfg = SpectralConfig { knn_k: 10, embed_dim: 10, lanczos_dim: 0, seed: seed ^ 0xEE };
+    let feats = spectral_embed(&ds.points, ds.n_dims, &cfg);
+    (feats, ds.labels)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_workload_shapes() {
+        let g = gaussian_workload(3, 4, 500, 1);
+        assert_eq!(g.dataset.n_points(), 500);
+        assert_eq!(g.means.len(), 3);
+    }
+
+    #[test]
+    fn digits_workload_shapes() {
+        let (f, l) = digits_spectral_workload(120, 2);
+        assert_eq!(f.len(), 120 * 10);
+        assert_eq!(l.len(), 120);
+    }
+}

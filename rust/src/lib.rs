@@ -1,0 +1,43 @@
+//! # Compressive K-means (CKM)
+//!
+//! A production-grade reproduction of *"Compressive K-means"* (Keriven,
+//! Tremblay, Traonmilin, Gribonval — 2016) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! - **L3 (this crate)** — the coordinator: streaming sharded sketching of
+//!   the dataset, the CLOMPR centroid solver, baselines, metrics, a CLI and
+//!   the experiment/benchmark drivers for every figure in the paper.
+//! - **L2 (`python/compile/model.py`)** — JAX compute graphs (sketch chunk,
+//!   CLOMPR gradient steps), AOT-lowered once to HLO text.
+//! - **L1 (`python/compile/kernels/`)** — the Pallas sketch kernel, the
+//!   compute hot-spot, verified against a pure-jnp oracle.
+//!
+//! Python never runs at request time: the rust binary loads the AOT
+//! artifacts through PJRT (`runtime`) and falls back to a pure-rust
+//! implementation of the same math (`engine::native`) for shapes outside
+//! the compiled matrix.
+
+pub mod baselines;
+pub mod bench;
+pub mod ckm;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod sketch;
+pub mod spectral;
+pub mod testing;
+pub mod util;
+
+pub mod prelude {
+    pub use crate::ckm::{solve, CkmOptions, InitStrategy, Solution};
+    pub use crate::util::rng::Rng;
+}
+
+/// Crate version (mirrors Cargo.toml).
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,165 @@
+//! Complex vectors in split (re/im) layout.
+//!
+//! Sketches `ẑ ∈ C^m` and atoms `Aδ_c` live here. Split layout keeps the
+//! native engine's trig loops vectorizable and maps directly onto the
+//! `(2, m)` real tensors the AOT artifacts exchange with PJRT.
+
+use super::matrix::dot;
+
+/// A complex vector stored as separate real and imaginary parts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CVec {
+    pub re: Vec<f64>,
+    pub im: Vec<f64>,
+}
+
+impl CVec {
+    pub fn zeros(len: usize) -> CVec {
+        CVec { re: vec![0.0; len], im: vec![0.0; len] }
+    }
+
+    pub fn from_parts(re: Vec<f64>, im: Vec<f64>) -> CVec {
+        assert_eq!(re.len(), im.len());
+        CVec { re, im }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.re.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.re.is_empty()
+    }
+
+    /// Squared L2 norm `‖z‖²`.
+    pub fn norm2_sq(&self) -> f64 {
+        dot(&self.re, &self.re) + dot(&self.im, &self.im)
+    }
+
+    pub fn norm2(&self) -> f64 {
+        self.norm2_sq().sqrt()
+    }
+
+    /// Real part of the Hermitian inner product `Re⟨self, other⟩ = Re(Σ conj(self_j)·other_j)`.
+    pub fn re_dot(&self, other: &CVec) -> f64 {
+        assert_eq!(self.len(), other.len());
+        dot(&self.re, &other.re) + dot(&self.im, &other.im)
+    }
+
+    /// Imaginary part of the Hermitian inner product.
+    pub fn im_dot(&self, other: &CVec) -> f64 {
+        assert_eq!(self.len(), other.len());
+        dot(&self.re, &other.im) - dot(&self.im, &other.re)
+    }
+
+    /// `self += alpha * other` (real scalar).
+    pub fn axpy(&mut self, alpha: f64, other: &CVec) {
+        assert_eq!(self.len(), other.len());
+        for i in 0..self.len() {
+            self.re[i] += alpha * other.re[i];
+            self.im[i] += alpha * other.im[i];
+        }
+    }
+
+    /// `self *= alpha` (real scalar).
+    pub fn scale(&mut self, alpha: f64) {
+        for i in 0..self.len() {
+            self.re[i] *= alpha;
+            self.im[i] *= alpha;
+        }
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &CVec) -> CVec {
+        assert_eq!(self.len(), other.len());
+        CVec {
+            re: self.re.iter().zip(&other.re).map(|(a, b)| a - b).collect(),
+            im: self.im.iter().zip(&other.im).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    /// Elementwise modulus.
+    pub fn modulus(&self) -> Vec<f64> {
+        self.re.iter().zip(&self.im).map(|(r, i)| (r * r + i * i).sqrt()).collect()
+    }
+
+    /// Interleave into `[re..., im...]` (the `(2, m)` artifact layout), f32.
+    pub fn to_f32_stacked(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(2 * self.len());
+        out.extend(self.re.iter().map(|&x| x as f32));
+        out.extend(self.im.iter().map(|&x| x as f32));
+        out
+    }
+
+    /// Inverse of [`to_f32_stacked`].
+    pub fn from_f32_stacked(buf: &[f32]) -> CVec {
+        assert_eq!(buf.len() % 2, 0);
+        let m = buf.len() / 2;
+        CVec {
+            re: buf[..m].iter().map(|&x| x as f64).collect(),
+            im: buf[m..].iter().map(|&x| x as f64).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{self, gen, Config};
+
+    #[test]
+    fn norms_and_dots() {
+        let z = CVec::from_parts(vec![3.0, 0.0], vec![0.0, 4.0]);
+        assert_eq!(z.norm2_sq(), 25.0);
+        assert_eq!(z.norm2(), 5.0);
+        let w = CVec::from_parts(vec![1.0, 2.0], vec![0.5, -1.0]);
+        // ⟨z,w⟩ = conj(3)·(1+0.5i) + conj(4i)·(2-1i) = 3+1.5i + (-4i)(2-i) = 3+1.5i -8i -4 = -1 -6.5i
+        assert!((z.re_dot(&w) - (-1.0)).abs() < 1e-12);
+        assert!((z.im_dot(&w) - (-6.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_cauchy_schwarz_and_linearity() {
+        testing::check("cvec cauchy-schwarz", Config::default().cases(32), |rng, size| {
+            let m = 1 + rng.below(size);
+            let z = CVec::from_parts(gen::vec_normal(rng, m), gen::vec_normal(rng, m));
+            let w = CVec::from_parts(gen::vec_normal(rng, m), gen::vec_normal(rng, m));
+            let inner = (z.re_dot(&w).powi(2) + z.im_dot(&w).powi(2)).sqrt();
+            if inner <= z.norm2() * w.norm2() * (1.0 + 1e-9) {
+                Ok(())
+            } else {
+                Err(format!("{inner} > {}", z.norm2() * w.norm2()))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_axpy_sub_consistent() {
+        testing::check("axpy/sub", Config::default().cases(32), |rng, size| {
+            let m = 1 + rng.below(size);
+            let z = CVec::from_parts(gen::vec_normal(rng, m), gen::vec_normal(rng, m));
+            let w = CVec::from_parts(gen::vec_normal(rng, m), gen::vec_normal(rng, m));
+            let mut acc = z.clone();
+            acc.axpy(-1.0, &w);
+            let sub = z.sub(&w);
+            testing::all_close(&acc.re, &sub.re, 1e-12)?;
+            testing::all_close(&acc.im, &sub.im, 1e-12)
+        });
+    }
+
+    #[test]
+    fn f32_stack_roundtrip() {
+        let z = CVec::from_parts(vec![1.0, -2.5, 3.25], vec![0.5, 0.0, -1.125]);
+        let rt = CVec::from_f32_stacked(&z.to_f32_stacked());
+        testing::all_close(&rt.re, &z.re, 1e-6).unwrap();
+        testing::all_close(&rt.im, &z.im, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn modulus_matches() {
+        let z = CVec::from_parts(vec![3.0], vec![4.0]);
+        assert_eq!(z.modulus(), vec![5.0]);
+    }
+}

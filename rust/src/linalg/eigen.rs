@@ -1,0 +1,406 @@
+//! Symmetric eigensolvers: tridiagonal implicit-QL with eigenvectors, and a
+//! Lanczos iteration with full reorthogonalization for large sparse
+//! symmetric matrices (the spectral-clustering Laplacian).
+
+use super::matrix::{axpy, dot, norm2, Mat};
+use super::sparse::Csr;
+use crate::util::rng::Rng;
+
+/// Eigendecomposition of a symmetric tridiagonal matrix given by its
+/// diagonal `d` (length n) and off-diagonal `e` (length n-1).
+///
+/// Returns `(eigenvalues, eigenvectors)` with eigenvalues ascending and
+/// `eigenvectors.row(i)` NOT the eigenvector — the matrix is column-major
+/// in math terms: column `j` of the returned `Mat` (i.e. `vecs.at(i, j)`
+/// over `i`) is the unit eigenvector for `vals[j]`.
+///
+/// Implicit QL with Wilkinson shifts (NR "tqli").
+pub fn tridiag_eig(d: &[f64], e: &[f64]) -> (Vec<f64>, Mat) {
+    let n = d.len();
+    assert!(n > 0 && e.len() + 1 == n);
+    let mut d = d.to_vec();
+    // e is used 1-indexed internally, shifted down at the end of sweeps
+    let mut e: Vec<f64> = {
+        let mut v = e.to_vec();
+        v.push(0.0);
+        v
+    };
+    let mut z = Mat::eye(n);
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find small off-diagonal element to split.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter < 60, "tridiag_eig failed to converge");
+            // Wilkinson shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate eigenvectors
+                for k in 0..n {
+                    f = z.at(k, i + 1);
+                    *z.at_mut(k, i + 1) = s * z.at(k, i) + c * f;
+                    *z.at_mut(k, i) = c * z.at(k, i) - s * f;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+
+    // Sort ascending, permuting eigenvector columns.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let vals: Vec<f64> = order.iter().map(|&j| d[j]).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (newj, &oldj) in order.iter().enumerate() {
+        for i in 0..n {
+            *vecs.at_mut(i, newj) = z.at(i, oldj);
+        }
+    }
+    (vals, vecs)
+}
+
+/// Result of a Lanczos run.
+pub struct EigPairs {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// Eigenvectors: `vectors[j]` is the unit eigenvector for `values[j]`.
+    pub vectors: Vec<Vec<f64>>,
+}
+
+/// `k` algebraically-smallest eigenpairs of a symmetric operator given by
+/// `matvec`, dimension `n`, via restarted Lanczos with full
+/// reorthogonalization and explicit deflation of converged eigenvectors.
+///
+/// Restarts are essential for eigenvalue *multiplicity* (e.g. one zero
+/// eigenvalue per connected component of a graph Laplacian): a single
+/// Krylov space sees only one vector per eigenspace, so converged pairs
+/// are locked and subsequent runs start orthogonal to them.
+///
+/// `max_dim` bounds each run's Krylov dimension (0 = auto). Deterministic
+/// given `seed`.
+pub fn lanczos_smallest(
+    matvec: &dyn Fn(&[f64]) -> Vec<f64>,
+    n: usize,
+    k: usize,
+    max_dim: usize,
+    seed: u64,
+) -> EigPairs {
+    assert!(k >= 1 && k <= n);
+    let m_max = if max_dim == 0 { (4 * k + 40).min(n) } else { max_dim.min(n) };
+    let mut rng = Rng::new(seed);
+
+    let mut locked_vals: Vec<f64> = Vec::new();
+    let mut locked_vecs: Vec<Vec<f64>> = Vec::new();
+    // Fallback Ritz pairs from the last run, in case not everything locks.
+    let mut spare: Vec<(f64, Vec<f64>)> = Vec::new();
+
+    // Restart until the deflated operator's smallest remaining eigenvalue
+    // provably exceeds our current k-th smallest locked value: each run
+    // sees the spectrum MINUS the locked eigenvectors, so once a run's
+    // smallest Ritz value is above the pool's k-th entry, no smaller
+    // eigenvalue remains undiscovered.
+    let max_restarts = 2 * k + 6;
+    for _restart in 0..max_restarts {
+        if locked_vecs.len() >= n {
+            break;
+        }
+        let budget = m_max.min(n - locked_vecs.len());
+        if budget == 0 {
+            break;
+        }
+        let (tvals, tvecs, q) = lanczos_run(matvec, n, budget, &locked_vecs, &mut rng);
+        let dim = tvals.len();
+        if dim == 0 {
+            break;
+        }
+        spare.clear();
+        // Assemble Ritz vectors for the smallest few values; lock converged.
+        let want = (k + 2).min(dim);
+        let scale = tvals.iter().fold(0.0f64, |a, &b| a.max(b.abs())).max(1.0);
+        for j in 0..want {
+            let mut x = vec![0.0; n];
+            for (i, qi) in q.iter().enumerate() {
+                let c = tvecs.at(i, j);
+                if c != 0.0 {
+                    axpy(c, qi, &mut x);
+                }
+            }
+            let nx = norm2(&x);
+            if nx < 1e-12 {
+                continue;
+            }
+            for xi in x.iter_mut() {
+                *xi /= nx;
+            }
+            // Explicit residual check.
+            let ax = matvec(&x);
+            let lam = dot(&x, &ax);
+            let mut res = 0.0;
+            for i in 0..n {
+                let r = ax[i] - lam * x[i];
+                res += r * r;
+            }
+            let res = res.sqrt();
+            if res <= 1e-7 * scale {
+                locked_vals.push(lam);
+                locked_vecs.push(x);
+            } else {
+                spare.push((lam, x));
+            }
+        }
+        // Termination: enough locked AND this (deflated) run saw nothing
+        // below our current k-th smallest.
+        if locked_vals.len() >= k {
+            let mut sorted = locked_vals.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let kth = sorted[k - 1];
+            let run_min = tvals[0];
+            if run_min >= kth - 1e-9 * scale {
+                break;
+            }
+        }
+    }
+
+    // Top up with unconverged Ritz pairs if needed.
+    spare.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    for (lam, x) in spare {
+        if locked_vecs.len() >= k {
+            break;
+        }
+        locked_vals.push(lam);
+        locked_vecs.push(x);
+    }
+
+    // Sort ascending and truncate to k.
+    let mut order: Vec<usize> = (0..locked_vals.len()).collect();
+    order.sort_by(|&a, &b| locked_vals[a].partial_cmp(&locked_vals[b]).unwrap());
+    order.truncate(k);
+    EigPairs {
+        values: order.iter().map(|&i| locked_vals[i]).collect(),
+        vectors: order.iter().map(|&i| locked_vecs[i].clone()).collect(),
+    }
+}
+
+/// One Lanczos run orthogonal to `locked`; returns (tridiag eigvals,
+/// tridiag eigvecs, Krylov basis).
+fn lanczos_run(
+    matvec: &dyn Fn(&[f64]) -> Vec<f64>,
+    n: usize,
+    m_max: usize,
+    locked: &[Vec<f64>],
+    rng: &mut Rng,
+) -> (Vec<f64>, Mat, Vec<Vec<f64>>) {
+    let mut q: Vec<Vec<f64>> = Vec::with_capacity(m_max);
+    let mut alpha: Vec<f64> = Vec::with_capacity(m_max);
+    let mut beta: Vec<f64> = Vec::with_capacity(m_max);
+
+    let orth_all = |w: &mut Vec<f64>, q: &[Vec<f64>]| {
+        for _ in 0..2 {
+            for l in locked {
+                let c = dot(l, w);
+                if c != 0.0 {
+                    axpy(-c, l, w);
+                }
+            }
+            for qi in q {
+                let c = dot(qi, w);
+                if c != 0.0 {
+                    axpy(-c, qi, w);
+                }
+            }
+        }
+    };
+
+    // Random start orthogonal to locked.
+    let mut v = vec![0.0; n];
+    let mut ok = false;
+    for _ in 0..5 {
+        rng.fill_normal(&mut v);
+        orth_all(&mut v, &[]);
+        let nv = norm2(&v);
+        if nv > 1e-8 {
+            for x in v.iter_mut() {
+                *x /= nv;
+            }
+            ok = true;
+            break;
+        }
+    }
+    if !ok {
+        return (vec![], Mat::zeros(0, 0), vec![]);
+    }
+
+    for j in 0..m_max {
+        let mut w = matvec(&v);
+        let a = dot(&v, &w);
+        alpha.push(a);
+        axpy(-a, &v, &mut w);
+        if j > 0 {
+            let b_prev = beta[j - 1];
+            axpy(-b_prev, &q[j - 1], &mut w);
+        }
+        orth_all(&mut w, &q);
+        {
+            // also against the current v (not yet in q)
+            let c = dot(&v, &w);
+            axpy(-c, &v, &mut w);
+        }
+        q.push(std::mem::take(&mut v));
+        let b = norm2(&w);
+        if j + 1 == m_max || b < 1e-10 {
+            break;
+        }
+        beta.push(b);
+        v = w;
+        for x in v.iter_mut() {
+            *x /= b;
+        }
+    }
+
+    let dim = alpha.len();
+    let (tvals, tvecs) = tridiag_eig(&alpha, &beta[..dim.saturating_sub(1)]);
+    (tvals, tvecs, q)
+}
+
+/// `k` smallest eigenpairs of a sparse symmetric matrix.
+pub fn csr_smallest_eigenpairs(a: &Csr, k: usize, seed: u64) -> EigPairs {
+    assert_eq!(a.rows, a.cols);
+    let mv = |x: &[f64]| a.matvec(x);
+    lanczos_smallest(&mv, a.rows, k, 0, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::sparse::Csr;
+    use crate::testing::{self, Config};
+
+    #[test]
+    fn tridiag_2x2_analytic() {
+        // [[2, 1], [1, 2]] → eigvals 1, 3; vecs (1,-1)/√2, (1,1)/√2
+        let (vals, vecs) = tridiag_eig(&[2.0, 2.0], &[1.0]);
+        testing::all_close(&vals, &[1.0, 3.0], 1e-12).unwrap();
+        let v0 = [vecs.at(0, 0), vecs.at(1, 0)];
+        assert!((v0[0] + v0[1]).abs() < 1e-12, "v0={v0:?}");
+    }
+
+    #[test]
+    fn tridiag_diagonal_matrix() {
+        let (vals, _) = tridiag_eig(&[3.0, 1.0, 2.0], &[0.0, 0.0]);
+        testing::all_close(&vals, &[1.0, 2.0, 3.0], 1e-14).unwrap();
+    }
+
+    #[test]
+    fn prop_tridiag_reconstruction() {
+        testing::check("tridiag A·v = λ·v", Config::default().cases(20).max_size(24), |rng, size| {
+            let n = 2 + rng.below(size + 1);
+            let d: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let e: Vec<f64> = (0..n - 1).map(|_| rng.normal()).collect();
+            let (vals, vecs) = tridiag_eig(&d, &e);
+            // Check each eigenpair.
+            for j in 0..n {
+                for i in 0..n {
+                    let mut av = d[i] * vecs.at(i, j);
+                    if i > 0 {
+                        av += e[i - 1] * vecs.at(i - 1, j);
+                    }
+                    if i + 1 < n {
+                        av += e[i] * vecs.at(i + 1, j);
+                    }
+                    let diff = (av - vals[j] * vecs.at(i, j)).abs();
+                    if diff > 1e-8 {
+                        return Err(format!("pair {j} row {i}: |Av−λv|={diff:.2e}"));
+                    }
+                }
+            }
+            // Eigenvalue sum = trace.
+            testing::close(vals.iter().sum::<f64>(), d.iter().sum::<f64>(), 1e-8)
+        });
+    }
+
+    #[test]
+    fn lanczos_on_diagonal_operator() {
+        let diag: Vec<f64> = (0..50).map(|i| i as f64).collect();
+        let mv = |x: &[f64]| x.iter().zip(&diag).map(|(a, b)| a * b).collect::<Vec<_>>();
+        let p = lanczos_smallest(&mv, 50, 4, 0, 7);
+        testing::all_close(&p.values, &[0.0, 1.0, 2.0, 3.0], 1e-6).unwrap();
+        // eigenvectors are near canonical basis vectors
+        for (j, v) in p.vectors.iter().enumerate() {
+            assert!(v[j].abs() > 0.99, "vector {j} = {:?}", &v[..6]);
+        }
+    }
+
+    #[test]
+    fn lanczos_laplacian_nullspace() {
+        // Cycle graph C6 adjacency; normalized Laplacian has λ0 = 0.
+        let n = 6;
+        let mut t = Vec::new();
+        for i in 0..n {
+            t.push((i, (i + 1) % n, 1.0));
+            t.push(((i + 1) % n, i, 1.0));
+        }
+        let adj = Csr::from_triplets(n, n, t);
+        let l = crate::linalg::sparse::normalized_laplacian(&adj);
+        let p = csr_smallest_eigenpairs(&l, 2, 3);
+        assert!(p.values[0].abs() < 1e-9, "λ0 = {}", p.values[0]);
+        assert!(p.values[1] > 1e-3); // C6 second eigenvalue is positive
+    }
+
+    #[test]
+    fn lanczos_two_component_graph_has_two_zero_eigs() {
+        // Two disjoint triangles → normalized Laplacian nullspace dim 2.
+        let mut t = Vec::new();
+        for base in [0usize, 3] {
+            for i in 0..3 {
+                for j in 0..3 {
+                    if i != j {
+                        t.push((base + i, base + j, 1.0));
+                    }
+                }
+            }
+        }
+        let adj = Csr::from_triplets(6, 6, t);
+        let l = crate::linalg::sparse::normalized_laplacian(&adj);
+        let p = csr_smallest_eigenpairs(&l, 3, 11);
+        assert!(p.values[0].abs() < 1e-8);
+        assert!(p.values[1].abs() < 1e-8);
+        assert!(p.values[2] > 0.5, "triangle gap, got {:?}", p.values);
+    }
+}

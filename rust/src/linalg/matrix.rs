@@ -1,0 +1,296 @@
+//! Dense row-major matrices with blocked, multi-threaded products.
+//!
+//! This is the BLAS substitute used by the native sketch engine, Lloyd-Max
+//! and the spectral pipeline. The only performance-critical primitive is
+//! `matmul_bt` (`A·Bᵀ`, the shape of `X·Wᵀ` in the sketch), implemented with
+//! cache blocking + 4-wide accumulator unrolling + row-parallelism.
+
+use crate::util::parallel;
+
+/// Row-major dense matrix of f64.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        Mat::from_fn(n, n, |i, j| if i == j { 1.0 } else { 0.0 })
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// `self · other` (naive blocked; fine for the small solver matrices).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let bt = other.transpose();
+        self.matmul_bt(&bt)
+    }
+
+    /// `self · otherᵀ` — the hot shape (`X·Wᵀ`). Parallel over row blocks.
+    pub fn matmul_bt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_bt shape mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(m, n);
+        let threads = parallel::default_threads();
+        let a = &self.data;
+        let b = &other.data;
+        // Split the output by whole rows so each thread owns disjoint rows.
+        let ranges = parallel::split_ranges(m, threads);
+        std::thread::scope(|s| {
+            let mut rest: &mut [f64] = &mut out.data;
+            for r in ranges {
+                let (head, tail) = rest.split_at_mut(r.len() * n);
+                rest = tail;
+                s.spawn(move || matmul_bt_block(a, b, head, r.start, r.len(), k, n));
+            }
+        });
+        out
+    }
+
+    /// Matrix-vector product `self · x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// `selfᵀ · x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.rows, x.len());
+        let mut out = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                for (o, &a) in out.iter_mut().zip(self.row(i)) {
+                    *o += xi * a;
+                }
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+}
+
+/// Compute rows `[row0, row0+nrows)` of `A·Bᵀ` into `chunk`.
+fn matmul_bt_block(
+    a: &[f64],
+    b: &[f64],
+    chunk: &mut [f64],
+    row0: usize,
+    nrows: usize,
+    k: usize,
+    n: usize,
+) {
+    // 4-column unrolling over B rows; inner dot vectorizes.
+    for li in 0..nrows {
+        let arow = &a[(row0 + li) * k..(row0 + li + 1) * k];
+        let orow = &mut chunk[li * n..(li + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &b[j * k..(j + 1) * k];
+            let b1 = &b[(j + 1) * k..(j + 2) * k];
+            let b2 = &b[(j + 2) * k..(j + 3) * k];
+            let b3 = &b[(j + 3) * k..(j + 4) * k];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for t in 0..k {
+                let av = arow[t];
+                s0 += av * b0[t];
+                s1 += av * b1[t];
+                s2 += av * b2[t];
+                s3 += av * b3[t];
+            }
+            orow[j] = s0;
+            orow[j + 1] = s1;
+            orow[j + 2] = s2;
+            orow[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            orow[j] = dot(arow, &b[j * k..(j + 1) * k]);
+            j += 1;
+        }
+    }
+}
+
+/// Dense dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Squared euclidean distance between two vectors.
+#[inline]
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{self, gen, Config};
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for t in 0..a.cols {
+                    s += a.at(i, t) * b.at(t, j);
+                }
+                *c.at_mut(i, j) = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_small_exact() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn prop_matmul_bt_matches_naive() {
+        testing::check("matmul_bt == naive", Config::default().cases(24).max_size(40), |rng, size| {
+            let (m, k, n) = (1 + rng.below(size), 1 + rng.below(size), 1 + rng.below(size));
+            let a = Mat::from_vec(m, k, gen::mat_normal(rng, m, k));
+            let b = Mat::from_vec(n, k, gen::mat_normal(rng, n, k));
+            let fast = a.matmul_bt(&b);
+            let slow = naive_matmul(&a, &b.transpose());
+            testing::all_close(&fast.data, &slow.data, 1e-10)
+        });
+    }
+
+    #[test]
+    fn prop_transpose_involution() {
+        testing::check("transpose twice = id", Config::default().cases(16), |rng, size| {
+            let (m, n) = (1 + rng.below(size), 1 + rng.below(size));
+            let a = Mat::from_vec(m, n, gen::mat_normal(rng, m, n));
+            if a.transpose().transpose() == a {
+                Ok(())
+            } else {
+                Err("mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    fn matvec_roundtrips() {
+        let mut rng = Rng::new(9);
+        let a = Mat::from_vec(5, 3, gen::mat_normal(&mut rng, 5, 3));
+        let x = gen::vec_normal(&mut rng, 3);
+        let y = a.matvec(&x);
+        // Compare against matmul with x as a column.
+        let xm = Mat::from_vec(3, 1, x.clone());
+        let ym = a.matmul(&xm);
+        testing::all_close(&y, &ym.data, 1e-12).unwrap();
+        // matvec_t == transpose().matvec
+        let z = gen::vec_normal(&mut rng, 5);
+        let t1 = a.matvec_t(&z);
+        let t2 = a.transpose().matvec(&z);
+        testing::all_close(&t1, &t2, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(1);
+        let a = Mat::from_vec(4, 4, gen::mat_normal(&mut rng, 4, 4));
+        let i = Mat::eye(4);
+        testing::all_close(&a.matmul(&i).data, &a.data, 1e-14).unwrap();
+        testing::all_close(&i.matmul(&a).data, &a.data, 1e-14).unwrap();
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(dot(&[1., 2.], &[3., 4.]), 11.);
+        assert_eq!(dist2(&[0., 0.], &[3., 4.]), 25.);
+        let mut y = vec![1., 1.];
+        axpy(2.0, &[1., 2.], &mut y);
+        assert_eq!(y, vec![3., 5.]);
+        assert!((norm2(&[3., 4.]) - 5.0).abs() < 1e-15);
+    }
+}

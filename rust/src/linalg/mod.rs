@@ -1,0 +1,18 @@
+//! Dense + sparse linear algebra substrate (BLAS/LAPACK substitute).
+//!
+//! - [`matrix`] — row-major dense matrices, blocked threaded `A·Bᵀ`.
+//! - [`complex`] — split-layout complex vectors (sketches, atoms).
+//! - [`solve`] — Cholesky, triangular solves, ridge least squares.
+//! - [`nnls`] — Lawson–Hanson non-negative least squares (CLOMPR steps 3–4).
+//! - [`sparse`] — CSR matrices + normalized graph Laplacian.
+//! - [`eigen`] — tridiagonal QL and Lanczos (spectral embedding).
+
+pub mod complex;
+pub mod eigen;
+pub mod matrix;
+pub mod nnls;
+pub mod solve;
+pub mod sparse;
+
+pub use complex::CVec;
+pub use matrix::Mat;

@@ -1,0 +1,241 @@
+//! Non-negative least squares, `min_{x ≥ 0} ‖A·x − b‖²`.
+//!
+//! Lawson–Hanson active-set algorithm (1974), the same solver Matlab's
+//! `lsqnonneg` implements — CLOMPR's steps 3 and 4 call this with the
+//! real-stacked complex dictionary `[Re A; Im A] ∈ R^{2m×|C|}`.
+//!
+//! PERF: the solver works entirely on the *normal equations*: `G = AᵀA`
+//! and `h = Aᵀb` are computed once (`O(m·p²)`), after which every
+//! active-set iteration costs only `O(p³)` on the (tiny) passive subset —
+//! for CLOMPR p ≤ 2K ≈ 64 while 2m ≈ 2000–8000. This took the per-call
+//! cost from 18.6 ms to well under 1 ms (EXPERIMENTS.md §Perf).
+
+use super::matrix::Mat;
+use super::solve::solve_spd;
+
+/// Solve `min_{x ≥ 0} ‖A·x − b‖²` with the Lawson–Hanson active-set method.
+pub fn nnls(a: &Mat, b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.rows, b.len());
+    let p = a.cols;
+    if p == 0 {
+        return Vec::new();
+    }
+    // Normal equations, computed once.
+    let g = gram(a);
+    let h = a.matvec_t(b);
+    nnls_gram(&g, &h)
+}
+
+/// NNLS given the Gram matrix `G = AᵀA` and `h = Aᵀb` directly.
+pub fn nnls_gram(g: &Mat, h: &[f64]) -> Vec<f64> {
+    let p = h.len();
+    assert_eq!(g.rows, p);
+    assert_eq!(g.cols, p);
+    if p == 0 {
+        return Vec::new();
+    }
+    let mut x = vec![0.0; p];
+    let mut passive = vec![false; p];
+    let scale = (0..p).map(|i| g.at(i, i)).fold(0.0f64, f64::max).max(1e-300);
+    let tol = 1e-12 * scale * h.iter().map(|v| v.abs()).fold(1.0, f64::max);
+    let max_outer = 3 * p + 30;
+
+    for _outer in 0..max_outer {
+        // Gradient of 0.5‖Ax−b‖² is Gx − h; w = h − Gx.
+        let gx = g.matvec(&x);
+        let mut best: Option<(usize, f64)> = None;
+        for j in 0..p {
+            if !passive[j] {
+                let wj = h[j] - gx[j];
+                if wj > tol && best.map(|(_, bw)| wj > bw).unwrap_or(true) {
+                    best = Some((j, wj));
+                }
+            }
+        }
+        let Some((j_enter, _)) = best else { break };
+        passive[j_enter] = true;
+
+        // Inner loop: solve the unconstrained subproblem on the passive
+        // set; step back and drop variables that go non-positive.
+        loop {
+            let idx: Vec<usize> = (0..p).filter(|&j| passive[j]).collect();
+            let z = solve_subset(g, h, &idx);
+            if z.iter().all(|&v| v > 1e-12) {
+                for (t, &j) in idx.iter().enumerate() {
+                    x[j] = z[t];
+                }
+                break;
+            }
+            let mut alpha = f64::INFINITY;
+            for (t, &j) in idx.iter().enumerate() {
+                if z[t] <= 1e-12 {
+                    let denom = x[j] - z[t];
+                    if denom > 0.0 {
+                        alpha = alpha.min(x[j] / denom);
+                    } else {
+                        alpha = 0.0;
+                    }
+                }
+            }
+            let alpha = alpha.clamp(0.0, 1.0);
+            for (t, &j) in idx.iter().enumerate() {
+                x[j] += alpha * (z[t] - x[j]);
+                if x[j] <= 1e-12 {
+                    x[j] = 0.0;
+                    passive[j] = false;
+                }
+            }
+            if idx.iter().all(|&j| !passive[j]) {
+                break;
+            }
+        }
+    }
+    x
+}
+
+/// Gram matrix `AᵀA` (symmetric; computed blocked).
+fn gram(a: &Mat) -> Mat {
+    let p = a.cols;
+    let mut g = Mat::zeros(p, p);
+    // Accumulate row-by-row: G += a_rowᵀ a_row (cache friendly over A).
+    for i in 0..a.rows {
+        let row = a.row(i);
+        for j in 0..p {
+            let rj = row[j];
+            if rj != 0.0 {
+                let grow = g.row_mut(j);
+                for l in 0..p {
+                    grow[l] += rj * row[l];
+                }
+            }
+        }
+    }
+    g
+}
+
+/// Solve the unconstrained normal equations on a subset of columns with a
+/// small ridge for rank-deficient subsets.
+fn solve_subset(g: &Mat, h: &[f64], idx: &[usize]) -> Vec<f64> {
+    let q = idx.len();
+    let mut gs = Mat::zeros(q, q);
+    let mut hs = vec![0.0; q];
+    let trace_mean =
+        idx.iter().map(|&j| g.at(j, j)).sum::<f64>().max(1e-300) / q.max(1) as f64;
+    for (a, &ja) in idx.iter().enumerate() {
+        hs[a] = h[ja];
+        for (b, &jb) in idx.iter().enumerate() {
+            *gs.at_mut(a, b) = g.at(ja, jb);
+        }
+        *gs.at_mut(a, a) += 1e-12 * trace_mean;
+    }
+    solve_spd(&gs, &hs).unwrap_or_else(|| vec![0.0; q])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{self, gen, Config};
+    use crate::util::rng::Rng;
+
+    fn residual_sq(a: &Mat, x: &[f64], b: &[f64]) -> f64 {
+        (0..a.rows)
+            .map(|i| {
+                let pred: f64 = (0..a.cols).map(|j| a.at(i, j) * x[j]).sum();
+                (pred - b[i]).powi(2)
+            })
+            .sum()
+    }
+
+    #[test]
+    fn recovers_nonnegative_solution() {
+        let mut rng = Rng::new(5);
+        let (m, n) = (40, 6);
+        let a = Mat::from_vec(m, n, gen::mat_normal(&mut rng, m, n));
+        let x_true: Vec<f64> =
+            (0..n).map(|j| if j % 2 == 0 { rng.uniform() + 0.5 } else { 0.0 }).collect();
+        let b = a.matvec(&x_true);
+        let x = nnls(&a, &b);
+        testing::all_close(&x, &x_true, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn clamps_when_unconstrained_solution_negative() {
+        // A = I, b = [-1, 2] → x* = [0, 2]
+        let a = Mat::eye(2);
+        let x = nnls(&a, &[-1.0, 2.0]);
+        testing::all_close(&x, &[0.0, 2.0], 1e-10).unwrap();
+    }
+
+    #[test]
+    fn prop_nonnegativity_and_kkt() {
+        testing::check("nnls kkt", Config::default().cases(24).max_size(20), |rng, size| {
+            let m = 2 * size + 2;
+            let n = 1 + rng.below(size.min(12) + 1);
+            let a = Mat::from_vec(m, n, gen::mat_normal(rng, m, n));
+            let b = gen::vec_normal(rng, m);
+            let x = nnls(&a, &b);
+            if x.iter().any(|&v| v < 0.0) {
+                return Err(format!("negative entry in {x:?}"));
+            }
+            // KKT: g = Aᵀ(Ax−b); g_j ≈ 0 for x_j > 0, g_j ≥ -tol for x_j = 0.
+            let mut r = vec![0.0; m];
+            for i in 0..m {
+                let pred: f64 = (0..n).map(|j| a.at(i, j) * x[j]).sum();
+                r[i] = pred - b[i];
+            }
+            let g = a.matvec_t(&r);
+            for j in 0..n {
+                if x[j] > 1e-8 {
+                    if g[j].abs() > 1e-4 {
+                        return Err(format!("active grad {j}: {}", g[j]));
+                    }
+                } else if g[j] < -1e-4 {
+                    return Err(format!("violated dual feasibility {j}: {}", g[j]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_interior_solution_exact() {
+        testing::check("nnls optimality", Config::default().cases(20).max_size(16), |rng, size| {
+            let m = 2 * size + 4;
+            let n = 1 + rng.below(size.min(10) + 1);
+            let a = Mat::from_vec(m, n, gen::mat_normal(rng, m, n));
+            let x_true: Vec<f64> = (0..n).map(|_| 0.2 + rng.uniform()).collect();
+            let b = a.matvec(&x_true);
+            let x = nnls(&a, &b);
+            let res = residual_sq(&a, &x, &b);
+            if res > 1e-8 {
+                return Err(format!("interior case residual {res}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn zero_columns_ok() {
+        let a = Mat::zeros(3, 2);
+        let x = nnls(&a, &[1.0, 2.0, 3.0]);
+        assert_eq!(x, vec![0.0, 0.0]);
+        let a2 = Mat::zeros(3, 0);
+        assert!(nnls(&a2, &[1.0, 2.0, 3.0]).is_empty());
+    }
+
+    #[test]
+    fn gram_path_equals_direct_path() {
+        let mut rng = Rng::new(9);
+        let (m, n) = (60, 8);
+        let a = Mat::from_vec(m, n, gen::mat_normal(&mut rng, m, n));
+        let b = gen::vec_normal(&mut rng, m);
+        let x1 = nnls(&a, &b);
+        let g = {
+            let at = a.transpose();
+            at.matmul(&a)
+        };
+        let h = a.matvec_t(&b);
+        let x2 = nnls_gram(&g, &h);
+        testing::all_close(&x1, &x2, 1e-8).unwrap();
+    }
+}

@@ -1,0 +1,152 @@
+//! Small dense solvers: Cholesky factorization, triangular solves, and a
+//! ridge-regularized least-squares helper. These back the NNLS active-set
+//! solver and the σ² frequency-scale regression; dimensions are tiny
+//! (≤ 2K ≈ 64 unknowns), so numerically-careful simplicity wins.
+
+use super::matrix::Mat;
+
+/// Cholesky factor `L` (lower triangular, `A = L·Lᵀ`) of an SPD matrix.
+/// Returns `None` if the matrix is not positive definite (pivot ≤ tol).
+pub fn cholesky(a: &Mat) -> Option<Mat> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at(i, j);
+            for t in 0..j {
+                s -= l.at(i, t) * l.at(j, t);
+            }
+            if i == j {
+                if s <= 1e-14 {
+                    return None;
+                }
+                *l.at_mut(i, j) = s.sqrt();
+            } else {
+                *l.at_mut(i, j) = s / l.at(j, j);
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `L·y = b` (lower triangular, forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for j in 0..i {
+            s -= l.at(i, j) * y[j];
+        }
+        y[i] = s / l.at(i, i);
+    }
+    y
+}
+
+/// Solve `Lᵀ·x = y` (backward substitution on a lower-triangular factor).
+pub fn solve_lower_t(l: &Mat, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for j in (i + 1)..n {
+            s -= l.at(j, i) * x[j];
+        }
+        x[i] = s / l.at(i, i);
+    }
+    x
+}
+
+/// Solve the SPD system `A·x = b` via Cholesky.
+pub fn solve_spd(a: &Mat, b: &[f64]) -> Option<Vec<f64>> {
+    let l = cholesky(a)?;
+    Some(solve_lower_t(&l, &solve_lower(&l, b)))
+}
+
+/// Least squares `min ‖A·x − b‖²` via (ridge-regularized) normal equations.
+/// `ridge` is added to the diagonal of `AᵀA` scaled by its trace mean, so
+/// rank-deficient systems still return a finite minimizer.
+pub fn lstsq(a: &Mat, b: &[f64], ridge: f64) -> Vec<f64> {
+    assert_eq!(a.rows, b.len());
+    let at = a.transpose();
+    let mut ata = at.matmul(a);
+    let n = ata.rows;
+    let trace_mean =
+        (0..n).map(|i| ata.at(i, i)).sum::<f64>().max(1e-300) / n.max(1) as f64;
+    let eps = (ridge.max(1e-12)) * trace_mean;
+    for i in 0..n {
+        *ata.at_mut(i, i) += eps;
+    }
+    let atb = at.matvec(b);
+    solve_spd(&ata, &atb).unwrap_or_else(|| vec![0.0; n])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{self, gen, Config};
+    use crate::util::rng::Rng;
+
+    fn random_spd(rng: &mut Rng, n: usize) -> Mat {
+        let b = Mat::from_vec(n, n, gen::mat_normal(rng, n, n));
+        let mut a = b.transpose().matmul(&b);
+        for i in 0..n {
+            *a.at_mut(i, i) += n as f64; // well-conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(3);
+        for n in [1usize, 2, 5, 12] {
+            let a = random_spd(&mut rng, n);
+            let l = cholesky(&a).expect("spd");
+            let llt = l.matmul(&l.transpose());
+            testing::all_close(&llt.data, &a.data, 1e-9).unwrap();
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigvals 3, -1
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn prop_solve_spd_residual_small() {
+        testing::check("solve_spd residual", Config::default().cases(24).max_size(16), |rng, size| {
+            let n = 1 + rng.below(size.min(16));
+            let a = random_spd(rng, n);
+            let x_true = gen::vec_normal(rng, n);
+            let b = a.matvec(&x_true);
+            let x = solve_spd(&a, &b).ok_or("not spd")?;
+            testing::all_close(&x, &x_true, 1e-7)
+        });
+    }
+
+    #[test]
+    fn lstsq_overdetermined_recovers() {
+        let mut rng = Rng::new(11);
+        let (m, n) = (30, 4);
+        let a = Mat::from_vec(m, n, gen::mat_normal(&mut rng, m, n));
+        let x_true = gen::vec_normal(&mut rng, n);
+        let b = a.matvec(&x_true);
+        let x = lstsq(&a, &b, 1e-12);
+        testing::all_close(&x, &x_true, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn lstsq_rank_deficient_is_finite() {
+        // Duplicate columns: infinitely many minimizers; ridge picks one, finite.
+        let a = Mat::from_vec(4, 2, vec![1.0, 1.0, 2.0, 2.0, 3.0, 3.0, 4.0, 4.0]);
+        let b = vec![2.0, 4.0, 6.0, 8.0];
+        let x = lstsq(&a, &b, 1e-8);
+        assert!(x.iter().all(|v| v.is_finite()));
+        // Residual should be ~0 since b is in the column space.
+        let r: f64 =
+            (0..4).map(|i| (a.at(i, 0) * x[0] + a.at(i, 1) * x[1] - b[i]).powi(2)).sum();
+        assert!(r < 1e-6, "residual {r}");
+    }
+}

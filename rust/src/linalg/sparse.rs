@@ -1,0 +1,217 @@
+//! Compressed sparse row (CSR) matrices.
+//!
+//! Backs the spectral-clustering substrate: kNN adjacency, normalized
+//! Laplacian, and the (threaded) mat-vec inside the Lanczos eigensolver.
+
+use crate::util::parallel;
+
+/// CSR sparse matrix.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<usize>,
+    pub indices: Vec<usize>,
+    pub data: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from (row, col, value) triplets; duplicate entries are summed.
+    pub fn from_triplets(rows: usize, cols: usize, mut t: Vec<(usize, usize, f64)>) -> Csr {
+        t.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(t.len());
+        let mut data: Vec<f64> = Vec::with_capacity(t.len());
+        let mut last: Option<(usize, usize)> = None;
+        for (r, c, v) in t {
+            assert!(r < rows && c < cols, "triplet out of range");
+            if last == Some((r, c)) {
+                *data.last_mut().unwrap() += v;
+            } else {
+                indices.push(c);
+                data.push(v);
+                indptr[r + 1] += 1;
+                last = Some((r, c));
+            }
+        }
+        for i in 0..rows {
+            indptr[i + 1] += indptr[i];
+        }
+        Csr { rows, cols, indptr, indices, data }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row slice accessors.
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.data[a..b])
+    }
+
+    /// `y = A·x`, parallel over row blocks.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        let threads = parallel::default_threads();
+        let ranges = parallel::split_ranges(self.rows, threads);
+        std::thread::scope(|s| {
+            let mut rest: &mut [f64] = &mut y;
+            for r in ranges {
+                let (head, tail) = rest.split_at_mut(r.len());
+                rest = tail;
+                s.spawn(move || {
+                    for (li, i) in r.clone().enumerate() {
+                        let (cols, vals) = self.row(i);
+                        let mut acc = 0.0;
+                        for (c, v) in cols.iter().zip(vals) {
+                            acc += v * x[*c];
+                        }
+                        head[li] = acc;
+                    }
+                });
+            }
+        });
+        y
+    }
+
+    /// Make symmetric: `(A + Aᵀ)/2` structurally (union of patterns).
+    pub fn symmetrize(&self) -> Csr {
+        let mut t = Vec::with_capacity(self.nnz() * 2);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                t.push((i, *c, 0.5 * v));
+                t.push((*c, i, 0.5 * v));
+            }
+        }
+        Csr::from_triplets(self.rows.max(self.cols), self.rows.max(self.cols), t)
+    }
+
+    /// Row sums (weighted degrees for an adjacency matrix).
+    pub fn row_sums(&self) -> Vec<f64> {
+        (0..self.rows).map(|i| self.row(i).1.iter().sum()).collect()
+    }
+
+    /// Dense representation (tests only; avoid on large matrices).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut d = vec![0.0; self.rows * self.cols];
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                d[i * self.cols + c] = *v;
+            }
+        }
+        d
+    }
+}
+
+/// Symmetric normalized Laplacian `L = I − D^{-1/2} A D^{-1/2}` of a
+/// (symmetric, non-negative) adjacency matrix. Isolated vertices get an
+/// identity row (their degree term is defined as 0).
+pub fn normalized_laplacian(adj: &Csr) -> Csr {
+    assert_eq!(adj.rows, adj.cols);
+    let deg = adj.row_sums();
+    let dinv_sqrt: Vec<f64> =
+        deg.iter().map(|&d| if d > 0.0 { 1.0 / d.sqrt() } else { 0.0 }).collect();
+    let mut t = Vec::with_capacity(adj.nnz() + adj.rows);
+    for i in 0..adj.rows {
+        t.push((i, i, 1.0));
+        let (cols, vals) = adj.row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            let w = v * dinv_sqrt[i] * dinv_sqrt[*c];
+            if w != 0.0 {
+                t.push((i, *c, -w));
+            }
+        }
+    }
+    Csr::from_triplets(adj.rows, adj.cols, t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{self, Config};
+
+    #[test]
+    fn triplets_sum_duplicates() {
+        let a = Csr::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 0, 2.0), (1, 0, 4.0)]);
+        assert_eq!(a.nnz(), 2);
+        assert_eq!(a.to_dense(), vec![3.0, 0.0, 4.0, 0.0]);
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let a = Csr::from_triplets(
+            3,
+            3,
+            vec![(0, 1, 2.0), (1, 0, -1.0), (1, 2, 0.5), (2, 2, 3.0)],
+        );
+        let x = vec![1.0, 2.0, 3.0];
+        let y = a.matvec(&x);
+        assert_eq!(y, vec![4.0, 0.5, 9.0]);
+    }
+
+    #[test]
+    fn prop_matvec_linear() {
+        testing::check("csr matvec linearity", Config::default().cases(20).max_size(40), |rng, size| {
+            let n = 2 + rng.below(size + 1);
+            let nnz = 1 + rng.below(3 * n);
+            let t: Vec<_> = (0..nnz)
+                .map(|_| (rng.below(n), rng.below(n), rng.normal()))
+                .collect();
+            let a = Csr::from_triplets(n, n, t);
+            let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let lhs = a.matvec(&x.iter().zip(&y).map(|(a, b)| a + b).collect::<Vec<_>>());
+            let ax = a.matvec(&x);
+            let ay = a.matvec(&y);
+            let rhs: Vec<f64> = ax.iter().zip(&ay).map(|(a, b)| a + b).collect();
+            testing::all_close(&lhs, &rhs, 1e-10)
+        });
+    }
+
+    #[test]
+    fn symmetrize_is_symmetric() {
+        let a = Csr::from_triplets(3, 3, vec![(0, 1, 2.0), (2, 0, 4.0)]);
+        let s = a.symmetrize();
+        let d = s.to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(d[i * 3 + j], d[j * 3 + i]);
+            }
+        }
+        assert_eq!(d[1], 1.0); // (0,1): 2/2
+        assert_eq!(d[2], 2.0); // (0,2): 4/2
+    }
+
+    #[test]
+    fn laplacian_properties() {
+        // path graph 0-1-2 with unit weights
+        let adj = Csr::from_triplets(
+            3,
+            3,
+            vec![(0, 1, 1.0), (1, 0, 1.0), (1, 2, 1.0), (2, 1, 1.0)],
+        );
+        let l = normalized_laplacian(&adj);
+        // L · D^{1/2}·1 = 0 (constant-in-D^{1/2} vector is the null space)
+        let deg = adj.row_sums();
+        let v: Vec<f64> = deg.iter().map(|d| d.sqrt()).collect();
+        let lv = l.matvec(&v);
+        testing::all_close(&lv, &[0.0, 0.0, 0.0], 1e-12).unwrap();
+        // diagonal is 1 for non-isolated vertices
+        let d = l.to_dense();
+        for i in 0..3 {
+            assert!((d[i * 3 + i] - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn laplacian_isolated_vertex() {
+        let adj = Csr::from_triplets(2, 2, vec![(0, 0, 0.0)]);
+        let l = normalized_laplacian(&adj);
+        let d = l.to_dense();
+        assert_eq!(d, vec![1.0, 0.0, 0.0, 1.0]);
+    }
+}

@@ -1,0 +1,306 @@
+//! `ckm` — the compressive K-means coordinator CLI.
+//!
+//! Subcommands:
+//!   run     end-to-end pipeline (stream → sketch → CLOMPR → report)
+//!   exp     regenerate a paper figure: fig1 | fig2 | fig3 | fig4 | ablate
+//!   gen     generate a synthetic dataset file
+//!   sketch  sketch a dataset file (demonstrates sketch-and-discard)
+//!   info    show version, artifact manifest and backends
+
+use ckm::baselines::{kmeans, KmInit, KmOptions};
+use ckm::ckm::InitStrategy;
+use ckm::coordinator::{run_pipeline, Backend, PipelineConfig, SketcherConfig};
+use ckm::data::dataset::{Dataset, PointSource, SliceSource};
+use ckm::data::gmm::GmmConfig;
+use ckm::experiments as exp;
+use ckm::metrics::sse;
+use ckm::sketch::RadiusKind;
+use ckm::util::cli::Args;
+use ckm::util::logging::Stopwatch;
+use ckm::util::rng::Rng;
+
+fn main() {
+    ckm::util::logging::init();
+    let args = Args::from_env();
+    let result = match args.command.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("gen") => cmd_gen(&args),
+        Some("sketch") => cmd_sketch(&args),
+        Some("info") => cmd_info(&args),
+        Some(other) => {
+            eprintln!("unknown command '{other}'");
+            usage();
+            std::process::exit(2);
+        }
+        None => {
+            usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "ckm {} — compressive K-means (Keriven et al. 2016)\n\
+         \n\
+         usage: ckm <command> [options]\n\
+         \n\
+         commands:\n\
+           run     --k 10 --m 1000 --n 10 --npoints 300000 [--file data.bin]\n\
+                   [--backend native|pjrt] [--workers 4] [--replicates 1]\n\
+                   [--strategy range|sample|k++] [--sigma2 X] [--seed S]\n\
+                   [--compare-kmeans]\n\
+           exp     fig1|fig2|fig3|fig4|ablate [--runs R] [--full] [--persist]\n\
+           gen     --out data.bin --k 10 --n 10 --npoints 100000 [--seed S]\n\
+           sketch  --file data.bin --m 1000 --out sketch.json\n\
+           info",
+        ckm::version()
+    );
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let k = args.usize_or("k", 10);
+    let m = args.usize_or("m", 1000);
+    let n_dims = args.usize_or("n", 10);
+    let n_points = args.usize_or("npoints", 300_000);
+    let seed = args.u64_or("seed", 0);
+    let mut cfg = PipelineConfig::new(k, m);
+    cfg.backend = Backend::parse(&args.str_or("backend", "native"))?;
+    cfg.replicates = args.usize_or("replicates", 1);
+    cfg.strategy = InitStrategy::parse(&args.str_or("strategy", "range"))?;
+    cfg.radius = RadiusKind::parse(&args.str_or("radius", "adapted"))?;
+    cfg.seed = seed;
+    cfg.sketcher = SketcherConfig {
+        n_workers: args.usize_or("workers", 4),
+        chunk_rows: args.usize_or("chunk-rows", 4096),
+        queue_depth: args.usize_or("queue-depth", 8),
+    };
+    if let Some(s2) = args.opt("sigma2") {
+        cfg.sigma2 = Some(s2.parse()?);
+    }
+    let file = args.opt("file").map(|s| s.to_string());
+    let compare = args.flag("compare-kmeans");
+    args.finish()?;
+
+    let t_total = Stopwatch::start();
+    let (res, material): (_, Option<Dataset>) = match file {
+        Some(path) => {
+            let ds = Dataset::load(std::path::Path::new(&path))?;
+            println!("loaded {}: N={} n={}", path, ds.n_points(), ds.n_dims);
+            let sample_len = ds.points.len().min(5000 * ds.n_dims);
+            let sample = ds.points[..sample_len].to_vec();
+            let mut src = SliceSource::new(&ds.points, ds.n_dims);
+            let r = run_pipeline(&cfg, &mut src, Some(&sample))?;
+            (r, Some(ds))
+        }
+        None => {
+            println!("synthetic GMM: K={k} n={n_dims} N={n_points}");
+            let data_cfg = GmmConfig::paper_default(k, n_dims, n_points);
+            // σ² sample from a sibling stream when not given.
+            let mut sample = vec![0.0; 5000.min(n_points) * n_dims];
+            let got = data_cfg.stream(seed).next_chunk(&mut sample);
+            sample.truncate(got * n_dims);
+            let mut src = data_cfg.stream(seed);
+            let r = run_pipeline(&cfg, &mut src, Some(&sample))?;
+            (r, None)
+        }
+    };
+
+    println!(
+        "sketched N={} in {:.2}s ({:.2} Mpts/s, backend={}, {} workers)",
+        res.n_points,
+        res.sketch_stats.wall_seconds,
+        res.sketch_stats.throughput() / 1e6,
+        res.sketch_stats.backend,
+        res.sketch_stats.rows_per_worker.len(),
+    );
+    println!(
+        "solved: cost={:.4e}  sigma2={:.3}  replicate costs={:?}",
+        res.solution.cost, res.sigma2, res.replicate_costs
+    );
+    println!("weights: {:?}", res.solution.normalized_weights());
+    for kk in 0..res.solution.centroids.rows.min(5) {
+        println!("  c[{kk}] = {:?}", res.solution.centroids.row(kk));
+    }
+    if res.solution.centroids.rows > 5 {
+        println!("  ... ({} total)", res.solution.centroids.rows);
+    }
+    if let Some(ds) = material {
+        let s = sse(&ds.points, ds.n_dims, &res.solution.centroids);
+        println!("SSE/N = {:.4}", s / ds.n_points() as f64);
+        if compare {
+            let sw = Stopwatch::start();
+            let km = kmeans(
+                &ds.points,
+                ds.n_dims,
+                k,
+                &KmOptions { init: KmInit::Range, replicates: 5, seed: seed + 1, ..Default::default() },
+            );
+            println!(
+                "kmeans x5: SSE/N = {:.4} in {:.2}s  (rel SSE = {:.3})",
+                km.sse / ds.n_points() as f64,
+                sw.seconds(),
+                s / km.sse
+            );
+        }
+    }
+    println!("total {:.2}s", t_total.seconds());
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> anyhow::Result<()> {
+    let which = args
+        .positionals()
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("exp needs a figure: fig1|fig2|fig3|fig4|ablate"))?;
+    let persist = args.flag("persist");
+    let full = args.flag("full");
+    let runs = args.opt("runs").map(|r| r.parse::<usize>()).transpose()?;
+    let seed = args.u64_or("seed", 42);
+
+    match which.as_str() {
+        "fig1" => {
+            let mut cfg = exp::fig1::Fig1Config { seed, ..Default::default() };
+            if full {
+                cfg.n_points = 300_000;
+                cfg.runs = 100;
+                cfg.digit_images = 3000;
+            }
+            if let Some(r) = runs {
+                cfg.runs = r;
+            }
+            args.finish()?;
+            exp::fig1::run(&cfg).emit("fig1", persist);
+        }
+        "fig2" => {
+            let mut cfg = exp::fig2::Fig2Config { seed, ..Default::default() };
+            if full {
+                cfg.n_points = 300_000;
+                cfg.runs = 10;
+                cfg.ks = vec![2, 5, 10, 15, 20, 30];
+                cfg.ns = vec![2, 4, 6, 10, 14, 20];
+                cfg.ratios = vec![0.5, 1.0, 2.0, 3.0, 5.0, 7.0, 10.0];
+            }
+            if let Some(r) = runs {
+                cfg.runs = r;
+            }
+            args.finish()?;
+            exp::fig2::run(&cfg).emit("fig2", persist);
+        }
+        "fig3" => {
+            let mut cfg = exp::fig3::Fig3Config { seed, ..Default::default() };
+            if full {
+                cfg.sizes = vec![2000, 6000, 20_000];
+                cfg.runs = 20;
+            }
+            if let Some(r) = runs {
+                cfg.runs = r;
+            }
+            args.finish()?;
+            exp::fig3::run(&cfg).emit("fig3", persist);
+        }
+        "fig4" => {
+            let mut cfg = exp::fig4::Fig4Config { seed, ..Default::default() };
+            if full {
+                cfg.n_sweep = vec![10_000, 30_000, 100_000, 300_000, 1_000_000, 10_000_000];
+                cfg.ms = vec![250, 1000, 4000];
+            }
+            args.finish()?;
+            exp::fig4::run(&cfg).emit("fig4", persist);
+        }
+        "ablate" => {
+            let mut cfg = exp::ablate::AblateConfig { seed, ..Default::default() };
+            if let Some(r) = runs {
+                cfg.runs = r;
+            }
+            if full {
+                cfg.n_points = 100_000;
+                cfg.runs = 10;
+            }
+            args.finish()?;
+            for t in exp::ablate::run(&cfg) {
+                t.emit("ablate", persist);
+            }
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+    let out = args
+        .opt("out")
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("gen needs --out"))?;
+    let k = args.usize_or("k", 10);
+    let n_dims = args.usize_or("n", 10);
+    let n_points = args.usize_or("npoints", 100_000);
+    let seed = args.u64_or("seed", 0);
+    args.finish()?;
+    let mut rng = Rng::new(seed);
+    let g = GmmConfig::paper_default(k, n_dims, n_points).generate(&mut rng);
+    g.dataset.save(std::path::Path::new(&out))?;
+    println!("wrote {out}: N={n_points} n={n_dims} K={k}");
+    Ok(())
+}
+
+fn cmd_sketch(args: &Args) -> anyhow::Result<()> {
+    let file = args
+        .opt("file")
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("sketch needs --file"))?;
+    let out = args.str_or("out", "sketch.json");
+    let m = args.usize_or("m", 1000);
+    let seed = args.u64_or("seed", 0);
+    args.finish()?;
+    let ds = Dataset::load(std::path::Path::new(&file))?;
+    let sk = ckm::sketch::sketch_dataset(&ds.points, ds.n_dims, m, seed, None);
+    use ckm::util::json::Json;
+    let json = Json::obj(vec![
+        ("m", Json::Num(m as f64)),
+        ("n_dims", Json::Num(ds.n_dims as f64)),
+        ("count", Json::Num(sk.count as f64)),
+        ("sigma2", Json::Num(sk.sigma2)),
+        ("re", Json::arr_f64(&sk.z.re)),
+        ("im", Json::arr_f64(&sk.z.im)),
+        ("lo", Json::arr_f64(&sk.bounds.lo)),
+        ("hi", Json::arr_f64(&sk.bounds.hi)),
+    ]);
+    std::fs::write(&out, json.to_pretty())?;
+    println!(
+        "sketched {} points into {out} ({} complex moments, {}x compression)",
+        sk.count,
+        m,
+        (ds.points.len() * 8) / (m * 16)
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    args.finish()?;
+    println!("ckm {}", ckm::version());
+    let dir = ckm::runtime::PjrtRuntime::default_dir();
+    println!("artifacts dir: {dir:?}");
+    match ckm::runtime::Manifest::load(&dir) {
+        Ok(man) => {
+            println!(
+                "manifest: chunk_b={} n_pad={} k_pad={} ({} artifacts)",
+                man.chunk_b,
+                man.n_pad,
+                man.k_pad,
+                man.artifacts.len()
+            );
+            for a in man.artifacts.values() {
+                println!("  {:30} entry={:7} m={:5} iters={}", a.name, a.entry, a.m, a.iters);
+            }
+        }
+        Err(e) => println!("no artifacts ({e}); native backend only"),
+    }
+    Ok(())
+}

@@ -1,0 +1,159 @@
+//! Clustering quality metrics: SSE (eq. 1), Adjusted Rand Index (Fig. 3),
+//! NMI, plus the nearest-centroid labeller shared by all of them.
+
+use crate::baselines::lloyd::assign;
+use crate::linalg::Mat;
+
+/// Sum of squared errors of `points` against `centroids` (paper eq. 1).
+pub fn sse(points: &[f64], n_dims: usize, centroids: &Mat) -> f64 {
+    let n = points.len() / n_dims;
+    let mut labels = vec![0usize; n];
+    assign(points, n_dims, centroids, &mut labels)
+}
+
+/// Nearest-centroid labels for `points`.
+pub fn labels_for(points: &[f64], n_dims: usize, centroids: &Mat) -> Vec<usize> {
+    let n = points.len() / n_dims;
+    let mut labels = vec![0usize; n];
+    assign(points, n_dims, centroids, &mut labels);
+    labels
+}
+
+/// Contingency table between two labelings.
+fn contingency(a: &[usize], b: &[usize]) -> (Vec<Vec<f64>>, Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), b.len());
+    let ka = a.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+    let kb = b.iter().copied().max().map(|m| m + 1).unwrap_or(0);
+    let mut table = vec![vec![0.0; kb]; ka];
+    for (&x, &y) in a.iter().zip(b) {
+        table[x][y] += 1.0;
+    }
+    let rows: Vec<f64> = table.iter().map(|r| r.iter().sum()).collect();
+    let cols: Vec<f64> = (0..kb).map(|j| table.iter().map(|r| r[j]).sum()).collect();
+    (table, rows, cols)
+}
+
+fn choose2(x: f64) -> f64 {
+    x * (x - 1.0) / 2.0
+}
+
+/// Adjusted Rand Index (Hubert & Arabie 1985; paper's Fig. 3 metric).
+/// 1 = identical partitions (up to label permutation), ~0 = chance.
+pub fn adjusted_rand_index(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 1.0;
+    }
+    let (table, rows, cols) = contingency(a, b);
+    let sum_ij: f64 = table.iter().flatten().map(|&x| choose2(x)).sum();
+    let sum_a: f64 = rows.iter().map(|&x| choose2(x)).sum();
+    let sum_b: f64 = cols.iter().map(|&x| choose2(x)).sum();
+    let total = choose2(n);
+    let expected = sum_a * sum_b / total.max(1e-300);
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-300 {
+        return 1.0; // both partitions trivial
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Normalized Mutual Information (arithmetic normalization).
+pub fn nmi(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    if a.is_empty() {
+        return 1.0;
+    }
+    let (table, rows, cols) = contingency(a, b);
+    let mut mi = 0.0;
+    for (i, row) in table.iter().enumerate() {
+        for (j, &nij) in row.iter().enumerate() {
+            if nij > 0.0 {
+                mi += (nij / n) * ((n * nij) / (rows[i] * cols[j])).ln();
+            }
+        }
+    }
+    let h = |marg: &[f64]| -> f64 {
+        marg.iter().filter(|&&x| x > 0.0).map(|&x| -(x / n) * (x / n).ln()).sum()
+    };
+    let (ha, hb) = (h(&rows), h(&cols));
+    if ha + hb < 1e-300 {
+        return 1.0;
+    }
+    2.0 * mi / (ha + hb)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{self, gen, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn sse_zero_when_centroids_are_points() {
+        let pts = vec![1.0, 2.0, 3.0, 4.0];
+        let c = Mat::from_vec(2, 2, pts.clone());
+        assert_eq!(sse(&pts, 2, &c), 0.0);
+    }
+
+    #[test]
+    fn sse_single_centroid_is_variance_sum() {
+        let pts = vec![0.0, 2.0, 4.0]; // 1-d, centroid at 2 → 4 + 0 + 4
+        let c = Mat::from_vec(1, 1, vec![2.0]);
+        assert_eq!(sse(&pts, 1, &c), 8.0);
+    }
+
+    #[test]
+    fn ari_perfect_and_permuted() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a) - 1.0).abs() < 1e-12);
+        let perm = vec![2, 2, 0, 0, 1, 1];
+        assert!((adjusted_rand_index(&a, &perm) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_near_zero_for_random() {
+        let mut rng = Rng::new(0);
+        let a = gen::labels(&mut rng, 4000, 4);
+        let b = gen::labels(&mut rng, 4000, 4);
+        let v = adjusted_rand_index(&a, &b);
+        assert!(v.abs() < 0.03, "ari={v}");
+    }
+
+    #[test]
+    fn prop_ari_symmetric_and_bounded() {
+        testing::check("ari properties", Config::default().cases(24).max_size(100), |rng, size| {
+            let n = 2 + size;
+            let ka = 1 + rng.below(5);
+            let kb = 1 + rng.below(5);
+            let a = gen::labels(rng, n, ka);
+            let b = gen::labels(rng, n, kb);
+            let ab = adjusted_rand_index(&a, &b);
+            let ba = adjusted_rand_index(&b, &a);
+            testing::close(ab, ba, 1e-12)?;
+            if !(-1.0001..=1.0001).contains(&ab) {
+                return Err(format!("ari out of range: {ab}"));
+            }
+            testing::close(adjusted_rand_index(&a, &a), 1.0, 1e-12)
+        });
+    }
+
+    #[test]
+    fn nmi_perfect_random_bounds() {
+        let a = vec![0, 0, 1, 1];
+        assert!((nmi(&a, &a) - 1.0).abs() < 1e-12);
+        let mut rng = Rng::new(1);
+        let x = gen::labels(&mut rng, 5000, 3);
+        let y = gen::labels(&mut rng, 5000, 3);
+        let v = nmi(&x, &y);
+        assert!(v >= 0.0 && v < 0.05, "nmi={v}");
+    }
+
+    #[test]
+    fn labels_for_matches_nearest() {
+        let pts = vec![0.0, 0.9, 2.1];
+        let c = Mat::from_vec(2, 1, vec![0.0, 2.0]);
+        assert_eq!(labels_for(&pts, 1, &c), vec![0, 0, 1]);
+    }
+}

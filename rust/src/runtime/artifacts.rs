@@ -1,0 +1,165 @@
+//! AOT artifact manifest: what `python -m compile.aot` produced, with
+//! shapes, so the runtime can resolve `(entry, m)` → HLO file and validate
+//! inputs before handing them to PJRT.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one lowered entry point.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// Entry kind: "sketch" | "step1" | "step5" | "cost".
+    pub entry: String,
+    pub file: PathBuf,
+    pub m: usize,
+    pub n: usize,
+    /// K_pad for step5/cost; 0 otherwise.
+    pub k: usize,
+    /// Batch size for sketch; 0 otherwise.
+    pub b: usize,
+    /// Optimizer iterations baked into the scan (step1/step5).
+    pub iters: usize,
+    pub input_shapes: Vec<Vec<usize>>,
+    pub output_shapes: Vec<Vec<usize>>,
+}
+
+/// Parsed manifest.json.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub chunk_b: usize,
+    pub n_pad: usize,
+    pub k_pad: usize,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path:?}: {e}; run `make artifacts`"))?;
+        let root = Json::parse(&text)?;
+        let req_usize = |j: &Json, key: &str| -> anyhow::Result<usize> {
+            j.get(key).as_usize().ok_or_else(|| anyhow::anyhow!("manifest missing '{key}'"))
+        };
+        let mut artifacts = BTreeMap::new();
+        let arts = root
+            .get("artifacts")
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'artifacts'"))?;
+        for (name, meta) in arts {
+            let shapes = |key: &str| -> Vec<Vec<usize>> {
+                meta.get(key)
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|s| s.as_arr().unwrap_or(&[]).iter().filter_map(|d| d.as_usize()).collect())
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    name: name.clone(),
+                    entry: meta.get("entry").as_str().unwrap_or("").to_string(),
+                    file: dir.join(meta.get("file").as_str().unwrap_or("")),
+                    m: meta.get("m").as_usize().unwrap_or(0),
+                    n: meta.get("n").as_usize().unwrap_or(0),
+                    k: meta.get("k").as_usize().unwrap_or(0),
+                    b: meta.get("b").as_usize().unwrap_or(0),
+                    iters: meta.get("iters").as_usize().unwrap_or(0),
+                    input_shapes: shapes("inputs"),
+                    output_shapes: shapes("outputs"),
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            chunk_b: req_usize(&root, "chunk_b")?,
+            n_pad: req_usize(&root, "n_pad")?,
+            k_pad: req_usize(&root, "k_pad")?,
+            artifacts,
+        })
+    }
+
+    /// Smallest compiled m-bucket that fits `m` for the given entry kind,
+    /// or `None` if `m` exceeds every bucket.
+    pub fn bucket_for(&self, entry: &str, m: usize) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .values()
+            .filter(|a| a.entry == entry && a.m >= m)
+            .min_by_key(|a| a.m)
+    }
+
+    /// All m-buckets available for an entry kind (ascending).
+    pub fn buckets(&self, entry: &str) -> Vec<usize> {
+        let mut ms: Vec<usize> =
+            self.artifacts.values().filter(|a| a.entry == entry).map(|a| a.m).collect();
+        ms.sort_unstable();
+        ms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest_dir() -> PathBuf {
+        // tests run from the crate root
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_when_built() {
+        let dir = manifest_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.chunk_b, 4096);
+        assert_eq!(m.n_pad, 16);
+        assert_eq!(m.k_pad, 32);
+        assert!(m.artifacts.len() >= 9);
+        // every artifact file exists
+        for a in m.artifacts.values() {
+            assert!(a.file.exists(), "{:?} missing", a.file);
+            assert!(!a.input_shapes.is_empty());
+        }
+        // bucket resolution: m=500 → 1024 bucket for sketch
+        let b = m.bucket_for("sketch", 500).unwrap();
+        assert_eq!(b.m, 1024);
+        let b = m.bucket_for("sketch", 4096).unwrap();
+        assert_eq!(b.m, 4096);
+        assert!(m.bucket_for("sketch", 100_000).is_none());
+        assert_eq!(m.buckets("step1"), vec![256, 1024]);
+    }
+
+    #[test]
+    fn parse_synthetic_manifest() {
+        let dir = std::env::temp_dir().join(format!("ckm_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"chunk_b": 8, "n_pad": 4, "k_pad": 2, "artifacts": {
+                "sketch_tiny": {"entry": "sketch", "file": "sketch_tiny.hlo.txt",
+                    "m": 16, "n": 4, "b": 8,
+                    "inputs": [[8,4],[8],[16,4]], "outputs": [[2,16]]}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.chunk_b, 8);
+        let a = &m.artifacts["sketch_tiny"];
+        assert_eq!(a.m, 16);
+        assert_eq!(a.input_shapes, vec![vec![8, 4], vec![8], vec![16, 4]]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

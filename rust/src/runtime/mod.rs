@@ -1,0 +1,9 @@
+//! Runtime layer: PJRT client wrapper + AOT artifact manifest. Loads the
+//! HLO-text artifacts `python/compile/aot.py` produced and executes them
+//! from the rust hot path (no python at request time).
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::Manifest;
+pub use pjrt::{PjrtRuntime, Tensor};

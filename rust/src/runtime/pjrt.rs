@@ -1,0 +1,209 @@
+//! PJRT runtime: load HLO-text artifacts, compile once, execute from the
+//! rust hot path. Python never runs here — this is the AOT boundary.
+
+use super::artifacts::{ArtifactMeta, Manifest};
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A PJRT CPU client plus a compiled-executable cache keyed by artifact
+/// name. `Send + Sync`: executions are serialized per executable by XLA;
+/// the cache is mutex-guarded.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtRuntime {
+    /// Create from an artifacts directory (must contain manifest.json).
+    pub fn new(artifacts_dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "pjrt runtime up: platform={} artifacts={}",
+            client.platform_name(),
+            manifest.artifacts.len()
+        );
+        Ok(PjrtRuntime { client, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifacts directory: `$CKM_ARTIFACTS` or `<crate>/artifacts`.
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var("CKM_ARTIFACTS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|_| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?;
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            meta.file.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {:?}", meta.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client.compile(&comp).with_context(|| format!("compiling '{name}'"))?,
+        );
+        log::debug!("compiled artifact '{name}' in {:.1}ms", t0.elapsed().as_secs_f64() * 1e3);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with f32 tensor inputs; returns the flattened f32
+    /// outputs (the AOT side lowers with `return_tuple=True`).
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Vec<f32>>> {
+        let meta = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact '{name}'"))?;
+        anyhow::ensure!(
+            inputs.len() == meta.input_shapes.len(),
+            "artifact '{name}' expects {} inputs, got {}",
+            meta.input_shapes.len(),
+            inputs.len()
+        );
+        for (i, (t, want)) in inputs.iter().zip(&meta.input_shapes).enumerate() {
+            anyhow::ensure!(
+                &t.shape == want,
+                "artifact '{name}' input {i}: shape {:?} != manifest {:?}",
+                t.shape,
+                want
+            );
+        }
+        let exe = self.executable(name)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("executing '{name}'"))?;
+        let parts = result.to_tuple().with_context(|| format!("untupling '{name}' output"))?;
+        parts.into_iter().map(|l| l.to_vec::<f32>().map_err(Into::into)).collect()
+    }
+
+    /// Metadata accessor.
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.artifacts.get(name)
+    }
+}
+
+/// A shaped f32 tensor destined for a PJRT input.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "tensor shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    /// From f64 slice (the solver side is f64; PJRT artifacts are f32).
+    pub fn from_f64(shape: Vec<usize>, data: &[f64]) -> Tensor {
+        Tensor::new(shape, data.iter().map(|&x| x as f32).collect())
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        if self.shape.is_empty() {
+            return Ok(xla::Literal::scalar(self.data[0]));
+        }
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(&self.data).reshape(&dims).map_err(Into::into)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<PjrtRuntime> {
+        let dir = PjrtRuntime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping pjrt test: run `make artifacts`");
+            return None;
+        }
+        Some(PjrtRuntime::new(&dir).unwrap())
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape, vec![2, 3]);
+        let s = Tensor::scalar(4.0);
+        assert!(s.shape.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn tensor_rejects_bad_shape() {
+        let _ = Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn sketch_artifact_runs_and_matches_math() {
+        let Some(rt) = runtime() else { return };
+        let (b, n, m) = (4096usize, 16usize, 256usize);
+        // One point at origin, weight 1 → z = (1 + 0i) for every frequency.
+        let x = vec![0.0f32; b * n];
+        let mut beta = vec![0.0f32; b];
+        beta[0] = 1.0;
+        let w: Vec<f32> = (0..m * n).map(|i| (i as f32 * 0.37).sin()).collect();
+        let out = rt
+            .run(
+                "sketch_b4096_n16_m256",
+                &[
+                    Tensor::new(vec![b, n], x),
+                    Tensor::new(vec![b], beta),
+                    Tensor::new(vec![m, n], w),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let z = &out[0];
+        assert_eq!(z.len(), 2 * m);
+        for j in 0..m {
+            assert!((z[j] - 1.0).abs() < 1e-6, "re[{j}] = {}", z[j]);
+            assert!(z[m + j].abs() < 1e-6, "im[{j}] = {}", z[m + j]);
+        }
+    }
+
+    #[test]
+    fn wrong_input_count_is_error() {
+        let Some(rt) = runtime() else { return };
+        let err = rt.run("sketch_b4096_n16_m256", &[]).unwrap_err();
+        assert!(err.to_string().contains("expects"));
+    }
+
+    #[test]
+    fn wrong_shape_is_error() {
+        let Some(rt) = runtime() else { return };
+        let err = rt
+            .run(
+                "sketch_b4096_n16_m256",
+                &[
+                    Tensor::new(vec![8, 16], vec![0.0; 8 * 16]),
+                    Tensor::new(vec![8], vec![0.0; 8]),
+                    Tensor::new(vec![256, 16], vec![0.0; 256 * 16]),
+                ],
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("shape"));
+    }
+}

@@ -1,0 +1,209 @@
+//! Frequency distributions Λ for the sketching operator.
+//!
+//! Following Keriven et al. (the sketching companion paper [5]), a
+//! frequency is drawn as `ω = (R/σ)·φ` with `φ` uniform on the unit sphere
+//! and the dimensionless radius `R` drawn from one of:
+//!
+//! - **Gaussian**: `ω ~ N(0, Id/σ²)`, i.e. `R` is a chi-distributed radius;
+//! - **FoldedGaussian** radius: `R ~ |N(0, 1)|`;
+//! - **AdaptedRadius** (the paper's default): density
+//!   `p(R) ∝ (R² + R⁴/4)^{1/2} · e^{−R²/2}`, a heuristic that maximizes the
+//!   expected variation of a unit-Gaussian's characteristic function at the
+//!   sampled frequency.
+//!
+//! Radial laws are sampled by inverse-CDF on a dense tabulated grid.
+
+use crate::linalg::Mat;
+use crate::util::rng::Rng;
+
+/// Which radial law to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RadiusKind {
+    Gaussian,
+    FoldedGaussian,
+    AdaptedRadius,
+}
+
+impl RadiusKind {
+    pub fn parse(s: &str) -> anyhow::Result<RadiusKind> {
+        match s {
+            "gaussian" => Ok(RadiusKind::Gaussian),
+            "folded" | "folded-gaussian" => Ok(RadiusKind::FoldedGaussian),
+            "adapted" | "adapted-radius" | "ar" => Ok(RadiusKind::AdaptedRadius),
+            _ => anyhow::bail!("unknown radius kind '{s}' (gaussian|folded|adapted)"),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            RadiusKind::Gaussian => "gaussian",
+            RadiusKind::FoldedGaussian => "folded",
+            RadiusKind::AdaptedRadius => "adapted",
+        }
+    }
+}
+
+/// A frequency distribution: radial law + scale σ² (variance proxy of the
+/// data clusters; frequencies live at scale 1/σ).
+#[derive(Clone, Debug)]
+pub struct FreqDist {
+    pub kind: RadiusKind,
+    pub sigma2: f64,
+}
+
+impl FreqDist {
+    pub fn new(kind: RadiusKind, sigma2: f64) -> FreqDist {
+        assert!(sigma2 > 0.0, "sigma2 must be positive");
+        FreqDist { kind, sigma2 }
+    }
+
+    /// Paper default: adapted radius.
+    pub fn adapted(sigma2: f64) -> FreqDist {
+        FreqDist::new(RadiusKind::AdaptedRadius, sigma2)
+    }
+
+    /// Draw an `m × n` frequency matrix `W` (rows are frequencies ω_j).
+    pub fn draw(&self, m: usize, n_dims: usize, rng: &mut Rng) -> Mat {
+        let sigma = self.sigma2.sqrt();
+        let sampler = RadiusSampler::new(self.kind, n_dims);
+        let mut w = Mat::zeros(m, n_dims);
+        for j in 0..m {
+            let dir = rng.unit_vector(n_dims);
+            let r = sampler.sample(rng) / sigma;
+            for (d, &u) in dir.iter().enumerate() {
+                *w.at_mut(j, d) = r * u;
+            }
+        }
+        w
+    }
+}
+
+/// Inverse-CDF sampler for the dimensionless radius laws.
+pub struct RadiusSampler {
+    grid: Vec<f64>,
+    cdf: Vec<f64>,
+}
+
+const GRID_N: usize = 4096;
+const GRID_MAX: f64 = 10.0;
+
+impl RadiusSampler {
+    pub fn new(kind: RadiusKind, n_dims: usize) -> RadiusSampler {
+        let mut grid = Vec::with_capacity(GRID_N);
+        let mut pdf = Vec::with_capacity(GRID_N);
+        for i in 0..GRID_N {
+            let r = GRID_MAX * (i as f64 + 0.5) / GRID_N as f64;
+            grid.push(r);
+            pdf.push(match kind {
+                // chi distribution with n_dims dof: p(r) ∝ r^{n-1} e^{-r²/2}
+                RadiusKind::Gaussian => {
+                    (n_dims as f64 - 1.0) * r.ln().max(-700.0) - 0.5 * r * r
+                }
+                RadiusKind::FoldedGaussian => -0.5 * r * r,
+                RadiusKind::AdaptedRadius => {
+                    0.5 * (r * r + r.powi(4) / 4.0).ln() - 0.5 * r * r
+                }
+            });
+        }
+        // log-pdf → normalized cdf
+        let max_lp = pdf.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut cdf = Vec::with_capacity(GRID_N);
+        let mut acc = 0.0;
+        for lp in pdf {
+            acc += (lp - max_lp).exp();
+            cdf.push(acc);
+        }
+        for c in cdf.iter_mut() {
+            *c /= acc;
+        }
+        RadiusSampler { grid, cdf }
+    }
+
+    /// Sample one radius by inverse CDF with linear interpolation.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        let u = rng.uniform();
+        let idx = self.cdf.partition_point(|&c| c < u);
+        if idx == 0 {
+            return self.grid[0] * (u / self.cdf[0]).min(1.0);
+        }
+        if idx >= GRID_N {
+            return self.grid[GRID_N - 1];
+        }
+        let (c0, c1) = (self.cdf[idx - 1], self.cdf[idx]);
+        let t = if c1 > c0 { (u - c0) / (c1 - c0) } else { 0.5 };
+        self.grid[idx - 1] + t * (self.grid[idx] - self.grid[idx - 1])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_radius(kind: RadiusKind, n_dims: usize, samples: usize) -> f64 {
+        let s = RadiusSampler::new(kind, n_dims);
+        let mut rng = Rng::new(10);
+        (0..samples).map(|_| s.sample(&mut rng)).sum::<f64>() / samples as f64
+    }
+
+    #[test]
+    fn folded_gaussian_mean() {
+        // E|N(0,1)| = sqrt(2/π) ≈ 0.7979
+        let m = mean_radius(RadiusKind::FoldedGaussian, 1, 40_000);
+        assert!((m - 0.7979).abs() < 0.02, "mean={m}");
+    }
+
+    #[test]
+    fn chi_mean_matches() {
+        // chi with 3 dof: mean = 2·sqrt(2/π) ≈ 1.5958
+        let m = mean_radius(RadiusKind::Gaussian, 3, 40_000);
+        assert!((m - 1.5958).abs() < 0.03, "mean={m}");
+    }
+
+    #[test]
+    fn adapted_radius_positive_and_bounded() {
+        let s = RadiusSampler::new(RadiusKind::AdaptedRadius, 10);
+        let mut rng = Rng::new(4);
+        for _ in 0..1000 {
+            let r = s.sample(&mut rng);
+            assert!(r > 0.0 && r <= GRID_MAX);
+        }
+        // Mode of (r²+r⁴/4)^½ e^{-r²/2} is above 1 (pushed out vs folded)
+        let m = mean_radius(RadiusKind::AdaptedRadius, 10, 40_000);
+        assert!(m > 1.0 && m < 3.0, "mean={m}");
+    }
+
+    #[test]
+    fn draw_shapes_and_scale() {
+        let mut rng = Rng::new(5);
+        // Larger sigma² → smaller frequencies (scale 1/σ).
+        let w1 = FreqDist::adapted(1.0).draw(400, 6, &mut rng);
+        let w2 = FreqDist::adapted(16.0).draw(400, 6, &mut rng);
+        assert_eq!((w1.rows, w1.cols), (400, 6));
+        let norm = |w: &Mat| {
+            (0..w.rows)
+                .map(|j| w.row(j).iter().map(|x| x * x).sum::<f64>().sqrt())
+                .sum::<f64>()
+                / w.rows as f64
+        };
+        let (n1, n2) = (norm(&w1), norm(&w2));
+        assert!((n1 / n2 - 4.0).abs() < 0.5, "ratio={}", n1 / n2);
+    }
+
+    #[test]
+    fn gaussian_kind_matches_normal_matrix() {
+        // For the Gaussian kind, ω entries should be ~ N(0, 1/σ²): check
+        // the empirical per-entry variance.
+        let mut rng = Rng::new(6);
+        let sigma2 = 4.0;
+        let w = FreqDist::new(RadiusKind::Gaussian, sigma2).draw(2000, 5, &mut rng);
+        let var = w.data.iter().map(|x| x * x).sum::<f64>() / w.data.len() as f64;
+        assert!((var - 1.0 / sigma2).abs() < 0.03, "var={var}");
+    }
+
+    #[test]
+    fn parse_kinds() {
+        assert_eq!(RadiusKind::parse("adapted").unwrap(), RadiusKind::AdaptedRadius);
+        assert_eq!(RadiusKind::parse("gaussian").unwrap(), RadiusKind::Gaussian);
+        assert_eq!(RadiusKind::parse("folded").unwrap(), RadiusKind::FoldedGaussian);
+        assert!(RadiusKind::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,73 @@
+//! Sketching layer: frequency sampling, the operator `A`, σ² estimation and
+//! the mergeable streaming accumulator (paper §3.1 and §3.3 steps 1–3).
+
+pub mod frequencies;
+pub mod operator;
+pub mod scale;
+pub mod streaming;
+
+pub use frequencies::{FreqDist, RadiusKind};
+pub use operator::SketchOp;
+pub use streaming::{sketch_source, SketchAccumulator};
+
+use crate::data::dataset::Bounds;
+use crate::linalg::CVec;
+use crate::util::rng::Rng;
+
+/// Everything CLOMPR needs: the sketch, the operator, bounds and count.
+pub struct DatasetSketch {
+    pub z: CVec,
+    pub op: SketchOp,
+    pub bounds: Bounds,
+    pub count: usize,
+    /// The σ² the frequencies were drawn with (for reporting).
+    pub sigma2: f64,
+}
+
+/// One-call pipeline: estimate σ² on (a fraction of) the data, draw `m`
+/// frequencies, sketch the whole dataset. `sigma2` overrides estimation.
+pub fn sketch_dataset(
+    points: &[f64],
+    n_dims: usize,
+    m: usize,
+    seed: u64,
+    sigma2: Option<f64>,
+) -> DatasetSketch {
+    let mut rng = Rng::new(seed);
+    let sigma2 = sigma2.unwrap_or_else(|| {
+        scale::ScaleEstimator::default().estimate(points, n_dims, &mut rng)
+    });
+    let dist = FreqDist::adapted(sigma2);
+    let op = SketchOp::new(dist.draw(m, n_dims, &mut rng));
+    let mut acc = SketchAccumulator::new(m, n_dims);
+    acc.update(&op, points);
+    DatasetSketch { z: acc.finalize(), bounds: acc.bounds.clone(), count: acc.count, op, sigma2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gmm::GmmConfig;
+
+    #[test]
+    fn one_call_pipeline() {
+        let mut rng = Rng::new(0);
+        let g = GmmConfig::paper_default(3, 5, 3000).generate(&mut rng);
+        let sk = sketch_dataset(&g.dataset.points, 5, 128, 7, None);
+        assert_eq!(sk.z.len(), 128);
+        assert_eq!(sk.count, 3000);
+        assert!(sk.bounds.is_valid());
+        assert!(sk.sigma2 > 0.0);
+        // sketch of a real dataset has |z_0..| ≤ 1 and nonzero energy
+        assert!(sk.z.norm2() > 0.0);
+        assert!(sk.z.modulus().iter().all(|&v| v <= 1.0 + 1e-9));
+    }
+
+    #[test]
+    fn sigma2_override_respected() {
+        let mut rng = Rng::new(1);
+        let g = GmmConfig::paper_default(2, 3, 500).generate(&mut rng);
+        let sk = sketch_dataset(&g.dataset.points, 3, 32, 9, Some(2.5));
+        assert_eq!(sk.sigma2, 2.5);
+    }
+}

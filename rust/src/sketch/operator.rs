@@ -1,0 +1,342 @@
+//! The sketching operator `A` and its native (pure-rust) evaluation.
+//!
+//! `A p = [E_{x~p} e^{-i ω_j^T x}]_{j=1..m}` — sampling the characteristic
+//! function at the drawn frequencies. For point sets this is
+//! `Sk(Y, β)_j = Σ_l β_l e^{-i ω_j^T y_l}` (paper eq. 3).
+//!
+//! This module is the *native engine*: the correctness oracle for the
+//! PJRT/AOT path and the fallback for shapes outside the compiled matrix.
+//! The hot loop (`X·Wᵀ` then cos/sin accumulation) is blocked and
+//! multi-threaded; the same math is what the Pallas kernel implements.
+//!
+//! Gradient identities used by CLOMPR (derivation in DESIGN.md §2):
+//! with θ_j = ω_j^T c and r the residual,
+//!   Re⟨Aδ_c, r⟩ = Σ_j cosθ_j·Re r_j − sinθ_j·Im r_j
+//!   ∇_c Re⟨Aδ_c, r⟩ = Wᵀ q,  q_j = −(sinθ_j·Re r_j + cosθ_j·Im r_j)
+//! and ‖Aδ_c‖ = √m exactly (unit-modulus entries).
+
+use crate::linalg::{CVec, Mat};
+use crate::util::parallel;
+
+/// The sketching operator: a frequency matrix `W (m × n)`.
+#[derive(Clone, Debug)]
+pub struct SketchOp {
+    pub w: Mat,
+}
+
+impl SketchOp {
+    pub fn new(w: Mat) -> SketchOp {
+        SketchOp { w }
+    }
+
+    pub fn m(&self) -> usize {
+        self.w.rows
+    }
+
+    pub fn n_dims(&self) -> usize {
+        self.w.cols
+    }
+
+    /// `A δ_c` — the atom at centroid `c`.
+    pub fn atom(&self, c: &[f64]) -> CVec {
+        let theta = self.w.matvec(c);
+        let mut a = CVec::zeros(self.m());
+        for (j, t) in theta.iter().enumerate() {
+            a.re[j] = t.cos();
+            a.im[j] = -t.sin();
+        }
+        a
+    }
+
+    /// `‖A δ_c‖₂` — constant √m for the Fourier sketch.
+    pub fn atom_norm(&self) -> f64 {
+        (self.m() as f64).sqrt()
+    }
+
+    /// Value and gradient of `f(c) = Re⟨A δ_c / ‖A δ_c‖, r⟩`.
+    pub fn step1_value_grad(&self, c: &[f64], r: &CVec) -> (f64, Vec<f64>) {
+        let inv_norm = 1.0 / self.atom_norm();
+        let theta = self.w.matvec(c);
+        let m = self.m();
+        let mut val = 0.0;
+        let mut q = vec![0.0; m];
+        for j in 0..m {
+            let (s, co) = theta[j].sin_cos();
+            val += co * r.re[j] - s * r.im[j];
+            q[j] = -(s * r.re[j] + co * r.im[j]);
+        }
+        let mut grad = self.w.matvec_t(&q);
+        for g in grad.iter_mut() {
+            *g *= inv_norm;
+        }
+        (val * inv_norm, grad)
+    }
+
+    /// Sketch of a weighted mixture of Diracs: `Σ_k α_k A δ_{c_k}`.
+    /// `centroids` is row-major `k × n`.
+    pub fn mixture_sketch(&self, centroids: &Mat, alpha: &[f64]) -> CVec {
+        assert_eq!(centroids.rows, alpha.len());
+        let mut z = CVec::zeros(self.m());
+        for (k, &a) in alpha.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let atom = self.atom(centroids.row(k));
+            z.axpy(a, &atom);
+        }
+        z
+    }
+
+    /// Cost `g(C, α) = ‖ẑ − Σ_k α_k A δ_{c_k}‖²` and its gradients
+    /// `(∂g/∂C (k×n), ∂g/∂α (k))`. Returns `(cost, grad_c, grad_alpha)`.
+    pub fn step5_value_grads(
+        &self,
+        z_hat: &CVec,
+        centroids: &Mat,
+        alpha: &[f64],
+    ) -> (f64, Mat, Vec<f64>) {
+        let kk = centroids.rows;
+        let m = self.m();
+        // Atoms and residual r = ẑ − Σ α_k u_k.
+        let mut atoms: Vec<CVec> = Vec::with_capacity(kk);
+        let mut r = z_hat.clone();
+        for k in 0..kk {
+            let u = self.atom(centroids.row(k));
+            r.axpy(-alpha[k], &u);
+            atoms.push(u);
+        }
+        let cost = r.norm2_sq();
+        let mut grad_c = Mat::zeros(kk, self.n_dims());
+        let mut grad_a = vec![0.0; kk];
+        let mut q = vec![0.0; m];
+        for k in 0..kk {
+            let u = &atoms[k];
+            // ∂g/∂α_k = −2 Re⟨u_k, r⟩
+            grad_a[k] = -2.0 * u.re_dot(&r);
+            // ∇_{c_k} g = −2 α_k Wᵀ q with q_j = −(sinθ·Re r + cosθ·Im r);
+            // note u.re = cosθ, u.im = −sinθ.
+            for j in 0..m {
+                let (co, s) = (u.re[j], -u.im[j]);
+                q[j] = -(s * r.re[j] + co * r.im[j]);
+            }
+            let g = self.w.matvec_t(&q);
+            let row = grad_c.row_mut(k);
+            for (d, gv) in g.iter().enumerate() {
+                row[d] = -2.0 * alpha[k] * gv;
+            }
+        }
+        (cost, grad_c, grad_a)
+    }
+
+    /// Sketch a weighted point set: `Σ_l β_l e^{-i ω_j^T x_l}` with β
+    /// uniform `1/N` when `weights` is `None`. Multi-threaded, blocked.
+    pub fn sketch_points(&self, points: &[f64], weights: Option<&[f64]>) -> CVec {
+        let n = self.n_dims();
+        assert_eq!(points.len() % n, 0);
+        let n_points = points.len() / n;
+        let m = self.m();
+        if n_points == 0 {
+            return CVec::zeros(m);
+        }
+        let threads = parallel::default_threads();
+        let partials = parallel::parallel_map_ranges(n_points, threads, |range| {
+            let mut acc = CVec::zeros(m);
+            // Process rows in blocks so the X·Wᵀ tile stays in cache.
+            const BLOCK: usize = 256;
+            let mut lo = range.start;
+            while lo < range.end {
+                let hi = (lo + BLOCK).min(range.end);
+                let x_blk = Mat::from_vec(hi - lo, n, points[lo * n..hi * n].to_vec());
+                let theta = x_blk_theta(&x_blk, &self.w);
+                for (bi, row) in theta.chunks_exact(m).enumerate() {
+                    let beta = weights.map(|w| w[lo + bi]).unwrap_or(1.0 / n_points as f64);
+                    for j in 0..m {
+                        let (s, co) = row[j].sin_cos();
+                        acc.re[j] += beta * co;
+                        acc.im[j] -= beta * s;
+                    }
+                }
+                lo = hi;
+            }
+            acc
+        });
+        let mut z = CVec::zeros(m);
+        for p in partials {
+            z.axpy(1.0, &p);
+        }
+        z
+    }
+}
+
+/// θ block = X_blk · Wᵀ, flattened row-major (rows × m). Single-threaded:
+/// callers parallelize over row ranges.
+fn x_blk_theta(x_blk: &Mat, w: &Mat) -> Vec<f64> {
+    let m = w.rows;
+    let n = w.cols;
+    let rows = x_blk.rows;
+    let mut out = vec![0.0; rows * m];
+    for i in 0..rows {
+        let xrow = x_blk.row(i);
+        let orow = &mut out[i * m..(i + 1) * m];
+        for j in 0..m {
+            let wrow = &w.data[j * n..(j + 1) * n];
+            let mut s = 0.0;
+            for d in 0..n {
+                s += xrow[d] * wrow[d];
+            }
+            orow[j] = s;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::frequencies::FreqDist;
+    use crate::testing::{self, gen, Config};
+    use crate::util::rng::Rng;
+
+    fn op(m: usize, n: usize, seed: u64) -> SketchOp {
+        let mut rng = Rng::new(seed);
+        SketchOp::new(FreqDist::adapted(1.0).draw(m, n, &mut rng))
+    }
+
+    #[test]
+    fn atom_unit_modulus_and_norm() {
+        let o = op(64, 5, 1);
+        let mut rng = Rng::new(2);
+        let c = gen::vec_normal(&mut rng, 5);
+        let a = o.atom(&c);
+        for (r, i) in a.re.iter().zip(&a.im) {
+            assert!((r * r + i * i - 1.0).abs() < 1e-12);
+        }
+        assert!((a.norm2() - o.atom_norm()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sketch_single_point_equals_atom() {
+        let o = op(32, 4, 3);
+        let mut rng = Rng::new(4);
+        let x = gen::vec_normal(&mut rng, 4);
+        let z = o.sketch_points(&x, None);
+        let a = o.atom(&x);
+        testing::all_close(&z.re, &a.re, 1e-12).unwrap();
+        testing::all_close(&z.im, &a.im, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn prop_sketch_is_linear_in_measure() {
+        testing::check("sketch linearity", Config::default().cases(16).max_size(30), |rng, size| {
+            let n = 1 + rng.below(6);
+            let o = op(24, n, rng.next_u64());
+            let n1 = 1 + rng.below(size);
+            let n2 = 1 + rng.below(size);
+            let xs1 = gen::mat_normal(rng, n1, n);
+            let xs2 = gen::mat_normal(rng, n2, n);
+            // Sketch of the union with uniform 1/(n1+n2) weights equals the
+            // weighted average of the two sketches.
+            let mut all = xs1.clone();
+            all.extend_from_slice(&xs2);
+            let z_all = o.sketch_points(&all, None);
+            let z1 = o.sketch_points(&xs1, None);
+            let z2 = o.sketch_points(&xs2, None);
+            let t = n1 as f64 / (n1 + n2) as f64;
+            let mut mix = CVec::zeros(24);
+            mix.axpy(t, &z1);
+            mix.axpy(1.0 - t, &z2);
+            testing::all_close(&z_all.re, &mix.re, 1e-10)?;
+            testing::all_close(&z_all.im, &mix.im, 1e-10)
+        });
+    }
+
+    #[test]
+    fn prop_sketch_modulus_bounded_by_one() {
+        testing::check("|z_j| <= 1", Config::default().cases(16).max_size(40), |rng, size| {
+            let n = 1 + rng.below(5);
+            let o = op(16, n, rng.next_u64());
+            let pts = gen::mat_normal(rng, 1 + size, n);
+            let z = o.sketch_points(&pts, None);
+            for v in z.modulus() {
+                if v > 1.0 + 1e-9 {
+                    return Err(format!("modulus {v}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn weighted_sketch_matches_manual() {
+        let o = op(16, 3, 7);
+        let mut rng = Rng::new(8);
+        let pts = gen::mat_normal(&mut rng, 5, 3);
+        let w = [0.5, 0.2, 0.1, 0.1, 0.1];
+        let z = o.sketch_points(&pts, Some(&w));
+        let mut manual = CVec::zeros(16);
+        for l in 0..5 {
+            let a = o.atom(&pts[l * 3..(l + 1) * 3]);
+            manual.axpy(w[l], &a);
+        }
+        testing::all_close(&z.re, &manual.re, 1e-12).unwrap();
+        testing::all_close(&z.im, &manual.im, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn step1_gradient_matches_finite_difference() {
+        let o = op(48, 4, 9);
+        let mut rng = Rng::new(10);
+        let c = gen::vec_normal(&mut rng, 4);
+        let r = CVec::from_parts(gen::vec_normal(&mut rng, 48), gen::vec_normal(&mut rng, 48));
+        let (f0, g) = o.step1_value_grad(&c, &r);
+        let eps = 1e-6;
+        for d in 0..4 {
+            let mut cp = c.clone();
+            cp[d] += eps;
+            let (fp, _) = o.step1_value_grad(&cp, &r);
+            let fd = (fp - f0) / eps;
+            assert!((fd - g[d]).abs() < 1e-4 * (1.0 + g[d].abs()), "dim {d}: fd={fd} g={}", g[d]);
+        }
+    }
+
+    #[test]
+    fn step5_gradients_match_finite_difference() {
+        let o = op(32, 3, 11);
+        let mut rng = Rng::new(12);
+        let kk = 3;
+        let c = Mat::from_vec(kk, 3, gen::mat_normal(&mut rng, kk, 3));
+        let alpha = vec![0.5, 0.3, 0.2];
+        let z_hat = CVec::from_parts(gen::vec_normal(&mut rng, 32), gen::vec_normal(&mut rng, 32));
+        let (g0, gc, ga) = o.step5_value_grads(&z_hat, &c, &alpha);
+        let eps = 1e-6;
+        for k in 0..kk {
+            // alpha
+            let mut ap = alpha.clone();
+            ap[k] += eps;
+            let (gp, _, _) = o.step5_value_grads(&z_hat, &c, &ap);
+            let fd = (gp - g0) / eps;
+            assert!((fd - ga[k]).abs() < 1e-4 * (1.0 + ga[k].abs()), "alpha {k}: {fd} vs {}", ga[k]);
+            // centroids
+            for d in 0..3 {
+                let mut cp = c.clone();
+                *cp.at_mut(k, d) += eps;
+                let (gp, _, _) = o.step5_value_grads(&z_hat, &cp, &alpha);
+                let fd = (gp - g0) / eps;
+                let an = gc.at(k, d);
+                assert!((fd - an).abs() < 1e-4 * (1.0 + an.abs()), "c[{k},{d}]: {fd} vs {an}");
+            }
+        }
+    }
+
+    #[test]
+    fn mixture_sketch_of_dirac_training_set() {
+        // Sketch of dataset == mixture sketch when dataset is K repeated points.
+        let o = op(20, 2, 13);
+        let pts = vec![1.0, -1.0, 1.0, -1.0, 2.0, 0.5, 2.0, 0.5, 2.0, 0.5];
+        let z = o.sketch_points(&pts, None);
+        let c = Mat::from_vec(2, 2, vec![1.0, -1.0, 2.0, 0.5]);
+        let mix = o.mixture_sketch(&c, &[0.4, 0.6]);
+        testing::all_close(&z.re, &mix.re, 1e-12).unwrap();
+        testing::all_close(&z.im, &mix.im, 1e-12).unwrap();
+    }
+}

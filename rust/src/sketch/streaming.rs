@@ -1,0 +1,166 @@
+//! Mergeable streaming sketch accumulator.
+//!
+//! The sketch is linear in the empirical measure, so partial sketches over
+//! shards merge exactly: the accumulator keeps *unnormalized* complex sums
+//! plus the running point count and box bounds (the paper computes `l`, `u`
+//! in the same single pass). This is the object coordinator workers ship
+//! back to the leader.
+
+use super::operator::SketchOp;
+use crate::data::dataset::{Bounds, PointSource};
+use crate::linalg::CVec;
+
+/// Partial sketch state: unnormalized sums + count + bounds.
+#[derive(Clone, Debug)]
+pub struct SketchAccumulator {
+    /// Unnormalized Σ e^{-iωx} over the points seen so far.
+    pub sum: CVec,
+    pub count: usize,
+    pub bounds: Bounds,
+}
+
+impl SketchAccumulator {
+    pub fn new(m: usize, n_dims: usize) -> SketchAccumulator {
+        SketchAccumulator { sum: CVec::zeros(m), count: 0, bounds: Bounds::empty(n_dims) }
+    }
+
+    /// Absorb a row-major block of points (unweighted).
+    pub fn update(&mut self, op: &SketchOp, points: &[f64]) {
+        let n = op.n_dims();
+        assert_eq!(points.len() % n, 0);
+        let rows = points.len() / n;
+        if rows == 0 {
+            return;
+        }
+        // Unnormalized sum = rows * (uniform sketch of this block).
+        let z = op.sketch_points(points, None);
+        self.sum.axpy(rows as f64, &z);
+        for r in 0..rows {
+            self.bounds.update(&points[r * n..(r + 1) * n]);
+        }
+        self.count += rows;
+    }
+
+    /// Exact merge of two partial sketches (associative, commutative).
+    pub fn merge(&mut self, other: &SketchAccumulator) {
+        assert_eq!(self.sum.len(), other.sum.len());
+        self.sum.axpy(1.0, &other.sum);
+        self.count += other.count;
+        self.bounds.merge(&other.bounds);
+    }
+
+    /// Normalized sketch `ẑ = sum / count`.
+    pub fn finalize(&self) -> CVec {
+        let mut z = self.sum.clone();
+        if self.count > 0 {
+            z.scale(1.0 / self.count as f64);
+        }
+        z
+    }
+}
+
+/// Drain a [`PointSource`] through an accumulator with the given chunk size
+/// (rows per chunk). Returns the filled accumulator.
+pub fn sketch_source(
+    op: &SketchOp,
+    source: &mut dyn PointSource,
+    chunk_rows: usize,
+) -> SketchAccumulator {
+    let n = op.n_dims();
+    assert_eq!(source.n_dims(), n, "source dims != operator dims");
+    let mut acc = SketchAccumulator::new(op.m(), n);
+    let mut buf = vec![0.0; chunk_rows.max(1) * n];
+    loop {
+        let rows = source.next_chunk(&mut buf);
+        if rows == 0 {
+            break;
+        }
+        acc.update(op, &buf[..rows * n]);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::SliceSource;
+    use crate::sketch::frequencies::FreqDist;
+    use crate::testing::{self, gen, Config};
+    use crate::util::rng::Rng;
+
+    fn op(m: usize, n: usize, seed: u64) -> SketchOp {
+        let mut rng = Rng::new(seed);
+        SketchOp::new(FreqDist::adapted(1.0).draw(m, n, &mut rng))
+    }
+
+    #[test]
+    fn streaming_equals_batch() {
+        let o = op(32, 4, 1);
+        let mut rng = Rng::new(2);
+        let pts = gen::mat_normal(&mut rng, 103, 4); // non-divisible by chunk
+        let mut src = SliceSource::new(&pts, 4);
+        let acc = sketch_source(&o, &mut src, 16);
+        assert_eq!(acc.count, 103);
+        let z_stream = acc.finalize();
+        let z_batch = o.sketch_points(&pts, None);
+        testing::all_close(&z_stream.re, &z_batch.re, 1e-10).unwrap();
+        testing::all_close(&z_stream.im, &z_batch.im, 1e-10).unwrap();
+    }
+
+    #[test]
+    fn prop_merge_associative_and_matches_whole(){
+        testing::check("sketch merge", Config::default().cases(16).max_size(60), |rng, size| {
+            let n = 1 + rng.below(5);
+            let o = op(16, n, rng.next_u64());
+            let total = 3 + size;
+            let pts = gen::mat_normal(rng, total, n);
+            // split into 3 shards
+            let c1 = 1 + rng.below(total - 2);
+            let c2 = c1 + 1 + rng.below(total - c1 - 1);
+            let mut parts = Vec::new();
+            for (s, e) in [(0, c1), (c1, c2), (c2, total)] {
+                let mut acc = SketchAccumulator::new(16, n);
+                acc.update(&o, &pts[s * n..e * n]);
+                parts.push(acc);
+            }
+            // ((p0+p1)+p2) == (p0+(p1+p2)) == whole
+            let mut left = parts[0].clone();
+            left.merge(&parts[1]);
+            left.merge(&parts[2]);
+            let mut right = parts[2].clone();
+            right.merge(&parts[1]);
+            right.merge(&parts[0]);
+            let mut whole = SketchAccumulator::new(16, n);
+            whole.update(&o, &pts);
+            let (zl, zr, zw) = (left.finalize(), right.finalize(), whole.finalize());
+            testing::all_close(&zl.re, &zr.re, 1e-10)?;
+            testing::all_close(&zl.re, &zw.re, 1e-10)?;
+            testing::all_close(&zl.im, &zw.im, 1e-10)?;
+            if left.bounds != whole.bounds {
+                return Err("bounds mismatch".into());
+            }
+            if left.count != whole.count {
+                return Err("count mismatch".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_accumulator_finalizes_to_zero() {
+        let acc = SketchAccumulator::new(8, 3);
+        let z = acc.finalize();
+        assert!(z.re.iter().all(|&v| v == 0.0));
+        assert!(!acc.bounds.is_valid());
+    }
+
+    #[test]
+    fn bounds_tracked_during_stream() {
+        let o = op(8, 2, 5);
+        let pts = vec![0.0, 5.0, -3.0, 1.0, 2.0, -7.0];
+        let mut src = SliceSource::new(&pts, 2);
+        let acc = sketch_source(&o, &mut src, 2);
+        assert_eq!(acc.bounds.lo, vec![-3.0, -7.0]);
+        assert_eq!(acc.bounds.hi, vec![2.0, 5.0]);
+    }
+}

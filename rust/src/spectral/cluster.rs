@@ -1,0 +1,101 @@
+//! Spectral embedding + clustering pipeline (paper §4.1, MNIST protocol):
+//! kNN graph → symmetric normalized Laplacian → first `K` Laplacian
+//! eigenvectors (Lanczos) → row-normalized spectral features → K-means
+//! (Lloyd-Max or CKM) on the features.
+
+use super::knn::knn_adjacency;
+use crate::linalg::eigen::csr_smallest_eigenpairs;
+use crate::linalg::sparse::normalized_laplacian;
+
+/// Configuration of the spectral embedding.
+#[derive(Clone, Debug)]
+pub struct SpectralConfig {
+    /// Neighbours in the kNN graph (paper: 10).
+    pub knn_k: usize,
+    /// Embedding dimension = number of Laplacian eigenvectors (paper: 10).
+    pub embed_dim: usize,
+    /// Lanczos Krylov budget (0 = auto).
+    pub lanczos_dim: usize,
+    pub seed: u64,
+}
+
+impl Default for SpectralConfig {
+    fn default() -> Self {
+        SpectralConfig { knn_k: 10, embed_dim: 10, lanczos_dim: 0, seed: 0x5EC7 }
+    }
+}
+
+/// Row-major (n_points × embed_dim) spectral features (NJW row-normalized).
+pub fn spectral_embed(points: &[f64], n_dims: usize, cfg: &SpectralConfig) -> Vec<f64> {
+    let n = points.len() / n_dims;
+    assert!(n > cfg.knn_k, "need more points than knn_k");
+    let adj = knn_adjacency(points, n_dims, cfg.knn_k);
+    let lap = normalized_laplacian(&adj);
+    let pairs = csr_smallest_eigenpairs(&lap, cfg.embed_dim, cfg.seed);
+    let d = pairs.vectors.len();
+    let mut feats = vec![0.0; n * d];
+    for (j, v) in pairs.vectors.iter().enumerate() {
+        for i in 0..n {
+            feats[i * d + j] = v[i];
+        }
+    }
+    // NJW row normalization (unit rows; zero rows left as-is).
+    for i in 0..n {
+        let row = &mut feats[i * d..(i + 1) * d];
+        let norm: f64 = row.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            for x in row.iter_mut() {
+                *x /= norm;
+            }
+        }
+    }
+    feats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::{kmeans, KmInit, KmOptions};
+    use crate::metrics::adjusted_rand_index;
+    use crate::util::rng::Rng;
+
+    /// Three well-separated 2-d blobs.
+    fn blobs(n_per: usize, rng: &mut Rng) -> (Vec<f64>, Vec<usize>) {
+        let centers = [(0.0, 0.0), (8.0, 0.0), (0.0, 8.0)];
+        let mut pts = Vec::new();
+        let mut labels = Vec::new();
+        for (ci, &(cx, cy)) in centers.iter().enumerate() {
+            for _ in 0..n_per {
+                pts.push(cx + 0.5 * rng.normal());
+                pts.push(cy + 0.5 * rng.normal());
+                labels.push(ci);
+            }
+        }
+        (pts, labels)
+    }
+
+    #[test]
+    fn embeds_blobs_into_separable_features() {
+        let mut rng = Rng::new(1);
+        let (pts, labels) = blobs(50, &mut rng);
+        let cfg = SpectralConfig { knn_k: 8, embed_dim: 3, lanczos_dim: 0, seed: 2 };
+        let feats = spectral_embed(&pts, 2, &cfg);
+        assert_eq!(feats.len(), 150 * 3);
+        // K-means on the embedding must nail the blobs.
+        let km = kmeans(&feats, 3, 3, &KmOptions { init: KmInit::KmeansPp, replicates: 3, seed: 3, ..Default::default() });
+        let ari = adjusted_rand_index(&km.assignments, &labels);
+        assert!(ari > 0.98, "ari={ari}");
+    }
+
+    #[test]
+    fn rows_are_unit_norm() {
+        let mut rng = Rng::new(4);
+        let (pts, _) = blobs(30, &mut rng);
+        let cfg = SpectralConfig { knn_k: 5, embed_dim: 3, lanczos_dim: 0, seed: 5 };
+        let feats = spectral_embed(&pts, 2, &cfg);
+        for i in 0..90 {
+            let norm: f64 = feats[i * 3..(i + 1) * 3].iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-9, "row {i} norm {norm}");
+        }
+    }
+}

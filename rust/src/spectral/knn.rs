@@ -1,0 +1,151 @@
+//! Exact k-nearest-neighbour graph construction (FLANN substitute).
+//!
+//! Blocked, multi-threaded brute force: exact at the N this repo runs
+//! (the paper uses approximate FLANN at N = 10⁶; our digit pipeline runs
+//! at 10³–10⁵ where exact search is fast and removes one approximation).
+
+use crate::linalg::matrix::dist2;
+use crate::linalg::sparse::Csr;
+use crate::util::parallel;
+
+/// Indices + distances of the k nearest neighbours of each point
+/// (excluding the point itself).
+pub struct KnnResult {
+    pub k: usize,
+    /// Row-major (n_points × k) neighbour indices.
+    pub indices: Vec<usize>,
+    /// Matching squared distances.
+    pub dist2: Vec<f64>,
+}
+
+/// Exact kNN by blocked brute force, parallel over query ranges.
+pub fn knn(points: &[f64], n_dims: usize, k: usize) -> KnnResult {
+    assert!(n_dims > 0 && points.len() % n_dims == 0);
+    let n = points.len() / n_dims;
+    assert!(k >= 1 && k < n, "need 1 <= k < n (k={k}, n={n})");
+    let threads = parallel::default_threads();
+    let per_query = parallel::parallel_map_ranges(n, threads, |range| {
+        let mut out_idx = Vec::with_capacity(range.len() * k);
+        let mut out_d2 = Vec::with_capacity(range.len() * k);
+        // Max-heap of (d2, idx) capped at k, implemented on a sorted vec
+        // (k is small — 10 in the paper).
+        let mut heap: Vec<(f64, usize)> = Vec::with_capacity(k + 1);
+        for i in range {
+            heap.clear();
+            let xi = &points[i * n_dims..(i + 1) * n_dims];
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let d = dist2(xi, &points[j * n_dims..(j + 1) * n_dims]);
+                if heap.len() < k {
+                    heap.push((d, j));
+                    if heap.len() == k {
+                        heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                    }
+                } else if d < heap[k - 1].0 {
+                    // insert in sorted position, drop the tail
+                    let pos = heap.partition_point(|e| e.0 < d);
+                    heap.insert(pos, (d, j));
+                    heap.pop();
+                }
+            }
+            if heap.len() < k {
+                heap.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            }
+            for &(d, j) in heap.iter() {
+                out_idx.push(j);
+                out_d2.push(d);
+            }
+        }
+        (out_idx, out_d2)
+    });
+    let mut indices = Vec::with_capacity(n * k);
+    let mut d2 = Vec::with_capacity(n * k);
+    for (pi, pd) in per_query {
+        indices.extend(pi);
+        d2.extend(pd);
+    }
+    KnnResult { k, indices, dist2: d2 }
+}
+
+/// Symmetrized binary kNN adjacency: `A_ij = 1` if `j ∈ kNN(i)` or
+/// `i ∈ kNN(j)` (the "K-nearest neighbours adjacency matrix" of §4.1).
+pub fn knn_adjacency(points: &[f64], n_dims: usize, k: usize) -> Csr {
+    let n = points.len() / n_dims;
+    let res = knn(points, n_dims, k);
+    let mut t = Vec::with_capacity(2 * n * k);
+    for i in 0..n {
+        for &j in &res.indices[i * k..(i + 1) * k] {
+            t.push((i, j, 1.0));
+            t.push((j, i, 1.0));
+        }
+    }
+    let mut a = Csr::from_triplets(n, n, t);
+    // OR-semantics: clamp summed duplicates back to 1.
+    for v in a.data.iter_mut() {
+        *v = 1.0;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{self, gen, Config};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn line_graph_neighbours() {
+        // points at 0, 1, 2, 10: kNN(k=1) of 0 is 1; of 10 is 2.
+        let pts = vec![0.0, 1.0, 2.0, 10.0];
+        let r = knn(&pts, 1, 1);
+        assert_eq!(r.indices, vec![1, 0, 1, 2]);
+        assert_eq!(r.dist2[0], 1.0);
+        assert_eq!(r.dist2[3], 64.0);
+    }
+
+    #[test]
+    fn prop_knn_matches_naive() {
+        testing::check("knn == naive", Config::default().cases(16).max_size(30), |rng, size| {
+            let n = 4 + size;
+            let d = 1 + rng.below(4);
+            let k = 1 + rng.below(3.min(n - 2));
+            let pts = gen::mat_normal(rng, n, d);
+            let res = knn(&pts, d, k);
+            for i in 0..n {
+                // naive: sort all distances
+                let mut all: Vec<(f64, usize)> = (0..n)
+                    .filter(|&j| j != i)
+                    .map(|j| (crate::linalg::matrix::dist2(&pts[i * d..(i + 1) * d], &pts[j * d..(j + 1) * d]), j))
+                    .collect();
+                all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+                let got: Vec<f64> = res.dist2[i * k..(i + 1) * k].to_vec();
+                let want: Vec<f64> = all[..k].iter().map(|e| e.0).collect();
+                testing::all_close(&got, &want, 1e-12)
+                    .map_err(|e| format!("query {i}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn adjacency_symmetric_binary_no_selfloops() {
+        let mut rng = Rng::new(3);
+        let pts = gen::mat_normal(&mut rng, 40, 3);
+        let a = knn_adjacency(&pts, 3, 5);
+        let d = a.to_dense();
+        for i in 0..40 {
+            assert_eq!(d[i * 40 + i], 0.0, "self loop at {i}");
+            for j in 0..40 {
+                assert_eq!(d[i * 40 + j], d[j * 40 + i]);
+                assert!(d[i * 40 + j] == 0.0 || d[i * 40 + j] == 1.0);
+            }
+        }
+        // every vertex has degree >= k
+        for i in 0..40 {
+            let deg: f64 = (0..40).map(|j| d[i * 40 + j]).sum();
+            assert!(deg >= 5.0);
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Spectral clustering substrate (the paper's MNIST pipeline): exact kNN
+//! graph, normalized Laplacian, Lanczos eigenvectors, NJW embedding.
+
+pub mod cluster;
+pub mod knn;
+
+pub use cluster::{spectral_embed, SpectralConfig};
+pub use knn::{knn, knn_adjacency};

@@ -1,0 +1,202 @@
+//! Mini property-based testing harness (proptest substitute).
+//!
+//! The offline crate set has no `proptest`, so this module provides the
+//! subset we need: deterministic seeded case generation, a size ramp so
+//! early cases are small, failure replay (the panic message names the
+//! case seed and size), and shrinking-by-size (on failure, the harness
+//! re-runs the failing case seed at every smaller size and reports the
+//! smallest size that still fails).
+//!
+//! ```no_run
+//! use ckm::testing::{check, Config};
+//! check("addition commutes", Config::default(), |rng, size| {
+//!     let a = rng.uniform_in(-(size as f64), size as f64);
+//!     let b = rng.uniform();
+//!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Property-test configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of generated cases.
+    pub cases: usize,
+    /// Master seed; override with `CKM_PROP_SEED` for replay.
+    pub seed: u64,
+    /// Maximum size parameter (the ramp goes 1..=max_size across cases).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        let seed = std::env::var("CKM_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xC0FFEE);
+        Config { cases: 64, seed, max_size: 64 }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn max_size(mut self, s: usize) -> Self {
+        self.max_size = s;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Run `prop(rng, size)` over `cfg.cases` deterministic cases.
+///
+/// `size` ramps linearly from 1 to `cfg.max_size`, so the first cases probe
+/// degenerate/small inputs. Panics with a replayable report on failure.
+pub fn check<F>(name: &str, cfg: Config, prop: F)
+where
+    F: Fn(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut master = Rng::new(cfg.seed ^ hash_name(name));
+    for case in 0..cfg.cases {
+        let case_seed = master.next_u64();
+        let size = ramp(case, cfg.cases, cfg.max_size);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng, size) {
+            // Shrink by size: find the smallest size at which this seed fails.
+            let mut min_fail = (size, msg);
+            for s in 1..size {
+                let mut rng = Rng::new(case_seed);
+                if let Err(m) = prop(&mut rng, s) {
+                    min_fail = (s, m);
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}/{}, case_seed={case_seed:#x}, \
+                 size={} after shrink from {size}):\n  {}",
+                cfg.cases, min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+fn ramp(case: usize, cases: usize, max_size: usize) -> usize {
+    if cases <= 1 {
+        return max_size.max(1);
+    }
+    1 + case * max_size.saturating_sub(1) / (cases - 1)
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a, just to decorrelate properties sharing a seed.
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert two floats are close (absolute + relative tolerance), with a
+/// property-friendly `Result` return.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol}, |diff| {:.3e})", (a - b).abs()))
+    }
+}
+
+/// Assert all pairs of two slices are close.
+pub fn all_close(a: &[f64], b: &[f64], tol: f64) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        close(x, y, tol).map_err(|e| format!("at index {i}: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Generators for common composite inputs.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Vector of `len` values uniform in [lo, hi).
+    pub fn vec_uniform(rng: &mut Rng, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| rng.uniform_in(lo, hi)).collect()
+    }
+
+    /// Vector of `len` standard normals.
+    pub fn vec_normal(rng: &mut Rng, len: usize) -> Vec<f64> {
+        let mut v = vec![0.0; len];
+        rng.fill_normal(&mut v);
+        v
+    }
+
+    /// Row-major matrix (rows x cols) of standard normals.
+    pub fn mat_normal(rng: &mut Rng, rows: usize, cols: usize) -> Vec<f64> {
+        vec_normal(rng, rows * cols)
+    }
+
+    /// Random label vector with `k` classes.
+    pub fn labels(rng: &mut Rng, len: usize, k: usize) -> Vec<usize> {
+        (0..len).map(|_| rng.below(k.max(1))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum symmetric", Config::default().cases(32), |rng, size| {
+            let a = gen::vec_normal(rng, size);
+            let fwd: f64 = a.iter().sum();
+            let bwd: f64 = a.iter().rev().sum();
+            close(fwd, bwd, 1e-9)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn failing_property_panics_with_replay_info() {
+        check("always fails", Config::default().cases(4), |_rng, _size| Err("nope".into()));
+    }
+
+    #[test]
+    fn shrink_finds_small_size() {
+        // Fails whenever size >= 3; shrinker should report size 3.
+        let result = std::panic::catch_unwind(|| {
+            check("fails at >=3", Config::default().cases(16).max_size(32), |_rng, size| {
+                if size >= 3 {
+                    Err(format!("size {size}"))
+                } else {
+                    Ok(())
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("size=3"), "got: {msg}");
+    }
+
+    #[test]
+    fn ramp_covers_range() {
+        assert_eq!(ramp(0, 10, 100), 1);
+        assert_eq!(ramp(9, 10, 100), 100);
+        assert!(ramp(5, 10, 100) > 1);
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1.0, 1.1, 1e-9).is_err());
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0], 1e-12).is_ok());
+        assert!(all_close(&[1.0], &[1.0, 2.0], 1e-12).is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! Tiny command-line parser (clap substitute).
+//!
+//! Grammar: `ckm <subcommand> [--key value]... [--flag]... [positional]...`
+//! Options may also be written `--key=value`. Unknown options are collected
+//! and reported by `finish()` so every binary gets strict argument checking.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Args {
+    /// Subcommand (first positional before any option), if any.
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positionals: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from process args (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positionals = Vec::new();
+        let mut command = None;
+        let mut it = iter.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    opts.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    flags.push(rest.to_string());
+                }
+            } else if command.is_none() && positionals.is_empty() {
+                command = Some(tok);
+            } else {
+                positionals.push(tok);
+            }
+        }
+        Args { command, opts, flags, positionals, consumed: Default::default() }
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.parse_or(key, default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.parse_or(key, default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.parse_or(key, default)
+    }
+
+    fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.opt(key) {
+            None => default,
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{key} expects a value of type {}", std::any::type_name::<T>());
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Comma-separated list of values, e.g. `--ns 2,5,10`.
+    pub fn list_or<T: std::str::FromStr>(&self, key: &str, default: &[T]) -> Vec<T>
+    where
+        T: Clone,
+    {
+        match self.opt(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|p| !p.is_empty())
+                .map(|p| {
+                    p.trim().parse().unwrap_or_else(|_| {
+                        eprintln!("error: --{key} expects a comma-separated list");
+                        std::process::exit(2);
+                    })
+                })
+                .collect(),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn positionals(&self) -> &[String] {
+        &self.positionals
+    }
+
+    /// Error out on any option/flag that no handler ever looked at.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        let unknown: Vec<&String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !consumed.contains(k))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown option(s): {:?}", unknown)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn parses_subcommand_opts_flags() {
+        let a = args("exp --n 10 --verbose --name=fig1 extra1 extra2");
+        assert_eq!(a.command.as_deref(), Some("exp"));
+        assert_eq!(a.usize_or("n", 0), 10);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt("name"), Some("fig1"));
+        assert_eq!(a.positionals(), &["extra1".to_string(), "extra2".to_string()]);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("run");
+        assert_eq!(a.usize_or("k", 10), 10);
+        assert_eq!(a.f64_or("sigma", 1.5), 1.5);
+        assert_eq!(a.str_or("engine", "native"), "native");
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn lists_parse() {
+        let a = args("x --ns 2,5,10 --empty-default 7");
+        assert_eq!(a.list_or::<usize>("ns", &[]), vec![2, 5, 10]);
+        assert_eq!(a.list_or::<usize>("missing", &[1, 2]), vec![1, 2]);
+    }
+
+    #[test]
+    fn unknown_options_detected() {
+        let a = args("run --known 1 --mystery 2");
+        let _ = a.usize_or("known", 0);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args("run --fast --check");
+        assert!(a.flag("fast"));
+        assert!(a.flag("check"));
+    }
+}

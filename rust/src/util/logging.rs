@@ -1,0 +1,132 @@
+//! Logger + stopwatch utilities.
+//!
+//! A minimal `log::Log` backend (env-filtered by `CKM_LOG`:
+//! error|warn|info|debug|trace, default info) plus wall-clock timers used by
+//! the benchmark harness and the experiment drivers.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct StderrLogger {
+    level: log::LevelFilter,
+    start: Instant,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            eprintln!("[{t:9.3}s {:5} {}] {}", record.level(), record.target(), record.args());
+        }
+    }
+    fn flush(&self) {}
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let level = match std::env::var("CKM_LOG").as_deref() {
+        Ok("error") => log::LevelFilter::Error,
+        Ok("warn") => log::LevelFilter::Warn,
+        Ok("debug") => log::LevelFilter::Debug,
+        Ok("trace") => log::LevelFilter::Trace,
+        Ok("off") => log::LevelFilter::Off,
+        _ => log::LevelFilter::Info,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger { level, start: Instant::now() });
+    // set_logger fails if already set; that's fine.
+    let _ = log::set_logger(logger);
+    log::set_max_level(logger.level);
+}
+
+/// Simple wall-clock stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+    pub fn seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.seconds() * 1e3
+    }
+    pub fn restart(&mut self) -> f64 {
+        let s = self.seconds();
+        self.start = Instant::now();
+        s
+    }
+}
+
+/// Format a duration in adaptive units.
+pub fn fmt_duration(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{secs:.2}s")
+    } else {
+        format!("{:.1}min", secs / 60.0)
+    }
+}
+
+/// Format a byte count in adaptive units.
+pub fn fmt_bytes(bytes: f64) -> String {
+    if bytes < 1024.0 {
+        format!("{bytes:.0}B")
+    } else if bytes < 1024.0 * 1024.0 {
+        format!("{:.1}KiB", bytes / 1024.0)
+    } else if bytes < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.1}MiB", bytes / 1024.0 / 1024.0)
+    } else {
+        format!("{:.2}GiB", bytes / 1024.0 / 1024.0 / 1024.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let sw = Stopwatch::start();
+        let a = sw.seconds();
+        let b = sw.seconds();
+        assert!(b >= a && a >= 0.0);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(5e-9).ends_with("ns"));
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with('s'));
+        assert!(fmt_duration(300.0).ends_with("min"));
+    }
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512B");
+        assert!(fmt_bytes(2048.0).ends_with("KiB"));
+        assert!(fmt_bytes(3.0 * 1024.0 * 1024.0).ends_with("MiB"));
+        assert!(fmt_bytes(5e9).ends_with("GiB"));
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init();
+        init();
+        log::info!("logger test line");
+    }
+}

@@ -1,0 +1,9 @@
+//! Foundation substrates built in-repo (the offline crate set ships only
+//! the `xla` closure): RNG, JSON, CLI parsing, logging and data-parallel
+//! helpers. See DESIGN.md §3 for the substitution table.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod parallel;
+pub mod rng;

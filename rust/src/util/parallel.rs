@@ -1,0 +1,146 @@
+//! Data-parallel helpers over `std::thread::scope` (rayon substitute).
+//!
+//! The hot loops in the native sketch operator, Lloyd-Max assignment and
+//! kNN construction are embarrassingly parallel over row ranges; these
+//! helpers split `[0, n)` into per-thread chunks and reduce the results.
+
+/// Number of worker threads to use by default: `CKM_THREADS` env var, else
+/// available parallelism, clamped to [1, 64].
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("CKM_THREADS") {
+        if let Ok(t) = v.parse::<usize>() {
+            return t.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 64)
+}
+
+/// Split `[0, n)` into at most `parts` contiguous non-empty ranges.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    if n == 0 || parts == 0 {
+        return vec![];
+    }
+    let parts = parts.min(n);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f(range)` on each chunk of `[0, n)` across `threads` threads and
+/// collect the per-chunk results in chunk order.
+pub fn parallel_map_ranges<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    let ranges = split_ranges(n, threads);
+    if ranges.len() <= 1 {
+        return ranges.into_iter().map(&f).collect();
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = ranges.into_iter().map(|r| s.spawn(|| f(r))).collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    })
+}
+
+/// Map-reduce over `[0, n)`: apply `f` per chunk, fold results with `reduce`.
+pub fn parallel_reduce<T, F, R>(n: usize, threads: usize, f: F, init: T, reduce: R) -> T
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+    R: Fn(T, T) -> T,
+{
+    parallel_map_ranges(n, threads, f).into_iter().fold(init, reduce)
+}
+
+/// In-place parallel mutation: split `data` into contiguous chunks whose
+/// sizes mirror `split_ranges(data.len(), threads)` and run `f(offset, chunk)`.
+pub fn parallel_chunks_mut<T, F>(data: &mut [T], threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    let ranges = split_ranges(n, threads);
+    if ranges.len() <= 1 {
+        if n > 0 {
+            f(0, data);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        let mut rest = data;
+        let mut offset = 0;
+        for r in ranges {
+            let (head, tail) = rest.split_at_mut(r.len());
+            rest = tail;
+            let off = offset;
+            offset += r.len();
+            let fref = &f;
+            s.spawn(move || fref(off, head));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges_cover_exactly() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for p in [1usize, 2, 3, 8, 200] {
+                let rs = split_ranges(n, p);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n, "n={n} p={p}");
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next);
+                    assert!(!r.is_empty());
+                    next = r.end;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn map_ranges_ordered() {
+        let parts = parallel_map_ranges(100, 7, |r| r.start);
+        let mut sorted = parts.clone();
+        sorted.sort_unstable();
+        assert_eq!(parts, sorted);
+    }
+
+    #[test]
+    fn reduce_sums() {
+        let total =
+            parallel_reduce(1000, 8, |r| r.map(|i| i as u64).sum::<u64>(), 0u64, |a, b| a + b);
+        assert_eq!(total, 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn chunks_mut_writes_offsets() {
+        let mut v = vec![0usize; 57];
+        parallel_chunks_mut(&mut v, 4, |off, chunk| {
+            for (i, x) in chunk.iter_mut().enumerate() {
+                *x = off + i;
+            }
+        });
+        assert_eq!(v, (0..57).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_thread_path() {
+        let out = parallel_map_ranges(5, 1, |r| r.len());
+        assert_eq!(out, vec![5]);
+        let out0 = parallel_map_ranges(0, 4, |r| r.len());
+        assert!(out0.is_empty());
+    }
+}

@@ -1,0 +1,63 @@
+//! Cross-module integration tests: native-vs-PJRT parity, pipeline
+//! end-to-end on both backends, CLOMPR recovery quality.
+
+use ckm::coordinator::{run_pipeline, Backend, PipelineConfig, SketcherConfig};
+use ckm::data::gmm::GmmConfig;
+use ckm::metrics::sse;
+use ckm::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    ckm::runtime::PjrtRuntime::default_dir().join("manifest.json").exists()
+}
+
+#[test]
+fn pipeline_native_vs_pjrt_similar_quality() {
+    if !artifacts_ready() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut data_cfg = GmmConfig::paper_default(5, 8, 30_000);
+    data_cfg.separation = 3.0;
+    // Materialize a reference sample for SSE checks.
+    let mut rng = Rng::new(100);
+    let g = data_cfg.generate(&mut rng);
+
+    let mut results = Vec::new();
+    for backend in [Backend::Native, Backend::Pjrt] {
+        let mut cfg = PipelineConfig::new(5, 256);
+        cfg.backend = backend;
+        cfg.sigma2 = Some(1.0);
+        cfg.seed = 9;
+        cfg.replicates = 2;
+        cfg.sketcher = SketcherConfig { n_workers: 2, chunk_rows: 4096, queue_depth: 4 };
+        let mut src = ckm::data::dataset::SliceSource::new(&g.dataset.points, 8);
+        let res = run_pipeline(&cfg, &mut src, None).unwrap();
+        assert_eq!(res.n_points, 30_000);
+        let s = sse(&g.dataset.points, 8, &res.solution.centroids) / 30_000.0;
+        eprintln!("{backend:?}: SSE/N = {s:.4} (cost {:.3e})", res.solution.cost);
+        results.push(s);
+    }
+    // Both backends solve the same problem to similar quality: per-point
+    // SSE within 2x of each other and both below a loose absolute bar
+    // (ideal is ~n=8 for unit clusters; a bad solve is >> 20).
+    let (a, b) = (results[0], results[1]);
+    assert!(a < 20.0 && b < 20.0, "native={a} pjrt={b}");
+    assert!(a / b < 2.0 && b / a < 2.0, "native={a} pjrt={b}");
+}
+
+#[test]
+fn clompr_recovery_scales_with_m() {
+    // More frequencies -> better or equal recovery (statistically; fixed seeds).
+    let mut rng = Rng::new(5);
+    let mut data_cfg = GmmConfig::paper_default(4, 6, 20_000);
+    data_cfg.separation = 3.0;
+    let g = data_cfg.generate(&mut rng);
+    let mut sses = Vec::new();
+    for m in [60usize, 600] {
+        let sk = ckm::sketch::sketch_dataset(&g.dataset.points, 6, m, 11, None);
+        let sol = ckm::ckm::solve(&sk, 4, &ckm::ckm::CkmOptions { replicates: 3, seed: 1, ..Default::default() });
+        sses.push(sse(&g.dataset.points, 6, &sol.centroids));
+    }
+    eprintln!("m=60: {:.1}, m=600: {:.1}", sses[0], sses[1]);
+    assert!(sses[1] <= sses[0] * 1.2, "more frequencies should not hurt: {sses:?}");
+}

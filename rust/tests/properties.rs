@@ -1,0 +1,198 @@
+//! Cross-module property tests on mathematical invariants of the system.
+
+use ckm::ckm::{solve, CkmOptions};
+use ckm::data::dataset::Bounds;
+use ckm::data::gmm::GmmConfig;
+use ckm::linalg::CVec;
+use ckm::sketch::{sketch_dataset, FreqDist, SketchOp};
+use ckm::testing::{self, gen, Config};
+use ckm::util::rng::Rng;
+
+/// Translation covariance: sketching X + t multiplies each moment by
+/// e^{-i ω·t} — the defining property of the Fourier sketch. Any indexing
+/// or sign bug in the operator breaks this immediately.
+#[test]
+fn prop_sketch_translation_modulates_phase() {
+    testing::check("translation modulation", Config::default().cases(20).max_size(40), |rng, size| {
+        let n = 1 + rng.below(6);
+        let m = 16;
+        let op = SketchOp::new(FreqDist::adapted(1.0).draw(m, n, &mut rng.split()));
+        let pts = gen::mat_normal(rng, 2 + size, n);
+        let t = gen::vec_normal(rng, n);
+        let shifted: Vec<f64> = pts
+            .chunks(n)
+            .flat_map(|row| row.iter().zip(&t).map(|(x, ti)| x + ti).collect::<Vec<_>>())
+            .collect();
+        let z = op.sketch_points(&pts, None);
+        let zs = op.sketch_points(&shifted, None);
+        // expected: zs_j = e^{-i θ_j} z_j with θ_j = ω_j · t
+        let theta = op.w.matvec(&t);
+        let mut expect = CVec::zeros(m);
+        for j in 0..m {
+            let (s, c) = theta[j].sin_cos();
+            expect.re[j] = c * z.re[j] + s * z.im[j];
+            expect.im[j] = -s * z.re[j] + c * z.im[j];
+        }
+        testing::all_close(&zs.re, &expect.re, 1e-9)?;
+        testing::all_close(&zs.im, &expect.im, 1e-9)
+    });
+}
+
+/// Conjugate symmetry: sketching at -ω conjugates the moment.
+#[test]
+fn prop_sketch_frequency_negation_conjugates() {
+    testing::check("freq negation conjugates", Config::default().cases(16).max_size(30), |rng, size| {
+        let n = 1 + rng.below(4);
+        let m = 8;
+        let w = FreqDist::adapted(1.0).draw(m, n, &mut rng.split());
+        let mut wneg = w.clone();
+        for v in wneg.data.iter_mut() {
+            *v = -*v;
+        }
+        let pts = gen::mat_normal(rng, 1 + size, n);
+        let z = SketchOp::new(w).sketch_points(&pts, None);
+        let zc = SketchOp::new(wneg).sketch_points(&pts, None);
+        testing::all_close(&z.re, &zc.re, 1e-10)?;
+        let negim: Vec<f64> = zc.im.iter().map(|x| -x).collect();
+        testing::all_close(&z.im, &negim, 1e-10)
+    });
+}
+
+/// CLOMPR output invariants: right shape, weights non-negative, centroids
+/// inside the data box, cost non-negative and no worse than the empty fit.
+#[test]
+fn prop_clompr_output_invariants() {
+    testing::check("clompr invariants", Config::default().cases(6).max_size(4), |rng, size| {
+        let k = 1 + size.min(3);
+        let n = 2 + rng.below(3);
+        let mut cfg = GmmConfig::paper_default(k, n, 1500);
+        cfg.separation = 3.0;
+        let g = cfg.generate(&mut rng.split());
+        let sk = sketch_dataset(&g.dataset.points, n, 64 + 16 * k, rng.next_u64(), None);
+        let sol = solve(&sk, k, &CkmOptions { seed: rng.next_u64(), ..CkmOptions::default() });
+        if sol.centroids.rows != k {
+            return Err(format!("expected {k} centroids, got {}", sol.centroids.rows));
+        }
+        if sol.alpha.iter().any(|&a| a < 0.0) {
+            return Err(format!("negative weight {:?}", sol.alpha));
+        }
+        for kk in 0..k {
+            for d in 0..n {
+                let v = sol.centroids.at(kk, d);
+                if v < sk.bounds.lo[d] - 1e-9 || v > sk.bounds.hi[d] + 1e-9 {
+                    return Err(format!("centroid [{kk},{d}]={v} outside bounds"));
+                }
+            }
+        }
+        let empty_cost = sk.z.norm2_sq();
+        if !(sol.cost >= 0.0 && sol.cost <= empty_cost + 1e-9) {
+            return Err(format!("cost {} vs empty {empty_cost}", sol.cost));
+        }
+        Ok(())
+    });
+}
+
+/// Weighted accumulator merge with arbitrary shard sizes matches the
+/// direct weighted sketch (exactness of distribution).
+#[test]
+fn prop_weighted_merge_exact() {
+    testing::check("weighted merge", Config::default().cases(16).max_size(50), |rng, size| {
+        let n = 1 + rng.below(4);
+        let total = 4 + size;
+        let op = SketchOp::new(FreqDist::adapted(1.0).draw(12, n, &mut rng.split()));
+        let pts = gen::vec_normal(rng, total * n);
+        // Direct uniform sketch of the union.
+        let direct = op.sketch_points(&pts, None);
+        // Two shards sketched independently, merged with count weighting.
+        let cut = 1 + rng.below(total - 1);
+        let mut acc = ckm::sketch::SketchAccumulator::new(12, n);
+        acc.update(&op, &pts[..cut * n]);
+        let mut acc2 = ckm::sketch::SketchAccumulator::new(12, n);
+        acc2.update(&op, &pts[cut * n..]);
+        acc.merge(&acc2);
+        let merged = acc.finalize();
+        testing::all_close(&merged.re, &direct.re, 1e-10)?;
+        testing::all_close(&merged.im, &direct.im, 1e-10)
+    });
+}
+
+/// Bounds clamp is idempotent and keeps points inside.
+#[test]
+fn prop_bounds_clamp() {
+    testing::check("bounds clamp", Config::default().cases(32).max_size(40), |rng, size| {
+        let n = 1 + rng.below(5);
+        let mut b = Bounds::empty(n);
+        for _ in 0..(1 + size) {
+            b.update(&gen::vec_normal(rng, n));
+        }
+        let mut x = gen::vec_normal(rng, n);
+        for v in x.iter_mut() {
+            *v *= 10.0;
+        }
+        b.clamp(&mut x);
+        for d in 0..n {
+            if x[d] < b.lo[d] || x[d] > b.hi[d] {
+                return Err(format!("clamp failed at dim {d}"));
+            }
+        }
+        let before = x.clone();
+        b.clamp(&mut x);
+        testing::all_close(&before, &x, 0.0)
+    });
+}
+
+/// Corrupt inputs fail loudly, not silently.
+#[test]
+fn failure_injection_corrupt_dataset_file() {
+    let dir = std::env::temp_dir().join(format!("ckm_fail_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // Truncated header
+    let p1 = dir.join("trunc.bin");
+    std::fs::write(&p1, [1u8, 2, 3]).unwrap();
+    assert!(ckm::data::dataset::Dataset::load(&p1).is_err());
+    // Header claims more points than the file holds
+    let p2 = dir.join("short.bin");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&100u64.to_le_bytes());
+    bytes.extend_from_slice(&4u64.to_le_bytes());
+    bytes.extend_from_slice(&1.0f64.to_le_bytes());
+    std::fs::write(&p2, bytes).unwrap();
+    assert!(ckm::data::dataset::Dataset::load(&p2).is_err());
+    // Zero-dim header
+    let p3 = dir.join("zerodim.bin");
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(&1u64.to_le_bytes());
+    bytes.extend_from_slice(&0u64.to_le_bytes());
+    std::fs::write(&p3, bytes).unwrap();
+    assert!(ckm::data::dataset::Dataset::load(&p3).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A manifest pointing at a missing HLO file fails at compile time with a
+/// useful message, not a crash.
+#[test]
+fn failure_injection_missing_artifact_file() {
+    let dir = std::env::temp_dir().join(format!("ckm_man_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        r#"{"chunk_b": 8, "n_pad": 4, "k_pad": 2, "artifacts": {
+            "ghost": {"entry": "sketch", "file": "ghost.hlo.txt", "m": 8, "n": 4,
+                      "b": 8, "inputs": [[8,4],[8],[8,4]], "outputs": [[2,8]]}}}"#,
+    )
+    .unwrap();
+    let rt = ckm::runtime::PjrtRuntime::new(&dir).unwrap();
+    let err = rt
+        .run(
+            "ghost",
+            &[
+                ckm::runtime::Tensor::new(vec![8, 4], vec![0.0; 32]),
+                ckm::runtime::Tensor::new(vec![8], vec![0.0; 8]),
+                ckm::runtime::Tensor::new(vec![8, 4], vec![0.0; 32]),
+            ],
+        )
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("ghost"), "unhelpful error: {msg}");
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,37 @@
+//! Integration: the MNIST-surrogate pipeline end to end —
+//! digits → pooled features → spectral embedding → kmeans + CKM,
+//! checking classification quality (the Fig-3 code path).
+
+use ckm::baselines::{kmeans, KmInit, KmOptions};
+use ckm::ckm::{solve_full, CkmOptions};
+use ckm::data::digits::DigitConfig;
+use ckm::metrics::{adjusted_rand_index, labels_for};
+use ckm::sketch::sketch_dataset;
+use ckm::spectral::{spectral_embed, SpectralConfig};
+use ckm::util::rng::Rng;
+
+#[test]
+fn digits_spectral_clustering_beats_chance_by_far() {
+    let mut rng = Rng::new(7);
+    let ds = DigitConfig::new(600).generate(&mut rng);
+    let cfg = SpectralConfig { knn_k: 10, embed_dim: 10, lanczos_dim: 0, seed: 1 };
+    let feats = spectral_embed(&ds.points, ds.n_dims, &cfg);
+
+    // Lloyd-Max on the spectral features.
+    let km = kmeans(
+        &feats,
+        10,
+        10,
+        &KmOptions { init: KmInit::KmeansPp, replicates: 3, seed: 2, ..Default::default() },
+    );
+    let ari_km = adjusted_rand_index(&km.assignments, &ds.labels);
+
+    // CKM on the same features.
+    let sk = sketch_dataset(&feats, 10, 800, 3, None);
+    let sol = solve_full(&sk.z, &sk.op, &sk.bounds, 10, Some((&feats, 10)), &CkmOptions::default());
+    let ari_ckm = adjusted_rand_index(&labels_for(&feats, 10, &sol.centroids), &ds.labels);
+
+    eprintln!("digits spectral: ARI kmeans={ari_km:.3} ckm={ari_ckm:.3}");
+    assert!(ari_km > 0.5, "kmeans ARI too low: {ari_km}");
+    assert!(ari_ckm > 0.4, "ckm ARI too low: {ari_ckm}");
+}
