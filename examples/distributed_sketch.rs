@@ -1,50 +1,93 @@
-//! Distributed sketching demo: stream a million-point synthetic dataset
-//! through the leader/worker coordinator at several worker counts and show
-//! (a) throughput scaling and (b) that the merged sketch is identical
-//! regardless of parallelism (the sketch is a linear, mergeable statistic).
+//! Sketch-as-artifact demo: the sketch computed once is a durable object.
+//!
+//! Two "sites" each hold a shard of the same dataset and share only a
+//! builder configuration (seed + σ² + m). Each site sketches its shard
+//! independently; site A serializes its artifact to disk; the artifact is
+//! reloaded (bit-for-bit), merged with site B's artifact (exact — the
+//! sketch is linear in the empirical measure), and the merged sketch is
+//! solved twice, for two different K, without ever touching the points
+//! again. A shard sketched under a different seed is rejected at merge
+//! time by the operator-provenance check.
 //!
 //! Run with: `cargo run --release --example distributed_sketch`
 
-use ckm::coordinator::{distributed_sketch, SketcherConfig};
+use ckm::data::dataset::SliceSource;
 use ckm::data::gmm::GmmConfig;
-use ckm::engine::NativeFactory;
-use ckm::sketch::{FreqDist, SketchOp};
-use ckm::util::rng::Rng;
+use ckm::prelude::*;
 
-fn main() {
-    let (k, n_dims, n_points, m) = (10, 10, 1_000_000, 1024);
-    let data_cfg = GmmConfig::paper_default(k, n_dims, n_points);
-    let mut rng = Rng::new(7);
-    let op = SketchOp::new(FreqDist::adapted(1.0).draw(m, n_dims, &mut rng));
-    println!("streaming N={n_points} points (never materialized) through the sketcher\n");
-    println!("workers  chunk_rows   Mpts/s   wall(s)   rows/worker");
+fn main() -> anyhow::Result<()> {
+    let (k, n_dims, n_points, m) = (6usize, 8usize, 200_000usize, 512usize);
+    let mut rng = Rng::new(3);
+    let mut data_cfg = GmmConfig::paper_default(k, n_dims, n_points);
+    data_cfg.separation = 2.5;
+    let g = data_cfg.generate(&mut rng);
+    let pts = &g.dataset.points;
+    let half = (n_points / 2) * n_dims;
+    println!("dataset: N={n_points} n={n_dims} K={k}, split across 2 sites\n");
 
-    let mut reference: Option<Vec<f64>> = None;
-    for workers in [1usize, 2, 4, 8] {
-        let factory = NativeFactory { op: op.clone() };
-        let mut src = data_cfg.stream(42); // same stream seed every time
-        let cfg = SketcherConfig { n_workers: workers, chunk_rows: 8192, queue_depth: 8 };
-        let (acc, stats) = distributed_sketch(&factory, &mut src, &cfg).unwrap();
-        let z = acc.finalize();
+    // The shared configuration IS the contract between sites: same seed,
+    // σ² and m ⇒ the identical frequency operator on both machines.
+    let ckm = Ckm::builder().frequencies(m).sigma2(1.0).seed(7).workers(4).build()?;
+
+    // -- Site A sketches its shard and ships the artifact as a file.
+    let mut src_a = SliceSource::new(&pts[..half], n_dims);
+    let shard_a = ckm.sketch(&mut src_a)?;
+    let path = std::env::temp_dir().join("ckm_shard_a.json");
+    shard_a.to_file(&path)?;
+    println!(
+        "site A: sketched {} points -> {:?} ({:.0}x smaller than the shard)",
+        shard_a.count,
+        path,
+        shard_a.compression_ratio()
+    );
+
+    // -- The leader reloads it: serialization is bit-for-bit.
+    let reloaded = SketchArtifact::from_file(&path)?;
+    assert_eq!(reloaded, shard_a, "JSON round trip must be exact");
+    println!("leader: reloaded site A's artifact, checksum verified, bit-identical");
+
+    // -- Site B sketches its shard; the leader merges the two exactly.
+    let mut src_b = SliceSource::new(&pts[half..], n_dims);
+    let shard_b = ckm.sketch(&mut src_b)?;
+    let merged = reloaded.merge(&shard_b)?;
+    println!("leader: merged A+B = {} points", merged.count);
+
+    // The merged artifact matches a single-pass sketch of everything
+    // (exactly, up to fp addition order).
+    let mut src_all = SliceSource::new(pts, n_dims);
+    let whole = ckm.sketch(&mut src_all)?;
+    let (zm, zw) = (merged.z(), whole.z());
+    let max_diff = zm
+        .re
+        .iter()
+        .zip(&zw.re)
+        .chain(zm.im.iter().zip(&zw.im))
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("max |merged − single-pass| = {max_diff:.3e}");
+    assert!(max_diff < 1e-9, "merge must be exact: {max_diff}");
+
+    // -- Sketch once, solve many: two different K from the same artifact.
+    for kk in [k, 2 * k] {
+        let sol = ckm.solve(&merged, kk)?;
         println!(
-            "{workers:>7}  {:>10}  {:>7.2}  {:>8.2}   {:?}",
-            cfg.chunk_rows,
-            stats.throughput() / 1e6,
-            stats.wall_seconds,
-            stats.rows_per_worker
+            "solve K={kk:>2}: cost {:.3e}, weights {:?}",
+            sol.cost,
+            sol.normalized_weights().iter().map(|w| (w * 100.0).round() / 100.0).collect::<Vec<_>>()
         );
-        match &reference {
-            None => reference = Some(z.re.clone()),
-            Some(r) => {
-                let max_diff = z
-                    .re
-                    .iter()
-                    .zip(r)
-                    .map(|(a, b)| (a - b).abs())
-                    .fold(0.0f64, f64::max);
-                assert!(max_diff < 1e-9, "sketch changed with parallelism: {max_diff}");
-            }
-        }
+        assert_eq!(sol.centroids.rows, kk);
     }
-    println!("\nmerged sketch identical across worker counts ✓ (exact linear merge)");
+
+    // -- A shard sketched under a different seed cannot sneak in.
+    let foreign_ckm = Ckm::builder().frequencies(m).sigma2(1.0).seed(8).build()?;
+    let mut src_c = SliceSource::new(&pts[..half], n_dims);
+    let foreign = foreign_ckm.sketch(&mut src_c)?;
+    match merged.merge(&foreign) {
+        Err(e) => println!("\nforeign shard rejected as expected:\n  {e}"),
+        Ok(_) => panic!("operator mismatch must be rejected"),
+    }
+
+    std::fs::remove_file(&path).ok();
+    println!("\nsketch once, ship the file, merge shards, solve for any K ✓");
+    Ok(())
 }

@@ -1,24 +1,24 @@
 //! END-TO-END VALIDATION (DESIGN.md §6): the full three-layer system on a
-//! real small workload.
+//! real small workload, driven through the `Ckm` facade.
 //!
 //! A 10⁶-point clustered stream (never materialized for the sketch path)
 //! flows through the sharded coordinator into the AOT-compiled Pallas
-//! sketch kernel via PJRT; CLOMPR recovers the centroids using the
-//! compiled step-1/step-5 optimizer artifacts; the result is scored
-//! against Lloyd-Max on a materialized copy and against the ground-truth
-//! labels. Falls back to the native backend if artifacts are missing.
+//! sketch kernel via PJRT; CLOMPR recovers the centroids from the sketch
+//! artifact using the compiled step-1/step-5 optimizer artifacts; the
+//! result is scored against Lloyd-Max on a materialized copy and against
+//! the ground-truth labels. Falls back to the native backend if artifacts
+//! are missing.
 //!
 //! Run with: `make artifacts && cargo run --release --example pipeline_e2e`
 
 use ckm::baselines::{kmeans, KmInit, KmOptions};
-use ckm::coordinator::{run_pipeline, Backend, PipelineConfig, SketcherConfig};
 use ckm::data::dataset::PointSource;
 use ckm::data::gmm::GmmConfig;
 use ckm::metrics::{adjusted_rand_index, labels_for, sse};
+use ckm::prelude::*;
 use ckm::util::logging::Stopwatch;
-use ckm::util::rng::Rng;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let (k, n_dims, n_points, m) = (10usize, 10usize, 1_000_000usize, 1000usize);
     let data_cfg = GmmConfig::paper_default(k, n_dims, n_points);
     let artifacts = ckm::runtime::PjrtRuntime::default_dir();
@@ -31,29 +31,34 @@ fn main() {
     let got = data_cfg.stream(1).next_chunk(&mut sample);
     sample.truncate(got * n_dims);
 
-    let mut cfg = PipelineConfig::new(k, m);
-    cfg.backend = backend;
-    cfg.replicates = 1;
-    cfg.seed = 1;
-    cfg.sketcher = SketcherConfig { n_workers: 4, chunk_rows: 8192, queue_depth: 8 };
+    let ckm = Ckm::builder()
+        .frequencies(m)
+        .backend(backend)
+        .seed(1)
+        .workers(4)
+        .chunk_rows(8192)
+        .queue_depth(8)
+        .build()?;
 
     let mut src = data_cfg.stream(1);
     let total = Stopwatch::start();
-    let res = run_pipeline(&cfg, &mut src, Some(&sample)).expect("pipeline");
-    let t_ckm_total = total.seconds();
+    let (artifact, stats) = ckm.sketch_from(&mut src, Some(&sample))?;
+    let t_sketch = total.seconds();
     println!(
         "sketch: {:.2}s ({:.2} Mpts/s across {} workers, {} chunks, backend={})",
-        res.sketch_stats.wall_seconds,
-        res.sketch_stats.throughput() / 1e6,
-        res.sketch_stats.rows_per_worker.len(),
-        res.sketch_stats.chunks,
-        res.sketch_stats.backend,
+        stats.wall_seconds,
+        stats.throughput() / 1e6,
+        stats.rows_per_worker.len(),
+        stats.chunks,
+        stats.backend,
     );
+    let sw_solve = Stopwatch::start();
+    let sol = ckm.solve(&artifact, k)?;
+    let t_solve = sw_solve.seconds();
+    let t_ckm_total = total.seconds();
     println!(
         "solve:  {:.2}s (cost {:.4e}, sigma2 {:.3})",
-        res.job.seconds_in(ckm::coordinator::state::Phase::Solving),
-        res.solution.cost,
-        res.sigma2
+        t_solve, sol.cost, artifact.op.sigma2
     );
     let sketch_bytes = 16 * m + 8 * m * n_dims;
     let data_bytes = 8 * n_points * n_dims;
@@ -66,8 +71,6 @@ fn main() {
 
     // Score against Lloyd-Max on a materialized copy of the same stream.
     println!("materializing the same stream for the Lloyd-Max comparison...");
-    let mut rng = Rng::new(12345);
-    let _ = &mut rng;
     let g = {
         // identical stream → identical points
         let mut src = data_cfg.stream(1);
@@ -82,10 +85,11 @@ fn main() {
         }
         pts
     };
-    let sse_ckm = sse(&g, n_dims, &res.solution.centroids);
+    let sse_ckm = sse(&g, n_dims, &sol.centroids);
 
     let sw = Stopwatch::start();
-    let km1 = kmeans(&g, n_dims, k, &KmOptions { init: KmInit::Range, seed: 3, ..Default::default() });
+    let km1 =
+        kmeans(&g, n_dims, k, &KmOptions { init: KmInit::Range, seed: 3, ..Default::default() });
     let t_km1 = sw.seconds();
     let sw = Stopwatch::start();
     let km5 = kmeans(
@@ -105,7 +109,7 @@ fn main() {
         cfg2.generate(&mut r)
     };
     let ari_ckm = adjusted_rand_index(
-        &labels_for(&labelled.dataset.points, n_dims, &res.solution.centroids),
+        &labels_for(&labelled.dataset.points, n_dims, &sol.centroids),
         &labelled.dataset.labels,
     );
     let ari_km5 = adjusted_rand_index(
@@ -115,19 +119,20 @@ fn main() {
 
     println!("\n                SSE/N       ARI*      time");
     println!(
-        "CKM (e2e)   {:9.4}  {:8.3}   {:.2}s total (solve alone: {:.2}s)",
+        "CKM (e2e)   {:9.4}  {:8.3}   {:.2}s total ({:.2}s sketch + {:.2}s solve)",
         sse_ckm / n_points as f64,
         ari_ckm,
         t_ckm_total,
-        res.job.seconds_in(ckm::coordinator::state::Phase::Solving)
+        t_sketch,
+        t_solve
     );
     println!("kmeans x1   {:9.4}  {:8}   {t_km1:.2}s", km1.sse / n_points as f64, "-");
     println!("kmeans x5   {:9.4}  {:8.3}   {t_km5:.2}s", km5.sse / n_points as f64, ari_km5);
-    let solve_t = res.job.seconds_in(ckm::coordinator::state::Phase::Solving);
     println!(
         "\nCKM solve time / kmeans-x5 time: {:.2} (constant-in-N numerator; the paper's\n ratio falls as N grows — see EXPERIMENTS.md Fig-4 notes on baseline speed)",
-        solve_t / t_km5.max(1e-9)
+        t_solve / t_km5.max(1e-9)
     );
     println!("relative SSE (CKM / kmeans x5): {:.3}", sse_ckm / km5.sse);
     assert!(sse_ckm / km5.sse < 2.0, "CKM should be within 2x of kmeans SSE");
+    Ok(())
 }

@@ -1,67 +1,47 @@
 //! Online / mergeable sketching demo: data arrives in several "days" of
 //! streams (possibly on different machines); each day is sketched
-//! independently, the accumulators are merged, and the centroids are
-//! recovered from the merged sketch only — no day's raw data is ever
-//! revisited. The result matches sketching everything at once, exactly.
+//! independently into a durable artifact, the artifacts are merged, and
+//! the centroids are recovered from the merged artifact only — no day's
+//! raw data is ever revisited. The result matches sketching everything at
+//! once, exactly (up to fp addition order).
 //!
 //! Run with: `cargo run --release --example streaming_online`
 
-use ckm::ckm::{solve_with_engine, CkmOptions};
+use ckm::data::dataset::TakeSource;
 use ckm::data::gmm::GmmConfig;
-use ckm::engine::NativeEngine;
-use ckm::sketch::{FreqDist, SketchAccumulator, SketchOp};
-use ckm::util::rng::Rng;
+use ckm::prelude::*;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
     let (k, n_dims, m) = (5usize, 6usize, 512usize);
     let days = 4;
     let per_day = 50_000;
 
-    // One shared frequency matrix fixes the sketch domain forever — new
-    // data can keep arriving and merging indefinitely.
-    let mut rng = Rng::new(3);
+    // One shared builder config fixes the sketch domain forever — new data
+    // can keep arriving, sketching and merging indefinitely.
+    let ckm = Ckm::builder().frequencies(m).sigma2(1.0).seed(11).workers(2).build()?;
     let data_cfg = GmmConfig::paper_default(k, n_dims, days * per_day);
-    let op = SketchOp::new(FreqDist::adapted(1.0).draw(m, n_dims, &mut rng));
 
-    // Whole-dataset reference sketch (what a single pass would produce).
+    // Whole-dataset reference artifact (what a single pass would produce).
     let mut whole_src = data_cfg.stream(99);
-    let mut whole = SketchAccumulator::new(m, n_dims);
-    let mut buf = vec![0.0; 8192 * n_dims];
-    loop {
-        let rows = ckm::data::dataset::PointSource::next_chunk(&mut whole_src, &mut buf);
-        if rows == 0 {
-            break;
-        }
-        whole.update(&op, &buf[..rows * n_dims]);
-    }
+    let whole = ckm.sketch(&mut whole_src)?;
 
-    // Day-by-day: independent accumulators, merged at the end.
-    let mut day_accs: Vec<SketchAccumulator> = Vec::new();
-    let mut day_src = data_cfg.stream(99); // same underlying stream
+    // Day-by-day: one artifact per day off the same underlying stream.
+    let mut day_src = data_cfg.stream(99);
+    let mut day_artifacts: Vec<SketchArtifact> = Vec::new();
     for day in 0..days {
-        let mut acc = SketchAccumulator::new(m, n_dims);
-        let mut seen = 0;
-        while seen < per_day {
-            let want = (per_day - seen).min(8192);
-            let rows =
-                ckm::data::dataset::PointSource::next_chunk(&mut day_src, &mut buf[..want * n_dims]);
-            if rows == 0 {
-                break;
-            }
-            acc.update(&op, &buf[..rows * n_dims]);
-            seen += rows;
-        }
-        println!("day {day}: sketched {} points (|sum| norm {:.3})", acc.count, acc.sum.norm2());
-        day_accs.push(acc);
+        let mut window = TakeSource::new(&mut day_src, per_day);
+        let artifact = ckm.sketch(&mut window)?;
+        println!(
+            "day {day}: sketched {} points (|sum| norm {:.3})",
+            artifact.count,
+            artifact.sum.norm2()
+        );
+        day_artifacts.push(artifact);
     }
-    let mut merged = day_accs.remove(0);
-    for acc in &day_accs {
-        merged.merge(acc);
-    }
+    let merged = SketchArtifact::merge_all(&day_artifacts)?;
     println!("\nmerged {} points across {days} days", merged.count);
 
-    let z_whole = whole.finalize();
-    let z_merged = merged.finalize();
+    let (z_whole, z_merged) = (whole.z(), merged.z());
     let max_diff = z_whole
         .re
         .iter()
@@ -70,18 +50,22 @@ fn main() {
         .map(|(a, b)| (a - b).abs())
         .fold(0.0f64, f64::max);
     println!("max |merged - single-pass| = {max_diff:.3e} (exact up to fp addition order)");
-    assert!(max_diff < 1e-10);
+    assert!(max_diff < 1e-9);
+    assert_eq!(merged.count, whole.count);
+    assert_eq!(merged.bounds, whole.bounds);
 
-    // Recover the centroids from the merged sketch alone.
-    let engine = NativeEngine::new(op);
-    let sol = solve_with_engine(
-        &z_merged,
-        &engine,
-        &merged.bounds,
-        k,
-        None,
-        &CkmOptions { replicates: 2, seed: 5, ..CkmOptions::default() },
+    // Recover the centroids from the merged artifact alone.
+    let solver = Ckm::builder()
+        .frequencies(m)
+        .sigma2(1.0)
+        .seed(11)
+        .replicates(2)
+        .build()?;
+    let sol = solver.solve(&merged, k)?;
+    println!(
+        "\nrecovered {} centroids from the merged artifact (cost {:.3e})",
+        sol.centroids.rows, sol.cost
     );
-    println!("\nrecovered {} centroids from the merged sketch (cost {:.3e})", sol.centroids.rows, sol.cost);
     println!("weights: {:?}", sol.normalized_weights());
+    Ok(())
 }

@@ -1,0 +1,444 @@
+//! Durable, mergeable sketch artifacts.
+//!
+//! A [`SketchArtifact`] is the streaming accumulator's state (unnormalized
+//! complex sums + point count + box bounds) plus the *provenance* of the
+//! sketching operator it was computed with ([`OpSpec`]). Because the sketch
+//! is linear in the empirical measure, artifacts over shards merge exactly;
+//! because the operator is re-derivable from the provenance and guarded by
+//! a checksum, an artifact can be saved, shipped to another machine, and
+//! solved there — many times, for different `K` — with no way to silently
+//! pair it with the wrong frequency matrix.
+//!
+//! The on-disk format is versioned JSON (see [`SKETCH_FORMAT_VERSION`]);
+//! floats round-trip bit-for-bit (shortest-round-trip decimal encoding).
+
+use super::ApiError;
+use crate::data::dataset::Bounds;
+use crate::linalg::{CVec, Mat};
+use crate::sketch::{FreqDist, RadiusKind, SketchOp};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use std::path::Path;
+
+/// Version of the artifact JSON schema this build reads and writes.
+pub const SKETCH_FORMAT_VERSION: u32 = 1;
+
+/// Salt mixed into the builder seed for the operator's dedicated RNG
+/// stream, so the frequency draw is independent of how many draws σ²
+/// estimation consumed (and therefore reproducible from provenance alone).
+const OP_SEED_SALT: u64 = 0xA5A5_5EED_C0DE_2026;
+
+/// Provenance of a sketching operator: everything needed to re-derive the
+/// frequency matrix `W` deterministically, plus a checksum of the realized
+/// matrix so drift (corrupted files, incompatible RNG/sampler builds) is
+/// detected instead of producing garbage centroids.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OpSpec {
+    /// The builder seed the operator stream was derived from.
+    pub seed: u64,
+    pub radius: RadiusKind,
+    pub sigma2: f64,
+    /// Number of frequencies (rows of `W`).
+    pub m: usize,
+    /// Data dimension (columns of `W`).
+    pub n_dims: usize,
+    /// `fnv1a:<16 hex digits>` over the shape and bit patterns of `W`.
+    pub checksum: String,
+}
+
+impl OpSpec {
+    /// Draw the operator for `(seed, radius, sigma2, m, n_dims)` and record
+    /// its provenance. Deterministic: the same inputs always produce the
+    /// same `W`, on any machine.
+    pub fn derive(
+        seed: u64,
+        radius: RadiusKind,
+        sigma2: f64,
+        m: usize,
+        n_dims: usize,
+    ) -> (OpSpec, SketchOp) {
+        let mut rng = Rng::new(seed ^ OP_SEED_SALT);
+        let w = FreqDist::new(radius, sigma2).draw(m, n_dims, &mut rng);
+        let checksum = w_checksum(&w);
+        (OpSpec { seed, radius, sigma2, m, n_dims, checksum }, SketchOp::new(w))
+    }
+
+    /// Re-derive the operator from this provenance, verifying the checksum.
+    pub fn materialize(&self) -> Result<SketchOp, ApiError> {
+        let (fresh, op) = OpSpec::derive(self.seed, self.radius, self.sigma2, self.m, self.n_dims);
+        if fresh.checksum != self.checksum {
+            return Err(ApiError::ChecksumMismatch {
+                expected: self.checksum.clone(),
+                actual: fresh.checksum,
+            });
+        }
+        Ok(op)
+    }
+
+    /// Compact human-readable description (used in mismatch errors).
+    pub fn describe(&self) -> String {
+        format!(
+            "[seed={} radius={} sigma2={} m={} n={} {}]",
+            self.seed,
+            self.radius.name(),
+            self.sigma2,
+            self.m,
+            self.n_dims,
+            self.checksum
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            // u64 seeds don't fit exactly in a JSON double; store as text.
+            ("seed", Json::Str(self.seed.to_string())),
+            ("radius", Json::Str(self.radius.name().to_string())),
+            ("sigma2", Json::Num(self.sigma2)),
+            ("m", Json::Num(self.m as f64)),
+            ("n_dims", Json::Num(self.n_dims as f64)),
+            ("checksum", Json::Str(self.checksum.clone())),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<OpSpec, ApiError> {
+        let seed = j
+            .get("seed")
+            .as_str()
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| bad("op.seed must be a decimal u64 string"))?;
+        let radius = RadiusKind::parse(j.get("radius").as_str().unwrap_or(""))
+            .map_err(|e| bad(&format!("op.radius: {e}")))?;
+        let sigma2 = j.get("sigma2").as_f64().ok_or_else(|| bad("op.sigma2 missing"))?;
+        if !(sigma2.is_finite() && sigma2 > 0.0) {
+            return Err(bad("op.sigma2 must be finite and positive"));
+        }
+        let m = j.get("m").as_usize().ok_or_else(|| bad("op.m missing"))?;
+        let n_dims = j.get("n_dims").as_usize().ok_or_else(|| bad("op.n_dims missing"))?;
+        if m == 0 || n_dims == 0 {
+            return Err(bad("op.m and op.n_dims must be >= 1"));
+        }
+        let checksum = j
+            .get("checksum")
+            .as_str()
+            .filter(|s| s.starts_with("fnv1a:"))
+            .ok_or_else(|| bad("op.checksum missing or malformed"))?
+            .to_string();
+        Ok(OpSpec { seed, radius, sigma2, m, n_dims, checksum })
+    }
+}
+
+/// A durable partial sketch: the unit of sketch-once / ship / merge /
+/// solve-many. Create one with [`crate::api::Ckm::sketch`] (or siblings),
+/// or load one with [`SketchArtifact::from_file`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SketchArtifact {
+    /// Provenance of the operator all sums were computed with.
+    pub op: OpSpec,
+    /// Unnormalized `Σ e^{-iωx}` over every point this artifact absorbed.
+    pub sum: CVec,
+    /// Number of points absorbed.
+    pub count: usize,
+    /// One-pass box bounds of the absorbed points (CLOMPR's constraints).
+    pub bounds: Bounds,
+}
+
+impl SketchArtifact {
+    /// The normalized sketch `ẑ = sum / count` CLOMPR decodes.
+    pub fn z(&self) -> CVec {
+        crate::sketch::streaming::normalize_sum(&self.sum, self.count)
+    }
+
+    /// Exact merge with another shard's artifact (associative,
+    /// commutative). Fails with [`ApiError::OperatorMismatch`] unless both
+    /// artifacts were sketched with the identical operator.
+    pub fn merge(&self, other: &SketchArtifact) -> Result<SketchArtifact, ApiError> {
+        if self.op != other.op {
+            return Err(ApiError::OperatorMismatch {
+                left: self.op.describe(),
+                right: other.op.describe(),
+            });
+        }
+        let mut out = self.clone();
+        out.sum.axpy(1.0, &other.sum);
+        out.count += other.count;
+        out.bounds.merge(&other.bounds);
+        Ok(out)
+    }
+
+    /// Fold any number of shard artifacts into one.
+    pub fn merge_all(parts: &[SketchArtifact]) -> Result<SketchArtifact, ApiError> {
+        let (first, rest) = parts
+            .split_first()
+            .ok_or_else(|| bad("merge_all needs at least one artifact"))?;
+        let mut acc = first.clone();
+        for p in rest {
+            acc = acc.merge(p)?;
+        }
+        Ok(acc)
+    }
+
+    /// How many times smaller the artifact is than the raw points it
+    /// summarizes (f64 data vs complex-f64 sketch).
+    pub fn compression_ratio(&self) -> f64 {
+        let data_bytes = (self.count * self.op.n_dims * 8) as f64;
+        let sketch_bytes = (self.op.m * 16) as f64;
+        data_bytes / sketch_bytes
+    }
+
+    // -- serialization ----------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let (lo, hi) = if self.bounds.is_valid() {
+            (self.bounds.lo.as_slice(), self.bounds.hi.as_slice())
+        } else {
+            // ±inf has no JSON encoding; an empty artifact stores no bounds.
+            (&[][..], &[][..])
+        };
+        Json::obj(vec![
+            ("format", Json::Str("ckm-sketch".to_string())),
+            ("version", Json::Num(SKETCH_FORMAT_VERSION as f64)),
+            ("op", self.op.to_json()),
+            ("count", Json::Num(self.count as f64)),
+            ("sum_re", Json::arr_f64(&self.sum.re)),
+            ("sum_im", Json::arr_f64(&self.sum.im)),
+            ("bounds_lo", Json::arr_f64(lo)),
+            ("bounds_hi", Json::arr_f64(hi)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<SketchArtifact, ApiError> {
+        if j.get("format").as_str() != Some("ckm-sketch") {
+            return Err(bad("not a ckm-sketch file (missing format tag)"));
+        }
+        let version = j.get("version").as_usize().ok_or_else(|| bad("version missing"))?;
+        if version != SKETCH_FORMAT_VERSION as usize {
+            return Err(ApiError::UnsupportedVersion {
+                found: version,
+                supported: SKETCH_FORMAT_VERSION,
+            });
+        }
+        let op = OpSpec::from_json(j.get("op"))?;
+        let count = j.get("count").as_usize().ok_or_else(|| bad("count missing"))?;
+        let re = f64_arr(j, "sum_re")?;
+        let im = f64_arr(j, "sum_im")?;
+        if re.len() != op.m || im.len() != op.m {
+            return Err(bad(&format!(
+                "sum length {}/{} != op.m {}",
+                re.len(),
+                im.len(),
+                op.m
+            )));
+        }
+        let lo = f64_arr(j, "bounds_lo")?;
+        let hi = f64_arr(j, "bounds_hi")?;
+        let bounds = if lo.is_empty() && hi.is_empty() {
+            Bounds::empty(op.n_dims)
+        } else if lo.len() == op.n_dims && hi.len() == op.n_dims {
+            Bounds { lo, hi }
+        } else {
+            return Err(bad("bounds length != op.n_dims"));
+        };
+        if count > 0 && !bounds.is_valid() {
+            return Err(bad("non-empty artifact with invalid bounds"));
+        }
+        Ok(SketchArtifact { op, sum: CVec::from_parts(re, im), count, bounds })
+    }
+
+    /// Write the artifact as pretty-printed versioned JSON.
+    pub fn to_file<P: AsRef<Path>>(&self, path: P) -> Result<(), ApiError> {
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Load an artifact, validating the format version, structure, and the
+    /// operator checksum (the frequency matrix is re-derived and compared,
+    /// so an artifact from an incompatible build fails here, loudly).
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<SketchArtifact, ApiError> {
+        let text = std::fs::read_to_string(path)?;
+        let art = SketchArtifact::from_json(&Json::parse(&text)?)?;
+        art.op.materialize()?; // verify checksum eagerly: fail at load time
+        Ok(art)
+    }
+}
+
+fn bad(msg: &str) -> ApiError {
+    ApiError::Format(msg.to_string())
+}
+
+fn f64_arr(j: &Json, key: &str) -> Result<Vec<f64>, ApiError> {
+    j.get(key)
+        .as_arr()
+        .ok_or_else(|| bad(&format!("{key} missing or not an array")))?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| bad(&format!("{key} holds a non-number"))))
+        .collect()
+}
+
+/// FNV-1a (64-bit) over the shape and f64 bit patterns of `W`.
+fn w_checksum(w: &Mat) -> String {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut absorb = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    absorb(&(w.rows as u64).to_le_bytes());
+    absorb(&(w.cols as u64).to_le_bytes());
+    for &x in &w.data {
+        absorb(&x.to_bits().to_le_bytes());
+    }
+    format!("fnv1a:{h:016x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SketchAccumulator;
+    use crate::testing::gen;
+
+    fn toy_artifact(seed: u64, n_pts: usize) -> SketchArtifact {
+        let (spec, op) = OpSpec::derive(seed, RadiusKind::AdaptedRadius, 1.0, 16, 3);
+        let mut rng = Rng::new(seed.wrapping_add(99));
+        let pts = gen::mat_normal(&mut rng, n_pts, 3);
+        let mut acc = SketchAccumulator::new(16, 3);
+        acc.update(&op, &pts);
+        SketchArtifact { op: spec, sum: acc.sum, count: acc.count, bounds: acc.bounds }
+    }
+
+    #[test]
+    fn derive_is_deterministic_and_materialize_verifies() {
+        let (a, op_a) = OpSpec::derive(5, RadiusKind::AdaptedRadius, 2.0, 32, 4);
+        let (b, op_b) = OpSpec::derive(5, RadiusKind::AdaptedRadius, 2.0, 32, 4);
+        assert_eq!(a, b);
+        assert_eq!(op_a.w.data, op_b.w.data);
+        let op_c = a.materialize().unwrap();
+        assert_eq!(op_c.w.data, op_a.w.data);
+    }
+
+    #[test]
+    fn materialize_rejects_tampered_checksum() {
+        let (mut spec, _) = OpSpec::derive(5, RadiusKind::AdaptedRadius, 2.0, 32, 4);
+        spec.checksum = "fnv1a:0000000000000000".to_string();
+        match spec.materialize() {
+            Err(ApiError::ChecksumMismatch { .. }) => {}
+            other => panic!("expected ChecksumMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn different_seed_sigma_or_shape_changes_checksum() {
+        let (base, _) = OpSpec::derive(1, RadiusKind::AdaptedRadius, 1.0, 16, 3);
+        let variants =
+            [(2u64, 1.0, 16usize, 3usize), (1, 2.0, 16, 3), (1, 1.0, 8, 3), (1, 1.0, 16, 2)];
+        for (seed, sigma2, m, n) in variants {
+            let (other, _) = OpSpec::derive(seed, RadiusKind::AdaptedRadius, sigma2, m, n);
+            assert_ne!(base.checksum, other.checksum, "seed={seed} sigma2={sigma2} m={m} n={n}");
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_exact() {
+        let art = toy_artifact(7, 41);
+        let text = art.to_json().to_pretty();
+        let back = SketchArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, art); // PartialEq over every f64 bit pattern
+    }
+
+    #[test]
+    fn file_round_trip_and_checksum_verified_on_load() {
+        let art = toy_artifact(3, 20);
+        let path = std::env::temp_dir().join(format!("ckm_art_{}.json", std::process::id()));
+        art.to_file(&path).unwrap();
+        let back = SketchArtifact::from_file(&path).unwrap();
+        assert_eq!(back, art);
+
+        // corrupt the checksum in the file text → load fails loudly
+        let text = std::fs::read_to_string(&path).unwrap();
+        let tampered = text.replace(&art.op.checksum, "fnv1a:0123456789abcdef");
+        assert_ne!(tampered, text, "checksum string should appear in the file");
+        std::fs::write(&path, tampered).unwrap();
+        match SketchArtifact::from_file(&path) {
+            Err(ApiError::ChecksumMismatch { .. }) => {}
+            other => panic!("expected ChecksumMismatch, got {other:?}"),
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn merge_matches_single_accumulator_and_rejects_mismatch() {
+        let (spec, op) = OpSpec::derive(11, RadiusKind::AdaptedRadius, 1.0, 16, 3);
+        let mut rng = Rng::new(4);
+        let pts = gen::mat_normal(&mut rng, 60, 3);
+        let mut whole = SketchAccumulator::new(16, 3);
+        whole.update(&op, &pts);
+        let halves: Vec<SketchArtifact> = [&pts[..90], &pts[90..]]
+            .iter()
+            .map(|chunk| {
+                let mut acc = SketchAccumulator::new(16, 3);
+                acc.update(&op, chunk);
+                SketchArtifact {
+                    op: spec.clone(),
+                    sum: acc.sum,
+                    count: acc.count,
+                    bounds: acc.bounds,
+                }
+            })
+            .collect();
+        let merged = halves[0].merge(&halves[1]).unwrap();
+        assert_eq!(merged.count, 60);
+        // exact up to fp addition order (the split changes the order)
+        crate::testing::all_close(&merged.sum.re, &whole.sum.re, 1e-10).unwrap();
+        crate::testing::all_close(&merged.sum.im, &whole.sum.im, 1e-10).unwrap();
+        assert_eq!(merged.bounds, whole.bounds);
+
+        let foreign = toy_artifact(999, 5);
+        match halves[0].merge(&foreign) {
+            Err(ApiError::OperatorMismatch { .. }) => {}
+            other => panic!("expected OperatorMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn merge_all_folds_in_order() {
+        let parts: Vec<SketchArtifact> =
+            (0..3).map(|_| toy_artifact(21, 10)).collect();
+        let merged = SketchArtifact::merge_all(&parts).unwrap();
+        assert_eq!(merged.count, 30);
+        assert!(SketchArtifact::merge_all(&[]).is_err());
+    }
+
+    #[test]
+    fn version_gate_rejects_future_files() {
+        let mut j = toy_artifact(2, 4).to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".to_string(), Json::Num(99.0));
+        }
+        match SketchArtifact::from_json(&j) {
+            Err(ApiError::UnsupportedVersion { found: 99, .. }) => {}
+            other => panic!("expected UnsupportedVersion, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_artifact_round_trips_without_bounds() {
+        let (spec, _) = OpSpec::derive(1, RadiusKind::AdaptedRadius, 1.0, 8, 2);
+        let art = SketchArtifact {
+            op: spec,
+            sum: CVec::zeros(8),
+            count: 0,
+            bounds: Bounds::empty(2),
+        };
+        let back = SketchArtifact::from_json(&art.to_json()).unwrap();
+        assert_eq!(back.count, 0);
+        assert!(!back.bounds.is_valid());
+        assert_eq!(back, art);
+    }
+
+    #[test]
+    fn compression_ratio_counts_bytes() {
+        let art = toy_artifact(6, 1000);
+        // 1000 pts × 3 dims × 8 B vs 16 moments × 16 B
+        assert!((art.compression_ratio() - (1000.0 * 3.0 * 8.0) / (16.0 * 16.0)).abs() < 1e-12);
+    }
+}

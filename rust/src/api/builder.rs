@@ -1,0 +1,557 @@
+//! The `Ckm` facade: one validated configuration, explicit stages.
+//!
+//! [`Ckm::builder`] consolidates every knob that used to be spread across
+//! `PipelineConfig`, `CkmOptions` and `SketcherConfig` (with `replicates`,
+//! `seed` and `strategy` duplicated between them) into a single config that
+//! is validated once, at [`CkmBuilder::build`], with typed errors instead
+//! of mid-pipeline panics. The pipeline is then split into explicit stages:
+//!
+//! - [`Ckm::sketch`] / [`Ckm::sketch_from`] / [`Ckm::sketch_slice`] —
+//!   stream points once into a durable [`SketchArtifact`];
+//! - [`SketchArtifact::merge`] — combine shards, exactly;
+//! - [`Ckm::solve`] / [`Ckm::solve_with_data`] / [`Ckm::solve_detailed`] —
+//!   recover centroids from an artifact, any number of times, for any `K`.
+
+use super::artifact::{OpSpec, SketchArtifact};
+use super::ApiError;
+use crate::ckm::optim::OptimOptions;
+use crate::ckm::{solve_with_engine, CkmOptions, InitStrategy, Solution};
+use crate::coordinator::sketcher::{distributed_sketch, SketchStats, SketcherConfig};
+use crate::coordinator::state::ReplicateManager;
+use crate::coordinator::Backend;
+use crate::data::dataset::{PointSource, SliceSource};
+use crate::engine::{
+    CkmEngine, EngineFactory, NativeEngine, NativeFactory, PjrtEngine, PjrtFactory,
+};
+use crate::sketch::scale::ScaleEstimator;
+use crate::sketch::RadiusKind;
+use crate::util::rng::Rng;
+use std::path::PathBuf;
+
+/// The validated configuration behind a [`Ckm`]. Obtain via
+/// [`Ckm::builder`]; read via [`Ckm::config`].
+#[derive(Clone, Debug)]
+pub struct CkmConfig {
+    /// Number of frequencies `m` (sketch size).
+    pub m: usize,
+    /// Frequency scale σ²; `None` = estimate from a scale sample at sketch
+    /// time (the paper's "sketch a small fraction of X" step).
+    pub sigma2: Option<f64>,
+    /// Radial law of the frequency distribution.
+    pub radius: RadiusKind,
+    /// Compute backend for sketching and solving.
+    pub backend: Backend,
+    /// Artifacts dir for the PJRT backend (`None` = default).
+    pub artifacts_dir: Option<PathBuf>,
+    /// Leader/worker streaming-sketch knobs.
+    pub sketcher: SketcherConfig,
+    /// Independent solver replicates; best sketch cost wins (paper §4.4).
+    pub replicates: usize,
+    /// Step-1 ascent initialization strategy.
+    pub strategy: InitStrategy,
+    /// Master seed: operator draw, σ² estimation and replicate seeds all
+    /// derive deterministic streams from it.
+    pub seed: u64,
+    /// CLOMPR step-1 ascent options.
+    pub step1: OptimOptions,
+    /// CLOMPR step-5 joint-descent options.
+    pub step5: OptimOptions,
+}
+
+impl Default for CkmConfig {
+    /// Mirrors the historical `PipelineConfig::new` + `CkmOptions::default`
+    /// defaults (asserted by the builder-parity integration test).
+    fn default() -> CkmConfig {
+        let solver = CkmOptions::default();
+        CkmConfig {
+            m: 1000,
+            sigma2: None,
+            radius: RadiusKind::AdaptedRadius,
+            backend: Backend::Native,
+            artifacts_dir: None,
+            sketcher: SketcherConfig::default(),
+            replicates: 1,
+            strategy: InitStrategy::Range,
+            seed: 0,
+            step1: solver.step1,
+            step5: solver.step5,
+        }
+    }
+}
+
+/// Fluent builder for [`Ckm`]. Every setter returns `self`; nothing is
+/// checked until [`CkmBuilder::build`], which returns every violation as a
+/// typed [`ApiError::InvalidConfig`] instead of panicking later.
+#[derive(Clone, Debug, Default)]
+pub struct CkmBuilder {
+    cfg: CkmConfig,
+}
+
+impl CkmBuilder {
+    /// Sketch size `m` (number of frequencies). Default 1000.
+    pub fn frequencies(mut self, m: usize) -> Self {
+        self.cfg.m = m;
+        self
+    }
+
+    /// Fix the frequency scale σ² instead of estimating it from data.
+    pub fn sigma2(mut self, sigma2: f64) -> Self {
+        self.cfg.sigma2 = Some(sigma2);
+        self
+    }
+
+    /// Set or clear σ² (convenience for config plumbing).
+    pub fn sigma2_opt(mut self, sigma2: Option<f64>) -> Self {
+        self.cfg.sigma2 = sigma2;
+        self
+    }
+
+    /// Radial law of the frequency distribution (default: adapted radius).
+    pub fn radius(mut self, radius: RadiusKind) -> Self {
+        self.cfg.radius = radius;
+        self
+    }
+
+    /// Compute backend (default: native).
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+
+    /// Artifacts directory for the PJRT backend.
+    pub fn artifacts_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.cfg.artifacts_dir = Some(dir.into());
+        self
+    }
+
+    /// Set or clear the PJRT artifacts directory.
+    pub fn artifacts_dir_opt(mut self, dir: Option<PathBuf>) -> Self {
+        self.cfg.artifacts_dir = dir;
+        self
+    }
+
+    /// Replace the whole streaming-sketcher config at once.
+    pub fn sketcher(mut self, sketcher: SketcherConfig) -> Self {
+        self.cfg.sketcher = sketcher;
+        self
+    }
+
+    /// Number of sketching worker threads (default 4).
+    pub fn workers(mut self, n_workers: usize) -> Self {
+        self.cfg.sketcher.n_workers = n_workers;
+        self
+    }
+
+    /// Rows per queued sketching chunk (default 4096).
+    pub fn chunk_rows(mut self, chunk_rows: usize) -> Self {
+        self.cfg.sketcher.chunk_rows = chunk_rows;
+        self
+    }
+
+    /// Bounded-queue depth between the stream leader and the workers.
+    pub fn queue_depth(mut self, queue_depth: usize) -> Self {
+        self.cfg.sketcher.queue_depth = queue_depth;
+        self
+    }
+
+    /// Independent solver replicates (best sketch cost kept). Default 1.
+    pub fn replicates(mut self, replicates: usize) -> Self {
+        self.cfg.replicates = replicates;
+        self
+    }
+
+    /// Step-1 initialization strategy (default: Range — pure compressive).
+    pub fn strategy(mut self, strategy: InitStrategy) -> Self {
+        self.cfg.strategy = strategy;
+        self
+    }
+
+    /// Master seed (default 0).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Override CLOMPR step-1 ascent options.
+    pub fn step1(mut self, opts: OptimOptions) -> Self {
+        self.cfg.step1 = opts;
+        self
+    }
+
+    /// Override CLOMPR step-5 joint-descent options.
+    pub fn step5(mut self, opts: OptimOptions) -> Self {
+        self.cfg.step5 = opts;
+        self
+    }
+
+    /// Validate and freeze the configuration.
+    pub fn build(self) -> Result<Ckm, ApiError> {
+        let cfg = self.cfg;
+        let invalid =
+            |field: &'static str, reason: String| ApiError::InvalidConfig { field, reason };
+        if cfg.m == 0 {
+            return Err(invalid("frequencies", "need m >= 1 frequencies".into()));
+        }
+        if let Some(s2) = cfg.sigma2 {
+            if !(s2.is_finite() && s2 > 0.0) {
+                return Err(invalid("sigma2", format!("must be finite and positive, got {s2}")));
+            }
+        }
+        if cfg.replicates == 0 {
+            return Err(invalid("replicates", "need at least one replicate".into()));
+        }
+        if cfg.sketcher.n_workers == 0 {
+            return Err(invalid("workers", "need at least one sketching worker".into()));
+        }
+        if cfg.sketcher.chunk_rows == 0 {
+            return Err(invalid("chunk_rows", "need at least one row per chunk".into()));
+        }
+        if cfg.sketcher.queue_depth == 0 {
+            return Err(invalid("queue_depth", "need queue depth >= 1".into()));
+        }
+        for (name, opts) in [("step1", &cfg.step1), ("step5", &cfg.step5)] {
+            if opts.max_iters == 0 {
+                return Err(invalid("optimizer", format!("{name}.max_iters must be >= 1")));
+            }
+            if !(opts.step0.is_finite() && opts.step0 > 0.0) {
+                return Err(invalid("optimizer", format!("{name}.step0 must be positive")));
+            }
+            if !(opts.tol.is_finite() && opts.tol >= 0.0) {
+                return Err(invalid("optimizer", format!("{name}.tol must be >= 0")));
+            }
+        }
+        Ok(Ckm { cfg })
+    }
+}
+
+/// Everything a solve reports beyond the winning [`Solution`].
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Best replicate by sketch cost (the paper's §4.4 selection rule).
+    pub solution: Solution,
+    /// Sketch cost of every replicate, in run order.
+    pub replicate_costs: Vec<f64>,
+}
+
+/// The compressive-K-means facade. Immutable once built; cheap to clone.
+///
+/// See the [module docs](crate::api) for the sketch-once / solve-many flow.
+#[derive(Clone, Debug)]
+pub struct Ckm {
+    cfg: CkmConfig,
+}
+
+impl Ckm {
+    /// Start configuring a pipeline. All defaults mirror the historical
+    /// `PipelineConfig::new` + `CkmOptions::default` behavior.
+    pub fn builder() -> CkmBuilder {
+        CkmBuilder::default()
+    }
+
+    /// The frozen, validated configuration.
+    pub fn config(&self) -> &CkmConfig {
+        &self.cfg
+    }
+
+    // -- sketch stage -----------------------------------------------------
+
+    /// Sketch a streaming source into a durable artifact. Requires a fixed
+    /// σ² (set `.sigma2(..)` on the builder) — use [`Ckm::sketch_from`]
+    /// or [`Ckm::sketch_slice`] to estimate σ² from data instead.
+    pub fn sketch(&self, source: &mut dyn PointSource) -> Result<SketchArtifact, ApiError> {
+        self.sketch_from(source, None).map(|(artifact, _)| artifact)
+    }
+
+    /// Sketch a streaming source, estimating σ² from `sample` when the
+    /// builder did not fix it, and discarding the throughput stats.
+    pub fn sketch_with_sample(
+        &self,
+        source: &mut dyn PointSource,
+        sample: &[f64],
+    ) -> Result<SketchArtifact, ApiError> {
+        self.sketch_from(source, Some(sample)).map(|(artifact, _)| artifact)
+    }
+
+    /// Sketch an in-memory row-major slice (which doubles as the σ²
+    /// estimation sample when σ² is not fixed).
+    pub fn sketch_slice(&self, points: &[f64], n_dims: usize) -> Result<SketchArtifact, ApiError> {
+        if n_dims == 0 || points.len() % n_dims != 0 {
+            return Err(ApiError::InvalidConfig {
+                field: "points",
+                reason: format!("length {} is not a multiple of n_dims {n_dims}", points.len()),
+            });
+        }
+        let mut source = SliceSource::new(points, n_dims);
+        self.sketch_from(&mut source, Some(points)).map(|(artifact, _)| artifact)
+    }
+
+    /// Core sketch entry point: stream `source` through the sharded
+    /// leader/worker sketcher and return the artifact plus throughput
+    /// stats. `scale_sample` feeds σ² estimation when the builder did not
+    /// fix σ².
+    pub fn sketch_from(
+        &self,
+        source: &mut dyn PointSource,
+        scale_sample: Option<&[f64]>,
+    ) -> Result<(SketchArtifact, SketchStats), ApiError> {
+        let n_dims = source.n_dims();
+        if n_dims == 0 {
+            return Err(ApiError::InvalidConfig {
+                field: "source",
+                reason: "source reports n_dims = 0".into(),
+            });
+        }
+        let sigma2 = match self.cfg.sigma2 {
+            Some(s2) => s2,
+            None => {
+                let sample =
+                    scale_sample.filter(|s| !s.is_empty()).ok_or(ApiError::Sigma2Required)?;
+                let mut rng = Rng::new(self.cfg.seed);
+                ScaleEstimator::default().estimate(sample, n_dims, &mut rng)
+            }
+        };
+        let (factory, spec) = self.factory(sigma2, n_dims)?;
+        let (acc, stats) = distributed_sketch(factory.as_ref(), source, &self.cfg.sketcher)
+            .map_err(ApiError::backend)?;
+        if acc.count == 0 {
+            return Err(ApiError::EmptySource);
+        }
+        let artifact =
+            SketchArtifact { op: spec, sum: acc.sum, count: acc.count, bounds: acc.bounds };
+        Ok((artifact, stats))
+    }
+
+    // -- solve stage ------------------------------------------------------
+
+    /// Recover `k` centroids from an artifact. Pure sketch decoding: no
+    /// data access (requires the Range init strategy).
+    pub fn solve(&self, artifact: &SketchArtifact, k: usize) -> Result<Solution, ApiError> {
+        self.solve_detailed(artifact, k, None).map(|r| r.solution)
+    }
+
+    /// Solve with data access, enabling the Sample/K++ init strategies.
+    /// `data` is `(row-major points, n_dims)`.
+    pub fn solve_with_data(
+        &self,
+        artifact: &SketchArtifact,
+        k: usize,
+        data: (&[f64], usize),
+    ) -> Result<Solution, ApiError> {
+        self.solve_detailed(artifact, k, Some(data)).map(|r| r.solution)
+    }
+
+    /// Full solve: re-derives and verifies the operator from the
+    /// artifact's provenance, runs `replicates` independent CLOMPR decodes
+    /// and keeps the best by sketch cost.
+    pub fn solve_detailed(
+        &self,
+        artifact: &SketchArtifact,
+        k: usize,
+        data: Option<(&[f64], usize)>,
+    ) -> Result<SolveReport, ApiError> {
+        if k == 0 {
+            return Err(ApiError::InvalidConfig {
+                field: "k",
+                reason: "need at least one centroid".into(),
+            });
+        }
+        if artifact.count == 0 {
+            return Err(ApiError::EmptySketch);
+        }
+        if self.cfg.strategy.needs_data() && data.is_none() {
+            return Err(ApiError::InvalidConfig {
+                field: "strategy",
+                reason: format!(
+                    "init strategy '{}' needs data access; use solve_with_data",
+                    self.cfg.strategy.name()
+                ),
+            });
+        }
+        if let Some((pts, nd)) = data {
+            if nd != artifact.op.n_dims {
+                return Err(ApiError::InvalidConfig {
+                    field: "data",
+                    reason: format!("data dims {nd} != sketch dims {}", artifact.op.n_dims),
+                });
+            }
+            if pts.len() % nd.max(1) != 0 {
+                return Err(ApiError::InvalidConfig {
+                    field: "data",
+                    reason: format!("data length {} is not a multiple of dims {nd}", pts.len()),
+                });
+            }
+        }
+        let op = artifact.op.materialize()?;
+        let engine: Box<dyn CkmEngine> = match self.cfg.backend {
+            Backend::Native => Box::new(NativeEngine::with_options(
+                op,
+                self.cfg.step1.clone(),
+                self.cfg.step5.clone(),
+            )),
+            Backend::Pjrt => {
+                let dir = self.pjrt_dir();
+                PjrtFactory { dir, op }.make().map_err(ApiError::backend)?
+            }
+        };
+        let z = artifact.z();
+        let mut rm = ReplicateManager::new();
+        let mut rep_rng = Rng::new(self.cfg.seed ^ 0x5EED);
+        for _ in 0..self.cfg.replicates.max(1) {
+            let opts = CkmOptions {
+                strategy: self.cfg.strategy,
+                step1: self.cfg.step1.clone(),
+                step5: self.cfg.step5.clone(),
+                replicates: 1,
+                seed: rep_rng.next_u64(),
+            };
+            rm.offer(solve_with_engine(&z, engine.as_ref(), &artifact.bounds, k, data, &opts));
+        }
+        let replicate_costs = rm.costs.clone();
+        let solution = rm.into_best().expect("at least one replicate ran");
+        Ok(SolveReport { solution, replicate_costs })
+    }
+
+    // -- internals --------------------------------------------------------
+
+    fn pjrt_dir(&self) -> PathBuf {
+        self.cfg
+            .artifacts_dir
+            .clone()
+            .unwrap_or_else(crate::runtime::pjrt::PjrtRuntime::default_dir)
+    }
+
+    /// Build the per-worker engine factory and the operator provenance for
+    /// a sketch at dimension `n_dims` and the resolved `sigma2`.
+    fn factory(
+        &self,
+        sigma2: f64,
+        n_dims: usize,
+    ) -> Result<(Box<dyn EngineFactory>, OpSpec), ApiError> {
+        match self.cfg.backend {
+            Backend::Native => {
+                let (spec, op) =
+                    OpSpec::derive(self.cfg.seed, self.cfg.radius, sigma2, self.cfg.m, n_dims);
+                Ok((Box::new(NativeFactory { op }), spec))
+            }
+            Backend::Pjrt => {
+                let dir = self.pjrt_dir();
+                let rt = crate::runtime::pjrt::PjrtRuntime::new(&dir).map_err(ApiError::backend)?;
+                let m = PjrtEngine::bucketed_m(&rt, self.cfg.m).map_err(ApiError::backend)?;
+                let (spec, op) = OpSpec::derive(self.cfg.seed, self.cfg.radius, sigma2, m, n_dims);
+                Ok((Box::new(PjrtFactory { dir, op }), spec))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gmm::GmmConfig;
+
+    #[test]
+    fn builder_defaults_match_legacy_config() {
+        let ckm = Ckm::builder().build().unwrap();
+        let cfg = ckm.config();
+        assert_eq!(cfg.m, 1000);
+        assert_eq!(cfg.sigma2, None);
+        assert_eq!(cfg.radius, RadiusKind::AdaptedRadius);
+        assert_eq!(cfg.backend, Backend::Native);
+        assert_eq!(cfg.replicates, 1);
+        assert_eq!(cfg.strategy, InitStrategy::Range);
+        assert_eq!(cfg.seed, 0);
+        let sk = SketcherConfig::default();
+        assert_eq!(cfg.sketcher.n_workers, sk.n_workers);
+        assert_eq!(cfg.sketcher.chunk_rows, sk.chunk_rows);
+        assert_eq!(cfg.sketcher.queue_depth, sk.queue_depth);
+        let solver = CkmOptions::default();
+        assert_eq!(cfg.step1.max_iters, solver.step1.max_iters);
+        assert_eq!(cfg.step5.max_iters, solver.step5.max_iters);
+    }
+
+    #[test]
+    fn build_rejects_bad_knobs() {
+        for (builder, field) in [
+            (Ckm::builder().frequencies(0), "frequencies"),
+            (Ckm::builder().sigma2(0.0), "sigma2"),
+            (Ckm::builder().sigma2(f64::NAN), "sigma2"),
+            (Ckm::builder().replicates(0), "replicates"),
+            (Ckm::builder().workers(0), "workers"),
+            (Ckm::builder().chunk_rows(0), "chunk_rows"),
+            (Ckm::builder().queue_depth(0), "queue_depth"),
+        ] {
+            match builder.build() {
+                Err(ApiError::InvalidConfig { field: f, .. }) => assert_eq!(f, field),
+                other => panic!("expected InvalidConfig({field}), got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_requires_sigma2_or_sample() {
+        let ckm = Ckm::builder().frequencies(32).build().unwrap();
+        let mut src = GmmConfig::paper_default(2, 3, 100).stream(1);
+        match ckm.sketch(&mut src) {
+            Err(ApiError::Sigma2Required) => {}
+            other => panic!("expected Sigma2Required, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sketch_slice_then_solve_two_k() {
+        let mut rng = Rng::new(8);
+        let mut cfg = GmmConfig::paper_default(3, 4, 4000);
+        cfg.separation = 3.0;
+        let g = cfg.generate(&mut rng);
+        let ckm = Ckm::builder().frequencies(200).seed(5).workers(2).build().unwrap();
+        let art = ckm.sketch_slice(&g.dataset.points, 4).unwrap();
+        assert_eq!(art.count, 4000);
+        assert_eq!(art.op.n_dims, 4);
+        // one sketch, two solves with different K
+        let s3 = ckm.solve(&art, 3).unwrap();
+        let s5 = ckm.solve(&art, 5).unwrap();
+        assert_eq!(s3.centroids.rows, 3);
+        assert_eq!(s5.centroids.rows, 5);
+        assert!(s3.cost.is_finite() && s5.cost.is_finite());
+        // solving is deterministic given the config
+        let s3b = ckm.solve(&art, 3).unwrap();
+        assert_eq!(s3.centroids.data, s3b.centroids.data);
+        assert_eq!(s3.alpha, s3b.alpha);
+    }
+
+    #[test]
+    fn solve_rejects_k_zero_empty_sketch_and_missing_data() {
+        let mut rng = Rng::new(9);
+        let g = GmmConfig::paper_default(2, 3, 500).generate(&mut rng);
+        let ckm = Ckm::builder().frequencies(64).sigma2(1.0).build().unwrap();
+        let art = ckm.sketch_slice(&g.dataset.points, 3).unwrap();
+        assert!(matches!(
+            ckm.solve(&art, 0),
+            Err(ApiError::InvalidConfig { field: "k", .. })
+        ));
+        let mut empty = art.clone();
+        empty.count = 0;
+        assert!(matches!(ckm.solve(&empty, 2), Err(ApiError::EmptySketch)));
+        let sampling = Ckm::builder()
+            .frequencies(64)
+            .sigma2(1.0)
+            .strategy(InitStrategy::Sample)
+            .build()
+            .unwrap();
+        assert!(matches!(
+            sampling.solve(&art, 2),
+            Err(ApiError::InvalidConfig { field: "strategy", .. })
+        ));
+        let sol = sampling.solve_with_data(&art, 2, (&g.dataset.points, 3)).unwrap();
+        assert_eq!(sol.centroids.rows, 2);
+    }
+
+    #[test]
+    fn fixed_sigma2_recorded_in_artifact() {
+        let mut rng = Rng::new(10);
+        let g = GmmConfig::paper_default(2, 3, 300).generate(&mut rng);
+        let ckm = Ckm::builder().frequencies(32).sigma2(2.5).build().unwrap();
+        let art = ckm.sketch_slice(&g.dataset.points, 3).unwrap();
+        assert_eq!(art.op.sigma2, 2.5);
+    }
+}

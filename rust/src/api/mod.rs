@@ -1,0 +1,120 @@
+//! The public facade: one builder, durable sketch artifacts, explicit
+//! sketch → merge → solve stages.
+//!
+//! The paper's core asset is the *sketch*: a tiny, mergeable summary of the
+//! dataset from which centroids are recovered at a cost independent of the
+//! number of points. This module makes that asset a first-class artifact:
+//!
+//! ```no_run
+//! use ckm::api::{Ckm, SketchArtifact};
+//!
+//! # fn demo(points: &[f64]) -> Result<(), ckm::api::ApiError> {
+//! let ckm = Ckm::builder().frequencies(1024).seed(7).build()?;
+//!
+//! // Sketch once (one streaming pass; the data can be discarded after).
+//! let artifact = ckm.sketch_slice(points, 10)?;
+//! artifact.to_file("sketch.json")?;
+//!
+//! // ... possibly on another machine, possibly much later ...
+//! let artifact = SketchArtifact::from_file("sketch.json")?;
+//!
+//! // Solve many times — different K, replicates, seeds — without the data.
+//! let sol10 = ckm.solve(&artifact, 10)?;
+//! let sol20 = ckm.solve(&artifact, 20)?;
+//! # let _ = (sol10, sol20); Ok(()) }
+//! ```
+//!
+//! Shards sketched with the *same* builder configuration merge exactly
+//! (the sketch is linear in the empirical measure):
+//!
+//! ```no_run
+//! # fn demo(a: ckm::api::SketchArtifact, b: ckm::api::SketchArtifact)
+//! #     -> Result<ckm::api::SketchArtifact, ckm::api::ApiError> {
+//! let merged = a.merge(&b)?; // rejected unless both used the same operator
+//! # Ok(merged) }
+//! ```
+//!
+//! Every artifact carries the provenance of its sketching operator (seed,
+//! radial law, σ², shape) plus a checksum of the realized frequency matrix,
+//! so a sketch can never be solved or merged against a mismatched operator:
+//! the operator is re-derived from the provenance and verified bit-for-bit
+//! before any solve.
+//!
+//! - [`builder`] — [`Ckm`], [`CkmBuilder`]: one validated configuration for
+//!   every pipeline/sketcher/solver knob (replaces juggling
+//!   `PipelineConfig` + `CkmOptions` + `SketcherConfig` by hand).
+//! - [`artifact`] — [`SketchArtifact`], [`OpSpec`]: versioned, serializable,
+//!   exactly-mergeable sketches.
+//! - [`solution`] — versioned (de)serialization for [`crate::ckm::Solution`].
+
+pub mod artifact;
+pub mod builder;
+pub mod solution;
+
+pub use artifact::{OpSpec, SketchArtifact, SKETCH_FORMAT_VERSION};
+pub use builder::{Ckm, CkmBuilder, CkmConfig, SolveReport};
+pub use solution::SOLUTION_FORMAT_VERSION;
+
+/// Typed errors for the facade: configuration problems are reported at
+/// [`CkmBuilder::build`] time instead of panicking mid-pipeline, and
+/// artifact problems (version drift, operator mismatch, corruption) are
+/// distinguishable by variant.
+#[derive(Debug, thiserror::Error)]
+pub enum ApiError {
+    /// A builder knob failed validation.
+    #[error("invalid config: {field}: {reason}")]
+    InvalidConfig { field: &'static str, reason: String },
+
+    /// Frequency scale unknown: set `.sigma2(..)` on the builder or sketch
+    /// through an entry point that provides a scale-estimation sample.
+    #[error("sigma2 not given and no scale sample provided: set .sigma2(..) on the builder or use a sketch entry point with a sample")]
+    Sigma2Required,
+
+    /// The streamed source produced zero points.
+    #[error("source yielded no points")]
+    EmptySource,
+
+    /// The artifact holds no points — there is nothing to solve.
+    #[error("sketch artifact is empty (count = 0); nothing to solve")]
+    EmptySketch,
+
+    /// Two artifacts were sketched with different operators and cannot be
+    /// merged or compared.
+    #[error("operator mismatch: {left} vs {right}")]
+    OperatorMismatch { left: String, right: String },
+
+    /// The file was written by an unsupported (newer or older) format.
+    #[error("unsupported artifact format version {found} (this build reads version {supported})")]
+    UnsupportedVersion { found: usize, supported: u32 },
+
+    /// Re-deriving the frequency matrix from the stored provenance did not
+    /// reproduce the stored checksum: the artifact is corrupted or was
+    /// produced by an incompatible build.
+    #[error("operator checksum mismatch: artifact says {expected}, re-derived {actual} (corrupted file or incompatible build)")]
+    ChecksumMismatch { expected: String, actual: String },
+
+    /// Structurally invalid artifact file (bad JSON, missing fields, shape
+    /// inconsistencies).
+    #[error("malformed artifact: {0}")]
+    Format(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// An engine/backend failure (e.g. the PJRT runtime is unavailable).
+    #[error("backend error: {0}")]
+    Backend(String),
+}
+
+impl ApiError {
+    /// Wrap an engine-layer `anyhow` error.
+    pub(crate) fn backend(e: anyhow::Error) -> ApiError {
+        ApiError::Backend(format!("{e:#}"))
+    }
+}
+
+impl From<crate::util::json::JsonError> for ApiError {
+    fn from(e: crate::util::json::JsonError) -> ApiError {
+        ApiError::Format(e.to_string())
+    }
+}

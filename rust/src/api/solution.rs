@@ -1,0 +1,136 @@
+//! Versioned (de)serialization for [`Solution`] — so the *output* of a
+//! solve is as durable as its input artifact: recover centroids on one
+//! machine, serve lookups from them on another.
+
+use super::ApiError;
+use crate::ckm::Solution;
+use crate::linalg::Mat;
+use crate::util::json::Json;
+use std::path::Path;
+
+/// Version of the solution JSON schema this build reads and writes.
+pub const SOLUTION_FORMAT_VERSION: u32 = 1;
+
+impl Solution {
+    /// Serialize as versioned JSON (centroids row-major, one array per
+    /// centroid; floats round-trip bit-for-bit).
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> =
+            (0..self.centroids.rows).map(|r| Json::arr_f64(self.centroids.row(r))).collect();
+        Json::obj(vec![
+            ("format", Json::Str("ckm-solution".to_string())),
+            ("version", Json::Num(SOLUTION_FORMAT_VERSION as f64)),
+            ("k", Json::Num(self.centroids.rows as f64)),
+            ("n_dims", Json::Num(self.centroids.cols as f64)),
+            ("centroids", Json::Arr(rows)),
+            ("alpha", Json::arr_f64(&self.alpha)),
+            ("cost", Json::Num(self.cost)),
+        ])
+    }
+
+    /// Parse a [`Solution::to_json`] document, validating version/shape.
+    pub fn from_json(j: &Json) -> Result<Solution, ApiError> {
+        let bad = |msg: &str| ApiError::Format(msg.to_string());
+        if j.get("format").as_str() != Some("ckm-solution") {
+            return Err(bad("not a ckm-solution file (missing format tag)"));
+        }
+        let version = j.get("version").as_usize().ok_or_else(|| bad("version missing"))?;
+        if version != SOLUTION_FORMAT_VERSION as usize {
+            return Err(ApiError::UnsupportedVersion {
+                found: version,
+                supported: SOLUTION_FORMAT_VERSION,
+            });
+        }
+        let k = j.get("k").as_usize().ok_or_else(|| bad("k missing"))?;
+        let n_dims = j.get("n_dims").as_usize().ok_or_else(|| bad("n_dims missing"))?;
+        let rows = j.get("centroids").as_arr().ok_or_else(|| bad("centroids missing"))?;
+        if rows.len() != k {
+            return Err(bad("centroid count != k"));
+        }
+        let mut data = Vec::with_capacity(k * n_dims);
+        for row in rows {
+            let vals = row.as_arr().ok_or_else(|| bad("centroid row is not an array"))?;
+            if vals.len() != n_dims {
+                return Err(bad("centroid row length != n_dims"));
+            }
+            for v in vals {
+                data.push(v.as_f64().ok_or_else(|| bad("centroid holds a non-number"))?);
+            }
+        }
+        let alpha: Result<Vec<f64>, ApiError> = j
+            .get("alpha")
+            .as_arr()
+            .ok_or_else(|| bad("alpha missing"))?
+            .iter()
+            .map(|v| v.as_f64().ok_or_else(|| bad("alpha holds a non-number")))
+            .collect();
+        let alpha = alpha?;
+        if alpha.len() != k {
+            return Err(bad("alpha length != k"));
+        }
+        let cost = j.get("cost").as_f64().ok_or_else(|| bad("cost missing"))?;
+        Ok(Solution { centroids: Mat::from_vec(k, n_dims, data), alpha, cost })
+    }
+
+    /// Write as pretty-printed versioned JSON.
+    pub fn to_file<P: AsRef<Path>>(&self, path: P) -> Result<(), ApiError> {
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Load a [`Solution::to_file`] document.
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Solution, ApiError> {
+        let text = std::fs::read_to_string(path)?;
+        Solution::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Solution {
+        Solution {
+            centroids: Mat::from_vec(2, 3, vec![1.5, -2.25, 0.0, 3.0, 4.5, -6.75]),
+            alpha: vec![0.6, 0.4],
+            cost: 1.25e-3,
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_exact() {
+        let sol = toy();
+        let back = Solution::from_json(&Json::parse(&sol.to_json().to_pretty()).unwrap()).unwrap();
+        assert_eq!(back.centroids.data, sol.centroids.data);
+        assert_eq!(back.alpha, sol.alpha);
+        assert_eq!(back.cost, sol.cost);
+    }
+
+    #[test]
+    fn file_round_trip() {
+        let sol = toy();
+        let path = std::env::temp_dir().join(format!("ckm_sol_{}.json", std::process::id()));
+        sol.to_file(&path).unwrap();
+        let back = Solution::from_file(&path).unwrap();
+        assert_eq!(back.centroids.data, sol.centroids.data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        assert!(Solution::from_json(&Json::parse("{}").unwrap()).is_err());
+        let mut j = toy().to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".to_string(), Json::Num(42.0));
+        }
+        assert!(matches!(
+            Solution::from_json(&j),
+            Err(ApiError::UnsupportedVersion { found: 42, .. })
+        ));
+        let mut j = toy().to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("k".to_string(), Json::Num(3.0));
+        }
+        assert!(Solution::from_json(&j).is_err());
+    }
+}

@@ -1,12 +1,22 @@
 //! The paper's contribution: Compressive K-means = CLOMPR (Algorithm 1)
 //! over the Fourier sketch, with box constraints and initialization
 //! strategies (§3.2, §4.2).
+//!
+//! These are the low-level decoder entry points; most callers should use
+//! the [`crate::api::Ckm`] facade, which adds durable sketch artifacts,
+//! operator provenance checks and replicate management on top.
 
 pub mod clompr;
 pub mod hierarchical;
 pub mod init;
 pub mod optim;
 
-pub use clompr::{solve, solve_full, solve_with_engine, CkmOptions, Solution};
+pub use clompr::{solve, solve_with_engine, CkmOptions, Solution};
 pub use hierarchical::solve_hierarchical;
 pub use init::InitStrategy;
+
+#[deprecated(
+    since = "0.2.0",
+    note = "use `api::Ckm::builder()` + `Ckm::solve_with_data` (sketch artifacts carry the operator and bounds for you)"
+)]
+pub use clompr::solve_full;

@@ -4,12 +4,19 @@
 //! - [`sketcher`] — leader/worker sharded sketching over bounded queues
 //!   (backpressure), exact merge of partial sketches.
 //! - [`state`] — job phase tracking + the replicate manager (paper §4.4).
-//! - [`pipeline`] — the end-to-end driver (sketch → solve → report).
+//! - [`pipeline`] — the legacy end-to-end driver, now a thin delegate of
+//!   the [`crate::api::Ckm`] facade.
 
 pub mod batcher;
 pub mod pipeline;
 pub mod sketcher;
 pub mod state;
 
-pub use pipeline::{run_pipeline, Backend, PipelineConfig, PipelineResult};
+pub use pipeline::{Backend, PipelineConfig, PipelineResult};
 pub use sketcher::{distributed_sketch, SketchStats, SketcherConfig};
+
+#[deprecated(
+    since = "0.2.0",
+    note = "use `api::Ckm::builder()` — `.sketch_from(..)` then `.solve_detailed(..)` — for durable, mergeable sketch artifacts"
+)]
+pub use pipeline::run_pipeline;

@@ -1,15 +1,16 @@
-//! End-to-end pipeline: frequency fitting → sharded streaming sketch →
-//! CLOMPR solve → metrics. This is the binary's `run` command and the
-//! e2e example's entry point.
+//! Legacy end-to-end pipeline: one call from stream to solution. Kept as a
+//! compatibility shim — [`run_pipeline`] now delegates to the
+//! [`crate::api::Ckm`] facade, which is the recommended entry point (it
+//! splits the flow into explicit sketch / merge / solve stages over
+//! durable artifacts).
 
-use super::sketcher::{distributed_sketch, SketchStats, SketcherConfig};
-use super::state::{JobState, Phase, ReplicateManager};
-use crate::ckm::{solve_with_engine, CkmOptions, InitStrategy, Solution};
+use super::sketcher::{SketchStats, SketcherConfig};
+use super::state::{JobState, Phase};
+use crate::api::Ckm;
+use crate::ckm::{InitStrategy, Solution};
 use crate::data::dataset::{Bounds, PointSource};
-use crate::engine::{EngineFactory, NativeFactory, PjrtFactory};
 use crate::linalg::CVec;
-use crate::sketch::{FreqDist, RadiusKind, SketchOp};
-use crate::util::rng::Rng;
+use crate::sketch::RadiusKind;
 
 /// Compute backend selection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -79,78 +80,51 @@ pub struct PipelineResult {
 /// `scale_sample` (row-major, same dims) feeds the σ² estimator when
 /// `cfg.sigma2` is `None` — the paper's "sketch a small fraction of X"
 /// step; callers with a materialized dataset pass a slice of it.
+///
+/// This is a compatibility wrapper over [`crate::api::Ckm`]: it builds the
+/// facade from `cfg`, sketches once, solves once, and repackages the
+/// result. New code should call the facade directly and keep the
+/// intermediate [`crate::api::SketchArtifact`].
+///
+/// NOTE (behavior change vs pre-artifact versions): the frequency matrix
+/// is now drawn from a dedicated RNG stream derived from `cfg.seed`
+/// (see [`crate::api::OpSpec::derive`]) instead of continuing the stream
+/// σ²-estimation consumed. This is what makes a sketch re-derivable —
+/// and therefore durable — from its recorded provenance alone, but it
+/// means seeded runs produce different (statistically equivalent)
+/// centroids than releases before the artifact API.
 pub fn run_pipeline(
     cfg: &PipelineConfig,
     source: &mut dyn PointSource,
     scale_sample: Option<&[f64]>,
 ) -> anyhow::Result<PipelineResult> {
-    let n_dims = source.n_dims();
-    let mut rng = Rng::new(cfg.seed);
+    let ckm = Ckm::builder()
+        .frequencies(cfg.m)
+        .sigma2_opt(cfg.sigma2)
+        .radius(cfg.radius)
+        .backend(cfg.backend)
+        .artifacts_dir_opt(cfg.artifacts_dir.clone())
+        .sketcher(cfg.sketcher.clone())
+        .replicates(cfg.replicates)
+        .strategy(cfg.strategy)
+        .seed(cfg.seed)
+        .build()?;
+
     let mut job = JobState::new();
-
-    // -- σ² + frequency draw.
-    let sigma2 = match cfg.sigma2 {
-        Some(s) => s,
-        None => {
-            let sample = scale_sample.ok_or_else(|| {
-                anyhow::anyhow!("sigma2 not given and no scale_sample provided")
-            })?;
-            crate::sketch::scale::ScaleEstimator::default().estimate(sample, n_dims, &mut rng)
-        }
-    };
-    let dist = FreqDist::new(cfg.radius, sigma2);
-
-    // -- Build the engine factory (W drawn once, shared by all workers).
-    let factory: Box<dyn EngineFactory> = match cfg.backend {
-        Backend::Native => {
-            let op = SketchOp::new(dist.draw(cfg.m, n_dims, &mut rng));
-            Box::new(NativeFactory { op })
-        }
-        Backend::Pjrt => {
-            let dir = cfg
-                .artifacts_dir
-                .clone()
-                .unwrap_or_else(crate::runtime::pjrt::PjrtRuntime::default_dir);
-            let rt = crate::runtime::pjrt::PjrtRuntime::new(&dir)?;
-            let m = crate::engine::PjrtEngine::bucketed_m(&rt, cfg.m)?;
-            let op = SketchOp::new(dist.draw(m, n_dims, &mut rng));
-            Box::new(PjrtFactory { dir, op })
-        }
-    };
-
-    // -- Distributed sketch.
     job.advance(Phase::Sketching);
-    let (acc, sketch_stats) = distributed_sketch(factory.as_ref(), source, &cfg.sketcher)?;
-    anyhow::ensure!(acc.count > 0, "source yielded no points");
-    let z = acc.finalize();
-    let bounds = acc.bounds.clone();
-
-    // -- Solve (replicates tracked for the stability report).
+    let (artifact, sketch_stats) = ckm.sketch_from(source, scale_sample)?;
     job.advance(Phase::Solving);
-    let engine = factory.make()?;
-    let mut rm = ReplicateManager::new();
-    let mut rep_rng = Rng::new(cfg.seed ^ 0x5EED);
-    for _ in 0..cfg.replicates.max(1) {
-        let opts = CkmOptions {
-            strategy: cfg.strategy,
-            replicates: 1,
-            seed: rep_rng.next_u64(),
-            ..CkmOptions::default()
-        };
-        let sol = solve_with_engine(&z, engine.as_ref(), &bounds, cfg.k, None, &opts);
-        rm.offer(sol);
-    }
+    let report = ckm.solve_detailed(&artifact, cfg.k, None)?;
     job.advance(Phase::Done);
 
-    let replicate_costs = rm.costs.clone();
     Ok(PipelineResult {
-        solution: rm.into_best().expect("at least one replicate"),
-        z,
-        bounds,
-        n_points: acc.count,
-        sigma2,
+        solution: report.solution,
+        z: artifact.z(),
+        bounds: artifact.bounds.clone(),
+        n_points: artifact.count,
+        sigma2: artifact.op.sigma2,
         sketch_stats,
-        replicate_costs,
+        replicate_costs: report.replicate_costs,
         job,
     })
 }

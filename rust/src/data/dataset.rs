@@ -168,6 +168,47 @@ impl<'a> PointSource for SliceSource<'a> {
     }
 }
 
+/// A window of at most `limit` rows over another source — lets one
+/// long-lived stream be sketched in bounded installments (e.g. one sketch
+/// artifact per day of traffic) without rebuilding the underlying source.
+///
+/// `len()` is an *upper bound*: like [`SliceSource::len`], the inner
+/// source reports its construction-time total, so a window over a
+/// partially consumed stream may yield fewer rows than `len()` promises.
+/// Consumers that need the exact count should drain `next_chunk`.
+pub struct TakeSource<'a> {
+    inner: &'a mut dyn PointSource,
+    remaining: usize,
+}
+
+impl<'a> TakeSource<'a> {
+    pub fn new(inner: &'a mut dyn PointSource, limit: usize) -> Self {
+        TakeSource { inner, remaining: limit }
+    }
+}
+
+impl<'a> PointSource for TakeSource<'a> {
+    fn n_dims(&self) -> usize {
+        self.inner.n_dims()
+    }
+    fn len(&self) -> usize {
+        self.remaining.min(self.inner.len())
+    }
+    fn next_chunk(&mut self, buf: &mut [f64]) -> usize {
+        if self.remaining == 0 {
+            return 0;
+        }
+        let n = self.inner.n_dims();
+        let rows_cap = (buf.len() / n).min(self.remaining);
+        if rows_cap == 0 {
+            return 0;
+        }
+        let rows = self.inner.next_chunk(&mut buf[..rows_cap * n]);
+        self.remaining -= rows;
+        rows
+    }
+}
+
 /// A contiguous shard `[start, end)` of a dataset slice, for the
 /// coordinator's leader/worker split.
 pub struct ShardSource<'a> {
@@ -256,6 +297,23 @@ mod tests {
             collected.extend_from_slice(&buf[..rows * 2]);
         }
         assert_eq!(collected, d.points);
+    }
+
+    #[test]
+    fn take_source_windows_a_stream() {
+        let d = toy();
+        let mut src = SliceSource::new(&d.points, 2);
+        let mut buf = vec![0.0; 64];
+        // first window: 2 rows
+        let mut w1 = TakeSource::new(&mut src, 2);
+        assert_eq!(w1.next_chunk(&mut buf), 2);
+        assert_eq!(&buf[..4], &d.points[..4]);
+        assert_eq!(w1.next_chunk(&mut buf), 0);
+        // second window continues where the first stopped
+        let mut w2 = TakeSource::new(&mut src, 5);
+        assert_eq!(w2.next_chunk(&mut buf), 1);
+        assert_eq!(&buf[..2], &d.points[4..6]);
+        assert_eq!(w2.next_chunk(&mut buf), 0);
     }
 
     #[test]

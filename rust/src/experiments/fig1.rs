@@ -9,7 +9,8 @@
 use super::common::{Row, Stats, Table};
 use super::workloads::{digits_spectral_workload, gaussian_workload};
 use crate::baselines::{kmeans, KmInit, KmOptions};
-use crate::ckm::{solve_full, CkmOptions, InitStrategy};
+use crate::ckm::clompr::solve_full;
+use crate::ckm::{CkmOptions, InitStrategy};
 use crate::metrics::sse;
 use crate::sketch::sketch_dataset;
 

@@ -8,7 +8,8 @@
 use super::common::{Row, Stats, Table};
 use super::workloads::digits_spectral_workload;
 use crate::baselines::{kmeans, KmInit, KmOptions};
-use crate::ckm::{solve_full, CkmOptions};
+use crate::ckm::clompr::solve_full;
+use crate::ckm::CkmOptions;
 use crate::metrics::{adjusted_rand_index, labels_for, sse};
 use crate::sketch::sketch_dataset;
 

@@ -1,8 +1,42 @@
 //! # Compressive K-means (CKM)
 //!
 //! A production-grade reproduction of *"Compressive K-means"* (Keriven,
-//! Tremblay, Traonmilin, Gribonval — 2016) as a three-layer
-//! Rust + JAX + Pallas system:
+//! Tremblay, Traonmilin, Gribonval — 2016), built around the paper's core
+//! asset: the **sketch** — a tiny, mergeable summary of the dataset from
+//! which centroids are recovered at a cost independent of the number of
+//! points.
+//!
+//! ## Sketch once, solve many
+//!
+//! The public API is the [`api`] facade: one validated builder, durable
+//! sketch artifacts, explicit stages.
+//!
+//! ```no_run
+//! use ckm::prelude::*;
+//!
+//! # fn demo(points: &[f64]) -> Result<(), ApiError> {
+//! let ckm = Ckm::builder().frequencies(1024).seed(7).build()?;
+//!
+//! // 1. Sketch: one streaming pass; the data can be discarded after.
+//! let artifact = ckm.sketch_slice(points, 10)?;
+//! artifact.to_file("sketch.json")?;
+//!
+//! // 2. Merge: shards sketched with the same config combine exactly
+//! //    (the sketch is linear in the empirical measure).
+//! let reloaded = SketchArtifact::from_file("sketch.json")?;
+//!
+//! // 3. Solve: any number of times, for any K, without the data.
+//! let sol10 = ckm.solve(&reloaded, 10)?;
+//! let sol20 = ckm.solve(&reloaded, 20)?;
+//! # let _ = (sol10, sol20); Ok(()) }
+//! ```
+//!
+//! Artifacts are versioned JSON carrying the provenance of their sketching
+//! operator (seed, radial law, σ², shape) plus a checksum of the realized
+//! frequency matrix: a sketch can never be silently solved or merged with
+//! a mismatched operator.
+//!
+//! ## Layers
 //!
 //! - **L3 (this crate)** — the coordinator: streaming sharded sketching of
 //!   the dataset, the CLOMPR centroid solver, baselines, metrics, a CLI and
@@ -15,8 +49,18 @@
 //! Python never runs at request time: the rust binary loads the AOT
 //! artifacts through PJRT (`runtime`) and falls back to a pure-rust
 //! implementation of the same math (`engine::native`) for shapes outside
-//! the compiled matrix.
+//! the compiled matrix. (Builds without the real `xla` bindings use a stub
+//! crate — see `rust/vendor/xla` — and run native-only.)
+//!
+//! ## Lower layers, still public
+//!
+//! The facade is a thin composition of public pieces you can use directly:
+//! [`sketch`] (operator, frequency laws, streaming accumulator),
+//! [`ckm`] (CLOMPR), [`coordinator`] (sharded sketcher, legacy pipeline),
+//! [`engine`] (native/PJRT compute), [`baselines`], [`metrics`],
+//! [`spectral`], [`experiments`].
 
+pub mod api;
 pub mod baselines;
 pub mod bench;
 pub mod ckm;
@@ -33,7 +77,10 @@ pub mod testing;
 pub mod util;
 
 pub mod prelude {
+    pub use crate::api::{ApiError, Ckm, CkmBuilder, SketchArtifact, SolveReport};
     pub use crate::ckm::{solve, CkmOptions, InitStrategy, Solution};
+    pub use crate::coordinator::Backend;
+    pub use crate::sketch::RadiusKind;
     pub use crate::util::rng::Rng;
 }
 

@@ -1,15 +1,18 @@
 //! `ckm` — the compressive K-means coordinator CLI.
 //!
 //! Subcommands:
-//!   run     end-to-end pipeline (stream → sketch → CLOMPR → report)
+//!   run     end-to-end (stream → sketch → CLOMPR → report) via the facade
+//!   sketch  sketch a dataset file into a durable sketch artifact
+//!   merge   merge shard artifacts (exact; operator-checked)
+//!   solve   recover centroids from a sketch artifact (any K, repeatedly)
 //!   exp     regenerate a paper figure: fig1 | fig2 | fig3 | fig4 | ablate
 //!   gen     generate a synthetic dataset file
-//!   sketch  sketch a dataset file (demonstrates sketch-and-discard)
 //!   info    show version, artifact manifest and backends
 
+use ckm::api::{Ckm, CkmBuilder, SketchArtifact};
 use ckm::baselines::{kmeans, KmInit, KmOptions};
-use ckm::ckm::InitStrategy;
-use ckm::coordinator::{run_pipeline, Backend, PipelineConfig, SketcherConfig};
+use ckm::ckm::{InitStrategy, Solution};
+use ckm::coordinator::Backend;
 use ckm::data::dataset::{Dataset, PointSource, SliceSource};
 use ckm::data::gmm::GmmConfig;
 use ckm::experiments as exp;
@@ -27,6 +30,8 @@ fn main() {
         Some("exp") => cmd_exp(&args),
         Some("gen") => cmd_gen(&args),
         Some("sketch") => cmd_sketch(&args),
+        Some("merge") => cmd_merge(&args),
+        Some("solve") => cmd_solve(&args),
         Some("info") => cmd_info(&args),
         Some(other) => {
             eprintln!("unknown command '{other}'");
@@ -54,49 +59,57 @@ fn usage() {
            run     --k 10 --m 1000 --n 10 --npoints 300000 [--file data.bin]\n\
                    [--backend native|pjrt] [--workers 4] [--replicates 1]\n\
                    [--strategy range|sample|k++] [--sigma2 X] [--seed S]\n\
-                   [--compare-kmeans]\n\
+                   [--save-sketch sketch.json] [--compare-kmeans]\n\
+           sketch  --file data.bin --m 1000 --out sketch.json [--sigma2 X] [--seed S]\n\
+           merge   --out merged.json shard1.json shard2.json ...\n\
+           solve   --sketch sketch.json --k 10 [--replicates R] [--seed S]\n\
+                   [--out solution.json]\n\
            exp     fig1|fig2|fig3|fig4|ablate [--runs R] [--full] [--persist]\n\
            gen     --out data.bin --k 10 --n 10 --npoints 100000 [--seed S]\n\
-           sketch  --file data.bin --m 1000 --out sketch.json\n\
            info",
         ckm::version()
     );
 }
 
+/// Shared builder plumbing for the pipeline-shaped commands.
+fn builder_from_args(args: &Args) -> anyhow::Result<CkmBuilder> {
+    let mut b = Ckm::builder()
+        .frequencies(args.usize_or("m", 1000))
+        .backend(Backend::parse(&args.str_or("backend", "native"))?)
+        .replicates(args.usize_or("replicates", 1))
+        .strategy(InitStrategy::parse(&args.str_or("strategy", "range"))?)
+        .radius(RadiusKind::parse(&args.str_or("radius", "adapted"))?)
+        .seed(args.u64_or("seed", 0))
+        .workers(args.usize_or("workers", 4))
+        .chunk_rows(args.usize_or("chunk-rows", 4096))
+        .queue_depth(args.usize_or("queue-depth", 8));
+    if let Some(s2) = args.opt("sigma2") {
+        b = b.sigma2(s2.parse()?);
+    }
+    Ok(b)
+}
+
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let k = args.usize_or("k", 10);
-    let m = args.usize_or("m", 1000);
     let n_dims = args.usize_or("n", 10);
     let n_points = args.usize_or("npoints", 300_000);
     let seed = args.u64_or("seed", 0);
-    let mut cfg = PipelineConfig::new(k, m);
-    cfg.backend = Backend::parse(&args.str_or("backend", "native"))?;
-    cfg.replicates = args.usize_or("replicates", 1);
-    cfg.strategy = InitStrategy::parse(&args.str_or("strategy", "range"))?;
-    cfg.radius = RadiusKind::parse(&args.str_or("radius", "adapted"))?;
-    cfg.seed = seed;
-    cfg.sketcher = SketcherConfig {
-        n_workers: args.usize_or("workers", 4),
-        chunk_rows: args.usize_or("chunk-rows", 4096),
-        queue_depth: args.usize_or("queue-depth", 8),
-    };
-    if let Some(s2) = args.opt("sigma2") {
-        cfg.sigma2 = Some(s2.parse()?);
-    }
+    let ckm = builder_from_args(args)?.build()?;
     let file = args.opt("file").map(|s| s.to_string());
+    let save_sketch = args.opt("save-sketch").map(|s| s.to_string());
     let compare = args.flag("compare-kmeans");
     args.finish()?;
 
     let t_total = Stopwatch::start();
-    let (res, material): (_, Option<Dataset>) = match file {
+    let (artifact, stats, material): (_, _, Option<Dataset>) = match file {
         Some(path) => {
             let ds = Dataset::load(std::path::Path::new(&path))?;
             println!("loaded {}: N={} n={}", path, ds.n_points(), ds.n_dims);
             let sample_len = ds.points.len().min(5000 * ds.n_dims);
             let sample = ds.points[..sample_len].to_vec();
             let mut src = SliceSource::new(&ds.points, ds.n_dims);
-            let r = run_pipeline(&cfg, &mut src, Some(&sample))?;
-            (r, Some(ds))
+            let (artifact, stats) = ckm.sketch_from(&mut src, Some(&sample))?;
+            (artifact, stats, Some(ds))
         }
         None => {
             println!("synthetic GMM: K={k} n={n_dims} N={n_points}");
@@ -106,32 +119,37 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
             let got = data_cfg.stream(seed).next_chunk(&mut sample);
             sample.truncate(got * n_dims);
             let mut src = data_cfg.stream(seed);
-            let r = run_pipeline(&cfg, &mut src, Some(&sample))?;
-            (r, None)
+            let (artifact, stats) = ckm.sketch_from(&mut src, Some(&sample))?;
+            (artifact, stats, None)
         }
     };
 
     println!(
-        "sketched N={} in {:.2}s ({:.2} Mpts/s, backend={}, {} workers)",
-        res.n_points,
-        res.sketch_stats.wall_seconds,
-        res.sketch_stats.throughput() / 1e6,
-        res.sketch_stats.backend,
-        res.sketch_stats.rows_per_worker.len(),
+        "sketched N={} in {:.2}s ({:.2} Mpts/s, backend={}, {} workers, {:.0}x compression)",
+        artifact.count,
+        stats.wall_seconds,
+        stats.throughput() / 1e6,
+        stats.backend,
+        stats.rows_per_worker.len(),
+        artifact.compression_ratio(),
     );
+    if let Some(path) = save_sketch {
+        artifact.to_file(&path)?;
+        println!("sketch artifact written to {path}");
+    }
+
+    let t_solve = Stopwatch::start();
+    let report = ckm.solve_detailed(&artifact, k, None)?;
     println!(
-        "solved: cost={:.4e}  sigma2={:.3}  replicate costs={:?}",
-        res.solution.cost, res.sigma2, res.replicate_costs
+        "solved in {:.2}s: cost={:.4e}  sigma2={:.3}  replicate costs={:?}",
+        t_solve.seconds(),
+        report.solution.cost,
+        artifact.op.sigma2,
+        report.replicate_costs
     );
-    println!("weights: {:?}", res.solution.normalized_weights());
-    for kk in 0..res.solution.centroids.rows.min(5) {
-        println!("  c[{kk}] = {:?}", res.solution.centroids.row(kk));
-    }
-    if res.solution.centroids.rows > 5 {
-        println!("  ... ({} total)", res.solution.centroids.rows);
-    }
+    print_solution(&report.solution);
     if let Some(ds) = material {
-        let s = sse(&ds.points, ds.n_dims, &res.solution.centroids);
+        let s = sse(&ds.points, ds.n_dims, &report.solution.centroids);
         println!("SSE/N = {:.4}", s / ds.n_points() as f64);
         if compare {
             let sw = Stopwatch::start();
@@ -139,7 +157,12 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
                 &ds.points,
                 ds.n_dims,
                 k,
-                &KmOptions { init: KmInit::Range, replicates: 5, seed: seed + 1, ..Default::default() },
+                &KmOptions {
+                    init: KmInit::Range,
+                    replicates: 5,
+                    seed: seed + 1,
+                    ..Default::default()
+                },
             );
             println!(
                 "kmeans x5: SSE/N = {:.4} in {:.2}s  (rel SSE = {:.3})",
@@ -151,6 +174,16 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     }
     println!("total {:.2}s", t_total.seconds());
     Ok(())
+}
+
+fn print_solution(sol: &Solution) {
+    println!("weights: {:?}", sol.normalized_weights());
+    for kk in 0..sol.centroids.rows.min(5) {
+        println!("  c[{kk}] = {:?}", sol.centroids.row(kk));
+    }
+    if sol.centroids.rows > 5 {
+        println!("  ... ({} total)", sol.centroids.rows);
+    }
 }
 
 fn cmd_exp(args: &Args) -> anyhow::Result<()> {
@@ -256,29 +289,73 @@ fn cmd_sketch(args: &Args) -> anyhow::Result<()> {
         .map(|s| s.to_string())
         .ok_or_else(|| anyhow::anyhow!("sketch needs --file"))?;
     let out = args.str_or("out", "sketch.json");
-    let m = args.usize_or("m", 1000);
-    let seed = args.u64_or("seed", 0);
+    let ckm = builder_from_args(args)?.build()?;
     args.finish()?;
     let ds = Dataset::load(std::path::Path::new(&file))?;
-    let sk = ckm::sketch::sketch_dataset(&ds.points, ds.n_dims, m, seed, None);
-    use ckm::util::json::Json;
-    let json = Json::obj(vec![
-        ("m", Json::Num(m as f64)),
-        ("n_dims", Json::Num(ds.n_dims as f64)),
-        ("count", Json::Num(sk.count as f64)),
-        ("sigma2", Json::Num(sk.sigma2)),
-        ("re", Json::arr_f64(&sk.z.re)),
-        ("im", Json::arr_f64(&sk.z.im)),
-        ("lo", Json::arr_f64(&sk.bounds.lo)),
-        ("hi", Json::arr_f64(&sk.bounds.hi)),
-    ]);
-    std::fs::write(&out, json.to_pretty())?;
+    let artifact = ckm.sketch_slice(&ds.points, ds.n_dims)?;
+    artifact.to_file(&out)?;
     println!(
-        "sketched {} points into {out} ({} complex moments, {}x compression)",
-        sk.count,
-        m,
-        (ds.points.len() * 8) / (m * 16)
+        "sketched {} points into {out} ({} complex moments, {:.0}x compression); \
+         merge shards with `ckm merge`, recover centroids with `ckm solve`",
+        artifact.count,
+        artifact.op.m,
+        artifact.compression_ratio()
     );
+    Ok(())
+}
+
+fn cmd_merge(args: &Args) -> anyhow::Result<()> {
+    let out = args
+        .opt("out")
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("merge needs --out"))?;
+    args.finish()?;
+    let paths = args.positionals();
+    anyhow::ensure!(paths.len() >= 2, "merge needs at least two shard artifacts");
+    let mut merged: Option<SketchArtifact> = None;
+    for p in paths {
+        let shard = SketchArtifact::from_file(p)?;
+        println!("  {p}: {} points ({})", shard.count, shard.op.describe());
+        merged = Some(match merged {
+            None => shard,
+            Some(acc) => acc.merge(&shard)?,
+        });
+    }
+    let merged = merged.expect("at least two shards");
+    merged.to_file(&out)?;
+    println!("merged {} shards -> {out}: {} points total", paths.len(), merged.count);
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> anyhow::Result<()> {
+    let sketch_path = args
+        .opt("sketch")
+        .map(|s| s.to_string())
+        .ok_or_else(|| anyhow::anyhow!("solve needs --sketch (see `ckm sketch`)"))?;
+    let k = args.usize_or("k", 10);
+    let out = args.opt("out").map(|s| s.to_string());
+    let ckm = builder_from_args(args)?.build()?;
+    args.finish()?;
+
+    let artifact = SketchArtifact::from_file(&sketch_path)?;
+    println!(
+        "loaded {sketch_path}: {} points, operator {}",
+        artifact.count,
+        artifact.op.describe()
+    );
+    let sw = Stopwatch::start();
+    let report = ckm.solve_detailed(&artifact, k, None)?;
+    println!(
+        "solved K={k} in {:.2}s (cost {:.4e}, replicate costs {:?})",
+        sw.seconds(),
+        report.solution.cost,
+        report.replicate_costs
+    );
+    print_solution(&report.solution);
+    if let Some(path) = out {
+        report.solution.to_file(&path)?;
+        println!("solution written to {path}");
+    }
     Ok(())
 }
 

@@ -51,12 +51,19 @@ impl SketchAccumulator {
 
     /// Normalized sketch `ẑ = sum / count`.
     pub fn finalize(&self) -> CVec {
-        let mut z = self.sum.clone();
-        if self.count > 0 {
-            z.scale(1.0 / self.count as f64);
-        }
-        z
+        normalize_sum(&self.sum, self.count)
     }
+}
+
+/// Normalize an unnormalized sketch sum: `ẑ = sum / count` (`count == 0`
+/// leaves the zero vector untouched). Shared by the accumulator and the
+/// durable [`crate::api::SketchArtifact`].
+pub fn normalize_sum(sum: &CVec, count: usize) -> CVec {
+    let mut z = sum.clone();
+    if count > 0 {
+        z.scale(1.0 / count as f64);
+    }
+    z
 }
 
 /// Drain a [`PointSource`] through an accumulator with the given chunk size

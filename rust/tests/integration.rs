@@ -1,7 +1,8 @@
 //! Cross-module integration tests: native-vs-PJRT parity, pipeline
 //! end-to-end on both backends, CLOMPR recovery quality.
 
-use ckm::coordinator::{run_pipeline, Backend, PipelineConfig, SketcherConfig};
+use ckm::coordinator::pipeline::run_pipeline;
+use ckm::coordinator::{Backend, PipelineConfig, SketcherConfig};
 use ckm::data::gmm::GmmConfig;
 use ckm::metrics::sse;
 use ckm::util::rng::Rng;

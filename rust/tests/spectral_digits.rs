@@ -3,7 +3,8 @@
 //! checking classification quality (the Fig-3 code path).
 
 use ckm::baselines::{kmeans, KmInit, KmOptions};
-use ckm::ckm::{solve_full, CkmOptions};
+use ckm::ckm::clompr::solve_full;
+use ckm::ckm::CkmOptions;
 use ckm::data::digits::DigitConfig;
 use ckm::metrics::{adjusted_rand_index, labels_for};
 use ckm::sketch::sketch_dataset;

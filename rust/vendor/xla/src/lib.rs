@@ -1,0 +1,119 @@
+//! Stub of the `xla` PJRT bindings.
+//!
+//! The real crate wraps the XLA C++ runtime (PJRT client, HLO parsing,
+//! compiled executables). That toolchain is not available in every build
+//! environment, so this stub provides the exact API surface `ckm`'s
+//! runtime layer consumes, with every entry point returning an
+//! "unavailable" error. The coordinator detects the failure at
+//! `PjrtRuntime::new` time and the system runs on the native (pure-rust)
+//! engine, which implements the same math.
+//!
+//! To enable the compiled path, replace the `xla` path dependency in
+//! `rust/Cargo.toml` (or add a `[patch]`) with real bindings exposing this
+//! surface.
+
+use std::fmt;
+
+/// Error type mirroring the real bindings' error.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT unavailable: this build links the stub `xla` crate (rust/vendor/xla); \
+         use the native backend or link real xla bindings"
+            .to_string(),
+    ))
+}
+
+/// PJRT client handle (stub: creation always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn platform_name(&self) -> &'static str {
+        "stub"
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+/// An XLA computation built from an HLO module (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// A compiled executable (stub: execution always fails).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+/// A device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+/// A host literal (stub).
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn scalar<T>(_value: T) -> Literal {
+        Literal
+    }
+
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
