@@ -1,28 +1,94 @@
-//! Microbenchmarks of the hot paths: native sketch throughput, PJRT sketch
-//! throughput, step-1/step-5 gradient evaluation, NNLS. §Perf's raw data.
-use ckm::bench::{measure, throughput};
+//! Microbenchmarks of the hot paths, before/after the batched kernel layer:
+//! native + PJRT sketch throughput, CLOMPR fit_weights / step-1 / step-5
+//! (scalar oracle vs GEMM-backed batched), Lloyd assignment (dist2 sweep vs
+//! GEMM formulation), NNLS. Emits machine-readable `BENCH.json` so the perf
+//! trajectory is tracked across PRs.
+//!
+//! Flags: `--quick` (smoke mode: smaller N, fewer samples — the CI setting),
+//! `--out <path>` (default `BENCH.json`).
+use ckm::baselines::lloyd;
+use ckm::bench::{measure, throughput, BenchReport};
 use ckm::data::gmm::GmmConfig;
 use ckm::engine::CkmEngine;
+use ckm::linalg::matrix::dist2;
 use ckm::linalg::Mat;
-use ckm::sketch::{FreqDist, SketchOp};
+use ckm::sketch::{kernels, FreqDist, SketchOp};
+use ckm::util::parallel;
 use ckm::util::rng::Rng;
+
+/// The seed's Lloyd assignment (parallel scalar `dist2` sweep), kept here
+/// verbatim as the honest "before" timing for the GEMM formulation.
+fn assign_parallel_scalar(
+    points: &[f64],
+    n_dims: usize,
+    centroids: &Mat,
+    out: &mut [usize],
+) -> f64 {
+    let n = points.len() / n_dims;
+    let threads = parallel::default_threads();
+    let k = centroids.rows;
+    let ranges = parallel::split_ranges(n, threads);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        let mut rest: &mut [usize] = out;
+        for r in ranges {
+            let (head, tail) = rest.split_at_mut(r.len());
+            rest = tail;
+            handles.push(s.spawn(move || {
+                let mut sse = 0.0;
+                for (li, i) in r.clone().enumerate() {
+                    let x = &points[i * n_dims..(i + 1) * n_dims];
+                    let mut best = (0usize, f64::INFINITY);
+                    for c in 0..k {
+                        let d = dist2(x, centroids.row(c));
+                        if d < best.1 {
+                            best = (c, d);
+                        }
+                    }
+                    head[li] = best.0;
+                    sse += best.1;
+                }
+                sse
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum::<f64>()
+    })
+}
 
 fn main() {
     ckm::util::logging::init();
+    let args: Vec<String> = std::env::args().collect();
+    let quick = args.iter().any(|a| a.as_str() == "--quick");
+    let out_path = args
+        .windows(2)
+        .find(|w| w[0] == "--out")
+        .map(|w| w[1].clone())
+        .unwrap_or_else(|| "BENCH.json".to_string());
+
+    // Paper-scale solver shapes (ISSUE 2 acceptance): n=10, K=10, m=1000.
     let n_dims = 10;
-    let m = 1024;
-    let n_points = 100_000;
+    let kk = 10;
+    let m = 1000;
+    let n_points = if quick { 20_000 } else { 100_000 };
+    let (warm, samp) = if quick { (1, 3) } else { (2, 10) };
+    if quick {
+        println!("(smoke mode: n_points={n_points}, {samp} samples)");
+    }
+
     let mut rng = Rng::new(1);
-    let g = GmmConfig::paper_default(10, n_dims, n_points).generate(&mut rng);
+    let g = GmmConfig::paper_default(kk, n_dims, n_points).generate(&mut rng);
     let pts = &g.dataset.points;
     let op = SketchOp::new(FreqDist::adapted(1.0).draw(m, n_dims, &mut rng));
+    let mut report = BenchReport::new();
 
-    // Native sketch (threaded).
-    let meas = measure("native sketch 100k x n10 x m1024", 1, 5, || {
+    // -- Sketching (the N-dependent hot path) -----------------------------
+    let sk_size = format!("N={n_points} n={n_dims} m={m}");
+    let meas = measure("sketch_points/native", warm, samp, || {
         let z = op.sketch_points(pts, None);
         std::hint::black_box(z);
     });
     println!("  -> {:.2} Mpts/s", throughput(&meas, n_points) / 1e6);
+    report.add("sketch_points", "native", &sk_size, &meas);
 
     // PJRT sketch (compiled Pallas kernel), if artifacts exist.
     let dir = ckm::runtime::PjrtRuntime::default_dir();
@@ -30,36 +96,82 @@ fn main() {
         let rt = std::sync::Arc::new(ckm::runtime::PjrtRuntime::new(&dir).unwrap());
         let pe = ckm::engine::PjrtEngine::from_op(rt, op.clone()).unwrap();
         let _warm = pe.sketch_points(&pts[..4096 * n_dims], None);
-        let meas = measure("pjrt sketch 100k x n10 x m1024", 1, 5, || {
+        let meas = measure("sketch_points/pjrt", warm, samp, || {
             let z = pe.sketch_points(pts, None);
             std::hint::black_box(z);
         });
         println!("  -> {:.2} Mpts/s", throughput(&meas, n_points) / 1e6);
+        report.add("sketch_points", "pjrt", &sk_size, &meas);
     } else {
         eprintln!("(skipping pjrt sketch bench: run `make artifacts`)");
     }
 
-    // Step-1 value+grad.
-    let z = op.sketch_points(&pts[..20_000 * n_dims], None);
-    let c: Vec<f64> = (0..n_dims).map(|_| rng.normal()).collect();
-    measure("step1 value+grad (m=1024, n=10)", 10, 50, || {
-        let (v, g) = op.step1_value_grad(&c, &z);
-        std::hint::black_box((v, g));
-    });
+    // -- CLOMPR solver kernels -------------------------------------------
+    let z = op.sketch_points(pts, None);
+    let solver_size = format!("K={kk} m={m} n={n_dims}");
 
-    // Step-5 value+grads at K=10.
-    let cmat = Mat::from_vec(10, n_dims, (0..10 * n_dims).map(|_| rng.normal()).collect());
-    let alpha = vec![0.1; 10];
-    measure("step5 value+grads (K=10, m=1024)", 5, 30, || {
+    // Step-1 value+grad (unchanged shape; tracks the matvec unrolling).
+    let c: Vec<f64> = (0..n_dims).map(|_| rng.normal()).collect();
+    let meas = measure("step1_value_grad", 10, 10 * samp, || {
+        let out = op.step1_value_grad(&c, &z);
+        std::hint::black_box(out);
+    });
+    report.add("step1_value_grad", "native", &format!("m={m} n={n_dims}"), &meas);
+
+    // fit_weights on an expanded 2K support (the step-3 NNLS shape),
+    // including atom materialization — what CLOMPR pays per iteration.
+    let c2k = Mat::from_vec(2 * kk, n_dims, (0..2 * kk * n_dims).map(|_| rng.normal()).collect());
+    let fw_size = format!("K={} m={m} n={n_dims}", 2 * kk);
+    let fw_scalar = measure("fit_weights/scalar", warm, 3 * samp, || {
+        let atoms = kernels::atoms_batch_scalar(&op, &c2k);
+        let w = kernels::fit_weights_scalar(&op, &z, &atoms, true);
+        std::hint::black_box(w);
+    });
+    report.add("fit_weights", "scalar", &fw_size, &fw_scalar);
+    let fw_batched = measure("fit_weights/batched", warm, 3 * samp, || {
+        let atoms = kernels::atoms_batch(&op, &c2k);
+        let w = kernels::fit_weights(&op, &z, &atoms, true);
+        std::hint::black_box(w);
+    });
+    report.add("fit_weights", "batched", &fw_size, &fw_batched);
+    report.speedup("fit_weights", &fw_scalar, &fw_batched);
+
+    // Step-5 value+grads at K=10: scalar per-centroid loop vs one Q·W GEMM.
+    let cmat = Mat::from_vec(kk, n_dims, (0..kk * n_dims).map(|_| rng.normal()).collect());
+    let alpha = vec![0.1; kk];
+    let s5_scalar = measure("step5_value_grads/scalar", warm, 3 * samp, || {
         let out = op.step5_value_grads(&z, &cmat, &alpha);
         std::hint::black_box(out);
     });
+    report.add("step5_value_grads", "scalar", &solver_size, &s5_scalar);
+    let s5_batched = measure("step5_value_grads/batched", warm, 3 * samp, || {
+        let out = kernels::step5_value_grads_batch(&op, &z, &cmat, &alpha);
+        std::hint::black_box(out);
+    });
+    report.add("step5_value_grads", "batched", &solver_size, &s5_batched);
+    report.speedup("step5_value_grads", &s5_scalar, &s5_batched);
 
-    // NNLS on the CLOMPR design (2m x 2K).
+    // -- Lloyd assignment: dist2 sweep (the seed) vs GEMM formulation ----
+    let centroids = lloyd::seed(pts, n_dims, kk, lloyd::KmInit::Sample, &mut rng);
+    let mut assignments = vec![0usize; n_points];
+    let la_size = format!("N={n_points} K={kk} n={n_dims}");
+    let la_scalar = measure("lloyd_assign/scalar", warm, samp, || {
+        let sse = assign_parallel_scalar(pts, n_dims, &centroids, &mut assignments);
+        std::hint::black_box(sse);
+    });
+    report.add("lloyd_assign", "scalar", &la_size, &la_scalar);
+    let la_gemm = measure("lloyd_assign/gemm", warm, samp, || {
+        let sse = lloyd::assign(pts, n_dims, &centroids, &mut assignments);
+        std::hint::black_box(sse);
+    });
+    report.add("lloyd_assign", "gemm", &la_size, &la_gemm);
+    report.speedup("lloyd_assign", &la_scalar, &la_gemm);
+
+    // -- NNLS on the CLOMPR design (2m x 2K) ------------------------------
     let design = {
-        let mut a = Mat::zeros(2 * m, 20);
-        for j in 0..20 {
-            let atom = op.atom(cmat.row(j % 10));
+        let mut a = Mat::zeros(2 * m, 2 * kk);
+        for j in 0..2 * kk {
+            let atom = op.atom(cmat.row(j % kk));
             for i in 0..m {
                 *a.at_mut(i, j) = atom.re[i];
                 *a.at_mut(m + i, j) = atom.im[i];
@@ -70,8 +182,12 @@ fn main() {
     let mut b = Vec::with_capacity(2 * m);
     b.extend_from_slice(&z.re);
     b.extend_from_slice(&z.im);
-    measure("nnls 2048x20", 2, 20, || {
+    let meas = measure("nnls", 2, 2 * samp, || {
         let x = ckm::linalg::nnls::nnls(&design, &b);
         std::hint::black_box(x);
     });
+    report.add("nnls", "native", &format!("rows={} cols={}", 2 * m, 2 * kk), &meas);
+
+    report.write(&out_path).expect("failed to write BENCH.json");
+    println!("wrote {out_path}");
 }

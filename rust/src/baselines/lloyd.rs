@@ -1,7 +1,14 @@
 //! Lloyd-Max K-means (the paper's `kmeans` baseline) with K-means++ and
 //! random seeding, parallel assignment, and empty-cluster repair.
+//!
+//! The assignment step — the baseline's hot path, and the cost CKM's
+//! speed claims are measured against — uses the GEMM formulation
+//! `‖x − c‖² = ‖x‖² + ‖c‖² − 2·x·c`: per worker thread, one blocked
+//! `X_blk·Cᵀ` product per point block instead of N·K scalar `dist2`
+//! loops. The scalar sweep is retained as [`assign_scalar`], the
+//! correctness oracle for the parity property tests.
 
-use crate::linalg::matrix::dist2;
+use crate::linalg::matrix::{dist2, dot, matmul_bt_block};
 use crate::linalg::Mat;
 use crate::util::{parallel, rng::Rng};
 
@@ -105,7 +112,7 @@ fn lloyd_once(points: &[f64], n_dims: usize, k: usize, opts: &KmOptions, rng: &m
                     .max_by(|&a, &b| {
                         let da = dist2(&points[a * n_dims..(a + 1) * n_dims], centroids.row(assignments[a]));
                         let db = dist2(&points[b * n_dims..(b + 1) * n_dims], centroids.row(assignments[b]));
-                        da.partial_cmp(&db).unwrap()
+                        da.total_cmp(&db)
                     })
                     .unwrap();
                 centroids.row_mut(c).copy_from_slice(&points[far * n_dims..(far + 1) * n_dims]);
@@ -127,11 +134,22 @@ fn lloyd_once(points: &[f64], n_dims: usize, k: usize, opts: &KmOptions, rng: &m
 }
 
 /// Assign each point to its nearest centroid; returns the SSE.
+///
+/// GEMM formulation: `‖x − c‖² = ‖x‖² + ‖c‖² − 2·x·c`, with the cross
+/// terms of each point block computed as one `X_blk·Cᵀ` product per worker
+/// thread. Distances are clamped at zero (the expanded form can go a few
+/// ulp negative); ties resolve to the lowest centroid index, like
+/// [`assign_scalar`].
 pub fn assign(points: &[f64], n_dims: usize, centroids: &Mat, out: &mut [usize]) -> f64 {
     let n = points.len() / n_dims;
     assert_eq!(out.len(), n);
     let threads = parallel::default_threads();
     let k = centroids.rows;
+    let c_norms: Vec<f64> = (0..k).map(|c| dot(centroids.row(c), centroids.row(c))).collect();
+    let c_norms = &c_norms;
+    // Rows per X·Cᵀ tile: big enough to amortize the GEMM setup, small
+    // enough that the tile (BLOCK × k) stays cache-resident.
+    const BLOCK: usize = 128;
     let partials = {
         let ranges = parallel::split_ranges(n, threads);
         std::thread::scope(|s| {
@@ -142,17 +160,35 @@ pub fn assign(points: &[f64], n_dims: usize, centroids: &Mat, out: &mut [usize])
                 rest = tail;
                 handles.push(s.spawn(move || {
                     let mut sse = 0.0;
-                    for (li, i) in r.clone().enumerate() {
-                        let x = &points[i * n_dims..(i + 1) * n_dims];
-                        let mut best = (0usize, f64::INFINITY);
-                        for c in 0..k {
-                            let d = dist2(x, centroids.row(c));
-                            if d < best.1 {
-                                best = (c, d);
+                    let mut prod = vec![0.0; BLOCK * k];
+                    let mut lo = r.start;
+                    while lo < r.end {
+                        let hi = (lo + BLOCK).min(r.end);
+                        let rows = hi - lo;
+                        matmul_bt_block(
+                            &points[lo * n_dims..hi * n_dims],
+                            &centroids.data,
+                            &mut prod[..rows * k],
+                            0,
+                            rows,
+                            n_dims,
+                            k,
+                        );
+                        for li in 0..rows {
+                            let x = &points[(lo + li) * n_dims..(lo + li + 1) * n_dims];
+                            let x_norm = dot(x, x);
+                            let xc = &prod[li * k..li * k + k];
+                            let mut best = (0usize, f64::INFINITY);
+                            for c in 0..k {
+                                let d = (x_norm + c_norms[c] - 2.0 * xc[c]).max(0.0);
+                                if d < best.1 {
+                                    best = (c, d);
+                                }
                             }
+                            head[lo + li - r.start] = best.0;
+                            sse += best.1;
                         }
-                        head[li] = best.0;
-                        sse += best.1;
+                        lo = hi;
                     }
                     sse
                 }));
@@ -161,6 +197,28 @@ pub fn assign(points: &[f64], n_dims: usize, centroids: &Mat, out: &mut [usize])
         })
     };
     partials.into_iter().sum()
+}
+
+/// Scalar assignment oracle: the direct `dist2` sweep [`assign`] replaces.
+/// Kept for parity property tests and before/after benchmarking.
+pub fn assign_scalar(points: &[f64], n_dims: usize, centroids: &Mat, out: &mut [usize]) -> f64 {
+    let n = points.len() / n_dims;
+    assert_eq!(out.len(), n);
+    let k = centroids.rows;
+    let mut sse = 0.0;
+    for i in 0..n {
+        let x = &points[i * n_dims..(i + 1) * n_dims];
+        let mut best = (0usize, f64::INFINITY);
+        for c in 0..k {
+            let d = dist2(x, centroids.row(c));
+            if d < best.1 {
+                best = (c, d);
+            }
+        }
+        out[i] = best.0;
+        sse += best.1;
+    }
+    sse
 }
 
 /// Seed `k` centroids.
@@ -286,5 +344,41 @@ mod tests {
         let sse = assign(&pts, 1, &c, &mut a);
         assert_eq!(a, vec![0, 0, 1, 1]);
         assert!((sse - 4.0 * 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_gemm_assign_matches_scalar() {
+        use crate::testing::{self, gen, Config};
+        testing::check("gemm assign == scalar", Config::default().cases(20).max_size(300), |rng, size| {
+            let n_dims = 1 + rng.below(8);
+            let k = 1 + rng.below(12);
+            let n = 1 + size;
+            let pts = gen::mat_normal(rng, n, n_dims);
+            let c = Mat::from_vec(k, n_dims, gen::mat_normal(rng, k, n_dims));
+            let mut a_gemm = vec![0usize; n];
+            let mut a_scalar = vec![0usize; n];
+            let sse_gemm = assign(&pts, n_dims, &c, &mut a_gemm);
+            let sse_scalar = assign_scalar(&pts, n_dims, &c, &mut a_scalar);
+            if a_gemm != a_scalar {
+                let i = (0..n).find(|&i| a_gemm[i] != a_scalar[i]).unwrap();
+                return Err(format!(
+                    "assignment mismatch at point {i}: {} vs {}",
+                    a_gemm[i], a_scalar[i]
+                ));
+            }
+            testing::close(sse_gemm, sse_scalar, 1e-9)
+        });
+    }
+
+    #[test]
+    fn assign_exact_match_is_zero() {
+        // Points identical to centroids: the expanded-form distance must be
+        // exactly zero (no negative-epsilon SSE), matching the scalar path.
+        let pts = vec![1.5, -2.0, 0.25, 3.0, 0.0, 0.0];
+        let c = Mat::from_vec(3, 2, pts.clone());
+        let mut a = vec![0usize; 3];
+        let sse = assign(&pts, 2, &c, &mut a);
+        assert_eq!(a, vec![0, 1, 2]);
+        assert_eq!(sse, 0.0);
     }
 }

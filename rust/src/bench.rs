@@ -1,8 +1,15 @@
 //! Benchmark harness (criterion substitute): warmup + sampled timing with
 //! median/MAD reporting, used by the `rust/benches/*.rs` targets
 //! (`harness = false`).
+//!
+//! [`BenchReport`] collects measurements into machine-readable
+//! `BENCH.json` (op name, variant, size, ns/iter, threads) so the perf
+//! trajectory of the hot paths is tracked across PRs — see
+//! `rust/README.md` § "Reading BENCH.json".
 
+use crate::util::json::Json;
 use crate::util::logging::{fmt_duration, Stopwatch};
+use std::collections::BTreeMap;
 
 /// Timing summary over samples.
 #[derive(Clone, Debug)]
@@ -65,6 +72,84 @@ pub fn throughput(m: &Measurement, items: usize) -> f64 {
     items as f64 / m.median().max(1e-12)
 }
 
+/// One machine-readable benchmark record (times in nanoseconds).
+#[derive(Clone, Debug)]
+pub struct BenchRecord {
+    /// Operation under test, e.g. `"step5_value_grads"`.
+    pub op: String,
+    /// Implementation variant, e.g. `"scalar"` / `"batched"` / `"pjrt"`.
+    pub variant: String,
+    /// Human-readable shape, e.g. `"K=10 m=1000 n=10"`.
+    pub size: String,
+    pub ns_per_iter: f64,
+    pub mad_ns: f64,
+    pub samples: usize,
+}
+
+/// Collects [`BenchRecord`]s plus derived speedups and serializes them to
+/// `BENCH.json`.
+#[derive(Default)]
+pub struct BenchReport {
+    pub records: Vec<BenchRecord>,
+    /// Derived `scalar-median / batched-median` ratios keyed by op name.
+    pub speedups: BTreeMap<String, f64>,
+}
+
+impl BenchReport {
+    pub fn new() -> BenchReport {
+        BenchReport::default()
+    }
+
+    /// Record a measurement under `op`/`variant` with a shape label.
+    pub fn add(&mut self, op: &str, variant: &str, size: &str, m: &Measurement) {
+        self.records.push(BenchRecord {
+            op: op.to_string(),
+            variant: variant.to_string(),
+            size: size.to_string(),
+            ns_per_iter: m.median() * 1e9,
+            mad_ns: m.mad() * 1e9,
+            samples: m.samples.len(),
+        });
+    }
+
+    /// Derive `before.median / after.median` for `op` and print it.
+    pub fn speedup(&mut self, op: &str, before: &Measurement, after: &Measurement) {
+        let s = before.median() / after.median().max(1e-12);
+        println!("  -> {op}: {s:.2}x speedup (scalar vs batched)");
+        self.speedups.insert(op.to_string(), s);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let records = self
+            .records
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("op", Json::Str(r.op.clone())),
+                    ("variant", Json::Str(r.variant.clone())),
+                    ("size", Json::Str(r.size.clone())),
+                    ("ns_per_iter", Json::Num(r.ns_per_iter)),
+                    ("mad_ns", Json::Num(r.mad_ns)),
+                    ("samples", Json::Num(r.samples as f64)),
+                ])
+            })
+            .collect();
+        let speedups =
+            self.speedups.iter().map(|(k, &v)| (k.clone(), Json::Num(v))).collect();
+        Json::obj(vec![
+            ("schema", Json::Num(1.0)),
+            ("threads", Json::Num(crate::util::parallel::default_threads() as f64)),
+            ("records", Json::Arr(records)),
+            ("speedups", Json::Obj(speedups)),
+        ])
+    }
+
+    /// Write `BENCH.json` (pretty, trailing newline) to `path`.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().to_pretty() + "\n")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -83,5 +168,26 @@ mod tests {
         assert_eq!(count, 5);
         assert_eq!(m.samples.len(), 3);
         assert!(throughput(&m, 10) > 0.0);
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let slow = Measurement { name: "s".into(), samples: vec![2e-3, 2e-3] };
+        let fast = Measurement { name: "f".into(), samples: vec![1e-3, 1e-3] };
+        let mut rep = BenchReport::new();
+        rep.add("myop", "scalar", "K=2", &slow);
+        rep.add("myop", "batched", "K=2", &fast);
+        rep.speedup("myop", &slow, &fast);
+        let j = rep.to_json();
+        let parsed = crate::util::json::Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.get("schema").as_usize(), Some(1));
+        assert!(parsed.get("threads").as_usize().unwrap() >= 1);
+        let recs = parsed.get("records").as_arr().unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].get("op").as_str(), Some("myop"));
+        assert_eq!(recs[0].get("variant").as_str(), Some("scalar"));
+        assert!((recs[0].get("ns_per_iter").as_f64().unwrap() - 2e6).abs() < 1.0);
+        let s = parsed.get("speedups").get("myop").as_f64().unwrap();
+        assert!((s - 2.0).abs() < 1e-9);
     }
 }

@@ -7,12 +7,17 @@
 //! (4) re-fit the weights by NNLS, (5) jointly descend all centroids and
 //! weights on `‖ẑ − Σ_k α_k A δ_{c_k}‖²`, then update the residual.
 //! All gradient steps honour the data bounds `l ≤ c ≤ u`.
+//!
+//! PERF: the support's atoms are materialized once per iteration as a
+//! `K × m` block ([`CkmEngine::atoms_batch`], one GEMM on the native
+//! engine) and shared across steps 3, 4 and the residual update — step 3's
+//! surviving rows are *selected*, never recomputed, and the NNLS normal
+//! equations come from batched Gram kernels ([`CkmEngine::fit_weights`]).
 
 use super::init::{draw_init, InitStrategy};
 use super::optim::OptimOptions;
 use crate::data::dataset::Bounds;
 use crate::engine::{CkmEngine, NativeEngine};
-use crate::linalg::nnls::nnls_gram;
 use crate::linalg::{CVec, Mat};
 use crate::sketch::{DatasetSketch, SketchOp};
 use crate::util::rng::Rng;
@@ -128,8 +133,7 @@ fn clompr_once(
     opts: &CkmOptions,
     rng: &mut Rng,
 ) -> Solution {
-    let op = engine.op();
-    let n_dims = op.n_dims();
+    let n_dims = engine.n_dims();
     let mut centroids = Mat::zeros(0, n_dims);
     let mut alpha: Vec<f64> = Vec::new();
     let mut residual = z_hat.clone();
@@ -139,35 +143,45 @@ fn clompr_once(
         let c0 = draw_init(opts.strategy, bounds, data, &centroids, rng);
         let c_new = engine.step1_optimize(&c0, &residual, bounds);
 
-        // -- Step 2: expand support.
+        // -- Step 2: expand support; materialize its atom block once.
         push_row(&mut centroids, &c_new);
         alpha.push(0.0);
+        let mut atoms = engine.atoms_batch(&centroids);
 
-        // -- Step 3: hard thresholding when the support exceeds K.
+        // -- Step 3: hard thresholding when the support exceeds K. The
+        // surviving atoms are a row-subset of the block — select, don't
+        // recompute.
         if t > k && centroids.rows > k {
-            let beta = fit_weights(op, z_hat, &centroids, true);
+            let beta = engine.fit_weights(z_hat, &atoms, true);
             let keep = top_k_indices(&beta, k);
             centroids = select_rows(&centroids, &keep);
+            atoms = atoms.select_rows(&keep);
             alpha.clear();
             alpha.extend(keep.iter().map(|&i| beta[i]));
         }
 
         // -- Step 4: project to find α (NNLS on unnormalized atoms).
-        alpha = fit_weights(op, z_hat, &centroids, false);
+        alpha = engine.fit_weights(z_hat, &atoms, false);
 
         // -- Step 5: global gradient descent on (C, α) under the box.
         // Only keep the engine's result if it actually improved the cost
-        // (the fixed-iteration PJRT Adam can over- or under-shoot).
-        let cost_before = z_hat.sub(&op.mixture_sketch(&centroids, &alpha)).norm2_sq();
+        // (the fixed-iteration PJRT Adam can over- or under-shoot). The
+        // step-4 atom block serves the "before" cost; the "after" residual
+        // doubles as the iteration's residual update when accepted.
+        let r_before = z_hat.sub(&engine.mixture_sketch_batch(&atoms, &alpha));
+        let cost_before = r_before.norm2_sq();
         let (c_opt, a_opt) = engine.step5_optimize(&centroids, &alpha, z_hat, bounds);
-        let cost_after = z_hat.sub(&op.mixture_sketch(&c_opt, &a_opt)).norm2_sq();
-        if cost_after <= cost_before {
-            centroids = c_opt;
-            alpha = a_opt;
-        }
+        let atoms_opt = engine.atoms_batch(&c_opt);
+        let r_after = z_hat.sub(&engine.mixture_sketch_batch(&atoms_opt, &a_opt));
 
         // -- Residual update.
-        residual = z_hat.sub(&op.mixture_sketch(&centroids, &alpha));
+        if r_after.norm2_sq() <= cost_before {
+            centroids = c_opt;
+            alpha = a_opt;
+            residual = r_after;
+        } else {
+            residual = r_before;
+        }
     }
 
     // Final cost (4).
@@ -175,31 +189,11 @@ fn clompr_once(
     Solution { centroids, alpha, cost }
 }
 
-/// NNLS weight fit: `min_{β ≥ 0} ‖ẑ − Σ β_j u_j‖` with atoms optionally
-/// normalized (step 3 uses normalized atoms, step 4 raw atoms).
-///
-/// PERF: works on the normal equations of the real-stacked complex system
-/// directly — `G_ij = Re⟨u_i, u_j⟩`, `h_j = Re⟨u_j, ẑ⟩` — so the 2m×K
-/// design matrix is never materialized (EXPERIMENTS.md §Perf).
-fn fit_weights(op: &SketchOp, z_hat: &CVec, centroids: &Mat, normalized: bool) -> Vec<f64> {
-    let kk = centroids.rows;
-    let scale = if normalized { 1.0 / op.atom_norm() } else { 1.0 };
-    let atoms: Vec<CVec> = (0..kk).map(|j| op.atom(centroids.row(j))).collect();
-    let mut g = Mat::zeros(kk, kk);
-    for i in 0..kk {
-        for j in 0..=i {
-            let v = scale * scale * atoms[i].re_dot(&atoms[j]);
-            *g.at_mut(i, j) = v;
-            *g.at_mut(j, i) = v;
-        }
-    }
-    let h: Vec<f64> = atoms.iter().map(|u| scale * u.re_dot(z_hat)).collect();
-    nnls_gram(&g, &h)
-}
-
 fn top_k_indices(vals: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..vals.len()).collect();
-    idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap());
+    // total_cmp: NNLS weights should never be NaN, but a panicking sort on a
+    // pathological fit would take the whole solve down with it.
+    idx.sort_by(|&a, &b| vals[b].total_cmp(&vals[a]));
     idx.truncate(k);
     idx.sort_unstable(); // keep stable order of surviving atoms
     idx
@@ -324,5 +318,13 @@ mod tests {
     fn top_k_selects_largest() {
         assert_eq!(top_k_indices(&[0.1, 0.9, 0.5, 0.7], 2), vec![1, 3]);
         assert_eq!(top_k_indices(&[1.0], 1), vec![0]);
+    }
+
+    #[test]
+    fn top_k_tolerates_nan() {
+        // A NaN NNLS weight must not panic the sort (total_cmp ranks NaN
+        // above every finite weight, so it simply survives the threshold).
+        let keep = top_k_indices(&[0.5, f64::NAN, 0.2], 2);
+        assert_eq!(keep, vec![0, 1]);
     }
 }

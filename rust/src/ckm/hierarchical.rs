@@ -17,10 +17,13 @@
 use super::clompr::{CkmOptions, Solution};
 use crate::data::dataset::Bounds;
 use crate::engine::CkmEngine;
-use crate::linalg::{nnls::nnls_gram, CVec, Mat};
+use crate::linalg::{CVec, Mat};
 use crate::util::rng::Rng;
 
-/// Hierarchical (splitting) CKM solve on an arbitrary engine.
+/// Hierarchical (splitting) CKM solve on an arbitrary engine. Every NNLS
+/// re-fit and mixture cost goes through the engine's batched atom kernels
+/// (`atoms_batch` / `fit_weights` / `mixture_sketch_batch`), with atom
+/// blocks shared between the re-fit and the cost comparisons of a round.
 pub fn solve_hierarchical(
     z_hat: &CVec,
     engine: &dyn CkmEngine,
@@ -29,8 +32,7 @@ pub fn solve_hierarchical(
     opts: &CkmOptions,
 ) -> Solution {
     assert!(k >= 1);
-    let op = engine.op();
-    let n_dims = op.n_dims();
+    let n_dims = engine.n_dims();
     let mut rng = Rng::new(opts.seed ^ 0x41E2);
 
     // Perturbation scale: a few percent of the box span per dimension.
@@ -67,15 +69,18 @@ pub fn solve_hierarchical(
                     cand_alpha.push(alpha[kk] / 2.0);
                 }
             }
-            // Re-fit weights and joint-descend the candidate.
-            let mut a = fit_weights_gram(op, z_hat, &cand);
+            // Re-fit weights and joint-descend the candidate; the candidate
+            // atom block serves both the re-fit and the raw-cost check.
+            let cand_atoms = engine.atoms_batch(&cand);
+            let a = engine.fit_weights(z_hat, &cand_atoms, false);
             let (c_opt, a_opt) = engine.step5_optimize(&cand, &a, z_hat, bounds);
-            let cost_opt = z_hat.sub(&op.mixture_sketch(&c_opt, &a_opt)).norm2_sq();
-            let cost_raw = z_hat.sub(&op.mixture_sketch(&cand, &a)).norm2_sq();
+            let opt_atoms = engine.atoms_batch(&c_opt);
+            let cost_opt =
+                z_hat.sub(&engine.mixture_sketch_batch(&opt_atoms, &a_opt)).norm2_sq();
+            let cost_raw = z_hat.sub(&engine.mixture_sketch_batch(&cand_atoms, &a)).norm2_sq();
             let (cost, cmat, avec) = if cost_opt <= cost_raw {
                 (cost_opt, c_opt, a_opt)
             } else {
-                a = fit_weights_gram(op, z_hat, &cand);
                 (cost_raw, cand, a)
             };
             if best_round.as_ref().map(|(bc, _, _)| cost < *bc).unwrap_or(true) {
@@ -89,21 +94,24 @@ pub fn solve_hierarchical(
         // -- Residual repair: replace the weakest atom with a fresh step-1
         // ascent against the current residual (hybrid greedy/hierarchical).
         if centroids.rows >= 2 {
-            let residual = z_hat.sub(&op.mixture_sketch(&centroids, &alpha));
+            let cur_atoms = engine.atoms_batch(&centroids);
+            let residual = z_hat.sub(&engine.mixture_sketch_batch(&cur_atoms, &alpha));
+            let cost_cur = residual.norm2_sq();
             let c0: Vec<f64> =
                 (0..n_dims).map(|d| rng.uniform_in(bounds.lo[d], bounds.hi[d])).collect();
             let fresh = engine.step1_optimize(&c0, &residual, bounds);
             let weakest = alpha
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(b.1))
                 .map(|(i, _)| i)
                 .unwrap();
             let mut cand = centroids.clone();
             cand.row_mut(weakest).copy_from_slice(&fresh);
-            let a_cand = fit_weights_gram(op, z_hat, &cand);
-            let cost_cand = z_hat.sub(&op.mixture_sketch(&cand, &a_cand)).norm2_sq();
-            let cost_cur = z_hat.sub(&op.mixture_sketch(&centroids, &alpha)).norm2_sq();
+            let cand_atoms = engine.atoms_batch(&cand);
+            let a_cand = engine.fit_weights(z_hat, &cand_atoms, false);
+            let cost_cand =
+                z_hat.sub(&engine.mixture_sketch_batch(&cand_atoms, &a_cand)).norm2_sq();
             if cost_cand < cost_cur {
                 centroids = cand;
                 alpha = a_cand;
@@ -116,17 +124,20 @@ pub fn solve_hierarchical(
     // cluster the splitting phase failed to separate, at half the step-1
     // budget of flat CLOMPR.
     for _ in 0..k.div_ceil(2) {
-        let residual = z_hat.sub(&op.mixture_sketch(&centroids, &alpha));
+        let cur_atoms = engine.atoms_batch(&centroids);
+        let residual = z_hat.sub(&engine.mixture_sketch_batch(&cur_atoms, &alpha));
+        let cost_cur = residual.norm2_sq();
         let c0: Vec<f64> =
             (0..n_dims).map(|d| rng.uniform_in(bounds.lo[d], bounds.hi[d])).collect();
         let fresh = engine.step1_optimize(&c0, &residual, bounds);
         let mut cand = centroids.clone();
         cand.data.extend_from_slice(&fresh);
         cand.rows += 1;
-        let beta = fit_weights_gram(op, z_hat, &cand);
+        let cand_atoms = engine.atoms_batch(&cand);
+        let beta = engine.fit_weights(z_hat, &cand_atoms, false);
         // keep the K heaviest atoms
         let mut idx: Vec<usize> = (0..beta.len()).collect();
-        idx.sort_by(|&a, &b| beta[b].partial_cmp(&beta[a]).unwrap());
+        idx.sort_by(|&a, &b| beta[b].total_cmp(&beta[a]));
         idx.truncate(k);
         idx.sort_unstable();
         let mut kept = Mat::zeros(0, n_dims);
@@ -137,8 +148,8 @@ pub fn solve_hierarchical(
             kept_a.push(beta[i]);
         }
         let (c_opt, a_opt) = engine.step5_optimize(&kept, &kept_a, z_hat, bounds);
-        let cost_opt = z_hat.sub(&op.mixture_sketch(&c_opt, &a_opt)).norm2_sq();
-        let cost_cur = z_hat.sub(&op.mixture_sketch(&centroids, &alpha)).norm2_sq();
+        let opt_atoms = engine.atoms_batch(&c_opt);
+        let cost_opt = z_hat.sub(&engine.mixture_sketch_batch(&opt_atoms, &a_opt)).norm2_sq();
         if cost_opt < cost_cur {
             centroids = c_opt;
             alpha = a_opt;
@@ -148,7 +159,7 @@ pub fn solve_hierarchical(
     // -- Hard-threshold to exactly K by weight, final re-fit + descent.
     if centroids.rows > k {
         let mut idx: Vec<usize> = (0..alpha.len()).collect();
-        idx.sort_by(|&a, &b| alpha[b].partial_cmp(&alpha[a]).unwrap());
+        idx.sort_by(|&a, &b| alpha[b].total_cmp(&alpha[a]));
         idx.truncate(k);
         idx.sort_unstable();
         let mut kept = Mat::zeros(0, n_dims);
@@ -157,37 +168,22 @@ pub fn solve_hierarchical(
             kept.rows += 1;
         }
         centroids = kept;
-        alpha = fit_weights_gram(op, z_hat, &centroids);
+        let kept_atoms = engine.atoms_batch(&centroids);
+        alpha = engine.fit_weights(z_hat, &kept_atoms, false);
         let (c_opt, a_opt) = engine.step5_optimize(&centroids, &alpha, z_hat, bounds);
-        let cost_new = z_hat.sub(&op.mixture_sketch(&c_opt, &a_opt)).norm2_sq();
-        let cost_old = z_hat.sub(&op.mixture_sketch(&centroids, &alpha)).norm2_sq();
+        let opt_atoms = engine.atoms_batch(&c_opt);
+        let cost_new = z_hat.sub(&engine.mixture_sketch_batch(&opt_atoms, &a_opt)).norm2_sq();
+        let cost_old =
+            z_hat.sub(&engine.mixture_sketch_batch(&kept_atoms, &alpha)).norm2_sq();
         if cost_new <= cost_old {
             centroids = c_opt;
             alpha = a_opt;
         }
     }
 
-    let cost = z_hat.sub(&op.mixture_sketch(&centroids, &alpha)).norm2_sq();
+    let final_atoms = engine.atoms_batch(&centroids);
+    let cost = z_hat.sub(&engine.mixture_sketch_batch(&final_atoms, &alpha)).norm2_sq();
     Solution { centroids, alpha, cost }
-}
-
-fn fit_weights_gram(
-    op: &crate::sketch::SketchOp,
-    z_hat: &CVec,
-    centroids: &Mat,
-) -> Vec<f64> {
-    let kk = centroids.rows;
-    let atoms: Vec<CVec> = (0..kk).map(|j| op.atom(centroids.row(j))).collect();
-    let mut g = Mat::zeros(kk, kk);
-    for i in 0..kk {
-        for j in 0..=i {
-            let v = atoms[i].re_dot(&atoms[j]);
-            *g.at_mut(i, j) = v;
-            *g.at_mut(j, i) = v;
-        }
-    }
-    let h: Vec<f64> = atoms.iter().map(|u| u.re_dot(z_hat)).collect();
-    nnls_gram(&g, &h)
 }
 
 #[cfg(test)]

@@ -8,10 +8,10 @@ pub mod native;
 pub mod pjrt_engine;
 
 use crate::data::dataset::Bounds;
-use crate::linalg::{CVec, Mat};
-use crate::sketch::SketchOp;
+use crate::linalg::{CMat, CVec, Mat};
+use crate::sketch::{kernels, SketchOp};
 
-pub use native::NativeEngine;
+pub use native::{NativeEngine, ScalarEngine};
 pub use pjrt_engine::PjrtEngine;
 
 /// Builds per-thread engines for the coordinator's workers. The factory
@@ -77,6 +77,29 @@ pub trait CkmEngine {
     /// (centroids) and `α ≥ 0`. Returns the improved `(C, α)`.
     fn step5_optimize(&self, c0: &Mat, a0: &[f64], z: &CVec, bounds: &Bounds)
         -> (Mat, Vec<f64>);
+
+    // -- Batched atom kernels (CLOMPR steps 3/4 and the residual update) --
+    //
+    // Defaults are the scalar one-centroid-at-a-time oracles, so engines
+    // that only implement the required methods (PJRT before it grows
+    // batched artifacts, the [`ScalarEngine`] test oracle) keep working.
+    // [`NativeEngine`] overrides them with the GEMM-backed kernels.
+
+    /// Materialize every atom of a support as one `K × m` complex block.
+    fn atoms_batch(&self, centroids: &Mat) -> CMat {
+        kernels::atoms_batch_scalar(self.op(), centroids)
+    }
+
+    /// NNLS weight fit `min_{β ≥ 0} ‖ẑ − Σ β_j u_j‖` over a pre-built atom
+    /// block (steps 3/4); atoms normalized to unit norm when `normalized`.
+    fn fit_weights(&self, z_hat: &CVec, atoms: &CMat, normalized: bool) -> Vec<f64> {
+        kernels::fit_weights_scalar(self.op(), z_hat, atoms, normalized)
+    }
+
+    /// Mixture sketch `Σ_k α_k u_k` over a pre-built atom block.
+    fn mixture_sketch_batch(&self, atoms: &CMat, alpha: &[f64]) -> CVec {
+        kernels::mixture_sketch_batch(atoms, alpha)
+    }
 
     fn n_dims(&self) -> usize {
         self.op().n_dims()

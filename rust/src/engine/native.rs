@@ -1,11 +1,18 @@
 //! The native (pure-rust, f64) engine: reference implementation and
 //! fallback for shapes outside the AOT matrix.
+//!
+//! Two engines live here:
+//! - [`NativeEngine`] — the production CPU path: every per-atom hot loop is
+//!   routed through the GEMM-backed batched kernels (`sketch::kernels`).
+//! - [`ScalarEngine`] — the one-centroid-at-a-time oracle (the trait's
+//!   default impls + the scalar `step5_value_grads`), kept for parity
+//!   property tests and before/after benchmarking.
 
 use super::CkmEngine;
 use crate::ckm::optim::{maximize_box, minimize_box, OptimOptions};
 use crate::data::dataset::Bounds;
-use crate::linalg::{CVec, Mat};
-use crate::sketch::SketchOp;
+use crate::linalg::{CMat, CVec, Mat};
+use crate::sketch::{kernels, SketchOp};
 
 /// Native engine: wraps a [`SketchOp`] plus optimizer options.
 pub struct NativeEngine {
@@ -28,6 +35,61 @@ impl NativeEngine {
     }
 }
 
+/// Step-1 ascent shared by both engines (they differ only in step 5).
+fn step1_optimize_impl(
+    op: &SketchOp,
+    c0: &[f64],
+    r: &CVec,
+    bounds: &Bounds,
+    opts: &OptimOptions,
+) -> Vec<f64> {
+    let (c, _val) = maximize_box(|c| op.step1_value_grad(c, r), c0, &bounds.lo, &bounds.hi, opts);
+    c
+}
+
+/// Step-5 joint descent plumbing shared by both engines: pack `(C, α)` into
+/// one box-constrained vector (per-centroid data bounds, `α ≥ 0`), run
+/// `minimize_box` over the supplied value/gradients function, unpack.
+fn step5_optimize_impl<F>(
+    n_dims: usize,
+    value_grads: F,
+    c0: &Mat,
+    a0: &[f64],
+    bounds: &Bounds,
+    opts: &OptimOptions,
+) -> (Mat, Vec<f64>)
+where
+    F: Fn(&Mat, &[f64]) -> (f64, Mat, Vec<f64>),
+{
+    let kk = c0.rows;
+    let mut x0 = c0.data.clone();
+    x0.extend_from_slice(a0);
+    let (mut lo, mut hi) = (Vec::with_capacity(x0.len()), Vec::with_capacity(x0.len()));
+    for _ in 0..kk {
+        lo.extend_from_slice(&bounds.lo);
+        hi.extend_from_slice(&bounds.hi);
+    }
+    lo.extend(std::iter::repeat(0.0).take(kk));
+    hi.extend(std::iter::repeat(f64::INFINITY).take(kk));
+    let (x_opt, _cost) = minimize_box(
+        |x| {
+            let c = Mat::from_vec(kk, n_dims, x[..kk * n_dims].to_vec());
+            let a = &x[kk * n_dims..];
+            let (cost, gc, ga) = value_grads(&c, a);
+            let mut g = gc.data;
+            g.extend_from_slice(&ga);
+            (cost, g)
+        },
+        &x0,
+        &lo,
+        &hi,
+        opts,
+    );
+    let c = Mat::from_vec(kk, n_dims, x_opt[..kk * n_dims].to_vec());
+    let a = x_opt[kk * n_dims..].to_vec();
+    (c, a)
+}
+
 impl CkmEngine for NativeEngine {
     fn name(&self) -> &'static str {
         "native"
@@ -42,14 +104,7 @@ impl CkmEngine for NativeEngine {
     }
 
     fn step1_optimize(&self, c0: &[f64], r: &CVec, bounds: &Bounds) -> Vec<f64> {
-        let (c, _val) = maximize_box(
-            |c| self.op.step1_value_grad(c, r),
-            c0,
-            &bounds.lo,
-            &bounds.hi,
-            &self.step1,
-        );
-        c
+        step1_optimize_impl(&self.op, c0, r, bounds, &self.step1)
     }
 
     fn step5_optimize(
@@ -59,34 +114,79 @@ impl CkmEngine for NativeEngine {
         z: &CVec,
         bounds: &Bounds,
     ) -> (Mat, Vec<f64>) {
-        let kk = c0.rows;
-        let n_dims = self.op.n_dims();
-        let mut x0 = c0.data.clone();
-        x0.extend_from_slice(a0);
-        let (mut lo, mut hi) = (Vec::with_capacity(x0.len()), Vec::with_capacity(x0.len()));
-        for _ in 0..kk {
-            lo.extend_from_slice(&bounds.lo);
-            hi.extend_from_slice(&bounds.hi);
-        }
-        lo.extend(std::iter::repeat(0.0).take(kk));
-        hi.extend(std::iter::repeat(f64::INFINITY).take(kk));
-        let (x_opt, _cost) = minimize_box(
-            |x| {
-                let c = Mat::from_vec(kk, n_dims, x[..kk * n_dims].to_vec());
-                let a = &x[kk * n_dims..];
-                let (cost, gc, ga) = self.op.step5_value_grads(z, &c, a);
-                let mut g = gc.data;
-                g.extend_from_slice(&ga);
-                (cost, g)
-            },
-            &x0,
-            &lo,
-            &hi,
+        step5_optimize_impl(
+            self.op.n_dims(),
+            |c, a| kernels::step5_value_grads_batch(&self.op, z, c, a),
+            c0,
+            a0,
+            bounds,
             &self.step5,
-        );
-        let c = Mat::from_vec(kk, n_dims, x_opt[..kk * n_dims].to_vec());
-        let a = x_opt[kk * n_dims..].to_vec();
-        (c, a)
+        )
+    }
+
+    fn atoms_batch(&self, centroids: &Mat) -> CMat {
+        kernels::atoms_batch(&self.op, centroids)
+    }
+
+    fn fit_weights(&self, z_hat: &CVec, atoms: &CMat, normalized: bool) -> Vec<f64> {
+        kernels::fit_weights(&self.op, z_hat, atoms, normalized)
+    }
+}
+
+/// Scalar oracle engine: identical math to [`NativeEngine`] evaluated one
+/// centroid at a time (the trait's default batched impls plus the scalar
+/// `SketchOp::step5_value_grads`). The batched kernels preserve the scalar
+/// accumulation order, so `solve_with_engine` must produce identical output
+/// on either engine — `tests/properties.rs` enforces exactly that.
+pub struct ScalarEngine {
+    pub op: SketchOp,
+    pub step1: OptimOptions,
+    pub step5: OptimOptions,
+}
+
+impl ScalarEngine {
+    pub fn new(op: SketchOp) -> ScalarEngine {
+        let n = NativeEngine::new(op);
+        ScalarEngine { op: n.op, step1: n.step1, step5: n.step5 }
+    }
+
+    pub fn with_options(op: SketchOp, step1: OptimOptions, step5: OptimOptions) -> ScalarEngine {
+        ScalarEngine { op, step1, step5 }
+    }
+}
+
+impl CkmEngine for ScalarEngine {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn op(&self) -> &SketchOp {
+        &self.op
+    }
+
+    fn sketch_points(&self, points: &[f64], weights: Option<&[f64]>) -> CVec {
+        self.op.sketch_points(points, weights)
+    }
+
+    fn step1_optimize(&self, c0: &[f64], r: &CVec, bounds: &Bounds) -> Vec<f64> {
+        step1_optimize_impl(&self.op, c0, r, bounds, &self.step1)
+    }
+
+    fn step5_optimize(
+        &self,
+        c0: &Mat,
+        a0: &[f64],
+        z: &CVec,
+        bounds: &Bounds,
+    ) -> (Mat, Vec<f64>) {
+        step5_optimize_impl(
+            self.op.n_dims(),
+            |c, a| self.op.step5_value_grads(z, c, a),
+            c0,
+            a0,
+            bounds,
+            &self.step5,
+        )
     }
 }
 

@@ -14,7 +14,7 @@
 use super::native::NativeEngine;
 use super::CkmEngine;
 use crate::data::dataset::Bounds;
-use crate::linalg::{CVec, Mat};
+use crate::linalg::{CMat, CVec, Mat};
 use crate::runtime::pjrt::{PjrtRuntime, Tensor};
 use crate::sketch::{FreqDist, SketchOp};
 use crate::util::rng::Rng;
@@ -289,6 +289,17 @@ impl CkmEngine for PjrtEngine {
         }
         let a: Vec<f64> = (0..kk).map(|k| out[1][k] as f64).collect();
         (c, a)
+    }
+
+    // Atom blocks / NNLS fits stay rust-side in f64 (DESIGN.md §2); route
+    // them through the native engine's GEMM kernels rather than the scalar
+    // trait defaults.
+    fn atoms_batch(&self, centroids: &Mat) -> CMat {
+        self.fallback.atoms_batch(centroids)
+    }
+
+    fn fit_weights(&self, z_hat: &CVec, atoms: &CMat, normalized: bool) -> Vec<f64> {
+        self.fallback.fit_weights(z_hat, atoms, normalized)
     }
 }
 

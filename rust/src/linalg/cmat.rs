@@ -1,0 +1,176 @@
+//! Complex matrices in split (SoA) layout: `CMat { re: Mat, im: Mat }`.
+//!
+//! The batched atom kernels (`sketch::kernels`) materialize all K atoms of
+//! a CLOMPR support at once as a `K × m` complex matrix. Split layout means
+//! every batched product (`Gram = Re·Reᵀ + Im·Imᵀ`, correlation vectors,
+//! mixture sums) is two real GEMM/GEMV calls on the blocked, threaded
+//! [`Mat`] primitives — no interleaving shuffles.
+//!
+//! Row-accumulation helpers (`axpy_row_into`, `weighted_row_sum`) mirror
+//! the scalar [`CVec`] operations bit-for-bit (same order, same zero-skip)
+//! so the batched paths stay exact reimplementations of the scalar oracle.
+
+use super::complex::CVec;
+use super::matrix::{dot, Mat};
+
+/// A dense row-major complex matrix stored as separate real/imag planes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CMat {
+    pub re: Mat,
+    pub im: Mat,
+}
+
+impl CMat {
+    pub fn zeros(rows: usize, cols: usize) -> CMat {
+        CMat { re: Mat::zeros(rows, cols), im: Mat::zeros(rows, cols) }
+    }
+
+    /// Pair up real and imaginary planes (must be the same shape).
+    pub fn from_parts(re: Mat, im: Mat) -> CMat {
+        assert_eq!(re.rows, im.rows, "re/im row mismatch");
+        assert_eq!(re.cols, im.cols, "re/im col mismatch");
+        CMat { re, im }
+    }
+
+    /// Stack complex row vectors into a matrix.
+    pub fn from_rows(rows: &[CVec]) -> CMat {
+        let cols = rows.first().map(|r| r.len()).unwrap_or(0);
+        let mut out = CMat::zeros(rows.len(), cols);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(r.len(), cols, "ragged rows");
+            out.re.row_mut(i).copy_from_slice(&r.re);
+            out.im.row_mut(i).copy_from_slice(&r.im);
+        }
+        out
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.re.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.re.cols
+    }
+
+    /// Row `i` as `(re, im)` slices (no copy).
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[f64], &[f64]) {
+        (self.re.row(i), self.im.row(i))
+    }
+
+    /// Copy row `i` out as a [`CVec`].
+    pub fn row_cvec(&self, i: usize) -> CVec {
+        CVec::from_parts(self.re.row(i).to_vec(), self.im.row(i).to_vec())
+    }
+
+    /// Keep the listed rows, in the listed order.
+    pub fn select_rows(&self, idx: &[usize]) -> CMat {
+        let mut out = CMat::zeros(idx.len(), self.cols());
+        for (o, &i) in idx.iter().enumerate() {
+            out.re.row_mut(o).copy_from_slice(self.re.row(i));
+            out.im.row_mut(o).copy_from_slice(self.im.row(i));
+        }
+        out
+    }
+
+    /// `Re⟨row_i, z⟩` — same expression as [`CVec::re_dot`] on row `i`.
+    pub fn re_dot_row(&self, i: usize, z: &CVec) -> f64 {
+        assert_eq!(self.cols(), z.len());
+        dot(self.re.row(i), &z.re) + dot(self.im.row(i), &z.im)
+    }
+
+    /// `out += coef · row_i` — same loop as [`CVec::axpy`] on row `i`.
+    pub fn axpy_row_into(&self, i: usize, coef: f64, out: &mut CVec) {
+        assert_eq!(self.cols(), out.len());
+        let (re, im) = self.row(i);
+        for j in 0..re.len() {
+            out.re[j] += coef * re[j];
+            out.im[j] += coef * im[j];
+        }
+    }
+
+    /// `Σ_i w_i · row_i`, skipping exactly-zero weights — the batched form
+    /// of a mixture sketch. Row order and zero-skip match the scalar
+    /// accumulation in `SketchOp::mixture_sketch` bit-for-bit.
+    pub fn weighted_row_sum(&self, w: &[f64]) -> CVec {
+        assert_eq!(self.rows(), w.len());
+        let mut out = CVec::zeros(self.cols());
+        for (i, &wi) in w.iter().enumerate() {
+            if wi == 0.0 {
+                continue;
+            }
+            self.axpy_row_into(i, wi, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{self, gen, Config};
+
+    fn rand_cmat(rng: &mut crate::util::rng::Rng, r: usize, c: usize) -> CMat {
+        CMat::from_parts(
+            Mat::from_vec(r, c, gen::mat_normal(rng, r, c)),
+            Mat::from_vec(r, c, gen::mat_normal(rng, r, c)),
+        )
+    }
+
+    #[test]
+    fn from_rows_roundtrip() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let rows: Vec<CVec> = (0..4)
+            .map(|_| CVec::from_parts(gen::vec_normal(&mut rng, 6), gen::vec_normal(&mut rng, 6)))
+            .collect();
+        let m = CMat::from_rows(&rows);
+        assert_eq!(m.rows(), 4);
+        assert_eq!(m.cols(), 6);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(m.row_cvec(i), *r);
+        }
+    }
+
+    #[test]
+    fn select_rows_keeps_order() {
+        let mut rng = crate::util::rng::Rng::new(2);
+        let m = rand_cmat(&mut rng, 5, 3);
+        let s = m.select_rows(&[4, 1]);
+        assert_eq!(s.rows(), 2);
+        assert_eq!(s.row_cvec(0), m.row_cvec(4));
+        assert_eq!(s.row_cvec(1), m.row_cvec(1));
+    }
+
+    #[test]
+    fn prop_row_ops_match_cvec() {
+        testing::check("cmat row ops == cvec ops", Config::default().cases(24), |rng, size| {
+            let (r, c) = (1 + rng.below(6), 1 + rng.below(size));
+            let m = rand_cmat(rng, r, c);
+            let z = CVec::from_parts(gen::vec_normal(rng, c), gen::vec_normal(rng, c));
+            let i = rng.below(r);
+            let rd = m.re_dot_row(i, &z);
+            let rd_ref = m.row_cvec(i).re_dot(&z);
+            testing::close(rd, rd_ref, 0.0)?;
+            let mut acc = z.clone();
+            m.axpy_row_into(i, -0.7, &mut acc);
+            let mut acc_ref = z.clone();
+            acc_ref.axpy(-0.7, &m.row_cvec(i));
+            testing::all_close(&acc.re, &acc_ref.re, 0.0)?;
+            testing::all_close(&acc.im, &acc_ref.im, 0.0)
+        });
+    }
+
+    #[test]
+    fn weighted_row_sum_matches_manual() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let m = rand_cmat(&mut rng, 3, 5);
+        let w = [0.5, 0.0, -1.25];
+        let got = m.weighted_row_sum(&w);
+        let mut manual = CVec::zeros(5);
+        manual.axpy(0.5, &m.row_cvec(0));
+        manual.axpy(-1.25, &m.row_cvec(2));
+        assert_eq!(got, manual);
+    }
+}

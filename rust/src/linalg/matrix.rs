@@ -61,12 +61,27 @@ impl Mat {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Blocked transpose: walks 32×32 tiles so both the read and the write
+    /// side stay cache-resident for large matrices (`Wᵀ` is m × n with m in
+    /// the thousands).
     pub fn transpose(&self) -> Mat {
-        let mut t = Mat::zeros(self.cols, self.rows);
-        for i in 0..self.rows {
-            for j in 0..self.cols {
-                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+        const TILE: usize = 32;
+        let (r, c) = (self.rows, self.cols);
+        let mut t = Mat::zeros(c, r);
+        let mut i0 = 0;
+        while i0 < r {
+            let i1 = (i0 + TILE).min(r);
+            let mut j0 = 0;
+            while j0 < c {
+                let j1 = (j0 + TILE).min(c);
+                for i in i0..i1 {
+                    for j in j0..j1 {
+                        t.data[j * r + i] = self.data[i * c + j];
+                    }
+                }
+                j0 = j1;
             }
+            i0 = i1;
         }
         t
     }
@@ -80,14 +95,32 @@ impl Mat {
 
     /// `self · otherᵀ` — the hot shape (`X·Wᵀ`). Parallel over row blocks.
     pub fn matmul_bt(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.rows);
+        self.matmul_bt_into(other, &mut out);
+        out
+    }
+
+    /// `self · otherᵀ` written into a pre-allocated `out` (parallel over row
+    /// blocks). Lets iterative callers reuse the output buffer.
+    ///
+    /// Products below ~32k multiply-adds run serially: the solver-side
+    /// kernels issue many tiny `K × K`/`K × n` GEMMs inside optimizer inner
+    /// loops, where scoped-thread spawn/join would dwarf the arithmetic.
+    pub fn matmul_bt_into(&self, other: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, other.cols, "matmul_bt shape mismatch");
         let (m, k, n) = (self.rows, self.cols, other.rows);
-        let mut out = Mat::zeros(m, n);
+        assert_eq!(out.rows, m, "matmul_bt_into output rows");
+        assert_eq!(out.cols, n, "matmul_bt_into output cols");
+        const PAR_THRESHOLD: usize = 32 * 1024;
         let threads = parallel::default_threads();
         let a = &self.data;
         let b = &other.data;
         // Split the output by whole rows so each thread owns disjoint rows.
         let ranges = parallel::split_ranges(m, threads);
+        if ranges.len() <= 1 || m * k * n <= PAR_THRESHOLD {
+            matmul_bt_block(a, b, &mut out.data, 0, m, k, n);
+            return;
+        }
         std::thread::scope(|s| {
             let mut rest: &mut [f64] = &mut out.data;
             for r in ranges {
@@ -96,13 +129,40 @@ impl Mat {
                 s.spawn(move || matmul_bt_block(a, b, head, r.start, r.len(), k, n));
             }
         });
-        out
     }
 
-    /// Matrix-vector product `self · x`.
+    /// Matrix-vector product `self · x`, 4-row unrolled: four output rows
+    /// share each load of `x`, which is the hot `W·c` shape in CLOMPR step 1
+    /// (m ≈ 1000 rows over a short `x`).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(self.cols, x.len());
-        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+        let (rows, cols) = (self.rows, self.cols);
+        let mut out = vec![0.0; rows];
+        let mut i = 0;
+        while i + 4 <= rows {
+            let r0 = &self.data[i * cols..(i + 1) * cols];
+            let r1 = &self.data[(i + 1) * cols..(i + 2) * cols];
+            let r2 = &self.data[(i + 2) * cols..(i + 3) * cols];
+            let r3 = &self.data[(i + 3) * cols..(i + 4) * cols];
+            let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+            for t in 0..cols {
+                let xv = x[t];
+                s0 += r0[t] * xv;
+                s1 += r1[t] * xv;
+                s2 += r2[t] * xv;
+                s3 += r3[t] * xv;
+            }
+            out[i] = s0;
+            out[i + 1] = s1;
+            out[i + 2] = s2;
+            out[i + 3] = s3;
+            i += 4;
+        }
+        while i < rows {
+            out[i] = dot(self.row(i), x);
+            i += 1;
+        }
+        out
     }
 
     /// `selfᵀ · x`.
@@ -126,8 +186,10 @@ impl Mat {
     }
 }
 
-/// Compute rows `[row0, row0+nrows)` of `A·Bᵀ` into `chunk`.
-fn matmul_bt_block(
+/// Compute rows `[row0, row0+nrows)` of `A·Bᵀ` into `chunk`. Serial: exposed
+/// crate-wide so already-parallel callers (Lloyd assignment) can run one
+/// GEMM block per worker thread without nested spawning.
+pub(crate) fn matmul_bt_block(
     a: &[f64],
     b: &[f64],
     chunk: &mut [f64],
@@ -243,6 +305,32 @@ mod tests {
             let slow = naive_matmul(&a, &b.transpose());
             testing::all_close(&fast.data, &slow.data, 1e-10)
         });
+    }
+
+    #[test]
+    fn matmul_bt_into_reuses_buffer() {
+        let mut rng = Rng::new(7);
+        let a = Mat::from_vec(5, 3, gen::mat_normal(&mut rng, 5, 3));
+        let b = Mat::from_vec(4, 3, gen::mat_normal(&mut rng, 4, 3));
+        let fresh = a.matmul_bt(&b);
+        let mut out = Mat::from_vec(5, 4, vec![9.0; 20]); // stale contents
+        a.matmul_bt_into(&b, &mut out);
+        assert_eq!(out.data, fresh.data);
+    }
+
+    #[test]
+    fn transpose_rectangular_blocked() {
+        // Exercise multiple 32-tiles in both dimensions.
+        let (r, c) = (70, 45);
+        let a = Mat::from_fn(r, c, |i, j| (i * 1000 + j) as f64);
+        let t = a.transpose();
+        assert_eq!(t.rows, c);
+        assert_eq!(t.cols, r);
+        for i in 0..r {
+            for j in 0..c {
+                assert_eq!(t.at(j, i), a.at(i, j));
+            }
+        }
     }
 
     #[test]

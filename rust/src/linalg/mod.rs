@@ -2,11 +2,13 @@
 //!
 //! - [`matrix`] — row-major dense matrices, blocked threaded `A·Bᵀ`.
 //! - [`complex`] — split-layout complex vectors (sketches, atoms).
+//! - [`cmat`] — split-layout complex matrices (batched atom blocks).
 //! - [`solve`] — Cholesky, triangular solves, ridge least squares.
 //! - [`nnls`] — Lawson–Hanson non-negative least squares (CLOMPR steps 3–4).
 //! - [`sparse`] — CSR matrices + normalized graph Laplacian.
 //! - [`eigen`] — tridiagonal QL and Lanczos (spectral embedding).
 
+pub mod cmat;
 pub mod complex;
 pub mod eigen;
 pub mod matrix;
@@ -14,5 +16,6 @@ pub mod nnls;
 pub mod solve;
 pub mod sparse;
 
+pub use cmat::CMat;
 pub use complex::CVec;
 pub use matrix::Mat;

@@ -1,0 +1,355 @@
+//! Batched atom kernels: the GEMM-backed solver-side hot paths.
+//!
+//! CLOMPR's per-iteration cost is dominated by atom evaluation — `K` atoms
+//! `Aδ_{c_k} = e^{-i W c_k}`, their `K × K` Gram for the NNLS re-fits, and
+//! the step-5 gradient of all `K` centroids at once. The scalar paths in
+//! [`SketchOp`] evaluate those one centroid (one `matvec`/`matvec_t`) at a
+//! time; this module rewrites them as batched products on the blocked,
+//! threaded [`Mat`] primitives:
+//!
+//! - [`atoms_batch`] — one `C·Wᵀ` GEMM (`K × m` phases), then a vectorized
+//!   `sin_cos` sweep.
+//! - [`gram_and_corr`] — the NNLS normal equations via two `K × K` GEMMs
+//!   (`Re·Reᵀ + Im·Imᵀ`) and two GEMVs instead of `K²` scalar `re_dot`s.
+//! - [`mixture_sketch_batch`] — `αᵀ · atoms` over a pre-built atom block.
+//! - [`step5_value_grads_batch`] — builds the `K × m` factor `Q` once, then
+//!   a single `Q·W` GEMM (row-parallel) yields every centroid gradient.
+//!
+//! Every batched kernel preserves the scalar paths' accumulation order, so
+//! outputs are bit-identical (modulo the sign of exact zeros) — the scalar
+//! implementations are retained as correctness oracles and the parity is
+//! enforced by property tests here and in `tests/properties.rs`.
+
+use super::operator::SketchOp;
+use crate::linalg::nnls::nnls_gram;
+use crate::linalg::{CMat, CVec, Mat};
+use crate::util::parallel;
+
+/// Elementwise work below this size runs serially (thread spawn/join would
+/// dwarf it); above it, sweeps split across the worker pool.
+const PAR_SWEEP_THRESHOLD: usize = 8 * 1024;
+
+/// All `K` atoms of a support at once: `atoms[k] = A δ_{c_k}` as a `K × m`
+/// complex matrix. One `C·Wᵀ` GEMM, then a (parallel) `sin_cos` sweep —
+/// the trig is the dominant cost at paper scale (`K·m` evaluations).
+pub fn atoms_batch(op: &SketchOp, centroids: &Mat) -> CMat {
+    let theta = centroids.matmul_bt(&op.w);
+    let mut out = CMat::zeros(theta.rows, theta.cols);
+    let len = theta.data.len();
+    let threads = if len >= PAR_SWEEP_THRESHOLD { parallel::default_threads() } else { 1 };
+    let ranges = parallel::split_ranges(len, threads);
+    if ranges.len() <= 1 {
+        sin_cos_sweep(&theta.data, &mut out.re.data, &mut out.im.data);
+        return out;
+    }
+    std::thread::scope(|s| {
+        let mut re_rest: &mut [f64] = &mut out.re.data;
+        let mut im_rest: &mut [f64] = &mut out.im.data;
+        for r in ranges {
+            let (re_head, re_tail) = re_rest.split_at_mut(r.len());
+            let (im_head, im_tail) = im_rest.split_at_mut(r.len());
+            re_rest = re_tail;
+            im_rest = im_tail;
+            let th = &theta.data[r.start..r.end];
+            s.spawn(move || sin_cos_sweep(th, re_head, im_head));
+        }
+    });
+    out
+}
+
+/// `re[i] = cos θ_i, im[i] = −sin θ_i` over a chunk (elementwise, so chunk
+/// boundaries cannot affect the result).
+fn sin_cos_sweep(theta: &[f64], re: &mut [f64], im: &mut [f64]) {
+    for (i, t) in theta.iter().enumerate() {
+        let (s, c) = t.sin_cos();
+        re[i] = c;
+        im[i] = -s;
+    }
+}
+
+/// Scalar oracle for [`atoms_batch`]: one `op.atom` matvec per centroid.
+pub fn atoms_batch_scalar(op: &SketchOp, centroids: &Mat) -> CMat {
+    let rows: Vec<CVec> = (0..centroids.rows).map(|k| op.atom(centroids.row(k))).collect();
+    if rows.is_empty() {
+        return CMat::zeros(0, op.m());
+    }
+    CMat::from_rows(&rows)
+}
+
+/// NNLS normal equations over an atom block: `G_ij = s² Re⟨u_i, u_j⟩` and
+/// `h_j = s Re⟨u_j, ẑ⟩`, with `s` the common atom scale (1 for raw atoms,
+/// `1/√m` for normalized ones). Two `K × K` GEMMs + two GEMVs.
+pub fn gram_and_corr(atoms: &CMat, z_hat: &CVec, scale: f64) -> (Mat, Vec<f64>) {
+    let s2 = scale * scale;
+    let mut g = atoms.re.matmul_bt(&atoms.re);
+    let g_im = atoms.im.matmul_bt(&atoms.im);
+    for (a, b) in g.data.iter_mut().zip(&g_im.data) {
+        *a = s2 * (*a + *b);
+    }
+    let h_re = atoms.re.matvec(&z_hat.re);
+    let h_im = atoms.im.matvec(&z_hat.im);
+    let h = h_re.iter().zip(&h_im).map(|(a, b)| scale * (a + b)).collect();
+    (g, h)
+}
+
+/// NNLS weight fit over a pre-built atom block (CLOMPR steps 3/4):
+/// `min_{β ≥ 0} ‖ẑ − Σ β_j u_j‖`, atoms normalized when `normalized`.
+pub fn fit_weights(op: &SketchOp, z_hat: &CVec, atoms: &CMat, normalized: bool) -> Vec<f64> {
+    let scale = if normalized { 1.0 / op.atom_norm() } else { 1.0 };
+    let (g, h) = gram_and_corr(atoms, z_hat, scale);
+    nnls_gram(&g, &h)
+}
+
+/// Scalar oracle for [`fit_weights`]: `K²` pairwise `re_dot`s on atom rows
+/// (the pre-batch CLOMPR implementation, kept verbatim for parity tests).
+pub fn fit_weights_scalar(
+    op: &SketchOp,
+    z_hat: &CVec,
+    atoms: &CMat,
+    normalized: bool,
+) -> Vec<f64> {
+    let kk = atoms.rows();
+    let scale = if normalized { 1.0 / op.atom_norm() } else { 1.0 };
+    let rows: Vec<CVec> = (0..kk).map(|k| atoms.row_cvec(k)).collect();
+    let mut g = Mat::zeros(kk, kk);
+    for i in 0..kk {
+        for j in 0..=i {
+            let v = scale * scale * rows[i].re_dot(&rows[j]);
+            *g.at_mut(i, j) = v;
+            *g.at_mut(j, i) = v;
+        }
+    }
+    let h: Vec<f64> = rows.iter().map(|u| scale * u.re_dot(z_hat)).collect();
+    nnls_gram(&g, &h)
+}
+
+/// Sketch of a weighted mixture over a pre-built atom block:
+/// `Σ_k α_k u_k`. Same accumulation order (and zero-weight skip) as
+/// `SketchOp::mixture_sketch`.
+pub fn mixture_sketch_batch(atoms: &CMat, alpha: &[f64]) -> CVec {
+    atoms.weighted_row_sum(alpha)
+}
+
+/// Step-5 cost and gradients, batched: cost `‖ẑ − Σ α_k u_k‖²`, `∂/∂α` via
+/// two GEMVs, and `∂/∂C = −2 diag(α) · Q · W` via one row-parallel GEMM,
+/// where `Q_{kj} = −(sinθ_{kj}·Re r_j + cosθ_{kj}·Im r_j)`.
+pub fn step5_value_grads_batch(
+    op: &SketchOp,
+    z_hat: &CVec,
+    centroids: &Mat,
+    alpha: &[f64],
+) -> (f64, Mat, Vec<f64>) {
+    let atoms = atoms_batch(op, centroids);
+    step5_value_grads_from_atoms(op, z_hat, &atoms, alpha)
+}
+
+/// [`step5_value_grads_batch`] over an already-materialized atom block.
+pub fn step5_value_grads_from_atoms(
+    op: &SketchOp,
+    z_hat: &CVec,
+    atoms: &CMat,
+    alpha: &[f64],
+) -> (f64, Mat, Vec<f64>) {
+    let kk = atoms.rows();
+    let m = op.m();
+    assert_eq!(alpha.len(), kk);
+    assert_eq!(z_hat.len(), m);
+    let threads = if kk * m >= PAR_SWEEP_THRESHOLD { parallel::default_threads() } else { 1 };
+    // Residual r = ẑ − Σ α_k u_k. Each component r_j accumulates over k in
+    // row order (the scalar order), so splitting the *columns* across
+    // threads is bit-neutral.
+    let mut r = z_hat.clone();
+    {
+        let ranges = parallel::split_ranges(m, threads);
+        if ranges.len() <= 1 {
+            for k in 0..kk {
+                atoms.axpy_row_into(k, -alpha[k], &mut r);
+            }
+        } else {
+            let atoms_ref = &atoms;
+            std::thread::scope(|s| {
+                let mut re_rest: &mut [f64] = &mut r.re;
+                let mut im_rest: &mut [f64] = &mut r.im;
+                for rg in ranges {
+                    let (re_head, re_tail) = re_rest.split_at_mut(rg.len());
+                    let (im_head, im_tail) = im_rest.split_at_mut(rg.len());
+                    re_rest = re_tail;
+                    im_rest = im_tail;
+                    let (start, end) = (rg.start, rg.end);
+                    s.spawn(move || {
+                        for k in 0..kk {
+                            let coef = -alpha[k];
+                            let (u_re, u_im) = atoms_ref.row(k);
+                            let (u_re, u_im) = (&u_re[start..end], &u_im[start..end]);
+                            for j in 0..re_head.len() {
+                                re_head[j] += coef * u_re[j];
+                                im_head[j] += coef * u_im[j];
+                            }
+                        }
+                    });
+                }
+            });
+        }
+    }
+    let cost = r.norm2_sq();
+    // ∂g/∂α_k = −2 Re⟨u_k, r⟩ for all k: two GEMVs.
+    let ga_re = atoms.re.matvec(&r.re);
+    let ga_im = atoms.im.matvec(&r.im);
+    let grad_a: Vec<f64> = ga_re.iter().zip(&ga_im).map(|(a, b)| -2.0 * (a + b)).collect();
+    // Q_{kj} = −(sinθ·Re r + cosθ·Im r); note u.re = cosθ, u.im = −sinθ.
+    // Elementwise in the flat K × m layout shared with the atom block, so
+    // the sweep parallelizes over arbitrary chunks.
+    let mut q = Mat::zeros(kk, m);
+    parallel::parallel_chunks_mut(&mut q.data, threads, |off, chunk| {
+        for (idx, qv) in chunk.iter_mut().enumerate() {
+            let e = off + idx;
+            let j = e % m;
+            let (co, s) = (atoms.re.data[e], -atoms.im.data[e]);
+            *qv = -(s * r.re[j] + co * r.im[j]);
+        }
+    });
+    // All K centroid gradients in one GEMM against the cached transpose:
+    // ∇_{c_k} g = −2 α_k (Q·W)_k.
+    let qw = q.matmul_bt(op.w_t());
+    let mut grad_c = Mat::zeros(kk, op.n_dims());
+    for k in 0..kk {
+        let src = qw.row(k);
+        let dst = grad_c.row_mut(k);
+        for d in 0..src.len() {
+            dst[d] = -2.0 * alpha[k] * src[d];
+        }
+    }
+    (cost, grad_c, grad_a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::frequencies::FreqDist;
+    use crate::testing::{self, gen, Config};
+    use crate::util::rng::Rng;
+
+    fn op(m: usize, n: usize, seed: u64) -> SketchOp {
+        let mut rng = Rng::new(seed);
+        SketchOp::new(FreqDist::adapted(1.0).draw(m, n, &mut rng))
+    }
+
+    fn rand_support(rng: &mut Rng, k: usize, n: usize) -> (Mat, Vec<f64>) {
+        let c = Mat::from_vec(k, n, gen::mat_normal(rng, k, n));
+        let a: Vec<f64> = (0..k).map(|_| rng.uniform()).collect();
+        (c, a)
+    }
+
+    #[test]
+    fn prop_atoms_batch_bit_matches_scalar() {
+        testing::check("atoms_batch == scalar", Config::default().cases(24).max_size(40), |rng, size| {
+            let n = 1 + rng.below(8);
+            let k = 1 + rng.below(1 + size / 4);
+            let o = op(8 + rng.below(size), n, rng.next_u64());
+            let (c, _) = rand_support(rng, k, n);
+            let fast = atoms_batch(&o, &c);
+            let slow = atoms_batch_scalar(&o, &c);
+            testing::all_close(&fast.re.data, &slow.re.data, 0.0)?;
+            testing::all_close(&fast.im.data, &slow.im.data, 0.0)
+        });
+    }
+
+    #[test]
+    fn prop_gram_and_corr_bit_matches_scalar() {
+        testing::check("gram/corr == scalar", Config::default().cases(20).max_size(40), |rng, size| {
+            let n = 1 + rng.below(6);
+            let k = 1 + rng.below(8);
+            let m = 8 + rng.below(size);
+            let o = op(m, n, rng.next_u64());
+            let (c, _) = rand_support(rng, k, n);
+            let z = CVec::from_parts(gen::vec_normal(rng, m), gen::vec_normal(rng, m));
+            let atoms = atoms_batch(&o, &c);
+            for normalized in [false, true] {
+                let scale = if normalized { 1.0 / o.atom_norm() } else { 1.0 };
+                let (g, h) = gram_and_corr(&atoms, &z, scale);
+                // scalar oracle
+                for i in 0..k {
+                    for j in 0..k {
+                        let v = scale * scale * atoms.row_cvec(i).re_dot(&atoms.row_cvec(j));
+                        testing::close(g.at(i, j), v, 0.0)?;
+                    }
+                    let hv = scale * atoms.row_cvec(i).re_dot(&z);
+                    testing::close(h[i], hv, 0.0)?;
+                }
+                // weights agree too
+                let fast = fit_weights(&o, &z, &atoms, normalized);
+                let slow = fit_weights_scalar(&o, &z, &atoms, normalized);
+                testing::all_close(&fast, &slow, 0.0)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_mixture_batch_bit_matches_scalar() {
+        testing::check("mixture batch == scalar", Config::default().cases(20).max_size(30), |rng, size| {
+            let n = 1 + rng.below(5);
+            let k = 1 + rng.below(8);
+            let o = op(8 + rng.below(size), n, rng.next_u64());
+            let (c, mut a) = rand_support(rng, k, n);
+            a[rng.below(k)] = 0.0; // exercise the zero-skip path
+            let atoms = atoms_batch(&o, &c);
+            let fast = mixture_sketch_batch(&atoms, &a);
+            let slow = o.mixture_sketch(&c, &a);
+            testing::all_close(&fast.re, &slow.re, 0.0)?;
+            testing::all_close(&fast.im, &slow.im, 0.0)
+        });
+    }
+
+    #[test]
+    fn prop_step5_batch_matches_scalar() {
+        testing::check("step5 batch == scalar", Config::default().cases(16).max_size(40), |rng, size| {
+            let n = 1 + rng.below(6);
+            let k = 1 + rng.below(8);
+            let m = 8 + rng.below(size);
+            let o = op(m, n, rng.next_u64());
+            let (c, a) = rand_support(rng, k, n);
+            let z = CVec::from_parts(gen::vec_normal(rng, m), gen::vec_normal(rng, m));
+            let (cost_b, gc_b, ga_b) = step5_value_grads_batch(&o, &z, &c, &a);
+            let (cost_s, gc_s, ga_s) = o.step5_value_grads(&z, &c, &a);
+            testing::close(cost_b, cost_s, 0.0)?;
+            testing::all_close(&ga_b, &ga_s, 0.0)?;
+            // Centroid gradients: identical accumulation order except the
+            // scalar matvec_t skips exact-zero q entries (sign-of-zero only);
+            // compare at 1e-12.
+            testing::all_close(&gc_b.data, &gc_s.data, 1e-12)
+        });
+    }
+
+    #[test]
+    fn paper_scale_parity_exercises_parallel_sweeps() {
+        // K·m = 10240 ≥ PAR_SWEEP_THRESHOLD: the threaded sin_cos, residual
+        // and Q sweeps run here, and must still bit-match the scalar paths.
+        let o = op(1024, 10, 99);
+        let mut rng = Rng::new(100);
+        let (c, a) = rand_support(&mut rng, 10, 10);
+        let z =
+            CVec::from_parts(gen::vec_normal(&mut rng, 1024), gen::vec_normal(&mut rng, 1024));
+        let fast = atoms_batch(&o, &c);
+        let slow = atoms_batch_scalar(&o, &c);
+        testing::all_close(&fast.re.data, &slow.re.data, 0.0).unwrap();
+        testing::all_close(&fast.im.data, &slow.im.data, 0.0).unwrap();
+        let (cost_b, gc_b, ga_b) = step5_value_grads_batch(&o, &z, &c, &a);
+        let (cost_s, gc_s, ga_s) = o.step5_value_grads(&z, &c, &a);
+        testing::close(cost_b, cost_s, 0.0).unwrap();
+        testing::all_close(&ga_b, &ga_s, 0.0).unwrap();
+        testing::all_close(&gc_b.data, &gc_s.data, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn empty_support() {
+        let o = op(16, 3, 1);
+        let c = Mat::zeros(0, 3);
+        let atoms = atoms_batch(&o, &c);
+        assert_eq!(atoms.rows(), 0);
+        assert_eq!(fit_weights(&o, &CVec::zeros(16), &atoms, false), Vec::<f64>::new());
+        let z = mixture_sketch_batch(&atoms, &[]);
+        assert_eq!(z.len(), 16);
+        assert!(z.norm2_sq() == 0.0);
+    }
+}

@@ -1,7 +1,9 @@
-//! Sketching layer: frequency sampling, the operator `A`, σ² estimation and
-//! the mergeable streaming accumulator (paper §3.1 and §3.3 steps 1–3).
+//! Sketching layer: frequency sampling, the operator `A`, batched atom
+//! kernels, σ² estimation and the mergeable streaming accumulator (paper
+//! §3.1 and §3.3 steps 1–3).
 
 pub mod frequencies;
+pub mod kernels;
 pub mod operator;
 pub mod scale;
 pub mod streaming;

@@ -9,6 +9,11 @@
 //! The hot loop (`X·Wᵀ` then cos/sin accumulation) is blocked and
 //! multi-threaded; the same math is what the Pallas kernel implements.
 //!
+//! The per-atom methods here (`atom`, `mixture_sketch`,
+//! `step5_value_grads`) are the scalar oracles for the batched GEMM
+//! kernels in [`super::kernels`], which the solvers use in production;
+//! property tests pin the two bit-for-bit.
+//!
 //! Gradient identities used by CLOMPR (derivation in DESIGN.md §2):
 //! with θ_j = ω_j^T c and r the residual,
 //!   Re⟨Aδ_c, r⟩ = Σ_j cosθ_j·Re r_j − sinθ_j·Im r_j
@@ -17,16 +22,25 @@
 
 use crate::linalg::{CVec, Mat};
 use crate::util::parallel;
+use std::sync::OnceLock;
 
 /// The sketching operator: a frequency matrix `W (m × n)`.
 #[derive(Clone, Debug)]
 pub struct SketchOp {
     pub w: Mat,
+    /// Cached `Wᵀ` for the batched `Q·W` gradient GEMM (computed on first
+    /// use; `W` is immutable for the life of the operator).
+    wt: OnceLock<Mat>,
 }
 
 impl SketchOp {
     pub fn new(w: Mat) -> SketchOp {
-        SketchOp { w }
+        SketchOp { w, wt: OnceLock::new() }
+    }
+
+    /// `Wᵀ (n × m)`, transposed once and cached.
+    pub fn w_t(&self) -> &Mat {
+        self.wt.get_or_init(|| self.w.transpose())
     }
 
     pub fn m(&self) -> usize {

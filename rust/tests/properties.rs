@@ -1,10 +1,11 @@
 //! Cross-module property tests on mathematical invariants of the system.
 
-use ckm::ckm::{solve, CkmOptions};
+use ckm::ckm::{solve, solve_hierarchical, solve_with_engine, CkmOptions};
 use ckm::data::dataset::Bounds;
 use ckm::data::gmm::GmmConfig;
+use ckm::engine::{CkmEngine, NativeEngine, ScalarEngine};
 use ckm::linalg::CVec;
-use ckm::sketch::{sketch_dataset, FreqDist, SketchOp};
+use ckm::sketch::{kernels, sketch_dataset, FreqDist, SketchOp};
 use ckm::testing::{self, gen, Config};
 use ckm::util::rng::Rng;
 
@@ -89,6 +90,81 @@ fn prop_clompr_output_invariants() {
             return Err(format!("cost {} vs empty {empty_cost}", sol.cost));
         }
         Ok(())
+    });
+}
+
+/// The batched kernel layer is a pure reimplementation of the scalar
+/// paths: a seeded end-to-end CLOMPR solve must produce *identical*
+/// centroids, weights and cost on the GEMM-backed [`NativeEngine`] and the
+/// one-centroid-at-a-time [`ScalarEngine`] oracle.
+#[test]
+fn e2e_solve_identical_on_batched_and_scalar_engines() {
+    let mut rng = Rng::new(2026);
+    let g = GmmConfig::paper_default(4, 5, 6000).generate(&mut rng);
+    let sk = sketch_dataset(&g.dataset.points, 5, 300, 21, None);
+    let opts = CkmOptions { replicates: 2, seed: 9, ..CkmOptions::default() };
+    let native =
+        NativeEngine::with_options(sk.op.clone(), opts.step1.clone(), opts.step5.clone());
+    let scalar =
+        ScalarEngine::with_options(sk.op.clone(), opts.step1.clone(), opts.step5.clone());
+    let a = solve_with_engine(&sk.z, &native, &sk.bounds, 4, None, &opts);
+    let b = solve_with_engine(&sk.z, &scalar, &sk.bounds, 4, None, &opts);
+    assert_eq!(a.centroids.data, b.centroids.data, "centroids diverged");
+    assert_eq!(a.alpha, b.alpha, "weights diverged");
+    assert_eq!(a.cost, b.cost, "cost diverged");
+}
+
+/// Same parity for the hierarchical solver.
+#[test]
+fn e2e_hierarchical_identical_on_batched_and_scalar_engines() {
+    let mut rng = Rng::new(2027);
+    let g = GmmConfig::paper_default(3, 4, 4000).generate(&mut rng);
+    let sk = sketch_dataset(&g.dataset.points, 4, 200, 23, None);
+    let opts = CkmOptions { seed: 5, ..CkmOptions::default() };
+    let native =
+        NativeEngine::with_options(sk.op.clone(), opts.step1.clone(), opts.step5.clone());
+    let scalar =
+        ScalarEngine::with_options(sk.op.clone(), opts.step1.clone(), opts.step5.clone());
+    let a = solve_hierarchical(&sk.z, &native, &sk.bounds, 3, &opts);
+    let b = solve_hierarchical(&sk.z, &scalar, &sk.bounds, 3, &opts);
+    assert_eq!(a.centroids.data, b.centroids.data, "centroids diverged");
+    assert_eq!(a.alpha, b.alpha, "weights diverged");
+}
+
+/// Cross-module form of the kernel parity properties: batched atoms, NNLS
+/// fits and mixtures agree with the scalar oracles on random supports
+/// drawn through the public engine API.
+#[test]
+fn prop_engine_batched_kernels_match_scalar_oracle() {
+    testing::check("engine batched == scalar", Config::default().cases(12).max_size(30), |rng, size| {
+        let n = 1 + rng.below(6);
+        let k = 1 + rng.below(6);
+        let m = 8 + rng.below(8 * size.max(1));
+        let op = SketchOp::new(FreqDist::adapted(1.0).draw(m, n, &mut rng.split()));
+        let native = NativeEngine::new(op.clone());
+        let scalar = ScalarEngine::new(op.clone());
+        let c = ckm::linalg::Mat::from_vec(k, n, gen::mat_normal(rng, k, n));
+        let z = CVec::from_parts(gen::vec_normal(rng, m), gen::vec_normal(rng, m));
+        let ab = native.atoms_batch(&c);
+        let asc = scalar.atoms_batch(&c);
+        testing::all_close(&ab.re.data, &asc.re.data, 0.0)?;
+        testing::all_close(&ab.im.data, &asc.im.data, 0.0)?;
+        for normalized in [false, true] {
+            let wb = native.fit_weights(&z, &ab, normalized);
+            let ws = scalar.fit_weights(&z, &asc, normalized);
+            testing::all_close(&wb, &ws, 0.0)?;
+        }
+        let alpha: Vec<f64> = (0..k).map(|_| rng.uniform()).collect();
+        let mb = native.mixture_sketch_batch(&ab, &alpha);
+        let ms = op.mixture_sketch(&c, &alpha);
+        testing::all_close(&mb.re, &ms.re, 0.0)?;
+        testing::all_close(&mb.im, &ms.im, 0.0)?;
+        // step-5 gradients: batched Q·W GEMM vs scalar matvec_t loop.
+        let (cost_b, gc_b, ga_b) = kernels::step5_value_grads_batch(&op, &z, &c, &alpha);
+        let (cost_s, gc_s, ga_s) = op.step5_value_grads(&z, &c, &alpha);
+        testing::close(cost_b, cost_s, 0.0)?;
+        testing::all_close(&ga_b, &ga_s, 0.0)?;
+        testing::all_close(&gc_b.data, &gc_s.data, 1e-12)
     });
 }
 
