@@ -1,0 +1,94 @@
+//! Quantized compressive K-means (QCKM) demo: the sketch at 1 bit per
+//! measurement.
+//!
+//! Two sites sketch shards of the same dataset under a shared builder
+//! config with `.quantization(OneBit)`: each per-point moment contribution
+//! is dithered down to a single bit per component, workers ship bit-packed
+//! integer partials, and the shards merge *exactly* (integer arithmetic —
+//! no floating-point order effects). The merged v2 artifact is saved,
+//! reloaded bit-for-bit, and decoded by the unchanged CLOMPR solver; a
+//! dense run on the same data shows the accuracy cost of the 64×-smaller
+//! payload.
+//!
+//! Run with: `cargo run --release --example quantized_sketch`
+
+use ckm::api::QuantizationMode;
+use ckm::data::dataset::SliceSource;
+use ckm::data::gmm::GmmConfig;
+use ckm::metrics::sse;
+use ckm::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let (k, n_dims, n_points, m) = (6usize, 8usize, 100_000usize, 512usize);
+    let mut rng = Rng::new(3);
+    let mut data_cfg = GmmConfig::paper_default(k, n_dims, n_points);
+    data_cfg.separation = 2.5;
+    let g = data_cfg.generate(&mut rng);
+    let pts = &g.dataset.points;
+    let half = (n_points / 2) * n_dims;
+    println!("dataset: N={n_points} n={n_dims} K={k}, split across 2 sites\n");
+
+    let base = Ckm::builder().frequencies(m).sigma2(1.0).seed(7).workers(4);
+    let dense = base.clone().build()?;
+    let onebit = base.clone().quantization(QuantizationMode::OneBit);
+    // Each site gets its own shard id: every site numbers rows from 0, so
+    // distinct ids keep the dither streams independent across the merge.
+    let site_a = onebit.clone().shard(1).build()?;
+    let site_b = onebit.clone().shard(2).build()?;
+    let solver = site_a.clone();
+
+    // -- Each site quantize-sketches its shard; partials ship bit-packed.
+    let mut src_a = SliceSource::new(&pts[..half], n_dims);
+    let mut src_b = SliceSource::new(&pts[half..], n_dims);
+    let (shard_a, stats_a) = site_a.sketch_from(&mut src_a, None)?;
+    let (shard_b, _) = site_b.sketch_from(&mut src_b, None)?;
+    println!(
+        "site A: {} points -> {} bits of payload ({:.0}x smaller than the shard, \
+         {} B of partials shipped)",
+        shard_a.count,
+        shard_a.payload_bits(),
+        shard_a.compression_ratio(),
+        stats_a.shipped_bytes,
+    );
+
+    // -- Quantized merging is integer-exact: any order, bit for bit.
+    let merged = shard_a.merge(&shard_b)?;
+    assert_eq!(merged, shard_b.merge(&shard_a)?);
+    println!("leader: merged A+B = {} points (integer merge, order-free)", merged.count);
+
+    // -- The v2 artifact is durable: packed payload + provenance.
+    let path = std::env::temp_dir().join("ckm_quantized.json");
+    merged.to_file(&path)?;
+    let reloaded = SketchArtifact::from_file(&path)?;
+    assert_eq!(reloaded, merged, "v2 round trip must be exact");
+    println!("leader: reloaded v2 artifact from {path:?}, checksum verified, bit-identical\n");
+
+    // -- Decode both pipelines and compare the SSE cost of 1-bit moments.
+    let art_dense = {
+        let mut src = SliceSource::new(pts, n_dims);
+        dense.sketch(&mut src)?
+    };
+    for (name, ckm, art) in
+        [("dense", &dense, &art_dense), ("1-bit", &solver, &reloaded)]
+    {
+        let sol = ckm.solve(art, k)?;
+        let s = sse(pts, n_dims, &sol.centroids) / n_points as f64;
+        println!(
+            "{name:>6}: SSE/N = {s:.3}  (payload {:>7} bits, sketch cost {:.3e})",
+            art.payload_bits(),
+            sol.cost
+        );
+    }
+
+    // -- A dense shard cannot sneak into a quantized merge.
+    let mut src = SliceSource::new(&pts[..half], n_dims);
+    let foreign = dense.sketch(&mut src)?;
+    match merged.merge(&foreign) {
+        Err(e) => println!("\ndense shard rejected as expected:\n  {e}"),
+        Ok(_) => panic!("quantization mismatch must be rejected"),
+    }
+
+    std::fs::remove_file(&path).ok();
+    println!("\n1 bit per measurement, exact merges, same decoder ✓");
+    Ok(())
+}

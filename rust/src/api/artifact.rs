@@ -11,17 +11,28 @@
 //!
 //! The on-disk format is versioned JSON (see [`SKETCH_FORMAT_VERSION`]);
 //! floats round-trip bit-for-bit (shortest-round-trip decimal encoding).
+//!
+//! ## Format v2: quantized payloads
+//!
+//! Version 2 adds an optional `quant` object for QCKM artifacts (see
+//! [`crate::sketch::quantize`]): instead of `sum_re`/`sum_im` doubles, the
+//! file carries bit-packed integer level sums
+//! (`{"bits": b, "width": w, "payload": "<hex>"}`), cutting the payload by
+//! up to 64× in 1-bit mode. Dense artifacts keep the v1 field set (only
+//! the version number advances), and v1 files still load.
 
 use super::ApiError;
 use crate::data::dataset::Bounds;
 use crate::linalg::{CVec, Mat};
+use crate::sketch::quantize::{self, QuantizationMode, QuantizedAccumulator};
 use crate::sketch::{FreqDist, RadiusKind, SketchOp};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::path::Path;
 
-/// Version of the artifact JSON schema this build reads and writes.
-pub const SKETCH_FORMAT_VERSION: u32 = 1;
+/// Version of the artifact JSON schema this build writes. Every version
+/// from 1 up to this one loads.
+pub const SKETCH_FORMAT_VERSION: u32 = 2;
 
 /// Salt mixed into the builder seed for the operator's dedicated RNG
 /// stream, so the frequency draw is independent of how many draws σ²
@@ -127,6 +138,24 @@ impl OpSpec {
     }
 }
 
+/// Quantization metadata + integer payload of a QCKM artifact (format v2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantSpec {
+    /// Bits per sketch component.
+    pub mode: QuantizationMode,
+    /// Summed level codes: `m` re components then `m` im components.
+    pub level_sums: Vec<u64>,
+}
+
+impl QuantSpec {
+    fn describe(q: &Option<QuantSpec>) -> String {
+        match q {
+            None => "dense".to_string(),
+            Some(q) => q.mode.name(),
+        }
+    }
+}
+
 /// A durable partial sketch: the unit of sketch-once / ship / merge /
 /// solve-many. Create one with [`crate::api::Ckm::sketch`] (or siblings),
 /// or load one with [`SketchArtifact::from_file`].
@@ -135,22 +164,45 @@ pub struct SketchArtifact {
     /// Provenance of the operator all sums were computed with.
     pub op: OpSpec,
     /// Unnormalized `Σ e^{-iωx}` over every point this artifact absorbed.
+    /// For a quantized artifact this is the *debiased* equivalent, derived
+    /// deterministically from the integer payload (never serialized).
     pub sum: CVec,
     /// Number of points absorbed.
     pub count: usize,
     /// One-pass box bounds of the absorbed points (CLOMPR's constraints).
     pub bounds: Bounds,
+    /// `Some` for a quantized (QCKM) artifact, `None` for dense.
+    pub quant: Option<QuantSpec>,
 }
 
 impl SketchArtifact {
-    /// The normalized sketch `ẑ = sum / count` CLOMPR decodes.
+    /// The normalized sketch `ẑ = sum / count` CLOMPR decodes — already
+    /// debiased for quantized artifacts, so the solver path is identical
+    /// for both.
     pub fn z(&self) -> CVec {
         crate::sketch::streaming::normalize_sum(&self.sum, self.count)
     }
 
+    /// Wrap a quantized accumulator (its integer state becomes the
+    /// payload; the debiased sums are derived once, deterministically).
+    pub fn from_quantized(op: OpSpec, acc: &QuantizedAccumulator) -> SketchArtifact {
+        assert_eq!(acc.m(), op.m, "accumulator m != operator m");
+        SketchArtifact {
+            sum: acc.dequantized_sum(),
+            count: acc.count,
+            bounds: acc.bounds.clone(),
+            quant: Some(QuantSpec { mode: acc.mode, level_sums: acc.level_sums.clone() }),
+            op,
+        }
+    }
+
     /// Exact merge with another shard's artifact (associative,
-    /// commutative). Fails with [`ApiError::OperatorMismatch`] unless both
-    /// artifacts were sketched with the identical operator.
+    /// commutative; for quantized artifacts the merge is *integer* — no
+    /// floating-point order effects at all). Fails with
+    /// [`ApiError::OperatorMismatch`] unless both artifacts were sketched
+    /// with the identical operator, and with
+    /// [`ApiError::QuantizationMismatch`] unless both use the same
+    /// quantization (or both are dense).
     pub fn merge(&self, other: &SketchArtifact) -> Result<SketchArtifact, ApiError> {
         if self.op != other.op {
             return Err(ApiError::OperatorMismatch {
@@ -158,11 +210,36 @@ impl SketchArtifact {
                 right: other.op.describe(),
             });
         }
-        let mut out = self.clone();
-        out.sum.axpy(1.0, &other.sum);
-        out.count += other.count;
-        out.bounds.merge(&other.bounds);
-        Ok(out)
+        match (&self.quant, &other.quant) {
+            (None, None) => {
+                let mut out = self.clone();
+                out.sum.axpy(1.0, &other.sum);
+                out.count += other.count;
+                out.bounds.merge(&other.bounds);
+                Ok(out)
+            }
+            (Some(a), Some(b)) if a.mode == b.mode => {
+                let level_sums: Vec<u64> =
+                    a.level_sums.iter().zip(&b.level_sums).map(|(x, y)| x + y).collect();
+                let count = self.count + other.count;
+                let mut bounds = self.bounds.clone();
+                bounds.merge(&other.bounds);
+                // Re-derive the debiased sums from the merged integers so a
+                // merged artifact is bit-identical to one loaded from disk.
+                let sum = quantize::dequantize_level_sums(a.mode, &level_sums, count);
+                Ok(SketchArtifact {
+                    op: self.op.clone(),
+                    sum,
+                    count,
+                    bounds,
+                    quant: Some(QuantSpec { mode: a.mode, level_sums }),
+                })
+            }
+            _ => Err(ApiError::QuantizationMismatch {
+                left: QuantSpec::describe(&self.quant),
+                right: QuantSpec::describe(&other.quant),
+            }),
+        }
     }
 
     /// Fold any number of shard artifacts into one.
@@ -177,12 +254,22 @@ impl SketchArtifact {
         Ok(acc)
     }
 
-    /// How many times smaller the artifact is than the raw points it
-    /// summarizes (f64 data vs complex-f64 sketch).
+    /// Size of the sketch payload in bits: `2m` f64 components for a dense
+    /// artifact, `2m` bit-packed integer sums for a quantized one.
+    pub fn payload_bits(&self) -> usize {
+        match &self.quant {
+            None => self.op.m * 2 * 64,
+            Some(q) => {
+                q.level_sums.len() * quantize::width_for(self.count, q.mode) as usize
+            }
+        }
+    }
+
+    /// How many times smaller the artifact payload is than the raw points
+    /// it summarizes (f64 data vs the dense or bit-packed sketch payload).
     pub fn compression_ratio(&self) -> f64 {
-        let data_bytes = (self.count * self.op.n_dims * 8) as f64;
-        let sketch_bytes = (self.op.m * 16) as f64;
-        data_bytes / sketch_bytes
+        let data_bits = (self.count * self.op.n_dims * 64) as f64;
+        data_bits / self.payload_bits() as f64
     }
 
     // -- serialization ----------------------------------------------------
@@ -194,16 +281,33 @@ impl SketchArtifact {
             // ±inf has no JSON encoding; an empty artifact stores no bounds.
             (&[][..], &[][..])
         };
-        Json::obj(vec![
+        let mut fields = vec![
             ("format", Json::Str("ckm-sketch".to_string())),
             ("version", Json::Num(SKETCH_FORMAT_VERSION as f64)),
             ("op", self.op.to_json()),
             ("count", Json::Num(self.count as f64)),
-            ("sum_re", Json::arr_f64(&self.sum.re)),
-            ("sum_im", Json::arr_f64(&self.sum.im)),
             ("bounds_lo", Json::arr_f64(lo)),
             ("bounds_hi", Json::arr_f64(hi)),
-        ])
+        ];
+        match &self.quant {
+            None => {
+                fields.push(("sum_re", Json::arr_f64(&self.sum.re)));
+                fields.push(("sum_im", Json::arr_f64(&self.sum.im)));
+            }
+            Some(q) => {
+                let width = quantize::width_for(self.count, q.mode);
+                let words = quantize::pack_values(&q.level_sums, width);
+                fields.push((
+                    "quant",
+                    Json::obj(vec![
+                        ("bits", Json::Num(q.mode.bits() as f64)),
+                        ("width", Json::Num(width as f64)),
+                        ("payload", Json::Str(quantize::words_to_hex(&words))),
+                    ]),
+                ));
+            }
+        }
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> Result<SketchArtifact, ApiError> {
@@ -211,7 +315,7 @@ impl SketchArtifact {
             return Err(bad("not a ckm-sketch file (missing format tag)"));
         }
         let version = j.get("version").as_usize().ok_or_else(|| bad("version missing"))?;
-        if version != SKETCH_FORMAT_VERSION as usize {
+        if !(1..=SKETCH_FORMAT_VERSION as usize).contains(&version) {
             return Err(ApiError::UnsupportedVersion {
                 found: version,
                 supported: SKETCH_FORMAT_VERSION,
@@ -219,16 +323,59 @@ impl SketchArtifact {
         }
         let op = OpSpec::from_json(j.get("op"))?;
         let count = j.get("count").as_usize().ok_or_else(|| bad("count missing"))?;
-        let re = f64_arr(j, "sum_re")?;
-        let im = f64_arr(j, "sum_im")?;
-        if re.len() != op.m || im.len() != op.m {
-            return Err(bad(&format!(
-                "sum length {}/{} != op.m {}",
-                re.len(),
-                im.len(),
-                op.m
-            )));
-        }
+        let quant_j = j.get("quant");
+        let (sum, quant) = if matches!(quant_j, Json::Null) {
+            let re = f64_arr(j, "sum_re")?;
+            let im = f64_arr(j, "sum_im")?;
+            if re.len() != op.m || im.len() != op.m {
+                return Err(bad(&format!(
+                    "sum length {}/{} != op.m {}",
+                    re.len(),
+                    im.len(),
+                    op.m
+                )));
+            }
+            (CVec::from_parts(re, im), None)
+        } else {
+            if version < 2 {
+                return Err(bad("quant payload requires format version >= 2"));
+            }
+            if !matches!(j.get("sum_re"), Json::Null) || !matches!(j.get("sum_im"), Json::Null) {
+                return Err(bad("quantized artifact must not carry dense sums"));
+            }
+            let bits = quant_j.get("bits").as_usize().ok_or_else(|| bad("quant.bits missing"))?;
+            if !(1..=16).contains(&bits) {
+                return Err(bad(&format!("quant.bits {bits} out of range 1..=16")));
+            }
+            let mode = QuantizationMode::Bits(bits as u8).normalized();
+            let width = quant_j
+                .get("width")
+                .as_usize()
+                .filter(|&w| w <= 64)
+                .ok_or_else(|| bad("quant.width missing or out of range"))?
+                as u32;
+            let payload = quant_j
+                .get("payload")
+                .as_str()
+                .ok_or_else(|| bad("quant.payload missing"))?;
+            let words =
+                quantize::hex_to_words(payload).map_err(|e| bad(&format!("quant.payload: {e}")))?;
+            // Reuse the wire validation (canonical width, packed length,
+            // code range, trailing bits) — file load and worker unpack
+            // stay provably identical.
+            let packed = quantize::PackedPartial {
+                mode,
+                dither_seed: 0, // not serialized; irrelevant to unpacking
+                m: op.m,
+                count,
+                bounds: Bounds::empty(op.n_dims), // parsed separately below
+                width,
+                words,
+            };
+            let acc = packed.unpack().map_err(|e| bad(&format!("quant.payload: {e}")))?;
+            let sum = acc.dequantized_sum();
+            (sum, Some(QuantSpec { mode, level_sums: acc.level_sums }))
+        };
         let lo = f64_arr(j, "bounds_lo")?;
         let hi = f64_arr(j, "bounds_hi")?;
         let bounds = if lo.is_empty() && hi.is_empty() {
@@ -241,7 +388,7 @@ impl SketchArtifact {
         if count > 0 && !bounds.is_valid() {
             return Err(bad("non-empty artifact with invalid bounds"));
         }
-        Ok(SketchArtifact { op, sum: CVec::from_parts(re, im), count, bounds })
+        Ok(SketchArtifact { op, sum, count, bounds, quant })
     }
 
     /// Write the artifact as pretty-printed versioned JSON.
@@ -303,7 +450,17 @@ mod tests {
         let pts = gen::mat_normal(&mut rng, n_pts, 3);
         let mut acc = SketchAccumulator::new(16, 3);
         acc.update(&op, &pts);
-        SketchArtifact { op: spec, sum: acc.sum, count: acc.count, bounds: acc.bounds }
+        SketchArtifact { op: spec, sum: acc.sum, count: acc.count, bounds: acc.bounds, quant: None }
+    }
+
+    fn toy_quantized(seed: u64, n_pts: usize, mode: QuantizationMode) -> SketchArtifact {
+        let (spec, op) = OpSpec::derive(seed, RadiusKind::AdaptedRadius, 1.0, 16, 3);
+        let mut rng = Rng::new(seed.wrapping_add(7));
+        let pts = gen::mat_normal(&mut rng, n_pts, 3);
+        let mut acc =
+            QuantizedAccumulator::new(16, 3, mode, quantize::dither_seed_for(spec.seed));
+        acc.update(&op, &pts, 0);
+        SketchArtifact::from_quantized(spec, &acc)
     }
 
     #[test]
@@ -382,6 +539,7 @@ mod tests {
                     sum: acc.sum,
                     count: acc.count,
                     bounds: acc.bounds,
+                    quant: None,
                 }
             })
             .collect();
@@ -428,6 +586,7 @@ mod tests {
             sum: CVec::zeros(8),
             count: 0,
             bounds: Bounds::empty(2),
+            quant: None,
         };
         let back = SketchArtifact::from_json(&art.to_json()).unwrap();
         assert_eq!(back.count, 0);
@@ -440,5 +599,111 @@ mod tests {
         let art = toy_artifact(6, 1000);
         // 1000 pts × 3 dims × 8 B vs 16 moments × 16 B
         assert!((art.compression_ratio() - (1000.0 * 3.0 * 8.0) / (16.0 * 16.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantized_round_trip_is_bit_exact() {
+        for mode in [QuantizationMode::OneBit, QuantizationMode::Bits(4)] {
+            let art = toy_quantized(13, 37, mode);
+            assert!(art.quant.is_some());
+            let text = art.to_json().to_pretty();
+            let back = SketchArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+            // includes the derived `sum`, re-derived identically on load
+            assert_eq!(back, art);
+        }
+    }
+
+    #[test]
+    fn quantized_merge_is_integer_exact_and_order_free() {
+        let (spec, op) = OpSpec::derive(17, RadiusKind::AdaptedRadius, 1.0, 16, 3);
+        let mut rng = Rng::new(3);
+        let pts = gen::mat_normal(&mut rng, 30, 3);
+        let seed = quantize::dither_seed_for(spec.seed);
+        let shard = |lo: usize, hi: usize| {
+            let mut acc = QuantizedAccumulator::new(16, 3, QuantizationMode::OneBit, seed);
+            acc.update(&op, &pts[lo * 3..hi * 3], lo);
+            SketchArtifact::from_quantized(spec.clone(), &acc)
+        };
+        let (a, b, c) = (shard(0, 9), shard(9, 21), shard(21, 30));
+        let ab_c = a.merge(&b).unwrap().merge(&c).unwrap();
+        let c_ba = c.merge(&b.merge(&a).unwrap()).unwrap();
+        assert_eq!(ab_c, c_ba); // bit-for-bit, any merge order
+        let mut whole = QuantizedAccumulator::new(16, 3, QuantizationMode::OneBit, seed);
+        whole.update(&op, &pts, 0);
+        assert_eq!(ab_c, SketchArtifact::from_quantized(spec, &whole));
+    }
+
+    #[test]
+    fn quantization_mismatch_is_rejected() {
+        let dense = toy_artifact(21, 10);
+        let onebit = toy_quantized(21, 10, QuantizationMode::OneBit);
+        let fourbit = toy_quantized(21, 10, QuantizationMode::Bits(4));
+        for (l, r) in [(&dense, &onebit), (&onebit, &dense), (&onebit, &fourbit)] {
+            match l.merge(r) {
+                Err(ApiError::QuantizationMismatch { .. }) => {}
+                other => panic!("expected QuantizationMismatch, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn v1_dense_files_still_load() {
+        // A v1 file is exactly a current dense file with "version": 1.
+        let art = toy_artifact(8, 12);
+        let mut j = art.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".to_string(), Json::Num(1.0));
+        }
+        let back = SketchArtifact::from_json(&j).unwrap();
+        assert_eq!(back, art);
+        // ... but v1 cannot carry a quant payload.
+        let mut qj = toy_quantized(8, 12, QuantizationMode::OneBit).to_json();
+        if let Json::Obj(o) = &mut qj {
+            o.insert("version".to_string(), Json::Num(1.0));
+        }
+        assert!(matches!(SketchArtifact::from_json(&qj), Err(ApiError::Format(_))));
+    }
+
+    #[test]
+    fn quantized_payload_validation_catches_corruption() {
+        let art = toy_quantized(5, 20, QuantizationMode::OneBit);
+        let good = art.to_json();
+        // wrong width
+        let mut j = good.clone();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(q)) = o.get_mut("quant") {
+                q.insert("width".to_string(), Json::Num(63.0));
+            }
+        }
+        assert!(SketchArtifact::from_json(&j).is_err());
+        // truncated payload
+        let mut j = good.clone();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(q)) = o.get_mut("quant") {
+                q.insert("payload".to_string(), Json::Str("0d00000000000000".into()));
+            }
+        }
+        assert!(SketchArtifact::from_json(&j).is_err());
+        // out-of-range bits
+        let mut j = good;
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(q)) = o.get_mut("quant") {
+                q.insert("bits".to_string(), Json::Num(40.0));
+            }
+        }
+        assert!(SketchArtifact::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn quantized_compression_ratio_uses_packed_width() {
+        let art = toy_quantized(6, 1000, QuantizationMode::OneBit);
+        // width for 1000 one-bit points is 10 bits per component
+        assert_eq!(art.payload_bits(), 32 * 10);
+        let expect = (1000.0 * 3.0 * 64.0) / (32.0 * 10.0);
+        assert!((art.compression_ratio() - expect).abs() < 1e-12);
+        // a single-point 1-bit partial is the full 64x below dense
+        let one = toy_quantized(6, 1, QuantizationMode::OneBit);
+        assert_eq!(one.payload_bits(), 32);
+        assert_eq!(toy_artifact(6, 1).payload_bits(), 32 * 64);
     }
 }

@@ -16,13 +16,16 @@ use super::artifact::{OpSpec, SketchArtifact};
 use super::ApiError;
 use crate::ckm::optim::OptimOptions;
 use crate::ckm::{solve_with_engine, CkmOptions, InitStrategy, Solution};
-use crate::coordinator::sketcher::{distributed_sketch, SketchStats, SketcherConfig};
+use crate::coordinator::sketcher::{
+    distributed_sketch, distributed_sketch_quantized, SketchStats, SketcherConfig,
+};
 use crate::coordinator::state::ReplicateManager;
 use crate::coordinator::Backend;
 use crate::data::dataset::{PointSource, SliceSource};
 use crate::engine::{
     CkmEngine, EngineFactory, NativeEngine, NativeFactory, PjrtEngine, PjrtFactory,
 };
+use crate::sketch::quantize::{self, QuantizationMode};
 use crate::sketch::scale::ScaleEstimator;
 use crate::sketch::RadiusKind;
 use crate::util::rng::Rng;
@@ -45,6 +48,16 @@ pub struct CkmConfig {
     pub artifacts_dir: Option<PathBuf>,
     /// Leader/worker streaming-sketch knobs.
     pub sketcher: SketcherConfig,
+    /// Sketch quantization (QCKM): `None` = dense f64 moments; `Some` =
+    /// dithered per-point quantization at the given bit depth, bit-packed
+    /// partials and a format-v2 artifact. Native backend only.
+    pub quantization: Option<QuantizationMode>,
+    /// Shard id salting the quantization dither stream. Sites sketching
+    /// *different* shards of one dataset should use distinct ids so their
+    /// dither errors stay independent and average away across a merge
+    /// (every site numbers its rows from 0). Irrelevant for dense
+    /// sketching. Default 0.
+    pub shard: u64,
     /// Independent solver replicates; best sketch cost wins (paper §4.4).
     pub replicates: usize,
     /// Step-1 ascent initialization strategy.
@@ -70,6 +83,8 @@ impl Default for CkmConfig {
             backend: Backend::Native,
             artifacts_dir: None,
             sketcher: SketcherConfig::default(),
+            quantization: None,
+            shard: 0,
             replicates: 1,
             strategy: InitStrategy::Range,
             seed: 0,
@@ -154,6 +169,28 @@ impl CkmBuilder {
         self
     }
 
+    /// Quantize the sketch (QCKM): per-point dithered quantization at the
+    /// given bit depth. `QuantizationMode::OneBit` is the headline 1-bit
+    /// regime; `Bits(b)` trades payload size for decode noise.
+    pub fn quantization(mut self, mode: QuantizationMode) -> Self {
+        self.cfg.quantization = Some(mode.normalized());
+        self
+    }
+
+    /// Set or clear quantization (convenience for config plumbing).
+    pub fn quantization_opt(mut self, mode: Option<QuantizationMode>) -> Self {
+        self.cfg.quantization = mode.map(QuantizationMode::normalized);
+        self
+    }
+
+    /// Shard id for multi-site quantized sketching: give each site a
+    /// distinct id so the per-row dither streams (which restart at row 0
+    /// on every site) stay independent across the merge. Default 0.
+    pub fn shard(mut self, shard: u64) -> Self {
+        self.cfg.shard = shard;
+        self
+    }
+
     /// Independent solver replicates (best sketch cost kept). Default 1.
     pub fn replicates(mut self, replicates: usize) -> Self {
         self.cfg.replicates = replicates;
@@ -208,6 +245,15 @@ impl CkmBuilder {
         }
         if cfg.sketcher.queue_depth == 0 {
             return Err(invalid("queue_depth", "need queue depth >= 1".into()));
+        }
+        if let Some(mode) = cfg.quantization {
+            mode.validate().map_err(|reason| invalid("quantization", reason))?;
+            if matches!(cfg.backend, Backend::Pjrt) {
+                return Err(invalid(
+                    "quantization",
+                    "quantized sketching runs native math only; use Backend::Native".into(),
+                ));
+            }
         }
         for (name, opts) in [("step1", &cfg.step1), ("step5", &cfg.step5)] {
             if opts.max_iters == 0 {
@@ -310,15 +356,46 @@ impl Ckm {
                 ScaleEstimator::default().estimate(sample, n_dims, &mut rng)
             }
         };
-        let (factory, spec) = self.factory(sigma2, n_dims)?;
-        let (acc, stats) = distributed_sketch(factory.as_ref(), source, &self.cfg.sketcher)
-            .map_err(ApiError::backend)?;
-        if acc.count == 0 {
-            return Err(ApiError::EmptySource);
+        match self.cfg.quantization {
+            None => {
+                let (factory, spec) = self.factory(sigma2, n_dims)?;
+                let (acc, stats) =
+                    distributed_sketch(factory.as_ref(), source, &self.cfg.sketcher)
+                        .map_err(ApiError::backend)?;
+                if acc.count == 0 {
+                    return Err(ApiError::EmptySource);
+                }
+                let artifact = SketchArtifact {
+                    op: spec,
+                    sum: acc.sum,
+                    count: acc.count,
+                    bounds: acc.bounds,
+                    quant: None,
+                };
+                Ok((artifact, stats))
+            }
+            Some(mode) => {
+                // Native-only (enforced at build): derive the operator
+                // directly — quantization consumes W, not an engine. The
+                // dither stream derives from the provenance seed and the
+                // shard id, so the artifact is re-derivable from
+                // (data, provenance, shard) alone.
+                let (spec, op) =
+                    OpSpec::derive(self.cfg.seed, self.cfg.radius, sigma2, self.cfg.m, n_dims);
+                let (acc, stats) = distributed_sketch_quantized(
+                    &op,
+                    source,
+                    &self.cfg.sketcher,
+                    mode,
+                    quantize::dither_seed_for_shard(spec.seed, self.cfg.shard),
+                )
+                .map_err(ApiError::backend)?;
+                if acc.count == 0 {
+                    return Err(ApiError::EmptySource);
+                }
+                Ok((SketchArtifact::from_quantized(spec, &acc), stats))
+            }
         }
-        let artifact =
-            SketchArtifact { op: spec, sum: acc.sum, count: acc.count, bounds: acc.bounds };
-        Ok((artifact, stats))
     }
 
     // -- solve stage ------------------------------------------------------
@@ -544,6 +621,74 @@ mod tests {
         ));
         let sol = sampling.solve_with_data(&art, 2, (&g.dataset.points, 3)).unwrap();
         assert_eq!(sol.centroids.rows, 2);
+    }
+
+    #[test]
+    fn quantization_knob_validated_and_normalized() {
+        match Ckm::builder().quantization(QuantizationMode::Bits(40)).build() {
+            Err(ApiError::InvalidConfig { field: "quantization", .. }) => {}
+            other => panic!("expected InvalidConfig(quantization), got {other:?}"),
+        }
+        let ckm = Ckm::builder().quantization(QuantizationMode::Bits(1)).build().unwrap();
+        assert_eq!(ckm.config().quantization, Some(QuantizationMode::OneBit));
+        assert_eq!(Ckm::builder().build().unwrap().config().quantization, None);
+        // quantization runs native math only — PJRT is a typed rejection
+        match Ckm::builder()
+            .quantization(QuantizationMode::OneBit)
+            .backend(Backend::Pjrt)
+            .build()
+        {
+            Err(ApiError::InvalidConfig { field: "quantization", .. }) => {}
+            other => panic!("expected InvalidConfig(quantization), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shard_ids_decorrelate_dithers_but_artifacts_still_merge() {
+        let mut rng = Rng::new(40);
+        let g = GmmConfig::paper_default(2, 3, 2000).generate(&mut rng);
+        let base = Ckm::builder().frequencies(64).sigma2(1.0).seed(6).quantization(
+            QuantizationMode::OneBit,
+        );
+        let site_a = base.clone().shard(1).build().unwrap();
+        let site_b = base.clone().shard(2).build().unwrap();
+        let art_a1 = site_a.sketch_slice(&g.dataset.points, 3).unwrap();
+        let art_a2 = site_a.sketch_slice(&g.dataset.points, 3).unwrap();
+        let art_b = site_b.sketch_slice(&g.dataset.points, 3).unwrap();
+        // same shard → re-derivable bit-for-bit; different shard →
+        // different dither stream (same data, same operator)
+        assert_eq!(art_a1, art_a2);
+        assert_eq!(art_a1.op, art_b.op);
+        assert_ne!(art_a1.quant, art_b.quant);
+        // and shard provenance does not block the (integer-exact) merge
+        let merged = art_a1.merge(&art_b).unwrap();
+        assert_eq!(merged.count, 4000);
+    }
+
+    #[test]
+    fn quantized_sketch_solves_through_unchanged_decoder() {
+        let mut rng = Rng::new(31);
+        let mut cfg = GmmConfig::paper_default(3, 4, 6000);
+        cfg.separation = 3.0;
+        let g = cfg.generate(&mut rng);
+        let ckm = Ckm::builder()
+            .frequencies(200)
+            .seed(5)
+            .workers(2)
+            .quantization(QuantizationMode::OneBit)
+            .build()
+            .unwrap();
+        let art = ckm.sketch_slice(&g.dataset.points, 4).unwrap();
+        assert_eq!(art.count, 6000);
+        assert!(matches!(&art.quant, Some(q) if q.mode == QuantizationMode::OneBit));
+        // |z_j| ≤ 1 still holds for the debiased sketch up to dither noise
+        assert!(art.z().modulus().iter().all(|&v| v <= 1.1));
+        let sol = ckm.solve(&art, 3).unwrap();
+        assert_eq!(sol.centroids.rows, 3);
+        assert!(sol.cost.is_finite());
+        // deterministic: re-sketching yields the identical artifact
+        let art2 = ckm.sketch_slice(&g.dataset.points, 4).unwrap();
+        assert_eq!(art2, art);
     }
 
     #[test]

@@ -47,12 +47,22 @@
 //!   exactly-mergeable sketches.
 //! - [`solution`] — versioned (de)serialization for [`crate::ckm::Solution`].
 
+//! ## Quantized artifacts (QCKM)
+//!
+//! `Ckm::builder().quantization(QuantizationMode::OneBit)` switches the
+//! sketch stage to dithered per-point quantization (see
+//! [`crate::sketch::quantize`]): workers ship bit-packed integer partials,
+//! merging stays *exact* (integer arithmetic), artifacts serialize as
+//! format v2 with a packed payload, and `solve` consumes the debiased
+//! sketch through the unchanged decoder.
+
 pub mod artifact;
 pub mod builder;
 pub mod solution;
 
-pub use artifact::{OpSpec, SketchArtifact, SKETCH_FORMAT_VERSION};
+pub use artifact::{OpSpec, QuantSpec, SketchArtifact, SKETCH_FORMAT_VERSION};
 pub use builder::{Ckm, CkmBuilder, CkmConfig, SolveReport};
+pub use crate::sketch::QuantizationMode;
 pub use solution::SOLUTION_FORMAT_VERSION;
 
 /// Typed errors for the facade: configuration problems are reported at
@@ -83,8 +93,13 @@ pub enum ApiError {
     #[error("operator mismatch: {left} vs {right}")]
     OperatorMismatch { left: String, right: String },
 
-    /// The file was written by an unsupported (newer or older) format.
-    #[error("unsupported artifact format version {found} (this build reads version {supported})")]
+    /// Two artifacts carry incompatible payloads (dense vs quantized, or
+    /// different bit depths) and cannot be merged.
+    #[error("quantization mismatch: {left} vs {right}")]
+    QuantizationMismatch { left: String, right: String },
+
+    /// The file was written by an unsupported (newer) format.
+    #[error("unsupported artifact format version {found} (this build reads versions 1 through {supported})")]
     UnsupportedVersion { found: usize, supported: u32 },
 
     /// Re-deriving the frequency matrix from the stored provenance did not

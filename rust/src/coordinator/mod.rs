@@ -13,7 +13,9 @@ pub mod sketcher;
 pub mod state;
 
 pub use pipeline::{Backend, PipelineConfig, PipelineResult};
-pub use sketcher::{distributed_sketch, SketchStats, SketcherConfig};
+pub use sketcher::{
+    distributed_sketch, distributed_sketch_quantized, SketchStats, SketcherConfig,
+};
 
 #[deprecated(
     since = "0.2.0",

@@ -10,6 +10,7 @@
 use super::batcher::Batcher;
 use crate::data::dataset::PointSource;
 use crate::engine::EngineFactory;
+use crate::sketch::quantize::{PackedPartial, QuantizationMode, QuantizedAccumulator};
 use crate::sketch::SketchAccumulator;
 use crate::util::logging::Stopwatch;
 use std::sync::mpsc;
@@ -39,6 +40,10 @@ pub struct SketchStats {
     /// Rows processed per worker (routing coverage diagnostics).
     pub rows_per_worker: Vec<usize>,
     pub backend: &'static str,
+    /// Bytes of partial-sketch payload the workers shipped to the leader
+    /// (2m doubles per worker on the dense path; bit-packed integer sums
+    /// on the quantized path — the QCKM bandwidth story).
+    pub shipped_bytes: usize,
 }
 
 impl SketchStats {
@@ -60,8 +65,8 @@ pub fn distributed_sketch(
     let workers = cfg.n_workers.max(1);
     let sw = Stopwatch::start();
 
-    let (merged, rows_per_worker, chunks) = std::thread::scope(
-        |s| -> anyhow::Result<(SketchAccumulator, Vec<usize>, usize)> {
+    let (merged, rows_per_worker, chunks, shipped_bytes) = std::thread::scope(
+        |s| -> anyhow::Result<(SketchAccumulator, Vec<usize>, usize, usize)> {
             let (tx, rx) = mpsc::sync_channel::<Vec<f64>>(cfg.queue_depth.max(1));
             let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
 
@@ -113,15 +118,17 @@ pub fn distributed_sketch(
 
             let mut merged: Option<SketchAccumulator> = None;
             let mut rows_per_worker = Vec::with_capacity(workers);
+            let mut shipped = 0usize;
             for h in handles {
                 let (acc, rows) = h.join().expect("worker panicked")?;
+                shipped += acc.sum.len() * 16; // 2m f64 components per partial
                 rows_per_worker.push(rows);
                 match merged.as_mut() {
                     None => merged = Some(acc),
                     Some(mr) => mr.merge(&acc),
                 }
             }
-            Ok((merged.expect("at least one worker"), rows_per_worker, chunks))
+            Ok((merged.expect("at least one worker"), rows_per_worker, chunks, shipped))
         },
     )?;
 
@@ -131,6 +138,111 @@ pub fn distributed_sketch(
         wall_seconds: sw.seconds(),
         rows_per_worker,
         backend: factory.backend_name(),
+        shipped_bytes,
+    };
+    Ok((merged, stats))
+}
+
+/// Quantized variant of [`distributed_sketch`]: each worker quantizes its
+/// chunks into an integer [`QuantizedAccumulator`] and ships the leader a
+/// *bit-packed* [`PackedPartial`]; the leader unpacks and merges with
+/// integer arithmetic, so the result is exact for any scheduling.
+///
+/// Takes the operator directly (not an [`EngineFactory`]): per-point
+/// quantization always runs the native blocked `X·Wᵀ` math, so there is no
+/// backend to choose and [`SketchStats::backend`] reports `"native"`
+/// truthfully. Chunks are tagged with their global starting row so the
+/// dither stream (keyed by row index) is independent of worker assignment:
+/// the same `(data, provenance, shard)` always yields the same quantized
+/// sketch.
+pub fn distributed_sketch_quantized(
+    op: &crate::sketch::SketchOp,
+    source: &mut dyn PointSource,
+    cfg: &SketcherConfig,
+    mode: QuantizationMode,
+    dither_seed: u64,
+) -> anyhow::Result<(QuantizedAccumulator, SketchStats)> {
+    let n_dims = source.n_dims();
+    anyhow::ensure!(
+        op.n_dims() == n_dims,
+        "source dims {n_dims} != operator dims {}",
+        op.n_dims()
+    );
+    let workers = cfg.n_workers.max(1);
+    let sw = Stopwatch::start();
+
+    let (merged, rows_per_worker, chunks, shipped_bytes) = std::thread::scope(
+        |s| -> anyhow::Result<(QuantizedAccumulator, Vec<usize>, usize, usize)> {
+            let (tx, rx) = mpsc::sync_channel::<(usize, Vec<f64>)>(cfg.queue_depth.max(1));
+            let rx = std::sync::Arc::new(std::sync::Mutex::new(rx));
+
+            let mut handles = Vec::new();
+            for wid in 0..workers {
+                let rx = rx.clone();
+                handles.push(s.spawn(move || -> anyhow::Result<(PackedPartial, usize)> {
+                    let mut acc = QuantizedAccumulator::new(op.m(), n_dims, mode, dither_seed);
+                    let mut rows = 0usize;
+                    loop {
+                        // Hold the lock only to receive, not to compute.
+                        let msg = { rx.lock().unwrap().recv() };
+                        let Ok((start_row, chunk)) = msg else { break };
+                        acc.update(op, &chunk, start_row);
+                        rows += chunk.len() / n_dims;
+                    }
+                    log::debug!("worker {wid}: {rows} rows quantize-sketched");
+                    Ok((acc.pack(), rows))
+                }));
+            }
+
+            // Leader: read, batch, enqueue with global row offsets.
+            let mut batcher = Batcher::new(n_dims, cfg.chunk_rows);
+            let mut buf = vec![0.0; cfg.chunk_rows.max(1) * n_dims];
+            let mut chunks = 0usize;
+            let mut next_row = 0usize;
+            loop {
+                let rows = source.next_chunk(&mut buf);
+                if rows == 0 {
+                    break;
+                }
+                for chunk in batcher.push(&buf[..rows * n_dims]) {
+                    chunks += 1;
+                    let chunk_rows = chunk.len() / n_dims;
+                    tx.send((next_row, chunk)).expect("workers died before end of stream");
+                    next_row += chunk_rows;
+                }
+            }
+            if let Some(tail) = batcher.flush() {
+                chunks += 1;
+                tx.send((next_row, tail)).expect("workers died before end of stream");
+            }
+            drop(tx); // close the queue; workers drain and exit
+
+            let mut merged: Option<QuantizedAccumulator> = None;
+            let mut rows_per_worker = Vec::with_capacity(workers);
+            let mut shipped = 0usize;
+            for h in handles {
+                let (packed, rows) = h.join().expect("worker panicked")?;
+                shipped += packed.payload_bytes();
+                let acc = packed
+                    .unpack()
+                    .map_err(|e| anyhow::anyhow!("corrupt packed partial: {e}"))?;
+                rows_per_worker.push(rows);
+                match merged.as_mut() {
+                    None => merged = Some(acc),
+                    Some(mr) => mr.merge(&acc),
+                }
+            }
+            Ok((merged.expect("at least one worker"), rows_per_worker, chunks, shipped))
+        },
+    )?;
+
+    let stats = SketchStats {
+        total_rows: merged.count,
+        chunks,
+        wall_seconds: sw.seconds(),
+        rows_per_worker,
+        backend: "native",
+        shipped_bytes,
     };
     Ok((merged, stats))
 }
@@ -214,5 +326,67 @@ mod tests {
         assert_eq!(acc.count, 0);
         assert_eq!(stats.chunks, 0);
         assert!(!acc.bounds.is_valid());
+        assert!(stats.shipped_bytes > 0); // workers still ship (zero) partials
+    }
+
+    #[test]
+    fn quantized_sketch_is_scheduling_independent_and_matches_sequential() {
+        // Integer state + row-keyed dithers: any worker count / queue depth
+        // must produce the *identical* accumulator, equal to the
+        // sequential quantized pass.
+        let f = factory(32, 3, 9);
+        let mut rng = Rng::new(10);
+        let g = GmmConfig::paper_default(2, 3, 1033).generate(&mut rng);
+        let mut seq_src = SliceSource::new(&g.dataset.points, 3);
+        let reference = crate::sketch::quantize::quantized_sketch_source(
+            &f.op,
+            &mut seq_src,
+            100,
+            QuantizationMode::OneBit,
+            55,
+        );
+        assert_eq!(reference.count, 1033);
+        for workers in [1usize, 3, 5] {
+            let mut src = SliceSource::new(&g.dataset.points, 3);
+            let cfg = SketcherConfig { n_workers: workers, chunk_rows: 100, queue_depth: 2 };
+            let (acc, stats) = distributed_sketch_quantized(
+                &f.op,
+                &mut src,
+                &cfg,
+                QuantizationMode::OneBit,
+                55,
+            )
+            .unwrap();
+            assert_eq!(acc, reference, "workers={workers}");
+            assert_eq!(stats.total_rows, 1033);
+            assert_eq!(stats.backend, "native");
+            // packed partials are far below the dense 2m*16-byte payload
+            assert!(stats.shipped_bytes < workers * 32 * 16, "{}", stats.shipped_bytes);
+        }
+    }
+
+    #[test]
+    fn quantized_sketch_tracks_dense_sketch() {
+        let f = factory(24, 4, 11);
+        let mut rng = Rng::new(12);
+        let g = GmmConfig::paper_default(3, 4, 8000).generate(&mut rng);
+        let cfg = SketcherConfig { n_workers: 2, chunk_rows: 512, queue_depth: 4 };
+        let mut src = SliceSource::new(&g.dataset.points, 4);
+        let (dense, _) = distributed_sketch(&f, &mut src, &cfg).unwrap();
+        let mut src = SliceSource::new(&g.dataset.points, 4);
+        let (quant, _) = distributed_sketch_quantized(
+            &f.op,
+            &mut src,
+            &cfg,
+            QuantizationMode::Bits(4),
+            7,
+        )
+        .unwrap();
+        assert_eq!(quant.count, dense.count);
+        assert_eq!(quant.bounds, dense.bounds);
+        let (zd, zq) = (dense.finalize(), quant.finalize());
+        // noise floor Δ/(2√N) ≈ 0.00075 for 4-bit, N=8000; allow 5σ-ish
+        testing::all_close(&zq.re, &zd.re, 0.006).unwrap();
+        testing::all_close(&zq.im, &zd.im, 0.006).unwrap();
     }
 }

@@ -120,12 +120,32 @@ mod tests {
         Solution { centroids: Mat::zeros(1, 1), alpha: vec![1.0], cost }
     }
 
+    /// Block until at least `d` of *monotonic* time has provably passed.
+    /// `thread::sleep` only promises the thread is parked for the duration,
+    /// not that the clock the Stopwatch reads has advanced when the OS is
+    /// overloaded (CI); a condvar `wait_timeout` re-checked against an
+    /// `Instant` deadline makes the elapsed-time assertion deterministic.
+    fn wait_monotonic(d: std::time::Duration) {
+        let deadline = std::time::Instant::now() + d;
+        let lock = std::sync::Mutex::new(());
+        let cv = std::sync::Condvar::new();
+        let mut guard = lock.lock().unwrap();
+        loop {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, _) = cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+        }
+    }
+
     #[test]
     fn phases_advance_and_account() {
         let mut j = JobState::new();
         assert_eq!(j.phase(), Phase::Created);
         j.advance(Phase::Sketching);
-        std::thread::sleep(std::time::Duration::from_millis(2));
+        wait_monotonic(std::time::Duration::from_millis(2));
         j.advance(Phase::Solving);
         j.advance(Phase::Done);
         assert_eq!(j.phase(), Phase::Done);

@@ -9,6 +9,7 @@ pub mod fig1;
 pub mod fig2;
 pub mod fig3;
 pub mod fig4;
+pub mod quantize;
 pub mod workloads;
 
 pub use common::{Row, Stats, Table};

@@ -1,0 +1,110 @@
+//! QCKM ablation: bits-per-measurement vs recovery quality.
+//!
+//! Sweeps the sketch bit depth (dense f64, then 1/2/4/8-bit dithered
+//! quantization) on the paper's §4.1 Gaussian workload and reports per-run
+//! SSE/N, the sketch-domain cost, and the payload size — the
+//! quality-vs-bandwidth frontier of *Quantized Compressive K-Means*
+//! (Schellekens & Jacques). `ckm exp quantize` and the bench driver both
+//! render this table.
+
+use super::common::{Row, Stats, Table};
+use super::workloads::gaussian_workload;
+use crate::api::Ckm;
+use crate::metrics::sse;
+use crate::sketch::quantize::QuantizationMode;
+
+#[derive(Clone, Debug)]
+pub struct QuantizeConfig {
+    pub k: usize,
+    pub n_dims: usize,
+    pub n_points: usize,
+    pub m: usize,
+    pub runs: usize,
+    pub seed: u64,
+    /// Bit depths to sweep; `None` = the dense baseline.
+    pub modes: Vec<Option<QuantizationMode>>,
+}
+
+impl Default for QuantizeConfig {
+    fn default() -> Self {
+        QuantizeConfig {
+            k: 10,
+            n_dims: 10,
+            n_points: 20_000,
+            m: 1000,
+            runs: 3,
+            seed: 77,
+            modes: vec![
+                None,
+                Some(QuantizationMode::OneBit),
+                Some(QuantizationMode::Bits(2)),
+                Some(QuantizationMode::Bits(4)),
+                Some(QuantizationMode::Bits(8)),
+            ],
+        }
+    }
+}
+
+/// One row per bit depth: SSE/N, sketch cost and payload bits/component.
+pub fn run(cfg: &QuantizeConfig) -> Table {
+    let mut table = Table::new("Ablation: sketch bits-per-measurement vs SSE (QCKM)");
+    for &mode in &cfg.modes {
+        let mut sses = Vec::new();
+        let mut costs = Vec::new();
+        let mut payload_bits = 0usize;
+        for run in 0..cfg.runs {
+            let g = gaussian_workload(cfg.k, cfg.n_dims, cfg.n_points, cfg.seed + run as u64);
+            let pts = &g.dataset.points;
+            let ckm = Ckm::builder()
+                .frequencies(cfg.m)
+                .seed(cfg.seed + run as u64)
+                .quantization_opt(mode)
+                .build()
+                .expect("valid config");
+            let art = ckm.sketch_slice(pts, cfg.n_dims).expect("sketch");
+            payload_bits = art.payload_bits();
+            let sol = ckm.solve(&art, cfg.k).expect("solve");
+            sses.push(sse(pts, cfg.n_dims, &sol.centroids) / cfg.n_points as f64);
+            costs.push(sol.cost);
+        }
+        let name = mode.map(|m| m.name()).unwrap_or_else(|| "dense".to_string());
+        table.push(
+            Row::new()
+                .cell("sketch", name)
+                .num("bits/component", payload_bits as f64 / (2 * cfg.m) as f64)
+                .stat("SSE/N", &Stats::from(&sses))
+                .stat("sketch cost", &Stats::from(&costs)),
+        );
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> QuantizeConfig {
+        QuantizeConfig {
+            k: 2,
+            n_dims: 3,
+            n_points: 2000,
+            m: 64,
+            runs: 1,
+            seed: 5,
+            modes: vec![None, Some(QuantizationMode::OneBit), Some(QuantizationMode::Bits(4))],
+        }
+    }
+
+    #[test]
+    fn table_covers_every_mode_with_finite_sse() {
+        let t = run(&tiny());
+        assert_eq!(t.rows.len(), 3);
+        for r in &t.rows {
+            assert!(r.raw["SSE/N.mean"].is_finite());
+            assert!(r.raw["bits/component"] > 0.0);
+        }
+        // dense row carries 64 bits/component; quantized rows far fewer
+        assert_eq!(t.rows[0].raw["bits/component"], 64.0);
+        assert!(t.rows[1].raw["bits/component"] < 16.0);
+    }
+}

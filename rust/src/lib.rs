@@ -36,6 +36,16 @@
 //! frequency matrix: a sketch can never be silently solved or merged with
 //! a mismatched operator.
 //!
+//! ## Quantized sketches (QCKM)
+//!
+//! `Ckm::builder().quantization(QuantizationMode::OneBit)` switches the
+//! sketch to dithered per-point quantization (*Quantized Compressive
+//! K-Means*, Schellekens & Jacques): 1–16 bits per sketch component,
+//! bit-packed worker partials (~64× less shard bandwidth at 1 bit),
+//! *integer-exact* merges in any order, format-v2 artifacts, and a
+//! debiased sketch through the unchanged decoder — see
+//! [`sketch::quantize`] and `rust/README.md` for the bandwidth math.
+//!
 //! ## Layers
 //!
 //! - **L3 (this crate)** — the coordinator: streaming sharded sketching of
@@ -108,7 +118,7 @@ pub mod prelude {
     pub use crate::api::{ApiError, Ckm, CkmBuilder, SketchArtifact, SolveReport};
     pub use crate::ckm::{solve, CkmOptions, InitStrategy, Solution};
     pub use crate::coordinator::Backend;
-    pub use crate::sketch::RadiusKind;
+    pub use crate::sketch::{QuantizationMode, RadiusKind};
     pub use crate::util::rng::Rng;
 }
 

@@ -9,7 +9,7 @@
 //!   gen     generate a synthetic dataset file
 //!   info    show version, artifact manifest and backends
 
-use ckm::api::{Ckm, CkmBuilder, SketchArtifact};
+use ckm::api::{Ckm, CkmBuilder, QuantizationMode, SketchArtifact};
 use ckm::baselines::{kmeans, KmInit, KmOptions};
 use ckm::ckm::{InitStrategy, Solution};
 use ckm::coordinator::Backend;
@@ -59,12 +59,14 @@ fn usage() {
            run     --k 10 --m 1000 --n 10 --npoints 300000 [--file data.bin]\n\
                    [--backend native|pjrt] [--workers 4] [--replicates 1]\n\
                    [--strategy range|sample|k++] [--sigma2 X] [--seed S]\n\
-                   [--save-sketch sketch.json] [--compare-kmeans]\n\
+                   [--quantize 1bit|..|16bit] [--save-sketch sketch.json]\n\
+                   [--compare-kmeans]\n\
            sketch  --file data.bin --m 1000 --out sketch.json [--sigma2 X] [--seed S]\n\
+                   [--quantize 1bit|..|16bit] [--shard I  (one id per site)]\n\
            merge   --out merged.json shard1.json shard2.json ...\n\
            solve   --sketch sketch.json --k 10 [--replicates R] [--seed S]\n\
                    [--out solution.json]\n\
-           exp     fig1|fig2|fig3|fig4|ablate [--runs R] [--full] [--persist]\n\
+           exp     fig1|fig2|fig3|fig4|ablate|quantize [--runs R] [--full] [--persist]\n\
            gen     --out data.bin --k 10 --n 10 --npoints 100000 [--seed S]\n\
            info",
         ckm::version()
@@ -82,9 +84,15 @@ fn builder_from_args(args: &Args) -> anyhow::Result<CkmBuilder> {
         .seed(args.u64_or("seed", 0))
         .workers(args.usize_or("workers", 4))
         .chunk_rows(args.usize_or("chunk-rows", 4096))
-        .queue_depth(args.usize_or("queue-depth", 8));
+        .queue_depth(args.usize_or("queue-depth", 8))
+        .shard(args.u64_or("shard", 0));
     if let Some(s2) = args.opt("sigma2") {
         b = b.sigma2(s2.parse()?);
+    }
+    if let Some(q) = args.opt("quantize") {
+        if !matches!(q, "none" | "dense") {
+            b = b.quantization(QuantizationMode::parse(q)?);
+        }
     }
     Ok(b)
 }
@@ -125,13 +133,19 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     };
 
     println!(
-        "sketched N={} in {:.2}s ({:.2} Mpts/s, backend={}, {} workers, {:.0}x compression)",
+        "sketched N={} in {:.2}s ({:.2} Mpts/s, backend={}, {} workers, {:.0}x compression, \
+         {} B of partials shipped{})",
         artifact.count,
         stats.wall_seconds,
         stats.throughput() / 1e6,
         stats.backend,
         stats.rows_per_worker.len(),
         artifact.compression_ratio(),
+        stats.shipped_bytes,
+        match &artifact.quant {
+            Some(q) => format!(", {} quantized", q.mode.name()),
+            None => String::new(),
+        },
     );
     if let Some(path) = save_sketch {
         artifact.to_file(&path)?;
@@ -191,7 +205,7 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         .positionals()
         .first()
         .cloned()
-        .ok_or_else(|| anyhow::anyhow!("exp needs a figure: fig1|fig2|fig3|fig4|ablate"))?;
+        .ok_or_else(|| anyhow::anyhow!("exp needs a figure: fig1|fig2|fig3|fig4|ablate|quantize"))?;
     let persist = args.flag("persist");
     let full = args.flag("full");
     let runs = args.opt("runs").map(|r| r.parse::<usize>()).transpose()?;
@@ -260,6 +274,18 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             for t in exp::ablate::run(&cfg) {
                 t.emit("ablate", persist);
             }
+        }
+        "quantize" => {
+            let mut cfg = exp::quantize::QuantizeConfig { seed, ..Default::default() };
+            if let Some(r) = runs {
+                cfg.runs = r;
+            }
+            if full {
+                cfg.n_points = 100_000;
+                cfg.runs = 10;
+            }
+            args.finish()?;
+            exp::quantize::run(&cfg).emit("quantize", persist);
         }
         other => anyhow::bail!("unknown experiment '{other}'"),
     }

@@ -1,15 +1,17 @@
 //! Sketching layer: frequency sampling, the operator `A`, batched atom
-//! kernels, σ² estimation and the mergeable streaming accumulator (paper
-//! §3.1 and §3.3 steps 1–3).
+//! kernels, σ² estimation, the mergeable streaming accumulator (paper
+//! §3.1 and §3.3 steps 1–3) and the dithered quantization layer (QCKM).
 
 pub mod frequencies;
 pub mod kernels;
 pub mod operator;
+pub mod quantize;
 pub mod scale;
 pub mod streaming;
 
 pub use frequencies::{FreqDist, RadiusKind};
 pub use operator::SketchOp;
+pub use quantize::{QuantizationMode, QuantizedAccumulator};
 pub use streaming::{sketch_source, SketchAccumulator};
 
 use crate::data::dataset::Bounds;

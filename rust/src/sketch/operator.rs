@@ -183,8 +183,9 @@ impl SketchOp {
 }
 
 /// θ block = X_blk · Wᵀ, flattened row-major (rows × m). Single-threaded:
-/// callers parallelize over row ranges.
-fn x_blk_theta(x_blk: &Mat, w: &Mat) -> Vec<f64> {
+/// callers parallelize over row ranges (also used by the quantized
+/// accumulator in [`super::quantize`]).
+pub(crate) fn x_blk_theta(x_blk: &Mat, w: &Mat) -> Vec<f64> {
     let m = w.rows;
     let n = w.cols;
     let rows = x_blk.rows;

@@ -1,0 +1,648 @@
+//! Dithered quantization of the Fourier sketch (QCKM).
+//!
+//! Following *Quantized Compressive K-Means* (Schellekens & Jacques), the
+//! sketch stays useful when each per-point moment contribution is crushed
+//! to a handful of bits. Every contribution `e^{-i ω_j^T x}` has real and
+//! imaginary parts in `[-1, 1]`; each part is mapped onto a uniform grid of
+//! `L = 2^b` levels by *stochastically rounding* between the two
+//! neighbouring levels, using a dither `u ~ U[0, 1)` drawn from a
+//! provenance-derived RNG stream:
+//!
+//! ```text
+//! code = ⌊ (v + 1)/Δ + u ⌋,   Δ = 2/(L − 1),   level(code) = −1 + Δ·code
+//! ```
+//!
+//! Because `E_u[⌊t + u⌋] = t` exactly, `E[level(code)] = v`: dequantization
+//! is *unbiased* with no decoder-side knowledge of the dithers, and the
+//! per-point error has variance at most `Δ²/4`, which averages away at rate
+//! `1/N` across the dataset. The decoder therefore consumes a debiased
+//! [`CVec`] through the existing engine kernels unchanged.
+//!
+//! The accumulator sums the integer codes, so shard merging is *exact*
+//! (associative and commutative in `u64` arithmetic — no floating-point
+//! order effects at all, unlike the dense accumulator). Partials ship
+//! bit-packed: a single-point quantum packs to `2m·b` bits — 64× below the
+//! dense `2m`-double partial in 1-bit mode — and a `C`-point partial to
+//! `2m·⌈log₂(C·(L−1)+1)⌉` bits (~10× for 4096-row chunks).
+//!
+//! Dither streams are keyed by `(dither seed, global row index)`, where the
+//! dither seed derives from the operator provenance seed and a shard id
+//! ([`dither_seed_for_shard`]). A quantized artifact is therefore
+//! re-derivable from `(data, provenance, shard)` alone, regardless of
+//! worker scheduling — and sites sketching *different* shards should use
+//! distinct shard ids (`CkmBuilder::shard`) so their dither errors stay
+//! independent and keep averaging away across a merge.
+
+use crate::data::dataset::{Bounds, PointSource};
+use crate::linalg::{CVec, Mat};
+use crate::sketch::operator::{x_blk_theta, SketchOp};
+use crate::util::rng::Rng;
+
+/// Salt mixed into the builder/operator seed to derive the dither stream
+/// (kept distinct from the operator-draw salt so the two streams never
+/// overlap).
+const DITHER_SEED_SALT: u64 = 0xD117_4E5E_EDC0_DE26;
+
+/// Per-row stream decorrelation constant (odd ⇒ bijective over u64).
+const ROW_STREAM_MUL: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Per-shard stream decorrelation constant (odd ⇒ bijective over u64).
+const SHARD_STREAM_MUL: u64 = 0xBF58_476D_1CE4_E5B9;
+
+/// Derive the dither-stream seed from the operator provenance seed
+/// (shard 0 — single-site sketching).
+pub fn dither_seed_for(op_seed: u64) -> u64 {
+    dither_seed_for_shard(op_seed, 0)
+}
+
+/// Dither-stream seed for shard `shard` of a multi-site sketch. Each site
+/// numbers its rows from 0, so sites sharing a shard id would reuse the
+/// same per-row dithers and their quantization errors would correlate
+/// instead of averaging away in the merge; distinct shard ids give every
+/// site an independent stream while staying re-derivable from
+/// `(provenance, shard)`.
+pub fn dither_seed_for_shard(op_seed: u64, shard: u64) -> u64 {
+    (op_seed ^ DITHER_SEED_SALT).wrapping_add(shard.wrapping_mul(SHARD_STREAM_MUL))
+}
+
+/// The dither RNG for one global row of the dataset. Keying by row index
+/// (not by draw order) keeps the quantized sketch independent of chunking
+/// and worker scheduling.
+fn row_rng(dither_seed: u64, global_row: usize) -> Rng {
+    Rng::new(dither_seed ^ (global_row as u64).wrapping_mul(ROW_STREAM_MUL))
+}
+
+/// How many bits each sketch component's per-point contribution keeps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantizationMode {
+    /// One bit per component: `{−1, +1}` (the QCKM headline regime).
+    OneBit,
+    /// `b` bits per component: `2^b` uniform levels over `[−1, 1]`.
+    Bits(u8),
+}
+
+impl QuantizationMode {
+    /// Canonical form: `Bits(1)` is the same quantizer as `OneBit`.
+    pub fn normalized(self) -> QuantizationMode {
+        match self {
+            QuantizationMode::Bits(1) => QuantizationMode::OneBit,
+            other => other,
+        }
+    }
+
+    /// Bits per component.
+    pub fn bits(&self) -> u32 {
+        match self {
+            QuantizationMode::OneBit => 1,
+            QuantizationMode::Bits(b) => *b as u32,
+        }
+    }
+
+    /// Number of quantization levels `L = 2^bits`.
+    pub fn levels(&self) -> u64 {
+        1u64 << self.bits()
+    }
+
+    /// Grid pitch `Δ = 2/(L − 1)` over `[−1, 1]`.
+    pub fn delta(&self) -> f64 {
+        2.0 / (self.levels() - 1) as f64
+    }
+
+    /// Builder-time validation (typed errors live in the api layer).
+    pub fn validate(&self) -> Result<(), String> {
+        match self {
+            QuantizationMode::OneBit => Ok(()),
+            QuantizationMode::Bits(b) if (1..=16).contains(b) => Ok(()),
+            QuantizationMode::Bits(b) => {
+                Err(format!("quantization bits must be in 1..=16, got {b}"))
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        format!("{}-bit", self.bits())
+    }
+
+    /// Parse `1bit`/`1-bit`/`onebit` or `<b>bit`/`<b>-bit`.
+    pub fn parse(s: &str) -> anyhow::Result<QuantizationMode> {
+        let lower = s.to_ascii_lowercase();
+        if matches!(lower.as_str(), "1bit" | "1-bit" | "onebit" | "one-bit") {
+            return Ok(QuantizationMode::OneBit);
+        }
+        let digits = lower
+            .strip_suffix("-bit")
+            .or_else(|| lower.strip_suffix("bit"))
+            .unwrap_or(&lower);
+        let b: u8 = digits
+            .parse()
+            .map_err(|_| anyhow::anyhow!("unknown quantization mode '{s}' (try 1bit..16bit)"))?;
+        let mode = QuantizationMode::Bits(b).normalized();
+        mode.validate().map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(mode)
+    }
+}
+
+/// Stochastically round one component value `v ∈ [−1, 1]` to a level code
+/// in `0..levels`, using the dither `u ∈ [0, 1)`. Unbiased:
+/// `E_u[−1 + Δ·code] = v`.
+pub fn quantize_component(v: f64, u: f64, mode: QuantizationMode) -> u64 {
+    let t = (v + 1.0) / mode.delta() + u;
+    (t.floor() as i64).clamp(0, mode.levels() as i64 - 1) as u64
+}
+
+/// Dequantize summed level codes (re components then im, `2m` entries)
+/// into the *unnormalized* complex sums the dense accumulator would hold:
+/// `Σ_points (−1 + Δ·code) = Δ·Σcode − count`, per component.
+pub fn dequantize_level_sums(mode: QuantizationMode, level_sums: &[u64], count: usize) -> CVec {
+    assert_eq!(level_sums.len() % 2, 0);
+    let m = level_sums.len() / 2;
+    let delta = mode.delta();
+    let cnt = count as f64;
+    let mut z = CVec::zeros(m);
+    for j in 0..m {
+        z.re[j] = delta * level_sums[j] as f64 - cnt;
+        z.im[j] = delta * level_sums[m + j] as f64 - cnt;
+    }
+    z
+}
+
+/// Bits needed per packed component for a partial over `count` points:
+/// the summed code is at most `count·(L−1)`.
+pub fn width_for(count: usize, mode: QuantizationMode) -> u32 {
+    let max = (count as u128) * (mode.levels() as u128 - 1);
+    (128 - max.leading_zeros()).max(1)
+}
+
+/// Pack `vals` (each `< 2^width`) LSB-first into u64 words.
+pub fn pack_values(vals: &[u64], width: u32) -> Vec<u64> {
+    assert!((1..=64).contains(&width), "pack width {width} out of range");
+    let total_bits = vals.len() * width as usize;
+    let mut words = vec![0u64; total_bits.div_ceil(64)];
+    let mut bit = 0usize;
+    for &v in vals {
+        debug_assert!(width == 64 || v < (1u64 << width), "value {v} exceeds width {width}");
+        let w = bit / 64;
+        let off = bit % 64;
+        words[w] |= v << off;
+        let spill = 64 - off;
+        if (width as usize) > spill {
+            words[w + 1] |= v >> spill;
+        }
+        bit += width as usize;
+    }
+    words
+}
+
+/// Inverse of [`pack_values`]: unpack `n` values of `width` bits. Returns
+/// `None` when `words` is not exactly the packed length for `(n, width)`.
+pub fn unpack_values(words: &[u64], width: u32, n: usize) -> Option<Vec<u64>> {
+    if !(1..=64).contains(&width) || words.len() != (n * width as usize).div_ceil(64) {
+        return None;
+    }
+    let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+    let mut out = Vec::with_capacity(n);
+    let mut bit = 0usize;
+    for _ in 0..n {
+        let w = bit / 64;
+        let off = bit % 64;
+        let mut v = words[w] >> off;
+        let spill = 64 - off;
+        if (width as usize) > spill {
+            v |= words[w + 1] << spill;
+        }
+        out.push(v & mask);
+        bit += width as usize;
+    }
+    Some(out)
+}
+
+/// Hex encoding of packed words (little-endian bytes, lowercase) — the
+/// artifact payload and the coordinator wire format.
+pub fn words_to_hex(words: &[u64]) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut s = String::with_capacity(words.len() * 16);
+    for w in words {
+        for b in w.to_le_bytes() {
+            s.push(HEX[(b >> 4) as usize] as char);
+            s.push(HEX[(b & 0xf) as usize] as char);
+        }
+    }
+    s
+}
+
+/// Inverse of [`words_to_hex`].
+pub fn hex_to_words(s: &str) -> Result<Vec<u64>, String> {
+    if s.len() % 16 != 0 {
+        return Err(format!("packed payload length {} is not a multiple of 16", s.len()));
+    }
+    let nibble = |c: u8| -> Result<u64, String> {
+        (c as char)
+            .to_digit(16)
+            .map(|d| d as u64)
+            .ok_or_else(|| format!("bad hex digit '{}'", c as char))
+    };
+    let bytes = s.as_bytes();
+    let mut words = Vec::with_capacity(s.len() / 16);
+    for chunk in bytes.chunks_exact(16) {
+        let mut w = 0u64;
+        for (i, pair) in chunk.chunks_exact(2).enumerate() {
+            let byte = (nibble(pair[0])? << 4) | nibble(pair[1])?;
+            w |= byte << (8 * i);
+        }
+        words.push(w);
+    }
+    Ok(words)
+}
+
+/// The quantized counterpart of [`crate::sketch::SketchAccumulator`]:
+/// per-component summed level codes + count + bounds. Merging adds
+/// integers, so shard combination is bit-exact in any order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantizedAccumulator {
+    pub mode: QuantizationMode,
+    /// Summed level codes: `m` re components, then `m` im components.
+    pub level_sums: Vec<u64>,
+    pub count: usize,
+    pub bounds: Bounds,
+    /// Provenance-derived dither-stream seed (see [`dither_seed_for`]).
+    pub dither_seed: u64,
+}
+
+impl QuantizedAccumulator {
+    pub fn new(m: usize, n_dims: usize, mode: QuantizationMode, dither_seed: u64) -> Self {
+        QuantizedAccumulator {
+            mode: mode.normalized(),
+            level_sums: vec![0; 2 * m],
+            count: 0,
+            bounds: Bounds::empty(n_dims),
+            dither_seed,
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        self.level_sums.len() / 2
+    }
+
+    /// Absorb a row-major block of points whose first row is global row
+    /// `row_offset` of the stream (the dither stream is keyed by global
+    /// row, so chunked and whole-stream sketching agree exactly).
+    pub fn update(&mut self, op: &SketchOp, points: &[f64], row_offset: usize) {
+        let n = op.n_dims();
+        assert_eq!(points.len() % n, 0);
+        let m = op.m();
+        assert_eq!(self.level_sums.len(), 2 * m, "operator m != accumulator m");
+        let rows = points.len() / n;
+        const BLOCK: usize = 256;
+        let mut lo = 0usize;
+        while lo < rows {
+            let hi = (lo + BLOCK).min(rows);
+            let x_blk = Mat::from_vec(hi - lo, n, points[lo * n..hi * n].to_vec());
+            let theta = x_blk_theta(&x_blk, &op.w);
+            for (bi, trow) in theta.chunks_exact(m).enumerate() {
+                let mut dither = row_rng(self.dither_seed, row_offset + lo + bi);
+                for j in 0..m {
+                    let (s, co) = trow[j].sin_cos();
+                    self.level_sums[j] += quantize_component(co, dither.uniform(), self.mode);
+                    self.level_sums[m + j] +=
+                        quantize_component(-s, dither.uniform(), self.mode);
+                }
+            }
+            lo = hi;
+        }
+        for r in 0..rows {
+            self.bounds.update(&points[r * n..(r + 1) * n]);
+        }
+        self.count += rows;
+    }
+
+    /// Exact merge (associative, commutative — integer arithmetic).
+    pub fn merge(&mut self, other: &QuantizedAccumulator) {
+        assert_eq!(self.mode, other.mode, "quantization mode mismatch");
+        assert_eq!(self.level_sums.len(), other.level_sums.len());
+        assert_eq!(self.dither_seed, other.dither_seed, "dither stream mismatch");
+        for (a, b) in self.level_sums.iter_mut().zip(&other.level_sums) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.bounds.merge(&other.bounds);
+    }
+
+    /// Debiased *unnormalized* sums (the dense accumulator's `sum`
+    /// equivalent): `Δ·Σcode − count` per component.
+    pub fn dequantized_sum(&self) -> CVec {
+        dequantize_level_sums(self.mode, &self.level_sums, self.count)
+    }
+
+    /// Debiased normalized sketch `ẑ` — what CLOMPR decodes.
+    pub fn finalize(&self) -> CVec {
+        crate::sketch::streaming::normalize_sum(&self.dequantized_sum(), self.count)
+    }
+
+    /// Bit-pack for shipping (the coordinator's worker→leader payload).
+    pub fn pack(&self) -> PackedPartial {
+        let width = width_for(self.count, self.mode);
+        PackedPartial {
+            mode: self.mode,
+            dither_seed: self.dither_seed,
+            m: self.m(),
+            count: self.count,
+            bounds: self.bounds.clone(),
+            width,
+            words: pack_values(&self.level_sums, width),
+        }
+    }
+}
+
+/// A bit-packed quantized partial: what a sketching worker ships to the
+/// leader, and the payload layout of a v2 quantized artifact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PackedPartial {
+    pub mode: QuantizationMode,
+    pub dither_seed: u64,
+    pub m: usize,
+    pub count: usize,
+    pub bounds: Bounds,
+    /// Bits per packed component (`width_for(count, mode)`).
+    pub width: u32,
+    /// `2m` component sums packed LSB-first into u64 words.
+    pub words: Vec<u64>,
+}
+
+impl PackedPartial {
+    /// Payload size in bytes (the bandwidth number).
+    pub fn payload_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Unpack back into a mergeable accumulator. Fails on a malformed
+    /// payload (wrong length, codes exceeding `count·(L−1)`).
+    pub fn unpack(&self) -> Result<QuantizedAccumulator, String> {
+        if self.width != width_for(self.count, self.mode) {
+            return Err(format!(
+                "packed width {} != canonical width {} for count {}",
+                self.width,
+                width_for(self.count, self.mode),
+                self.count
+            ));
+        }
+        let level_sums = unpack_values(&self.words, self.width, 2 * self.m)
+            .ok_or_else(|| "packed payload length mismatch".to_string())?;
+        let max = self.count as u64 * (self.mode.levels() - 1);
+        if level_sums.iter().any(|&v| v > max) {
+            return Err(format!("packed code sum exceeds count*(levels-1) = {max}"));
+        }
+        if pack_values(&level_sums, self.width) != self.words {
+            return Err("non-canonical packed payload (trailing bits set)".to_string());
+        }
+        Ok(QuantizedAccumulator {
+            mode: self.mode,
+            level_sums,
+            count: self.count,
+            bounds: self.bounds.clone(),
+            dither_seed: self.dither_seed,
+        })
+    }
+}
+
+/// Sequential quantized counterpart of
+/// [`crate::sketch::streaming::sketch_source`]: drain a [`PointSource`]
+/// through a quantized accumulator with global row numbering.
+pub fn quantized_sketch_source(
+    op: &SketchOp,
+    source: &mut dyn PointSource,
+    chunk_rows: usize,
+    mode: QuantizationMode,
+    dither_seed: u64,
+) -> QuantizedAccumulator {
+    let n = op.n_dims();
+    assert_eq!(source.n_dims(), n, "source dims != operator dims");
+    let mut acc = QuantizedAccumulator::new(op.m(), n, mode, dither_seed);
+    let mut buf = vec![0.0; chunk_rows.max(1) * n];
+    let mut next_row = 0usize;
+    loop {
+        let rows = source.next_chunk(&mut buf);
+        if rows == 0 {
+            break;
+        }
+        acc.update(op, &buf[..rows * n], next_row);
+        next_row += rows;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::SliceSource;
+    use crate::sketch::frequencies::FreqDist;
+    use crate::sketch::SketchAccumulator;
+    use crate::testing::{self, gen, Config};
+
+    fn op(m: usize, n: usize, seed: u64) -> SketchOp {
+        let mut rng = Rng::new(seed);
+        SketchOp::new(FreqDist::adapted(1.0).draw(m, n, &mut rng))
+    }
+
+    #[test]
+    fn mode_arithmetic() {
+        assert_eq!(QuantizationMode::OneBit.levels(), 2);
+        assert_eq!(QuantizationMode::OneBit.delta(), 2.0);
+        assert_eq!(QuantizationMode::Bits(3).levels(), 8);
+        assert!((QuantizationMode::Bits(3).delta() - 2.0 / 7.0).abs() < 1e-15);
+        assert_eq!(QuantizationMode::Bits(1).normalized(), QuantizationMode::OneBit);
+        assert!(QuantizationMode::Bits(0).validate().is_err());
+        assert!(QuantizationMode::Bits(17).validate().is_err());
+        assert_eq!(QuantizationMode::parse("1bit").unwrap(), QuantizationMode::OneBit);
+        assert_eq!(QuantizationMode::parse("4-bit").unwrap(), QuantizationMode::Bits(4));
+        assert!(QuantizationMode::parse("40bit").is_err());
+        assert!(QuantizationMode::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn quantize_component_endpoints_and_unbiasedness() {
+        let mode = QuantizationMode::OneBit;
+        // v = ±1 quantizes deterministically regardless of dither.
+        assert_eq!(quantize_component(1.0, 0.999, mode), 1);
+        assert_eq!(quantize_component(-1.0, 0.0, mode), 0);
+        // Interior value: empirical mean of the level matches v.
+        let v = 0.3;
+        let mut rng = Rng::new(9);
+        let n = 200_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let code = quantize_component(v, rng.uniform(), mode);
+            acc += -1.0 + mode.delta() * code as f64;
+        }
+        let mean = acc / n as f64;
+        assert!((mean - v).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn prop_pack_unpack_roundtrip() {
+        let cfg = Config::default().cases(48).max_size(80);
+        testing::check("pack/unpack roundtrip", cfg, |rng, size| {
+            let width = 1 + rng.below(24) as u32;
+            let n = 1 + size;
+            let mask = (1u64 << width) - 1;
+            let vals: Vec<u64> = (0..n).map(|_| rng.next_u64() & mask).collect();
+            let words = pack_values(&vals, width);
+            if words.len() != (n * width as usize).div_ceil(64) {
+                return Err("wrong packed length".into());
+            }
+            let back = unpack_values(&words, width, n).ok_or("unpack refused")?;
+            if back != vals {
+                return Err("values corrupted".into());
+            }
+            // hex encoding round-trips too
+            if hex_to_words(&words_to_hex(&words)).as_deref() != Ok(&words[..]) {
+                return Err("hex corrupted".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_merge_commutative_associative_exact() {
+        let cfg = Config::default().cases(16).max_size(40);
+        testing::check("quantized merge exact", cfg, |rng, size| {
+            let n = 1 + rng.below(4);
+            let o = op(12, n, rng.next_u64());
+            let total = 3 + size;
+            let pts = gen::mat_normal(rng, total, n);
+            let seed = rng.next_u64();
+            let c1 = 1 + rng.below(total - 2);
+            let c2 = c1 + 1 + rng.below(total - c1 - 1);
+            let mut parts = Vec::new();
+            for (s, e) in [(0, c1), (c1, c2), (c2, total)] {
+                let mut acc = QuantizedAccumulator::new(12, n, QuantizationMode::OneBit, seed);
+                acc.update(&o, &pts[s * n..e * n], s);
+                parts.push(acc);
+            }
+            let mut left = parts[0].clone();
+            left.merge(&parts[1]);
+            left.merge(&parts[2]);
+            let mut right = parts[2].clone();
+            right.merge(&parts[1]);
+            right.merge(&parts[0]);
+            let mut whole = QuantizedAccumulator::new(12, n, QuantizationMode::OneBit, seed);
+            whole.update(&o, &pts, 0);
+            // Integer state: merge order cannot matter, bit for bit.
+            if left != right {
+                return Err("merge not commutative/associative".into());
+            }
+            if left != whole {
+                return Err("sharded != whole-stream".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_packed_partial_roundtrip() {
+        let cfg = Config::default().cases(16).max_size(50);
+        testing::check("packed partial roundtrip", cfg, |rng, size| {
+            let n = 1 + rng.below(3);
+            let o = op(8, n, rng.next_u64());
+            let pts = gen::mat_normal(rng, 1 + size, n);
+            let mode = if rng.below(2) == 0 {
+                QuantizationMode::OneBit
+            } else {
+                QuantizationMode::Bits(4)
+            };
+            let mut acc = QuantizedAccumulator::new(8, n, mode, rng.next_u64());
+            acc.update(&o, &pts, 0);
+            let packed = acc.pack();
+            let back = packed.unpack().map_err(|e| e.to_string())?;
+            if back != acc {
+                return Err("pack/unpack changed the accumulator".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dequantization_tracks_dense_sketch() {
+        // RMS error between the debiased quantized sketch and the dense
+        // sketch is bounded by the stochastic-rounding noise floor
+        // Δ/(2·√count) (up to a generous constant).
+        testing::check("dequantization RMS", Config::default().cases(12).max_size(8), |rng, size| {
+            let n = 1 + rng.below(3);
+            let o = op(16, n, rng.next_u64());
+            let count = 100 * (1 + size);
+            let pts = gen::mat_normal(rng, count, n);
+            for mode in [QuantizationMode::OneBit, QuantizationMode::Bits(4)] {
+                let mut dense = SketchAccumulator::new(16, n);
+                dense.update(&o, &pts);
+                let zd = dense.finalize();
+                let mut q = QuantizedAccumulator::new(16, n, mode, rng.next_u64());
+                q.update(&o, &pts, 0);
+                let zq = q.finalize();
+                let mut se = 0.0;
+                for j in 0..16 {
+                    se += (zq.re[j] - zd.re[j]).powi(2) + (zq.im[j] - zd.im[j]).powi(2);
+                }
+                let rms = (se / 32.0).sqrt();
+                let floor = mode.delta() / (2.0 * (count as f64).sqrt());
+                if rms > 3.0 * floor + 1e-3 {
+                    return Err(format!(
+                        "{}: rms {rms:.4} above noise floor {floor:.4}",
+                        mode.name()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn unbiased_over_dither_streams() {
+        // Averaging the quantized sketch of a tiny fixed dataset over many
+        // independent dither streams converges to the dense sketch — the
+        // unbiasedness property itself, not just the concentration bound.
+        let n = 3;
+        let o = op(8, n, 5);
+        let mut rng = Rng::new(6);
+        let pts = gen::mat_normal(&mut rng, 10, n);
+        let mut dense = SketchAccumulator::new(8, n);
+        dense.update(&o, &pts);
+        let zd = dense.finalize();
+        let mode = QuantizationMode::Bits(3);
+        let streams = 256;
+        let mut avg = CVec::zeros(8);
+        for s in 0..streams {
+            let mut q = QuantizedAccumulator::new(8, n, mode, 1000 + s as u64);
+            q.update(&o, &pts, 0);
+            avg.axpy(1.0 / streams as f64, &q.finalize());
+        }
+        // per-stream component std ≤ Δ/(2√10) ≈ 0.045; over 256 streams the
+        // mean has std ≤ 0.0029 — 0.02 is a ~7σ band.
+        testing::all_close(&avg.re, &zd.re, 0.02).unwrap();
+        testing::all_close(&avg.im, &zd.im, 0.02).unwrap();
+    }
+
+    #[test]
+    fn streamed_equals_blocked_update() {
+        // Chunked streaming with global row numbering equals one update.
+        let n = 4;
+        let o = op(16, n, 11);
+        let mut rng = Rng::new(12);
+        let pts = gen::mat_normal(&mut rng, 103, n);
+        let mut src = SliceSource::new(&pts, n);
+        let streamed =
+            quantized_sketch_source(&o, &mut src, 16, QuantizationMode::OneBit, 77);
+        let mut whole = QuantizedAccumulator::new(16, n, QuantizationMode::OneBit, 77);
+        whole.update(&o, &pts, 0);
+        assert_eq!(streamed, whole);
+        assert_eq!(streamed.count, 103);
+        assert!(streamed.bounds.is_valid());
+    }
+
+    #[test]
+    fn width_for_tracks_count_and_levels() {
+        assert_eq!(width_for(0, QuantizationMode::OneBit), 1);
+        assert_eq!(width_for(1, QuantizationMode::OneBit), 1);
+        assert_eq!(width_for(2, QuantizationMode::OneBit), 2);
+        assert_eq!(width_for(4096, QuantizationMode::OneBit), 13);
+        assert_eq!(width_for(1, QuantizationMode::Bits(8)), 8);
+    }
+}

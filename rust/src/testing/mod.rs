@@ -15,6 +15,25 @@
 //!     if a + b == b + a { Ok(()) } else { Err(format!("{a} {b}")) }
 //! });
 //! ```
+//!
+//! ## Replaying a failure (`CKM_PROP_SEED`)
+//!
+//! Case generation is fully deterministic given the master seed, so any
+//! red property run is reproducible verbatim:
+//!
+//! 1. CI pins `CKM_PROP_SEED` in the workflow env and echoes it when the
+//!    test job fails — copy that line and run
+//!    `CKM_PROP_SEED=<seed> cargo test <test_name>` locally to regenerate
+//!    the identical cases.
+//! 2. The panic message additionally names the failing property, the case
+//!    index, the per-case `case_seed` and the (shrunk) size. For a tight
+//!    loop on a single case, pin it directly in a scratch test with
+//!    `Config::default().seed(<case-derived seed>)`, or re-run the
+//!    property body with `Rng::new(case_seed)` at the reported size.
+//!
+//! Without the env var the master seed defaults to `0xC0FFEE`, so plain
+//! `cargo test` is deterministic too — the env var exists to let CI and
+//! local runs agree on a *different* seed without a code change.
 
 use crate::util::rng::Rng;
 

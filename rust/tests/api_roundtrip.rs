@@ -1,16 +1,65 @@
 //! Integration tests for the sketch-as-artifact API: durable round trips,
-//! exact merges, builder-default parity with the legacy pipeline, and
-//! operator-mismatch rejection.
+//! exact merges, builder-default parity with the legacy pipeline,
+//! operator-mismatch rejection, and golden-fixture coverage of the v1/v2
+//! on-disk formats (so format regressions are caught by CI, not by users).
 
-use ckm::api::{ApiError, Ckm, SketchArtifact};
+use ckm::api::{ApiError, Ckm, QuantizationMode, SketchArtifact};
 use ckm::coordinator::pipeline::run_pipeline;
 use ckm::coordinator::{PipelineConfig, SketcherConfig};
 use ckm::data::dataset::SliceSource;
 use ckm::data::gmm::GmmConfig;
+use ckm::util::json::Json;
 use ckm::util::rng::Rng;
 
 fn tmp(name: &str) -> std::path::PathBuf {
     std::env::temp_dir().join(format!("ckm_it_{}_{name}", std::process::id()))
+}
+
+/// Committed golden artifact files under `tests/fixtures/`.
+fn fixture(name: &str) -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("fixture {path:?}: {e}"))
+}
+
+/// The current (v2) dense format is pinned byte-for-byte: parsing the
+/// committed fixture and re-serializing must reproduce the exact file, so
+/// any field rename, ordering change or number-formatting drift fails here
+/// instead of silently breaking deployed artifacts.
+#[test]
+fn golden_v2_dense_fixture_roundtrips_byte_exact() {
+    let text = fixture("artifact_v2_dense.json");
+    let art = SketchArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(art.count, 4);
+    assert_eq!(art.op.m, 2);
+    assert!(art.quant.is_none());
+    assert_eq!(art.to_json().to_pretty(), text, "dense v2 format drifted");
+}
+
+/// Same byte-exact pin for the quantized (QCKM) v2 layout, plus a check
+/// that the packed payload dequantizes to the documented level values.
+#[test]
+fn golden_v2_quantized_fixture_roundtrips_byte_exact() {
+    let text = fixture("artifact_v2_quantized.json");
+    let art = SketchArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+    let q = art.quant.as_ref().expect("quantized fixture");
+    assert_eq!(q.mode, QuantizationMode::OneBit);
+    // payload 0b1101 → codes [re0=1, re1=0, im0=1, im1=1] → levels ±1
+    assert_eq!(q.level_sums, vec![1, 0, 1, 1]);
+    assert_eq!(art.z().re, vec![1.0, -1.0]);
+    assert_eq!(art.z().im, vec![1.0, 1.0]);
+    assert_eq!(art.to_json().to_pretty(), text, "quantized v2 format drifted");
+}
+
+/// v1 files (pre-quantization releases) forward-load: same content, and
+/// saving the loaded artifact upgrades it to the v2 bytes exactly.
+#[test]
+fn golden_v1_fixture_forward_loads_and_upgrades_to_v2() {
+    let v1 = SketchArtifact::from_json(&Json::parse(&fixture("artifact_v1.json")).unwrap())
+        .unwrap();
+    let v2_text = fixture("artifact_v2_dense.json");
+    let v2 = SketchArtifact::from_json(&Json::parse(&v2_text).unwrap()).unwrap();
+    assert_eq!(v1, v2, "v1 load must equal the identical v2 artifact");
+    assert_eq!(v1.to_json().to_pretty(), v2_text, "v1 save must produce v2 bytes");
 }
 
 /// Round trip on a GMM dataset: save → load is bit-for-bit, and merging a

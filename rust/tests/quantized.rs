@@ -1,0 +1,164 @@
+//! End-to-end coverage of the quantized sketch pipeline (QCKM): the
+//! paper-scale-small GMM workload solved from a 1-bit sketch lands within
+//! 2× of the dense SSE, the dense path is pinned bit-for-bit against the
+//! underlying primitives (so the quantization plumbing provably did not
+//! touch it), and quantized artifacts survive the full
+//! save → load → merge → solve loop exactly.
+
+use ckm::api::{Ckm, QuantizationMode, SketchArtifact};
+use ckm::ckm::{solve_with_engine, CkmOptions, InitStrategy};
+use ckm::data::dataset::SliceSource;
+use ckm::data::gmm::GmmConfig;
+use ckm::engine::NativeEngine;
+use ckm::metrics::sse;
+use ckm::sketch::SketchAccumulator;
+use ckm::util::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ckm_q_{}_{name}", std::process::id()))
+}
+
+/// Seeded e2e on the paper's GMM protocol at K=10, n=10: 1-bit quantized
+/// CKM must recover centroids with SSE within 2× of the dense pipeline.
+/// (With N=20 000 points the dither noise per sketch component is
+/// ~1/√N ≈ 0.007, far below the cluster structure, so the margin is wide;
+/// seeds are fixed, so this is deterministic.)
+#[test]
+fn one_bit_ckm_sse_within_2x_of_dense() {
+    let (k, n_dims, n_points, m) = (10usize, 10usize, 20_000usize, 1000usize);
+    let mut rng = Rng::new(42);
+    let g = GmmConfig::paper_default(k, n_dims, n_points).generate(&mut rng);
+    let pts = &g.dataset.points;
+
+    let base = Ckm::builder().frequencies(m).seed(7).replicates(2);
+    let dense = base.clone().build().unwrap();
+    let onebit = base.quantization(QuantizationMode::OneBit).build().unwrap();
+
+    let art_dense = dense.sketch_slice(pts, n_dims).unwrap();
+    let art_onebit = onebit.sketch_slice(pts, n_dims).unwrap();
+    // same provenance → same operator; only the payload differs
+    assert_eq!(art_dense.op, art_onebit.op);
+    assert!(art_onebit.quant.is_some() && art_dense.quant.is_none());
+    // 1-bit payload is an order of magnitude below the dense payload
+    assert!(art_onebit.payload_bits() * 4 < art_dense.payload_bits());
+
+    let sol_dense = dense.solve(&art_dense, k).unwrap();
+    let sol_onebit = onebit.solve(&art_onebit, k).unwrap();
+    let sse_dense = sse(pts, n_dims, &sol_dense.centroids) / n_points as f64;
+    let sse_onebit = sse(pts, n_dims, &sol_onebit.centroids) / n_points as f64;
+    eprintln!("SSE/N dense = {sse_dense:.4}, 1-bit = {sse_onebit:.4}");
+    // sanity: the dense solve actually clusters (ideal SSE/N ≈ n_dims for
+    // unit clusters; a broken solve is an order of magnitude worse)
+    assert!(sse_dense < 3.0 * n_dims as f64, "dense solve degraded: {sse_dense}");
+    assert!(
+        sse_onebit <= 2.0 * sse_dense,
+        "1-bit SSE/N {sse_onebit} vs dense {sse_dense} exceeds the 2x budget"
+    );
+}
+
+/// The dense path is bit-identical to the underlying primitives after the
+/// quantization plumbing: a single-chunk facade sketch equals a direct
+/// accumulator pass, and the facade solve equals `solve_with_engine` with
+/// the same replicate seed derivation — pinning pre-PR seeded behavior.
+#[test]
+fn dense_path_bit_identical_to_primitives() {
+    let (k, n_dims, n_points, m) = (3usize, 4usize, 4000usize, 128usize);
+    let mut rng = Rng::new(11);
+    let g = GmmConfig::paper_default(k, n_dims, n_points).generate(&mut rng);
+    let pts = &g.dataset.points;
+
+    // ≤ one default chunk (4096 rows) ⇒ one worker touches one chunk and
+    // the facade sum is a single accumulator update, reproducible exactly.
+    let ckm = Ckm::builder().frequencies(m).sigma2(1.0).seed(9).build().unwrap();
+    let art = ckm.sketch_slice(pts, n_dims).unwrap();
+
+    let op = art.op.materialize().unwrap();
+    let mut acc = SketchAccumulator::new(m, n_dims);
+    acc.update(&op, pts);
+    assert_eq!(art.sum.re, acc.sum.re, "dense sketch sums drifted");
+    assert_eq!(art.sum.im, acc.sum.im, "dense sketch sums drifted");
+    assert_eq!(art.count, acc.count);
+    assert_eq!(art.bounds, acc.bounds);
+
+    // Facade solve ≡ direct engine solve with the same seed derivation.
+    let facade = ckm.solve(&art, k).unwrap();
+    let mut rep_rng = Rng::new(9 ^ 0x5EED);
+    let opts = CkmOptions {
+        strategy: InitStrategy::Range,
+        replicates: 1,
+        seed: rep_rng.next_u64(),
+        ..CkmOptions::default()
+    };
+    let engine = NativeEngine::with_options(op, opts.step1.clone(), opts.step5.clone());
+    let direct = solve_with_engine(&art.z(), &engine, &art.bounds, k, None, &opts);
+    assert_eq!(facade.centroids.data, direct.centroids.data, "dense solve drifted");
+    assert_eq!(facade.alpha, direct.alpha);
+    assert_eq!(facade.cost, direct.cost);
+}
+
+/// Quantized shard artifacts save/load bit-for-bit, merge with integer
+/// exactness in any order, refuse dense partners, and the merged artifact
+/// solves through the unchanged decoder.
+#[test]
+fn quantized_artifact_save_load_merge_solve() {
+    let (k, n_dims, n_points) = (3usize, 4usize, 9000usize);
+    let mut rng = Rng::new(23);
+    let mut cfg = GmmConfig::paper_default(k, n_dims, n_points);
+    cfg.separation = 3.0;
+    let g = cfg.generate(&mut rng);
+    let pts = &g.dataset.points;
+    let half = (n_points / 2) * n_dims;
+
+    let base = Ckm::builder()
+        .frequencies(256)
+        .sigma2(1.0)
+        .seed(4)
+        .workers(2)
+        .quantization(QuantizationMode::OneBit);
+    // one shard id per site: keeps the dither streams independent
+    let site_a = base.clone().shard(1).build().unwrap();
+    let site_b = base.clone().shard(2).build().unwrap();
+    let ckm = site_a.clone();
+
+    let mut src_a = SliceSource::new(&pts[..half], n_dims);
+    let mut src_b = SliceSource::new(&pts[half..], n_dims);
+    let shard_a = site_a.sketch(&mut src_a).unwrap();
+    let shard_b = site_b.sketch(&mut src_b).unwrap();
+
+    // durable: the packed payload and the derived sums survive the file
+    let path = tmp("quant_shard.json");
+    shard_a.to_file(&path).unwrap();
+    let loaded = SketchArtifact::from_file(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, shard_a);
+
+    // integer merge: order cannot matter, bit for bit
+    let ab = loaded.merge(&shard_b).unwrap();
+    let ba = shard_b.merge(&loaded).unwrap();
+    assert_eq!(ab, ba);
+    assert_eq!(ab.count, n_points);
+
+    // a merged artifact round-trips exactly too
+    let path = tmp("quant_merged.json");
+    ab.to_file(&path).unwrap();
+    let merged = SketchArtifact::from_file(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(merged, ab);
+
+    // dense shard with the same operator is refused (typed error)
+    let dense_ckm =
+        Ckm::builder().frequencies(256).sigma2(1.0).seed(4).workers(2).build().unwrap();
+    let mut src_c = SliceSource::new(&pts[..half], n_dims);
+    let dense_shard = dense_ckm.sketch(&mut src_c).unwrap();
+    assert_eq!(dense_shard.op, merged.op);
+    assert!(matches!(
+        merged.merge(&dense_shard),
+        Err(ckm::api::ApiError::QuantizationMismatch { .. })
+    ));
+
+    // and the merged quantized sketch decodes
+    let sol = ckm.solve(&merged, k).unwrap();
+    assert_eq!(sol.centroids.rows, k);
+    let s = sse(pts, n_dims, &sol.centroids) / n_points as f64;
+    assert!(s < 10.0 * n_dims as f64, "quantized merged solve degraded: {s}");
+}
