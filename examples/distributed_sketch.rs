@@ -56,14 +56,7 @@ fn main() -> anyhow::Result<()> {
     // (exactly, up to fp addition order).
     let mut src_all = SliceSource::new(pts, n_dims);
     let whole = ckm.sketch(&mut src_all)?;
-    let (zm, zw) = (merged.z(), whole.z());
-    let max_diff = zm
-        .re
-        .iter()
-        .zip(&zw.re)
-        .chain(zm.im.iter().zip(&zw.im))
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0f64, f64::max);
+    let max_diff = merged.z().max_abs_diff(&whole.z());
     println!("max |merged − single-pass| = {max_diff:.3e}");
     assert!(max_diff < 1e-9, "merge must be exact: {max_diff}");
 

@@ -1,71 +1,100 @@
-//! Online / mergeable sketching demo: data arrives in several "days" of
-//! streams (possibly on different machines); each day is sketched
-//! independently into a durable artifact, the artifacts are merged, and
-//! the centroids are recovered from the merged artifact only — no day's
-//! raw data is ever revisited. The result matches sketching everything at
-//! once, exactly (up to fp addition order).
+//! Online serving demo: a week of streaming traffic through the windowed
+//! sketch store.
+//!
+//! Data arrives continuously; one epoch per "day" is sealed with
+//! `rotate()`. The store is the *only* state — no day's raw data is ever
+//! revisited — yet it answers:
+//!
+//! - "clusters over the last day / week"  → `window(1)` / `window(7)`,
+//!   *exactly*: the window over every surviving epoch is verified below to
+//!   match a single-pass sketch of the same rows to fp addition order;
+//! - "clusters with faded history"        → `decayed(0.5)`;
+//! - repeated queries                     → served from the solve cache.
 //!
 //! Run with: `cargo run --release --example streaming_online`
 
-use ckm::data::dataset::TakeSource;
 use ckm::data::gmm::GmmConfig;
 use ckm::prelude::*;
 
 fn main() -> anyhow::Result<()> {
     let (k, n_dims, m) = (5usize, 6usize, 512usize);
-    let days = 4;
-    let per_day = 50_000;
+    let days = 7;
+    let per_day = 30_000;
 
-    // One shared builder config fixes the sketch domain forever — new data
-    // can keep arriving, sketching and merging indefinitely.
-    let ckm = Ckm::builder().frequencies(m).sigma2(1.0).seed(11).workers(2).build()?;
-    let data_cfg = GmmConfig::paper_default(k, n_dims, days * per_day);
-
-    // Whole-dataset reference artifact (what a single pass would produce).
-    let mut whole_src = data_cfg.stream(99);
-    let whole = ckm.sketch(&mut whole_src)?;
-
-    // Day-by-day: one artifact per day off the same underlying stream.
-    let mut day_src = data_cfg.stream(99);
-    let mut day_artifacts: Vec<SketchArtifact> = Vec::new();
-    for day in 0..days {
-        let mut window = TakeSource::new(&mut day_src, per_day);
-        let artifact = ckm.sketch(&mut window)?;
-        println!(
-            "day {day}: sketched {} points (|sum| norm {:.3})",
-            artifact.count,
-            artifact.sum.norm2()
-        );
-        day_artifacts.push(artifact);
-    }
-    let merged = SketchArtifact::merge_all(&day_artifacts)?;
-    println!("\nmerged {} points across {days} days", merged.count);
-
-    let (z_whole, z_merged) = (whole.z(), merged.z());
-    let max_diff = z_whole
-        .re
-        .iter()
-        .zip(&z_merged.re)
-        .chain(z_whole.im.iter().zip(&z_merged.im))
-        .map(|(a, b)| (a - b).abs())
-        .fold(0.0f64, f64::max);
-    println!("max |merged - single-pass| = {max_diff:.3e} (exact up to fp addition order)");
-    assert!(max_diff < 1e-9);
-    assert_eq!(merged.count, whole.count);
-    assert_eq!(merged.bounds, whole.bounds);
-
-    // Recover the centroids from the merged artifact alone.
-    let solver = Ckm::builder()
+    // One validated config fixes the sketch domain forever: the operator
+    // provenance (seed, σ², m) is the contract every epoch shares.
+    // `.window(days)` caps the ring; `.decay(0.5)` is the default used by
+    // `server.solve(k)`.
+    let ckm = Ckm::builder()
         .frequencies(m)
         .sigma2(1.0)
         .seed(11)
-        .replicates(2)
+        .window(days)
+        .decay(0.5)
         .build()?;
-    let sol = solver.solve(&merged, k)?;
+    let server = ckm.server(n_dims)?;
+
+    // A week of traffic: same mixture every day (drift-free so the
+    // exactness check below can re-sketch the concatenated week).
+    let data_cfg = GmmConfig::paper_default(k, n_dims, days * per_day);
+    let mut source = data_cfg.stream(99);
+    let mut week: Vec<f64> = Vec::with_capacity(days * per_day * n_dims);
+    let mut buf = vec![0.0; 4096 * n_dims];
+    for day in 0..days {
+        if day > 0 {
+            server.rotate();
+        }
+        // Producers push arbitrary-sized batches through a session; the
+        // session batches them into chunks and each chunk takes the store
+        // lock once (any number of threads could do this concurrently).
+        let mut session = server.session();
+        let mut remaining = per_day;
+        while remaining > 0 {
+            let want = remaining.min(buf.len() / n_dims);
+            let rows = source.next_chunk(&mut buf[..want * n_dims]);
+            session.push(&buf[..rows * n_dims]);
+            week.extend_from_slice(&buf[..rows * n_dims]);
+            remaining -= rows;
+        }
+        let pushed = session.finish();
+        println!("day {day}: ingested {pushed} rows");
+    }
+    let stats = server.stats();
     println!(
-        "\nrecovered {} centroids from the merged artifact (cost {:.3e})",
-        sol.centroids.rows, sol.cost
+        "\nstore state: {} epochs, {} rows, generation {}",
+        stats.epochs, stats.surviving_rows, stats.generation
     );
-    println!("weights: {:?}", sol.normalized_weights());
+
+    // Exactness: the window over all 7 epochs IS the sketch of the week.
+    // (Eviction is bucket drop and merging is associative, so this holds
+    // for any surviving window — nothing is ever subtracted.)
+    let window = server.window_all();
+    let single_pass = ckm.sketch_slice(&week, n_dims)?;
+    let max_diff = window.z().max_abs_diff(&single_pass.z());
+    println!(
+        "window(all) vs single-pass sketch of the week: max |Δz| = {max_diff:.3e} \
+         (exact up to fp addition order)"
+    );
+    assert!(max_diff < 1e-9);
+    assert_eq!(window.count, single_pass.count);
+    assert_eq!(window.bounds, single_pass.bounds);
+
+    // Serve: today, the whole week, and the faded-history default.
+    let today = server.solve_window(1, k)?;
+    println!("\nwindow(1)  'today'    -> cost {:.3e}", today.cost);
+    let week_sol = server.solve_window(days, k)?;
+    println!("window(7)  'the week' -> cost {:.3e}", week_sol.cost);
+    println!("           weights: {:?}", week_sol.normalized_weights());
+    let faded = server.solve(k)?; // builder default: decayed(0.5)
+    println!("decayed(.5) default   -> cost {:.3e}", faded.cost);
+
+    // Repeated queries are answered from the generation-keyed solve cache.
+    let again = server.solve_window(days, k)?;
+    assert_eq!(again.centroids.data, week_sol.centroids.data);
+    let stats = server.stats();
+    println!(
+        "\nsolve cache: {} hits / {} misses (any ingest or rotation invalidates)",
+        stats.cache_hits, stats.cache_misses
+    );
     Ok(())
 }

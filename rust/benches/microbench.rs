@@ -1,8 +1,9 @@
 //! Microbenchmarks of the hot paths, before/after the batched kernel layer:
 //! native + PJRT sketch throughput, CLOMPR fit_weights / step-1 / step-5
 //! (scalar oracle vs GEMM-backed batched), Lloyd assignment (dist2 sweep vs
-//! GEMM formulation), NNLS. Emits machine-readable `BENCH.json` so the perf
-//! trajectory is tracked across PRs.
+//! GEMM formulation), NNLS, and the windowed store (ingest rows/s, window
+//! and decayed snapshot latency, dense vs 1-bit). Emits machine-readable
+//! `BENCH.json` so the perf trajectory is tracked across PRs.
 //!
 //! Flags: `--quick` (smoke mode: smaller N, fewer samples — the CI setting),
 //! `--out <path>` (default `BENCH.json`).
@@ -187,6 +188,52 @@ fn main() {
         std::hint::black_box(x);
     });
     report.add("nnls", "native", &format!("rows={} cols={}", 2 * m, 2 * kk), &meas);
+
+    // -- Windowed store: ingest throughput + snapshot latency -------------
+    // Ingest keeps feeding the same (constant-size) current epoch, so the
+    // measured loop has steady-state memory; a second ring pre-filled with
+    // sealed epochs times the window/decayed merge a serving query pays.
+    let store_rows = if quick { 4_096 } else { 32_768 };
+    let block = &pts[..store_rows * n_dims];
+    let st_size = format!("rows/iter={store_rows} n={n_dims} m={m}");
+    for (variant, mode) in
+        [("dense", None), ("1bit", Some(ckm::sketch::QuantizationMode::OneBit))]
+    {
+        let mut builder =
+            ckm::api::Ckm::builder().frequencies(m).sigma2(1.0).seed(7).window(24);
+        builder = match mode {
+            Some(q) => builder.quantization(q),
+            None => builder,
+        };
+        let ckm_store = builder.build().unwrap();
+        let mut store = ckm_store.store(n_dims).unwrap();
+        let meas = measure(&format!("store_ingest/{variant}"), warm, samp, || {
+            let absorbed = store.ingest(block);
+            std::hint::black_box(absorbed);
+        });
+        println!("  -> {:.2} Mrows/s ingest ({variant})", throughput(&meas, store_rows) / 1e6);
+        report.add("store_ingest", variant, &st_size, &meas);
+
+        // Snapshot latency over a full 24-epoch ring.
+        let mut ring = ckm_store.store(n_dims).unwrap();
+        for e in 0..24 {
+            if e > 0 {
+                ring.rotate();
+            }
+            ring.ingest(&pts[(e * 512) * n_dims..(e * 512 + 512) * n_dims]);
+        }
+        let ss_size = format!("epochs=24 m={m}");
+        let meas = measure(&format!("store_snapshot_window/{variant}"), 10, 10 * samp, || {
+            let art = ring.window_all();
+            std::hint::black_box(art);
+        });
+        report.add("store_snapshot_window", variant, &ss_size, &meas);
+        let meas = measure(&format!("store_snapshot_decayed/{variant}"), 10, 10 * samp, || {
+            let art = ring.decayed(0.5).unwrap();
+            std::hint::black_box(art);
+        });
+        report.add("store_snapshot_decayed", variant, &ss_size, &meas);
+    }
 
     report.write(&out_path).expect("failed to write BENCH.json");
     println!("wrote {out_path}");

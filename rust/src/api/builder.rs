@@ -58,6 +58,12 @@ pub struct CkmConfig {
     /// (every site numbers its rows from 0). Irrelevant for dense
     /// sketching. Default 0.
     pub shard: u64,
+    /// Epoch-ring capacity for [`Ckm::store`] / [`Ckm::server`]: how many
+    /// epochs a windowed sketch store retains (`None` = unbounded).
+    pub window_epochs: Option<usize>,
+    /// Default decay λ for [`crate::store::SketchServer::solve`] (`None` =
+    /// undecayed window over every surviving epoch).
+    pub decay: Option<f64>,
     /// Independent solver replicates; best sketch cost wins (paper §4.4).
     pub replicates: usize,
     /// Step-1 ascent initialization strategy.
@@ -85,6 +91,8 @@ impl Default for CkmConfig {
             sketcher: SketcherConfig::default(),
             quantization: None,
             shard: 0,
+            window_epochs: None,
+            decay: None,
             replicates: 1,
             strategy: InitStrategy::Range,
             seed: 0,
@@ -191,6 +199,28 @@ impl CkmBuilder {
         self
     }
 
+    /// Retain at most `epochs` buckets in a windowed sketch store (see
+    /// [`Ckm::store`] / [`Ckm::server`]): older epochs are dropped whole on
+    /// rotation. Default: retain everything.
+    pub fn window(mut self, epochs: usize) -> Self {
+        self.cfg.window_epochs = Some(epochs);
+        self
+    }
+
+    /// Default exponential decay λ ∈ [0, 1] for store serving: epoch at
+    /// age `a` is weighted `λ^a` in [`crate::store::SketchServer::solve`].
+    /// `0.0` = newest epoch only, `1.0` = plain merge.
+    pub fn decay(mut self, lambda: f64) -> Self {
+        self.cfg.decay = Some(lambda);
+        self
+    }
+
+    /// Set or clear the default decay (convenience for plumbing).
+    pub fn decay_opt(mut self, lambda: Option<f64>) -> Self {
+        self.cfg.decay = lambda;
+        self
+    }
+
     /// Independent solver replicates (best sketch cost kept). Default 1.
     pub fn replicates(mut self, replicates: usize) -> Self {
         self.cfg.replicates = replicates;
@@ -253,6 +283,14 @@ impl CkmBuilder {
                     "quantization",
                     "quantized sketching runs native math only; use Backend::Native".into(),
                 ));
+            }
+        }
+        if cfg.window_epochs == Some(0) {
+            return Err(invalid("window", "need a window of at least one epoch".into()));
+        }
+        if let Some(lambda) = cfg.decay {
+            if !(lambda.is_finite() && (0.0..=1.0).contains(&lambda)) {
+                return Err(invalid("decay", format!("lambda must be in [0, 1], got {lambda}")));
             }
         }
         for (name, opts) in [("step1", &cfg.step1), ("step5", &cfg.step5)] {
@@ -396,6 +434,42 @@ impl Ckm {
                 Ok((SketchArtifact::from_quantized(spec, &acc), stats))
             }
         }
+    }
+
+    // -- store stage ------------------------------------------------------
+
+    /// Open an epoch-bucketed [`SketchStore`](crate::store::SketchStore)
+    /// for `n_dims`-dimensional rows: the time-windowed state object of a
+    /// long-running service (see [`crate::store`]). Requires a fixed σ²
+    /// (`.sigma2(..)`) — a store outlives any one dataset, so there is no
+    /// sample to estimate the scale from. `.window(epochs)` sets the ring
+    /// capacity and `.quantization(..)` / `.shard(..)` carry over; store
+    /// ingest always runs the native sketch math (the backend knob only
+    /// affects solves).
+    pub fn store(&self, n_dims: usize) -> Result<crate::store::SketchStore, ApiError> {
+        if n_dims == 0 {
+            return Err(ApiError::InvalidConfig {
+                field: "store",
+                reason: "n_dims must be >= 1".into(),
+            });
+        }
+        let sigma2 = self.cfg.sigma2.ok_or(ApiError::Sigma2Required)?;
+        let (spec, _op) =
+            OpSpec::derive(self.cfg.seed, self.cfg.radius, sigma2, self.cfg.m, n_dims);
+        crate::store::SketchStore::create(
+            spec,
+            self.cfg.quantization,
+            self.cfg.shard,
+            self.cfg.window_epochs,
+        )
+    }
+
+    /// Open a concurrent [`SketchServer`](crate::store::SketchServer) —
+    /// a [`Ckm::store`] behind a mutex with per-producer ingest sessions
+    /// and a generation-keyed solve cache. `.decay(λ)` sets the default
+    /// decay for [`crate::store::SketchServer::solve`].
+    pub fn server(&self, n_dims: usize) -> Result<crate::store::SketchServer, ApiError> {
+        Ok(crate::store::SketchServer::new(self.store(n_dims)?, self.clone()))
     }
 
     // -- solve stage ------------------------------------------------------
@@ -556,6 +630,10 @@ mod tests {
             (Ckm::builder().workers(0), "workers"),
             (Ckm::builder().chunk_rows(0), "chunk_rows"),
             (Ckm::builder().queue_depth(0), "queue_depth"),
+            (Ckm::builder().window(0), "window"),
+            (Ckm::builder().decay(-0.5), "decay"),
+            (Ckm::builder().decay(1.5), "decay"),
+            (Ckm::builder().decay(f64::NAN), "decay"),
         ] {
             match builder.build() {
                 Err(ApiError::InvalidConfig { field: f, .. }) => assert_eq!(f, field),
@@ -689,6 +767,34 @@ mod tests {
         // deterministic: re-sketching yields the identical artifact
         let art2 = ckm.sketch_slice(&g.dataset.points, 4).unwrap();
         assert_eq!(art2, art);
+    }
+
+    #[test]
+    fn store_entry_points_validate() {
+        // a store outlives any one dataset: sigma2 must be fixed up front
+        match Ckm::builder().frequencies(16).build().unwrap().store(3) {
+            Err(ApiError::Sigma2Required) => {}
+            other => panic!("expected Sigma2Required, got {other:?}"),
+        }
+        let ckm = Ckm::builder().frequencies(16).sigma2(1.0).window(2).seed(4).build().unwrap();
+        assert_eq!(ckm.config().window_epochs, Some(2));
+        assert_eq!(ckm.config().decay, None);
+        let mut store = ckm.store(3).unwrap();
+        assert_eq!(store.n_dims(), 3);
+        assert_eq!(store.m(), 16);
+        assert_eq!(store.capacity(), Some(2));
+        assert!(matches!(
+            ckm.store(0),
+            Err(ApiError::InvalidConfig { field: "store", .. })
+        ));
+        // the store sketches with the exact operator the facade would use
+        let mut rng = Rng::new(5);
+        let g = GmmConfig::paper_default(2, 3, 40).generate(&mut rng);
+        store.ingest(&g.dataset.points);
+        let art = ckm.sketch_slice(&g.dataset.points, 3).unwrap();
+        assert_eq!(store.window_all().op, art.op);
+        let srv = ckm.server(3).unwrap();
+        assert_eq!(srv.stats().epochs, 1);
     }
 
     #[test]

@@ -55,6 +55,14 @@
 //! merging stays *exact* (integer arithmetic), artifacts serialize as
 //! format v2 with a packed payload, and `solve` consumes the debiased
 //! sketch through the unchanged decoder.
+//!
+//! ## Windowed stores
+//!
+//! For unbounded streams, `Ckm::builder().window(epochs).decay(lambda)`
+//! plus [`Ckm::store`] / [`Ckm::server`] open an epoch-bucketed sketch
+//! store ([`crate::store`]): rows land in the newest epoch, `rotate()`
+//! advances time, and window / decayed snapshots come back as ordinary
+//! [`SketchArtifact`]s the unchanged solver consumes.
 
 pub mod artifact;
 pub mod builder;

@@ -26,7 +26,11 @@ pub fn minibatch_kmeans(points: &[f64], n_dims: usize, k: usize, opts: &MbOption
     assert!(k >= 1 && k <= n);
     let mut rng = Rng::new(opts.seed);
     let mut centroids = kmeanspp_seed(points, n_dims, k, &mut rng);
-    let mut counts = vec![1.0f64; k];
+    // Sculley's per-center counts start at zero: the first point assigned
+    // to a center gets eta = 1 and *replaces* the k-means++ seed. Seeding
+    // the counts at 1 gave every first assignment eta = 1/2, permanently
+    // anchoring each centroid halfway to its seed.
+    let mut counts = vec![0.0f64; k];
     for _ in 0..opts.iters {
         // Sample a batch and apply per-center running-average updates.
         for _ in 0..opts.batch {
@@ -68,6 +72,35 @@ mod tests {
         let mb = minibatch_kmeans(&g.dataset.points, 4, 4, &MbOptions::default());
         let km = kmeans(&g.dataset.points, 4, 4, &KmOptions { replicates: 3, ..Default::default() });
         assert!(mb.sse < 2.0 * km.sse, "mb={} lloyd={}", mb.sse, km.sse);
+    }
+
+    #[test]
+    fn seed_carries_no_residual_weight() {
+        // Regression for the counts-start-at-1 bug: with k = 1 every
+        // sampled point updates the single center, so the final centroid
+        // must be *exactly* the running mean of the sampled points — the
+        // k-means++ seed is overwritten by the first assignment (eta = 1),
+        // not averaged in at half weight.
+        let mut rng = Rng::new(77);
+        let g = GmmConfig::paper_default(2, 3, 200).generate(&mut rng);
+        let pts = &g.dataset.points;
+        let (n, batch) = (200usize, 64usize);
+        let opts = MbOptions { batch, iters: 1, seed: 5 };
+        let res = minibatch_kmeans(pts, 3, 1, &opts);
+        // Replay the identical RNG stream and update arithmetic.
+        let mut replay = Rng::new(5);
+        let seeds = kmeanspp_seed(pts, 3, 1, &mut replay);
+        let mut mean = seeds.row(0).to_vec();
+        let mut count = 0.0f64;
+        for _ in 0..batch {
+            let i = replay.below(n);
+            count += 1.0;
+            let eta = 1.0 / count;
+            for d in 0..3 {
+                mean[d] += eta * (pts[i * 3 + d] - mean[d]);
+            }
+        }
+        assert_eq!(res.centroids.row(0), &mean[..]);
     }
 
     #[test]

@@ -47,10 +47,13 @@ pub fn maximize_box<F>(
 where
     F: FnMut(&[f64]) -> (f64, Vec<f64>),
 {
+    // Growth cap for the adaptive step: doubling on every acceptance must
+    // not run the step toward overflow when the iterate sits still.
+    const STEP_MAX: f64 = 1e12;
     let mut x = x0.to_vec();
     project(&mut x, lo, hi);
     let (mut fx, mut g) = f_and_grad(&x);
-    let mut step = opts.step0;
+    let mut step = opts.step0.min(STEP_MAX);
     let mut trial = vec![0.0; x.len()];
     for _it in 0..opts.max_iters {
         let gnorm2: f64 = g.iter().map(|v| v * v).sum();
@@ -64,6 +67,18 @@ where
                 trial[i] = x[i] + step * g[i];
             }
             project(&mut trial, lo, hi);
+            if trial == x {
+                // The projection clamped the whole step back to `x`: every
+                // coordinate either has a zero gradient or sits on a bound
+                // with the gradient pointing outward — conditions that do
+                // not depend on the step size, so no step length can make
+                // progress. Without this check the null step was *accepted*
+                // (lin == 0, ft == fx), wasting an objective evaluation and
+                // doubling `step` before the tolerance check bailed out;
+                // breaking here keeps the invariant that accepted steps
+                // move the iterate.
+                break;
+            }
             // Armijo on the projected step: f(trial) ≥ f(x) + 1e-4·gᵀ(trial−x)
             let lin: f64 = g.iter().zip(trial.iter().zip(&x)).map(|(gi, (t, xi))| gi * (t - xi)).sum();
             let (ft, gt) = f_and_grad(&trial);
@@ -72,7 +87,7 @@ where
                 std::mem::swap(&mut x, &mut trial);
                 fx = ft;
                 g = gt;
-                step *= 2.0;
+                step = (step * 2.0).min(STEP_MAX);
                 accepted = true;
                 if improved.abs() <= opts.tol * (1.0 + fx.abs()) {
                     return (x, fx);
@@ -207,6 +222,43 @@ mod tests {
         let (x, fx) = minimize_box(quad, &[0.0, 0.0], &[-10.0, -10.0], &[10.0, 10.0], &OptimOptions::default());
         assert!((x[0] - 3.0).abs() < 1e-4 && (x[1] - 3.0).abs() < 1e-4);
         assert!(fx < 1e-7);
+    }
+
+    #[test]
+    fn corner_with_outward_gradient_stops_without_null_step_eval() {
+        // Regression: starting at a box corner with the gradient pointing
+        // outward, the projected trial collapses back onto x, lin == 0 and
+        // ft == fx — the old loop *accepted* that null step (a wasted
+        // objective evaluation, and a `step` doubling) before the
+        // zero-improvement tolerance check returned. The clamped-trial
+        // break must stop the ascent after the single initial evaluation.
+        use std::cell::Cell;
+        let evals = Cell::new(0usize);
+        let f = |x: &[f64]| {
+            evals.set(evals.get() + 1);
+            (x[0] + x[1], vec![1.0, 1.0])
+        };
+        let opts = OptimOptions::default();
+        let (x, fx) = maximize_box(f, &[1.0, 1.0], &[-1.0, -1.0], &[1.0, 1.0], &opts);
+        assert_eq!(x, vec![1.0, 1.0]);
+        assert_eq!(fx, 2.0);
+        assert_eq!(
+            evals.get(),
+            1,
+            "the clamped trial must not be evaluated (null-step acceptance)"
+        );
+    }
+
+    #[test]
+    fn partially_clamped_gradient_still_ascends() {
+        // One coordinate pinned at its bound, the other free: the free
+        // coordinate must still make progress (the null-step break only
+        // fires when the *entire* trial collapses onto x).
+        let f = |x: &[f64]| (x[0] + 0.5 * x[1], vec![1.0, 0.5]);
+        let (x, fx) =
+            maximize_box(f, &[1.0, 0.0], &[-1.0, -1.0], &[1.0, 1.0], &OptimOptions::default());
+        assert!((x[0] - 1.0).abs() < 1e-12 && (x[1] - 1.0).abs() < 1e-9, "{x:?}");
+        assert!((fx - 1.5).abs() < 1e-9);
     }
 
     #[test]

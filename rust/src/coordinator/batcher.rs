@@ -22,13 +22,22 @@ impl Batcher {
         assert_eq!(rows.len() % self.n_dims, 0, "non-integral row push");
         self.buf.extend_from_slice(rows);
         let chunk_len = self.chunk_rows * self.n_dims;
-        let mut out = Vec::new();
-        while self.buf.len() >= chunk_len {
-            let rest = self.buf.split_off(chunk_len);
-            let full = std::mem::replace(&mut self.buf, rest);
-            self.emitted_rows += self.chunk_rows;
-            out.push(full);
+        let n_chunks = self.buf.len() / chunk_len;
+        if n_chunks == 0 {
+            return Vec::new();
         }
+        // Copy each full chunk out by offset, then shift the short tail
+        // down once — the old `split_off` loop re-copied the entire
+        // remaining buffer per emitted chunk (O(buffered²) per push).
+        let mut out = Vec::with_capacity(n_chunks);
+        for c in 0..n_chunks {
+            out.push(self.buf[c * chunk_len..(c + 1) * chunk_len].to_vec());
+        }
+        let consumed = n_chunks * chunk_len;
+        let tail = self.buf.len() - consumed;
+        self.buf.copy_within(consumed.., 0);
+        self.buf.truncate(tail);
+        self.emitted_rows += n_chunks * self.chunk_rows;
         out
     }
 
@@ -86,16 +95,31 @@ mod tests {
             let mut b = Batcher::new(n_dims, chunk_rows);
             let mut input = Vec::new();
             let mut output = Vec::new();
+            let mut chunks_seen = 0usize;
             for _ in 0..size {
-                let rows = rng.below(6);
+                // Mix small pushes with multi-chunk ones (several full
+                // chunks plus a ragged tail in a single call).
+                let rows = if rng.below(4) == 0 {
+                    chunk_rows * (2 + rng.below(4)) + rng.below(chunk_rows)
+                } else {
+                    rng.below(6)
+                };
                 let push: Vec<f64> = (0..rows * n_dims).map(|_| rng.normal()).collect();
                 input.extend_from_slice(&push);
                 for c in b.push(&push) {
-                    if c.len() % (chunk_rows * n_dims) != 0 {
+                    if c.len() != chunk_rows * n_dims {
                         return Err("non-full chunk emitted by push".into());
                     }
+                    chunks_seen += 1;
                     output.extend_from_slice(&c);
                 }
+            }
+            // Every full chunk's worth of input must already be out.
+            if chunks_seen != (input.len() / n_dims) / chunk_rows {
+                return Err(format!(
+                    "expected {} chunks, saw {chunks_seen}",
+                    (input.len() / n_dims) / chunk_rows
+                ));
             }
             if let Some(tail) = b.flush() {
                 output.extend_from_slice(&tail);
@@ -108,5 +132,23 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn large_push_emits_every_chunk_in_order() {
+        // Regression: the old split_off loop re-copied the whole remaining
+        // buffer per chunk; a large push must emit all full chunks (in
+        // stream order) and keep only the ragged tail buffered.
+        let mut b = Batcher::new(3, 4);
+        let rows = 4 * 1000 + 2;
+        let data: Vec<f64> = (0..rows * 3).map(|i| i as f64).collect();
+        let chunks = b.push(&data);
+        assert_eq!(chunks.len(), 1000);
+        assert!(chunks.iter().all(|c| c.len() == 12));
+        let rejoined: Vec<f64> = chunks.into_iter().flatten().collect();
+        assert_eq!(rejoined, data[..1000 * 12]);
+        assert_eq!(b.pending_rows(), 2);
+        assert_eq!(b.emitted_rows(), 4000);
+        assert_eq!(b.flush(), Some(data[1000 * 12..].to_vec()));
     }
 }

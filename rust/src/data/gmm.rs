@@ -38,6 +38,15 @@ impl GmmConfig {
     /// Materialize a full dataset (with ground-truth labels).
     pub fn generate(&self, rng: &mut Rng) -> GmmDataset {
         let means = self.draw_means(rng);
+        self.generate_with_means(&means, rng)
+    }
+
+    /// Materialize a dataset around externally supplied means — the
+    /// drift/replay scenario: shift the same means between epochs and
+    /// generate each epoch's batch from the shifted constellation.
+    pub fn generate_with_means(&self, means: &[Vec<f64>], rng: &mut Rng) -> GmmDataset {
+        assert_eq!(means.len(), self.k, "means count != k");
+        assert!(means.iter().all(|m| m.len() == self.n_dims), "mean dims != n_dims");
         let mut points = Vec::with_capacity(self.n_points * self.n_dims);
         let mut labels = Vec::with_capacity(self.n_points);
         let weights = self.normalized_weights();
@@ -50,7 +59,7 @@ impl GmmConfig {
         }
         let mut ds = Dataset::new(self.n_dims, points);
         ds.labels = labels;
-        GmmDataset { means, dataset: ds }
+        GmmDataset { means: means.to_vec(), dataset: ds }
     }
 
     /// A deterministic streaming source over the same distribution — the
@@ -162,6 +171,20 @@ mod tests {
         }
         for &c in &counts {
             assert!((c as f64 - 2000.0).abs() < 300.0, "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn generate_with_means_plants_the_constellation() {
+        let cfg = GmmConfig::paper_default(2, 3, 4000);
+        let means = vec![vec![10.0, 0.0, 0.0], vec![-10.0, 0.0, 0.0]];
+        let mut rng = Rng::new(7);
+        let g = cfg.generate_with_means(&means, &mut rng);
+        assert_eq!(g.means, means);
+        // every point sits within a few stds of its planted mean
+        for i in 0..g.dataset.n_points() {
+            let d2 = dist2(g.dataset.point(i), &means[g.dataset.labels[i]]);
+            assert!(d2 < 50.0, "point {i} strayed: {d2}");
         }
     }
 

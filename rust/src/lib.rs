@@ -46,8 +46,23 @@
 //! debiased sketch through the unchanged decoder — see
 //! [`sketch::quantize`] and `rust/README.md` for the bandwidth math.
 //!
+//! ## Windowed & decayed sketches
+//!
+//! Because the sketch algebra is associative, *time* can be added by
+//! bucketing: [`store::SketchStore`] keeps a ring of per-epoch sketches
+//! (`ingest` / `rotate` / `window` / `decayed`) and answers "clusters over
+//! the last hour / day / all time" or "clusters with exponentially faded
+//! history" without ever revisiting raw data — eviction is bucket drop,
+//! never subtraction, so windows stay exact (bit-for-bit in quantized
+//! mode). [`store::SketchServer`] wraps a store for concurrent producer
+//! threads and caches snapshot solves. Entry points:
+//! `Ckm::builder().window(epochs).decay(lambda)` then
+//! [`api::Ckm::store`] / [`api::Ckm::server`].
+//!
 //! ## Layers
 //!
+//! - **L4 ([`store`])** — the serving layer: epoch-bucketed windowed /
+//!   decayed sketch stores with concurrent ingest and cached solves.
 //! - **L3 (this crate)** — the coordinator: streaming sharded sketching of
 //!   the dataset, the CLOMPR centroid solver, baselines, metrics, a CLI and
 //!   the experiment/benchmark drivers for every figure in the paper.
@@ -111,6 +126,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod sketch;
 pub mod spectral;
+pub mod store;
 pub mod testing;
 pub mod util;
 
@@ -119,6 +135,7 @@ pub mod prelude {
     pub use crate::ckm::{solve, CkmOptions, InitStrategy, Solution};
     pub use crate::coordinator::Backend;
     pub use crate::sketch::{QuantizationMode, RadiusKind};
+    pub use crate::store::{IngestSession, SketchServer, SketchStore};
     pub use crate::util::rng::Rng;
 }
 

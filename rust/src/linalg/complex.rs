@@ -85,6 +85,18 @@ impl CVec {
         self.re.iter().zip(&self.im).map(|(r, i)| (r * r + i * i).sqrt()).collect()
     }
 
+    /// Max |difference| over both component planes — the sketch-comparison
+    /// metric used by exactness checks (CLI, examples, store tests).
+    pub fn max_abs_diff(&self, other: &CVec) -> f64 {
+        assert_eq!(self.len(), other.len());
+        self.re
+            .iter()
+            .zip(&other.re)
+            .chain(self.im.iter().zip(&other.im))
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f64, f64::max)
+    }
+
     /// Interleave into `[re..., im...]` (the `(2, m)` artifact layout), f32.
     pub fn to_f32_stacked(&self) -> Vec<f32> {
         let mut out = Vec::with_capacity(2 * self.len());

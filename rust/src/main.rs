@@ -5,6 +5,7 @@
 //!   sketch  sketch a dataset file into a durable sketch artifact
 //!   merge   merge shard artifacts (exact; operator-checked)
 //!   solve   recover centroids from a sketch artifact (any K, repeatedly)
+//!   window  epoch replay through the windowed sketch store (drift demo)
 //!   exp     regenerate a paper figure: fig1 | fig2 | fig3 | fig4 | ablate
 //!   gen     generate a synthetic dataset file
 //!   info    show version, artifact manifest and backends
@@ -32,6 +33,7 @@ fn main() {
         Some("sketch") => cmd_sketch(&args),
         Some("merge") => cmd_merge(&args),
         Some("solve") => cmd_solve(&args),
+        Some("window") => cmd_window(&args),
         Some("info") => cmd_info(&args),
         Some(other) => {
             eprintln!("unknown command '{other}'");
@@ -66,6 +68,9 @@ fn usage() {
            merge   --out merged.json shard1.json shard2.json ...\n\
            solve   --sketch sketch.json --k 10 [--replicates R] [--seed S]\n\
                    [--out solution.json]\n\
+           window  --epochs 6 --epoch-rows 20000 --k 5 [--retain E] [--window W]\n\
+                   [--decay 0.2] [--drift 4.0] [--quantize 1bit|..|16bit]\n\
+                   [--save-store store.json]  (epoch replay through the store)\n\
            exp     fig1|fig2|fig3|fig4|ablate|quantize [--runs R] [--full] [--persist]\n\
            gen     --out data.bin --k 10 --n 10 --npoints 100000 [--seed S]\n\
            info",
@@ -381,6 +386,140 @@ fn cmd_solve(args: &Args) -> anyhow::Result<()> {
     if let Some(path) = out {
         report.solution.to_file(&path)?;
         println!("solution written to {path}");
+    }
+    Ok(())
+}
+
+/// Epoch replay through the windowed sketch store: a synthetic (optionally
+/// drifting) GMM stream is ingested one epoch at a time through a
+/// [`ckm::store::SketchServer`], then window / decayed snapshots are
+/// solved and the window(all) snapshot is verified against an independent
+/// re-sketch of the surviving rows.
+fn cmd_window(args: &Args) -> anyhow::Result<()> {
+    use ckm::sketch::quantize::QuantizedAccumulator;
+    use std::collections::VecDeque;
+
+    let k = args.usize_or("k", 5);
+    let n_dims = args.usize_or("n", 6);
+    let epochs = args.usize_or("epochs", 6);
+    let per_epoch = args.usize_or("epoch-rows", 20_000);
+    let retain = args.usize_or("retain", epochs);
+    let width = args.usize_or("window", retain);
+    let drift = args.f64_or("drift", 0.0);
+    let decay = args.opt("decay").map(|s| s.parse::<f64>()).transpose()?;
+    let seed = args.u64_or("seed", 0);
+    let save_store = args.opt("save-store").map(|s| s.to_string());
+
+    let mut builder = builder_from_args(args)?.window(retain).decay_opt(decay);
+    let data_cfg = GmmConfig::paper_default(k, n_dims, per_epoch);
+    if args.opt("sigma2").is_none() {
+        // A store outlives any one dataset, so σ² must be fixed up front:
+        // estimate it once from a sample of the epoch-0 distribution.
+        let mut sample = vec![0.0; 5000.min(per_epoch) * n_dims];
+        let got = data_cfg.stream(seed).next_chunk(&mut sample);
+        sample.truncate(got * n_dims);
+        let mut rng = Rng::new(seed);
+        let est = ckm::sketch::scale::ScaleEstimator::default().estimate(&sample, n_dims, &mut rng);
+        builder = builder.sigma2(est);
+    }
+    let ckm = builder.build()?;
+    args.finish()?;
+
+    let server = ckm.server(n_dims)?;
+    let mut rng = Rng::new(seed ^ 0xD217);
+    let mut means = data_cfg.draw_means(&mut rng);
+    let mut retained: VecDeque<Vec<f64>> = VecDeque::new();
+    let sw = Stopwatch::start();
+    for e in 0..epochs {
+        if e > 0 {
+            for mu in means.iter_mut() {
+                mu[0] += drift;
+            }
+            let evicted = server.rotate();
+            for id in &evicted {
+                retained.pop_front();
+                println!("  evicted epoch {id} (bucket drop: surviving windows stay exact)");
+            }
+        }
+        let g = data_cfg.generate_with_means(&means, &mut rng);
+        let mut sess = server.session();
+        sess.push(&g.dataset.points);
+        sess.finish();
+        retained.push_back(g.dataset.points);
+        println!(
+            "epoch {e}: ingested {per_epoch} rows (mean drift offset {:+.1})",
+            e as f64 * drift
+        );
+    }
+    let stats = server.stats();
+    println!(
+        "replayed {} rows into {} surviving epochs in {:.2}s ({:.2} Mrows/s)",
+        stats.rows_ingested,
+        stats.epochs,
+        sw.seconds(),
+        stats.rows_ingested as f64 / sw.seconds().max(1e-12) / 1e6
+    );
+
+    // Verify: the window over every surviving epoch IS the sketch of the
+    // surviving rows — bit-for-bit in quantized mode, fp-addition-order in
+    // dense mode.
+    let win = server.window_all();
+    match ckm.config().quantization {
+        Some(mode) => {
+            let (spec, dither, epoch_stats) = server
+                .with_store(|s| (s.spec().clone(), s.dither_seed(), s.epoch_stats()));
+            let op = spec.materialize()?;
+            let mut acc = QuantizedAccumulator::new(spec.m, n_dims, mode, dither);
+            for (ep, rows) in epoch_stats.iter().zip(&retained) {
+                acc.update(&op, rows, ep.start_row);
+            }
+            let direct = ckm::api::SketchArtifact::from_quantized(spec, &acc);
+            let exact = win == direct;
+            println!("window(all) vs direct re-sketch: bit-identical = {exact}");
+            anyhow::ensure!(exact, "quantized window must replay bit-for-bit");
+        }
+        None => {
+            let all_rows: Vec<f64> = retained.iter().flatten().copied().collect();
+            let direct = ckm.sketch_slice(&all_rows, n_dims)?;
+            anyhow::ensure!(win.count == direct.count, "window row count drifted");
+            let max_diff = win.z().max_abs_diff(&direct.z());
+            println!("window(all) vs single-pass re-sketch: max |Δz| = {max_diff:.3e}");
+            anyhow::ensure!(max_diff < 1e-9, "dense window must match the re-sketch");
+        }
+    }
+
+    let recovery =
+        |sol: &Solution| -> f64 { ckm::metrics::mean_min_centroid_dist(&means, &sol.centroids) };
+
+    let sw = Stopwatch::start();
+    let sol = server.solve_window(width, k)?;
+    println!(
+        "\nwindow({width}) solve: cost {:.4e} in {:.2}s, mean dist to current means {:.3}",
+        sol.cost,
+        sw.seconds(),
+        recovery(&sol)
+    );
+    print_solution(&sol);
+    if let Some(lambda) = decay {
+        let sw = Stopwatch::start();
+        let dsol = server.solve_decayed(lambda, k)?;
+        println!(
+            "decayed(λ={lambda}) solve: cost {:.4e} in {:.2}s, mean dist to current means {:.3}",
+            dsol.cost,
+            sw.seconds(),
+            recovery(&dsol)
+        );
+    }
+    let sw = Stopwatch::start();
+    let _ = server.solve_window(width, k)?;
+    println!(
+        "repeat window({width}) solve: {:.4}s ({} cache hits)",
+        sw.seconds(),
+        server.stats().cache_hits
+    );
+    if let Some(path) = save_store {
+        server.save(&path)?;
+        println!("store checkpointed to {path} (resume with SketchStore::from_file)");
     }
     Ok(())
 }

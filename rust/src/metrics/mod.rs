@@ -11,6 +11,24 @@ pub fn sse(points: &[f64], n_dims: usize, centroids: &Mat) -> f64 {
     assign(points, n_dims, centroids, &mut labels)
 }
 
+/// Mean distance from each planted mean to its nearest recovered centroid
+/// — the drift-tracking recovery metric (`ckm window`, store e2e tests).
+pub fn mean_min_centroid_dist(means: &[Vec<f64>], centroids: &Mat) -> f64 {
+    if means.is_empty() {
+        return 0.0;
+    }
+    let total: f64 = means
+        .iter()
+        .map(|mu| {
+            (0..centroids.rows)
+                .map(|c| crate::linalg::matrix::dist2(mu, centroids.row(c)))
+                .fold(f64::INFINITY, f64::min)
+                .sqrt()
+        })
+        .sum();
+    total / means.len() as f64
+}
+
 /// Nearest-centroid labels for `points`.
 pub fn labels_for(points: &[f64], n_dims: usize, centroids: &Mat) -> Vec<usize> {
     let n = points.len() / n_dims;

@@ -11,7 +11,7 @@ use crate::data::dataset::{Bounds, PointSource};
 use crate::linalg::CVec;
 
 /// Partial sketch state: unnormalized sums + count + bounds.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SketchAccumulator {
     /// Unnormalized Σ e^{-iωx} over the points seen so far.
     pub sum: CVec,

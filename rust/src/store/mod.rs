@@ -1,0 +1,44 @@
+//! L4 store: time-windowed sketch serving over unbounded streams.
+//!
+//! The sketch is a constant-size, exactly-mergeable summary whose solve
+//! cost is independent of the number of points — which makes it the ideal
+//! *state object* for a long-running service ingesting an unbounded
+//! stream. What the plain accumulator lacks is **time**: once a point is
+//! absorbed it can never be aged out, so "cluster the last hour" requires
+//! revisiting raw data. This module adds time the only way the sketch
+//! algebra allows it — by *bucketing*, never by subtraction:
+//!
+//! - [`SketchStore`] — a ring of per-epoch sketches (dense or quantized).
+//!   [`SketchStore::ingest`] feeds the newest epoch, [`SketchStore::rotate`]
+//!   seals it and opens the next (evicting the oldest bucket once the
+//!   configured capacity is exceeded), [`SketchStore::window`] merges the
+//!   newest `e` epochs into a [`crate::api::SketchArtifact`] — *exactly*,
+//!   because dense sums and integer level sums are both associative and
+//!   eviction is bucket drop, never subtraction error — and
+//!   [`SketchStore::decayed`] builds an exponentially-weighted sketch
+//!   (per-epoch scalar weights on sum and count: a weighted empirical
+//!   characteristic function, so CLOMPR consumes it unchanged).
+//! - [`SketchServer`] — the concurrent wrapper: any number of producer
+//!   threads push rows through per-producer [`IngestSession`]s (local
+//!   [`crate::coordinator::batcher::Batcher`] chunking, one short store
+//!   lock per full chunk) while snapshot-solve requests
+//!   ([`SketchServer::solve_window`] / [`SketchServer::solve_decayed`])
+//!   are answered from a generation-keyed solve cache and never hold the
+//!   store lock during the CLOMPR decode.
+//!
+//! A whole store serializes to one versioned JSON file whose epoch entries
+//! are ordinary format-v2 artifacts ([`SketchStore::to_file`] /
+//! [`SketchStore::from_file`]), so a service can checkpoint and resume —
+//! including the quantized dither row counter, which keeps resumed ingest
+//! bit-compatible with an uninterrupted run.
+//!
+//! Entry points live on the facade: `Ckm::builder().window(epochs)` sets
+//! the ring capacity, `.decay(lambda)` the default decay, and
+//! [`crate::api::Ckm::store`] / [`crate::api::Ckm::server`] construct the
+//! pieces with the builder's validated operator provenance.
+
+pub mod ring;
+pub mod server;
+
+pub use ring::{EpochStats, SketchStore, STORE_FORMAT_VERSION};
+pub use server::{IngestSession, ServerStats, SketchServer};

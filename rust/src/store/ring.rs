@@ -1,0 +1,750 @@
+//! The epoch ring: per-epoch sketch buckets with exact window merges and
+//! exponentially-decayed snapshots.
+//!
+//! Every epoch holds its own accumulator (dense [`SketchAccumulator`] or
+//! integer [`QuantizedAccumulator`]); rows always land in the *newest*
+//! epoch, [`SketchStore::rotate`] seals it, and retention is pure bucket
+//! drop — the merge algebra is associative, so nothing is ever subtracted
+//! and a window over surviving epochs is exactly the sketch of their rows.
+//!
+//! Quantized stores key the dither stream by the store-lifetime row index
+//! (`rows_ingested`), so an epoch replay of a stream produces the same
+//! integer state as a single uninterrupted pass — bit for bit — and a
+//! checkpointed store resumes dither-compatibly after
+//! [`SketchStore::from_file`].
+
+use crate::api::{ApiError, OpSpec, SketchArtifact};
+use crate::data::dataset::Bounds;
+use crate::linalg::CVec;
+use crate::sketch::quantize::{self, QuantizationMode, QuantizedAccumulator};
+use crate::sketch::{SketchAccumulator, SketchOp};
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::path::Path;
+
+/// Version of the store JSON schema this build writes. Epoch entries are
+/// ordinary artifact-v2 objects (see [`crate::api::SKETCH_FORMAT_VERSION`]).
+pub const STORE_FORMAT_VERSION: u32 = 1;
+
+/// One epoch bucket: dense or integer accumulator state.
+#[derive(Clone, Debug, PartialEq)]
+enum EpochAcc {
+    Dense(SketchAccumulator),
+    Quantized(QuantizedAccumulator),
+}
+
+/// A sealed-or-current epoch of the ring.
+#[derive(Clone, Debug, PartialEq)]
+struct EpochSketch {
+    /// Monotonic epoch id (survives eviction: ids never reset).
+    id: u64,
+    /// Store-lifetime index of the first row this epoch absorbed (the
+    /// quantized dither key; informational for dense stores).
+    start_row: usize,
+    acc: EpochAcc,
+}
+
+impl EpochSketch {
+    fn count(&self) -> usize {
+        match &self.acc {
+            EpochAcc::Dense(a) => a.count,
+            EpochAcc::Quantized(a) => a.count,
+        }
+    }
+
+    fn bounds(&self) -> &Bounds {
+        match &self.acc {
+            EpochAcc::Dense(a) => &a.bounds,
+            EpochAcc::Quantized(a) => &a.bounds,
+        }
+    }
+
+    /// `into += w · (this epoch's unnormalized sum)` — the decayed-snapshot
+    /// accumulation step (quantized epochs contribute their debiased sums).
+    fn add_scaled_sum(&self, w: f64, into: &mut CVec) {
+        match &self.acc {
+            EpochAcc::Dense(a) => into.axpy(w, &a.sum),
+            EpochAcc::Quantized(a) => into.axpy(w, &a.dequantized_sum()),
+        }
+    }
+
+    /// This epoch alone, as a durable artifact.
+    fn artifact(&self, spec: &OpSpec) -> SketchArtifact {
+        match &self.acc {
+            EpochAcc::Dense(a) => SketchArtifact {
+                op: spec.clone(),
+                sum: a.sum.clone(),
+                count: a.count,
+                bounds: a.bounds.clone(),
+                quant: None,
+            },
+            EpochAcc::Quantized(a) => SketchArtifact::from_quantized(spec.clone(), a),
+        }
+    }
+}
+
+/// Introspection record for one epoch of the ring.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochStats {
+    pub id: u64,
+    pub start_row: usize,
+    pub rows: usize,
+}
+
+/// An epoch-bucketed sketch store: the state object of a long-running
+/// clustering service.
+///
+/// Rows stream in through [`SketchStore::ingest`]; [`SketchStore::rotate`]
+/// advances time (one bucket per hour, day, … — the caller's clock);
+/// [`SketchStore::window`] answers "clusters over the last `e` epochs" and
+/// [`SketchStore::decayed`] "clusters with exponentially faded history",
+/// both as ordinary [`SketchArtifact`]s the unchanged CLOMPR decoder
+/// consumes. Construct via [`crate::api::Ckm::store`] (facade, validated
+/// config) or [`SketchStore::create`] (explicit provenance).
+#[derive(Clone, Debug)]
+pub struct SketchStore {
+    spec: OpSpec,
+    op: SketchOp,
+    quantization: Option<QuantizationMode>,
+    shard: u64,
+    dither_seed: u64,
+    /// Max epochs retained (`None` = unbounded ring).
+    capacity: Option<usize>,
+    /// Oldest at the front, current (newest) at the back; never empty.
+    epochs: VecDeque<EpochSketch>,
+    next_epoch_id: u64,
+    /// Store-lifetime rows (keeps counting across eviction — the quantized
+    /// dither key must never be reused).
+    rows_ingested: usize,
+    /// Bumped on every mutation; snapshot caches key off it.
+    generation: u64,
+}
+
+impl SketchStore {
+    /// Build a store from operator provenance (the checksum is verified by
+    /// re-deriving the frequency matrix). `capacity` is the ring size in
+    /// epochs (`None` = retain everything); `shard` salts the quantized
+    /// dither stream exactly as in [`crate::api::CkmBuilder::shard`].
+    pub fn create(
+        spec: OpSpec,
+        quantization: Option<QuantizationMode>,
+        shard: u64,
+        capacity: Option<usize>,
+    ) -> Result<SketchStore, ApiError> {
+        if capacity == Some(0) {
+            return Err(ApiError::InvalidConfig {
+                field: "window",
+                reason: "need a window of at least one epoch".into(),
+            });
+        }
+        if let Some(mode) = quantization {
+            mode.validate()
+                .map_err(|reason| ApiError::InvalidConfig { field: "quantization", reason })?;
+        }
+        let op = spec.materialize()?;
+        let dither_seed = quantize::dither_seed_for_shard(spec.seed, shard);
+        let mut store = SketchStore {
+            spec,
+            op,
+            quantization: quantization.map(QuantizationMode::normalized),
+            shard,
+            dither_seed,
+            capacity,
+            epochs: VecDeque::new(),
+            next_epoch_id: 0,
+            rows_ingested: 0,
+            generation: 0,
+        };
+        store.push_epoch();
+        Ok(store)
+    }
+
+    fn push_epoch(&mut self) {
+        let acc = match self.quantization {
+            None => EpochAcc::Dense(SketchAccumulator::new(self.spec.m, self.spec.n_dims)),
+            Some(mode) => EpochAcc::Quantized(QuantizedAccumulator::new(
+                self.spec.m,
+                self.spec.n_dims,
+                mode,
+                self.dither_seed,
+            )),
+        };
+        self.epochs.push_back(EpochSketch {
+            id: self.next_epoch_id,
+            start_row: self.rows_ingested,
+            acc,
+        });
+        self.next_epoch_id += 1;
+    }
+
+    // -- ingest / rotate --------------------------------------------------
+
+    /// Absorb row-major rows into the current (newest) epoch. Returns the
+    /// number of rows absorbed.
+    pub fn ingest(&mut self, rows: &[f64]) -> usize {
+        let n = self.spec.n_dims;
+        assert_eq!(rows.len() % n, 0, "non-integral row ingest");
+        let n_rows = rows.len() / n;
+        if n_rows == 0 {
+            return 0;
+        }
+        let offset = self.rows_ingested;
+        let ep = self.epochs.back_mut().expect("store holds at least one epoch");
+        match &mut ep.acc {
+            EpochAcc::Dense(a) => a.update(&self.op, rows),
+            EpochAcc::Quantized(a) => a.update(&self.op, rows, offset),
+        }
+        self.rows_ingested += n_rows;
+        self.generation += 1;
+        n_rows
+    }
+
+    /// Seal the current epoch and open a fresh one. If the ring exceeds its
+    /// capacity the oldest bucket(s) are dropped — eviction is bucket drop,
+    /// never subtraction, so surviving windows stay exact. Returns the
+    /// evicted epoch ids (empty when nothing aged out).
+    pub fn rotate(&mut self) -> Vec<u64> {
+        self.push_epoch();
+        self.generation += 1;
+        let mut evicted = Vec::new();
+        if let Some(cap) = self.capacity {
+            while self.epochs.len() > cap {
+                let old = self.epochs.pop_front().expect("len > cap >= 1");
+                evicted.push(old.id);
+            }
+        }
+        evicted
+    }
+
+    // -- snapshots --------------------------------------------------------
+
+    /// Merge the newest `last_e` epochs into one artifact (clamped to the
+    /// surviving epoch count). Exact: dense sums add associatively (merge
+    /// order is fixed oldest→newest), integer level sums add exactly.
+    pub fn window(&self, last_e: usize) -> Result<SketchArtifact, ApiError> {
+        if last_e == 0 {
+            return Err(ApiError::InvalidConfig {
+                field: "window",
+                reason: "need a window of at least one epoch".into(),
+            });
+        }
+        let e = last_e.min(self.epochs.len());
+        Ok(self.merge_from(self.epochs.len() - e))
+    }
+
+    /// Merge every surviving epoch ("all time", within retention).
+    pub fn window_all(&self) -> SketchArtifact {
+        self.merge_from(0)
+    }
+
+    fn merge_from(&self, start: usize) -> SketchArtifact {
+        match self.quantization {
+            None => {
+                let mut acc: Option<SketchAccumulator> = None;
+                for ep in self.epochs.iter().skip(start) {
+                    let EpochAcc::Dense(a) = &ep.acc else {
+                        unreachable!("dense store holds a quantized epoch")
+                    };
+                    match acc.as_mut() {
+                        None => acc = Some(a.clone()),
+                        Some(m) => m.merge(a),
+                    }
+                }
+                let acc = acc.expect("store holds at least one epoch");
+                SketchArtifact {
+                    op: self.spec.clone(),
+                    sum: acc.sum,
+                    count: acc.count,
+                    bounds: acc.bounds,
+                    quant: None,
+                }
+            }
+            Some(_) => {
+                let mut acc: Option<QuantizedAccumulator> = None;
+                for ep in self.epochs.iter().skip(start) {
+                    let EpochAcc::Quantized(a) = &ep.acc else {
+                        unreachable!("quantized store holds a dense epoch")
+                    };
+                    match acc.as_mut() {
+                        None => acc = Some(a.clone()),
+                        Some(m) => m.merge(a),
+                    }
+                }
+                let acc = acc.expect("store holds at least one epoch");
+                SketchArtifact::from_quantized(self.spec.clone(), &acc)
+            }
+        }
+    }
+
+    /// Exponentially-decayed snapshot: epoch at age `a` (0 = newest) is
+    /// weighted `λ^a` on both its sum and its count, so the artifact's
+    /// normalized sketch `z()` is the λ-weighted empirical characteristic
+    /// function `Σ λ^a·sum_a / Σ λ^a·count_a` — a reweighted empirical
+    /// measure, which CLOMPR decodes unchanged.
+    ///
+    /// Degenerate ends are served exactly: `decayed(0.0)` is the newest
+    /// epoch alone (`0^0 = 1`) and `decayed(1.0)` is the plain
+    /// [`SketchStore::window_all`] merge. Interior λ returns a *dense*
+    /// artifact whose `count` is the raw surviving-row total and whose
+    /// `sum` is rescaled so `z()` equals the weighted sketch (fractional
+    /// weights leave the integer payload representation, so a quantized
+    /// store's decayed snapshot is dense by construction).
+    pub fn decayed(&self, lambda: f64) -> Result<SketchArtifact, ApiError> {
+        if !(lambda.is_finite() && (0.0..=1.0).contains(&lambda)) {
+            return Err(ApiError::InvalidConfig {
+                field: "decay",
+                reason: format!("lambda must be in [0, 1], got {lambda}"),
+            });
+        }
+        if lambda == 1.0 {
+            return Ok(self.window_all());
+        }
+        if lambda == 0.0 {
+            return Ok(self.merge_from(self.epochs.len() - 1));
+        }
+        let len = self.epochs.len();
+        let mut sum = CVec::zeros(self.spec.m);
+        let mut weighted_count = 0.0f64;
+        let mut count = 0usize;
+        let mut bounds = Bounds::empty(self.spec.n_dims);
+        for (idx, ep) in self.epochs.iter().enumerate() {
+            let age = (len - 1 - idx) as i32;
+            let w = lambda.powi(age);
+            ep.add_scaled_sum(w, &mut sum);
+            weighted_count += w * ep.count() as f64;
+            count += ep.count();
+            bounds.merge(ep.bounds());
+        }
+        if count > 0 && weighted_count > 0.0 {
+            sum.scale(count as f64 / weighted_count);
+        }
+        Ok(SketchArtifact { op: self.spec.clone(), sum, count, bounds, quant: None })
+    }
+
+    // -- introspection ----------------------------------------------------
+
+    pub fn spec(&self) -> &OpSpec {
+        &self.spec
+    }
+
+    pub fn n_dims(&self) -> usize {
+        self.spec.n_dims
+    }
+
+    pub fn m(&self) -> usize {
+        self.spec.m
+    }
+
+    pub fn quantization(&self) -> Option<QuantizationMode> {
+        self.quantization
+    }
+
+    pub fn shard(&self) -> u64 {
+        self.shard
+    }
+
+    /// The dither-stream seed quantized epochs are keyed with.
+    pub fn dither_seed(&self) -> u64 {
+        self.dither_seed
+    }
+
+    pub fn capacity(&self) -> Option<usize> {
+        self.capacity
+    }
+
+    /// Surviving epochs in the ring (≥ 1).
+    pub fn epoch_count(&self) -> usize {
+        self.epochs.len()
+    }
+
+    /// Rows across surviving epochs.
+    pub fn surviving_rows(&self) -> usize {
+        self.epochs.iter().map(EpochSketch::count).sum()
+    }
+
+    /// Store-lifetime rows (monotonic; includes evicted epochs).
+    pub fn rows_ingested(&self) -> usize {
+        self.rows_ingested
+    }
+
+    /// Mutation counter (snapshot caches key off it).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    pub fn current_epoch_id(&self) -> u64 {
+        self.epochs.back().expect("store holds at least one epoch").id
+    }
+
+    pub fn oldest_epoch_id(&self) -> u64 {
+        self.epochs.front().expect("store holds at least one epoch").id
+    }
+
+    /// Per-epoch introspection, oldest first.
+    pub fn epoch_stats(&self) -> Vec<EpochStats> {
+        self.epochs
+            .iter()
+            .map(|ep| EpochStats { id: ep.id, start_row: ep.start_row, rows: ep.count() })
+            .collect()
+    }
+
+    /// Every surviving epoch as its own artifact, oldest first.
+    pub fn epoch_artifacts(&self) -> Vec<SketchArtifact> {
+        self.epochs.iter().map(|ep| ep.artifact(&self.spec)).collect()
+    }
+
+    // -- serialization ----------------------------------------------------
+
+    /// Serialize the whole ring: one versioned JSON object whose `epochs`
+    /// entries are ordinary artifact-v2 objects plus their epoch id and
+    /// start row.
+    pub fn to_json(&self) -> Json {
+        let epochs = self
+            .epochs
+            .iter()
+            .map(|ep| {
+                Json::obj(vec![
+                    ("id", Json::Num(ep.id as f64)),
+                    ("start_row", Json::Num(ep.start_row as f64)),
+                    ("artifact", ep.artifact(&self.spec).to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("format", Json::Str("ckm-store".to_string())),
+            ("version", Json::Num(STORE_FORMAT_VERSION as f64)),
+            ("shard", Json::Str(self.shard.to_string())),
+            (
+                "quant_bits",
+                match self.quantization {
+                    None => Json::Null,
+                    Some(mode) => Json::Num(mode.bits() as f64),
+                },
+            ),
+            (
+                "capacity",
+                match self.capacity {
+                    None => Json::Null,
+                    Some(c) => Json::Num(c as f64),
+                },
+            ),
+            ("next_epoch_id", Json::Num(self.next_epoch_id as f64)),
+            ("rows_ingested", Json::Num(self.rows_ingested as f64)),
+            ("epochs", Json::Arr(epochs)),
+        ])
+    }
+
+    /// Parse a serialized store, re-deriving and checksum-verifying the
+    /// operator once and validating the ring invariants (uniform operator
+    /// and quantization across epochs, strictly increasing ids, the
+    /// newest epoch accounting for `rows_ingested`).
+    pub fn from_json(j: &Json) -> Result<SketchStore, ApiError> {
+        let bad = |msg: &str| ApiError::Format(format!("store: {msg}"));
+        if j.get("format").as_str() != Some("ckm-store") {
+            return Err(bad("not a ckm-store file (missing format tag)"));
+        }
+        let version = j.get("version").as_usize().ok_or_else(|| bad("version missing"))?;
+        if !(1..=STORE_FORMAT_VERSION as usize).contains(&version) {
+            return Err(ApiError::UnsupportedVersion {
+                found: version,
+                supported: STORE_FORMAT_VERSION,
+            });
+        }
+        let shard = j
+            .get("shard")
+            .as_str()
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| bad("shard must be a decimal u64 string"))?;
+        let quantization = match j.get("quant_bits") {
+            Json::Null => None,
+            q => {
+                let bits =
+                    q.as_usize().filter(|b| (1..=16).contains(b)).ok_or_else(|| {
+                        bad("quant_bits must be null or an integer in 1..=16")
+                    })?;
+                Some(QuantizationMode::Bits(bits as u8).normalized())
+            }
+        };
+        let capacity = match j.get("capacity") {
+            Json::Null => None,
+            c => Some(
+                c.as_usize()
+                    .filter(|&c| c >= 1)
+                    .ok_or_else(|| bad("capacity must be null or >= 1"))?,
+            ),
+        };
+        let next_epoch_id =
+            j.get("next_epoch_id").as_usize().ok_or_else(|| bad("next_epoch_id missing"))? as u64;
+        let rows_ingested =
+            j.get("rows_ingested").as_usize().ok_or_else(|| bad("rows_ingested missing"))?;
+        let epochs_j = j.get("epochs").as_arr().ok_or_else(|| bad("epochs missing"))?;
+        if epochs_j.is_empty() {
+            return Err(bad("a store holds at least one epoch"));
+        }
+
+        let mut spec: Option<OpSpec> = None;
+        let mut epochs = VecDeque::with_capacity(epochs_j.len());
+        let mut last_id: Option<u64> = None;
+        let mut last_start = 0usize;
+        for ej in epochs_j {
+            let id = ej.get("id").as_usize().ok_or_else(|| bad("epoch id missing"))? as u64;
+            let start_row =
+                ej.get("start_row").as_usize().ok_or_else(|| bad("epoch start_row missing"))?;
+            if let Some(prev) = last_id {
+                if id <= prev {
+                    return Err(bad("epoch ids must be strictly increasing"));
+                }
+                if start_row < last_start {
+                    return Err(bad("epoch start rows must be non-decreasing"));
+                }
+            }
+            last_id = Some(id);
+            last_start = start_row;
+            let art = SketchArtifact::from_json(ej.get("artifact"))?;
+            match spec.as_ref() {
+                None => {}
+                Some(s) if *s == art.op => {}
+                Some(s) => {
+                    return Err(ApiError::OperatorMismatch {
+                        left: s.describe(),
+                        right: art.op.describe(),
+                    })
+                }
+            }
+            if spec.is_none() {
+                spec = Some(art.op.clone());
+            }
+            let dither_seed = quantize::dither_seed_for_shard(art.op.seed, shard);
+            let acc = match (quantization, art.quant) {
+                (None, None) => EpochAcc::Dense(SketchAccumulator {
+                    sum: art.sum,
+                    count: art.count,
+                    bounds: art.bounds,
+                }),
+                (Some(mode), Some(q)) if q.mode == mode => {
+                    EpochAcc::Quantized(QuantizedAccumulator {
+                        mode,
+                        level_sums: q.level_sums,
+                        count: art.count,
+                        bounds: art.bounds,
+                        dither_seed,
+                    })
+                }
+                _ => return Err(bad("epoch quantization disagrees with the store header")),
+            };
+            epochs.push_back(EpochSketch { id, start_row, acc });
+        }
+        let spec = spec.expect("at least one epoch parsed");
+        if last_id.expect("at least one epoch parsed") >= next_epoch_id {
+            return Err(bad("next_epoch_id must exceed every epoch id"));
+        }
+        let newest = epochs.back().expect("at least one epoch parsed");
+        if newest.start_row + newest.count() != rows_ingested {
+            return Err(bad("rows_ingested disagrees with the newest epoch"));
+        }
+        if let Some(cap) = capacity {
+            if epochs.len() > cap {
+                return Err(bad("more surviving epochs than the declared capacity"));
+            }
+        }
+        let op = spec.materialize()?; // checksum verified here, loudly
+        let dither_seed = quantize::dither_seed_for_shard(spec.seed, shard);
+        Ok(SketchStore {
+            spec,
+            op,
+            quantization,
+            shard,
+            dither_seed,
+            capacity,
+            epochs,
+            next_epoch_id,
+            rows_ingested,
+            generation: 0,
+        })
+    }
+
+    /// Write the store as pretty-printed versioned JSON.
+    pub fn to_file<P: AsRef<Path>>(&self, path: P) -> Result<(), ApiError> {
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    /// Load a checkpointed store (operator checksum verified at load time).
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<SketchStore, ApiError> {
+        let text = std::fs::read_to_string(path)?;
+        SketchStore::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::RadiusKind;
+    use crate::testing::gen;
+    use crate::util::rng::Rng;
+
+    fn spec(seed: u64, m: usize, n: usize) -> OpSpec {
+        OpSpec::derive(seed, RadiusKind::AdaptedRadius, 1.0, m, n).0
+    }
+
+    fn rows(rng: &mut Rng, n_rows: usize, n: usize) -> Vec<f64> {
+        gen::mat_normal(rng, n_rows, n)
+    }
+
+    #[test]
+    fn rotation_ids_and_eviction() {
+        let mut store = SketchStore::create(spec(1, 8, 2), None, 0, Some(3)).unwrap();
+        let mut rng = Rng::new(2);
+        assert_eq!(store.epoch_count(), 1);
+        assert_eq!(store.current_epoch_id(), 0);
+        for e in 0..5u64 {
+            store.ingest(&rows(&mut rng, 4, 2));
+            let evicted = store.rotate();
+            if e < 2 {
+                assert!(evicted.is_empty(), "epoch {e}");
+            } else {
+                assert_eq!(evicted, vec![e - 2], "epoch {e}");
+            }
+        }
+        assert_eq!(store.epoch_count(), 3);
+        assert_eq!(store.oldest_epoch_id(), 3);
+        assert_eq!(store.current_epoch_id(), 5);
+        assert_eq!(store.rows_ingested(), 20);
+        // newest epoch is empty, two sealed epochs of 4 rows survive
+        assert_eq!(store.surviving_rows(), 8);
+        let stats = store.epoch_stats();
+        assert_eq!(stats.len(), 3);
+        assert_eq!(stats[0], EpochStats { id: 3, start_row: 12, rows: 4 });
+        assert_eq!(stats[2], EpochStats { id: 5, start_row: 20, rows: 0 });
+    }
+
+    #[test]
+    fn window_clamps_and_rejects_zero() {
+        let mut store = SketchStore::create(spec(3, 8, 2), None, 0, None).unwrap();
+        let mut rng = Rng::new(4);
+        store.ingest(&rows(&mut rng, 3, 2));
+        store.rotate();
+        store.ingest(&rows(&mut rng, 5, 2));
+        assert!(matches!(
+            store.window(0),
+            Err(ApiError::InvalidConfig { field: "window", .. })
+        ));
+        assert_eq!(store.window(1).unwrap().count, 5);
+        assert_eq!(store.window(2).unwrap().count, 8);
+        // wider than the ring: clamps to everything surviving
+        assert_eq!(store.window(99).unwrap(), store.window_all());
+        assert_eq!(store.window_all().count, 8);
+    }
+
+    #[test]
+    fn decayed_validates_lambda() {
+        let store = SketchStore::create(spec(5, 8, 2), None, 0, None).unwrap();
+        for bad in [-0.1, 1.5, f64::NAN, f64::INFINITY] {
+            assert!(
+                matches!(
+                    store.decayed(bad),
+                    Err(ApiError::InvalidConfig { field: "decay", .. })
+                ),
+                "lambda={bad}"
+            );
+        }
+        assert!(store.decayed(0.5).is_ok());
+    }
+
+    #[test]
+    fn create_rejects_zero_capacity() {
+        assert!(matches!(
+            SketchStore::create(spec(6, 8, 2), None, 0, Some(0)),
+            Err(ApiError::InvalidConfig { field: "window", .. })
+        ));
+    }
+
+    #[test]
+    fn empty_store_snapshots_are_empty_artifacts() {
+        let store = SketchStore::create(spec(7, 8, 3), None, 0, None).unwrap();
+        let w = store.window_all();
+        assert_eq!(w.count, 0);
+        assert!(w.sum.re.iter().all(|&v| v == 0.0));
+        assert_eq!(store.decayed(0.5).unwrap().count, 0);
+    }
+
+    #[test]
+    fn json_roundtrip_dense_and_quantized() {
+        for mode in [None, Some(QuantizationMode::OneBit), Some(QuantizationMode::Bits(4))] {
+            let mut store = SketchStore::create(spec(8, 8, 3), mode, 2, Some(4)).unwrap();
+            let mut rng = Rng::new(9);
+            for _ in 0..3 {
+                store.ingest(&rows(&mut rng, 7, 3));
+                store.rotate();
+            }
+            store.ingest(&rows(&mut rng, 2, 3));
+            let back = SketchStore::from_json(&Json::parse(&store.to_json().to_pretty()).unwrap())
+                .unwrap();
+            assert_eq!(back.spec, store.spec);
+            assert_eq!(back.quantization, store.quantization);
+            assert_eq!(back.shard, store.shard);
+            assert_eq!(back.capacity, store.capacity);
+            assert_eq!(back.rows_ingested, store.rows_ingested);
+            assert_eq!(back.next_epoch_id, store.next_epoch_id);
+            assert_eq!(back.epochs, store.epochs);
+            assert_eq!(back.window_all(), store.window_all());
+        }
+    }
+
+    #[test]
+    fn resumed_quantized_ingest_is_bit_compatible() {
+        // Checkpoint mid-stream, resume from disk, keep ingesting: the
+        // resumed store must match an uninterrupted one bit for bit (the
+        // dither row counter survives the roundtrip).
+        let mut rng = Rng::new(11);
+        let all = rows(&mut rng, 30, 3);
+        let make = || {
+            SketchStore::create(spec(12, 8, 3), Some(QuantizationMode::OneBit), 1, None).unwrap()
+        };
+        let mut uninterrupted = make();
+        uninterrupted.ingest(&all[..12 * 3]);
+        uninterrupted.rotate();
+        uninterrupted.ingest(&all[12 * 3..]);
+
+        let mut first = make();
+        first.ingest(&all[..12 * 3]);
+        first.rotate();
+        let path = std::env::temp_dir().join(format!("ckm_store_{}.json", std::process::id()));
+        first.to_file(&path).unwrap();
+        let mut resumed = SketchStore::from_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        resumed.ingest(&all[12 * 3..]);
+
+        assert_eq!(resumed.window_all(), uninterrupted.window_all());
+        assert_eq!(resumed.epochs, uninterrupted.epochs);
+    }
+
+    #[test]
+    fn from_json_rejects_corruption() {
+        let mut store = SketchStore::create(spec(13, 8, 2), None, 0, None).unwrap();
+        let mut rng = Rng::new(14);
+        store.ingest(&rows(&mut rng, 4, 2));
+        let good = store.to_json();
+        // wrong format tag
+        let mut j = good.clone();
+        if let Json::Obj(o) = &mut j {
+            o.insert("format".to_string(), Json::Str("nope".into()));
+        }
+        assert!(SketchStore::from_json(&j).is_err());
+        // future version
+        let mut j = good.clone();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".to_string(), Json::Num(99.0));
+        }
+        assert!(matches!(
+            SketchStore::from_json(&j),
+            Err(ApiError::UnsupportedVersion { found: 99, .. })
+        ));
+        // rows_ingested out of step with the newest epoch
+        let mut j = good;
+        if let Json::Obj(o) = &mut j {
+            o.insert("rows_ingested".to_string(), Json::Num(17.0));
+        }
+        assert!(SketchStore::from_json(&j).is_err());
+    }
+}

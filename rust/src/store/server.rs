@@ -1,0 +1,343 @@
+//! The concurrent serving layer over a [`SketchStore`]: many producer
+//! threads, snapshot-solve consumers, and a generation-keyed solve cache.
+//!
+//! Producers obtain a per-thread [`IngestSession`] whose local
+//! [`Batcher`] coalesces arbitrary-sized pushes into full chunks, so the
+//! store mutex is taken once per chunk instead of once per push. Solves
+//! snapshot the requested window/decay artifact under the lock (cheap: a
+//! merge over ≤ ring-capacity epochs) and run CLOMPR *outside* it, so a
+//! long decode never stalls ingest. Repeated queries against an unchanged
+//! store are answered from a small solve cache keyed by
+//! `(query, K, store generation)` — any ingest or rotation bumps the
+//! generation and implicitly invalidates every cached solution.
+//!
+//! Concurrency semantics: rows belong to whichever epoch is current when
+//! their chunk reaches the store, and the sketch value is independent of
+//! producer interleaving up to floating-point addition order (dense) /
+//! dither assignment (quantized: rows are dithered by arrival index, so
+//! multi-producer ingest is statistically identical to single-producer
+//! ingest but only single-producer arrival orders replay bit-for-bit).
+
+use super::ring::SketchStore;
+use crate::api::{ApiError, Ckm, SketchArtifact};
+use crate::ckm::Solution;
+use crate::coordinator::batcher::Batcher;
+use std::sync::Mutex;
+
+/// How many `(query, K)` solutions the server keeps per store generation.
+const SOLVE_CACHE_CAP: usize = 16;
+
+/// A solve-cache key: the query shape plus `K`.
+#[derive(Clone, Debug, PartialEq)]
+enum SolveKey {
+    Window { last_e: usize, k: usize },
+    /// λ keyed by bit pattern (exact: the caller's f64 is the key).
+    Decayed { lambda_bits: u64, k: usize },
+}
+
+#[derive(Debug, Default)]
+struct SolveCache {
+    /// Store generation the entries were solved against.
+    generation: u64,
+    entries: Vec<(SolveKey, Solution)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl SolveCache {
+    /// Look up `key` against `generation`. The cache tracks the *newest*
+    /// generation it has seen: a newer snapshot clears the stale entries,
+    /// while a lagging solve (snapshot taken, then the store moved on
+    /// before the lookup) is a plain miss — it must not wipe fresh entries
+    /// or re-seat the cache at a generation the store will never revisit.
+    fn get(&mut self, generation: u64, key: &SolveKey) -> Option<Solution> {
+        if generation > self.generation {
+            self.entries.clear();
+            self.generation = generation;
+        } else if generation < self.generation {
+            self.misses += 1;
+            return None;
+        }
+        match self.entries.iter().find(|(k, _)| k == key) {
+            Some((_, sol)) => {
+                self.hits += 1;
+                Some(sol.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a solution solved against `generation` (dropped if the store
+    /// moved on while the solve ran — a stale answer must not be cached).
+    fn put(&mut self, generation: u64, key: SolveKey, sol: &Solution) {
+        if self.generation != generation {
+            return;
+        }
+        if self.entries.len() >= SOLVE_CACHE_CAP {
+            self.entries.remove(0);
+        }
+        self.entries.push((key, sol.clone()));
+    }
+}
+
+/// Aggregate server counters (see [`SketchServer::stats`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServerStats {
+    /// Surviving epochs in the ring.
+    pub epochs: usize,
+    /// Rows across surviving epochs.
+    pub surviving_rows: usize,
+    /// Store-lifetime rows (includes evicted epochs).
+    pub rows_ingested: usize,
+    /// Store mutation counter.
+    pub generation: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+}
+
+/// A concurrent windowed-sketch service: shared-reference ingest from any
+/// number of producer threads, cached snapshot solves for any consumer.
+///
+/// Construct via [`crate::api::Ckm::server`]; the facade's `.window(..)` /
+/// `.decay(..)` knobs set the ring capacity and the default decay used by
+/// [`SketchServer::solve`].
+#[derive(Debug)]
+pub struct SketchServer {
+    store: Mutex<SketchStore>,
+    solver: Ckm,
+    cache: Mutex<SolveCache>,
+    chunk_rows: usize,
+}
+
+impl SketchServer {
+    /// Wrap a store with a solving facade. `solver`'s sketcher chunk size
+    /// becomes the per-session batching granularity.
+    pub fn new(store: SketchStore, solver: Ckm) -> SketchServer {
+        let chunk_rows = solver.config().sketcher.chunk_rows.max(1);
+        SketchServer {
+            store: Mutex::new(store),
+            solver,
+            cache: Mutex::new(SolveCache::default()),
+            chunk_rows,
+        }
+    }
+
+    /// The solving facade this server answers queries with.
+    pub fn solver(&self) -> &Ckm {
+        &self.solver
+    }
+
+    // -- ingest side ------------------------------------------------------
+
+    /// Open a per-producer ingest session (local chunking; call
+    /// [`IngestSession::finish`] to flush the tail).
+    pub fn session(&self) -> IngestSession<'_> {
+        let n_dims = self.store.lock().unwrap().n_dims();
+        IngestSession { server: self, batcher: Batcher::new(n_dims, self.chunk_rows) }
+    }
+
+    /// Ingest rows directly (one store lock; prefer [`SketchServer::session`]
+    /// for high-frequency small pushes). Returns rows absorbed.
+    pub fn ingest(&self, rows: &[f64]) -> usize {
+        self.store.lock().unwrap().ingest(rows)
+    }
+
+    /// Seal the current epoch and open the next (see
+    /// [`SketchStore::rotate`]). Returns the evicted epoch ids.
+    pub fn rotate(&self) -> Vec<u64> {
+        self.store.lock().unwrap().rotate()
+    }
+
+    // -- query side -------------------------------------------------------
+
+    /// Snapshot the newest `last_e` epochs as one artifact.
+    pub fn window(&self, last_e: usize) -> Result<SketchArtifact, ApiError> {
+        self.store.lock().unwrap().window(last_e)
+    }
+
+    /// Snapshot every surviving epoch.
+    pub fn window_all(&self) -> SketchArtifact {
+        self.store.lock().unwrap().window_all()
+    }
+
+    /// Snapshot the exponentially-decayed sketch.
+    pub fn decayed(&self, lambda: f64) -> Result<SketchArtifact, ApiError> {
+        self.store.lock().unwrap().decayed(lambda)
+    }
+
+    /// Checkpoint the whole store to one file.
+    pub fn save<P: AsRef<std::path::Path>>(&self, path: P) -> Result<(), ApiError> {
+        self.store.lock().unwrap().to_file(path)
+    }
+
+    /// Solve `k` centroids over the newest `last_e` epochs (cached).
+    pub fn solve_window(&self, last_e: usize, k: usize) -> Result<Solution, ApiError> {
+        let (generation, artifact) = {
+            let store = self.store.lock().unwrap();
+            (store.generation(), store.window(last_e)?)
+        };
+        self.solve_cached(generation, SolveKey::Window { last_e, k }, &artifact, k)
+    }
+
+    /// Solve `k` centroids over the λ-decayed sketch (cached).
+    pub fn solve_decayed(&self, lambda: f64, k: usize) -> Result<Solution, ApiError> {
+        let (generation, artifact) = {
+            let store = self.store.lock().unwrap();
+            (store.generation(), store.decayed(lambda)?)
+        };
+        let key = SolveKey::Decayed { lambda_bits: lambda.to_bits(), k };
+        self.solve_cached(generation, key, &artifact, k)
+    }
+
+    /// Solve with the facade's defaults: the builder's `.decay(λ)` when
+    /// set, otherwise the plain merge of every surviving epoch.
+    pub fn solve(&self, k: usize) -> Result<Solution, ApiError> {
+        match self.solver.config().decay {
+            Some(lambda) => self.solve_decayed(lambda, k),
+            None => self.solve_window(usize::MAX, k),
+        }
+    }
+
+    fn solve_cached(
+        &self,
+        generation: u64,
+        key: SolveKey,
+        artifact: &SketchArtifact,
+        k: usize,
+    ) -> Result<Solution, ApiError> {
+        if let Some(sol) = self.cache.lock().unwrap().get(generation, &key) {
+            return Ok(sol);
+        }
+        // CLOMPR runs outside both locks: ingest keeps flowing.
+        let sol = self.solver.solve(artifact, k)?;
+        self.cache.lock().unwrap().put(generation, key, &sol);
+        Ok(sol)
+    }
+
+    /// Aggregate counters (store + cache).
+    pub fn stats(&self) -> ServerStats {
+        let store = self.store.lock().unwrap();
+        let cache = self.cache.lock().unwrap();
+        ServerStats {
+            epochs: store.epoch_count(),
+            surviving_rows: store.surviving_rows(),
+            rows_ingested: store.rows_ingested(),
+            generation: store.generation(),
+            cache_hits: cache.hits,
+            cache_misses: cache.misses,
+        }
+    }
+
+    /// Run `f` against the locked store (introspection escape hatch).
+    pub fn with_store<T>(&self, f: impl FnOnce(&SketchStore) -> T) -> T {
+        f(&self.store.lock().unwrap())
+    }
+}
+
+/// A per-producer ingest handle: pushes of any size are coalesced into
+/// full chunks by a local [`Batcher`], and each full chunk takes the store
+/// lock exactly once. Call [`IngestSession::finish`] to flush the partial
+/// tail — rows left in an unfinished session are dropped.
+pub struct IngestSession<'a> {
+    server: &'a SketchServer,
+    batcher: Batcher,
+}
+
+impl<'a> IngestSession<'a> {
+    /// Buffer rows, forwarding every completed chunk to the store.
+    pub fn push(&mut self, rows: &[f64]) {
+        for chunk in self.batcher.push(rows) {
+            self.server.ingest(&chunk);
+        }
+    }
+
+    /// Rows this session has already forwarded to the store.
+    pub fn forwarded_rows(&self) -> usize {
+        self.batcher.emitted_rows()
+    }
+
+    /// Flush the partial tail and return the total rows this session
+    /// forwarded.
+    pub fn finish(mut self) -> usize {
+        if let Some(tail) = self.batcher.flush() {
+            self.server.ingest(&tail);
+        }
+        self.batcher.emitted_rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::OpSpec;
+    use crate::sketch::RadiusKind;
+    use crate::testing::gen;
+    use crate::util::rng::Rng;
+
+    fn server(m: usize, n: usize) -> SketchServer {
+        let spec = OpSpec::derive(21, RadiusKind::AdaptedRadius, 1.0, m, n).0;
+        let store = SketchStore::create(spec, None, 0, None).unwrap();
+        let solver =
+            Ckm::builder().frequencies(m).sigma2(1.0).seed(21).chunk_rows(8).build().unwrap();
+        SketchServer::new(store, solver)
+    }
+
+    #[test]
+    fn sessions_chunk_and_flush() {
+        let srv = server(16, 3);
+        let mut rng = Rng::new(1);
+        let pts = gen::mat_normal(&mut rng, 21, 3);
+        let mut sess = srv.session();
+        sess.push(&pts[..5 * 3]);
+        sess.push(&pts[5 * 3..]);
+        assert_eq!(sess.forwarded_rows(), 16); // two full 8-row chunks
+        assert_eq!(sess.finish(), 21);
+        assert_eq!(srv.stats().rows_ingested, 21);
+        assert_eq!(srv.window_all().count, 21);
+    }
+
+    #[test]
+    fn solve_cache_hits_until_generation_moves() {
+        let srv = server(32, 2);
+        let mut rng = Rng::new(2);
+        srv.ingest(&gen::mat_normal(&mut rng, 300, 2));
+        let a = srv.solve_window(1, 2).unwrap();
+        let b = srv.solve_window(1, 2).unwrap();
+        assert_eq!(a.centroids.data, b.centroids.data);
+        assert_eq!(a.alpha, b.alpha);
+        let s = srv.stats();
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 1);
+        // a different K is a different key
+        srv.solve_window(1, 3).unwrap();
+        assert_eq!(srv.stats().cache_misses, 2);
+        // any mutation invalidates
+        srv.rotate();
+        srv.solve_window(1, 2).unwrap_err(); // newest epoch now empty
+        srv.ingest(&gen::mat_normal(&mut rng, 50, 2));
+        srv.solve_window(2, 2).unwrap();
+        let s = srv.stats();
+        assert_eq!(s.cache_hits, 1);
+        assert!(s.cache_misses >= 3);
+    }
+
+    #[test]
+    fn default_solve_uses_builder_decay() {
+        let spec = OpSpec::derive(22, RadiusKind::AdaptedRadius, 1.0, 32, 2).0;
+        let store = SketchStore::create(spec, None, 0, None).unwrap();
+        let solver =
+            Ckm::builder().frequencies(32).sigma2(1.0).seed(22).decay(0.5).build().unwrap();
+        let srv = SketchServer::new(store, solver);
+        let mut rng = Rng::new(3);
+        srv.ingest(&gen::mat_normal(&mut rng, 200, 2));
+        srv.rotate();
+        srv.ingest(&gen::mat_normal(&mut rng, 200, 2));
+        let by_default = srv.solve(2).unwrap();
+        let by_lambda = srv.solve_decayed(0.5, 2).unwrap();
+        assert_eq!(by_default.centroids.data, by_lambda.centroids.data);
+        assert_eq!(srv.stats().cache_hits, 1); // same key, same generation
+    }
+}

@@ -1,0 +1,305 @@
+//! Windowed sketch store: algebra properties and seeded end-to-end
+//! serving scenarios.
+//!
+//! - epoch replay through the store equals a single-pass sketch of the
+//!   same rows — bit-identical in quantized mode (integer merge + global
+//!   dither row keying), ≤ 1e-9 per component in dense mode (fp addition
+//!   order is the only difference);
+//! - `window(e)` equals a direct sketch of the surviving epochs' rows
+//!   (property-tested across random epoch splits and ring evictions);
+//! - `decayed(0.0)` / `decayed(1.0)` degenerate to the newest epoch /
+//!   the plain merge, and interior λ is the manually weighted ECF;
+//! - on a drifting GMM stream, a decayed solve recovers the *current*
+//!   planted centroids better than the undecayed all-time window;
+//! - concurrent producer sessions conserve rows and value, and repeated
+//!   snapshot solves hit the generation-keyed cache.
+
+use ckm::api::{Ckm, OpSpec, SketchArtifact};
+use ckm::ckm::Solution;
+use ckm::data::gmm::GmmConfig;
+use ckm::linalg::CVec;
+use ckm::metrics::mean_min_centroid_dist;
+use ckm::sketch::quantize::QuantizedAccumulator;
+use ckm::sketch::{QuantizationMode, RadiusKind, SketchAccumulator};
+use ckm::store::SketchStore;
+use ckm::testing::{self, gen, Config};
+use ckm::util::rng::Rng;
+
+/// Mean distance from each planted mean to its nearest recovered centroid.
+fn mean_recovery_error(means: &[Vec<f64>], sol: &Solution) -> f64 {
+    mean_min_centroid_dist(means, &sol.centroids)
+}
+
+#[test]
+fn epoch_replay_window_matches_single_pass_dense() {
+    let (k, n, m, epochs, per_epoch) = (3usize, 4usize, 256usize, 4usize, 2500usize);
+    let mut rng = Rng::new(2026);
+    let mut cfg = GmmConfig::paper_default(k, n, epochs * per_epoch);
+    cfg.separation = 3.0;
+    let g = cfg.generate(&mut rng);
+    let ckm = Ckm::builder().frequencies(m).sigma2(1.0).seed(9).build().unwrap();
+
+    let mut store = ckm.store(n).unwrap();
+    for e in 0..epochs {
+        if e > 0 {
+            store.rotate();
+        }
+        store.ingest(&g.dataset.points[e * per_epoch * n..(e + 1) * per_epoch * n]);
+    }
+    assert_eq!(store.epoch_count(), epochs);
+
+    let win = store.window_all();
+    let single = ckm.sketch_slice(&g.dataset.points, n).unwrap();
+    assert_eq!(win.op, single.op);
+    assert_eq!(win.count, single.count);
+    assert_eq!(win.bounds, single.bounds);
+    let diff = win.z().max_abs_diff(&single.z());
+    assert!(diff <= 1e-9, "window(all) vs single-pass sketch: max diff {diff:.3e}");
+
+    // The windowed artifact feeds the unchanged decoder and recovers the
+    // planted constellation.
+    let sol = ckm.solve(&win, k).unwrap();
+    assert!(sol.cost.is_finite());
+    let err = mean_recovery_error(&g.means, &sol);
+    assert!(err < 1.0, "window(all) solve strayed from planted means: {err}");
+}
+
+#[test]
+fn epoch_replay_window_matches_single_pass_quantized_bit_for_bit() {
+    let (k, n, m, epochs, per_epoch) = (3usize, 4usize, 192usize, 4usize, 2000usize);
+    let mut rng = Rng::new(41);
+    let mut cfg = GmmConfig::paper_default(k, n, epochs * per_epoch);
+    cfg.separation = 3.0;
+    let g = cfg.generate(&mut rng);
+    let ckm = Ckm::builder()
+        .frequencies(m)
+        .sigma2(1.0)
+        .seed(13)
+        .quantization(QuantizationMode::OneBit)
+        .build()
+        .unwrap();
+
+    let mut store = ckm.store(n).unwrap();
+    for e in 0..epochs {
+        if e > 0 {
+            store.rotate();
+        }
+        store.ingest(&g.dataset.points[e * per_epoch * n..(e + 1) * per_epoch * n]);
+    }
+
+    // Integer level sums + store-lifetime dither row keys: the epoch
+    // replay IS the single pass, bit for bit.
+    let win = store.window_all();
+    let single = ckm.sketch_slice(&g.dataset.points, n).unwrap();
+    assert_eq!(win, single);
+
+    // ... and therefore the solves are bit-identical too.
+    let sol_win = ckm.solve(&win, k).unwrap();
+    let sol_single = ckm.solve(&single, k).unwrap();
+    assert_eq!(sol_win.centroids.data, sol_single.centroids.data);
+    assert_eq!(sol_win.alpha, sol_single.alpha);
+    assert_eq!(sol_win.cost, sol_single.cost);
+}
+
+#[test]
+fn prop_window_equals_direct_sketch_of_surviving_rows() {
+    let cfg = Config::default().cases(12).max_size(30);
+    testing::check("store window algebra", cfg, |rng, size| {
+        let n = 1 + rng.below(3);
+        let m = 12usize;
+        let spec = OpSpec::derive(rng.next_u64(), RadiusKind::AdaptedRadius, 1.0, m, n).0;
+        let op = spec.materialize().map_err(|e| e.to_string())?;
+        let n_epochs = 2 + rng.below(3);
+        let capacity = 1 + rng.below(n_epochs); // may force evictions
+        let shard = rng.below(4) as u64;
+        let sizes: Vec<usize> = (0..n_epochs).map(|_| rng.below(3 + size)).collect();
+        let total: usize = sizes.iter().sum();
+        let pts = gen::mat_normal(rng, total, n);
+
+        for quant in [None, Some(QuantizationMode::OneBit)] {
+            let mut store =
+                SketchStore::create(spec.clone(), quant, shard, Some(capacity)).unwrap();
+            let mut offset = 0usize;
+            let mut slices: Vec<(usize, &[f64])> = Vec::new();
+            for (e, &sz) in sizes.iter().enumerate() {
+                if e > 0 {
+                    store.rotate();
+                }
+                let slice = &pts[offset * n..(offset + sz) * n];
+                store.ingest(slice);
+                slices.push((offset, slice));
+                offset += sz;
+            }
+            // Buckets beyond the ring capacity were dropped whole.
+            if store.epoch_count() != n_epochs.min(capacity) {
+                return Err("unexpected surviving epoch count".into());
+            }
+            let surviving = &slices[slices.len() - store.epoch_count()..];
+            for w in 1..=store.epoch_count() {
+                let win = store.window(w).map_err(|e| e.to_string())?;
+                let used = &surviving[surviving.len() - w..];
+                match quant {
+                    None => {
+                        let mut acc = SketchAccumulator::new(m, n);
+                        for (_, slice) in used {
+                            acc.update(&op, slice);
+                        }
+                        if win.count != acc.count {
+                            return Err(format!("count {} != {}", win.count, acc.count));
+                        }
+                        testing::all_close(&win.sum.re, &acc.sum.re, 1e-12)?;
+                        testing::all_close(&win.sum.im, &acc.sum.im, 1e-12)?;
+                        if win.bounds != acc.bounds {
+                            return Err("dense bounds mismatch".into());
+                        }
+                    }
+                    Some(mode) => {
+                        // Direct sketch of the surviving rows, dithered at
+                        // their ORIGINAL store-lifetime row indices.
+                        let mut acc =
+                            QuantizedAccumulator::new(m, n, mode, store.dither_seed());
+                        for (start, slice) in used {
+                            acc.update(&op, slice, *start);
+                        }
+                        let direct = SketchArtifact::from_quantized(spec.clone(), &acc);
+                        if win != direct {
+                            return Err(format!(
+                                "quantized window({w}) != direct sketch (bit-for-bit)"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn decayed_degenerates_and_interior_matches_manual_weighting() {
+    for quant in [None, Some(QuantizationMode::OneBit)] {
+        let spec = OpSpec::derive(77, RadiusKind::AdaptedRadius, 1.0, 16, 3).0;
+        let mut store = SketchStore::create(spec, quant, 0, None).unwrap();
+        let mut rng = Rng::new(78);
+        for (e, rows) in [20usize, 30, 10].into_iter().enumerate() {
+            if e > 0 {
+                store.rotate();
+            }
+            store.ingest(&gen::mat_normal(&mut rng, rows, 3));
+        }
+
+        // λ = 0: the newest epoch alone, exactly.
+        let d0 = store.decayed(0.0).unwrap();
+        assert_eq!(d0, store.window(1).unwrap());
+        assert_eq!(d0.count, 10);
+
+        // λ = 1: the plain merge of every surviving epoch, exactly
+        // (including the integer payload for a quantized store).
+        let d1 = store.decayed(1.0).unwrap();
+        assert_eq!(d1, store.window_all());
+        assert_eq!(d1.count, 60);
+
+        // Interior λ: z() is the manually λ-weighted empirical
+        // characteristic function over the per-epoch artifacts.
+        let lambda = 0.35f64;
+        let arts = store.epoch_artifacts();
+        let mut wsum = CVec::zeros(16);
+        let mut wcount = 0.0f64;
+        for (idx, art) in arts.iter().enumerate() {
+            let w = lambda.powi((arts.len() - 1 - idx) as i32);
+            wsum.axpy(w, &art.sum);
+            wcount += w * art.count as f64;
+        }
+        wsum.scale(1.0 / wcount);
+        let d = store.decayed(lambda).unwrap();
+        assert_eq!(d.count, 60);
+        assert!(d.quant.is_none(), "fractional weights leave the integer payload");
+        let z = d.z();
+        testing::all_close(&z.re, &wsum.re, 1e-12).unwrap();
+        testing::all_close(&z.im, &wsum.im, 1e-12).unwrap();
+    }
+}
+
+#[test]
+fn decayed_solve_tracks_drifting_centroids_better_than_window() {
+    // A drifting GMM stream: the whole constellation translates along the
+    // first coordinate every epoch. The all-time window mixes every
+    // historical position with equal weight; the decayed sketch
+    // concentrates on the present.
+    let (k, n, m, epochs, per_epoch) = (3usize, 4usize, 256usize, 4usize, 2500usize);
+    let mut rng = Rng::new(606);
+    let cfg = GmmConfig::paper_default(k, n, per_epoch);
+    let mut means = cfg.draw_means(&mut rng);
+    let drift = 6.0;
+    let ckm = Ckm::builder().frequencies(m).sigma2(1.0).seed(17).build().unwrap();
+    let mut store = ckm.store(n).unwrap();
+    for e in 0..epochs {
+        if e > 0 {
+            for mu in means.iter_mut() {
+                mu[0] += drift;
+            }
+            store.rotate();
+        }
+        let g = cfg.generate_with_means(&means, &mut rng);
+        store.ingest(&g.dataset.points);
+    }
+
+    // `means` is now the newest (current) constellation.
+    let sol_window = ckm.solve(&store.window_all(), k).unwrap();
+    let sol_decayed = ckm.solve(&store.decayed(0.15).unwrap(), k).unwrap();
+    let err_window = mean_recovery_error(&means, &sol_window);
+    let err_decayed = mean_recovery_error(&means, &sol_decayed);
+    assert!(
+        err_decayed < err_window,
+        "decayed {err_decayed:.3} must beat window {err_window:.3} on a drifting stream"
+    );
+    assert!(err_decayed < 2.0, "decayed solve strayed from current means: {err_decayed:.3}");
+}
+
+#[test]
+fn concurrent_producers_conserve_rows_and_value() {
+    let (n, m, producers, per) = (3usize, 64usize, 4usize, 1500usize);
+    let mut rng = Rng::new(33);
+    let g = GmmConfig::paper_default(3, n, producers * per).generate(&mut rng);
+    let pts = &g.dataset.points;
+    let ckm =
+        Ckm::builder().frequencies(m).sigma2(1.0).seed(3).chunk_rows(256).build().unwrap();
+    let server = ckm.server(n).unwrap();
+
+    std::thread::scope(|s| {
+        for p in 0..producers {
+            let server = &server;
+            let slice = &pts[p * per * n..(p + 1) * per * n];
+            s.spawn(move || {
+                let mut sess = server.session();
+                let mut off_rows = 0usize;
+                let mut step_rows = 23 + p * 7; // ragged, per-producer pushes
+                while off_rows < per {
+                    let take = step_rows.min(per - off_rows);
+                    sess.push(&slice[off_rows * n..(off_rows + take) * n]);
+                    off_rows += take;
+                    step_rows = step_rows % 61 + 9;
+                }
+                sess.finish();
+            });
+        }
+    });
+
+    let stats = server.stats();
+    assert_eq!(stats.rows_ingested, producers * per);
+    let win = server.window_all();
+    assert_eq!(win.count, producers * per);
+    // Interleaving changes fp addition order only: bounds are exact, the
+    // sketch agrees to addition-order tolerance with a single pass.
+    let reference = ckm.sketch_slice(pts, n).unwrap();
+    assert_eq!(win.bounds, reference.bounds);
+    let diff = win.z().max_abs_diff(&reference.z());
+    assert!(diff <= 1e-9, "concurrent ingest drifted: {diff:.3e}");
+
+    // Repeated snapshot solves are served from the generation-keyed cache.
+    let s1 = server.solve_window(1, 3).unwrap();
+    let s2 = server.solve_window(1, 3).unwrap();
+    assert_eq!(s1.centroids.data, s2.centroids.data);
+    let stats = server.stats();
+    assert!(stats.cache_hits >= 1, "second identical solve must hit: {stats:?}");
+}
