@@ -14,6 +14,7 @@ use ckm::engine::CkmEngine;
 use ckm::linalg::matrix::dist2;
 use ckm::linalg::Mat;
 use ckm::sketch::{kernels, FreqDist, SketchOp};
+use ckm::util::fastmath::{self, TrigBackend};
 use ckm::util::parallel;
 use ckm::util::rng::Rng;
 
@@ -82,7 +83,26 @@ fn main() {
     let op = SketchOp::new(FreqDist::adapted(1.0).draw(m, n_dims, &mut rng));
     let mut report = BenchReport::new();
 
-    // -- Sketching (the N-dependent hot path) -----------------------------
+    // -- The raw trig sweep: libm vs the vectorized kernel ----------------
+    // One 256-row θ tile at m=1000 — the exact shape the fused ingest
+    // sweeps per block.
+    let sweep_len = 256 * m;
+    let theta: Vec<f64> = (0..sweep_len).map(|_| rng.normal() * 8.0).collect();
+    let (mut sin_buf, mut cos_buf) = (vec![0.0; sweep_len], vec![0.0; sweep_len]);
+    let sw_size = format!("len={sweep_len}");
+    let sc_libm = measure("sincos_sweep/libm", warm, 3 * samp, || {
+        fastmath::sincos_sweep(TrigBackend::Exact, &theta, &mut sin_buf, &mut cos_buf);
+        std::hint::black_box((&sin_buf, &cos_buf));
+    });
+    report.add("sincos_sweep", "libm", &sw_size, &sc_libm);
+    let sc_fast = measure("sincos_sweep/fast", warm, 3 * samp, || {
+        fastmath::sincos_sweep(TrigBackend::Fast, &theta, &mut sin_buf, &mut cos_buf);
+        std::hint::black_box((&sin_buf, &cos_buf));
+    });
+    report.add("sincos_sweep", "fast", &sw_size, &sc_fast);
+    report.speedup("sincos_sweep", &sc_libm, &sc_fast);
+
+    // -- Sketching (the N-dependent hot path): exact vs fast trig ---------
     let sk_size = format!("N={n_points} n={n_dims} m={m}");
     let meas = measure("sketch_points/native", warm, samp, || {
         let z = op.sketch_points(pts, None);
@@ -90,6 +110,16 @@ fn main() {
     });
     println!("  -> {:.2} Mpts/s", throughput(&meas, n_points) / 1e6);
     report.add("sketch_points", "native", &sk_size, &meas);
+    let op_fast = SketchOp::with_trig(op.w.clone(), TrigBackend::Fast);
+    let meas_fast = measure("sketch_points/fast", warm, samp, || {
+        let z = op_fast.sketch_points(pts, None);
+        std::hint::black_box(z);
+    });
+    println!("  -> {:.2} Mpts/s (fast trig)", throughput(&meas_fast, n_points) / 1e6);
+    report.add("sketch_points", "fast", &sk_size, &meas_fast);
+    // The acceptance number: end-to-end sketch-ingest speedup, fast vs
+    // exact, at paper shape (n=10, m=1000).
+    report.speedup("sketch_ingest", &meas, &meas_fast);
 
     // PJRT sketch (compiled Pallas kernel), if artifacts exist.
     let dir = ckm::runtime::PjrtRuntime::default_dir();
@@ -196,11 +226,14 @@ fn main() {
     let store_rows = if quick { 4_096 } else { 32_768 };
     let block = &pts[..store_rows * n_dims];
     let st_size = format!("rows/iter={store_rows} n={n_dims} m={m}");
-    for (variant, mode) in
-        [("dense", None), ("1bit", Some(ckm::sketch::QuantizationMode::OneBit))]
-    {
+    for (variant, mode, trig) in [
+        ("dense", None, TrigBackend::Exact),
+        ("dense-fast", None, TrigBackend::Fast),
+        ("1bit", Some(ckm::sketch::QuantizationMode::OneBit), TrigBackend::Exact),
+        ("1bit-fast", Some(ckm::sketch::QuantizationMode::OneBit), TrigBackend::Fast),
+    ] {
         let mut builder =
-            ckm::api::Ckm::builder().frequencies(m).sigma2(1.0).seed(7).window(24);
+            ckm::api::Ckm::builder().frequencies(m).sigma2(1.0).seed(7).window(24).trig(trig);
         builder = match mode {
             Some(q) => builder.quantization(q),
             None => builder,
@@ -214,25 +247,28 @@ fn main() {
         println!("  -> {:.2} Mrows/s ingest ({variant})", throughput(&meas, store_rows) / 1e6);
         report.add("store_ingest", variant, &st_size, &meas);
 
-        // Snapshot latency over a full 24-epoch ring.
-        let mut ring = ckm_store.store(n_dims).unwrap();
-        for e in 0..24 {
-            if e > 0 {
-                ring.rotate();
+        // Snapshot latency over a full 24-epoch ring (no trig in the
+        // snapshot path — time it once per payload kind).
+        if trig == TrigBackend::Exact {
+            let mut ring = ckm_store.store(n_dims).unwrap();
+            for e in 0..24 {
+                if e > 0 {
+                    ring.rotate();
+                }
+                ring.ingest(&pts[(e * 512) * n_dims..(e * 512 + 512) * n_dims]);
             }
-            ring.ingest(&pts[(e * 512) * n_dims..(e * 512 + 512) * n_dims]);
+            let ss_size = format!("epochs=24 m={m}");
+            let meas = measure(&format!("store_snapshot_window/{variant}"), 10, 10 * samp, || {
+                let art = ring.window_all();
+                std::hint::black_box(art);
+            });
+            report.add("store_snapshot_window", variant, &ss_size, &meas);
+            let meas = measure(&format!("store_snapshot_decayed/{variant}"), 10, 10 * samp, || {
+                let art = ring.decayed(0.5).unwrap();
+                std::hint::black_box(art);
+            });
+            report.add("store_snapshot_decayed", variant, &ss_size, &meas);
         }
-        let ss_size = format!("epochs=24 m={m}");
-        let meas = measure(&format!("store_snapshot_window/{variant}"), 10, 10 * samp, || {
-            let art = ring.window_all();
-            std::hint::black_box(art);
-        });
-        report.add("store_snapshot_window", variant, &ss_size, &meas);
-        let meas = measure(&format!("store_snapshot_decayed/{variant}"), 10, 10 * samp, || {
-            let art = ring.decayed(0.5).unwrap();
-            std::hint::black_box(art);
-        });
-        report.add("store_snapshot_decayed", variant, &ss_size, &meas);
     }
 
     report.write(&out_path).expect("failed to write BENCH.json");

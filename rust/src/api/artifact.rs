@@ -26,13 +26,19 @@ use crate::data::dataset::Bounds;
 use crate::linalg::{CVec, Mat};
 use crate::sketch::quantize::{self, QuantizationMode, QuantizedAccumulator};
 use crate::sketch::{FreqDist, RadiusKind, SketchOp};
+use crate::util::fastmath::TrigBackend;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 use std::path::Path;
 
-/// Version of the artifact JSON schema this build writes. Every version
-/// from 1 up to this one loads.
-pub const SKETCH_FORMAT_VERSION: u32 = 2;
+/// Highest artifact JSON schema version this build reads and writes.
+/// Every version from 1 up to this one loads. Writers emit the *lowest*
+/// version that can carry the artifact (see
+/// [`SketchArtifact::format_version`]): dense/quantized exact artifacts
+/// stay v2 byte-identical, while fast-trig artifacts are stamped v3 so a
+/// pre-fast build fails with `UnsupportedVersion` instead of silently
+/// loading them as exact and defeating the trig provenance gate.
+pub const SKETCH_FORMAT_VERSION: u32 = 3;
 
 /// Salt mixed into the builder seed for the operator's dedicated RNG
 /// stream, so the frequency draw is independent of how many draws σ²
@@ -53,14 +59,20 @@ pub struct OpSpec {
     pub m: usize,
     /// Data dimension (columns of `W`).
     pub n_dims: usize,
+    /// Trig backend the sketch sums were computed with. `Exact` (the
+    /// default, and the only value v1/v2 files written before this field
+    /// existed can carry) is bit-reproducible libm; `Fast` is the
+    /// vectorized kernel. Part of provenance: artifacts sketched under
+    /// different backends refuse to merge or solve together.
+    pub trig: TrigBackend,
     /// `fnv1a:<16 hex digits>` over the shape and bit patterns of `W`.
     pub checksum: String,
 }
 
 impl OpSpec {
     /// Draw the operator for `(seed, radius, sigma2, m, n_dims)` and record
-    /// its provenance. Deterministic: the same inputs always produce the
-    /// same `W`, on any machine.
+    /// its provenance (trig backend `Exact`). Deterministic: the same
+    /// inputs always produce the same `W`, on any machine.
     pub fn derive(
         seed: u64,
         radius: RadiusKind,
@@ -68,15 +80,39 @@ impl OpSpec {
         m: usize,
         n_dims: usize,
     ) -> (OpSpec, SketchOp) {
+        OpSpec::derive_with_trig(seed, radius, sigma2, m, n_dims, TrigBackend::Exact)
+    }
+
+    /// [`OpSpec::derive`] with an explicit trig backend. The frequency
+    /// matrix (and therefore the checksum) is backend-independent; the
+    /// backend only selects which sin/cos implementation sweeps it.
+    pub fn derive_with_trig(
+        seed: u64,
+        radius: RadiusKind,
+        sigma2: f64,
+        m: usize,
+        n_dims: usize,
+        trig: TrigBackend,
+    ) -> (OpSpec, SketchOp) {
         let mut rng = Rng::new(seed ^ OP_SEED_SALT);
         let w = FreqDist::new(radius, sigma2).draw(m, n_dims, &mut rng);
         let checksum = w_checksum(&w);
-        (OpSpec { seed, radius, sigma2, m, n_dims, checksum }, SketchOp::new(w))
+        (
+            OpSpec { seed, radius, sigma2, m, n_dims, trig, checksum },
+            SketchOp::with_trig(w, trig),
+        )
     }
 
     /// Re-derive the operator from this provenance, verifying the checksum.
     pub fn materialize(&self) -> Result<SketchOp, ApiError> {
-        let (fresh, op) = OpSpec::derive(self.seed, self.radius, self.sigma2, self.m, self.n_dims);
+        let (fresh, op) = OpSpec::derive_with_trig(
+            self.seed,
+            self.radius,
+            self.sigma2,
+            self.m,
+            self.n_dims,
+            self.trig,
+        );
         if fresh.checksum != self.checksum {
             return Err(ApiError::ChecksumMismatch {
                 expected: self.checksum.clone(),
@@ -88,27 +124,38 @@ impl OpSpec {
 
     /// Compact human-readable description (used in mismatch errors).
     pub fn describe(&self) -> String {
+        let trig = match self.trig {
+            TrigBackend::Exact => String::new(),
+            TrigBackend::Fast => " trig=fast".to_string(),
+        };
         format!(
-            "[seed={} radius={} sigma2={} m={} n={} {}]",
+            "[seed={} radius={} sigma2={} m={} n={}{} {}]",
             self.seed,
             self.radius.name(),
             self.sigma2,
             self.m,
             self.n_dims,
+            trig,
             self.checksum
         )
     }
 
     fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             // u64 seeds don't fit exactly in a JSON double; store as text.
             ("seed", Json::Str(self.seed.to_string())),
             ("radius", Json::Str(self.radius.name().to_string())),
             ("sigma2", Json::Num(self.sigma2)),
             ("m", Json::Num(self.m as f64)),
             ("n_dims", Json::Num(self.n_dims as f64)),
-            ("checksum", Json::Str(self.checksum.clone())),
-        ])
+        ];
+        // Written only when Fast: `Exact` files keep the historical byte
+        // layout (the golden fixtures pin it), and absent ≡ Exact on load.
+        if self.trig == TrigBackend::Fast {
+            fields.push(("trig", Json::Str(self.trig.name().to_string())));
+        }
+        fields.push(("checksum", Json::Str(self.checksum.clone())));
+        Json::obj(fields)
     }
 
     fn from_json(j: &Json) -> Result<OpSpec, ApiError> {
@@ -128,13 +175,18 @@ impl OpSpec {
         if m == 0 || n_dims == 0 {
             return Err(bad("op.m and op.n_dims must be >= 1"));
         }
+        let trig = match j.get("trig") {
+            Json::Null => TrigBackend::Exact, // pre-trig files are Exact by construction
+            t => TrigBackend::parse(t.as_str().unwrap_or(""))
+                .map_err(|e| bad(&format!("op.trig: {e}")))?,
+        };
         let checksum = j
             .get("checksum")
             .as_str()
             .filter(|s| s.starts_with("fnv1a:"))
             .ok_or_else(|| bad("op.checksum missing or malformed"))?
             .to_string();
-        Ok(OpSpec { seed, radius, sigma2, m, n_dims, checksum })
+        Ok(OpSpec { seed, radius, sigma2, m, n_dims, trig, checksum })
     }
 }
 
@@ -200,10 +252,20 @@ impl SketchArtifact {
     /// commutative; for quantized artifacts the merge is *integer* — no
     /// floating-point order effects at all). Fails with
     /// [`ApiError::OperatorMismatch`] unless both artifacts were sketched
-    /// with the identical operator, and with
+    /// with the identical operator, with [`ApiError::TrigMismatch`] unless
+    /// both were swept by the same trig backend, and with
     /// [`ApiError::QuantizationMismatch`] unless both use the same
     /// quantization (or both are dense).
     pub fn merge(&self, other: &SketchArtifact) -> Result<SketchArtifact, ApiError> {
+        // Same W but different trig backends means the sums were computed
+        // by different kernels: reject with the dedicated variant before
+        // the general operator comparison.
+        if self.op.trig != other.op.trig {
+            return Err(ApiError::TrigMismatch {
+                left: self.op.trig.name().to_string(),
+                right: other.op.trig.name().to_string(),
+            });
+        }
         if self.op != other.op {
             return Err(ApiError::OperatorMismatch {
                 left: self.op.describe(),
@@ -274,6 +336,16 @@ impl SketchArtifact {
 
     // -- serialization ----------------------------------------------------
 
+    /// The schema version this artifact serializes as: the lowest version
+    /// able to carry it, so exact artifacts keep their historical bytes
+    /// and only fast-trig provenance forces the v3 stamp.
+    pub fn format_version(&self) -> u32 {
+        match self.op.trig {
+            TrigBackend::Fast => 3,
+            TrigBackend::Exact => 2,
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let (lo, hi) = if self.bounds.is_valid() {
             (self.bounds.lo.as_slice(), self.bounds.hi.as_slice())
@@ -283,7 +355,7 @@ impl SketchArtifact {
         };
         let mut fields = vec![
             ("format", Json::Str("ckm-sketch".to_string())),
-            ("version", Json::Num(SKETCH_FORMAT_VERSION as f64)),
+            ("version", Json::Num(self.format_version() as f64)),
             ("op", self.op.to_json()),
             ("count", Json::Num(self.count as f64)),
             ("bounds_lo", Json::arr_f64(lo)),
@@ -322,6 +394,12 @@ impl SketchArtifact {
             });
         }
         let op = OpSpec::from_json(j.get("op"))?;
+        if op.trig == TrigBackend::Fast && version < 3 {
+            // A conforming writer stamps fast artifacts v3 precisely so
+            // pre-fast builds reject them; a v1/v2 file claiming fast trig
+            // was hand-edited or written by a broken producer.
+            return Err(bad("fast trig provenance requires format version >= 3"));
+        }
         let count = j.get("count").as_usize().ok_or_else(|| bad("count missing"))?;
         let quant_j = j.get("quant");
         let (sum, quant) = if matches!(quant_j, Json::Null) {
@@ -692,6 +770,87 @@ mod tests {
             }
         }
         assert!(SketchArtifact::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn trig_backend_travels_in_provenance() {
+        let (spec, op) =
+            OpSpec::derive_with_trig(19, RadiusKind::AdaptedRadius, 1.0, 16, 3, TrigBackend::Fast);
+        assert_eq!(spec.trig, TrigBackend::Fast);
+        assert_eq!(op.trig(), TrigBackend::Fast);
+        // The checksum is backend-independent (same W); materialize carries
+        // the backend onto the rebuilt operator.
+        let (exact_spec, _) = OpSpec::derive(19, RadiusKind::AdaptedRadius, 1.0, 16, 3);
+        assert_eq!(spec.checksum, exact_spec.checksum);
+        assert_eq!(spec.materialize().unwrap().trig(), TrigBackend::Fast);
+        assert!(spec.describe().contains("trig=fast"));
+        // A fast-trig artifact round-trips through JSON with the field...
+        let mut rng = Rng::new(20);
+        let pts = gen::mat_normal(&mut rng, 12, 3);
+        let mut acc = SketchAccumulator::new(16, 3);
+        acc.update(&op, &pts);
+        let art = SketchArtifact {
+            op: spec.clone(),
+            sum: acc.sum,
+            count: acc.count,
+            bounds: acc.bounds,
+            quant: None,
+        };
+        let text = art.to_json().to_pretty();
+        assert!(text.contains("\"trig\""));
+        // fast artifacts are stamped v3 so pre-fast builds reject them
+        // (UnsupportedVersion) instead of silently loading them as exact
+        assert_eq!(art.format_version(), 3);
+        assert!(text.contains("\"version\": 3"));
+        let back = SketchArtifact::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, art);
+        // a v2 file claiming fast trig is malformed by construction
+        let mut j = art.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("version".to_string(), Json::Num(2.0));
+        }
+        assert!(matches!(SketchArtifact::from_json(&j), Err(ApiError::Format(_))));
+        // ... while exact artifacts keep the historical v2 byte layout (no
+        // trig field — absent ≡ Exact, so pre-trig files still load).
+        let exact_art = toy_artifact(19, 5);
+        assert_eq!(exact_art.op.trig, TrigBackend::Exact);
+        assert_eq!(exact_art.format_version(), 2);
+        let exact_text = exact_art.to_json().to_pretty();
+        assert!(!exact_text.contains("\"trig\""));
+        assert!(exact_text.contains("\"version\": 2"));
+    }
+
+    #[test]
+    fn mismatched_trig_provenance_is_a_typed_rejection() {
+        // Same seed (identical W), different backend → TrigMismatch.
+        let make = |trig| {
+            let (spec, op) =
+                OpSpec::derive_with_trig(23, RadiusKind::AdaptedRadius, 1.0, 16, 3, trig);
+            let mut rng = Rng::new(24);
+            let pts = gen::mat_normal(&mut rng, 10, 3);
+            let mut acc = SketchAccumulator::new(16, 3);
+            acc.update(&op, &pts);
+            SketchArtifact {
+                op: spec,
+                sum: acc.sum,
+                count: acc.count,
+                bounds: acc.bounds,
+                quant: None,
+            }
+        };
+        let exact = make(TrigBackend::Exact);
+        let fast = make(TrigBackend::Fast);
+        match exact.merge(&fast) {
+            Err(ApiError::TrigMismatch { left, right }) => {
+                assert_eq!(left, "exact");
+                assert_eq!(right, "fast");
+            }
+            other => panic!("expected TrigMismatch, got {other:?}"),
+        }
+        assert!(matches!(fast.merge(&exact), Err(ApiError::TrigMismatch { .. })));
+        // Matching fast backends merge fine.
+        let fast2 = make(TrigBackend::Fast);
+        assert_eq!(fast.merge(&fast2).unwrap().count, 20);
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::engine::{
 use crate::sketch::quantize::{self, QuantizationMode};
 use crate::sketch::scale::ScaleEstimator;
 use crate::sketch::RadiusKind;
+use crate::util::fastmath::TrigBackend;
 use crate::util::rng::Rng;
 use std::path::PathBuf;
 
@@ -42,6 +43,11 @@ pub struct CkmConfig {
     pub sigma2: Option<f64>,
     /// Radial law of the frequency distribution.
     pub radius: RadiusKind,
+    /// Trig backend for every ECF sweep (sketch ingest, atom blocks,
+    /// gradients): `Exact` = libm, bit-identical to historical output;
+    /// `Fast` = the vectorized kernel (`util::fastmath`, ≤ 2 ULP).
+    /// Recorded in artifact provenance; native backend only.
+    pub trig: TrigBackend,
     /// Compute backend for sketching and solving.
     pub backend: Backend,
     /// Artifacts dir for the PJRT backend (`None` = default).
@@ -86,6 +92,7 @@ impl Default for CkmConfig {
             m: 1000,
             sigma2: None,
             radius: RadiusKind::AdaptedRadius,
+            trig: TrigBackend::Exact,
             backend: Backend::Native,
             artifacts_dir: None,
             sketcher: SketcherConfig::default(),
@@ -132,6 +139,16 @@ impl CkmBuilder {
     /// Radial law of the frequency distribution (default: adapted radius).
     pub fn radius(mut self, radius: RadiusKind) -> Self {
         self.cfg.radius = radius;
+        self
+    }
+
+    /// Trig backend for the ECF hot loops (default: `Exact`). `Fast`
+    /// switches sketch ingest and the solver's atom sweeps to the
+    /// vectorized sincos kernel (≤ 2 ULP vs libm, ~SIMD-width faster);
+    /// the backend is recorded in artifact provenance, so fast and exact
+    /// artifacts will not silently merge or solve together.
+    pub fn trig(mut self, trig: TrigBackend) -> Self {
+        self.cfg.trig = trig;
         self
     }
 
@@ -285,6 +302,14 @@ impl CkmBuilder {
                 ));
             }
         }
+        if cfg.trig == TrigBackend::Fast && matches!(cfg.backend, Backend::Pjrt) {
+            return Err(invalid(
+                "trig",
+                "the fast trig kernel is native-only (the PJRT path compiles its own trig); \
+                 use Backend::Native"
+                    .into(),
+            ));
+        }
         if cfg.window_epochs == Some(0) {
             return Err(invalid("window", "need a window of at least one epoch".into()));
         }
@@ -418,8 +443,14 @@ impl Ckm {
                 // dither stream derives from the provenance seed and the
                 // shard id, so the artifact is re-derivable from
                 // (data, provenance, shard) alone.
-                let (spec, op) =
-                    OpSpec::derive(self.cfg.seed, self.cfg.radius, sigma2, self.cfg.m, n_dims);
+                let (spec, op) = OpSpec::derive_with_trig(
+                    self.cfg.seed,
+                    self.cfg.radius,
+                    sigma2,
+                    self.cfg.m,
+                    n_dims,
+                    self.cfg.trig,
+                );
                 let (acc, stats) = distributed_sketch_quantized(
                     &op,
                     source,
@@ -454,8 +485,14 @@ impl Ckm {
             });
         }
         let sigma2 = self.cfg.sigma2.ok_or(ApiError::Sigma2Required)?;
-        let (spec, _op) =
-            OpSpec::derive(self.cfg.seed, self.cfg.radius, sigma2, self.cfg.m, n_dims);
+        let (spec, _op) = OpSpec::derive_with_trig(
+            self.cfg.seed,
+            self.cfg.radius,
+            sigma2,
+            self.cfg.m,
+            n_dims,
+            self.cfg.trig,
+        );
         crate::store::SketchStore::create(
             spec,
             self.cfg.quantization,
@@ -508,6 +545,15 @@ impl Ckm {
         }
         if artifact.count == 0 {
             return Err(ApiError::EmptySketch);
+        }
+        // An artifact carries its trig provenance; solving it under a
+        // differently-configured facade would mix kernels (and make the
+        // solve irreproducible from the artifact alone) — typed rejection.
+        if artifact.op.trig != self.cfg.trig {
+            return Err(ApiError::TrigMismatch {
+                left: format!("artifact sketched with trig={}", artifact.op.trig.name()),
+                right: format!("solver configured with trig={}", self.cfg.trig.name()),
+            });
         }
         if self.cfg.strategy.needs_data() && data.is_none() {
             return Err(ApiError::InvalidConfig {
@@ -580,8 +626,14 @@ impl Ckm {
     ) -> Result<(Box<dyn EngineFactory>, OpSpec), ApiError> {
         match self.cfg.backend {
             Backend::Native => {
-                let (spec, op) =
-                    OpSpec::derive(self.cfg.seed, self.cfg.radius, sigma2, self.cfg.m, n_dims);
+                let (spec, op) = OpSpec::derive_with_trig(
+                    self.cfg.seed,
+                    self.cfg.radius,
+                    sigma2,
+                    self.cfg.m,
+                    n_dims,
+                    self.cfg.trig,
+                );
                 Ok((Box::new(NativeFactory { op }), spec))
             }
             Backend::Pjrt => {
@@ -719,6 +771,42 @@ mod tests {
             Err(ApiError::InvalidConfig { field: "quantization", .. }) => {}
             other => panic!("expected InvalidConfig(quantization), got {other:?}"),
         }
+    }
+
+    #[test]
+    fn trig_knob_validated_and_recorded_in_provenance() {
+        // fast + PJRT is a typed rejection (the compiled kernel does its
+        // own trig; the knob would be silently ignored)
+        match Ckm::builder().trig(TrigBackend::Fast).backend(Backend::Pjrt).build() {
+            Err(ApiError::InvalidConfig { field: "trig", .. }) => {}
+            other => panic!("expected InvalidConfig(trig), got {other:?}"),
+        }
+        let mut rng = Rng::new(50);
+        let mut cfg = GmmConfig::paper_default(3, 4, 3000);
+        cfg.separation = 3.0;
+        let g = cfg.generate(&mut rng);
+        let exact = Ckm::builder().frequencies(128).sigma2(1.0).seed(6).build().unwrap();
+        let fast = Ckm::builder()
+            .frequencies(128)
+            .sigma2(1.0)
+            .seed(6)
+            .trig(TrigBackend::Fast)
+            .build()
+            .unwrap();
+        assert_eq!(exact.config().trig, TrigBackend::Exact);
+        let art_e = exact.sketch_slice(&g.dataset.points, 4).unwrap();
+        let art_f = fast.sketch_slice(&g.dataset.points, 4).unwrap();
+        assert_eq!(art_e.op.trig, TrigBackend::Exact);
+        assert_eq!(art_f.op.trig, TrigBackend::Fast);
+        assert_eq!(art_e.op.checksum, art_f.op.checksum); // same W either way
+        // mismatched merges and solves are typed rejections, both ways
+        assert!(matches!(art_e.merge(&art_f), Err(ApiError::TrigMismatch { .. })));
+        assert!(matches!(exact.solve(&art_f, 3), Err(ApiError::TrigMismatch { .. })));
+        assert!(matches!(fast.solve(&art_e, 3), Err(ApiError::TrigMismatch { .. })));
+        // a matched fast solve decodes fine
+        let sol = fast.solve(&art_f, 3).unwrap();
+        assert_eq!(sol.centroids.rows, 3);
+        assert!(sol.cost.is_finite());
     }
 
     #[test]

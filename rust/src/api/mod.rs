@@ -71,6 +71,7 @@ pub mod solution;
 pub use artifact::{OpSpec, QuantSpec, SketchArtifact, SKETCH_FORMAT_VERSION};
 pub use builder::{Ckm, CkmBuilder, CkmConfig, SolveReport};
 pub use crate::sketch::QuantizationMode;
+pub use crate::util::fastmath::TrigBackend;
 pub use solution::SOLUTION_FORMAT_VERSION;
 
 /// Typed errors for the facade: configuration problems are reported at
@@ -105,6 +106,14 @@ pub enum ApiError {
     /// different bit depths) and cannot be merged.
     #[error("quantization mismatch: {left} vs {right}")]
     QuantizationMismatch { left: String, right: String },
+
+    /// The artifacts (or the artifact and the solver configuration) were
+    /// produced under different trig backends: `Exact` sketches are bit-
+    /// reproducible libm sums while `Fast` sketches carry the vectorized
+    /// kernel's (≤ 2 ULP) values, so mixing them would silently break the
+    /// exact-merge and re-derivability guarantees.
+    #[error("trig backend mismatch: {left} vs {right}")]
+    TrigMismatch { left: String, right: String },
 
     /// The file was written by an unsupported (newer) format.
     #[error("unsupported artifact format version {found} (this build reads versions 1 through {supported})")]

@@ -6,6 +6,13 @@
 //! `BENCH.json` (op name, variant, size, ns/iter, threads) so the perf
 //! trajectory of the hot paths is tracked across PRs — see
 //! `rust/README.md` § "Reading BENCH.json".
+//!
+//! [`diff_reports`] compares two `BENCH.json` files (committed baseline vs
+//! a fresh run) and flags `ns_per_iter` regressions beyond a threshold —
+//! the comparator behind `ckm bench diff`, wired into the CI bench-smoke
+//! job. Baseline records with no timing yet (`ns_per_iter ≤ 0` or
+//! `samples = 0` — the committed bootstrap state before the first CI run
+//! seeds real numbers) are informational only and never gate.
 
 use crate::util::json::Json;
 use crate::util::logging::{fmt_duration, Stopwatch};
@@ -115,7 +122,7 @@ impl BenchReport {
     /// Derive `before.median / after.median` for `op` and print it.
     pub fn speedup(&mut self, op: &str, before: &Measurement, after: &Measurement) {
         let s = before.median() / after.median().max(1e-12);
-        println!("  -> {op}: {s:.2}x speedup (scalar vs batched)");
+        println!("  -> {op}: {s:.2}x speedup (baseline vs optimized)");
         self.speedups.insert(op.to_string(), s);
     }
 
@@ -150,6 +157,121 @@ impl BenchReport {
     }
 }
 
+/// One `(op, variant, size)` comparison between two `BENCH.json` reports.
+#[derive(Clone, Debug)]
+pub struct BenchDelta {
+    pub op: String,
+    pub variant: String,
+    /// The shape label — part of the comparison key, so a baseline timed
+    /// at one problem size is never compared against a candidate timed at
+    /// another (quick vs full mode would otherwise disarm or false-fire
+    /// the regression gate).
+    pub size: String,
+    pub baseline_ns: f64,
+    pub candidate_ns: f64,
+    /// `candidate / baseline` — > 1 is slower.
+    pub ratio: f64,
+}
+
+impl BenchDelta {
+    pub fn describe(&self) -> String {
+        format!(
+            "{}/{} [{}]: {:.0} ns -> {:.0} ns ({:.2}x)",
+            self.op, self.variant, self.size, self.baseline_ns, self.candidate_ns, self.ratio
+        )
+    }
+}
+
+/// Result of comparing a candidate `BENCH.json` against a baseline.
+#[derive(Clone, Debug, Default)]
+pub struct BenchDiff {
+    /// Tracked ops slower than `threshold ×` baseline — the CI gate.
+    pub regressions: Vec<BenchDelta>,
+    /// Tracked ops faster than `baseline / threshold` (informational).
+    pub improvements: Vec<BenchDelta>,
+    /// Ops compared and within the threshold band.
+    pub steady: Vec<BenchDelta>,
+    /// Baseline records skipped: bootstrap (no timing yet) or absent from
+    /// the candidate run.
+    pub skipped: usize,
+    /// Candidate records with no baseline counterpart (new ops).
+    pub new_ops: Vec<String>,
+}
+
+impl BenchDiff {
+    pub fn compared(&self) -> usize {
+        self.regressions.len() + self.improvements.len() + self.steady.len()
+    }
+}
+
+type RecordKey = (String, String, String);
+
+fn record_map(report: &Json) -> Result<BTreeMap<RecordKey, f64>, String> {
+    let records = report
+        .get("records")
+        .as_arr()
+        .ok_or_else(|| "BENCH.json: missing 'records' array".to_string())?;
+    let mut map = BTreeMap::new();
+    for r in records {
+        let op = r.get("op").as_str().ok_or("record missing 'op'")?.to_string();
+        let variant = r.get("variant").as_str().ok_or("record missing 'variant'")?.to_string();
+        let size = r.get("size").as_str().unwrap_or("").to_string();
+        let ns = r.get("ns_per_iter").as_f64().ok_or("record missing 'ns_per_iter'")?;
+        let samples = r.get("samples").as_usize().unwrap_or(0);
+        // bootstrap / unmeasured records carry ns <= 0 or no samples
+        let ns = if samples == 0 { 0.0 } else { ns };
+        map.insert((op, variant, size), ns);
+    }
+    Ok(map)
+}
+
+/// Compare `candidate` against `baseline` (both parsed `BENCH.json`).
+/// Records are matched on `(op, variant, size)` — a baseline timed at one
+/// problem size never compares against a candidate timed at another (the
+/// quick-mode vs full-mode shapes differ by ~5–8×, which would otherwise
+/// silently disarm the gate or false-fire it). A tracked op regresses
+/// when `candidate_ns > threshold * baseline_ns`; baseline entries
+/// without a real timing (bootstrap) never gate.
+pub fn diff_reports(baseline: &Json, candidate: &Json, threshold: f64) -> Result<BenchDiff, String> {
+    if !(threshold.is_finite() && threshold >= 1.0) {
+        return Err(format!("threshold must be >= 1.0, got {threshold}"));
+    }
+    let base = record_map(baseline)?;
+    let cand = record_map(candidate)?;
+    let mut diff = BenchDiff::default();
+    for ((op, variant, size), &base_ns) in &base {
+        let key = (op.clone(), variant.clone(), size.clone());
+        match cand.get(&key) {
+            Some(&cand_ns) if base_ns > 0.0 && cand_ns > 0.0 => {
+                let delta = BenchDelta {
+                    op: op.clone(),
+                    variant: variant.clone(),
+                    size: size.clone(),
+                    baseline_ns: base_ns,
+                    candidate_ns: cand_ns,
+                    ratio: cand_ns / base_ns,
+                };
+                if delta.ratio > threshold {
+                    diff.regressions.push(delta);
+                } else if delta.ratio < 1.0 / threshold {
+                    diff.improvements.push(delta);
+                } else {
+                    diff.steady.push(delta);
+                }
+            }
+            _ => diff.skipped += 1,
+        }
+    }
+    for (op, variant, size) in cand.keys() {
+        if !base.contains_key(&(op.clone(), variant.clone(), size.clone())) {
+            diff.new_ops.push(format!("{op}/{variant} [{size}]"));
+        }
+    }
+    diff.regressions.sort_by(|a, b| b.ratio.total_cmp(&a.ratio));
+    diff.improvements.sort_by(|a, b| a.ratio.total_cmp(&b.ratio));
+    Ok(diff)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +290,74 @@ mod tests {
         assert_eq!(count, 5);
         assert_eq!(m.samples.len(), 3);
         assert!(throughput(&m, 10) > 0.0);
+    }
+
+    #[test]
+    fn diff_flags_regressions_and_skips_bootstrap() {
+        let mk = |entries: &[(&str, &str, f64, usize)]| {
+            let mut rep = BenchReport::new();
+            for (op, variant, ns, samples) in entries {
+                rep.records.push(BenchRecord {
+                    op: op.to_string(),
+                    variant: variant.to_string(),
+                    size: "s".into(),
+                    ns_per_iter: *ns,
+                    mad_ns: 0.0,
+                    samples: *samples,
+                });
+            }
+            rep.to_json()
+        };
+        let base = mk(&[
+            ("a", "x", 100.0, 3),
+            ("b", "x", 100.0, 3),
+            ("boot", "x", 0.0, 0), // committed bootstrap: never gates
+            ("gone", "x", 50.0, 3),
+        ]);
+        let cand =
+            mk(&[("a", "x", 200.0, 3), ("b", "x", 40.0, 3), ("boot", "x", 70.0, 3), ("fresh", "x", 10.0, 3)]);
+        let diff = diff_reports(&base, &cand, 1.5).unwrap();
+        assert_eq!(diff.regressions.len(), 1);
+        assert_eq!(diff.regressions[0].op, "a");
+        assert!((diff.regressions[0].ratio - 2.0).abs() < 1e-12);
+        assert!(diff.regressions[0].describe().contains("2.00x"));
+        assert_eq!(diff.improvements.len(), 1);
+        assert_eq!(diff.improvements[0].op, "b");
+        assert_eq!(diff.skipped, 2); // bootstrap + missing-from-candidate
+        assert_eq!(diff.new_ops, vec!["fresh/x [s]".to_string()]);
+        assert_eq!(diff.compared(), 2);
+        assert!(diff_reports(&base, &cand, 0.5).is_err());
+
+        // size is part of the key: a record re-timed at a different shape
+        // is never compared (quick vs full mode must not disarm the gate)
+        let resized = {
+            let mut rep = BenchReport::new();
+            rep.records.push(BenchRecord {
+                op: "a".to_string(),
+                variant: "x".to_string(),
+                size: "other-shape".into(),
+                ns_per_iter: 10.0, // would read as a huge 'improvement'
+                mad_ns: 0.0,
+                samples: 3,
+            });
+            rep.to_json()
+        };
+        let d2 = diff_reports(&base, &resized, 1.5).unwrap();
+        assert_eq!(d2.compared(), 0);
+        assert_eq!(d2.skipped, 4);
+        assert_eq!(d2.new_ops, vec!["a/x [other-shape]".to_string()]);
+
+        // everything within the band → steady, nothing gates
+        let steady_cand = mk(&[
+            ("a", "x", 120.0, 3),
+            ("b", "x", 100.0, 3),
+            ("gone", "x", 50.0, 3),
+            ("boot", "x", 1.0, 3),
+        ]);
+        let ok = diff_reports(&base, &steady_cand, 1.5).unwrap();
+        assert!(ok.regressions.is_empty());
+        assert_eq!(ok.steady.len(), 3);
+        assert_eq!(ok.skipped, 1);
     }
 
     #[test]

@@ -82,9 +82,9 @@ pub fn distributed_sketch(
                         let chunk = { rx.lock().unwrap().recv() };
                         let Ok(chunk) = chunk else { break };
                         let chunk_rows = chunk.len() / n_dims;
-                        // Unnormalized update: rows * uniform block sketch.
-                        let z = engine.sketch_points(&chunk, None);
-                        acc.sum.axpy(chunk_rows as f64, &z);
+                        // Raw unnormalized sums straight from the engine.
+                        let z = engine.sketch_points_sum(&chunk);
+                        acc.sum.axpy(1.0, &z);
                         for r in 0..chunk_rows {
                             acc.bounds.update(&chunk[r * n_dims..(r + 1) * n_dims]);
                         }

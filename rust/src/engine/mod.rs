@@ -70,6 +70,18 @@ pub trait CkmEngine {
     /// otherwise). The N-dependent hot path.
     fn sketch_points(&self, points: &[f64], weights: Option<&[f64]>) -> CVec;
 
+    /// The *unnormalized* sketch sum `Σ_l e^{-i ω^T x_l}` of an unweighted
+    /// block — the raw quantum streaming accumulators merge. The default
+    /// rescales `sketch_points` (exactly: `N · (sum/N)` element-wise);
+    /// native engines override with a true raw-sum pass that skips the
+    /// normalization round trip entirely.
+    fn sketch_points_sum(&self, points: &[f64]) -> CVec {
+        let n_points = points.len() / self.n_dims().max(1);
+        let mut z = self.sketch_points(points, None);
+        z.scale(n_points as f64);
+        z
+    }
+
     /// CLOMPR step 1: maximize `Re⟨Aδ_c/‖·‖, r⟩` over the box from `c0`.
     fn step1_optimize(&self, c0: &[f64], r: &CVec, bounds: &Bounds) -> Vec<f64>;
 

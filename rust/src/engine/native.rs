@@ -103,6 +103,10 @@ impl CkmEngine for NativeEngine {
         self.op.sketch_points(points, weights)
     }
 
+    fn sketch_points_sum(&self, points: &[f64]) -> CVec {
+        self.op.sketch_points_sum(points, None)
+    }
+
     fn step1_optimize(&self, c0: &[f64], r: &CVec, bounds: &Bounds) -> Vec<f64> {
         step1_optimize_impl(&self.op, c0, r, bounds, &self.step1)
     }
@@ -166,6 +170,10 @@ impl CkmEngine for ScalarEngine {
 
     fn sketch_points(&self, points: &[f64], weights: Option<&[f64]>) -> CVec {
         self.op.sketch_points(points, weights)
+    }
+
+    fn sketch_points_sum(&self, points: &[f64]) -> CVec {
+        self.op.sketch_points_sum(points, None)
     }
 
     fn step1_optimize(&self, c0: &[f64], r: &CVec, bounds: &Bounds) -> Vec<f64> {

@@ -91,8 +91,18 @@
 //! - [`engine::PjrtEngine`] — compiled sketch/optimizer artifacts, atom
 //!   algebra delegated to the native kernels in f64.
 //!
+//! The trig inside every ECF sweep is swappable via
+//! [`util::fastmath::TrigBackend`]: `Exact` (default) is libm,
+//! bit-identical to historical output; `Fast` is a lane-oriented
+//! vectorized sincos (Cody–Waite + minimax, ≤ 2 ULP, elementwise pure so
+//! quantized re-derivability survives) selected with
+//! `Ckm::builder().trig(..)` / `--trig fast` and recorded in artifact
+//! provenance.
+//!
 //! `cargo bench --bench microbench` times scalar vs batched on every hot
-//! path and writes machine-readable `BENCH.json` (see `rust/README.md`).
+//! path and writes machine-readable `BENCH.json` (see `rust/README.md`);
+//! `ckm bench diff` gates CI on `ns_per_iter` regressions against the
+//! committed baseline.
 //!
 //! ## Lower layers, still public
 //!
@@ -136,6 +146,7 @@ pub mod prelude {
     pub use crate::coordinator::Backend;
     pub use crate::sketch::{QuantizationMode, RadiusKind};
     pub use crate::store::{IngestSession, SketchServer, SketchStore};
+    pub use crate::util::fastmath::TrigBackend;
     pub use crate::util::rng::Rng;
 }
 

@@ -34,6 +34,7 @@ fn main() {
         Some("merge") => cmd_merge(&args),
         Some("solve") => cmd_solve(&args),
         Some("window") => cmd_window(&args),
+        Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(&args),
         Some(other) => {
             eprintln!("unknown command '{other}'");
@@ -59,19 +60,24 @@ fn usage() {
          \n\
          commands:\n\
            run     --k 10 --m 1000 --n 10 --npoints 300000 [--file data.bin]\n\
-                   [--backend native|pjrt] [--workers 4] [--replicates 1]\n\
-                   [--strategy range|sample|k++] [--sigma2 X] [--seed S]\n\
-                   [--quantize 1bit|..|16bit] [--save-sketch sketch.json]\n\
-                   [--compare-kmeans]\n\
+                   [--backend native|pjrt] [--trig exact|fast] [--workers 4]\n\
+                   [--replicates 1] [--strategy range|sample|k++] [--sigma2 X]\n\
+                   [--seed S] [--quantize 1bit|..|16bit]\n\
+                   [--save-sketch sketch.json] [--compare-kmeans]\n\
            sketch  --file data.bin --m 1000 --out sketch.json [--sigma2 X] [--seed S]\n\
-                   [--quantize 1bit|..|16bit] [--shard I  (one id per site)]\n\
+                   [--trig exact|fast] [--quantize 1bit|..|16bit]\n\
+                   [--shard I  (one id per site)]\n\
            merge   --out merged.json shard1.json shard2.json ...\n\
            solve   --sketch sketch.json --k 10 [--replicates R] [--seed S]\n\
+                   [--trig exact|fast  (must match the sketch's provenance)]\n\
                    [--out solution.json]\n\
            window  --epochs 6 --epoch-rows 20000 --k 5 [--retain E] [--window W]\n\
                    [--decay 0.2] [--drift 4.0] [--quantize 1bit|..|16bit]\n\
-                   [--save-store store.json]  (epoch replay through the store)\n\
+                   [--trig exact|fast] [--save-store store.json]\n\
+                   (epoch replay through the store)\n\
            exp     fig1|fig2|fig3|fig4|ablate|quantize [--runs R] [--full] [--persist]\n\
+           bench   diff <baseline.json> <candidate.json> [--threshold 1.5]\n\
+                   (fails on tracked-op ns_per_iter regressions beyond the threshold)\n\
            gen     --out data.bin --k 10 --n 10 --npoints 100000 [--seed S]\n\
            info",
         ckm::version()
@@ -86,6 +92,7 @@ fn builder_from_args(args: &Args) -> anyhow::Result<CkmBuilder> {
         .replicates(args.usize_or("replicates", 1))
         .strategy(InitStrategy::parse(&args.str_or("strategy", "range"))?)
         .radius(RadiusKind::parse(&args.str_or("radius", "adapted"))?)
+        .trig(ckm::util::fastmath::TrigBackend::parse(&args.str_or("trig", "exact"))?)
         .seed(args.u64_or("seed", 0))
         .workers(args.usize_or("workers", 4))
         .chunk_rows(args.usize_or("chunk-rows", 4096))
@@ -522,6 +529,53 @@ fn cmd_window(args: &Args) -> anyhow::Result<()> {
         println!("store checkpointed to {path} (resume with SketchStore::from_file)");
     }
     Ok(())
+}
+
+/// Compare two BENCH.json reports and fail on ns_per_iter regressions —
+/// the CI bench-smoke gate. Baseline records without a real timing (the
+/// committed bootstrap state) are informational and never gate.
+fn cmd_bench(args: &Args) -> anyhow::Result<()> {
+    let threshold = args.f64_or("threshold", 1.5);
+    args.finish()?;
+    let pos = args.positionals();
+    anyhow::ensure!(
+        pos.first().map(String::as_str) == Some("diff") && pos.len() == 3,
+        "usage: ckm bench diff <baseline.json> <candidate.json> [--threshold 1.5]"
+    );
+    let load = |p: &str| -> anyhow::Result<ckm::util::json::Json> {
+        let text = std::fs::read_to_string(p)
+            .map_err(|e| anyhow::anyhow!("cannot read {p}: {e}"))?;
+        Ok(ckm::util::json::Json::parse(&text)?)
+    };
+    let baseline = load(&pos[1])?;
+    let candidate = load(&pos[2])?;
+    let diff = ckm::bench::diff_reports(&baseline, &candidate, threshold)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    println!(
+        "bench diff ({}x gate): {} compared, {} skipped (bootstrap/missing), {} new",
+        threshold,
+        diff.compared(),
+        diff.skipped,
+        diff.new_ops.len()
+    );
+    for d in &diff.improvements {
+        println!("  faster   {}", d.describe());
+    }
+    for d in &diff.steady {
+        println!("  steady   {}", d.describe());
+    }
+    for op in &diff.new_ops {
+        println!("  new      {op} (will gate once a baseline is committed)");
+    }
+    if diff.regressions.is_empty() {
+        println!("OK: no tracked op regressed beyond {threshold}x");
+        Ok(())
+    } else {
+        for d in &diff.regressions {
+            eprintln!("  REGRESSION {}", d.describe());
+        }
+        anyhow::bail!("{} tracked op(s) regressed beyond {threshold}x", diff.regressions.len())
+    }
 }
 
 fn cmd_info(args: &Args) -> anyhow::Result<()> {

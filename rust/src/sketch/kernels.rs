@@ -23,6 +23,7 @@
 use super::operator::SketchOp;
 use crate::linalg::nnls::nnls_gram;
 use crate::linalg::{CMat, CVec, Mat};
+use crate::util::fastmath::{self, TrigBackend};
 use crate::util::parallel;
 
 /// Elementwise work below this size runs serially (thread spawn/join would
@@ -36,10 +37,11 @@ pub fn atoms_batch(op: &SketchOp, centroids: &Mat) -> CMat {
     let theta = centroids.matmul_bt(&op.w);
     let mut out = CMat::zeros(theta.rows, theta.cols);
     let len = theta.data.len();
+    let trig = op.trig();
     let threads = if len >= PAR_SWEEP_THRESHOLD { parallel::default_threads() } else { 1 };
     let ranges = parallel::split_ranges(len, threads);
     if ranges.len() <= 1 {
-        sin_cos_sweep(&theta.data, &mut out.re.data, &mut out.im.data);
+        sin_cos_sweep(trig, &theta.data, &mut out.re.data, &mut out.im.data);
         return out;
     }
     std::thread::scope(|s| {
@@ -51,20 +53,17 @@ pub fn atoms_batch(op: &SketchOp, centroids: &Mat) -> CMat {
             re_rest = re_tail;
             im_rest = im_tail;
             let th = &theta.data[r.start..r.end];
-            s.spawn(move || sin_cos_sweep(th, re_head, im_head));
+            s.spawn(move || sin_cos_sweep(trig, th, re_head, im_head));
         }
     });
     out
 }
 
-/// `re[i] = cos θ_i, im[i] = −sin θ_i` over a chunk (elementwise, so chunk
-/// boundaries cannot affect the result).
-fn sin_cos_sweep(theta: &[f64], re: &mut [f64], im: &mut [f64]) {
-    for (i, t) in theta.iter().enumerate() {
-        let (s, c) = t.sin_cos();
-        re[i] = c;
-        im[i] = -s;
-    }
+/// `re[i] = cos θ_i, im[i] = −sin θ_i` over a chunk, dispatched on the
+/// operator's trig backend. Elementwise pure under both backends, so chunk
+/// boundaries and thread splits cannot affect the result.
+fn sin_cos_sweep(trig: TrigBackend, theta: &[f64], re: &mut [f64], im: &mut [f64]) {
+    fastmath::atom_sweep(trig, theta, re, im);
 }
 
 /// Scalar oracle for [`atoms_batch`]: one `op.atom` matvec per centroid.
@@ -339,6 +338,21 @@ mod tests {
         testing::close(cost_b, cost_s, 0.0).unwrap();
         testing::all_close(&ga_b, &ga_s, 0.0).unwrap();
         testing::all_close(&gc_b.data, &gc_s.data, 1e-12).unwrap();
+    }
+
+    #[test]
+    fn atoms_batch_bit_matches_scalar_under_fast_trig() {
+        // The fast kernel is elementwise pure, so the batched (threaded,
+        // arbitrary-split) sweep must still bit-match the per-atom oracle.
+        // K·m = 11200 ≥ PAR_SWEEP_THRESHOLD exercises the parallel path.
+        let mut rng = Rng::new(55);
+        let w = FreqDist::adapted(1.0).draw(700, 6, &mut rng);
+        let o = SketchOp::with_trig(w, TrigBackend::Fast);
+        let (c, _) = rand_support(&mut rng, 16, 6);
+        let fast = atoms_batch(&o, &c);
+        let slow = atoms_batch_scalar(&o, &c);
+        testing::all_close(&fast.re.data, &slow.re.data, 0.0).unwrap();
+        testing::all_close(&fast.im.data, &slow.im.data, 0.0).unwrap();
     }
 
     #[test]

@@ -20,22 +20,47 @@
 //!   ∇_c Re⟨Aδ_c, r⟩ = Wᵀ q,  q_j = −(sinθ_j·Re r_j + cosθ_j·Im r_j)
 //! and ‖Aδ_c‖ = √m exactly (unit-modulus entries).
 
+use crate::linalg::matrix::matmul_bt_block;
 use crate::linalg::{CVec, Mat};
+use crate::util::fastmath::{self, TrigBackend};
 use crate::util::parallel;
 use std::sync::OnceLock;
 
-/// The sketching operator: a frequency matrix `W (m × n)`.
+/// The sketching operator: a frequency matrix `W (m × n)` plus the trig
+/// backend its ECF sweeps run on.
 #[derive(Clone, Debug)]
 pub struct SketchOp {
     pub w: Mat,
     /// Cached `Wᵀ` for the batched `Q·W` gradient GEMM (computed on first
     /// use; `W` is immutable for the life of the operator).
     wt: OnceLock<Mat>,
+    /// Which sin/cos implementation every sweep of this operator uses.
+    /// Part of the artifact provenance: `Exact` is bit-identical to the
+    /// historical libm paths, `Fast` is the vectorized kernel
+    /// ([`crate::util::fastmath`], ≤ 2 ULP).
+    trig: TrigBackend,
 }
 
 impl SketchOp {
     pub fn new(w: Mat) -> SketchOp {
-        SketchOp { w, wt: OnceLock::new() }
+        SketchOp::with_trig(w, TrigBackend::Exact)
+    }
+
+    /// Operator with an explicit trig backend (see [`TrigBackend`]).
+    pub fn with_trig(w: Mat, trig: TrigBackend) -> SketchOp {
+        SketchOp { w, wt: OnceLock::new(), trig }
+    }
+
+    /// The trig backend every sweep of this operator dispatches on.
+    pub fn trig(&self) -> TrigBackend {
+        self.trig
+    }
+
+    /// `(sin θ, cos θ)` under this operator's backend (scalar sites; the
+    /// sweeps below and in [`super::kernels`] handle the hot loops).
+    #[inline]
+    pub(crate) fn sincos(&self, t: f64) -> (f64, f64) {
+        fastmath::sincos(self.trig, t)
     }
 
     /// `Wᵀ (n × m)`, transposed once and cached.
@@ -55,10 +80,7 @@ impl SketchOp {
     pub fn atom(&self, c: &[f64]) -> CVec {
         let theta = self.w.matvec(c);
         let mut a = CVec::zeros(self.m());
-        for (j, t) in theta.iter().enumerate() {
-            a.re[j] = t.cos();
-            a.im[j] = -t.sin();
-        }
+        fastmath::atom_sweep(self.trig, &theta, &mut a.re, &mut a.im);
         a
     }
 
@@ -75,7 +97,7 @@ impl SketchOp {
         let mut val = 0.0;
         let mut q = vec![0.0; m];
         for j in 0..m {
-            let (s, co) = theta[j].sin_cos();
+            let (s, co) = self.sincos(theta[j]);
             val += co * r.re[j] - s * r.im[j];
             q[j] = -(s * r.re[j] + co * r.im[j]);
         }
@@ -145,6 +167,26 @@ impl SketchOp {
     /// Sketch a weighted point set: `Σ_l β_l e^{-i ω_j^T x_l}` with β
     /// uniform `1/N` when `weights` is `None`. Multi-threaded, blocked.
     pub fn sketch_points(&self, points: &[f64], weights: Option<&[f64]>) -> CVec {
+        let mut z = self.sketch_points_sum(points, weights);
+        if weights.is_none() {
+            // Uniform weights: the sweep accumulated raw sums; one scale
+            // at the end replaces N·m per-element β multiplies.
+            let n_points = points.len() / self.n_dims().max(1);
+            if n_points > 0 {
+                z.scale(1.0 / n_points as f64);
+            }
+        }
+        z
+    }
+
+    /// The *unnormalized* sketch sum `Σ_l β_l e^{-i ω_j^T x_l}` with β ≡ 1
+    /// when `weights` is `None` — the raw accumulator quantum streaming
+    /// ingest merges (no per-element normalization, no rescaling churn).
+    ///
+    /// The ingest hot path: each thread tiles `X·Wᵀ` through the
+    /// 4-col-unrolled serial GEMM block and sweeps the tile with the
+    /// operator's trig backend, accumulating straight into the partial.
+    pub fn sketch_points_sum(&self, points: &[f64], weights: Option<&[f64]>) -> CVec {
         let n = self.n_dims();
         assert_eq!(points.len() % n, 0);
         let n_points = points.len() / n;
@@ -153,21 +195,36 @@ impl SketchOp {
             return CVec::zeros(m);
         }
         let threads = parallel::default_threads();
+        let trig = self.trig;
         let partials = parallel::parallel_map_ranges(n_points, threads, |range| {
             let mut acc = CVec::zeros(m);
-            // Process rows in blocks so the X·Wᵀ tile stays in cache.
+            // Process rows in blocks so the X·Wᵀ tile stays in cache; the
+            // tile buffer is reused across blocks.
             const BLOCK: usize = 256;
+            let mut theta = vec![0.0; BLOCK.min(range.len()) * m];
             let mut lo = range.start;
             while lo < range.end {
                 let hi = (lo + BLOCK).min(range.end);
-                let x_blk = Mat::from_vec(hi - lo, n, points[lo * n..hi * n].to_vec());
-                let theta = x_blk_theta(&x_blk, &self.w);
-                for (bi, row) in theta.chunks_exact(m).enumerate() {
-                    let beta = weights.map(|w| w[lo + bi]).unwrap_or(1.0 / n_points as f64);
-                    for j in 0..m {
-                        let (s, co) = row[j].sin_cos();
-                        acc.re[j] += beta * co;
-                        acc.im[j] -= beta * s;
+                let rows = hi - lo;
+                matmul_bt_block(
+                    &points[lo * n..hi * n],
+                    &self.w.data,
+                    &mut theta[..rows * m],
+                    0,
+                    rows,
+                    n,
+                    m,
+                );
+                for (bi, row) in theta[..rows * m].chunks_exact(m).enumerate() {
+                    match weights {
+                        None => fastmath::accum_sweep(trig, row, &mut acc.re, &mut acc.im),
+                        Some(w) => fastmath::accum_sweep_weighted(
+                            trig,
+                            row,
+                            w[lo + bi],
+                            &mut acc.re,
+                            &mut acc.im,
+                        ),
                     }
                 }
                 lo = hi;
@@ -182,27 +239,16 @@ impl SketchOp {
     }
 }
 
-/// θ block = X_blk · Wᵀ, flattened row-major (rows × m). Single-threaded:
-/// callers parallelize over row ranges (also used by the quantized
-/// accumulator in [`super::quantize`]).
-pub(crate) fn x_blk_theta(x_blk: &Mat, w: &Mat) -> Vec<f64> {
-    let m = w.rows;
-    let n = w.cols;
-    let rows = x_blk.rows;
-    let mut out = vec![0.0; rows * m];
-    for i in 0..rows {
-        let xrow = x_blk.row(i);
-        let orow = &mut out[i * m..(i + 1) * m];
-        for j in 0..m {
-            let wrow = &w.data[j * n..(j + 1) * n];
-            let mut s = 0.0;
-            for d in 0..n {
-                s += xrow[d] * wrow[d];
-            }
-            orow[j] = s;
-        }
-    }
-    out
+/// θ tile = X_blk · Wᵀ, flattened row-major (`rows × m`), through the same
+/// 4-col-unrolled serial GEMM block as every other `X·Bᵀ` hot path (dots
+/// accumulate in ascending-index order, so the values are bit-identical to
+/// the naive per-row loop this replaced). Single-threaded: callers
+/// parallelize over row ranges (also used by the quantized accumulator in
+/// [`super::quantize`]).
+pub(crate) fn x_blk_theta_into(points: &[f64], rows: usize, w: &Mat, out: &mut [f64]) {
+    debug_assert_eq!(points.len(), rows * w.cols);
+    debug_assert_eq!(out.len(), rows * w.rows);
+    matmul_bt_block(points, &w.data, out, 0, rows, w.cols, w.rows);
 }
 
 #[cfg(test)]
@@ -279,6 +325,52 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn sketch_points_sum_is_raw_atom_sum() {
+        let o = op(16, 3, 21);
+        let mut rng = Rng::new(22);
+        let pts = gen::mat_normal(&mut rng, 7, 3);
+        let sum = o.sketch_points_sum(&pts, None);
+        let mut manual = CVec::zeros(16);
+        for l in 0..7 {
+            manual.axpy(1.0, &o.atom(&pts[l * 3..(l + 1) * 3]));
+        }
+        testing::all_close(&sum.re, &manual.re, 1e-12).unwrap();
+        testing::all_close(&sum.im, &manual.im, 1e-12).unwrap();
+        // ... and the normalized entry point is exactly sum / N.
+        let z = o.sketch_points(&pts, None);
+        let mut scaled = sum.clone();
+        scaled.scale(1.0 / 7.0);
+        assert_eq!(z.re, scaled.re);
+        assert_eq!(z.im, scaled.im);
+    }
+
+    #[test]
+    fn fast_trig_sketch_tracks_exact() {
+        use crate::util::fastmath::TrigBackend;
+        let mut rng = Rng::new(30);
+        let w = FreqDist::adapted(1.0).draw(32, 4, &mut rng);
+        let exact = SketchOp::new(w.clone());
+        let fast = SketchOp::with_trig(w, TrigBackend::Fast);
+        assert_eq!(exact.trig(), TrigBackend::Exact);
+        assert_eq!(fast.trig(), TrigBackend::Fast);
+        let pts = gen::mat_normal(&mut rng, 200, 4);
+        let ze = exact.sketch_points(&pts, None);
+        let zf = fast.sketch_points(&pts, None);
+        // ≤ 2 ULP per trig call ⇒ indistinguishable at sketch scale.
+        testing::all_close(&zf.re, &ze.re, 1e-12).unwrap();
+        testing::all_close(&zf.im, &ze.im, 1e-12).unwrap();
+        // atoms and step-1 gradients dispatch on the backend too
+        let c = gen::vec_normal(&mut rng, 4);
+        let (ae, af) = (exact.atom(&c), fast.atom(&c));
+        testing::all_close(&af.re, &ae.re, 1e-13).unwrap();
+        let r = CVec::from_parts(gen::vec_normal(&mut rng, 32), gen::vec_normal(&mut rng, 32));
+        let (ve, ge) = exact.step1_value_grad(&c, &r);
+        let (vf, gf) = fast.step1_value_grad(&c, &r);
+        testing::close(vf, ve, 1e-10).unwrap();
+        testing::all_close(&gf, &ge, 1e-10).unwrap();
     }
 
     #[test]

@@ -34,8 +34,9 @@
 //! independent and keep averaging away across a merge.
 
 use crate::data::dataset::{Bounds, PointSource};
-use crate::linalg::{CVec, Mat};
-use crate::sketch::operator::{x_blk_theta, SketchOp};
+use crate::linalg::CVec;
+use crate::sketch::operator::{x_blk_theta_into, SketchOp};
+use crate::util::fastmath;
 use crate::util::rng::Rng;
 
 /// Salt mixed into the builder/operator seed to derive the dither stream
@@ -293,18 +294,25 @@ impl QuantizedAccumulator {
         assert_eq!(self.level_sums.len(), 2 * m, "operator m != accumulator m");
         let rows = points.len() / n;
         const BLOCK: usize = 256;
+        // Reusable scratch: the X·Wᵀ θ tile (through the 4-col-unrolled
+        // GEMM block) plus one row of sin/cos swept with the operator's
+        // trig backend. The sweep is per-row, so the sin/cos values (and
+        // therefore the integer codes) are invariant to chunking.
+        let mut theta = vec![0.0; BLOCK.min(rows.max(1)) * m];
+        let (mut sin_row, mut cos_row) = (vec![0.0; m], vec![0.0; m]);
         let mut lo = 0usize;
         while lo < rows {
             let hi = (lo + BLOCK).min(rows);
-            let x_blk = Mat::from_vec(hi - lo, n, points[lo * n..hi * n].to_vec());
-            let theta = x_blk_theta(&x_blk, &op.w);
-            for (bi, trow) in theta.chunks_exact(m).enumerate() {
+            let blk = hi - lo;
+            x_blk_theta_into(&points[lo * n..hi * n], blk, &op.w, &mut theta[..blk * m]);
+            for (bi, trow) in theta[..blk * m].chunks_exact(m).enumerate() {
+                fastmath::sincos_sweep(op.trig(), trow, &mut sin_row, &mut cos_row);
                 let mut dither = row_rng(self.dither_seed, row_offset + lo + bi);
                 for j in 0..m {
-                    let (s, co) = trow[j].sin_cos();
-                    self.level_sums[j] += quantize_component(co, dither.uniform(), self.mode);
+                    self.level_sums[j] +=
+                        quantize_component(cos_row[j], dither.uniform(), self.mode);
                     self.level_sums[m + j] +=
-                        quantize_component(-s, dither.uniform(), self.mode);
+                        quantize_component(-sin_row[j], dither.uniform(), self.mode);
                 }
             }
             lo = hi;

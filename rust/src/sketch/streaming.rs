@@ -32,9 +32,10 @@ impl SketchAccumulator {
         if rows == 0 {
             return;
         }
-        // Unnormalized sum = rows * (uniform sketch of this block).
-        let z = op.sketch_points(points, None);
-        self.sum.axpy(rows as f64, &z);
+        // Raw unnormalized sums straight from the fused sweep — no
+        // normalize-then-rescale churn (N·m wasted multiplies per chunk).
+        let z = op.sketch_points_sum(points, None);
+        self.sum.axpy(1.0, &z);
         for r in 0..rows {
             self.bounds.update(&points[r * n..(r + 1) * n]);
         }

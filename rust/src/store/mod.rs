@@ -20,8 +20,11 @@
 //!   characteristic function, so CLOMPR consumes it unchanged).
 //! - [`SketchServer`] — the concurrent wrapper: any number of producer
 //!   threads push rows through per-producer [`IngestSession`]s (local
-//!   [`crate::coordinator::batcher::Batcher`] chunking, one short store
-//!   lock per full chunk) while snapshot-solve requests
+//!   [`crate::coordinator::batcher::Batcher`] chunking; each full chunk
+//!   runs two-phase ingest — reserve the row range under a short lock,
+//!   sketch on the producer's thread with no lock held via
+//!   [`SketchContext`], merge exactly under a second short lock) while
+//!   snapshot-solve requests
 //!   ([`SketchServer::solve_window`] / [`SketchServer::solve_decayed`])
 //!   are answered from a generation-keyed solve cache and never hold the
 //!   store lock during the CLOMPR decode.
@@ -40,5 +43,5 @@
 pub mod ring;
 pub mod server;
 
-pub use ring::{EpochStats, SketchStore, STORE_FORMAT_VERSION};
+pub use ring::{ChunkSketch, EpochStats, SketchContext, SketchStore, STORE_FORMAT_VERSION};
 pub use server::{IngestSession, ServerStats, SketchServer};

@@ -8,10 +8,21 @@
 //! and a window over surviving epochs is exactly the sketch of their rows.
 //!
 //! Quantized stores key the dither stream by the store-lifetime row index
-//! (`rows_ingested`), so an epoch replay of a stream produces the same
+//! (reserved at ingest), so an epoch replay of a stream produces the same
 //! integer state as a single uninterrupted pass — bit for bit — and a
 //! checkpointed store resumes dither-compatibly after
 //! [`SketchStore::from_file`].
+//!
+//! Ingest comes in two shapes: the synchronous [`SketchStore::ingest`]
+//! (sketch math under the caller's exclusivity — the single-producer
+//! path), and **two-phase ingest** for concurrent producers:
+//! [`SketchStore::reserve_rows`] hands out the global row-index range
+//! under a short lock, [`SketchContext::sketch_chunk`] runs the full
+//! `X·Wᵀ` + trig sweep with *no* lock held, and [`SketchStore::absorb`]
+//! merges the finished chunk under a second short lock. Because the
+//! dither keys come from the reservation, a single producer's two-phase
+//! sequence is bit-identical to the synchronous path, and reserved-but-
+//! never-absorbed ranges (a dead producer) merely skip dither keys.
 
 use crate::api::{ApiError, OpSpec, SketchArtifact};
 use crate::data::dataset::Bounds;
@@ -91,6 +102,70 @@ pub struct EpochStats {
     pub rows: usize,
 }
 
+/// Everything a producer needs to sketch a chunk *outside* the store lock
+/// (phase 2 of two-phase ingest): the operator (with its trig backend),
+/// the quantization mode and the dither-stream seed. Obtained once per
+/// producer from [`SketchStore::sketch_context`]; immutable for the life
+/// of the store, so a clone never goes stale.
+#[derive(Clone, Debug)]
+pub struct SketchContext {
+    op: SketchOp,
+    quantization: Option<QuantizationMode>,
+    dither_seed: u64,
+}
+
+impl SketchContext {
+    pub fn n_dims(&self) -> usize {
+        self.op.n_dims()
+    }
+
+    pub fn m(&self) -> usize {
+        self.op.m()
+    }
+
+    /// Run the full sketch math for one chunk whose first row holds the
+    /// reserved global index `row_offset` (see
+    /// [`SketchStore::reserve_rows`]). No locks touched: this is the
+    /// expensive part of ingest, and any number of producers run it
+    /// concurrently. Quantized chunks key their dithers off the reserved
+    /// range, so a single producer's reserve→sketch→absorb sequence is
+    /// bit-identical to the synchronous [`SketchStore::ingest`] path.
+    pub fn sketch_chunk(&self, rows: &[f64], row_offset: usize) -> ChunkSketch {
+        let n = self.op.n_dims();
+        assert_eq!(rows.len() % n, 0, "non-integral row chunk");
+        match self.quantization {
+            None => {
+                let mut acc = SketchAccumulator::new(self.op.m(), n);
+                acc.update(&self.op, rows);
+                ChunkSketch::Dense(acc)
+            }
+            Some(mode) => {
+                let mut acc =
+                    QuantizedAccumulator::new(self.op.m(), n, mode, self.dither_seed);
+                acc.update(&self.op, rows, row_offset);
+                ChunkSketch::Quantized(acc)
+            }
+        }
+    }
+}
+
+/// An outside-sketched ingest quantum, ready to be merged under a short
+/// lock by [`SketchStore::absorb`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum ChunkSketch {
+    Dense(SketchAccumulator),
+    Quantized(QuantizedAccumulator),
+}
+
+impl ChunkSketch {
+    pub fn count(&self) -> usize {
+        match self {
+            ChunkSketch::Dense(a) => a.count,
+            ChunkSketch::Quantized(a) => a.count,
+        }
+    }
+}
+
 /// An epoch-bucketed sketch store: the state object of a long-running
 /// clustering service.
 ///
@@ -116,6 +191,12 @@ pub struct SketchStore {
     /// Store-lifetime rows (keeps counting across eviction — the quantized
     /// dither key must never be reused).
     rows_ingested: usize,
+    /// Global row indices handed out by [`SketchStore::reserve_rows`]
+    /// (two-phase ingest). Runs ahead of `rows_ingested` only while a
+    /// reserved chunk is being sketched outside the lock; equal at rest.
+    /// Not serialized: a loaded store resumes both counters from
+    /// `rows_ingested`.
+    rows_reserved: usize,
     /// Bumped on every mutation; snapshot caches key off it.
     generation: u64,
 }
@@ -153,6 +234,7 @@ impl SketchStore {
             epochs: VecDeque::new(),
             next_epoch_id: 0,
             rows_ingested: 0,
+            rows_reserved: 0,
             generation: 0,
         };
         store.push_epoch();
@@ -179,8 +261,12 @@ impl SketchStore {
 
     // -- ingest / rotate --------------------------------------------------
 
-    /// Absorb row-major rows into the current (newest) epoch. Returns the
-    /// number of rows absorbed.
+    /// Absorb row-major rows into the current (newest) epoch, synchronously
+    /// (sketch math under the caller's exclusivity). Returns the number of
+    /// rows absorbed. Concurrent producers should prefer the two-phase
+    /// [`SketchStore::reserve_rows`] → [`SketchContext::sketch_chunk`] →
+    /// [`SketchStore::absorb`] flow, which keeps the sketch math outside
+    /// any store lock.
     pub fn ingest(&mut self, rows: &[f64]) -> usize {
         let n = self.spec.n_dims;
         assert_eq!(rows.len() % n, 0, "non-integral row ingest");
@@ -188,7 +274,7 @@ impl SketchStore {
         if n_rows == 0 {
             return 0;
         }
-        let offset = self.rows_ingested;
+        let offset = self.reserve_rows(n_rows);
         let ep = self.epochs.back_mut().expect("store holds at least one epoch");
         match &mut ep.acc {
             EpochAcc::Dense(a) => a.update(&self.op, rows),
@@ -197,6 +283,57 @@ impl SketchStore {
         self.rows_ingested += n_rows;
         self.generation += 1;
         n_rows
+    }
+
+    /// Phase 1 of two-phase ingest: reserve the next `n_rows` global row
+    /// indices (the quantized dither keys) and return the first. A cheap
+    /// counter bump — this is the only part of the sketch that *must*
+    /// happen under the store lock, so a server holds the lock for two
+    /// counter updates per chunk instead of the full `X·Wᵀ` + trig sweep.
+    /// Reserved ranges are never reused, even if the producer dies before
+    /// [`SketchStore::absorb`] (an abandoned reservation just skips keys,
+    /// which the dither algebra is indifferent to).
+    pub fn reserve_rows(&mut self, n_rows: usize) -> usize {
+        let offset = self.rows_reserved;
+        self.rows_reserved += n_rows;
+        offset
+    }
+
+    /// The immutable context a producer needs to run phase 2 (the sketch
+    /// math) outside the store lock: operator, quantization mode, dither
+    /// seed. Cheap to clone once per producer/session.
+    pub fn sketch_context(&self) -> SketchContext {
+        SketchContext {
+            op: self.op.clone(),
+            quantization: self.quantization,
+            dither_seed: self.dither_seed,
+        }
+    }
+
+    /// Phase 3 of two-phase ingest: exactly merge an outside-sketched
+    /// chunk into the *current* epoch (rows belong to whichever epoch is
+    /// current when their merge lands — the documented concurrency
+    /// semantics). Integer merge for quantized chunks, one `axpy` per
+    /// component for dense ones; both far cheaper than the sketch itself.
+    /// Returns the rows absorbed.
+    ///
+    /// Panics if the chunk kind disagrees with the store's quantization or
+    /// was sketched under a different dither stream — producers must build
+    /// chunks through this store's [`SketchStore::sketch_context`].
+    pub fn absorb(&mut self, chunk: ChunkSketch) -> usize {
+        let count = chunk.count();
+        if count == 0 {
+            return 0;
+        }
+        let ep = self.epochs.back_mut().expect("store holds at least one epoch");
+        match (&mut ep.acc, &chunk) {
+            (EpochAcc::Dense(a), ChunkSketch::Dense(c)) => a.merge(c),
+            (EpochAcc::Quantized(a), ChunkSketch::Quantized(c)) => a.merge(c),
+            _ => panic!("chunk sketch kind does not match the store's quantization"),
+        }
+        self.rows_ingested += count;
+        self.generation += 1;
+        count
     }
 
     /// Seal the current epoch and open a fresh one. If the ring exceeds its
@@ -559,6 +696,7 @@ impl SketchStore {
             epochs,
             next_epoch_id,
             rows_ingested,
+            rows_reserved: rows_ingested, // reservations resume past everything ingested
             generation: 0,
         })
     }
@@ -717,6 +855,96 @@ mod tests {
 
         assert_eq!(resumed.window_all(), uninterrupted.window_all());
         assert_eq!(resumed.epochs, uninterrupted.epochs);
+    }
+
+    #[test]
+    fn two_phase_ingest_matches_synchronous_bit_for_bit() {
+        // reserve → sketch_chunk → absorb (single producer, in order) must
+        // reproduce the synchronous ingest path exactly, dense and 1-bit.
+        let mut rng = Rng::new(21);
+        let all = rows(&mut rng, 40, 3);
+        for mode in [None, Some(QuantizationMode::OneBit)] {
+            let mut sync = SketchStore::create(spec(22, 8, 3), mode, 1, None).unwrap();
+            sync.ingest(&all[..25 * 3]);
+            sync.rotate();
+            sync.ingest(&all[25 * 3..]);
+
+            let mut tp = SketchStore::create(spec(22, 8, 3), mode, 1, None).unwrap();
+            let ctx = tp.sketch_context();
+            let off = tp.reserve_rows(25);
+            assert_eq!(off, 0);
+            tp.absorb(ctx.sketch_chunk(&all[..25 * 3], off));
+            tp.rotate();
+            let off = tp.reserve_rows(15);
+            assert_eq!(off, 25);
+            tp.absorb(ctx.sketch_chunk(&all[25 * 3..], off));
+
+            assert_eq!(tp.rows_ingested(), sync.rows_ingested());
+            assert_eq!(tp.epochs, sync.epochs, "mode {mode:?}");
+            assert_eq!(tp.window_all(), sync.window_all());
+        }
+    }
+
+    #[test]
+    fn out_of_order_absorbs_keep_reserved_dither_keys() {
+        // Two chunks reserved in order but absorbed in REVERSE arrival
+        // order: the dither keys must follow the reservation (rows 0..25
+        // keep keys 0..25 even though they merge second). The pre-two-phase
+        // implementation keyed dithers off rows_ingested at merge time and
+        // fails this.
+        let mut rng = Rng::new(31);
+        let all = rows(&mut rng, 40, 3);
+        let mode = Some(QuantizationMode::OneBit);
+        let mut store = SketchStore::create(spec(23, 8, 3), mode, 0, None).unwrap();
+        let ctx = store.sketch_context();
+        let off_a = store.reserve_rows(25); // rows 0..25
+        let off_b = store.reserve_rows(15); // rows 25..40
+        let chunk_a = ctx.sketch_chunk(&all[..25 * 3], off_a);
+        let chunk_b = ctx.sketch_chunk(&all[25 * 3..], off_b);
+        store.absorb(chunk_b); // B lands first
+        store.absorb(chunk_a);
+        assert_eq!(store.rows_ingested(), 40);
+
+        let mut reference = SketchStore::create(spec(23, 8, 3), mode, 0, None).unwrap();
+        reference.ingest(&all);
+        // Integer merges commute, and the keys came from the reservation:
+        // arrival order cannot change a single bit.
+        assert_eq!(store.window_all(), reference.window_all());
+    }
+
+    #[test]
+    fn absorb_lands_in_the_epoch_current_at_merge_time() {
+        let mut rng = Rng::new(41);
+        let all = rows(&mut rng, 20, 2);
+        let mut store = SketchStore::create(spec(24, 8, 2), None, 0, None).unwrap();
+        let ctx = store.sketch_context();
+        let off = store.reserve_rows(20);
+        let chunk = ctx.sketch_chunk(&all, off);
+        store.rotate(); // rotation interleaves between reserve and absorb
+        store.absorb(chunk);
+        // rows belong to the epoch current when the merge landed
+        let stats = store.epoch_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].rows, 0);
+        assert_eq!(stats[1].rows, 20);
+        assert_eq!(store.rows_ingested(), 20);
+        // the at-rest serialization invariants still hold
+        let back =
+            SketchStore::from_json(&Json::parse(&store.to_json().to_pretty()).unwrap()).unwrap();
+        assert_eq!(back.epochs, store.epochs);
+        assert_eq!(back.rows_ingested(), 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "chunk sketch kind")]
+    fn absorb_rejects_mismatched_chunk_kind() {
+        let mut rng = Rng::new(51);
+        let all = rows(&mut rng, 4, 2);
+        let dense = SketchStore::create(spec(25, 8, 2), None, 0, None).unwrap();
+        let mut quant =
+            SketchStore::create(spec(25, 8, 2), Some(QuantizationMode::OneBit), 0, None).unwrap();
+        let chunk = dense.sketch_context().sketch_chunk(&all, 0);
+        quant.absorb(chunk);
     }
 
     #[test]

@@ -2,23 +2,31 @@
 //! threads, snapshot-solve consumers, and a generation-keyed solve cache.
 //!
 //! Producers obtain a per-thread [`IngestSession`] whose local
-//! [`Batcher`] coalesces arbitrary-sized pushes into full chunks, so the
-//! store mutex is taken once per chunk instead of once per push. Solves
-//! snapshot the requested window/decay artifact under the lock (cheap: a
-//! merge over ≤ ring-capacity epochs) and run CLOMPR *outside* it, so a
-//! long decode never stalls ingest. Repeated queries against an unchanged
-//! store are answered from a small solve cache keyed by
-//! `(query, K, store generation)` — any ingest or rotation bumps the
-//! generation and implicitly invalidates every cached solution.
+//! [`Batcher`] coalesces arbitrary-sized pushes into full chunks. Each
+//! chunk then runs **two-phase ingest**: a short lock reserves the global
+//! row-index range (the quantized dither keys), the full sketch math
+//! (`X·Wᵀ` tile + trig sweep — the expensive part) runs *outside* the
+//! store mutex on the producer's thread, and a second short lock merges
+//! the finished chunk exactly. The critical section is two counter bumps
+//! plus one `m`-length merge per chunk, so producers scale instead of
+//! serializing on the sketch math. Solves snapshot the requested
+//! window/decay artifact under the lock (cheap: a merge over ≤
+//! ring-capacity epochs) and run CLOMPR *outside* it, so a long decode
+//! never stalls ingest. Repeated queries against an unchanged store are
+//! answered from a small solve cache keyed by `(query, K, store
+//! generation)` — any ingest or rotation bumps the generation and
+//! implicitly invalidates every cached solution.
 //!
 //! Concurrency semantics: rows belong to whichever epoch is current when
-//! their chunk reaches the store, and the sketch value is independent of
-//! producer interleaving up to floating-point addition order (dense) /
-//! dither assignment (quantized: rows are dithered by arrival index, so
-//! multi-producer ingest is statistically identical to single-producer
-//! ingest but only single-producer arrival orders replay bit-for-bit).
+//! their chunk's *merge* reaches the store, and the sketch value is
+//! independent of producer interleaving up to floating-point addition
+//! order (dense) / dither assignment (quantized: rows are dithered by
+//! reservation order, so multi-producer ingest is statistically identical
+//! to single-producer ingest but only single-producer arrival orders
+//! replay bit-for-bit — those are bit-identical to the synchronous store
+//! path, pinned by test).
 
-use super::ring::SketchStore;
+use super::ring::{SketchContext, SketchStore};
 use crate::api::{ApiError, Ckm, SketchArtifact};
 use crate::ckm::Solution;
 use crate::coordinator::batcher::Batcher;
@@ -107,6 +115,9 @@ pub struct ServerStats {
 #[derive(Debug)]
 pub struct SketchServer {
     store: Mutex<SketchStore>,
+    /// Immutable sketch context (operator, quantization, dither seed):
+    /// lets every producer run the sketch math without touching the lock.
+    ctx: SketchContext,
     solver: Ckm,
     cache: Mutex<SolveCache>,
     chunk_rows: usize,
@@ -117,8 +128,10 @@ impl SketchServer {
     /// becomes the per-session batching granularity.
     pub fn new(store: SketchStore, solver: Ckm) -> SketchServer {
         let chunk_rows = solver.config().sketcher.chunk_rows.max(1);
+        let ctx = store.sketch_context();
         SketchServer {
             store: Mutex::new(store),
+            ctx,
             solver,
             cache: Mutex::new(SolveCache::default()),
             chunk_rows,
@@ -135,14 +148,27 @@ impl SketchServer {
     /// Open a per-producer ingest session (local chunking; call
     /// [`IngestSession::finish`] to flush the tail).
     pub fn session(&self) -> IngestSession<'_> {
-        let n_dims = self.store.lock().unwrap().n_dims();
-        IngestSession { server: self, batcher: Batcher::new(n_dims, self.chunk_rows) }
+        IngestSession { server: self, batcher: Batcher::new(self.ctx.n_dims(), self.chunk_rows) }
     }
 
-    /// Ingest rows directly (one store lock; prefer [`SketchServer::session`]
-    /// for high-frequency small pushes). Returns rows absorbed.
+    /// Ingest rows through the two-phase path: reserve the global row
+    /// range under a short lock, run the sketch math (the expensive
+    /// `X·Wᵀ` + trig sweep) with *no* lock held, then merge the finished
+    /// chunk under a second short lock. Prefer [`SketchServer::session`]
+    /// for high-frequency small pushes. Returns rows absorbed.
     pub fn ingest(&self, rows: &[f64]) -> usize {
-        self.store.lock().unwrap().ingest(rows)
+        let n = self.ctx.n_dims();
+        assert_eq!(rows.len() % n, 0, "non-integral row ingest");
+        let n_rows = rows.len() / n;
+        if n_rows == 0 {
+            return 0;
+        }
+        // Phase 1 — short lock: reserve the dither row-key range.
+        let offset = self.store.lock().unwrap().reserve_rows(n_rows);
+        // Phase 2 — no lock: the sketch math runs on this producer's thread.
+        let chunk = self.ctx.sketch_chunk(rows, offset);
+        // Phase 3 — short lock: exact merge into the current epoch.
+        self.store.lock().unwrap().absorb(chunk)
     }
 
     /// Seal the current epoch and open the next (see
@@ -322,6 +348,32 @@ mod tests {
         let s = srv.stats();
         assert_eq!(s.cache_hits, 1);
         assert!(s.cache_misses >= 3);
+    }
+
+    #[test]
+    fn two_phase_session_matches_facade_sketch_bit_for_bit() {
+        // Quantized server: chunks sketch OUTSIDE the lock with reserved
+        // dither keys. A single producer's result must equal the facade's
+        // single-pass quantized sketch bit for bit — this pins the
+        // reserve → sketch → absorb flow (keying dithers at merge time
+        // instead of reservation time would fail it).
+        let ckm = Ckm::builder()
+            .frequencies(32)
+            .sigma2(1.0)
+            .seed(31)
+            .chunk_rows(16)
+            .quantization(crate::sketch::QuantizationMode::OneBit)
+            .build()
+            .unwrap();
+        let srv = ckm.server(3).unwrap();
+        let mut rng = Rng::new(32);
+        let pts = gen::mat_normal(&mut rng, 103, 3); // ragged vs chunk_rows
+        let mut sess = srv.session();
+        sess.push(&pts);
+        assert_eq!(sess.finish(), 103);
+        let win = srv.window_all();
+        let direct = ckm.sketch_slice(&pts, 3).unwrap();
+        assert_eq!(win, direct);
     }
 
     #[test]

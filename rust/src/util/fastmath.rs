@@ -1,0 +1,512 @@
+//! Lane-oriented vectorized `sincos` — the ECF evaluation hot loop at SIMD
+//! throughput.
+//!
+//! Every sketched point costs `m` sin/cos evaluations (`e^{-iω_j^T x}` for
+//! each frequency), so at paper scale (N = 10⁷, m = 1000) the trig sweep —
+//! not the `X·Wᵀ` GEMM — dominates ingest. Scalar libm calls serialize that
+//! sweep; this module evaluates it over fixed-width 8-lane arrays written
+//! so LLVM autovectorizes the whole pipeline (AVX2/NEON), with:
+//!
+//! - **Cody–Waite range reduction** mod π/2: a 3-part split of π/2
+//!   (`PIO2_1/2/3`, each with ≥ 20 trailing zero bits so every `n·part`
+//!   product is exact for `|n| < 2²⁰`) plus compensated tracking of the
+//!   subtraction residuals, yielding a hi/lo reduced argument pair
+//!   `(y0, y1)` good to well below 1 ULP across the fast range;
+//! - **minimax kernel polynomials** (the fdlibm/musl `__sin`/`__cos`
+//!   degree-13/14 coefficients, ≤ 1 ULP on `|r| ≤ π/4`);
+//! - branch-free quadrant reconstruction through integer lane masks
+//!   (swap / sign-flip on the raw bit patterns, so exact values and signed
+//!   zeros survive untouched);
+//! - a **scalar libm fallback** for `|θ| > FAST_TRIG_LIMIT` and non-finite
+//!   inputs (NaN/±∞ compare false against the limit and take the fallback).
+//!
+//! Accuracy contract (enforced by the tests below): `sincos_fast` is
+//! within **2 ULP** of libm `sin_cos` everywhere in the fast range, and
+//! *bitwise equal* to libm outside it. The kernel is **elementwise pure**
+//! — each lane's output depends only on its own θ, never on its position
+//! within a sweep — so chunking, threading and lane alignment can never
+//! change a result. That purity is what lets the quantized (QCKM) pipeline
+//! keep its bit-exact re-derivability guarantee under `TrigBackend::Fast`.
+//!
+//! [`TrigBackend`] is the user-facing knob: `Exact` (default) routes every
+//! sweep through libm and keeps all golden fixtures and scalar-parity
+//! property tests bit-identical; `Fast` routes in-range lanes through the
+//! vector kernel. The backend travels with the operator provenance (see
+//! `api::OpSpec`), so artifacts sketched under different backends refuse to
+//! merge.
+
+// The minimax/Cody–Waite constants are transcribed from fdlibm at full
+// printed precision; clippy's shortest-round-trip preference would lose
+// the documentation value of the canonical digits.
+#![allow(clippy::excessive_precision)]
+
+/// Which trig implementation the sketch/solve hot loops use.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TrigBackend {
+    /// libm `sin_cos` everywhere — bit-identical to the historical paths.
+    #[default]
+    Exact,
+    /// Vectorized Cody–Waite + minimax kernel (≤ 2 ULP vs libm) for
+    /// `|θ| ≤ FAST_TRIG_LIMIT`; scalar libm fallback beyond.
+    Fast,
+}
+
+impl TrigBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrigBackend::Exact => "exact",
+            TrigBackend::Fast => "fast",
+        }
+    }
+
+    /// Parse `exact` / `libm` or `fast` / `simd`.
+    pub fn parse(s: &str) -> anyhow::Result<TrigBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" | "libm" => Ok(TrigBackend::Exact),
+            "fast" | "simd" => Ok(TrigBackend::Fast),
+            other => anyhow::bail!("unknown trig backend '{other}' (expected exact|fast)"),
+        }
+    }
+}
+
+/// Lane width the sweeps are written for (4 × f64 per AVX2 register; 8
+/// gives the vectorizer a two-register unroll).
+pub const LANES: usize = 8;
+
+/// `|θ|` bound of the polynomial fast path: 2²⁰ · π/2 (the fdlibm
+/// medium-range cutoff, inside which every Cody–Waite product `n·PIO2_k`
+/// is exact). Beyond it `sincos_fast` falls back to libm.
+pub const FAST_TRIG_LIMIT: f64 = (1u64 << 20) as f64 * std::f64::consts::FRAC_PI_2;
+
+/// 1.5 · 2⁵² — adding and subtracting this rounds to the nearest integer
+/// (ties-to-even) for any |x| < 2⁵¹, and the low mantissa bits of the
+/// intermediate sum hold that integer in two's complement (the standard
+/// SIMD quadrant-extraction trick; no f64→i64 vector cast needed).
+const TOINT: f64 = 6_755_399_441_055_744.0;
+
+/// 2/π (the correctly rounded double — bitwise identical to fdlibm's
+/// `invpio2`).
+const INV_PIO2: f64 = std::f64::consts::FRAC_2_PI;
+
+// π/2 = PIO2_1 + PIO2_2 + PIO2_3 + PIO2_3T − δ, |δ| ≈ 1e-47. The first
+// three parts carry 33 significant bits each, so n·part is exact for
+// |n| < 2²⁰ (fdlibm e_rem_pio2 constants).
+const PIO2_1: f64 = 1.570_796_326_734_125_614_17e0;
+const PIO2_2: f64 = 6.077_100_506_303_965_976_60e-11;
+const PIO2_3: f64 = 2.022_266_248_711_166_455_80e-21;
+const PIO2_3T: f64 = 8.478_427_660_368_899_569_97e-32;
+
+// fdlibm __kernel_sin minimax coefficients (|r| ≤ π/4, ≤ 1 ULP).
+const S1: f64 = -1.666_666_666_666_663_243_48e-1;
+const S2: f64 = 8.333_333_333_322_489_461_24e-3;
+const S3: f64 = -1.984_126_982_985_794_931_34e-4;
+const S4: f64 = 2.755_731_370_707_006_767_89e-6;
+const S5: f64 = -2.505_076_025_340_686_341_95e-8;
+const S6: f64 = 1.589_690_995_211_550_102_21e-10;
+
+// fdlibm __kernel_cos minimax coefficients.
+const C1: f64 = 4.166_666_666_666_660_190_37e-2;
+const C2: f64 = -1.388_888_888_887_410_957_49e-3;
+const C3: f64 = 2.480_158_728_947_672_941_78e-5;
+const C4: f64 = -2.755_731_435_139_066_330_35e-7;
+const C5: f64 = 2.087_572_321_298_174_827_90e-9;
+const C6: f64 = -1.135_964_755_778_819_482_65e-11;
+
+/// fdlibm `__kernel_sin(x, y, 1)`: sin of the hi/lo pair `x + y`,
+/// `|x| ≤ π/4`.
+#[inline(always)]
+fn k_sin(x: f64, y: f64) -> f64 {
+    let z = x * x;
+    let v = z * x;
+    let r = S2 + z * (S3 + z * (S4 + z * (S5 + z * S6)));
+    x - ((z * (0.5 * y - v * r) - y) - v * S1)
+}
+
+/// musl `__cos(x, y)`: cos of the hi/lo pair `x + y`, `|x| ≤ π/4`.
+/// (`1 − hz` is compensated exactly — Fast2Sum applies since `hz < 1` —
+/// which is what keeps the kernel ≤ 1 ULP without fdlibm's `qx` branch.)
+#[inline(always)]
+fn k_cos(x: f64, y: f64) -> f64 {
+    let z = x * x;
+    let r = z * (C1 + z * (C2 + z * (C3 + z * (C4 + z * (C5 + z * C6)))));
+    let hz = 0.5 * z;
+    let w = 1.0 - hz;
+    w + (((1.0 - w) - hz) + (z * r - x * y))
+}
+
+/// The straight-line fast kernel: reduce mod π/2 with residual tracking,
+/// evaluate both minimax kernels, reconstruct the quadrant through bit
+/// masks. Valid only for finite `|t| ≤ FAST_TRIG_LIMIT` — callers gate.
+/// Branch-free by construction so an 8-lane loop over it autovectorizes.
+#[inline(always)]
+fn sincos_reduced(t: f64) -> (f64, f64) {
+    // Nearest-integer multiple of π/2 + its low bits, via the TOINT trick.
+    let big = t * INV_PIO2 + TOINT;
+    let qq = big.to_bits(); // low mantissa bits ≡ n (mod 2^52), two's complement
+    let n = big - TOINT;
+    // 3-part Cody–Waite with compensated residuals:
+    //   r1 exact (Sterbenz: t and n·PIO2_1 agree to within a factor of 2),
+    //   e2/e3 recover the rounding of each cascade subtraction,
+    //   the PIO2_3T product mops up the remaining tail of π/2.
+    let r1 = t - n * PIO2_1;
+    let w1 = n * PIO2_2;
+    let r2 = r1 - w1;
+    let e2 = (r1 - r2) - w1;
+    let w2 = n * PIO2_3;
+    let r3 = r2 - w2;
+    let e3 = (r2 - r3) - w2;
+    let lo = (e2 + e3) - n * PIO2_3T;
+    let y0 = r3 + lo;
+    let y1 = (r3 - y0) + lo;
+    let sn = k_sin(y0, y1);
+    let cs = k_cos(y0, y1);
+    // Quadrant n mod 4: odd n swaps sin/cos; bits 1 of n and n+1 flip the
+    // signs. Pure integer lane ops on the raw bit patterns.
+    let swap = (qq & 1).wrapping_neg(); // 0 or all-ones
+    let sin_bits = (sn.to_bits() & !swap) | (cs.to_bits() & swap);
+    let cos_bits = (cs.to_bits() & !swap) | (sn.to_bits() & swap);
+    let s = f64::from_bits(sin_bits ^ (((qq >> 1) & 1) << 63));
+    let c = f64::from_bits(cos_bits ^ (((qq.wrapping_add(1) >> 1) & 1) << 63));
+    (s, c)
+}
+
+/// `(sin θ, cos θ)` through the fast kernel, falling back to libm for
+/// non-finite θ and `|θ| > FAST_TRIG_LIMIT`. Elementwise pure: the result
+/// for a given θ never depends on neighbours, sweep position or chunking.
+#[inline]
+pub fn sincos_fast(t: f64) -> (f64, f64) {
+    if t.abs() <= FAST_TRIG_LIMIT {
+        sincos_reduced(t)
+    } else {
+        t.sin_cos() // also the NaN/±∞ path: the comparison above is false
+    }
+}
+
+/// `(sin θ, cos θ)` under the given backend (scalar call sites).
+#[inline]
+pub fn sincos(backend: TrigBackend, t: f64) -> (f64, f64) {
+    match backend {
+        TrigBackend::Exact => t.sin_cos(),
+        TrigBackend::Fast => sincos_fast(t),
+    }
+}
+
+/// True when every lane is finite and inside the polynomial range (NaN
+/// compares false and correctly demotes the chunk to the scalar path).
+#[inline(always)]
+fn all_in_range(chunk: &[f64; LANES]) -> bool {
+    let mut ok = true;
+    for &t in chunk {
+        ok &= t.abs() <= FAST_TRIG_LIMIT;
+    }
+    ok
+}
+
+/// The one sweep scaffold every public sweep shares: libm per element
+/// under `Exact`; under `Fast`, full 8-lane chunks whose lanes are all in
+/// range run the vector kernel, mixed/tail elements take the per-element
+/// `sincos_fast` path (same pure function, so results are independent of
+/// alignment). `emit(i, sin, cos)` is `#[inline(always)]`-monomorphized
+/// per call site, so the lane loops still autovectorize. Keeping the
+/// chunk-gating/tail logic in exactly one place is what guards the
+/// elementwise-purity contract the quantized pipeline depends on.
+#[inline(always)]
+fn sweep_impl<E: FnMut(usize, f64, f64)>(backend: TrigBackend, theta: &[f64], mut emit: E) {
+    match backend {
+        TrigBackend::Exact => {
+            for (i, &t) in theta.iter().enumerate() {
+                let (s, c) = t.sin_cos();
+                emit(i, s, c);
+            }
+        }
+        TrigBackend::Fast => {
+            let mut i = 0;
+            while i + LANES <= theta.len() {
+                let chunk: &[f64; LANES] = theta[i..i + LANES].try_into().unwrap();
+                if all_in_range(chunk) {
+                    for j in 0..LANES {
+                        let (s, c) = sincos_reduced(chunk[j]);
+                        emit(i + j, s, c);
+                    }
+                } else {
+                    for j in 0..LANES {
+                        let (s, c) = sincos_fast(chunk[j]);
+                        emit(i + j, s, c);
+                    }
+                }
+                i += LANES;
+            }
+            for j in i..theta.len() {
+                let (s, c) = sincos_fast(theta[j]);
+                emit(j, s, c);
+            }
+        }
+    }
+}
+
+/// Sweep `sin_out[i] = sin θ_i, cos_out[i] = cos θ_i` under `backend`.
+pub fn sincos_sweep(backend: TrigBackend, theta: &[f64], sin_out: &mut [f64], cos_out: &mut [f64]) {
+    debug_assert_eq!(theta.len(), sin_out.len());
+    debug_assert_eq!(theta.len(), cos_out.len());
+    sweep_impl(backend, theta, |i, s, c| {
+        sin_out[i] = s;
+        cos_out[i] = c;
+    });
+}
+
+/// Atom-layout sweep: `re[i] = cos θ_i`, `im[i] = −sin θ_i` (the
+/// `e^{-iθ}` component layout of `sketch::kernels::atoms_batch`).
+pub fn atom_sweep(backend: TrigBackend, theta: &[f64], re: &mut [f64], im: &mut [f64]) {
+    debug_assert_eq!(theta.len(), re.len());
+    debug_assert_eq!(theta.len(), im.len());
+    sweep_impl(backend, theta, |i, s, c| {
+        re[i] = c;
+        im[i] = -s;
+    });
+}
+
+/// Fused ECF accumulation sweep: `acc_re[i] += cos θ_i`, `acc_im[i] −=
+/// sin θ_i` — one row of the raw (unnormalized, unit-weight) sketch sum,
+/// with no per-element β multiply (callers scale once per pass).
+pub fn accum_sweep(backend: TrigBackend, theta: &[f64], acc_re: &mut [f64], acc_im: &mut [f64]) {
+    debug_assert_eq!(theta.len(), acc_re.len());
+    debug_assert_eq!(theta.len(), acc_im.len());
+    sweep_impl(backend, theta, |i, s, c| {
+        acc_re[i] += c;
+        acc_im[i] -= s;
+    });
+}
+
+/// Weighted ECF accumulation sweep: `acc_re[i] += β·cos θ_i`,
+/// `acc_im[i] −= β·sin θ_i` (one weighted point's row).
+pub fn accum_sweep_weighted(
+    backend: TrigBackend,
+    theta: &[f64],
+    beta: f64,
+    acc_re: &mut [f64],
+    acc_im: &mut [f64],
+) {
+    debug_assert_eq!(theta.len(), acc_re.len());
+    debug_assert_eq!(theta.len(), acc_im.len());
+    sweep_impl(backend, theta, |i, s, c| {
+        acc_re[i] += beta * c;
+        acc_im[i] -= beta * s;
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{self, Config};
+    use crate::util::rng::Rng;
+
+    /// Distance in representable f64 steps (monotone bit mapping); equal
+    /// values (including −0 vs +0) and NaN-vs-NaN are distance 0.
+    fn ulp_dist(a: f64, b: f64) -> u64 {
+        if a == b || (a.is_nan() && b.is_nan()) {
+            return 0;
+        }
+        if a.is_nan() || b.is_nan() {
+            return u64::MAX;
+        }
+        // monotone map: sign-magnitude bits → offset binary
+        let map = |x: f64| -> u64 {
+            let b = x.to_bits();
+            if b >> 63 == 1 {
+                !b
+            } else {
+                b | (1u64 << 63)
+            }
+        };
+        map(a).abs_diff(map(b))
+    }
+
+    /// The accuracy contract: ≤ 2 ULP vs libm in the fast range (with a
+    /// vanishing absolute-error escape for values within ~1e-25 of zero
+    /// crossings, where libm itself is the moving target).
+    fn assert_close_to_libm(t: f64) {
+        let (fs, fc) = sincos_fast(t);
+        let (ls, lc) = t.sin_cos();
+        for (name, f, l) in [("sin", fs, ls), ("cos", fc, lc)] {
+            let d = ulp_dist(f, l);
+            assert!(
+                d <= 2 || (f - l).abs() <= 1e-25,
+                "{name}({t:e}) = {f:e} vs libm {l:e}: {d} ulp"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_fast_within_2_ulp_of_libm() {
+        testing::check("sincos_fast ulp", Config::default().cases(64).max_size(100), |rng, _| {
+            // magnitudes spanning subnormal-ish to the reduction limit
+            for scale in [1e-12, 1e-6, 1e-2, 1.0, 10.0, 1e3, 1e6] {
+                let t = (rng.uniform() * 2.0 - 1.0) * scale;
+                let (fs, fc) = sincos_fast(t);
+                let (ls, lc) = t.sin_cos();
+                for (f, l) in [(fs, ls), (fc, lc)] {
+                    let d = ulp_dist(f, l);
+                    if d > 2 && (f - l).abs() > 1e-25 {
+                        return Err(format!("sincos({t:e}): {d} ulp off libm"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn range_reduction_boundaries_multiples_of_pi_over_4() {
+        // The quadrant seams: doubles at and adjacent to k·π/4, where the
+        // reduction flips n and the kernels hand off between sin and cos.
+        for k in -1024i64..=1024 {
+            let base = k as f64 * std::f64::consts::FRAC_PI_4;
+            for delta in [-2i64, -1, 0, 1, 2] {
+                let t = f64::from_bits((base.to_bits() as i64 + delta) as u64);
+                assert_close_to_libm(t);
+            }
+        }
+        // ... and the same seams out at large |θ| near the fast limit.
+        for k in [100_000i64, 1_000_000, 2_097_149, 2_097_150] {
+            let base = k as f64 * std::f64::consts::FRAC_PI_4;
+            if base.abs() <= FAST_TRIG_LIMIT {
+                assert_close_to_libm(base);
+                assert_close_to_libm(-base);
+            }
+        }
+    }
+
+    #[test]
+    fn large_theta_beyond_limit_is_bitwise_libm() {
+        for t in [
+            FAST_TRIG_LIMIT * 1.000001,
+            -FAST_TRIG_LIMIT * 1.000001,
+            1e9,
+            -3.7e12,
+            1e300,
+        ] {
+            let (fs, fc) = sincos_fast(t);
+            let (ls, lc) = t.sin_cos();
+            assert_eq!(fs.to_bits(), ls.to_bits(), "sin({t:e}) must be the libm fallback");
+            assert_eq!(fc.to_bits(), lc.to_bits(), "cos({t:e}) must be the libm fallback");
+        }
+        // just inside the limit stays on the polynomial path and accurate
+        assert_close_to_libm(FAST_TRIG_LIMIT * 0.9999999);
+        assert_close_to_libm(-FAST_TRIG_LIMIT * 0.9999999);
+    }
+
+    #[test]
+    fn special_values_zero_subnormal_inf_nan() {
+        // ±0: values agree with libm (sign of the zero sine is not part of
+        // the contract — ulp_dist treats −0 == +0).
+        for t in [0.0f64, -0.0] {
+            let (s, c) = sincos_fast(t);
+            assert_eq!(s, 0.0);
+            assert_eq!(c, 1.0);
+        }
+        // subnormals: sin x = x exactly, cos x = 1
+        for t in [5e-324f64, -5e-324, 2.2e-308, -2.2e-308] {
+            let (s, c) = sincos_fast(t);
+            assert_eq!(s, t, "sin of subnormal {t:e}");
+            assert_eq!(c, 1.0);
+        }
+        // non-finite: bitwise libm behavior (NaN results)
+        for t in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let (s, c) = sincos_fast(t);
+            assert!(s.is_nan() && c.is_nan(), "sincos({t}) must be NaN");
+        }
+    }
+
+    #[test]
+    fn sweep_is_elementwise_pure_under_any_alignment() {
+        // The same θ must produce the same bits regardless of sweep offset,
+        // slice length, or neighbours (this is what preserves quantized
+        // re-derivability under TrigBackend::Fast).
+        let mut rng = Rng::new(99);
+        let n = 3 * LANES + 5;
+        let mut theta: Vec<f64> = (0..n).map(|_| (rng.uniform() * 2.0 - 1.0) * 50.0).collect();
+        theta[4] = FAST_TRIG_LIMIT * 2.0; // forces one chunk onto the fallback
+        theta[n - 1] = f64::NAN;
+        let (mut s_all, mut c_all) = (vec![0.0; n], vec![0.0; n]);
+        sincos_sweep(TrigBackend::Fast, &theta, &mut s_all, &mut c_all);
+        for start in 0..n {
+            let len = (n - start).min(LANES + 3);
+            let (mut s, mut c) = (vec![0.0; len], vec![0.0; len]);
+            sincos_sweep(TrigBackend::Fast, &theta[start..start + len], &mut s, &mut c);
+            for j in 0..len {
+                let (se, ce) = sincos_fast(theta[start + j]);
+                assert_eq!(
+                    s[j].to_bits(),
+                    se.to_bits(),
+                    "sweep sin impure at offset {start}+{j}"
+                );
+                assert_eq!(c[j].to_bits(), ce.to_bits());
+                assert_eq!(s[j].to_bits(), s_all[start + j].to_bits());
+                assert_eq!(c[j].to_bits(), c_all[start + j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn exact_backend_sweeps_are_bitwise_libm() {
+        let mut rng = Rng::new(5);
+        let theta: Vec<f64> = (0..37).map(|_| (rng.uniform() * 2.0 - 1.0) * 30.0).collect();
+        let (mut s, mut c) = (vec![0.0; 37], vec![0.0; 37]);
+        sincos_sweep(TrigBackend::Exact, &theta, &mut s, &mut c);
+        let (mut re, mut im) = (vec![0.0; 37], vec![0.0; 37]);
+        atom_sweep(TrigBackend::Exact, &theta, &mut re, &mut im);
+        let (mut ar, mut ai) = (vec![0.0; 37], vec![0.0; 37]);
+        accum_sweep(TrigBackend::Exact, &theta, &mut ar, &mut ai);
+        for (i, &t) in theta.iter().enumerate() {
+            let (ls, lc) = t.sin_cos();
+            assert_eq!(s[i].to_bits(), ls.to_bits());
+            assert_eq!(c[i].to_bits(), lc.to_bits());
+            assert_eq!(re[i].to_bits(), lc.to_bits());
+            assert_eq!(im[i].to_bits(), (-ls).to_bits());
+            assert_eq!(ar[i].to_bits(), lc.to_bits());
+            assert_eq!(ai[i].to_bits(), (-ls).to_bits());
+        }
+    }
+
+    #[test]
+    fn accum_sweeps_match_manual_accumulation() {
+        let mut rng = Rng::new(7);
+        let theta: Vec<f64> = (0..2 * LANES + 3).map(|_| rng.normal() * 8.0).collect();
+        let n = theta.len();
+        for backend in [TrigBackend::Exact, TrigBackend::Fast] {
+            let (mut re, mut im) = (vec![0.25; n], vec![-0.5; n]);
+            accum_sweep(backend, &theta, &mut re, &mut im);
+            let (mut wre, mut wim) = (vec![0.25; n], vec![-0.5; n]);
+            accum_sweep_weighted(backend, &theta, 0.3, &mut wre, &mut wim);
+            for (i, &t) in theta.iter().enumerate() {
+                let (s, c) = sincos(backend, t);
+                assert_eq!(re[i].to_bits(), (0.25 + c).to_bits(), "{backend:?} re[{i}]");
+                assert_eq!(im[i].to_bits(), (-0.5 - s).to_bits());
+                assert_eq!(wre[i].to_bits(), (0.25 + 0.3 * c).to_bits());
+                assert_eq!(wim[i].to_bits(), (-0.5 - 0.3 * s).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn pythagorean_identity_holds_on_fast_path() {
+        let mut rng = Rng::new(13);
+        for _ in 0..2000 {
+            let t = (rng.uniform() * 2.0 - 1.0) * 1e5;
+            let (s, c) = sincos_fast(t);
+            assert!((s * s + c * c - 1.0).abs() < 1e-14, "identity broke at {t}");
+        }
+    }
+
+    #[test]
+    fn backend_parse_and_name() {
+        assert_eq!(TrigBackend::parse("exact").unwrap(), TrigBackend::Exact);
+        assert_eq!(TrigBackend::parse("libm").unwrap(), TrigBackend::Exact);
+        assert_eq!(TrigBackend::parse("Fast").unwrap(), TrigBackend::Fast);
+        assert_eq!(TrigBackend::parse("simd").unwrap(), TrigBackend::Fast);
+        assert!(TrigBackend::parse("quantum").is_err());
+        assert_eq!(TrigBackend::Exact.name(), "exact");
+        assert_eq!(TrigBackend::Fast.name(), "fast");
+        assert_eq!(TrigBackend::default(), TrigBackend::Exact);
+    }
+}

@@ -1,8 +1,10 @@
 //! Foundation substrates built in-repo (the offline crate set ships only
-//! the `xla` closure): RNG, JSON, CLI parsing, logging and data-parallel
-//! helpers. See DESIGN.md §3 for the substitution table.
+//! the `xla` closure): RNG, JSON, CLI parsing, logging, data-parallel
+//! helpers and the vectorized trig kernels ([`fastmath`]). See DESIGN.md
+//! §3 for the substitution table.
 
 pub mod cli;
+pub mod fastmath;
 pub mod json;
 pub mod logging;
 pub mod parallel;

@@ -257,6 +257,72 @@ fn decayed_solve_tracks_drifting_centroids_better_than_window() {
 }
 
 #[test]
+fn concurrent_two_phase_quantized_ingest_conserves_everything() {
+    // The two-phase path (reserve under a short lock, sketch outside,
+    // merge under a short lock) with 4 concurrent quantized producers:
+    // every reserved row index is used exactly once, so rows, bounds and
+    // the total integer mass are all conserved regardless of interleaving.
+    let (n, m, producers, per) = (3usize, 48usize, 4usize, 1200usize);
+    let mut rng = Rng::new(77);
+    let g = GmmConfig::paper_default(3, n, producers * per).generate(&mut rng);
+    let pts = &g.dataset.points;
+    let ckm = Ckm::builder()
+        .frequencies(m)
+        .sigma2(1.0)
+        .seed(5)
+        .chunk_rows(128)
+        .quantization(QuantizationMode::OneBit)
+        .build()
+        .unwrap();
+    let server = ckm.server(n).unwrap();
+
+    std::thread::scope(|s| {
+        for p in 0..producers {
+            let server = &server;
+            let slice = &pts[p * per * n..(p + 1) * per * n];
+            s.spawn(move || {
+                let mut sess = server.session();
+                let mut off_rows = 0usize;
+                let mut step_rows = 17 + p * 11;
+                while off_rows < per {
+                    let take = step_rows.min(per - off_rows);
+                    sess.push(&slice[off_rows * n..(off_rows + take) * n]);
+                    off_rows += take;
+                    step_rows = step_rows % 53 + 7;
+                }
+                sess.finish();
+            });
+        }
+    });
+
+    let total = producers * per;
+    let stats = server.stats();
+    assert_eq!(stats.rows_ingested, total, "reserved rows must all be absorbed");
+    let win = server.window_all();
+    assert_eq!(win.count, total);
+    // Bounds are interleaving-exact, and each of the 2m integer level sums
+    // is a sum of `total` codes in {0, 1} — conservation of the dither
+    // mass regardless of which producer got which reserved range.
+    let reference = ckm.sketch_slice(pts, n).unwrap();
+    assert_eq!(win.bounds, reference.bounds);
+    let (wq, rq) = (win.quant.as_ref().unwrap(), reference.quant.as_ref().unwrap());
+    assert_eq!(wq.level_sums.len(), rq.level_sums.len());
+    for (j, &sum) in wq.level_sums.iter().enumerate() {
+        assert!(sum <= total as u64, "level sum {j} exceeds the row count");
+    }
+    // The dither-key *assignment* depends on arrival order, but the debiased
+    // sketch is the same unbiased estimator either way: components agree to
+    // the stochastic-rounding noise floor (~Δ/√N per component, 5σ margin).
+    let (zw, zr) = (win.z(), reference.z());
+    let tol = 5.0 * 2.0 / (total as f64).sqrt();
+    ckm::testing::all_close(&zw.re, &zr.re, tol).unwrap();
+    ckm::testing::all_close(&zw.im, &zr.im, tol).unwrap();
+    // ... and the snapshot still solves.
+    let sol = server.solve_window(1, 3).unwrap();
+    assert!(sol.cost.is_finite());
+}
+
+#[test]
 fn concurrent_producers_conserve_rows_and_value() {
     let (n, m, producers, per) = (3usize, 64usize, 4usize, 1500usize);
     let mut rng = Rng::new(33);

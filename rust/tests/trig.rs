@@ -1,0 +1,170 @@
+//! End-to-end coverage of the fast trig backend: the vectorized sincos
+//! kernel feeding the full sketch → CLOMPR pipeline must land on the same
+//! clustering as libm (the per-call error is ≤ 2 ULP — ten orders of
+//! magnitude below the sketch's own 1/√N estimation noise), fast quantized
+//! sketches stay bit-re-derivable, fast artifacts survive the file round
+//! trip, and the trig provenance gates merge/solve/store interop.
+//!
+//! (The kernel-level ULP property suite lives in `util::fastmath`; this
+//! file covers the pipeline seams.)
+
+use ckm::api::{ApiError, Ckm, QuantizationMode, SketchArtifact};
+use ckm::data::gmm::GmmConfig;
+use ckm::metrics::{mean_min_centroid_dist, sse};
+use ckm::util::fastmath::TrigBackend;
+use ckm::util::rng::Rng;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ckm_trig_{}_{name}", std::process::id()))
+}
+
+/// Seeded e2e: fast-trig CLOMPR recovers the same clustering quality as
+/// exact-trig CLOMPR. The sketches differ by ≤ 2 ULP per component while
+/// the sketch noise floor is ~1/√N ≈ 0.007, so both decodes see the same
+/// landscape; the solutions must match in SSE to a few percent and both
+/// must recover the planted constellation.
+#[test]
+fn fast_trig_clompr_sse_matches_exact_within_noise_floor() {
+    let (k, n_dims, n_points, m) = (5usize, 6usize, 20_000usize, 512usize);
+    let mut rng = Rng::new(42);
+    let mut cfg = GmmConfig::paper_default(k, n_dims, n_points);
+    cfg.separation = 3.0;
+    let g = cfg.generate(&mut rng);
+    let pts = &g.dataset.points;
+
+    let base = Ckm::builder().frequencies(m).seed(7).replicates(2);
+    let exact = base.clone().build().unwrap();
+    let fast = base.trig(TrigBackend::Fast).build().unwrap();
+
+    let art_exact = exact.sketch_slice(pts, n_dims).unwrap();
+    let art_fast = fast.sketch_slice(pts, n_dims).unwrap();
+    assert_eq!(art_exact.op.checksum, art_fast.op.checksum); // same W
+    // the two sketches are numerically indistinguishable at sketch scale
+    let max_dz = art_exact.z().max_abs_diff(&art_fast.z());
+    assert!(max_dz < 1e-12, "fast sketch strayed from exact: {max_dz:e}");
+
+    let sol_exact = exact.solve(&art_exact, k).unwrap();
+    let sol_fast = fast.solve(&art_fast, k).unwrap();
+    let sse_exact = sse(pts, n_dims, &sol_exact.centroids) / n_points as f64;
+    let sse_fast = sse(pts, n_dims, &sol_fast.centroids) / n_points as f64;
+    eprintln!("SSE/N exact = {sse_exact:.4}, fast = {sse_fast:.4}");
+    assert!(
+        (sse_fast - sse_exact).abs() <= 0.10 * sse_exact,
+        "fast-trig SSE/N {sse_fast} vs exact {sse_exact} outside the noise budget"
+    );
+    // both recover the planted constellation
+    for (name, sol) in [("exact", &sol_exact), ("fast", &sol_fast)] {
+        let err = mean_min_centroid_dist(&g.means, &sol.centroids);
+        assert!(err < 1.0, "{name} solve strayed from planted means: {err}");
+    }
+}
+
+/// Fast quantized sketches keep QCKM's bit-exact re-derivability: the
+/// kernel is elementwise pure, so (data, provenance, shard) still pins
+/// every integer level sum regardless of chunking or worker scheduling.
+#[test]
+fn fast_trig_quantized_sketch_is_bit_rederivable() {
+    let (n_dims, n_points) = (4usize, 6000usize);
+    let mut rng = Rng::new(9);
+    let g = GmmConfig::paper_default(3, n_dims, n_points).generate(&mut rng);
+    let pts = &g.dataset.points;
+
+    let build = |workers: usize, chunk_rows: usize| {
+        Ckm::builder()
+            .frequencies(96)
+            .sigma2(1.0)
+            .seed(3)
+            .trig(TrigBackend::Fast)
+            .quantization(QuantizationMode::OneBit)
+            .workers(workers)
+            .chunk_rows(chunk_rows)
+            .build()
+            .unwrap()
+    };
+    let a = build(1, 4096).sketch_slice(pts, n_dims).unwrap();
+    let b = build(4, 257).sketch_slice(pts, n_dims).unwrap(); // ragged chunks
+    assert_eq!(a, b, "fast quantized sketch must be scheduling-independent");
+    assert_eq!(a.op.trig, TrigBackend::Fast);
+
+    // ... and it solves through the unchanged decoder
+    let sol = build(2, 1024).solve(&a, 3).unwrap();
+    assert!(sol.cost.is_finite());
+}
+
+/// Fast artifacts are durable: file round trip is bit-exact (the trig
+/// field travels in provenance and materialize rebuilds a fast operator),
+/// and the provenance gates are enforced on the loaded copy.
+#[test]
+fn fast_artifact_file_roundtrip_and_provenance_gates() {
+    let mut rng = Rng::new(17);
+    let g = GmmConfig::paper_default(2, 3, 2000).generate(&mut rng);
+    let pts = &g.dataset.points;
+    let fast = Ckm::builder()
+        .frequencies(64)
+        .sigma2(1.0)
+        .seed(2)
+        .trig(TrigBackend::Fast)
+        .build()
+        .unwrap();
+    let exact = Ckm::builder().frequencies(64).sigma2(1.0).seed(2).build().unwrap();
+
+    let art = fast.sketch_slice(pts, 3).unwrap();
+    let path = tmp("fast_artifact.json");
+    art.to_file(&path).unwrap();
+    let loaded = SketchArtifact::from_file(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(loaded, art);
+    assert_eq!(loaded.op.trig, TrigBackend::Fast);
+
+    // solving the fast artifact with an exact-configured facade is a typed
+    // rejection, and vice versa; the matching facade decodes it
+    assert!(matches!(exact.solve(&loaded, 2), Err(ApiError::TrigMismatch { .. })));
+    let exact_art = exact.sketch_slice(pts, 3).unwrap();
+    assert!(matches!(fast.solve(&exact_art, 2), Err(ApiError::TrigMismatch { .. })));
+    assert!(matches!(loaded.merge(&exact_art), Err(ApiError::TrigMismatch { .. })));
+    let sol = fast.solve(&loaded, 2).unwrap();
+    assert_eq!(sol.centroids.rows, 2);
+
+    // solving is deterministic under the fast kernel too
+    let sol2 = fast.solve(&loaded, 2).unwrap();
+    assert_eq!(sol.centroids.data, sol2.centroids.data);
+    assert_eq!(sol.cost, sol2.cost);
+}
+
+/// The windowed store inherits the trig backend from the facade: a fast
+/// store's epoch replay still matches the facade's single-pass sketch
+/// (bit-for-bit in quantized mode), and checkpoints carry the backend.
+#[test]
+fn fast_trig_store_replay_and_checkpoint() {
+    let (n_dims, per_epoch) = (3usize, 1500usize);
+    let mut rng = Rng::new(23);
+    let g = GmmConfig::paper_default(2, n_dims, 3 * per_epoch).generate(&mut rng);
+    let pts = &g.dataset.points;
+    let ckm = Ckm::builder()
+        .frequencies(48)
+        .sigma2(1.0)
+        .seed(8)
+        .trig(TrigBackend::Fast)
+        .quantization(QuantizationMode::OneBit)
+        .build()
+        .unwrap();
+
+    let mut store = ckm.store(n_dims).unwrap();
+    for e in 0..3 {
+        if e > 0 {
+            store.rotate();
+        }
+        store.ingest(&pts[e * per_epoch * n_dims..(e + 1) * per_epoch * n_dims]);
+    }
+    let win = store.window_all();
+    let single = ckm.sketch_slice(pts, n_dims).unwrap();
+    assert_eq!(win, single, "fast quantized epoch replay must be bit-identical");
+
+    // checkpoint round trip preserves the trig provenance
+    let path = tmp("fast_store.json");
+    store.to_file(&path).unwrap();
+    let back = ckm::store::SketchStore::from_file(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(back.spec().trig, TrigBackend::Fast);
+    assert_eq!(back.window_all(), win);
+}
