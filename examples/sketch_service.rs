@@ -1,0 +1,92 @@
+//! Sketch service demo: a `ckmd` daemon on a loopback TCP socket, four
+//! producers ingesting concurrently through the wire-level two-phase
+//! protocol, then solves, a rotation, and a digest-verified checkpoint.
+//!
+//! The point of the exercise: **the daemon never sees a data point**.
+//! Every producer sketches its own rows locally (under dither row keys
+//! the daemon reserved) and ships constant-size chunks; the daemon only
+//! merges exactly, so the merged cross-shard window is bit-identical to
+//! sketching the same rows in-process.
+//!
+//! Run with: `cargo run --release --example sketch_service`
+
+use ckm::data::gmm::GmmConfig;
+use ckm::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let (k, n_dims, m) = (4usize, 5usize, 256usize);
+    let per_producer = 20_000;
+
+    // The daemon's configuration is the contract every producer inherits
+    // at handshake: operator provenance (seed, σ², m), quantization mode,
+    // shard layout. Producers verify the operator checksum client-side.
+    let ckm = Ckm::builder()
+        .frequencies(m)
+        .sigma2(1.0)
+        .seed(17)
+        .quantization(QuantizationMode::OneBit)
+        .build()?;
+    let store = ckm.sharded_store(n_dims, 2)?;
+    let daemon = Daemon::new(store, ckm.clone());
+
+    // Ephemeral loopback port; serve() blocks, so it gets its own thread.
+    let listener = ServiceListener::bind("tcp:127.0.0.1:0")?;
+    let addr = listener.tcp_addr().expect("tcp listener has an address");
+    let server = std::thread::spawn(move || daemon.serve(listener));
+
+    // Four producers, each its own connection (and its own thread; the
+    // daemon shards them by producer id, so two never contend on a lock
+    // unless they hash to the same shard).
+    let producers: Vec<_> = (0..4u64)
+        .map(|p| {
+            let addr = addr.to_string();
+            std::thread::spawn(move || -> anyhow::Result<(usize, u32)> {
+                let name = format!("producer-{p}");
+                let mut client = ServiceClient::connect_tcp(&addr, &name)?;
+                let data = GmmConfig::paper_default(k, n_dims, per_producer)
+                    .generate(&mut Rng::new(100 + p))
+                    .dataset;
+                let mut rows = 0usize;
+                for chunk in data.points.chunks(4096 * n_dims) {
+                    rows += client.ingest(chunk)?.rows as usize;
+                }
+                Ok((rows, client.hello().shard_index))
+            })
+        })
+        .collect();
+    for (p, h) in producers.into_iter().enumerate() {
+        let (rows, shard) = h.join().expect("producer thread")?;
+        println!("producer-{p}: {rows} rows -> shard {shard}");
+    }
+
+    // Any client can ask for a solve over the merged cross-shard window.
+    let mut client = ServiceClient::connect_tcp(&addr.to_string(), "analyst")?;
+    let sol = client.solve_window(None, k)?;
+    println!("solved k={k}: cost {:.4e}", sol.cost);
+    // The identical query hits the daemon's generation-keyed cache.
+    let again = client.solve_window(None, k)?;
+    assert_eq!(sol.centroids.data, again.centroids.data);
+
+    // Seal the epoch (wakes the daemon's background solve-refresh), then
+    // pull a checkpoint — digest-verified while streaming.
+    client.rotate()?;
+    let dir = std::env::temp_dir().join("ckm_sketch_service_example");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("store-set.json");
+    let (bytes, digest) = client.checkpoint_to(&path)?;
+    println!("checkpoint: {bytes} bytes (fnv1a:{digest:016x}) -> {}", path.display());
+
+    let status = client.status()?;
+    println!(
+        "status: cache {}/{} hit/miss, {} refreshed solve(s), {} shard(s)",
+        status.cache_hits,
+        status.cache_misses,
+        status.refreshed_solves,
+        status.shards.len()
+    );
+
+    client.shutdown()?;
+    server.join().expect("daemon thread")?;
+    println!("daemon drained and exited");
+    Ok(())
+}

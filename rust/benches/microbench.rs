@@ -271,6 +271,53 @@ fn main() {
         }
     }
 
+    // -- Sketch service: loopback ingest + cached solve -------------------
+    // A real ckmd daemon on an ephemeral loopback port, driven through
+    // ServiceClient: each ingest iteration pays reserve + client-side
+    // sketch + frame encode/decode + absorb. The dense/1-bit pair shows
+    // what quantized payloads buy on the wire; service_solve_cached times
+    // the steady-state query path (merge snapshot + generation-keyed
+    // cache hit — no CLOMPR).
+    let svc_rows = if quick { 4_096 } else { 16_384 };
+    let svc_block = &pts[..svc_rows * n_dims];
+    let svc_size = format!("rows/iter={svc_rows} n={n_dims} m={m} shards=2");
+    for (variant, mode) in [("dense", None), ("1bit", Some(ckm::sketch::QuantizationMode::OneBit))] {
+        let mut builder =
+            ckm::api::Ckm::builder().frequencies(m).sigma2(1.0).seed(7).window(24);
+        builder = match mode {
+            Some(q) => builder.quantization(q),
+            None => builder,
+        };
+        let svc = builder.build().unwrap();
+        let store = svc.sharded_store(n_dims, 2).unwrap();
+        let daemon = ckm::service::Daemon::new(store, svc.clone());
+        let listener = ckm::service::ServiceListener::bind("tcp:127.0.0.1:0").unwrap();
+        let addr = listener.tcp_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || daemon.serve(listener));
+        let mut client = ckm::service::ServiceClient::connect_tcp(&addr, "bench-producer").unwrap();
+
+        let meas = measure(&format!("service_ingest_loopback/{variant}"), warm, samp, || {
+            let r = client.ingest(svc_block).unwrap();
+            std::hint::black_box(r.rows);
+        });
+        println!("  -> {:.2} Mrows/s over loopback ({variant})", throughput(&meas, svc_rows) / 1e6);
+        report.add("service_ingest_loopback", variant, &svc_size, &meas);
+
+        if variant == "dense" {
+            // Absorb the one cache miss outside the timed loop; every timed
+            // iteration is then a generation-keyed hit.
+            let _ = client.solve_window(None, kk).unwrap();
+            let meas = measure("service_solve_cached", warm, 3 * samp, || {
+                let s = client.solve_window(None, kk).unwrap();
+                std::hint::black_box(s.cost);
+            });
+            report.add("service_solve_cached", "hit", &format!("K={kk} m={m} shards=2"), &meas);
+        }
+
+        client.shutdown().unwrap();
+        server.join().unwrap().unwrap();
+    }
+
     report.write(&out_path).expect("failed to write BENCH.json");
     println!("wrote {out_path}");
 }

@@ -501,19 +501,13 @@ fn f64_arr(j: &Json, key: &str) -> Result<Vec<f64>, ApiError> {
 
 /// FNV-1a (64-bit) over the shape and f64 bit patterns of `W`.
 fn w_checksum(w: &Mat) -> String {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut absorb = |bytes: &[u8]| {
-        for &b in bytes {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
-    };
-    absorb(&(w.rows as u64).to_le_bytes());
-    absorb(&(w.cols as u64).to_le_bytes());
+    let mut h = crate::util::digest::Fnv1a::new();
+    h.update(&(w.rows as u64).to_le_bytes());
+    h.update(&(w.cols as u64).to_le_bytes());
     for &x in &w.data {
-        absorb(&x.to_bits().to_le_bytes());
+        h.update(&x.to_bits().to_le_bytes());
     }
-    format!("fnv1a:{h:016x}")
+    format!("fnv1a:{:016x}", h.digest())
 }
 
 #[cfg(test)]

@@ -67,6 +67,10 @@ pub struct CkmConfig {
     /// Epoch-ring capacity for [`Ckm::store`] / [`Ckm::server`]: how many
     /// epochs a windowed sketch store retains (`None` = unbounded).
     pub window_epochs: Option<usize>,
+    /// Epoch compaction policy for stores opened by this facade:
+    /// `Exponential` collapses sealed epochs into power-of-two spans so a
+    /// long-lived ring keeps `O(log E)` buckets. Default: no compaction.
+    pub compaction: crate::store::CompactionPolicy,
     /// Default decay λ for [`crate::store::SketchServer::solve`] (`None` =
     /// undecayed window over every surviving epoch).
     pub decay: Option<f64>,
@@ -99,6 +103,7 @@ impl Default for CkmConfig {
             quantization: None,
             shard: 0,
             window_epochs: None,
+            compaction: crate::store::CompactionPolicy::None,
             decay: None,
             replicates: 1,
             strategy: InitStrategy::Range,
@@ -221,6 +226,16 @@ impl CkmBuilder {
     /// rotation. Default: retain everything.
     pub fn window(mut self, epochs: usize) -> Self {
         self.cfg.window_epochs = Some(epochs);
+        self
+    }
+
+    /// Epoch compaction policy for [`Ckm::store`] / [`Ckm::server`]
+    /// rings (default: none). `Exponential` keeps at most two buckets per
+    /// power-of-two span among sealed epochs — `O(log E)` buckets over an
+    /// unbounded stream; window merges stay exact but widen to bucket
+    /// boundaries.
+    pub fn compaction(mut self, policy: crate::store::CompactionPolicy) -> Self {
+        self.cfg.compaction = policy;
         self
     }
 
@@ -498,6 +513,43 @@ impl Ckm {
             self.cfg.quantization,
             self.cfg.shard,
             self.cfg.window_epochs,
+        )
+        .map(|s| s.with_compaction(self.cfg.compaction))
+    }
+
+    /// Open a key-sharded store set
+    /// ([`ShardedStore`](crate::store::ShardedStore)) of `n_shards`
+    /// independent rings — the state object behind the `ckmd` daemon
+    /// ([`crate::service`]). Shard `i` salts its dither stream with
+    /// `.shard(base) + i`; producers map to shards by FNV-1a of their
+    /// producer id. Requires a fixed σ², like [`Ckm::store`].
+    pub fn sharded_store(
+        &self,
+        n_dims: usize,
+        n_shards: usize,
+    ) -> Result<crate::store::ShardedStore, ApiError> {
+        if n_dims == 0 {
+            return Err(ApiError::InvalidConfig {
+                field: "store",
+                reason: "n_dims must be >= 1".into(),
+            });
+        }
+        let sigma2 = self.cfg.sigma2.ok_or(ApiError::Sigma2Required)?;
+        let (spec, _op) = OpSpec::derive_with_trig(
+            self.cfg.seed,
+            self.cfg.radius,
+            sigma2,
+            self.cfg.m,
+            n_dims,
+            self.cfg.trig,
+        );
+        crate::store::ShardedStore::create(
+            spec,
+            self.cfg.quantization,
+            self.cfg.shard,
+            n_shards,
+            self.cfg.window_epochs,
+            self.cfg.compaction,
         )
     }
 

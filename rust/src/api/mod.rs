@@ -130,6 +130,23 @@ pub enum ApiError {
     #[error("malformed artifact: {0}")]
     Format(String),
 
+    /// A wire-level problem talking to (or serving) a `ckmd` daemon: bad
+    /// framing, an undecodable message, a protocol-violating sequence, or
+    /// a chunk that fails the daemon's pre-merge validation. Malformed
+    /// bytes always surface here — never as a panic or a partial merge.
+    #[error("service protocol error: {0}")]
+    ServiceProtocol(String),
+
+    /// The daemon answered a request with an error frame; `code` is the
+    /// wire error code (see `service::protocol`).
+    #[error("service error (code {code}): {message}")]
+    ServiceRemote { code: u16, message: String },
+
+    /// A streamed checkpoint arrived whole but its FNV digest disagrees
+    /// with the sender's — the transfer was corrupted in flight.
+    #[error("checkpoint digest mismatch: sender {expected:#018x}, received {actual:#018x}")]
+    ServiceDigestMismatch { expected: u64, actual: u64 },
+
     #[error("io error: {0}")]
     Io(#[from] std::io::Error),
 
@@ -148,5 +165,20 @@ impl ApiError {
 impl From<crate::util::json::JsonError> for ApiError {
     fn from(e: crate::util::json::JsonError) -> ApiError {
         ApiError::Format(e.to_string())
+    }
+}
+
+impl From<crate::util::framing::FrameError> for ApiError {
+    fn from(e: crate::util::framing::FrameError) -> ApiError {
+        match e {
+            crate::util::framing::FrameError::Io(io) => ApiError::Io(io),
+            other => ApiError::ServiceProtocol(other.to_string()),
+        }
+    }
+}
+
+impl From<crate::util::framing::WireError> for ApiError {
+    fn from(e: crate::util::framing::WireError) -> ApiError {
+        ApiError::ServiceProtocol(e.to_string())
     }
 }

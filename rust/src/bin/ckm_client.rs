@@ -1,0 +1,21 @@
+//! `ckm-client`: thin producer/consumer for a `ckmd` sketch daemon.
+//! All sketch math runs here, locally; the daemon only merges.
+
+use ckm::service::cli;
+use ckm::util::cli::Args;
+
+fn main() {
+    ckm::util::logging::init();
+    let args = Args::from_env();
+    let result = match args.command.as_deref() {
+        Some(verb) => cli::run_client(verb, &args),
+        None => {
+            cli::client_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,25 @@
+//! `ckmd`: the compressive-K-means sketch daemon (see `ckm::service`).
+
+use ckm::service::cli;
+use ckm::util::cli::Args;
+
+fn main() {
+    ckm::util::logging::init();
+    let args = Args::from_env();
+    let result = match args.command.as_deref() {
+        Some("serve") => cli::run_daemon(&args),
+        Some(other) => {
+            eprintln!("unknown command '{other}'");
+            cli::daemon_usage();
+            std::process::exit(2);
+        }
+        None => {
+            cli::daemon_usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

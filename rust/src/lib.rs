@@ -59,10 +59,25 @@
 //! `Ckm::builder().window(epochs).decay(lambda)` then
 //! [`api::Ckm::store`] / [`api::Ckm::server`].
 //!
+//! ## The sketch service (`ckmd`)
+//!
+//! [`service`] puts the store on a wire: `ckmd` is a daemon fronting N
+//! key-sharded stores (producer → shard by FNV-1a of the producer id),
+//! speaking a length-prefixed binary protocol over TCP or unix sockets
+//! whose verbs map 1:1 onto two-phase ingest. All sketch math runs
+//! client-side ([`service::ServiceClient`] / the `ckm-client` binary);
+//! the daemon reserves dither row ranges, merges exactly, rotates epochs
+//! in shard lockstep, and solves merged cross-shard snapshots behind a
+//! generation-keyed cache with background refresh on rotation.
+//! Checkpoints stream with an FNV digest computed while transferring.
+//!
 //! ## Layers
 //!
+//! - **L5 ([`service`])** — the wire layer: the `ckmd` daemon, the binary
+//!   protocol, the `ServiceClient`/`ckm-client` producers.
 //! - **L4 ([`store`])** — the serving layer: epoch-bucketed windowed /
-//!   decayed sketch stores with concurrent ingest and cached solves.
+//!   decayed sketch stores (optionally exponentially compacted), key-
+//!   sharded store sets, concurrent ingest and cached solves.
 //! - **L3 (this crate)** — the coordinator: streaming sharded sketching of
 //!   the dataset, the CLOMPR centroid solver, baselines, metrics, a CLI and
 //!   the experiment/benchmark drivers for every figure in the paper.
@@ -134,6 +149,7 @@ pub mod experiments;
 pub mod linalg;
 pub mod metrics;
 pub mod runtime;
+pub mod service;
 pub mod sketch;
 pub mod spectral;
 pub mod store;
@@ -144,8 +160,9 @@ pub mod prelude {
     pub use crate::api::{ApiError, Ckm, CkmBuilder, SketchArtifact, SolveReport};
     pub use crate::ckm::{solve, CkmOptions, InitStrategy, Solution};
     pub use crate::coordinator::Backend;
+    pub use crate::service::{Daemon, ServiceClient, ServiceListener};
     pub use crate::sketch::{QuantizationMode, RadiusKind};
-    pub use crate::store::{IngestSession, SketchServer, SketchStore};
+    pub use crate::store::{CompactionPolicy, IngestSession, ShardedStore, SketchServer, SketchStore};
     pub use crate::util::fastmath::TrigBackend;
     pub use crate::util::rng::Rng;
 }

@@ -34,6 +34,7 @@ fn main() {
         Some("merge") => cmd_merge(&args),
         Some("solve") => cmd_solve(&args),
         Some("window") => cmd_window(&args),
+        Some("client") => cmd_client(&args),
         Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(&args),
         Some(other) => {
@@ -75,6 +76,9 @@ fn usage() {
                    [--decay 0.2] [--drift 4.0] [--quantize 1bit|..|16bit]\n\
                    [--trig exact|fast] [--save-store store.json]\n\
                    (epoch replay through the store)\n\
+           client  ingest|solve|rotate|status|checkpoint|shutdown\n\
+                   --connect tcp:HOST:PORT|unix:PATH [--producer NAME] ...\n\
+                   (talk to a ckmd sketch daemon; same verbs as ckm-client)\n\
            exp     fig1|fig2|fig3|fig4|ablate|quantize [--runs R] [--full] [--persist]\n\
            bench   diff <baseline.json> <candidate.json> [--threshold 1.5]\n\
                    (fails on tracked-op ns_per_iter regressions beyond the threshold)\n\
@@ -82,6 +86,17 @@ fn usage() {
            info",
         ckm::version()
     );
+}
+
+/// `ckm client <verb>`: the same verbs as the `ckm-client` binary.
+fn cmd_client(args: &Args) -> anyhow::Result<()> {
+    match args.positionals().first() {
+        Some(verb) => ckm::service::cli::run_client(verb, args),
+        None => {
+            ckm::service::cli::client_usage();
+            Ok(())
+        }
+    }
 }
 
 /// Shared builder plumbing for the pipeline-shaped commands.

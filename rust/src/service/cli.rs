@@ -1,0 +1,246 @@
+//! Command-line entry points for the sketch service, shared by the
+//! `ckmd` binary, the `ckm-client` binary, and the `ckm client`
+//! subcommand — one implementation, three front doors.
+
+use super::client::ServiceClient;
+use super::daemon::{Daemon, ServiceListener};
+use crate::api::{Ckm, QuantizationMode};
+use crate::data::dataset::Dataset;
+use crate::sketch::RadiusKind;
+use crate::store::{CompactionPolicy, ShardedStore};
+use crate::util::cli::Args;
+use crate::util::fastmath::TrigBackend;
+use crate::util::rng::Rng;
+use std::path::Path;
+
+pub fn daemon_usage() {
+    println!(
+        "ckmd — compressive K-means sketch daemon\n\
+         \n\
+         usage: ckmd serve --listen tcp:HOST:PORT|unix:PATH --sigma2 X --n DIMS\n\
+                [--shards 2] [--m 1000] [--seed 0] [--window E]\n\
+                [--quantize 1bit|..|16bit] [--trig exact|fast]\n\
+                [--radius adapted|gaussian|folded] [--compaction none|exp]\n\
+                [--base-shard 0] [--chunk-rows 4096]\n\
+                [--restore set.json] [--save set.json]\n\
+         \n\
+         The daemon fronts N key-sharded sketch stores (producer → shard by\n\
+         FNV-1a of the producer id). All sketch math runs client-side; the\n\
+         daemon reserves dither row ranges, merges exactly, and solves\n\
+         merged snapshots. --save checkpoints the store set on shutdown."
+    );
+}
+
+pub fn client_usage() {
+    println!(
+        "ckm-client — thin client for a ckmd sketch daemon\n\
+         \n\
+         usage: ckm-client <verb> --connect tcp:HOST:PORT|unix:PATH [options]\n\
+         \n\
+         verbs:\n\
+           ingest      --producer NAME (--file data.bin | --gen N --gen-seed S)\n\
+                       [--chunk-rows 4096]  two-phase ingest; sketches locally\n\
+           solve       --k K [--window E] [--decay LAMBDA] [--out solution.json]\n\
+           rotate      seal the current epoch on every shard\n\
+           status      print shard and cache counters\n\
+           checkpoint  --out set.json  digest-verified streamed checkpoint\n\
+           shutdown    ask the daemon to drain and exit\n\
+         \n\
+         every verb also takes --producer NAME (default 'ckm-client')"
+    );
+}
+
+/// Build the daemon's solver facade and store from the common flag set.
+fn daemon_parts(args: &Args) -> anyhow::Result<(ShardedStore, Ckm)> {
+    let n_dims = args.usize_or("n", 0);
+    anyhow::ensure!(n_dims > 0, "--n DIMS is required (the store's data dimension)");
+    let sigma2: f64 = match args.opt("sigma2") {
+        Some(s) => s.parse()?,
+        None => anyhow::bail!("--sigma2 X is required (a daemon outlives any scale sample)"),
+    };
+    let shards = args.usize_or("shards", 2);
+    let mut b = Ckm::builder()
+        .frequencies(args.usize_or("m", 1000))
+        .sigma2(sigma2)
+        .seed(args.u64_or("seed", 0))
+        .radius(RadiusKind::parse(&args.str_or("radius", "adapted"))?)
+        .trig(TrigBackend::parse(&args.str_or("trig", "exact"))?)
+        .chunk_rows(args.usize_or("chunk-rows", 4096))
+        .shard(args.u64_or("base-shard", 0));
+    if let Some(e) = args.opt("window") {
+        b = b.window(e.parse()?);
+    }
+    if let Some(q) = args.opt("quantize") {
+        if !matches!(q, "none" | "dense") {
+            b = b.quantization(QuantizationMode::parse(q)?);
+        }
+    }
+    let policy = args.str_or("compaction", "none");
+    let policy = CompactionPolicy::parse(&policy)
+        .ok_or_else(|| anyhow::anyhow!("unknown compaction policy '{policy}'"))?;
+    b = b.compaction(policy);
+    let ckm = b.build()?;
+    let store = match args.opt("restore") {
+        None => ckm.sharded_store(n_dims, shards)?,
+        Some(path) => {
+            let restored = ShardedStore::from_file(path)?;
+            let fresh = ckm.sharded_store(n_dims, shards)?;
+            anyhow::ensure!(
+                restored.spec() == fresh.spec()
+                    && restored.quantization() == fresh.quantization()
+                    && restored.n_shards() == shards
+                    && restored.base_shard() == fresh.base_shard(),
+                "checkpoint '{path}' was written under a different configuration \
+                 (operator / quantization / shard layout)"
+            );
+            log::info!("restored {} shards from {path}", restored.n_shards());
+            restored
+        }
+    };
+    Ok((store, ckm))
+}
+
+/// `ckmd serve`: run the daemon until a wire `Shutdown` arrives.
+pub fn run_daemon(args: &Args) -> anyhow::Result<()> {
+    let listen = args
+        .opt("listen")
+        .ok_or_else(|| anyhow::anyhow!("--listen tcp:HOST:PORT or unix:PATH is required"))?
+        .to_string();
+    let save = args.opt("save").map(|s| s.to_string());
+    let (store, ckm) = daemon_parts(args)?;
+    args.finish()?;
+    let shards = store.n_shards();
+    let listener = ServiceListener::bind(&listen)?;
+    if let Some(addr) = listener.tcp_addr() {
+        println!("ckmd: listening on tcp:{addr} ({shards} shards)");
+    } else {
+        println!("ckmd: listening on {listen} ({shards} shards)");
+    }
+    let daemon = Daemon::new(store, ckm);
+    daemon.serve(listener)?;
+    if let Some(path) = save {
+        daemon.save(&path)?;
+        println!("ckmd: store set checkpointed to {path}");
+    }
+    println!("ckmd: shut down cleanly");
+    Ok(())
+}
+
+fn connect(args: &Args) -> anyhow::Result<ServiceClient> {
+    let addr = args
+        .opt("connect")
+        .ok_or_else(|| anyhow::anyhow!("--connect tcp:HOST:PORT or unix:PATH is required"))?;
+    let producer = args.str_or("producer", "ckm-client");
+    Ok(ServiceClient::connect(addr, &producer)?)
+}
+
+/// One `ckm-client <verb>` / `ckm client <verb>` invocation.
+pub fn run_client(verb: &str, args: &Args) -> anyhow::Result<()> {
+    match verb {
+        "ingest" => client_ingest(args),
+        "solve" => client_solve(args),
+        "rotate" => {
+            let mut c = connect(args)?;
+            args.finish()?;
+            let evicted = c.rotate()?;
+            println!("rotated; {} epoch(s) evicted", evicted.len());
+            Ok(())
+        }
+        "status" => {
+            let mut c = connect(args)?;
+            args.finish()?;
+            let s = c.status()?;
+            for sh in &s.shards {
+                println!(
+                    "shard {}: rows={} surviving={} epochs={} generation={}",
+                    sh.shard, sh.rows_ingested, sh.surviving_rows, sh.epochs, sh.generation
+                );
+            }
+            println!(
+                "cache: {} hits / {} misses; refreshed solves: {}; connections: {}",
+                s.cache_hits, s.cache_misses, s.refreshed_solves, s.connections
+            );
+            Ok(())
+        }
+        "checkpoint" => {
+            let out = args.str_or("out", "ckm-store-set.json");
+            let mut c = connect(args)?;
+            args.finish()?;
+            let (bytes, digest) = c.checkpoint_to(&out)?;
+            println!("checkpoint: {bytes} bytes -> {out} (fnv1a:{digest:016x}, verified)");
+            Ok(())
+        }
+        "shutdown" => {
+            let mut c = connect(args)?;
+            args.finish()?;
+            c.shutdown()?;
+            println!("daemon acknowledged shutdown");
+            Ok(())
+        }
+        other => {
+            anyhow::bail!("unknown client verb '{other}' (ingest|solve|rotate|status|checkpoint|shutdown)")
+        }
+    }
+}
+
+fn client_ingest(args: &Args) -> anyhow::Result<()> {
+    let file = args.opt("file").map(|s| s.to_string());
+    let gen_rows = args.usize_or("gen", 0);
+    let gen_seed = args.u64_or("gen-seed", 1);
+    let chunk_rows = args.usize_or("chunk-rows", 4096);
+    let mut c = connect(args)?;
+    args.finish()?;
+    let n = c.n_dims();
+    let points: Vec<f64> = match (file, gen_rows) {
+        (Some(path), _) => {
+            let ds = Dataset::load(Path::new(&path))?;
+            anyhow::ensure!(
+                ds.n_dims == n,
+                "dataset has {} dims, daemon expects {n}",
+                ds.n_dims
+            );
+            ds.points
+        }
+        (None, rows) if rows > 0 => {
+            // Standard-normal synthetic rows: enough to exercise ingest.
+            let mut rng = Rng::new(gen_seed);
+            (0..rows * n).map(|_| rng.normal()).collect()
+        }
+        _ => anyhow::bail!("pass --file data.bin or --gen N"),
+    };
+    let mut total = 0u64;
+    let mut chunks = 0usize;
+    for chunk in points.chunks(chunk_rows * n) {
+        let receipt = c.ingest(chunk)?;
+        total += receipt.rows;
+        chunks += 1;
+    }
+    println!(
+        "ingested {total} rows in {chunks} chunk(s) into shard {} of {}",
+        c.hello().shard_index,
+        c.hello().shard_count
+    );
+    Ok(())
+}
+
+fn client_solve(args: &Args) -> anyhow::Result<()> {
+    let k = args.usize_or("k", 10);
+    let window = args.opt("window").map(|s| s.parse::<usize>()).transpose()?;
+    let decay = args.opt("decay").map(|s| s.parse::<f64>()).transpose()?;
+    let out = args.opt("out").map(|s| s.to_string());
+    let mut c = connect(args)?;
+    args.finish()?;
+    let solution = match decay {
+        Some(lambda) => c.solve_decayed(lambda, k)?,
+        None => c.solve_window(window, k)?,
+    };
+    println!(
+        "solved k={k}: cost {:.6e}, {} centroids x {} dims",
+        solution.cost, solution.centroids.rows, solution.centroids.cols
+    );
+    if let Some(path) = out {
+        solution.to_file(&path)?;
+        println!("solution -> {path}");
+    }
+    Ok(())
+}

@@ -1,0 +1,374 @@
+//! [`ServiceClient`]: the producer/consumer side of the `ckmd` protocol.
+//!
+//! A client connects, handshakes (verifying the daemon's operator
+//! provenance bit-for-bit by re-deriving the frequency matrix locally and
+//! checking its checksum), then does **all sketch math locally**:
+//! [`ServiceClient::ingest`] runs reserve → sketch → absorb, where the
+//! sketching happens on this process's CPU with the dither keys the
+//! daemon reserved. The daemon only merges.
+//!
+//! One type serves the thin `ckm-client` binary, the `ckm client`
+//! subcommand, the examples, and the integration tests.
+
+use super::protocol::{
+    self, HelloAck, Request, Response, StatusInfo, WireChunk,
+};
+use crate::api::ApiError;
+use crate::ckm::Solution;
+use crate::store::SketchContext;
+use crate::util::digest::Fnv1a;
+use crate::util::framing::{read_frame, write_frame};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::Path;
+
+/// Object-safe client transport (TCP, unix socket, or an in-memory pipe
+/// in tests).
+pub trait Transport: Read + Write + Send {}
+impl<T: Read + Write + Send> Transport for T {}
+
+/// Receipt for one ingested chunk: where the daemon placed it in the
+/// shard's global row space (= the dither keys the chunk was sketched
+/// under) and how many rows the merge acknowledged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct IngestReceipt {
+    pub offset: u64,
+    pub rows: u64,
+}
+
+/// A connected, handshaken `ckmd` session.
+pub struct ServiceClient {
+    stream: Box<dyn Transport>,
+    ack: HelloAck,
+    ctx: SketchContext,
+}
+
+impl ServiceClient {
+    /// Connect over TCP (`HOST:PORT`) and handshake as `producer`.
+    pub fn connect_tcp(addr: &str, producer: &str) -> Result<ServiceClient, ApiError> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        ServiceClient::from_stream(Box::new(stream), producer)
+    }
+
+    /// Connect over a unix socket and handshake as `producer`.
+    #[cfg(unix)]
+    pub fn connect_unix(path: &str, producer: &str) -> Result<ServiceClient, ApiError> {
+        let stream = std::os::unix::net::UnixStream::connect(path)?;
+        ServiceClient::from_stream(Box::new(stream), producer)
+    }
+
+    /// Parse `tcp:HOST:PORT` or `unix:PATH` and connect.
+    pub fn connect(addr: &str, producer: &str) -> Result<ServiceClient, ApiError> {
+        if let Some(hostport) = addr.strip_prefix("tcp:") {
+            return ServiceClient::connect_tcp(hostport, producer);
+        }
+        #[cfg(unix)]
+        if let Some(path) = addr.strip_prefix("unix:") {
+            return ServiceClient::connect_unix(path, producer);
+        }
+        Err(ApiError::InvalidConfig {
+            field: "connect",
+            reason: format!("expected tcp:HOST:PORT or unix:PATH, got '{addr}'"),
+        })
+    }
+
+    /// Handshake over an already-open stream. Re-derives the operator
+    /// from the daemon's provenance and verifies its checksum before
+    /// returning — a client never sketches under an unverified operator.
+    pub fn from_stream(stream: Box<dyn Transport>, producer: &str) -> Result<ServiceClient, ApiError> {
+        let mut stream = stream;
+        write_frame(&mut stream, &protocol::encode_request(&Request::Hello {
+            producer: producer.to_string(),
+        }))?;
+        let ack = match read_response(&mut stream)? {
+            Response::HelloAck(ack) => ack,
+            Response::Error { code, message } => {
+                return Err(ApiError::ServiceRemote { code, message })
+            }
+            other => {
+                return Err(ApiError::ServiceProtocol(format!(
+                    "expected HelloAck, got {other:?}"
+                )))
+            }
+        };
+        if ack.protocol != protocol::PROTOCOL_VERSION {
+            return Err(ApiError::ServiceProtocol(format!(
+                "daemon speaks protocol {}, this build speaks {}",
+                ack.protocol,
+                protocol::PROTOCOL_VERSION
+            )));
+        }
+        let spec = ack.op_spec()?;
+        // from_parts materializes the operator and verifies the checksum.
+        let ctx = SketchContext::from_parts(&spec, ack.quantization()?, ack.dither_seed)?;
+        Ok(ServiceClient { stream, ack, ctx })
+    }
+
+    /// The daemon's handshake (shard assignment, provenance, capacities).
+    pub fn hello(&self) -> &HelloAck {
+        &self.ack
+    }
+
+    /// Data dimension rows must arrive in.
+    pub fn n_dims(&self) -> usize {
+        self.ack.n_dims as usize
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Response, ApiError> {
+        write_frame(&mut self.stream, &protocol::encode_request(req))?;
+        let resp = read_response(&mut self.stream)?;
+        if let Response::Error { code, message } = resp {
+            return Err(ApiError::ServiceRemote { code, message });
+        }
+        Ok(resp)
+    }
+
+    /// Two-phase ingest of a row-major chunk: reserve the row range on
+    /// the daemon (phase 1, short lock there), sketch locally under the
+    /// reserved dither keys (phase 2, no lock anywhere), ship the chunk
+    /// for exact merging (phase 3). Bit-identical to ingesting the same
+    /// rows synchronously into the shard's store.
+    pub fn ingest(&mut self, rows: &[f64]) -> Result<IngestReceipt, ApiError> {
+        let n = self.n_dims();
+        if n == 0 || rows.len() % n != 0 {
+            return Err(ApiError::InvalidConfig {
+                field: "rows",
+                reason: format!("length {} is not a multiple of n_dims {n}", rows.len()),
+            });
+        }
+        let n_rows = (rows.len() / n) as u64;
+        let offset = match self.call(&Request::ReserveRows { n_rows })? {
+            Response::Reserved { offset } => offset,
+            other => {
+                return Err(ApiError::ServiceProtocol(format!(
+                    "expected Reserved, got {other:?}"
+                )))
+            }
+        };
+        let chunk = self.ctx.sketch_chunk(rows, offset as usize);
+        let wire = WireChunk::from_chunk(&chunk);
+        match self.call(&Request::Absorb { chunk: wire })? {
+            Response::Absorbed { rows } => Ok(IngestReceipt { offset, rows }),
+            other => Err(ApiError::ServiceProtocol(format!("expected Absorbed, got {other:?}"))),
+        }
+    }
+
+    /// Seal the current epoch on every shard; returns `(shard, epoch id)`
+    /// eviction pairs.
+    pub fn rotate(&mut self) -> Result<Vec<(u32, u64)>, ApiError> {
+        match self.call(&Request::Rotate)? {
+            Response::Rotated { evicted } => Ok(evicted),
+            other => Err(ApiError::ServiceProtocol(format!("expected Rotated, got {other:?}"))),
+        }
+    }
+
+    /// Solve the merged newest-`last_e`-epochs window (`None` = all
+    /// surviving epochs) for `k` centroids.
+    pub fn solve_window(&mut self, last_e: Option<usize>, k: usize) -> Result<Solution, ApiError> {
+        let req = Request::SolveWindow { last_e: last_e.unwrap_or(0) as u64, k: k as u64 };
+        match self.call(&req)? {
+            Response::Solved(s) => Ok(s.into_solution()?),
+            other => Err(ApiError::ServiceProtocol(format!("expected Solved, got {other:?}"))),
+        }
+    }
+
+    /// Solve the merged λ-decayed snapshot for `k` centroids.
+    pub fn solve_decayed(&mut self, lambda: f64, k: usize) -> Result<Solution, ApiError> {
+        match self.call(&Request::SolveDecayed { lambda, k: k as u64 })? {
+            Response::Solved(s) => Ok(s.into_solution()?),
+            other => Err(ApiError::ServiceProtocol(format!("expected Solved, got {other:?}"))),
+        }
+    }
+
+    pub fn status(&mut self) -> Result<StatusInfo, ApiError> {
+        match self.call(&Request::Status)? {
+            Response::Status(s) => Ok(s),
+            other => Err(ApiError::ServiceProtocol(format!("expected Status, got {other:?}"))),
+        }
+    }
+
+    /// Stream the daemon's store-set checkpoint into `path`, verifying
+    /// the FNV-1a digest while receiving. Returns `(bytes, digest)`.
+    pub fn checkpoint_to<P: AsRef<Path>>(&mut self, path: P) -> Result<(u64, u64), ApiError> {
+        write_frame(&mut self.stream, &protocol::encode_request(&Request::Checkpoint))?;
+        let mut asm = CheckpointAssembler::new();
+        loop {
+            let resp = read_response(&mut self.stream)?;
+            if let Response::Error { code, message } = resp {
+                return Err(ApiError::ServiceRemote { code, message });
+            }
+            if asm.feed(resp)? {
+                break;
+            }
+        }
+        let (bytes, digest) = asm.finish()?;
+        let len = bytes.len() as u64;
+        std::fs::write(path, bytes)?;
+        Ok((len, digest))
+    }
+
+    /// Ask the daemon to drain and exit.
+    pub fn shutdown(&mut self) -> Result<(), ApiError> {
+        match self.call(&Request::Shutdown)? {
+            Response::ShutdownAck => Ok(()),
+            other => {
+                Err(ApiError::ServiceProtocol(format!("expected ShutdownAck, got {other:?}")))
+            }
+        }
+    }
+}
+
+fn read_response(stream: &mut dyn Transport) -> Result<Response, ApiError> {
+    let payload = read_frame(stream)?
+        .ok_or_else(|| ApiError::ServiceProtocol("connection closed mid-exchange".to_string()))?;
+    Ok(protocol::decode_response(&payload)?)
+}
+
+/// Reassembles a streamed checkpoint (`Begin` → `Chunk`... → `End`),
+/// digesting while receiving. Factored out of [`ServiceClient`] so the
+/// corruption-rejection path is directly testable without a socket.
+pub struct CheckpointAssembler {
+    total_len: Option<u64>,
+    digest: Fnv1a,
+    buf: Vec<u8>,
+    end: Option<(u64, u64)>,
+}
+
+impl Default for CheckpointAssembler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl CheckpointAssembler {
+    pub fn new() -> CheckpointAssembler {
+        CheckpointAssembler { total_len: None, digest: Fnv1a::new(), buf: Vec::new(), end: None }
+    }
+
+    /// Feed the next response frame; returns `true` once `End` arrived.
+    pub fn feed(&mut self, resp: Response) -> Result<bool, ApiError> {
+        match resp {
+            Response::CheckpointBegin { total_len } => {
+                if self.total_len.is_some() {
+                    return Err(ApiError::ServiceProtocol(
+                        "duplicate CheckpointBegin".to_string(),
+                    ));
+                }
+                self.total_len = Some(total_len);
+                self.buf.reserve(total_len.min(64 << 20) as usize);
+                Ok(false)
+            }
+            Response::CheckpointChunk { bytes } => {
+                if self.total_len.is_none() {
+                    return Err(ApiError::ServiceProtocol(
+                        "CheckpointChunk before CheckpointBegin".to_string(),
+                    ));
+                }
+                self.digest.update(&bytes);
+                self.buf.extend_from_slice(&bytes);
+                Ok(false)
+            }
+            Response::CheckpointEnd { digest, total_len } => {
+                self.end = Some((digest, total_len));
+                Ok(true)
+            }
+            other => Err(ApiError::ServiceProtocol(format!(
+                "unexpected frame in checkpoint stream: {other:?}"
+            ))),
+        }
+    }
+
+    /// Verify length and digest; yields the checkpoint bytes plus the
+    /// verified digest.
+    pub fn finish(self) -> Result<(Vec<u8>, u64), ApiError> {
+        let (sent_digest, sent_len) =
+            self.end.ok_or_else(|| ApiError::ServiceProtocol("checkpoint stream ended without End".to_string()))?;
+        let declared = self.total_len.unwrap_or(0);
+        if sent_len != declared || self.buf.len() as u64 != declared {
+            return Err(ApiError::ServiceProtocol(format!(
+                "checkpoint length mismatch: header {declared}, trailer {sent_len}, received {}",
+                self.buf.len()
+            )));
+        }
+        let got = self.digest.digest();
+        if got != sent_digest {
+            return Err(ApiError::ServiceDigestMismatch { expected: sent_digest, actual: got });
+        }
+        Ok((self.buf, got))
+    }
+}
+
+// The daemon answers Error frames with these codes; re-exported here so
+// callers matching on ServiceRemote don't need the protocol module.
+pub use super::protocol::error_code as remote_error_code;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stream_frames(bytes: &[u8]) -> Vec<Response> {
+        let mut out = Vec::new();
+        let total = bytes.len() as u64;
+        out.push(Response::CheckpointBegin { total_len: total });
+        let mut digest = Fnv1a::new();
+        for chunk in bytes.chunks(3) {
+            digest.update(chunk);
+            out.push(Response::CheckpointChunk { bytes: chunk.to_vec() });
+        }
+        out.push(Response::CheckpointEnd { digest: digest.digest(), total_len: total });
+        out
+    }
+
+    #[test]
+    fn checkpoint_assembler_accepts_honest_stream() {
+        let payload = b"{\"format\":\"ckm-store-set\"}".to_vec();
+        let mut asm = CheckpointAssembler::new();
+        for f in stream_frames(&payload) {
+            asm.feed(f).unwrap();
+        }
+        let (bytes, digest) = asm.finish().unwrap();
+        assert_eq!(bytes, payload);
+        assert_eq!(digest, Fnv1a::hash(&payload));
+    }
+
+    #[test]
+    fn checkpoint_assembler_rejects_corrupted_stream() {
+        let payload = b"pristine checkpoint bytes".to_vec();
+        let mut frames = stream_frames(&payload);
+        // flip one byte inside a middle chunk
+        if let Response::CheckpointChunk { bytes } = &mut frames[2] {
+            bytes[0] ^= 0x40;
+        } else {
+            panic!("frame 2 should be a chunk");
+        }
+        let mut asm = CheckpointAssembler::new();
+        for f in frames {
+            asm.feed(f).unwrap();
+        }
+        assert!(matches!(asm.finish(), Err(ApiError::ServiceDigestMismatch { .. })));
+    }
+
+    #[test]
+    fn checkpoint_assembler_rejects_truncated_and_out_of_order_streams() {
+        let payload = b"0123456789".to_vec();
+        let frames = stream_frames(&payload);
+        // drop a chunk: lengths disagree
+        let mut asm = CheckpointAssembler::new();
+        for (i, f) in frames.iter().enumerate() {
+            if i == 1 {
+                continue;
+            }
+            asm.feed(f.clone()).unwrap();
+        }
+        assert!(matches!(asm.finish(), Err(ApiError::ServiceProtocol(_))));
+        // chunk before begin
+        let mut asm = CheckpointAssembler::new();
+        assert!(asm
+            .feed(Response::CheckpointChunk { bytes: vec![1] })
+            .is_err());
+        // end never arrives
+        let asm = CheckpointAssembler::new();
+        assert!(matches!(asm.finish(), Err(ApiError::ServiceProtocol(_))));
+    }
+}

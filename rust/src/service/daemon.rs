@@ -1,0 +1,567 @@
+//! `ckmd`: the sketch daemon. Listens on TCP or a unix socket, fronts a
+//! key-sharded [`ShardedStore`], and serves the wire protocol of
+//! [`super::protocol`].
+//!
+//! Division of labor (the protocol's invariant): **all sketch math runs
+//! client-side**. The daemon only reserves row ranges, exactly merges
+//! client-sketched chunks, rotates epochs, and solves merged snapshots —
+//! so its per-request work is O(m), never O(rows · m), and a daemon
+//! serving N producers does no more arithmetic than a single-process
+//! [`crate::store::SketchServer`].
+//!
+//! Concurrency shape: one handler thread per connection (each producer's
+//! requests are sequential anyway — the protocol is request/response),
+//! per-shard locks inside the store (producers on different shards never
+//! contend), one background *solve-refresh* thread that re-solves the hot
+//! `(query, k)` pairs after every rotation so interactive clients keep
+//! hitting the generation-keyed cache.
+
+use super::protocol::{
+    self, error_code, HelloAck, Request, Response, StatusInfo, WireShardStats, WireSolution,
+};
+use crate::api::{ApiError, Ckm};
+use crate::ckm::Solution;
+use crate::store::ShardedStore;
+use crate::util::digest::Fnv1a;
+use crate::util::framing::{read_frame, write_frame, FrameError};
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Checkpoint frames carry at most this many payload bytes each, so the
+/// receiver digests and writes incrementally instead of buffering a
+/// monolithic frame.
+pub const CHECKPOINT_CHUNK_BYTES: usize = 64 << 10;
+
+/// Solve-cache capacity (distinct `(query, k, generations)` entries).
+const SOLVE_CACHE_CAP: usize = 16;
+
+/// How many distinct `(query, k)` pairs the refresh thread keeps warm.
+const HOT_QUERY_CAP: usize = 8;
+
+/// Accept-loop poll interval while waiting for connections or shutdown.
+const POLL_INTERVAL: Duration = Duration::from_millis(25);
+
+/// How long `serve` waits for in-flight connections to drain on shutdown.
+const DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// A solve request's identity (λ compared by bit pattern so the key is
+/// `Eq`-safe).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Query {
+    /// Newest `e` epochs; 0 = everything surviving.
+    Window(u64),
+    Decayed(u64),
+}
+
+/// One listening endpoint. `bind` parses `tcp:HOST:PORT` or `unix:PATH`
+/// (the latter only on unix; a stale socket file is replaced).
+pub enum ServiceListener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(std::os::unix::net::UnixListener),
+}
+
+impl ServiceListener {
+    pub fn bind(addr: &str) -> Result<ServiceListener, ApiError> {
+        if let Some(hostport) = addr.strip_prefix("tcp:") {
+            return Ok(ServiceListener::Tcp(TcpListener::bind(hostport)?));
+        }
+        #[cfg(unix)]
+        if let Some(path) = addr.strip_prefix("unix:") {
+            let _ = std::fs::remove_file(path); // stale socket from a dead daemon
+            return Ok(ServiceListener::Unix(std::os::unix::net::UnixListener::bind(path)?));
+        }
+        Err(ApiError::InvalidConfig {
+            field: "listen",
+            reason: format!("expected tcp:HOST:PORT or unix:PATH, got '{addr}'"),
+        })
+    }
+
+    /// The bound TCP address (for `tcp:127.0.0.1:0` ephemeral binds).
+    pub fn tcp_addr(&self) -> Option<std::net::SocketAddr> {
+        match self {
+            ServiceListener::Tcp(l) => l.local_addr().ok(),
+            #[cfg(unix)]
+            ServiceListener::Unix(_) => None,
+        }
+    }
+}
+
+struct SolveCacheEntry {
+    query: Query,
+    k: u64,
+    /// Per-shard generation vector the artifact was merged under.
+    generations: Vec<u64>,
+    solution: Solution,
+}
+
+/// Shared daemon state: the sharded store, the solver facade, the
+/// generation-vector-keyed solve cache, and the refresh machinery.
+struct ServiceState {
+    store: ShardedStore,
+    solver: Ckm,
+    cache: Mutex<Vec<SolveCacheEntry>>,
+    /// Most-recently-solved `(query, k)` pairs, warmest first.
+    hot: Mutex<Vec<(Query, u64)>>,
+    cache_hits: AtomicU64,
+    cache_misses: AtomicU64,
+    refreshed_solves: AtomicU64,
+    connections: AtomicU64,
+    shutdown: AtomicBool,
+    /// Refresh-thread doorbell: `true` = a rotation happened since the
+    /// last refresh pass.
+    refresh_pending: Mutex<bool>,
+    refresh_cv: Condvar,
+}
+
+impl ServiceState {
+    fn artifact_for(&self, q: Query) -> Result<(crate::api::SketchArtifact, Vec<u64>), ApiError> {
+        match q {
+            Query::Window(0) => self.store.merged_window(None),
+            Query::Window(e) => self.store.merged_window(Some(e as usize)),
+            Query::Decayed(bits) => self.store.merged_decayed(f64::from_bits(bits)),
+        }
+    }
+
+    /// Serve a solve: merge a consistent snapshot (cheap, O(shards·m)),
+    /// then answer from the cache when the generation vector is unchanged
+    /// — the CLOMPR decode is the expensive part and never re-runs for an
+    /// unchanged store.
+    fn solve_query(&self, q: Query, k: u64, counted: bool) -> Result<Solution, ApiError> {
+        let (artifact, generations) = self.artifact_for(q)?;
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(e) = cache
+                .iter()
+                .find(|e| e.query == q && e.k == k && e.generations == generations)
+            {
+                if counted {
+                    self.cache_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                return Ok(e.solution.clone());
+            }
+        }
+        if counted {
+            self.cache_misses.fetch_add(1, Ordering::Relaxed);
+        }
+        let solution = self.solver.solve(&artifact, k as usize)?;
+        let mut cache = self.cache.lock().unwrap();
+        // Another thread may have solved the same snapshot meanwhile;
+        // last write wins, both computed the identical solution.
+        cache.retain(|e| !(e.query == q && e.k == k));
+        cache.insert(0, SolveCacheEntry { query: q, k, generations, solution: solution.clone() });
+        cache.truncate(SOLVE_CACHE_CAP);
+        drop(cache);
+        let mut hot = self.hot.lock().unwrap();
+        hot.retain(|&(hq, hk)| !(hq == q && hk == k));
+        hot.insert(0, (q, k));
+        hot.truncate(HOT_QUERY_CAP);
+        Ok(solution)
+    }
+
+    fn ring_refresh_bell(&self) {
+        *self.refresh_pending.lock().unwrap() = true;
+        self.refresh_cv.notify_all();
+    }
+
+    fn status(&self) -> StatusInfo {
+        let shards = self
+            .store
+            .shard_stats()
+            .into_iter()
+            .map(|s| WireShardStats {
+                shard: s.shard as u32,
+                rows_ingested: s.rows_ingested as u64,
+                surviving_rows: s.surviving_rows as u64,
+                epochs: s.epochs as u64,
+                generation: s.generation,
+                current_epoch_id: s.current_epoch_id,
+            })
+            .collect();
+        StatusInfo {
+            shards,
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            refreshed_solves: self.refreshed_solves.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
+        }
+    }
+
+    fn hello_ack(&self, producer: &str) -> HelloAck {
+        let shard = self.store.shard_for_producer(producer);
+        let spec = self.store.spec();
+        HelloAck {
+            protocol: protocol::PROTOCOL_VERSION,
+            shard_index: shard as u32,
+            shard_count: self.store.n_shards() as u32,
+            seed: spec.seed,
+            radius: spec.radius.name().to_string(),
+            sigma2: spec.sigma2,
+            m: spec.m as u64,
+            n_dims: spec.n_dims as u64,
+            trig: spec.trig.name().to_string(),
+            checksum: spec.checksum.clone(),
+            quant_bits: self.store.quantization().map(|m| m.bits() as u8).unwrap_or(0),
+            dither_seed: self.store.dither_seed(shard),
+            window_capacity: self.store.with_shard(0, |s| s.capacity()).unwrap_or(0) as u64,
+            chunk_rows: self.solver.config().sketcher.chunk_rows as u64,
+        }
+    }
+}
+
+fn error_response(e: &ApiError) -> Response {
+    let code = match e {
+        ApiError::ServiceProtocol(_) => error_code::PROTOCOL,
+        ApiError::InvalidConfig { .. }
+        | ApiError::OperatorMismatch { .. }
+        | ApiError::QuantizationMismatch { .. }
+        | ApiError::TrigMismatch { .. } => error_code::INVALID_ARGUMENT,
+        ApiError::EmptySketch | ApiError::EmptySource => error_code::SOLVE,
+        _ => error_code::INTERNAL,
+    };
+    Response::Error { code, message: e.to_string() }
+}
+
+/// The daemon: construct with a store and a solver facade, then
+/// [`Daemon::serve`] a listener. Cheap to clone handles via `Arc` inside.
+pub struct Daemon {
+    state: Arc<ServiceState>,
+}
+
+impl Daemon {
+    pub fn new(store: ShardedStore, solver: Ckm) -> Daemon {
+        Daemon {
+            state: Arc::new(ServiceState {
+                store,
+                solver,
+                cache: Mutex::new(Vec::new()),
+                hot: Mutex::new(Vec::new()),
+                cache_hits: AtomicU64::new(0),
+                cache_misses: AtomicU64::new(0),
+                refreshed_solves: AtomicU64::new(0),
+                connections: AtomicU64::new(0),
+                shutdown: AtomicBool::new(false),
+                refresh_pending: Mutex::new(false),
+                refresh_cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Ask the daemon to stop accepting and drain (same effect as a wire
+    /// `Shutdown`).
+    pub fn request_shutdown(&self) {
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        self.state.refresh_cv.notify_all();
+    }
+
+    /// Checkpoint the store set to a file (used by `ckmd serve --save`).
+    pub fn save<P: AsRef<std::path::Path>>(&self, path: P) -> Result<(), ApiError> {
+        self.state.store.to_file(path)
+    }
+
+    /// Daemon-wide counters (also served over the wire as `Status`).
+    pub fn status(&self) -> StatusInfo {
+        self.state.status()
+    }
+
+    /// Accept and serve connections until a `Shutdown` request (or
+    /// [`Daemon::request_shutdown`]) arrives, then drain in-flight
+    /// connections and stop the refresh thread. Blocks the caller.
+    pub fn serve(&self, listener: ServiceListener) -> Result<(), ApiError> {
+        let refresh = spawn_refresh_thread(Arc::clone(&self.state));
+        let mut handlers = Vec::new();
+        match &listener {
+            ServiceListener::Tcp(l) => {
+                l.set_nonblocking(true)?;
+                self.accept_loop(&mut handlers, || match l.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false).ok();
+                        s.set_nodelay(true).ok();
+                        Some(Ok(Box::new(s) as Box<dyn Conn>))
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                    Err(e) => Some(Err(e)),
+                })?;
+            }
+            #[cfg(unix)]
+            ServiceListener::Unix(l) => {
+                l.set_nonblocking(true)?;
+                self.accept_loop(&mut handlers, || match l.accept() {
+                    Ok((s, _)) => {
+                        s.set_nonblocking(false).ok();
+                        Some(Ok(Box::new(s) as Box<dyn Conn>))
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
+                    Err(e) => Some(Err(e)),
+                })?;
+            }
+        }
+        // Drain: connected producers get DRAIN_TIMEOUT to finish their
+        // in-flight request/response exchanges.
+        let deadline = Instant::now() + DRAIN_TIMEOUT;
+        while self.state.connections.load(Ordering::SeqCst) > 0 && Instant::now() < deadline {
+            std::thread::sleep(POLL_INTERVAL);
+        }
+        self.state.refresh_cv.notify_all();
+        let _ = refresh.join();
+        for h in handlers {
+            // Handlers see the shutdown flag at their next request; only
+            // join the ones that already finished to avoid blocking on a
+            // producer that went silent mid-session.
+            if h.is_finished() {
+                let _ = h.join();
+            }
+        }
+        Ok(())
+    }
+
+    fn accept_loop(
+        &self,
+        handlers: &mut Vec<std::thread::JoinHandle<()>>,
+        mut accept: impl FnMut() -> Option<std::io::Result<Box<dyn Conn>>>,
+    ) -> Result<(), ApiError> {
+        while !self.state.shutdown.load(Ordering::SeqCst) {
+            match accept() {
+                Some(Ok(stream)) => {
+                    let state = Arc::clone(&self.state);
+                    handlers.push(std::thread::spawn(move || handle_connection(state, stream)));
+                }
+                Some(Err(e)) => return Err(ApiError::Io(e)),
+                None => std::thread::sleep(POLL_INTERVAL),
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Object-safe connection stream (TCP or unix).
+pub trait Conn: Read + Write + Send {}
+impl<T: Read + Write + Send> Conn for T {}
+
+/// Decrements the live-connection counter even if the handler panics.
+struct ConnGuard<'a>(&'a AtomicU64);
+impl Drop for ConnGuard<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn send(stream: &mut dyn Conn, resp: &Response) -> Result<(), FrameError> {
+    write_frame(stream, &protocol::encode_response(resp))
+}
+
+/// Serve one connection: a `Hello` handshake assigning the shard, then a
+/// sequential request/response loop. Every malformed input becomes a typed
+/// error frame (or a dropped connection) — never a panic, never a partial
+/// merge.
+fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
+    state.connections.fetch_add(1, Ordering::SeqCst);
+    let _guard = ConnGuard(&state.connections);
+
+    // Handshake: the first frame must be Hello; it keys the shard.
+    let shard = match read_frame(&mut stream) {
+        Ok(Some(payload)) => match protocol::decode_request(&payload) {
+            Ok(Request::Hello { producer }) => {
+                let ack = state.hello_ack(&producer);
+                let shard = ack.shard_index as usize;
+                if send(&mut stream, &Response::HelloAck(ack)).is_err() {
+                    return;
+                }
+                shard
+            }
+            Ok(other) => {
+                let _ = send(
+                    &mut stream,
+                    &Response::Error {
+                        code: error_code::PROTOCOL,
+                        message: format!("expected Hello first, got {other:?}"),
+                    },
+                );
+                return;
+            }
+            Err(e) => {
+                let _ = send(
+                    &mut stream,
+                    &Response::Error { code: error_code::PROTOCOL, message: e.to_string() },
+                );
+                return;
+            }
+        },
+        _ => return, // closed or broken before the handshake
+    };
+
+    loop {
+        let payload = match read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            Ok(None) => return, // clean close between frames
+            Err(FrameError::Io(_)) | Err(FrameError::Truncated) => return,
+            Err(e) => {
+                // Bad magic / oversized header: the stream is unframed
+                // garbage from here on — report and hang up.
+                let _ = send(
+                    &mut stream,
+                    &Response::Error { code: error_code::PROTOCOL, message: e.to_string() },
+                );
+                return;
+            }
+        };
+        let req = match protocol::decode_request(&payload) {
+            Ok(r) => r,
+            Err(e) => {
+                // The *frame* was intact, so the stream stays usable:
+                // report the malformed message and keep serving.
+                if send(
+                    &mut stream,
+                    &Response::Error { code: error_code::PROTOCOL, message: e.to_string() },
+                )
+                .is_err()
+                {
+                    return;
+                }
+                continue;
+            }
+        };
+        if state.shutdown.load(Ordering::SeqCst) && !matches!(req, Request::Shutdown) {
+            let _ = send(
+                &mut stream,
+                &Response::Error {
+                    code: error_code::SHUTTING_DOWN,
+                    message: "daemon is shutting down".to_string(),
+                },
+            );
+            return;
+        }
+        match req {
+            Request::Hello { .. } => {
+                if send(
+                    &mut stream,
+                    &Response::Error {
+                        code: error_code::PROTOCOL,
+                        message: "session already established".to_string(),
+                    },
+                )
+                .is_err()
+                {
+                    return;
+                }
+            }
+            Request::ReserveRows { n_rows } => {
+                let offset = state.store.reserve(shard, n_rows as usize) as u64;
+                if send(&mut stream, &Response::Reserved { offset }).is_err() {
+                    return;
+                }
+            }
+            Request::Absorb { chunk } => {
+                let resp = match chunk.into_chunk() {
+                    Ok(c) => match state.store.try_absorb(shard, c) {
+                        Ok(rows) => Response::Absorbed { rows: rows as u64 },
+                        Err(e) => error_response(&e),
+                    },
+                    Err(e) => Response::Error {
+                        code: error_code::PROTOCOL,
+                        message: e.to_string(),
+                    },
+                };
+                if send(&mut stream, &resp).is_err() {
+                    return;
+                }
+            }
+            Request::Rotate => {
+                let evicted = state
+                    .store
+                    .rotate_all()
+                    .into_iter()
+                    .flat_map(|(s, ids)| ids.into_iter().map(move |id| (s as u32, id)))
+                    .collect();
+                state.ring_refresh_bell();
+                if send(&mut stream, &Response::Rotated { evicted }).is_err() {
+                    return;
+                }
+            }
+            Request::SolveWindow { last_e, k } => {
+                let resp = match state.solve_query(Query::Window(last_e), k, true) {
+                    Ok(sol) => Response::Solved(WireSolution::from_solution(&sol)),
+                    Err(e) => error_response(&e),
+                };
+                if send(&mut stream, &resp).is_err() {
+                    return;
+                }
+            }
+            Request::SolveDecayed { lambda, k } => {
+                let resp = match state.solve_query(Query::Decayed(lambda.to_bits()), k, true) {
+                    Ok(sol) => Response::Solved(WireSolution::from_solution(&sol)),
+                    Err(e) => error_response(&e),
+                };
+                if send(&mut stream, &resp).is_err() {
+                    return;
+                }
+            }
+            Request::Checkpoint => {
+                let bytes = state.store.to_json().to_pretty().into_bytes();
+                let total_len = bytes.len() as u64;
+                if send(&mut stream, &Response::CheckpointBegin { total_len }).is_err() {
+                    return;
+                }
+                // Digest computed while streaming — the trailer's digest
+                // covers exactly the bytes that went over the wire.
+                let mut digest = Fnv1a::new();
+                for chunk in bytes.chunks(CHECKPOINT_CHUNK_BYTES) {
+                    digest.update(chunk);
+                    let resp = Response::CheckpointChunk { bytes: chunk.to_vec() };
+                    if send(&mut stream, &resp).is_err() {
+                        return;
+                    }
+                }
+                let end = Response::CheckpointEnd { digest: digest.digest(), total_len };
+                if send(&mut stream, &end).is_err() {
+                    return;
+                }
+            }
+            Request::Status => {
+                if send(&mut stream, &Response::Status(state.status())).is_err() {
+                    return;
+                }
+            }
+            Request::Shutdown => {
+                let _ = send(&mut stream, &Response::ShutdownAck);
+                state.shutdown.store(true, Ordering::SeqCst);
+                state.refresh_cv.notify_all();
+                return;
+            }
+        }
+    }
+}
+
+/// The solve-refresh thread: woken by every rotation, re-solves the hot
+/// `(query, k)` pairs so the next interactive solve hits the cache at the
+/// new generation vector.
+fn spawn_refresh_thread(state: Arc<ServiceState>) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || loop {
+        {
+            let mut pending = state.refresh_pending.lock().unwrap();
+            while !*pending && !state.shutdown.load(Ordering::SeqCst) {
+                let (p, _timeout) =
+                    state.refresh_cv.wait_timeout(pending, Duration::from_millis(200)).unwrap();
+                pending = p;
+            }
+            if state.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            *pending = false;
+        }
+        let hot: Vec<(Query, u64)> = state.hot.lock().unwrap().clone();
+        for (q, k) in hot {
+            if state.shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            // Uncounted: refresh solves are background work, not client
+            // cache traffic.
+            if state.solve_query(q, k, false).is_ok() {
+                state.refreshed_solves.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    })
+}

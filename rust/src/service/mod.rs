@@ -1,0 +1,41 @@
+//! L5 service: the sketch pipeline over a wire.
+//!
+//! The sketch's whole value proposition is operational — constant-size
+//! state, exact merges, solves decoupled from data volume. This layer
+//! turns that into a deployable system: `ckmd`, a daemon fronting N
+//! key-sharded [`crate::store::SketchStore`]s, speaking a length-prefixed
+//! binary protocol whose verbs map 1:1 onto the store's two-phase ingest
+//! algebra.
+//!
+//! The protocol's invariant: **sketch math stays client-side**. A
+//! producer handshakes ([`protocol::Request::Hello`] → operator
+//! provenance + shard assignment, checksum-verified by the client), then
+//! loops reserve → sketch-locally → absorb; the daemon only hands out
+//! dither row ranges, merges exactly (integer adds for quantized chunks,
+//! after [`crate::sketch::quantize::PackedPartial::unpack`]'s canonical-
+//! form validation), rotates epochs in shard lockstep, and solves merged
+//! cross-shard snapshots behind a generation-vector-keyed cache. N
+//! producers ingesting through a daemon produce *bit-identical* store
+//! state to the same rows sketched in-process, and the daemon's CPU cost
+//! stays O(m) per request regardless of data volume.
+//!
+//! - [`protocol`] — wire messages + strict binary codec (unknown tags,
+//!   lying lengths, trailing bytes, forged packed payloads: all typed
+//!   errors, never panics or partial merges).
+//! - [`daemon`] — [`daemon::Daemon`]: listener (TCP / unix socket),
+//!   thread-per-connection handlers, background solve-refresh on
+//!   rotation, digest-while-streaming checkpoints.
+//! - [`client`] — [`client::ServiceClient`]: the library type behind the
+//!   `ckm-client` binary, the `ckm client` subcommand, and the examples;
+//!   plus [`client::CheckpointAssembler`] (digest-verified checkpoint
+//!   reception).
+//! - [`cli`] — shared arg plumbing for `ckmd` / `ckm-client`.
+
+pub mod cli;
+pub mod client;
+pub mod daemon;
+pub mod protocol;
+
+pub use client::{CheckpointAssembler, IngestReceipt, ServiceClient};
+pub use daemon::{Daemon, ServiceListener, CHECKPOINT_CHUNK_BYTES};
+pub use protocol::{HelloAck, StatusInfo, PROTOCOL_VERSION};

@@ -1,0 +1,737 @@
+//! The `ckmd` wire protocol: tagged request/response messages inside
+//! [`crate::util::framing`] frames.
+//!
+//! Verbs map 1:1 onto the store's two-phase ingest algebra — the daemon
+//! never does sketch math. A producer [`Request::Hello`]s (capability +
+//! provenance handshake: the ack carries everything needed to rebuild the
+//! sketching operator client-side and verify its checksum), then loops
+//! `ReserveRows` → sketch locally → `Absorb`; snapshots come back from
+//! `SolveWindow` / `SolveDecayed`; `Checkpoint` streams the store-set
+//! file in chunks with an FNV-1a digest computed *while transferring* on
+//! both ends.
+//!
+//! Decoding is strict: unknown tags, truncated fields, lying lengths and
+//! trailing bytes are all typed [`WireError`]s (never panics), and packed
+//! quantized payloads go through [`PackedPartial::unpack`]'s canonical-
+//! form validation before they ever reach a store.
+
+use crate::api::{ApiError, OpSpec, QuantizationMode};
+use crate::ckm::Solution;
+use crate::data::dataset::Bounds;
+use crate::linalg::{CVec, Mat};
+use crate::sketch::quantize::PackedPartial;
+use crate::sketch::streaming::SketchAccumulator;
+use crate::sketch::RadiusKind;
+use crate::store::ChunkSketch;
+use crate::util::fastmath::TrigBackend;
+use crate::util::framing::{ByteReader, ByteWriter, WireError};
+
+/// Wire protocol version; bumped on any incompatible message change.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Sanity cap on decoded shape fields (m, dims, k, counts). Far above any
+/// real configuration, far below anything that could exhaust memory when
+/// multiplied out inside a [`crate::util::framing::MAX_FRAME_LEN`] frame.
+const MAX_SHAPE: usize = 1 << 28;
+
+/// Wire error codes carried by [`Response::Error`].
+pub mod error_code {
+    /// Malformed or out-of-sequence message.
+    pub const PROTOCOL: u16 = 1;
+    /// Well-formed but semantically invalid argument.
+    pub const INVALID_ARGUMENT: u16 = 2;
+    /// The solve itself failed (e.g. empty store).
+    pub const SOLVE: u16 = 3;
+    /// Daemon-side internal failure.
+    pub const INTERNAL: u16 = 4;
+    /// The daemon is draining and accepts no new work.
+    pub const SHUTTING_DOWN: u16 = 5;
+}
+
+// request tags
+const T_HELLO: u8 = 0x01;
+const T_RESERVE: u8 = 0x02;
+const T_ABSORB: u8 = 0x03;
+const T_ROTATE: u8 = 0x04;
+const T_SOLVE_WINDOW: u8 = 0x05;
+const T_SOLVE_DECAYED: u8 = 0x06;
+const T_CHECKPOINT: u8 = 0x07;
+const T_STATUS: u8 = 0x08;
+const T_SHUTDOWN: u8 = 0x09;
+
+// response tags
+const T_HELLO_ACK: u8 = 0x81;
+const T_RESERVED: u8 = 0x82;
+const T_ABSORBED: u8 = 0x83;
+const T_ROTATED: u8 = 0x84;
+const T_SOLVED: u8 = 0x85;
+const T_CKPT_BEGIN: u8 = 0x86;
+const T_CKPT_CHUNK: u8 = 0x87;
+const T_CKPT_END: u8 = 0x88;
+const T_STATUS_INFO: u8 = 0x89;
+const T_ERROR: u8 = 0x8a;
+const T_SHUTDOWN_ACK: u8 = 0x8b;
+
+// chunk payload kinds inside Absorb
+const CHUNK_DENSE: u8 = 0;
+const CHUNK_PACKED: u8 = 1;
+
+/// Client → daemon messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Open a session: identify the producer (its id keys the shard
+    /// assignment) and negotiate capabilities.
+    Hello { producer: String },
+    /// Phase 1: reserve `n_rows` global row indices on this session's
+    /// shard. The returned offset keys the dither stream client-side.
+    ReserveRows { n_rows: u64 },
+    /// Phase 3: ship a client-sketched chunk for exact merging.
+    Absorb { chunk: WireChunk },
+    /// Seal the current epoch on every shard (lockstep time).
+    Rotate,
+    /// Solve the merged newest-`last_e`-epochs window (`0` = everything
+    /// surviving) for `k` centroids.
+    SolveWindow { last_e: u64, k: u64 },
+    /// Solve the merged λ-decayed snapshot for `k` centroids.
+    SolveDecayed { lambda: f64, k: u64 },
+    /// Stream the whole store-set checkpoint back, digest-while-transfer.
+    Checkpoint,
+    Status,
+    /// Ask the daemon to drain and exit.
+    Shutdown,
+}
+
+/// Daemon → client messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    HelloAck(HelloAck),
+    Reserved { offset: u64 },
+    Absorbed { rows: u64 },
+    /// `(shard, epoch id)` pairs evicted by the rotation.
+    Rotated { evicted: Vec<(u32, u64)> },
+    Solved(WireSolution),
+    /// Checkpoint stream header; `total_len` bytes follow in chunks.
+    CheckpointBegin { total_len: u64 },
+    CheckpointChunk { bytes: Vec<u8> },
+    /// Checkpoint stream trailer: the sender's FNV-1a digest over exactly
+    /// `total_len` streamed bytes.
+    CheckpointEnd { digest: u64, total_len: u64 },
+    Status(StatusInfo),
+    Error { code: u16, message: String },
+    ShutdownAck,
+}
+
+/// Everything the daemon tells a producer at handshake: protocol level,
+/// shard assignment, and the full operator provenance (the client
+/// re-derives the frequency matrix locally and verifies `checksum`
+/// bit-for-bit before sketching anything).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HelloAck {
+    pub protocol: u32,
+    /// Shard this producer's ingest lands on: `fnv1a(producer) % shards`.
+    pub shard_index: u32,
+    pub shard_count: u32,
+    pub seed: u64,
+    pub radius: String,
+    pub sigma2: f64,
+    pub m: u64,
+    pub n_dims: u64,
+    pub trig: String,
+    pub checksum: String,
+    /// Quantization bit depth; 0 = dense f64 sketching.
+    pub quant_bits: u8,
+    /// The assigned shard's dither-stream seed (quantized mode).
+    pub dither_seed: u64,
+    /// Ring capacity in epochs; 0 = unbounded.
+    pub window_capacity: u64,
+    /// The daemon's preferred rows-per-chunk (advisory).
+    pub chunk_rows: u64,
+}
+
+impl HelloAck {
+    /// Rebuild the operator provenance the ack describes. The checksum is
+    /// carried along so [`crate::store::SketchContext::from_parts`] can
+    /// verify the re-derived matrix against it.
+    pub fn op_spec(&self) -> Result<OpSpec, ApiError> {
+        let radius = RadiusKind::parse(&self.radius)
+            .map_err(|e| ApiError::ServiceProtocol(format!("handshake radius: {e}")))?;
+        let trig = TrigBackend::parse(&self.trig)
+            .map_err(|e| ApiError::ServiceProtocol(format!("handshake trig: {e}")))?;
+        Ok(OpSpec {
+            seed: self.seed,
+            radius,
+            sigma2: self.sigma2,
+            m: self.m as usize,
+            n_dims: self.n_dims as usize,
+            trig,
+            checksum: self.checksum.clone(),
+        })
+    }
+
+    /// The negotiated quantization mode (`None` = dense).
+    pub fn quantization(&self) -> Result<Option<QuantizationMode>, ApiError> {
+        match self.quant_bits {
+            0 => Ok(None),
+            b => {
+                let mode = QuantizationMode::Bits(b).normalized();
+                mode.validate().map_err(|e| {
+                    ApiError::ServiceProtocol(format!("handshake quantization: {e}"))
+                })?;
+                Ok(Some(mode))
+            }
+        }
+    }
+}
+
+/// A chunk sketch as it travels: dense accumulators ship their f64 sums,
+/// quantized accumulators ship the bit-packed canonical form.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WireChunk {
+    Dense(SketchAccumulator),
+    Packed(PackedPartial),
+}
+
+impl WireChunk {
+    /// Lower a store-layer chunk onto the wire (quantized chunks pack).
+    pub fn from_chunk(chunk: &ChunkSketch) -> WireChunk {
+        match chunk {
+            ChunkSketch::Dense(a) => WireChunk::Dense(a.clone()),
+            ChunkSketch::Quantized(a) => WireChunk::Packed(a.pack()),
+        }
+    }
+
+    /// Raise back into a mergeable store chunk. Packed payloads pass
+    /// [`PackedPartial::unpack`]'s canonical-form validation here — a
+    /// forged payload dies at the protocol boundary.
+    pub fn into_chunk(self) -> Result<ChunkSketch, WireError> {
+        match self {
+            WireChunk::Dense(a) => Ok(ChunkSketch::Dense(a)),
+            WireChunk::Packed(p) => p
+                .unpack()
+                .map(ChunkSketch::Quantized)
+                .map_err(|e| WireError::Invalid(format!("packed chunk: {e}"))),
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        match self {
+            WireChunk::Dense(a) => a.count,
+            WireChunk::Packed(p) => p.count,
+        }
+    }
+}
+
+/// A solve result as it travels.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireSolution {
+    pub k: u64,
+    pub n_dims: u64,
+    /// Row-major `k × n_dims` centroids.
+    pub centroids: Vec<f64>,
+    pub alpha: Vec<f64>,
+    pub cost: f64,
+}
+
+impl WireSolution {
+    pub fn from_solution(s: &Solution) -> WireSolution {
+        WireSolution {
+            k: s.centroids.rows as u64,
+            n_dims: s.centroids.cols as u64,
+            centroids: s.centroids.data.clone(),
+            alpha: s.alpha.clone(),
+            cost: s.cost,
+        }
+    }
+
+    pub fn into_solution(self) -> Result<Solution, WireError> {
+        let (k, n) = (self.k as usize, self.n_dims as usize);
+        if self.centroids.len() != k * n || self.alpha.len() != k {
+            return Err(WireError::Invalid(format!(
+                "solution shape: {} centroid values, {} weights for k={k}, n={n}",
+                self.centroids.len(),
+                self.alpha.len()
+            )));
+        }
+        Ok(Solution {
+            centroids: Mat { rows: k, cols: n, data: self.centroids },
+            alpha: self.alpha,
+            cost: self.cost,
+        })
+    }
+}
+
+/// One shard's counters inside [`StatusInfo`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireShardStats {
+    pub shard: u32,
+    pub rows_ingested: u64,
+    pub surviving_rows: u64,
+    pub epochs: u64,
+    pub generation: u64,
+    pub current_epoch_id: u64,
+}
+
+/// Daemon-wide introspection snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StatusInfo {
+    pub shards: Vec<WireShardStats>,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Solves re-run by the background refresh thread since startup.
+    pub refreshed_solves: u64,
+    /// Currently open client connections.
+    pub connections: u64,
+}
+
+// -- encoding ------------------------------------------------------------
+
+fn put_bounds(w: &mut ByteWriter, b: &Bounds) {
+    w.f64_slice(&b.lo);
+    w.f64_slice(&b.hi);
+}
+
+fn get_bounds(r: &mut ByteReader) -> Result<Bounds, WireError> {
+    let lo = r.f64_slice()?;
+    let hi = r.f64_slice()?;
+    if lo.len() != hi.len() {
+        return Err(WireError::Invalid(format!(
+            "bounds lo has {} dims, hi has {}",
+            lo.len(),
+            hi.len()
+        )));
+    }
+    Ok(Bounds { lo, hi })
+}
+
+fn put_chunk(w: &mut ByteWriter, c: &WireChunk) {
+    match c {
+        WireChunk::Dense(a) => {
+            w.u8(CHUNK_DENSE);
+            w.u64(a.count as u64);
+            put_bounds(w, &a.bounds);
+            w.f64_slice(&a.sum.re);
+            w.f64_slice(&a.sum.im);
+        }
+        WireChunk::Packed(p) => {
+            w.u8(CHUNK_PACKED);
+            w.u8(p.mode.bits() as u8);
+            w.u64(p.dither_seed);
+            w.u64(p.m as u64);
+            w.u64(p.count as u64);
+            w.u32(p.width);
+            put_bounds(w, &p.bounds);
+            w.u64_slice(&p.words);
+        }
+    }
+}
+
+fn get_chunk(r: &mut ByteReader) -> Result<WireChunk, WireError> {
+    match r.u8()? {
+        CHUNK_DENSE => {
+            let count = r.usize_capped(MAX_SHAPE, "chunk count")?;
+            let bounds = get_bounds(r)?;
+            let re = r.f64_slice()?;
+            let im = r.f64_slice()?;
+            if re.len() != im.len() {
+                return Err(WireError::Invalid(format!(
+                    "sketch re has {} components, im has {}",
+                    re.len(),
+                    im.len()
+                )));
+            }
+            Ok(WireChunk::Dense(SketchAccumulator {
+                sum: CVec { re, im },
+                count,
+                bounds,
+            }))
+        }
+        CHUNK_PACKED => {
+            let bits = r.u8()?;
+            let mode = QuantizationMode::Bits(bits).normalized();
+            mode.validate().map_err(WireError::Invalid)?;
+            let dither_seed = r.u64()?;
+            let m = r.usize_capped(MAX_SHAPE, "chunk m")?;
+            let count = r.usize_capped(MAX_SHAPE, "chunk count")?;
+            let width = r.u32()?;
+            let bounds = get_bounds(r)?;
+            let words = r.u64_slice()?;
+            Ok(WireChunk::Packed(PackedPartial {
+                mode,
+                dither_seed,
+                m,
+                count,
+                bounds,
+                width,
+                words,
+            }))
+        }
+        k => Err(WireError::Invalid(format!("unknown chunk kind {k:#04x}"))),
+    }
+}
+
+/// Encode a request into one frame payload.
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    match req {
+        Request::Hello { producer } => {
+            w.u8(T_HELLO);
+            w.u32(PROTOCOL_VERSION);
+            w.str(producer);
+        }
+        Request::ReserveRows { n_rows } => {
+            w.u8(T_RESERVE);
+            w.u64(*n_rows);
+        }
+        Request::Absorb { chunk } => {
+            w.u8(T_ABSORB);
+            put_chunk(&mut w, chunk);
+        }
+        Request::Rotate => w.u8(T_ROTATE),
+        Request::SolveWindow { last_e, k } => {
+            w.u8(T_SOLVE_WINDOW);
+            w.u64(*last_e);
+            w.u64(*k);
+        }
+        Request::SolveDecayed { lambda, k } => {
+            w.u8(T_SOLVE_DECAYED);
+            w.f64(*lambda);
+            w.u64(*k);
+        }
+        Request::Checkpoint => w.u8(T_CHECKPOINT),
+        Request::Status => w.u8(T_STATUS),
+        Request::Shutdown => w.u8(T_SHUTDOWN),
+    }
+    w.into_vec()
+}
+
+/// Decode a request payload. Strict: unknown tags, short fields and
+/// trailing bytes are typed errors.
+pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
+    let mut r = ByteReader::new(payload);
+    let req = match r.u8()? {
+        T_HELLO => {
+            let protocol = r.u32()?;
+            if protocol != PROTOCOL_VERSION {
+                return Err(WireError::Invalid(format!(
+                    "peer speaks protocol {protocol}, this build speaks {PROTOCOL_VERSION}"
+                )));
+            }
+            Request::Hello { producer: r.str()? }
+        }
+        T_RESERVE => Request::ReserveRows { n_rows: r.u64()? },
+        T_ABSORB => Request::Absorb { chunk: get_chunk(&mut r)? },
+        T_ROTATE => Request::Rotate,
+        T_SOLVE_WINDOW => Request::SolveWindow { last_e: r.u64()?, k: r.u64()? },
+        T_SOLVE_DECAYED => Request::SolveDecayed { lambda: r.f64()?, k: r.u64()? },
+        T_CHECKPOINT => Request::Checkpoint,
+        T_STATUS => Request::Status,
+        T_SHUTDOWN => Request::Shutdown,
+        t => return Err(WireError::Invalid(format!("unknown request tag {t:#04x}"))),
+    };
+    r.finish()?;
+    Ok(req)
+}
+
+/// Encode a response into one frame payload.
+pub fn encode_response(resp: &Response) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    match resp {
+        Response::HelloAck(a) => {
+            w.u8(T_HELLO_ACK);
+            w.u32(a.protocol);
+            w.u32(a.shard_index);
+            w.u32(a.shard_count);
+            w.u64(a.seed);
+            w.str(&a.radius);
+            w.f64(a.sigma2);
+            w.u64(a.m);
+            w.u64(a.n_dims);
+            w.str(&a.trig);
+            w.str(&a.checksum);
+            w.u8(a.quant_bits);
+            w.u64(a.dither_seed);
+            w.u64(a.window_capacity);
+            w.u64(a.chunk_rows);
+        }
+        Response::Reserved { offset } => {
+            w.u8(T_RESERVED);
+            w.u64(*offset);
+        }
+        Response::Absorbed { rows } => {
+            w.u8(T_ABSORBED);
+            w.u64(*rows);
+        }
+        Response::Rotated { evicted } => {
+            w.u8(T_ROTATED);
+            w.u64(evicted.len() as u64);
+            for (shard, id) in evicted {
+                w.u32(*shard);
+                w.u64(*id);
+            }
+        }
+        Response::Solved(s) => {
+            w.u8(T_SOLVED);
+            w.u64(s.k);
+            w.u64(s.n_dims);
+            w.f64_slice(&s.centroids);
+            w.f64_slice(&s.alpha);
+            w.f64(s.cost);
+        }
+        Response::CheckpointBegin { total_len } => {
+            w.u8(T_CKPT_BEGIN);
+            w.u64(*total_len);
+        }
+        Response::CheckpointChunk { bytes } => {
+            w.u8(T_CKPT_CHUNK);
+            w.bytes(bytes);
+        }
+        Response::CheckpointEnd { digest, total_len } => {
+            w.u8(T_CKPT_END);
+            w.u64(*digest);
+            w.u64(*total_len);
+        }
+        Response::Status(s) => {
+            w.u8(T_STATUS_INFO);
+            w.u64(s.shards.len() as u64);
+            for sh in &s.shards {
+                w.u32(sh.shard);
+                w.u64(sh.rows_ingested);
+                w.u64(sh.surviving_rows);
+                w.u64(sh.epochs);
+                w.u64(sh.generation);
+                w.u64(sh.current_epoch_id);
+            }
+            w.u64(s.cache_hits);
+            w.u64(s.cache_misses);
+            w.u64(s.refreshed_solves);
+            w.u64(s.connections);
+        }
+        Response::Error { code, message } => {
+            w.u8(T_ERROR);
+            w.u32(*code as u32);
+            w.str(message);
+        }
+        Response::ShutdownAck => w.u8(T_SHUTDOWN_ACK),
+    }
+    w.into_vec()
+}
+
+/// Decode a response payload (same strictness as [`decode_request`]).
+pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
+    let mut r = ByteReader::new(payload);
+    let resp = match r.u8()? {
+        T_HELLO_ACK => Response::HelloAck(HelloAck {
+            protocol: r.u32()?,
+            shard_index: r.u32()?,
+            shard_count: r.u32()?,
+            seed: r.u64()?,
+            radius: r.str()?,
+            sigma2: r.f64()?,
+            m: r.u64()?,
+            n_dims: r.u64()?,
+            trig: r.str()?,
+            checksum: r.str()?,
+            quant_bits: r.u8()?,
+            dither_seed: r.u64()?,
+            window_capacity: r.u64()?,
+            chunk_rows: r.u64()?,
+        }),
+        T_RESERVED => Response::Reserved { offset: r.u64()? },
+        T_ABSORBED => Response::Absorbed { rows: r.u64()? },
+        T_ROTATED => {
+            let n = r.usize_capped(MAX_SHAPE, "evicted count")?;
+            let mut evicted = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                evicted.push((r.u32()?, r.u64()?));
+            }
+            Response::Rotated { evicted }
+        }
+        T_SOLVED => Response::Solved(WireSolution {
+            k: r.u64()?,
+            n_dims: r.u64()?,
+            centroids: r.f64_slice()?,
+            alpha: r.f64_slice()?,
+            cost: r.f64()?,
+        }),
+        T_CKPT_BEGIN => Response::CheckpointBegin { total_len: r.u64()? },
+        T_CKPT_CHUNK => Response::CheckpointChunk { bytes: r.bytes()? },
+        T_CKPT_END => Response::CheckpointEnd { digest: r.u64()?, total_len: r.u64()? },
+        T_STATUS_INFO => {
+            let n = r.usize_capped(MAX_SHAPE, "shard count")?;
+            let mut shards = Vec::with_capacity(n.min(1024));
+            for _ in 0..n {
+                shards.push(WireShardStats {
+                    shard: r.u32()?,
+                    rows_ingested: r.u64()?,
+                    surviving_rows: r.u64()?,
+                    epochs: r.u64()?,
+                    generation: r.u64()?,
+                    current_epoch_id: r.u64()?,
+                });
+            }
+            Response::Status(StatusInfo {
+                shards,
+                cache_hits: r.u64()?,
+                cache_misses: r.u64()?,
+                refreshed_solves: r.u64()?,
+                connections: r.u64()?,
+            })
+        }
+        T_ERROR => {
+            let code = r.u32()?;
+            if code > u16::MAX as u32 {
+                return Err(WireError::Invalid(format!("error code {code} out of range")));
+            }
+            Response::Error { code: code as u16, message: r.str()? }
+        }
+        T_SHUTDOWN_ACK => Response::ShutdownAck,
+        t => return Err(WireError::Invalid(format!("unknown response tag {t:#04x}"))),
+    };
+    r.finish()?;
+    Ok(resp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bounds(n: usize) -> Bounds {
+        Bounds { lo: vec![-1.0; n], hi: vec![1.0; n] }
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        let dense = WireChunk::Dense(SketchAccumulator {
+            sum: CVec { re: vec![0.25, -0.5], im: vec![1.0, 0.0] },
+            count: 3,
+            bounds: bounds(2),
+        });
+        let reqs = vec![
+            Request::Hello { producer: "edge-7".to_string() },
+            Request::ReserveRows { n_rows: 4096 },
+            Request::Absorb { chunk: dense },
+            Request::Rotate,
+            Request::SolveWindow { last_e: 0, k: 10 },
+            Request::SolveDecayed { lambda: 0.5, k: 3 },
+            Request::Checkpoint,
+            Request::Status,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let bytes = encode_request(&req);
+            assert_eq!(decode_request(&bytes).unwrap(), req, "roundtrip of {req:?}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let resps = vec![
+            Response::HelloAck(HelloAck {
+                protocol: PROTOCOL_VERSION,
+                shard_index: 1,
+                shard_count: 2,
+                seed: 7,
+                radius: "adapted".to_string(),
+                sigma2: 1.5,
+                m: 64,
+                n_dims: 3,
+                trig: "exact".to_string(),
+                checksum: "fnv1a:0123456789abcdef".to_string(),
+                quant_bits: 1,
+                dither_seed: 0xfeed,
+                window_capacity: 8,
+                chunk_rows: 4096,
+            }),
+            Response::Reserved { offset: 12345 },
+            Response::Absorbed { rows: 512 },
+            Response::Rotated { evicted: vec![(0, 3), (1, 3)] },
+            Response::Solved(WireSolution {
+                k: 2,
+                n_dims: 2,
+                centroids: vec![0.0, 1.0, 2.0, 3.0],
+                alpha: vec![0.5, 0.5],
+                cost: 0.01,
+            }),
+            Response::CheckpointBegin { total_len: 999 },
+            Response::CheckpointChunk { bytes: vec![1, 2, 3] },
+            Response::CheckpointEnd { digest: 0xdead, total_len: 999 },
+            Response::Status(StatusInfo {
+                shards: vec![WireShardStats {
+                    shard: 0,
+                    rows_ingested: 100,
+                    surviving_rows: 80,
+                    epochs: 4,
+                    generation: 17,
+                    current_epoch_id: 3,
+                }],
+                cache_hits: 5,
+                cache_misses: 2,
+                refreshed_solves: 1,
+                connections: 3,
+            }),
+            Response::Error { code: error_code::PROTOCOL, message: "nope".to_string() },
+            Response::ShutdownAck,
+        ];
+        for resp in resps {
+            let bytes = encode_response(&resp);
+            assert_eq!(decode_response(&bytes).unwrap(), resp, "roundtrip of {resp:?}");
+        }
+    }
+
+    #[test]
+    fn unknown_tags_and_trailing_bytes_rejected() {
+        assert!(matches!(decode_request(&[0x7f]), Err(WireError::Invalid(_))));
+        assert!(matches!(decode_response(&[0x01]), Err(WireError::Invalid(_))));
+        assert!(matches!(decode_request(&[]), Err(WireError::Truncated)));
+        let mut bytes = encode_request(&Request::Rotate);
+        bytes.push(0);
+        assert!(matches!(decode_request(&bytes), Err(WireError::Invalid(_))));
+    }
+
+    #[test]
+    fn hello_rejects_protocol_mismatch() {
+        let mut bytes = encode_request(&Request::Hello { producer: "p".to_string() });
+        // protocol version lives right after the tag byte
+        bytes[1..5].copy_from_slice(&99u32.to_le_bytes());
+        assert!(matches!(decode_request(&bytes), Err(WireError::Invalid(_))));
+    }
+
+    #[test]
+    fn forged_packed_chunk_dies_at_unpack() {
+        use crate::sketch::quantize::QuantizedAccumulator;
+        let mut acc = QuantizedAccumulator::new(4, 2, QuantizationMode::OneBit, 9);
+        acc.count = 3;
+        acc.level_sums = vec![1, 2, 3, 0, 1, 2, 3, 0];
+        acc.bounds = bounds(2);
+        let packed = acc.pack();
+        let req = Request::Absorb { chunk: WireChunk::Packed(packed) };
+        let bytes = encode_request(&req);
+        let decoded = decode_request(&bytes).unwrap();
+        let Request::Absorb { chunk } = decoded else { panic!("wrong verb") };
+        // honest payload unpacks to the identical accumulator
+        let ChunkSketch::Quantized(back) = chunk.clone().into_chunk().unwrap() else {
+            panic!("wrong kind")
+        };
+        assert_eq!(back, acc);
+        // a forged level sum (code > count·(L−1)) is rejected typed
+        let WireChunk::Packed(mut evil) = chunk else { panic!() };
+        evil.words[0] |= 0xff; // corrupt packed codes
+        evil.count = 1; // and lie about the count so codes overflow
+        assert!(matches!(
+            WireChunk::Packed(evil).into_chunk(),
+            Err(WireError::Invalid(_))
+        ));
+    }
+
+    #[test]
+    fn solution_shape_validated() {
+        let bad = WireSolution {
+            k: 2,
+            n_dims: 3,
+            centroids: vec![0.0; 5], // should be 6
+            alpha: vec![0.5, 0.5],
+            cost: 0.0,
+        };
+        assert!(matches!(bad.into_solution(), Err(WireError::Invalid(_))));
+    }
+}

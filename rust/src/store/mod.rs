@@ -29,11 +29,25 @@
 //!   are answered from a generation-keyed solve cache and never hold the
 //!   store lock during the CLOMPR decode.
 //!
+//! - [`ShardedStore`] — N key-sharded stores behind N independent locks
+//!   (producer → shard by FNV-1a of the producer id; shard `i` salts its
+//!   dither stream with `base_shard + i`), with *exact* cross-shard merged
+//!   window/decayed snapshots taken under an all-locks consistent cut.
+//!   This is the state object behind the `ckmd` daemon
+//!   ([`crate::service`]).
+//!
+//! Long-lived rings can bound their bucket count with
+//! [`CompactionPolicy::Exponential`]: sealed epochs collapse into
+//! power-of-two spans (at most two buckets per span), keeping `O(log E)`
+//! buckets while window merges stay exact (they widen to bucket
+//! boundaries, never split one).
+//!
 //! A whole store serializes to one versioned JSON file whose epoch entries
 //! are ordinary format-v2 artifacts ([`SketchStore::to_file`] /
 //! [`SketchStore::from_file`]), so a service can checkpoint and resume —
 //! including the quantized dither row counter, which keeps resumed ingest
-//! bit-compatible with an uninterrupted run.
+//! bit-compatible with an uninterrupted run. A [`ShardedStore`] checkpoints
+//! all shards into one `ckm-store-set` file.
 //!
 //! Entry points live on the facade: `Ckm::builder().window(epochs)` sets
 //! the ring capacity, `.decay(lambda)` the default decay, and
@@ -42,6 +56,10 @@
 
 pub mod ring;
 pub mod server;
+pub mod sharded;
 
-pub use ring::{ChunkSketch, EpochStats, SketchContext, SketchStore, STORE_FORMAT_VERSION};
+pub use ring::{
+    ChunkSketch, CompactionPolicy, EpochStats, SketchContext, SketchStore, STORE_FORMAT_VERSION,
+};
 pub use server::{IngestSession, ServerStats, SketchServer};
+pub use sharded::{ShardStats, ShardedStore, STORE_SET_FORMAT_VERSION};

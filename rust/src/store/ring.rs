@@ -33,9 +33,46 @@ use crate::util::json::Json;
 use std::collections::VecDeque;
 use std::path::Path;
 
-/// Version of the store JSON schema this build writes. Epoch entries are
-/// ordinary artifact-v2 objects (see [`crate::api::SKETCH_FORMAT_VERSION`]).
-pub const STORE_FORMAT_VERSION: u32 = 1;
+/// Version of the store JSON schema this build can read and (when the
+/// ring uses features version 1 lacks — compaction spans) write. Plain
+/// uncompacted rings still serialize as version 1, byte-identical to
+/// earlier builds. Epoch entries are ordinary artifact-v2 objects (see
+/// [`crate::api::SKETCH_FORMAT_VERSION`]).
+pub const STORE_FORMAT_VERSION: u32 = 2;
+
+/// Retention shape for sealed epochs (see [`SketchStore::with_compaction`]).
+///
+/// `None` keeps every sealed epoch as its own bucket (bounded only by the
+/// ring capacity). `Exponential` maintains an exponential histogram over
+/// sealed epochs: at most two buckets per power-of-two span, merging the
+/// two oldest equal-span buckets whenever a third appears, so `E` original
+/// epochs survive in `O(log E)` buckets. Merges reuse the exact epoch
+/// merge algebra (integer adds for quantized rings, fixed-order dense
+/// sums), so `window_all()` over a compacted ring covers exactly the same
+/// rows — compaction only coarsens which *boundaries* a window can cut at.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CompactionPolicy {
+    #[default]
+    None,
+    Exponential,
+}
+
+impl CompactionPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompactionPolicy::None => "none",
+            CompactionPolicy::Exponential => "exponential",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CompactionPolicy> {
+        match s {
+            "none" => Some(CompactionPolicy::None),
+            "exponential" | "exp" => Some(CompactionPolicy::Exponential),
+            _ => None,
+        }
+    }
+}
 
 /// One epoch bucket: dense or integer accumulator state.
 #[derive(Clone, Debug, PartialEq)]
@@ -47,11 +84,16 @@ enum EpochAcc {
 /// A sealed-or-current epoch of the ring.
 #[derive(Clone, Debug, PartialEq)]
 struct EpochSketch {
-    /// Monotonic epoch id (survives eviction: ids never reset).
+    /// Monotonic epoch id (survives eviction: ids never reset). A
+    /// compacted bucket keeps the *newest* id it absorbed, so ids stay
+    /// strictly increasing along the ring.
     id: u64,
     /// Store-lifetime index of the first row this epoch absorbed (the
     /// quantized dither key; informational for dense stores).
     start_row: usize,
+    /// How many original (rotation-granularity) epochs this bucket covers.
+    /// 1 until compaction merges buckets.
+    span: u64,
     acc: EpochAcc,
 }
 
@@ -100,6 +142,8 @@ pub struct EpochStats {
     pub id: u64,
     pub start_row: usize,
     pub rows: usize,
+    /// Original epochs this bucket covers (1 unless compacted).
+    pub span: u64,
 }
 
 /// Everything a producer needs to sketch a chunk *outside* the store lock
@@ -115,12 +159,42 @@ pub struct SketchContext {
 }
 
 impl SketchContext {
+    /// Rebuild a context from operator provenance — the service client's
+    /// entry point: the daemon's `HelloAck` carries (spec, quantization,
+    /// dither seed), and materializing the spec re-derives the frequency
+    /// matrix and verifies its checksum, so a client never sketches under
+    /// an operator the daemon didn't prove.
+    pub fn from_parts(
+        spec: &OpSpec,
+        quantization: Option<QuantizationMode>,
+        dither_seed: u64,
+    ) -> Result<SketchContext, ApiError> {
+        if let Some(mode) = quantization {
+            mode.validate()
+                .map_err(|reason| ApiError::InvalidConfig { field: "quantization", reason })?;
+        }
+        let op = spec.materialize()?;
+        Ok(SketchContext {
+            op,
+            quantization: quantization.map(QuantizationMode::normalized),
+            dither_seed,
+        })
+    }
+
     pub fn n_dims(&self) -> usize {
         self.op.n_dims()
     }
 
     pub fn m(&self) -> usize {
         self.op.m()
+    }
+
+    pub fn quantization(&self) -> Option<QuantizationMode> {
+        self.quantization
+    }
+
+    pub fn dither_seed(&self) -> u64 {
+        self.dither_seed
     }
 
     /// Run the full sketch math for one chunk whose first row holds the
@@ -183,8 +257,10 @@ pub struct SketchStore {
     quantization: Option<QuantizationMode>,
     shard: u64,
     dither_seed: u64,
-    /// Max epochs retained (`None` = unbounded ring).
+    /// Max epoch *buckets* retained (`None` = unbounded ring).
     capacity: Option<usize>,
+    /// Sealed-epoch retention shape (see [`CompactionPolicy`]).
+    compaction: CompactionPolicy,
     /// Oldest at the front, current (newest) at the back; never empty.
     epochs: VecDeque<EpochSketch>,
     next_epoch_id: u64,
@@ -231,6 +307,7 @@ impl SketchStore {
             shard,
             dither_seed,
             capacity,
+            compaction: CompactionPolicy::None,
             epochs: VecDeque::new(),
             next_epoch_id: 0,
             rows_ingested: 0,
@@ -239,6 +316,14 @@ impl SketchStore {
         };
         store.push_epoch();
         Ok(store)
+    }
+
+    /// Choose the sealed-epoch retention shape (builder-style). Safe to
+    /// call on a live store: the policy only takes effect at the next
+    /// [`SketchStore::rotate`].
+    pub fn with_compaction(mut self, policy: CompactionPolicy) -> SketchStore {
+        self.compaction = policy;
+        self
     }
 
     fn push_epoch(&mut self) {
@@ -254,6 +339,7 @@ impl SketchStore {
         self.epochs.push_back(EpochSketch {
             id: self.next_epoch_id,
             start_row: self.rows_ingested,
+            span: 1,
             acc,
         });
         self.next_epoch_id += 1;
@@ -336,13 +422,17 @@ impl SketchStore {
         count
     }
 
-    /// Seal the current epoch and open a fresh one. If the ring exceeds its
+    /// Seal the current epoch and open a fresh one. Under
+    /// [`CompactionPolicy::Exponential`] the sealed buckets are then
+    /// re-compacted (exact merges), and if the ring still exceeds its
     /// capacity the oldest bucket(s) are dropped — eviction is bucket drop,
     /// never subtraction, so surviving windows stay exact. Returns the
-    /// evicted epoch ids (empty when nothing aged out).
+    /// evicted epoch ids (empty when nothing aged out; a compacted bucket
+    /// reports the newest id it absorbed).
     pub fn rotate(&mut self) -> Vec<u64> {
         self.push_epoch();
         self.generation += 1;
+        self.compact();
         let mut evicted = Vec::new();
         if let Some(cap) = self.capacity {
             while self.epochs.len() > cap {
@@ -353,11 +443,60 @@ impl SketchStore {
         evicted
     }
 
+    /// Exponential-histogram maintenance over the *sealed* buckets (the
+    /// current epoch is never compacted): whenever three buckets share a
+    /// span, the two oldest — always adjacent, since spans are
+    /// non-increasing toward the newest end — merge into one double-span
+    /// bucket, cascading until every span class holds at most two.
+    fn compact(&mut self) {
+        if self.compaction != CompactionPolicy::Exponential {
+            return;
+        }
+        loop {
+            let sealed = self.epochs.len() - 1; // current epoch excluded
+            let mut merged_at: Option<usize> = None;
+            let mut span = 1u64;
+            loop {
+                let idxs: Vec<usize> =
+                    (0..sealed).filter(|&i| self.epochs[i].span == span).collect();
+                if idxs.len() >= 3 {
+                    debug_assert_eq!(idxs[1], idxs[0] + 1, "equal-span buckets are adjacent");
+                    merged_at = Some(idxs[0]);
+                    break;
+                }
+                match (0..sealed).map(|i| self.epochs[i].span).filter(|&s| s > span).min() {
+                    Some(next) => span = next,
+                    None => break,
+                }
+            }
+            match merged_at {
+                Some(i) => self.merge_adjacent_epochs(i),
+                None => break,
+            }
+        }
+    }
+
+    /// Merge bucket `i` (older) with bucket `i + 1` (newer) in place.
+    fn merge_adjacent_epochs(&mut self, i: usize) {
+        let newer = self.epochs.remove(i + 1).expect("bucket index in range");
+        let older = &mut self.epochs[i];
+        older.id = newer.id; // newest id absorbed: ids stay strictly increasing
+        older.span += newer.span;
+        match (&mut older.acc, newer.acc) {
+            (EpochAcc::Dense(a), EpochAcc::Dense(b)) => a.merge(&b),
+            (EpochAcc::Quantized(a), EpochAcc::Quantized(b)) => a.merge(&b),
+            _ => unreachable!("ring holds a uniform accumulator kind"),
+        }
+    }
+
     // -- snapshots --------------------------------------------------------
 
-    /// Merge the newest `last_e` epochs into one artifact (clamped to the
-    /// surviving epoch count). Exact: dense sums add associatively (merge
-    /// order is fixed oldest→newest), integer level sums add exactly.
+    /// Merge the newest `last_e` *original* epochs into one artifact
+    /// (clamped to the surviving span total). Exact: dense sums add
+    /// associatively (merge order is fixed oldest→newest), integer level
+    /// sums add exactly. On a compacted ring the window widens to the
+    /// nearest bucket boundary at the old end — a bucket is indivisible,
+    /// so the answer covers *at least* the requested epochs.
     pub fn window(&self, last_e: usize) -> Result<SketchArtifact, ApiError> {
         if last_e == 0 {
             return Err(ApiError::InvalidConfig {
@@ -365,8 +504,13 @@ impl SketchStore {
                 reason: "need a window of at least one epoch".into(),
             });
         }
-        let e = last_e.min(self.epochs.len());
-        Ok(self.merge_from(self.epochs.len() - e))
+        let mut start = self.epochs.len();
+        let mut covered = 0u64;
+        while start > 0 && covered < last_e as u64 {
+            start -= 1;
+            covered += self.epochs[start].span;
+        }
+        Ok(self.merge_from(start))
     }
 
     /// Merge every surviving epoch ("all time", within retention).
@@ -439,23 +583,37 @@ impl SketchStore {
         if lambda == 0.0 {
             return Ok(self.merge_from(self.epochs.len() - 1));
         }
-        let len = self.epochs.len();
+        let (mut sum, weighted_count, count, bounds) = self.decayed_parts(lambda);
+        if count > 0 && weighted_count > 0.0 {
+            sum.scale(count as f64 / weighted_count);
+        }
+        Ok(SketchArtifact { op: self.spec.clone(), sum, count, bounds, quant: None })
+    }
+
+    /// Unscaled λ-weighted partials: `(Σ λ^a·sum_a, Σ λ^a·count_a,
+    /// Σ count_a, merged bounds)`. Ages count *original* epochs (a
+    /// compacted bucket is weighted by the age of its newest edge), so
+    /// shard rings that rotate in lockstep can pool their partials and
+    /// scale once — the cross-shard decayed snapshot then weights every
+    /// epoch exactly as a single pooled ring would.
+    pub(crate) fn decayed_parts(&self, lambda: f64) -> (CVec, f64, usize, Bounds) {
         let mut sum = CVec::zeros(self.spec.m);
         let mut weighted_count = 0.0f64;
         let mut count = 0usize;
         let mut bounds = Bounds::empty(self.spec.n_dims);
-        for (idx, ep) in self.epochs.iter().enumerate() {
-            let age = (len - 1 - idx) as i32;
-            let w = lambda.powi(age);
+        // Accumulate oldest→newest (the historical order — keeps dense
+        // decayed snapshots bit-identical on uncompacted rings); the age
+        // of a bucket is the span total of everything newer than it.
+        let mut newer_span: u64 = self.epochs.iter().map(|ep| ep.span).sum();
+        for ep in self.epochs.iter() {
+            newer_span -= ep.span;
+            let w = lambda.powi(newer_span as i32);
             ep.add_scaled_sum(w, &mut sum);
             weighted_count += w * ep.count() as f64;
             count += ep.count();
             bounds.merge(ep.bounds());
         }
-        if count > 0 && weighted_count > 0.0 {
-            sum.scale(count as f64 / weighted_count);
-        }
-        Ok(SketchArtifact { op: self.spec.clone(), sum, count, bounds, quant: None })
+        (sum, weighted_count, count, bounds)
     }
 
     // -- introspection ----------------------------------------------------
@@ -489,6 +647,10 @@ impl SketchStore {
         self.capacity
     }
 
+    pub fn compaction(&self) -> CompactionPolicy {
+        self.compaction
+    }
+
     /// Surviving epochs in the ring (≥ 1).
     pub fn epoch_count(&self) -> usize {
         self.epochs.len()
@@ -504,9 +666,24 @@ impl SketchStore {
         self.rows_ingested
     }
 
-    /// Mutation counter (snapshot caches key off it).
+    /// Mutation counter (snapshot caches key off it). Every `ingest`,
+    /// `absorb` and `rotate` bumps it, and a store restored from a file
+    /// derives a non-zero generation from its persisted progress, so a
+    /// cache keyed on generation can never confuse a freshly-restored
+    /// store with its pre-restore state at generation 0.
     pub fn generation(&self) -> u64 {
         self.generation
+    }
+
+    /// Force the generation strictly past `floor`. Used when a restored
+    /// store replaces a live one (see `SketchServer::restore`): whatever
+    /// generation the old store had reached, the replacement must not
+    /// collide with it, or a generation-keyed cache could serve a solve
+    /// computed against pre-checkpoint state.
+    pub fn bump_generation_past(&mut self, floor: u64) {
+        if self.generation <= floor {
+            self.generation = floor + 1;
+        }
     }
 
     pub fn current_epoch_id(&self) -> u64 {
@@ -521,7 +698,12 @@ impl SketchStore {
     pub fn epoch_stats(&self) -> Vec<EpochStats> {
         self.epochs
             .iter()
-            .map(|ep| EpochStats { id: ep.id, start_row: ep.start_row, rows: ep.count() })
+            .map(|ep| EpochStats {
+                id: ep.id,
+                start_row: ep.start_row,
+                rows: ep.count(),
+                span: ep.span,
+            })
             .collect()
     }
 
@@ -534,22 +716,35 @@ impl SketchStore {
 
     /// Serialize the whole ring: one versioned JSON object whose `epochs`
     /// entries are ordinary artifact-v2 objects plus their epoch id and
-    /// start row.
+    /// start row. Uncompacted rings write version 1 (byte-identical to
+    /// earlier builds); a compaction policy or a multi-span bucket
+    /// promotes the file to version 2.
     pub fn to_json(&self) -> Json {
         let epochs = self
             .epochs
             .iter()
             .map(|ep| {
-                Json::obj(vec![
+                let mut fields = vec![
                     ("id", Json::Num(ep.id as f64)),
                     ("start_row", Json::Num(ep.start_row as f64)),
-                    ("artifact", ep.artifact(&self.spec).to_json()),
-                ])
+                ];
+                if ep.span > 1 {
+                    fields.push(("span", Json::Num(ep.span as f64)));
+                }
+                fields.push(("artifact", ep.artifact(&self.spec).to_json()));
+                Json::obj(fields)
             })
             .collect();
-        Json::obj(vec![
+        let v2 = self.compaction != CompactionPolicy::None
+            || self.epochs.iter().any(|ep| ep.span > 1);
+        let mut fields = vec![
             ("format", Json::Str("ckm-store".to_string())),
-            ("version", Json::Num(STORE_FORMAT_VERSION as f64)),
+            ("version", Json::Num(if v2 { 2.0 } else { 1.0 })),
+        ];
+        if self.compaction != CompactionPolicy::None {
+            fields.push(("compaction", Json::Str(self.compaction.name().to_string())));
+        }
+        fields.extend(vec![
             ("shard", Json::Str(self.shard.to_string())),
             (
                 "quant_bits",
@@ -568,7 +763,8 @@ impl SketchStore {
             ("next_epoch_id", Json::Num(self.next_epoch_id as f64)),
             ("rows_ingested", Json::Num(self.rows_ingested as f64)),
             ("epochs", Json::Arr(epochs)),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     /// Parse a serialized store, re-deriving and checksum-verifying the
@@ -586,6 +782,16 @@ impl SketchStore {
                 found: version,
                 supported: STORE_FORMAT_VERSION,
             });
+        }
+        let compaction = match j.get("compaction") {
+            Json::Null => CompactionPolicy::None,
+            c => c
+                .as_str()
+                .and_then(CompactionPolicy::parse)
+                .ok_or_else(|| bad("compaction must be \"none\" or \"exponential\""))?,
+        };
+        if compaction != CompactionPolicy::None && version < 2 {
+            return Err(bad("compaction policy requires store format version >= 2"));
         }
         let shard = j
             .get("shard")
@@ -627,6 +833,16 @@ impl SketchStore {
             let id = ej.get("id").as_usize().ok_or_else(|| bad("epoch id missing"))? as u64;
             let start_row =
                 ej.get("start_row").as_usize().ok_or_else(|| bad("epoch start_row missing"))?;
+            let span = match ej.get("span") {
+                Json::Null => 1u64,
+                s => s
+                    .as_usize()
+                    .filter(|&s| s >= 1)
+                    .ok_or_else(|| bad("epoch span must be >= 1"))? as u64,
+            };
+            if span > 1 && version < 2 {
+                return Err(bad("epoch spans require store format version >= 2"));
+            }
             if let Some(prev) = last_id {
                 if id <= prev {
                     return Err(bad("epoch ids must be strictly increasing"));
@@ -669,7 +885,7 @@ impl SketchStore {
                 }
                 _ => return Err(bad("epoch quantization disagrees with the store header")),
             };
-            epochs.push_back(EpochSketch { id, start_row, acc });
+            epochs.push_back(EpochSketch { id, start_row, span, acc });
         }
         let spec = spec.expect("at least one epoch parsed");
         if last_id.expect("at least one epoch parsed") >= next_epoch_id {
@@ -686,6 +902,14 @@ impl SketchStore {
         }
         let op = spec.materialize()?; // checksum verified here, loudly
         let dither_seed = quantize::dither_seed_for_shard(spec.seed, shard);
+        // Derive a non-zero generation from the persisted progress: any
+        // store that ever ingested or rotated restores strictly past a
+        // fresh store's generation 0, and a later checkpoint of the same
+        // lineage restores past an earlier one — so generation-keyed
+        // solve caches can never serve pre-checkpoint answers for a
+        // restored store (see `SketchServer::restore` for the live-
+        // replacement case).
+        let generation = rows_ingested as u64 + next_epoch_id;
         Ok(SketchStore {
             spec,
             op,
@@ -693,11 +917,12 @@ impl SketchStore {
             shard,
             dither_seed,
             capacity,
+            compaction,
             epochs,
             next_epoch_id,
             rows_ingested,
             rows_reserved: rows_ingested, // reservations resume past everything ingested
-            generation: 0,
+            generation,
         })
     }
 
@@ -752,8 +977,8 @@ mod tests {
         assert_eq!(store.surviving_rows(), 8);
         let stats = store.epoch_stats();
         assert_eq!(stats.len(), 3);
-        assert_eq!(stats[0], EpochStats { id: 3, start_row: 12, rows: 4 });
-        assert_eq!(stats[2], EpochStats { id: 5, start_row: 20, rows: 0 });
+        assert_eq!(stats[0], EpochStats { id: 3, start_row: 12, rows: 4, span: 1 });
+        assert_eq!(stats[2], EpochStats { id: 5, start_row: 20, rows: 0, span: 1 });
     }
 
     #[test]
@@ -945,6 +1170,139 @@ mod tests {
             SketchStore::create(spec(25, 8, 2), Some(QuantizationMode::OneBit), 0, None).unwrap();
         let chunk = dense.sketch_context().sketch_chunk(&all, 0);
         quant.absorb(chunk);
+    }
+
+    #[test]
+    fn generation_bumps_on_every_mutation_and_survives_restore() {
+        let mut store =
+            SketchStore::create(spec(61, 8, 2), Some(QuantizationMode::OneBit), 0, None).unwrap();
+        let mut rng = Rng::new(62);
+        assert_eq!(store.generation(), 0);
+        store.ingest(&rows(&mut rng, 4, 2));
+        assert_eq!(store.generation(), 1);
+        store.rotate();
+        assert_eq!(store.generation(), 2);
+        let ctx = store.sketch_context();
+        let off = store.reserve_rows(3);
+        store.absorb(ctx.sketch_chunk(&rows(&mut rng, 3, 2), off));
+        assert_eq!(store.generation(), 3);
+        // A restored store derives a non-zero generation from its progress
+        // (7 rows + 2 epoch ids here): a cache keyed on generation can
+        // never mistake it for the fresh-store generation 0.
+        let back =
+            SketchStore::from_json(&Json::parse(&store.to_json().to_pretty()).unwrap()).unwrap();
+        assert_eq!(back.generation(), 9);
+        assert!(back.generation() > 0);
+        // And the floor bump moves strictly past any live generation.
+        let mut back2 = back.clone();
+        back2.bump_generation_past(1000);
+        assert_eq!(back2.generation(), 1001);
+        back2.bump_generation_past(5); // already past: untouched
+        assert_eq!(back2.generation(), 1001);
+    }
+
+    #[test]
+    fn exponential_compaction_keeps_log_buckets_and_exact_windows() {
+        for mode in [None, Some(QuantizationMode::OneBit)] {
+            let make = |policy| {
+                SketchStore::create(spec(71, 8, 3), mode, 0, None)
+                    .unwrap()
+                    .with_compaction(policy)
+            };
+            let mut plain = make(CompactionPolicy::None);
+            let mut packed = make(CompactionPolicy::Exponential);
+            let mut rng = Rng::new(72);
+            let n_epochs = 64usize;
+            for e in 0..n_epochs {
+                let chunk = rows(&mut rng, 3 + (e % 5), 3);
+                plain.ingest(&chunk);
+                packed.ingest(&chunk);
+                plain.rotate();
+                packed.rotate();
+            }
+            assert_eq!(plain.epoch_count(), n_epochs + 1);
+            // Exponential histogram: at most 2 buckets per power-of-two
+            // span ⇒ O(log E) buckets for E sealed epochs.
+            assert!(
+                packed.epoch_count() <= 2 * ((n_epochs as f64).log2().ceil() as usize + 1) + 1,
+                "{} buckets for {} epochs",
+                packed.epoch_count(),
+                n_epochs
+            );
+            let stats = packed.epoch_stats();
+            // spans are powers of two, non-increasing toward the newest end
+            for w in stats.windows(2) {
+                assert!(w[0].span >= w[1].span, "{stats:?}");
+                assert!(w[0].span.is_power_of_two());
+            }
+            // span total accounts for every original epoch
+            assert_eq!(stats.iter().map(|s| s.span).sum::<u64>(), n_epochs as u64 + 1);
+            // ids stay strictly increasing
+            for w in stats.windows(2) {
+                assert!(w[0].id < w[1].id);
+            }
+            // the full-ring merge covers the same rows; quantized merges
+            // are integer-exact, so the artifact matches bit for bit
+            assert_eq!(packed.surviving_rows(), plain.surviving_rows());
+            let (pw, cw) = (plain.window_all(), packed.window_all());
+            assert_eq!(pw.count, cw.count);
+            assert_eq!(pw.bounds, cw.bounds);
+            match mode {
+                Some(_) => assert_eq!(pw, cw),
+                None => assert!(pw.sum.max_abs_diff(&cw.sum) <= 1e-9 * pw.count as f64),
+            }
+        }
+    }
+
+    #[test]
+    fn compacted_windows_widen_to_bucket_boundaries() {
+        let mut store = SketchStore::create(spec(73, 8, 2), None, 0, None)
+            .unwrap()
+            .with_compaction(CompactionPolicy::Exponential);
+        let mut rng = Rng::new(74);
+        for _ in 0..16 {
+            store.ingest(&rows(&mut rng, 2, 2));
+            store.rotate();
+        }
+        // window(1) is always exactly the (never-compacted) current epoch
+        assert_eq!(store.window(1).unwrap().count, 0);
+        // a window over e original epochs covers at least e·2 rows and
+        // lands on a bucket boundary (a multiple of 2 rows here)
+        for e in 1..=16usize {
+            let w = store.window(e).unwrap();
+            assert!(w.count >= (e.saturating_sub(1)) * 2, "e={e} count={}", w.count);
+            assert_eq!(w.count % 2, 0);
+        }
+        assert_eq!(store.window(99).unwrap().count, 32);
+    }
+
+    #[test]
+    fn compacted_store_serialization_roundtrips() {
+        let mut store =
+            SketchStore::create(spec(75, 8, 2), Some(QuantizationMode::Bits(2)), 1, None)
+                .unwrap()
+                .with_compaction(CompactionPolicy::Exponential);
+        let mut rng = Rng::new(76);
+        for _ in 0..9 {
+            store.ingest(&rows(&mut rng, 3, 2));
+            store.rotate();
+        }
+        assert!(store.epoch_stats().iter().any(|s| s.span > 1));
+        let j = store.to_json();
+        assert_eq!(j.get("version").as_usize(), Some(2));
+        let back = SketchStore::from_json(&Json::parse(&j.to_pretty()).unwrap()).unwrap();
+        assert_eq!(back.compaction(), CompactionPolicy::Exponential);
+        assert_eq!(back.epochs, store.epochs);
+        assert_eq!(back.window_all(), store.window_all());
+        // an uncompacted ring still writes the version-1 schema
+        let plain = SketchStore::create(spec(75, 8, 2), None, 0, None).unwrap();
+        assert_eq!(plain.to_json().get("version").as_usize(), Some(1));
+        // spans in a version-1 file are rejected
+        let mut j1 = store.to_json();
+        if let Json::Obj(o) = &mut j1 {
+            o.insert("version".to_string(), Json::Num(1.0));
+        }
+        assert!(SketchStore::from_json(&j1).is_err());
     }
 
     #[test]

@@ -199,6 +199,46 @@ impl SketchServer {
         self.store.lock().unwrap().to_file(path)
     }
 
+    /// Replace the live store with a checkpoint (same provenance required:
+    /// operator spec, quantization, shard). The restored store's
+    /// generation is forced strictly past the replaced store's and the
+    /// solve cache is cleared and re-seated, so a cached solve computed
+    /// against pre-restore state can never be served afterwards — the
+    /// first query after a restore always re-solves.
+    pub fn restore<P: AsRef<std::path::Path>>(&self, path: P) -> Result<(), ApiError> {
+        let mut fresh = SketchStore::from_file(path)?;
+        let mut store = self.store.lock().unwrap();
+        if fresh.spec() != store.spec() {
+            return Err(ApiError::OperatorMismatch {
+                left: store.spec().describe(),
+                right: fresh.spec().describe(),
+            });
+        }
+        if fresh.quantization() != store.quantization() || fresh.shard() != store.shard() {
+            return Err(ApiError::QuantizationMismatch {
+                left: format!(
+                    "store(quant {:?}, shard {})",
+                    store.quantization(),
+                    store.shard()
+                ),
+                right: format!(
+                    "checkpoint(quant {:?}, shard {})",
+                    fresh.quantization(),
+                    fresh.shard()
+                ),
+            });
+        }
+        fresh.bump_generation_past(store.generation());
+        *store = fresh;
+        // Lock order store → cache (the only place both are held): clear
+        // stale entries and re-seat the cache at the restored generation,
+        // so an in-flight `put` against the old generation is dropped.
+        let mut cache = self.cache.lock().unwrap();
+        cache.entries.clear();
+        cache.generation = store.generation();
+        Ok(())
+    }
+
     /// Solve `k` centroids over the newest `last_e` epochs (cached).
     pub fn solve_window(&self, last_e: usize, k: usize) -> Result<Solution, ApiError> {
         let (generation, artifact) = {
@@ -374,6 +414,63 @@ mod tests {
         let win = srv.window_all();
         let direct = ckm.sketch_slice(&pts, 3).unwrap();
         assert_eq!(win, direct);
+    }
+
+    #[test]
+    fn restore_never_serves_a_pre_checkpoint_cached_solve() {
+        // solve (cached) → checkpoint → ingest more + solve (cache holds
+        // the newer answer) → restore the checkpoint → the next solve must
+        // re-solve against the restored state, not serve either cached
+        // generation.
+        let srv = server(32, 2);
+        let mut rng = Rng::new(7);
+        srv.ingest(&gen::mat_normal(&mut rng, 300, 2));
+        let at_checkpoint = srv.solve_window(1, 2).unwrap();
+        let path =
+            std::env::temp_dir().join(format!("ckm_restore_{}.json", std::process::id()));
+        srv.save(&path).unwrap();
+
+        srv.ingest(&gen::mat_normal(&mut rng, 300, 2));
+        let later = srv.solve_window(1, 2).unwrap();
+        assert_ne!(later.centroids.data, at_checkpoint.centroids.data);
+        let before = srv.stats();
+
+        srv.restore(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let after_restore = srv.stats();
+        assert!(
+            after_restore.generation > before.generation,
+            "restored generation {} must move past live generation {}",
+            after_restore.generation,
+            before.generation
+        );
+        assert_eq!(after_restore.rows_ingested, 300);
+
+        let resolved = srv.solve_window(1, 2).unwrap();
+        // fresh solve, not a cache hit...
+        assert_eq!(srv.stats().cache_hits, before.cache_hits);
+        assert_eq!(srv.stats().cache_misses, before.cache_misses + 1);
+        // ...and it answers for the checkpointed rows, bit for bit
+        assert_eq!(resolved.centroids.data, at_checkpoint.centroids.data);
+        assert_eq!(resolved.alpha, at_checkpoint.alpha);
+    }
+
+    #[test]
+    fn restore_rejects_mismatched_provenance() {
+        let srv = server(32, 2);
+        let path =
+            std::env::temp_dir().join(format!("ckm_restore_bad_{}.json", std::process::id()));
+        // a store from a different operator seed
+        let other_spec = OpSpec::derive(99, RadiusKind::AdaptedRadius, 1.0, 32, 2).0;
+        let other = SketchStore::create(other_spec, None, 0, None).unwrap();
+        other.to_file(&path).unwrap();
+        assert!(matches!(srv.restore(&path), Err(ApiError::OperatorMismatch { .. })));
+        // same operator, different shard salt
+        let same_spec = OpSpec::derive(21, RadiusKind::AdaptedRadius, 1.0, 32, 2).0;
+        let shifted = SketchStore::create(same_spec, None, 5, None).unwrap();
+        shifted.to_file(&path).unwrap();
+        assert!(matches!(srv.restore(&path), Err(ApiError::QuantizationMismatch { .. })));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

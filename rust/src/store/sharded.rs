@@ -1,0 +1,545 @@
+//! Key-sharded sketch stores: N independent [`SketchStore`]s behind N
+//! independent locks, with exact cross-shard merged snapshots.
+//!
+//! The `ckmd` daemon assigns every producer to one shard by hashing its
+//! producer id (FNV-1a mod `n_shards`), so producers on different shards
+//! never contend on one mutex — reserve/absorb critical sections stay
+//! per-shard. Each shard salts its quantized dither stream with
+//! `base_shard + shard_index` (exactly the facade's
+//! [`crate::api::CkmBuilder::shard`] semantics), which keeps every
+//! shard's integer state independently bit-reproducible. Cross-shard
+//! snapshots are *exact* because the sketch algebra is associative: a
+//! merged window is the artifact-level merge of the per-shard windows
+//! (integer adds for quantized rings), and a merged decayed snapshot
+//! pools the per-shard λ-weighted partials and scales once — identical
+//! weighting to a single pooled ring, provided shards rotate in lockstep
+//! (which [`ShardedStore::rotate_all`] guarantees).
+
+use super::ring::{ChunkSketch, CompactionPolicy, EpochStats, SketchContext, SketchStore};
+use crate::api::{ApiError, OpSpec, QuantizationMode, SketchArtifact};
+use crate::data::dataset::Bounds;
+use crate::linalg::CVec;
+use crate::util::digest::Fnv1a;
+use crate::util::json::Json;
+use std::path::Path;
+use std::sync::{Mutex, MutexGuard};
+
+/// Version of the `ckm-store-set` JSON schema.
+pub const STORE_SET_FORMAT_VERSION: u32 = 1;
+
+/// Per-shard introspection record (see [`ShardedStore::shard_stats`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardStats {
+    /// Shard index within the set (0-based).
+    pub shard: usize,
+    /// Store-lifetime rows (includes evicted epochs).
+    pub rows_ingested: usize,
+    /// Rows across surviving epochs.
+    pub surviving_rows: usize,
+    /// Surviving epoch buckets.
+    pub epochs: usize,
+    /// Shard mutation counter.
+    pub generation: u64,
+    pub current_epoch_id: u64,
+}
+
+/// N key-sharded [`SketchStore`]s with uniform provenance.
+#[derive(Debug)]
+pub struct ShardedStore {
+    shards: Vec<Mutex<SketchStore>>,
+    spec: OpSpec,
+    quantization: Option<QuantizationMode>,
+    base_shard: u64,
+}
+
+impl ShardedStore {
+    /// Build `n_shards` stores sharing one operator spec; shard `i` salts
+    /// its dither stream with `base_shard + i`.
+    pub fn create(
+        spec: OpSpec,
+        quantization: Option<QuantizationMode>,
+        base_shard: u64,
+        n_shards: usize,
+        capacity: Option<usize>,
+        compaction: CompactionPolicy,
+    ) -> Result<ShardedStore, ApiError> {
+        if n_shards == 0 {
+            return Err(ApiError::InvalidConfig {
+                field: "shards",
+                reason: "need at least one shard".into(),
+            });
+        }
+        let mut shards = Vec::with_capacity(n_shards);
+        for i in 0..n_shards {
+            let store =
+                SketchStore::create(spec.clone(), quantization, base_shard + i as u64, capacity)?
+                    .with_compaction(compaction);
+            shards.push(Mutex::new(store));
+        }
+        Ok(ShardedStore {
+            shards,
+            spec,
+            quantization: quantization.map(QuantizationMode::normalized),
+            base_shard,
+        })
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn spec(&self) -> &OpSpec {
+        &self.spec
+    }
+
+    pub fn quantization(&self) -> Option<QuantizationMode> {
+        self.quantization
+    }
+
+    pub fn base_shard(&self) -> u64 {
+        self.base_shard
+    }
+
+    /// The deterministic producer→shard assignment: FNV-1a of the
+    /// producer id, mod the shard count.
+    pub fn shard_for_producer(&self, producer: &str) -> usize {
+        (Fnv1a::hash(producer.as_bytes()) % self.shards.len() as u64) as usize
+    }
+
+    fn shard(&self, idx: usize) -> MutexGuard<'_, SketchStore> {
+        self.shards[idx].lock().unwrap()
+    }
+
+    /// The immutable phase-2 sketch context for one shard (operator,
+    /// quantization, that shard's dither seed).
+    pub fn context(&self, shard: usize) -> SketchContext {
+        self.shard(shard).sketch_context()
+    }
+
+    /// That shard's dither-stream seed.
+    pub fn dither_seed(&self, shard: usize) -> u64 {
+        self.shard(shard).dither_seed()
+    }
+
+    /// Phase 1: reserve `n_rows` global row indices on one shard.
+    pub fn reserve(&self, shard: usize, n_rows: usize) -> usize {
+        self.shard(shard).reserve_rows(n_rows)
+    }
+
+    /// Phase 3: validate and exactly merge an outside-sketched chunk into
+    /// one shard's current epoch. Unlike [`SketchStore::absorb`] this
+    /// never panics: a chunk that disagrees with the shard's provenance
+    /// (wrong kind, mode, shape, or dither stream — i.e. anything an
+    /// untrusted network peer could ship) is rejected with a typed error
+    /// and the store is left untouched.
+    pub fn try_absorb(&self, shard: usize, chunk: ChunkSketch) -> Result<usize, ApiError> {
+        let err = |msg: String| Err(ApiError::ServiceProtocol(format!("absorb: {msg}")));
+        let m = self.spec.m;
+        let n = self.spec.n_dims;
+        match (&chunk, self.quantization) {
+            (ChunkSketch::Dense(_), Some(_)) => {
+                return err("dense chunk for a quantized store".into())
+            }
+            (ChunkSketch::Quantized(_), None) => {
+                return err("quantized chunk for a dense store".into())
+            }
+            (ChunkSketch::Dense(a), None) => {
+                if a.sum.len() != m {
+                    return err(format!("chunk m = {} != store m = {m}", a.sum.len()));
+                }
+                if a.bounds.lo.len() != n {
+                    return err(format!(
+                        "chunk bounds dims = {} != store dims = {n}",
+                        a.bounds.lo.len()
+                    ));
+                }
+                let finite =
+                    a.sum.re.iter().chain(&a.sum.im).all(|v| v.is_finite());
+                if !finite {
+                    return err("non-finite sketch sum".into());
+                }
+                if a.count > 0 && !a.bounds.is_valid() {
+                    return err("chunk carries rows but empty/invalid bounds".into());
+                }
+            }
+            (ChunkSketch::Quantized(a), Some(mode)) => {
+                if a.mode != mode {
+                    return err(format!(
+                        "chunk quantization {} != store {}",
+                        a.mode.name(),
+                        mode.name()
+                    ));
+                }
+                if a.m() != m {
+                    return err(format!("chunk m = {} != store m = {m}", a.m()));
+                }
+                if a.bounds.lo.len() != n {
+                    return err(format!(
+                        "chunk bounds dims = {} != store dims = {n}",
+                        a.bounds.lo.len()
+                    ));
+                }
+                if a.count > 0 && !a.bounds.is_valid() {
+                    return err("chunk carries rows but empty/invalid bounds".into());
+                }
+                let max = a.count as u64 * (a.mode.levels() - 1);
+                if a.level_sums.iter().any(|&v| v > max) {
+                    return err(format!("level sum exceeds count·(levels−1) = {max}"));
+                }
+                let store = self.shard(shard);
+                if a.dither_seed != store.dither_seed() {
+                    return err(format!(
+                        "chunk dither seed {:#x} != shard seed {:#x}",
+                        a.dither_seed,
+                        store.dither_seed()
+                    ));
+                }
+                drop(store);
+            }
+        }
+        Ok(self.shard(shard).absorb(chunk))
+    }
+
+    /// Synchronous single-lock ingest into one shard (loopback/test path).
+    pub fn ingest(&self, shard: usize, rows: &[f64]) -> usize {
+        self.shard(shard).ingest(rows)
+    }
+
+    /// Rotate every shard (lockstep time). Returns `(shard, evicted ids)`
+    /// per shard that evicted anything.
+    pub fn rotate_all(&self) -> Vec<(usize, Vec<u64>)> {
+        let mut out = Vec::new();
+        for (i, s) in self.shards.iter().enumerate() {
+            let evicted = s.lock().unwrap().rotate();
+            if !evicted.is_empty() {
+                out.push((i, evicted));
+            }
+        }
+        out
+    }
+
+    /// Current per-shard generations, sampled under all shard locks (a
+    /// consistent cut — the vector a merged snapshot is keyed by).
+    pub fn generations(&self) -> Vec<u64> {
+        let guards = self.lock_all();
+        guards.iter().map(|g| g.generation()).collect()
+    }
+
+    /// Lock every shard in index order (the only multi-lock path, so the
+    /// fixed order makes deadlock impossible).
+    fn lock_all(&self) -> Vec<MutexGuard<'_, SketchStore>> {
+        self.shards.iter().map(|m| m.lock().unwrap()).collect()
+    }
+
+    /// Exact cross-shard window merge: each shard's `window(last_e)`
+    /// (`None` = everything surviving), merged at the artifact level.
+    /// Snapshotted under all shard locks, merged after they drop; returns
+    /// the artifact plus the generation vector it corresponds to.
+    pub fn merged_window(
+        &self,
+        last_e: Option<usize>,
+    ) -> Result<(SketchArtifact, Vec<u64>), ApiError> {
+        let (parts, gens) = {
+            let guards = self.lock_all();
+            let mut parts = Vec::with_capacity(guards.len());
+            for g in guards.iter() {
+                parts.push(match last_e {
+                    None => g.window_all(),
+                    Some(e) => g.window(e)?,
+                });
+            }
+            let gens = guards.iter().map(|g| g.generation()).collect();
+            (parts, gens)
+        };
+        Ok((SketchArtifact::merge_all(&parts)?, gens))
+    }
+
+    /// Exact cross-shard decayed snapshot: pools every shard's λ-weighted
+    /// partials and scales once, so each epoch is weighted exactly as in a
+    /// single pooled ring (shards rotate in lockstep). Degenerate λ are
+    /// artifact-level merges of the per-shard degenerate snapshots.
+    pub fn merged_decayed(&self, lambda: f64) -> Result<(SketchArtifact, Vec<u64>), ApiError> {
+        if !(lambda.is_finite() && (0.0..=1.0).contains(&lambda)) {
+            return Err(ApiError::InvalidConfig {
+                field: "decay",
+                reason: format!("lambda must be in [0, 1], got {lambda}"),
+            });
+        }
+        if lambda == 1.0 {
+            return self.merged_window(None);
+        }
+        if lambda == 0.0 {
+            let (parts, gens) = {
+                let guards = self.lock_all();
+                let parts: Result<Vec<_>, _> =
+                    guards.iter().map(|g| g.decayed(0.0)).collect();
+                let gens = guards.iter().map(|g| g.generation()).collect::<Vec<_>>();
+                (parts?, gens)
+            };
+            return Ok((SketchArtifact::merge_all(&parts)?, gens));
+        }
+        let guards = self.lock_all();
+        let mut sum = CVec::zeros(self.spec.m);
+        let mut weighted_count = 0.0f64;
+        let mut count = 0usize;
+        let mut bounds = Bounds::empty(self.spec.n_dims);
+        for g in guards.iter() {
+            let (s, wc, c, b) = g.decayed_parts(lambda);
+            sum.axpy(1.0, &s);
+            weighted_count += wc;
+            count += c;
+            bounds.merge(&b);
+        }
+        let gens = guards.iter().map(|g| g.generation()).collect();
+        drop(guards);
+        if count > 0 && weighted_count > 0.0 {
+            sum.scale(count as f64 / weighted_count);
+        }
+        Ok((SketchArtifact { op: self.spec.clone(), sum, count, bounds, quant: None }, gens))
+    }
+
+    /// Per-shard counters (shard index order).
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                let g = s.lock().unwrap();
+                ShardStats {
+                    shard: i,
+                    rows_ingested: g.rows_ingested(),
+                    surviving_rows: g.surviving_rows(),
+                    epochs: g.epoch_count(),
+                    generation: g.generation(),
+                    current_epoch_id: g.current_epoch_id(),
+                }
+            })
+            .collect()
+    }
+
+    /// One shard's epoch breakdown.
+    pub fn epoch_stats(&self, shard: usize) -> Vec<EpochStats> {
+        self.shard(shard).epoch_stats()
+    }
+
+    /// Run `f` against one locked shard (introspection escape hatch).
+    pub fn with_shard<T>(&self, shard: usize, f: impl FnOnce(&SketchStore) -> T) -> T {
+        f(&self.shard(shard))
+    }
+
+    // -- serialization ----------------------------------------------------
+
+    /// Serialize the whole set: a `ckm-store-set` wrapper whose `shards`
+    /// entries are ordinary `ckm-store` objects (shard `i` carrying salt
+    /// `base_shard + i`).
+    pub fn to_json(&self) -> Json {
+        let guards = self.lock_all();
+        Json::obj(vec![
+            ("format", Json::Str("ckm-store-set".to_string())),
+            ("version", Json::Num(STORE_SET_FORMAT_VERSION as f64)),
+            ("base_shard", Json::Str(self.base_shard.to_string())),
+            ("shards", Json::Arr(guards.iter().map(|g| g.to_json()).collect())),
+        ])
+    }
+
+    /// Parse a serialized set, validating uniform provenance across
+    /// shards and the `base_shard + i` salt layout.
+    pub fn from_json(j: &Json) -> Result<ShardedStore, ApiError> {
+        let bad = |msg: &str| ApiError::Format(format!("store-set: {msg}"));
+        if j.get("format").as_str() != Some("ckm-store-set") {
+            return Err(bad("not a ckm-store-set file (missing format tag)"));
+        }
+        let version = j.get("version").as_usize().ok_or_else(|| bad("version missing"))?;
+        if !(1..=STORE_SET_FORMAT_VERSION as usize).contains(&version) {
+            return Err(ApiError::UnsupportedVersion {
+                found: version,
+                supported: STORE_SET_FORMAT_VERSION,
+            });
+        }
+        let base_shard = j
+            .get("base_shard")
+            .as_str()
+            .and_then(|s| s.parse::<u64>().ok())
+            .ok_or_else(|| bad("base_shard must be a decimal u64 string"))?;
+        let shards_j = j.get("shards").as_arr().ok_or_else(|| bad("shards missing"))?;
+        if shards_j.is_empty() {
+            return Err(bad("a store set holds at least one shard"));
+        }
+        let mut shards = Vec::with_capacity(shards_j.len());
+        let mut spec: Option<OpSpec> = None;
+        let mut quantization = None;
+        for (i, sj) in shards_j.iter().enumerate() {
+            let store = SketchStore::from_json(sj)?;
+            if store.shard() != base_shard + i as u64 {
+                return Err(bad(&format!(
+                    "shard {i} carries salt {} (expected base {base_shard} + {i})",
+                    store.shard()
+                )));
+            }
+            match spec.as_ref() {
+                None => {
+                    spec = Some(store.spec().clone());
+                    quantization = store.quantization();
+                }
+                Some(s) if *s == *store.spec() && quantization == store.quantization() => {}
+                Some(s) => {
+                    return Err(ApiError::OperatorMismatch {
+                        left: s.describe(),
+                        right: store.spec().describe(),
+                    })
+                }
+            }
+            shards.push(Mutex::new(store));
+        }
+        Ok(ShardedStore {
+            shards,
+            spec: spec.expect("at least one shard parsed"),
+            quantization,
+            base_shard,
+        })
+    }
+
+    pub fn to_file<P: AsRef<Path>>(&self, path: P) -> Result<(), ApiError> {
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    pub fn from_file<P: AsRef<Path>>(path: P) -> Result<ShardedStore, ApiError> {
+        let text = std::fs::read_to_string(path)?;
+        ShardedStore::from_json(&Json::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::RadiusKind;
+    use crate::testing::gen;
+    use crate::util::rng::Rng;
+
+    fn spec(seed: u64, m: usize, n: usize) -> OpSpec {
+        OpSpec::derive(seed, RadiusKind::AdaptedRadius, 1.0, m, n).0
+    }
+
+    #[test]
+    fn producer_sharding_is_deterministic_and_total() {
+        let set = ShardedStore::create(spec(1, 8, 2), None, 0, 4, None, CompactionPolicy::None)
+            .unwrap();
+        for p in ["alpha", "bravo", "charlie", "delta", ""] {
+            let s = set.shard_for_producer(p);
+            assert!(s < 4);
+            assert_eq!(s, set.shard_for_producer(p));
+        }
+    }
+
+    #[test]
+    fn merged_window_is_exact_across_shards() {
+        // Quantized: the merged artifact must equal the facade sketch of
+        // the concatenated rows per shard, merged — bit for bit.
+        let mode = Some(QuantizationMode::OneBit);
+        let set = ShardedStore::create(spec(2, 16, 3), mode, 10, 2, None, CompactionPolicy::None)
+            .unwrap();
+        let mut rng = Rng::new(3);
+        let rows0 = gen::mat_normal(&mut rng, 21, 3);
+        let rows1 = gen::mat_normal(&mut rng, 13, 3);
+        set.ingest(0, &rows0);
+        set.ingest(1, &rows1);
+        let (merged, gens) = set.merged_window(None).unwrap();
+        assert_eq!(gens, vec![1, 1]);
+        assert_eq!(merged.count, 34);
+
+        let single = |shard: u64, rows: &[f64]| {
+            let store = SketchStore::create(spec(2, 16, 3), mode, shard, None).unwrap();
+            let mut store = store;
+            store.ingest(rows);
+            store.window_all()
+        };
+        let expected = single(10, &rows0).merge(&single(11, &rows1)).unwrap();
+        assert_eq!(merged, expected);
+    }
+
+    #[test]
+    fn try_absorb_rejects_foreign_chunks_without_panicking() {
+        let mode = Some(QuantizationMode::OneBit);
+        let set = ShardedStore::create(spec(4, 8, 2), mode, 0, 2, None, CompactionPolicy::None)
+            .unwrap();
+        let mut rng = Rng::new(5);
+        let rows = gen::mat_normal(&mut rng, 4, 2);
+        // a chunk sketched under shard 1's dither stream, shipped to shard 0
+        let ctx1 = set.context(1);
+        let off = set.reserve(1, 4);
+        let chunk = ctx1.sketch_chunk(&rows, off);
+        assert!(matches!(
+            set.try_absorb(0, chunk.clone()),
+            Err(ApiError::ServiceProtocol(_))
+        ));
+        // untouched: nothing was merged
+        assert_eq!(set.shard_stats()[0].rows_ingested, 0);
+        // the right shard takes it
+        assert_eq!(set.try_absorb(1, chunk).unwrap(), 4);
+        // a dense chunk against a quantized store
+        let dense_set =
+            ShardedStore::create(spec(4, 8, 2), None, 0, 1, None, CompactionPolicy::None)
+                .unwrap();
+        let dense_chunk = dense_set.context(0).sketch_chunk(&rows, 0);
+        assert!(matches!(
+            set.try_absorb(0, dense_chunk),
+            Err(ApiError::ServiceProtocol(_))
+        ));
+    }
+
+    #[test]
+    fn merged_decayed_matches_single_pooled_ring() {
+        // Two dense shards rotating in lockstep vs one pooled store fed
+        // the same rows per epoch: pooled λ-weighting must agree.
+        let set = ShardedStore::create(spec(6, 8, 2), None, 0, 2, None, CompactionPolicy::None)
+            .unwrap();
+        let mut pooled = SketchStore::create(spec(6, 8, 2), None, 0, None).unwrap();
+        let mut rng = Rng::new(7);
+        for _ in 0..3 {
+            let a = gen::mat_normal(&mut rng, 5, 2);
+            let b = gen::mat_normal(&mut rng, 9, 2);
+            set.ingest(0, &a);
+            set.ingest(1, &b);
+            pooled.ingest(&a);
+            pooled.ingest(&b);
+            set.rotate_all();
+            pooled.rotate();
+        }
+        let (merged, _) = set.merged_decayed(0.5).unwrap();
+        let expected = pooled.decayed(0.5).unwrap();
+        assert_eq!(merged.count, expected.count);
+        assert!(merged.sum.max_abs_diff(&expected.sum) <= 1e-12 * (1.0 + expected.count as f64));
+        // λ = 1 short-circuits to the exact window merge
+        let (w1, _) = set.merged_decayed(1.0).unwrap();
+        assert_eq!(w1.count, pooled.window_all().count);
+    }
+
+    #[test]
+    fn set_serialization_roundtrips_and_validates_layout() {
+        let mode = Some(QuantizationMode::Bits(2));
+        let set =
+            ShardedStore::create(spec(8, 8, 2), mode, 3, 2, Some(4), CompactionPolicy::Exponential)
+                .unwrap();
+        let mut rng = Rng::new(9);
+        for _ in 0..3 {
+            set.ingest(0, &gen::mat_normal(&mut rng, 4, 2));
+            set.ingest(1, &gen::mat_normal(&mut rng, 2, 2));
+            set.rotate_all();
+        }
+        let j = set.to_json();
+        let back = ShardedStore::from_json(&Json::parse(&j.to_pretty()).unwrap()).unwrap();
+        assert_eq!(back.n_shards(), 2);
+        assert_eq!(back.base_shard(), 3);
+        assert_eq!(back.quantization(), set.quantization());
+        let (a, _) = set.merged_window(None).unwrap();
+        let (b, _) = back.merged_window(None).unwrap();
+        assert_eq!(a, b);
+        // a shard whose salt breaks the base + i layout is rejected
+        let mut j2 = set.to_json();
+        if let Json::Obj(o) = &mut j2 {
+            o.insert("base_shard".to_string(), Json::Str("7".to_string()));
+        }
+        assert!(ShardedStore::from_json(&j2).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Streaming FNV-1a (64-bit) digests.
+//!
+//! One incremental hasher ([`Fnv1a`]) backs every integrity check in the
+//! repo: operator checksums (`fnv1a:<16 hex>` over `W`'s shape and bit
+//! patterns), producer-id sharding in the service layer, and the
+//! digest-while-transferring checkpoint stream (the daemon hashes bytes as
+//! it sends them, the client hashes as it receives, and the trailing
+//! `CheckpointDone` frame carries the expected value — no second pass over
+//! the payload on either side). [`DigestWriter`] / [`DigestReader`] wrap
+//! any `Write` / `Read` so the hashing rides along I/O for free.
+
+use std::io::{Read, Write};
+
+const FNV_OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Incremental FNV-1a hasher over byte streams.
+#[derive(Clone, Debug)]
+pub struct Fnv1a {
+    state: u64,
+}
+
+impl Default for Fnv1a {
+    fn default() -> Fnv1a {
+        Fnv1a::new()
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a { state: FNV_OFFSET_BASIS }
+    }
+
+    /// Absorb bytes (order-sensitive; call as many times as needed).
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.state;
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        self.state = h;
+    }
+
+    /// The digest over everything absorbed so far (non-consuming: more
+    /// `update` calls may follow).
+    pub fn digest(&self) -> u64 {
+        self.state
+    }
+
+    /// One-shot convenience over a single slice.
+    pub fn hash(bytes: &[u8]) -> u64 {
+        let mut h = Fnv1a::new();
+        h.update(bytes);
+        h.digest()
+    }
+}
+
+/// A `Write` adapter that digests every byte it forwards.
+#[derive(Debug)]
+pub struct DigestWriter<W: Write> {
+    inner: W,
+    hasher: Fnv1a,
+    bytes: u64,
+}
+
+impl<W: Write> DigestWriter<W> {
+    pub fn new(inner: W) -> DigestWriter<W> {
+        DigestWriter { inner, hasher: Fnv1a::new(), bytes: 0 }
+    }
+
+    /// Digest over everything successfully written so far.
+    pub fn digest(&self) -> u64 {
+        self.hasher.digest()
+    }
+
+    /// Bytes successfully written so far.
+    pub fn bytes_written(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn into_inner(self) -> W {
+        self.inner
+    }
+}
+
+impl<W: Write> Write for DigestWriter<W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.hasher.update(&buf[..n]);
+        self.bytes += n as u64;
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// A `Read` adapter that digests every byte it yields.
+#[derive(Debug)]
+pub struct DigestReader<R: Read> {
+    inner: R,
+    hasher: Fnv1a,
+    bytes: u64,
+}
+
+impl<R: Read> DigestReader<R> {
+    pub fn new(inner: R) -> DigestReader<R> {
+        DigestReader { inner, hasher: Fnv1a::new(), bytes: 0 }
+    }
+
+    /// Digest over everything successfully read so far.
+    pub fn digest(&self) -> u64 {
+        self.hasher.digest()
+    }
+
+    /// Bytes successfully read so far.
+    pub fn bytes_read(&self) -> u64 {
+        self.bytes
+    }
+
+    pub fn into_inner(self) -> R {
+        self.inner
+    }
+}
+
+impl<R: Read> Read for DigestReader<R> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let n = self.inner.read(buf)?;
+        self.hasher.update(&buf[..n]);
+        self.bytes += n as u64;
+        Ok(n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Canonical FNV-1a 64-bit test vectors.
+        assert_eq!(Fnv1a::hash(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(Fnv1a::hash(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(Fnv1a::hash(b"foobar"), 0x85dd_35c0_9d8b_7e5b);
+    }
+
+    #[test]
+    fn incremental_equals_one_shot() {
+        let mut h = Fnv1a::new();
+        h.update(b"foo");
+        h.update(b"");
+        h.update(b"bar");
+        assert_eq!(h.digest(), Fnv1a::hash(b"foobar"));
+    }
+
+    #[test]
+    fn writer_and_reader_digest_the_stream() {
+        let payload = b"the quick brown fox".to_vec();
+        let mut w = DigestWriter::new(Vec::new());
+        w.write_all(&payload).unwrap();
+        assert_eq!(w.bytes_written(), payload.len() as u64);
+        assert_eq!(w.digest(), Fnv1a::hash(&payload));
+        let sent = w.into_inner();
+
+        let mut r = DigestReader::new(&sent[..]);
+        let mut back = Vec::new();
+        r.read_to_end(&mut back).unwrap();
+        assert_eq!(back, payload);
+        assert_eq!(r.bytes_read(), payload.len() as u64);
+        assert_eq!(r.digest(), Fnv1a::hash(&payload));
+    }
+}

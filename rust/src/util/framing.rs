@@ -1,0 +1,399 @@
+//! Length-prefixed wire framing plus a strict little-endian byte codec.
+//!
+//! Every `ckmd` protocol message travels as one frame:
+//!
+//! ```text
+//! +----------+-------------+------------------+
+//! | "CKM1"   | len: u32 LE | payload (len B)  |
+//! +----------+-------------+------------------+
+//! ```
+//!
+//! The reader enforces the magic, caps the declared length at
+//! [`MAX_FRAME_LEN`] *before* allocating, and reports truncation as a
+//! typed [`FrameError`] — malformed bytes can never panic the peer or
+//! land a partial message. [`ByteWriter`] / [`ByteReader`] are the
+//! payload codec: fixed-width little-endian primitives, length-prefixed
+//! strings and slices, and a strictness rule that every decoder in
+//! `service::protocol` relies on (lengths validated against the bytes
+//! actually present before any allocation; trailing garbage rejected by
+//! [`ByteReader::finish`]).
+
+use std::io::{Read, Write};
+
+/// Frame magic: rejects cross-protocol traffic before anything is parsed.
+pub const FRAME_MAGIC: [u8; 4] = *b"CKM1";
+
+/// Hard cap on one frame's payload (64 MiB). A sketch chunk is O(m) words
+/// and a checkpoint travels as many small frames, so a larger declaration
+/// is corruption, not load.
+pub const MAX_FRAME_LEN: usize = 64 << 20;
+
+/// Typed framing failures (the transport layer of the wire protocol).
+#[derive(Debug)]
+pub enum FrameError {
+    /// The first four bytes were not [`FRAME_MAGIC`].
+    BadMagic([u8; 4]),
+    /// The header declared a payload larger than [`MAX_FRAME_LEN`].
+    Oversized { len: usize, max: usize },
+    /// The stream ended mid-header or mid-payload.
+    Truncated,
+    /// An underlying transport error.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::BadMagic(m) => write!(f, "bad frame magic {m:02x?}"),
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame declares {len} B payload (cap {max} B)")
+            }
+            FrameError::Truncated => write!(f, "stream truncated mid-frame"),
+            FrameError::Io(e) => write!(f, "frame io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> FrameError {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            FrameError::Truncated
+        } else {
+            FrameError::Io(e)
+        }
+    }
+}
+
+/// Write one frame (header + payload). Payloads above [`MAX_FRAME_LEN`]
+/// are refused locally rather than poisoning the stream.
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> Result<(), FrameError> {
+    if payload.len() > MAX_FRAME_LEN {
+        return Err(FrameError::Oversized { len: payload.len(), max: MAX_FRAME_LEN });
+    }
+    w.write_all(&FRAME_MAGIC)?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's payload. `Ok(None)` is a clean close (the peer
+/// disconnected *between* frames); EOF anywhere inside a frame is
+/// [`FrameError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Vec<u8>>, FrameError> {
+    let mut magic = [0u8; 4];
+    // First byte separately: zero bytes here is a clean between-frames EOF.
+    let mut first = [0u8; 1];
+    loop {
+        match r.read(&mut first) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(FrameError::from(e)),
+        }
+    }
+    magic[0] = first[0];
+    r.read_exact(&mut magic[1..])?;
+    if magic != FRAME_MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4)?;
+    let len = u32::from_le_bytes(len4) as usize;
+    if len > MAX_FRAME_LEN {
+        return Err(FrameError::Oversized { len, max: MAX_FRAME_LEN });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Payload decode failures (the message layer of the wire protocol).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// The payload ended before the declared field.
+    Truncated,
+    /// A field decoded but violated a protocol constraint.
+    Invalid(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated => write!(f, "payload truncated"),
+            WireError::Invalid(msg) => write!(f, "invalid payload: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Little-endian payload builder.
+#[derive(Debug, Default)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> ByteWriter {
+        ByteWriter { buf: Vec::new() }
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Length-prefixed UTF-8 string (u32 byte count).
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// Length-prefixed f64 slice (u64 element count).
+    pub fn f64_slice(&mut self, v: &[f64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.f64(x);
+        }
+    }
+
+    /// Length-prefixed u64 slice (u64 element count).
+    pub fn u64_slice(&mut self, v: &[u64]) {
+        self.u64(v.len() as u64);
+        for &x in v {
+            self.u64(x);
+        }
+    }
+
+    /// Length-prefixed raw bytes (u64 byte count).
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.u64(v.len() as u64);
+        self.buf.extend_from_slice(v);
+    }
+}
+
+/// Strict little-endian payload reader. Every length is validated against
+/// the bytes actually remaining before any allocation happens, so a
+/// malicious 4 GiB declaration inside a 40-byte frame costs nothing.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> ByteReader<'a> {
+        ByteReader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool, WireError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(WireError::Invalid(format!("bool byte {v}"))),
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A u64 that must fit in usize and stay under `cap` (shape fields).
+    pub fn usize_capped(&mut self, cap: usize, what: &str) -> Result<usize, WireError> {
+        let v = self.u64()?;
+        if v > cap as u64 {
+            return Err(WireError::Invalid(format!("{what} = {v} exceeds cap {cap}")));
+        }
+        Ok(v as usize)
+    }
+
+    pub fn str(&mut self) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        if len > self.remaining() {
+            return Err(WireError::Truncated);
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireError::Invalid("string is not UTF-8".to_string()))
+    }
+
+    pub fn f64_slice(&mut self) -> Result<Vec<f64>, WireError> {
+        let len = self.u64()? as usize;
+        if len.checked_mul(8).map(|b| b > self.remaining()).unwrap_or(true) {
+            return Err(WireError::Truncated);
+        }
+        (0..len).map(|_| self.f64()).collect()
+    }
+
+    pub fn u64_slice(&mut self) -> Result<Vec<u64>, WireError> {
+        let len = self.u64()? as usize;
+        if len.checked_mul(8).map(|b| b > self.remaining()).unwrap_or(true) {
+            return Err(WireError::Truncated);
+        }
+        (0..len).map(|_| self.u64()).collect()
+    }
+
+    pub fn bytes(&mut self) -> Result<Vec<u8>, WireError> {
+        let len = self.u64()? as usize;
+        if len > self.remaining() {
+            return Err(WireError::Truncated);
+        }
+        Ok(self.take(len)?.to_vec())
+    }
+
+    /// Reject trailing garbage: a well-formed message consumes its whole
+    /// payload.
+    pub fn finish(&self) -> Result<(), WireError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(WireError::Invalid(format!("{} trailing bytes", self.remaining())))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"hello").unwrap();
+        write_frame(&mut wire, b"").unwrap();
+        let mut r = &wire[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none()); // clean EOF
+    }
+
+    #[test]
+    fn frame_rejects_bad_magic() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"payload").unwrap();
+        wire[0] = b'X';
+        assert!(matches!(read_frame(&mut &wire[..]), Err(FrameError::BadMagic(_))));
+    }
+
+    #[test]
+    fn frame_rejects_oversized_declaration() {
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&FRAME_MAGIC);
+        wire.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(read_frame(&mut &wire[..]), Err(FrameError::Oversized { .. })));
+    }
+
+    #[test]
+    fn frame_truncation_is_typed() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"truncate me please").unwrap();
+        for cut in 1..wire.len() {
+            let r = read_frame(&mut &wire[..cut]);
+            assert!(matches!(r, Err(FrameError::Truncated)), "cut at {cut}: {r:?}");
+        }
+    }
+
+    #[test]
+    fn codec_roundtrip() {
+        let mut w = ByteWriter::new();
+        w.u8(7);
+        w.bool(true);
+        w.u32(0xdead_beef);
+        w.u64(u64::MAX);
+        w.f64(-0.5);
+        w.str("producer-α");
+        w.f64_slice(&[1.0, f64::INFINITY, -0.0]);
+        w.u64_slice(&[3, 2, 1]);
+        w.bytes(&[9, 8]);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert!(r.bool().unwrap());
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), u64::MAX);
+        assert_eq!(r.f64().unwrap(), -0.5);
+        assert_eq!(r.str().unwrap(), "producer-α");
+        let f = r.f64_slice().unwrap();
+        assert_eq!(f[0], 1.0);
+        assert_eq!(f[1], f64::INFINITY);
+        assert_eq!(f[2].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(r.u64_slice().unwrap(), vec![3, 2, 1]);
+        assert_eq!(r.bytes().unwrap(), vec![9, 8]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn codec_rejects_lying_lengths_without_allocating() {
+        // u64 slice declaring usize::MAX elements inside a 16-byte payload.
+        let mut w = ByteWriter::new();
+        w.u64(u64::MAX);
+        w.u64(1);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.u64_slice(), Err(WireError::Truncated));
+
+        let mut w = ByteWriter::new();
+        w.u32(1000);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.str(), Err(WireError::Truncated));
+    }
+
+    #[test]
+    fn codec_rejects_trailing_bytes() {
+        let mut w = ByteWriter::new();
+        w.u8(1);
+        w.u8(2);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        r.u8().unwrap();
+        assert!(r.finish().is_err());
+    }
+}

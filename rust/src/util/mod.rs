@@ -4,7 +4,9 @@
 //! §3 for the substitution table.
 
 pub mod cli;
+pub mod digest;
 pub mod fastmath;
+pub mod framing;
 pub mod json;
 pub mod logging;
 pub mod parallel;

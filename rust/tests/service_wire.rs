@@ -1,0 +1,280 @@
+//! Wire-level robustness for the `ckmd` protocol: frame-codec roundtrip
+//! properties plus hostile-input rejection (corruption, truncation,
+//! oversized declarations, bad magic). The daemon's contract is that
+//! malformed bytes surface as typed errors — never a panic, never a
+//! partial merge — so every test here drives the codec with inputs a
+//! broken or adversarial peer could actually produce.
+
+use ckm::api::Ckm;
+use ckm::data::dataset::Bounds;
+use ckm::linalg::CVec;
+use ckm::service::protocol::{
+    decode_request, decode_response, encode_request, encode_response, Request, Response,
+    WireChunk, WireSolution,
+};
+use ckm::sketch::{QuantizationMode, SketchAccumulator};
+use ckm::testing::{self, Config};
+use ckm::util::framing::{
+    read_frame, write_frame, FrameError, FRAME_MAGIC, MAX_FRAME_LEN,
+};
+use ckm::util::rng::Rng;
+use std::io::Cursor;
+
+fn random_bytes(rng: &mut Rng, len: usize) -> Vec<u8> {
+    (0..len).map(|_| rng.next_u64() as u8).collect()
+}
+
+/// A dense request with structure in every field, sized by `size`.
+fn random_dense_absorb(rng: &mut Rng, size: usize) -> Request {
+    let m = 1 + rng.below(size.max(1));
+    let n = 1 + rng.below(4);
+    let mut sum = CVec::zeros(m);
+    rng.fill_normal(&mut sum.re);
+    rng.fill_normal(&mut sum.im);
+    let mut bounds = Bounds::empty(n);
+    for d in 0..n {
+        let a = rng.normal();
+        let b = a + rng.uniform();
+        bounds.lo[d] = a;
+        bounds.hi[d] = b;
+    }
+    Request::Absorb {
+        chunk: WireChunk::Dense(SketchAccumulator { sum, count: rng.below(1000), bounds }),
+    }
+}
+
+fn random_request(rng: &mut Rng, size: usize) -> Request {
+    match rng.below(7) {
+        0 => Request::Hello { producer: format!("producer-{}", rng.next_u64()) },
+        1 => Request::ReserveRows { n_rows: rng.next_u64() >> 20 },
+        2 => random_dense_absorb(rng, size),
+        3 => Request::Rotate,
+        4 => Request::SolveWindow { last_e: rng.below(8) as u64, k: 1 + rng.below(16) as u64 },
+        5 => Request::SolveDecayed { lambda: rng.uniform(), k: 1 + rng.below(16) as u64 },
+        _ => [Request::Checkpoint, Request::Status, Request::Shutdown][rng.below(3)].clone(),
+    }
+}
+
+fn random_response(rng: &mut Rng, size: usize) -> Response {
+    match rng.below(6) {
+        0 => Response::Reserved { offset: rng.next_u64() >> 8 },
+        1 => Response::Rotated {
+            evicted: (0..rng.below(size.max(1)))
+                .map(|_| (rng.below(4) as u32, rng.next_u64() >> 32))
+                .collect(),
+        },
+        2 => {
+            let (k, n) = (1 + rng.below(4), 1 + rng.below(4));
+            let mut centroids = vec![0.0; k * n];
+            let mut alpha = vec![0.0; k];
+            rng.fill_normal(&mut centroids);
+            rng.fill_normal(&mut alpha);
+            Response::Solved(WireSolution {
+                k: k as u64,
+                n_dims: n as u64,
+                centroids,
+                alpha,
+                cost: rng.uniform(),
+            })
+        }
+        3 => {
+            let len = rng.below(64);
+            Response::CheckpointChunk { bytes: random_bytes(rng, len) }
+        }
+        4 => Response::Error { code: rng.below(6) as u16, message: "nope".into() },
+        _ => Response::ShutdownAck,
+    }
+}
+
+// -- frame codec ---------------------------------------------------------
+
+#[test]
+fn prop_frame_sequences_roundtrip() {
+    testing::check("frame sequence roundtrip", Config::default().cases(32).max_size(40), |rng, size| {
+        let payloads: Vec<Vec<u8>> = (0..1 + rng.below(5))
+            .map(|_| {
+                let len = rng.below(size * 8 + 1);
+                random_bytes(rng, len)
+            })
+            .collect();
+        let mut buf = Vec::new();
+        for p in &payloads {
+            write_frame(&mut buf, p).map_err(|e| e.to_string())?;
+        }
+        let mut cur = Cursor::new(buf);
+        for (i, p) in payloads.iter().enumerate() {
+            let got = read_frame(&mut cur)
+                .map_err(|e| format!("frame {i}: {e}"))?
+                .ok_or_else(|| format!("frame {i}: premature clean EOF"))?;
+            if &got != p {
+                return Err(format!("frame {i}: payload mismatch"));
+            }
+        }
+        // After the last frame the stream closes cleanly, not with an error.
+        match read_frame(&mut cur) {
+            Ok(None) => Ok(()),
+            other => Err(format!("expected clean EOF, got {other:?}")),
+        }
+    });
+}
+
+#[test]
+fn prop_frame_truncation_is_typed() {
+    testing::check("frame truncation", Config::default().cases(48).max_size(60), |rng, size| {
+        let len = rng.below(size * 4 + 1);
+        let payload = random_bytes(rng, len);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &payload).map_err(|e| e.to_string())?;
+        // Cut anywhere strictly inside the frame: always Truncated, never a
+        // panic, never a short read passed off as success.
+        let cut = 1 + rng.below(buf.len() - 1);
+        let mut cur = Cursor::new(&buf[..cut]);
+        match read_frame(&mut cur) {
+            Err(FrameError::Truncated) => Ok(()),
+            other => Err(format!("cut at {cut}/{}: expected Truncated, got {other:?}", buf.len())),
+        }
+    });
+}
+
+#[test]
+fn frame_bad_magic_hangs_up() {
+    let mut buf = Vec::new();
+    write_frame(&mut buf, b"hello").unwrap();
+    for (i, _) in FRAME_MAGIC.iter().enumerate() {
+        let mut evil = buf.clone();
+        evil[i] ^= 0x20;
+        match read_frame(&mut Cursor::new(evil)) {
+            Err(FrameError::BadMagic(_)) => {}
+            other => panic!("magic byte {i} flipped: expected BadMagic, got {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn frame_oversized_declaration_rejected_without_allocating() {
+    // A header declaring 4 GiB must die on the declared length, not on an
+    // attempted allocation: no payload bytes follow at all.
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&FRAME_MAGIC);
+    buf.extend_from_slice(&u32::MAX.to_le_bytes());
+    match read_frame(&mut Cursor::new(buf)) {
+        Err(FrameError::Oversized { len, max }) => {
+            assert_eq!(len, u32::MAX as usize);
+            assert_eq!(max, MAX_FRAME_LEN);
+        }
+        other => panic!("expected Oversized, got {other:?}"),
+    }
+}
+
+#[test]
+fn frame_oversized_payload_refused_locally() {
+    // The write side refuses before poisoning the stream.
+    let huge = vec![0u8; MAX_FRAME_LEN + 1];
+    let mut sink = Vec::new();
+    match write_frame(&mut sink, &huge) {
+        Err(FrameError::Oversized { .. }) => assert!(sink.is_empty(), "bytes leaked: {}", sink.len()),
+        other => panic!("expected local Oversized refusal, got {other:?}"),
+    }
+}
+
+// -- message codec -------------------------------------------------------
+
+#[test]
+fn prop_requests_roundtrip() {
+    testing::check("request roundtrip", Config::default().cases(64).max_size(32), |rng, size| {
+        let req = random_request(rng, size);
+        let back = decode_request(&encode_request(&req)).map_err(|e| e.to_string())?;
+        if back == req { Ok(()) } else { Err(format!("roundtrip changed {req:?} -> {back:?}")) }
+    });
+}
+
+#[test]
+fn prop_responses_roundtrip() {
+    testing::check("response roundtrip", Config::default().cases(64).max_size(32), |rng, size| {
+        let resp = random_response(rng, size);
+        let back = decode_response(&encode_response(&resp)).map_err(|e| e.to_string())?;
+        if back == resp { Ok(()) } else { Err(format!("roundtrip changed {resp:?} -> {back:?}")) }
+    });
+}
+
+/// Quantized chunks survive the wire through their canonical packed form —
+/// the exact encode path a remote producer uses.
+#[test]
+fn quantized_chunks_roundtrip_via_packing() {
+    let ckm = Ckm::builder()
+        .frequencies(64)
+        .sigma2(1.0)
+        .seed(3)
+        .quantization(QuantizationMode::OneBit)
+        .build()
+        .unwrap();
+    let store = ckm.sharded_store(3, 2).unwrap();
+    let mut rng = Rng::new(77);
+    let mut rows = vec![0.0; 40 * 3];
+    rng.fill_normal(&mut rows);
+
+    let chunk = store.context(1).sketch_chunk(&rows, 0);
+    let req = Request::Absorb { chunk: WireChunk::from_chunk(&chunk) };
+    let back = decode_request(&encode_request(&req)).unwrap();
+    assert_eq!(back, req);
+    let Request::Absorb { chunk: wire } = back else { unreachable!() };
+    // Raising back into a mergeable chunk revalidates the canonical form.
+    let raised = wire.into_chunk().unwrap();
+    assert_eq!(raised.count(), 40);
+}
+
+#[test]
+fn prop_corrupted_payloads_never_panic() {
+    testing::check("decoder corruption fuzz", Config::default().cases(128).max_size(32), |rng, size| {
+        let mut bytes = if rng.below(2) == 0 {
+            encode_request(&random_request(rng, size))
+        } else {
+            encode_response(&random_response(rng, size))
+        };
+        match rng.below(3) {
+            // bit flips
+            0 => {
+                for _ in 0..1 + rng.below(8) {
+                    let i = rng.below(bytes.len());
+                    bytes[i] ^= 1u8 << rng.below(8);
+                }
+            }
+            // truncation
+            1 => bytes.truncate(rng.below(bytes.len())),
+            // trailing garbage
+            _ => {
+                let len = 1 + rng.below(9);
+                let tail = random_bytes(rng, len);
+                bytes.extend(tail);
+            }
+        }
+        // Either outcome is acceptable; panicking or aborting is not.
+        let _ = decode_request(&bytes);
+        let _ = decode_response(&bytes);
+        Ok(())
+    });
+}
+
+#[test]
+fn trailing_bytes_after_a_message_are_rejected() {
+    for req in [Request::Rotate, Request::Status, Request::ReserveRows { n_rows: 9 }] {
+        let mut bytes = encode_request(&req);
+        bytes.push(0);
+        assert!(decode_request(&bytes).is_err(), "{req:?} accepted a trailing byte");
+    }
+    let mut bytes = encode_response(&Response::ShutdownAck);
+    bytes.push(0);
+    assert!(decode_response(&bytes).is_err(), "response accepted a trailing byte");
+}
+
+#[test]
+fn empty_and_unknown_tag_payloads_are_rejected() {
+    assert!(decode_request(&[]).is_err());
+    assert!(decode_response(&[]).is_err());
+    // 0x40 is in neither tag space.
+    assert!(decode_request(&[0x40]).is_err());
+    assert!(decode_response(&[0x40]).is_err());
+    // A response tag is not a request tag and vice versa.
+    assert!(decode_request(&encode_response(&Response::ShutdownAck)).is_err());
+    assert!(decode_response(&encode_request(&Request::Rotate)).is_err());
+}
