@@ -78,11 +78,12 @@ fn main() -> anyhow::Result<()> {
 
     let status = client.status()?;
     println!(
-        "status: cache {}/{} hit/miss, {} refreshed solve(s), {} shard(s)",
+        "status: cache {}/{} hit/miss, {} refreshed solve(s), {} shard(s), simd {}",
         status.cache_hits,
         status.cache_misses,
         status.refreshed_solves,
-        status.shards.len()
+        status.shards.len(),
+        status.simd_path
     );
 
     client.shutdown()?;

@@ -102,6 +102,34 @@ fn main() {
     report.add("sincos_sweep", "fast", &sw_size, &sc_fast);
     report.speedup("sincos_sweep", &sc_libm, &sc_fast);
 
+    // Every runnable dispatch path, timed explicitly (the `fast` record
+    // above is whichever of these `auto` picked). The dispatched-vs-lanes
+    // ratio is the ISSUE 7 acceptance number: what the explicit SIMD
+    // kernels buy over the autovectorized portable loop on this host.
+    println!(
+        "  trig dispatch: {} (cpu features: {})",
+        fastmath::active_path(),
+        fastmath::detected_cpu_features()
+    );
+    let mut lanes_meas = None;
+    let mut active_meas = None;
+    for k in fastmath::available_kernels() {
+        let meas = measure(&format!("sincos_sweep/{}", k.name()), warm, 3 * samp, || {
+            k.sincos_sweep(&theta, &mut sin_buf, &mut cos_buf);
+            std::hint::black_box((&sin_buf, &cos_buf));
+        });
+        report.add("sincos_sweep", k.name(), &sw_size, &meas);
+        if k.name() == "lanes" {
+            lanes_meas = Some(meas.clone());
+        }
+        if k.name() == fastmath::active_path() {
+            active_meas = Some(meas.clone());
+        }
+    }
+    if let (Some(lanes), Some(active)) = (&lanes_meas, &active_meas) {
+        report.speedup("sincos_dispatch", lanes, active);
+    }
+
     // -- Sketching (the N-dependent hot path): exact vs fast trig ---------
     let sk_size = format!("N={n_points} n={n_dims} m={m}");
     let meas = measure("sketch_points/native", warm, samp, || {

@@ -108,11 +108,13 @@
 //!
 //! The trig inside every ECF sweep is swappable via
 //! [`util::fastmath::TrigBackend`]: `Exact` (default) is libm,
-//! bit-identical to historical output; `Fast` is a lane-oriented
-//! vectorized sincos (Cody–Waite + minimax, ≤ 2 ULP, elementwise pure so
-//! quantized re-derivability survives) selected with
-//! `Ckm::builder().trig(..)` / `--trig fast` and recorded in artifact
-//! provenance.
+//! bit-identical to historical output; `Fast` is a vectorized sincos
+//! (Cody–Waite + minimax with fused rounding, ≤ 2 ULP) dispatched at
+//! runtime to explicit AVX-512F/AVX2/NEON FMA kernels or the portable
+//! lane loop (`CKM_SIMD` overrides; all paths bit-identical and
+//! elementwise pure, so quantized re-derivability survives any fleet
+//! mix), selected with `Ckm::builder().trig(..)` / `--trig fast` and
+//! recorded in artifact provenance.
 //!
 //! `cargo bench --bench microbench` times scalar vs batched on every hot
 //! path and writes machine-readable `BENCH.json` (see `rust/README.md`);

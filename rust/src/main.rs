@@ -83,7 +83,12 @@ fn usage() {
            bench   diff <baseline.json> <candidate.json> [--threshold 1.5]\n\
                    (fails on tracked-op ns_per_iter regressions beyond the threshold)\n\
            gen     --out data.bin --k 10 --n 10 --npoints 100000 [--seed S]\n\
-           info",
+           info    (version, threads, trig SIMD dispatch path, artifacts)\n\
+         \n\
+         env: CKM_THREADS=N  worker threads (1..=64)\n\
+              CKM_SIMD=scalar|lanes|avx2|avx512|neon|auto  trig dispatch override\n\
+              (--trig exact|fast is the provenance knob; CKM_SIMD only picks\n\
+               among bit-identical fast-path kernels)",
         ckm::version()
     );
 }
@@ -596,6 +601,15 @@ fn cmd_bench(args: &Args) -> anyhow::Result<()> {
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     args.finish()?;
     println!("ckm {}", ckm::version());
+    println!("threads: {} (CKM_THREADS to override)", ckm::util::parallel::default_threads());
+    let avail: Vec<&str> =
+        ckm::util::fastmath::available_kernels().iter().map(|k| k.name()).collect();
+    println!(
+        "trig dispatch: {} (available: {}; CKM_SIMD to override)",
+        ckm::util::fastmath::active_path(),
+        avail.join(" ")
+    );
+    println!("cpu features: {}", ckm::util::fastmath::detected_cpu_features());
     let dir = ckm::runtime::PjrtRuntime::default_dir();
     println!("artifacts dir: {dir:?}");
     match ckm::runtime::Manifest::load(&dir) {

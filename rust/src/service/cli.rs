@@ -116,6 +116,11 @@ pub fn run_daemon(args: &Args) -> anyhow::Result<()> {
     } else {
         println!("ckmd: listening on {listen} ({shards} shards)");
     }
+    println!(
+        "ckmd: trig dispatch path {} (cpu features: {})",
+        crate::util::fastmath::active_path(),
+        crate::util::fastmath::detected_cpu_features()
+    );
     let daemon = Daemon::new(store, ckm);
     daemon.serve(listener)?;
     if let Some(path) = save {
@@ -160,6 +165,7 @@ pub fn run_client(verb: &str, args: &Args) -> anyhow::Result<()> {
                 "cache: {} hits / {} misses; refreshed solves: {}; connections: {}",
                 s.cache_hits, s.cache_misses, s.refreshed_solves, s.connections
             );
+            println!("simd: {}", s.simd_path);
             Ok(())
         }
         "checkpoint" => {

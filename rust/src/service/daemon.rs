@@ -187,6 +187,7 @@ impl ServiceState {
             cache_misses: self.cache_misses.load(Ordering::Relaxed),
             refreshed_solves: self.refreshed_solves.load(Ordering::Relaxed),
             connections: self.connections.load(Ordering::Relaxed),
+            simd_path: crate::util::fastmath::active_path().to_string(),
         }
     }
 

@@ -27,7 +27,8 @@ use crate::util::fastmath::TrigBackend;
 use crate::util::framing::{ByteReader, ByteWriter, WireError};
 
 /// Wire protocol version; bumped on any incompatible message change.
-pub const PROTOCOL_VERSION: u32 = 1;
+/// v2: `StatusInfo` carries the daemon's active SIMD dispatch path.
+pub const PROTOCOL_VERSION: u32 = 2;
 
 /// Sanity cap on decoded shape fields (m, dims, k, counts). Far above any
 /// real configuration, far below anything that could exhaust memory when
@@ -281,6 +282,11 @@ pub struct StatusInfo {
     pub refreshed_solves: u64,
     /// Currently open client connections.
     pub connections: u64,
+    /// Name of the SIMD dispatch path the daemon's trig sweeps run on
+    /// (`fastmath::active_path()`): `scalar`, `lanes`, `avx2`, `avx512`
+    /// or `neon`. Introspection only — provenance records `TrigBackend`,
+    /// never this (all paths are bit-identical). New in protocol v2.
+    pub simd_path: String,
 }
 
 // -- encoding ------------------------------------------------------------
@@ -505,6 +511,7 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             w.u64(s.cache_misses);
             w.u64(s.refreshed_solves);
             w.u64(s.connections);
+            w.str(&s.simd_path);
         }
         Response::Error { code, message } => {
             w.u8(T_ERROR);
@@ -575,6 +582,7 @@ pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
                 cache_misses: r.u64()?,
                 refreshed_solves: r.u64()?,
                 connections: r.u64()?,
+                simd_path: r.str()?,
             })
         }
         T_ERROR => {
@@ -668,6 +676,7 @@ mod tests {
                 cache_misses: 2,
                 refreshed_solves: 1,
                 connections: 3,
+                simd_path: "avx2".to_string(),
             }),
             Response::Error { code: error_code::PROTOCOL, message: "nope".to_string() },
             Response::ShutdownAck,

@@ -1,0 +1,238 @@
+//! AVX2 + FMA sweep kernels: 4 × f64 per `__m256d` register via
+//! `core::arch::x86_64`.
+//!
+//! Every arithmetic step is the exact operation DAG of the scalar
+//! `sincos_reduced`: each `f64::mul_add` there is one `vfmadd`/`vfnmadd`/
+//! `vfmsub` here (same single IEEE rounding per lane), each
+//! separately-rounded op — notably the `t·(2/π) + TOINT` quadrant step —
+//! stays separate `vmul`/`vadd`, and the quadrant reconstruction is the
+//! same integer mask algebra on the raw bit patterns. Rust never contracts
+//! independent mul/add into FMA on its own, so the correspondence is
+//! stable; the cross-path property suite pins it.
+//!
+//! Chunks whose 4 lanes are all finite and in range run the vector kernel;
+//! mixed chunks and the tail fall back to the per-element `sincos_fast`
+//! (bit-identical for in-range lanes, bitwise libm beyond — elementwise
+//! purity makes the chunk-width difference between paths unobservable).
+//!
+//! # Safety
+//!
+//! Everything here requires AVX2 **and** FMA at runtime. The only safe
+//! entry is [`KERNELS`], whose wrappers the dispatch registry exposes
+//! strictly after `is_x86_feature_detected!("avx2")` &&
+//! `is_x86_feature_detected!("fma")` both pass.
+
+use core::arch::x86_64::*;
+
+use super::dispatch::SweepKernels;
+use super::{
+    C1, C2, C3, C4, C5, C6, FAST_TRIG_LIMIT, INV_PIO2, PIO2_1, PIO2_2, PIO2_3, PIO2_3T, S1, S2,
+    S3, S4, S5, S6, sincos_fast, TOINT,
+};
+
+const W: usize = 4;
+
+/// Safe wrappers around the AVX2 sweeps. Sound to call only because the
+/// dispatch registry lists this set strictly after feature detection.
+pub(super) static KERNELS: SweepKernels = SweepKernels {
+    name: "avx2",
+    sincos: |theta, sin_out, cos_out| unsafe { sincos_sweep(theta, sin_out, cos_out) },
+    atom: |theta, re, im| unsafe { atom_sweep(theta, re, im) },
+    accum: |theta, re, im| unsafe { accum_sweep(theta, re, im) },
+    accum_weighted: |theta, beta, re, im| unsafe { accum_weighted_sweep(theta, beta, re, im) },
+};
+
+/// True when all 4 lanes are finite and `|t| ≤ FAST_TRIG_LIMIT` (NaN
+/// compares false, demoting the chunk to the scalar gate).
+///
+/// # Safety
+/// Requires AVX2+FMA.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn chunk_in_range(t: __m256d) -> bool {
+    let abs = _mm256_andnot_pd(_mm256_set1_pd(-0.0), t);
+    let m = _mm256_cmp_pd::<_CMP_LE_OQ>(abs, _mm256_set1_pd(FAST_TRIG_LIMIT));
+    _mm256_movemask_pd(m) == 0b1111
+}
+
+/// 4-lane `sincos_reduced` — same fused-op DAG as the scalar definition.
+/// Valid only when every lane passed [`chunk_in_range`].
+///
+/// # Safety
+/// Requires AVX2+FMA.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn sincos4(t: __m256d) -> (__m256d, __m256d) {
+    // quadrant: separate mul + add (never fused — the seams are part of
+    // the semantic definition)
+    let big = _mm256_add_pd(_mm256_mul_pd(t, _mm256_set1_pd(INV_PIO2)), _mm256_set1_pd(TOINT));
+    let qq = _mm256_castpd_si256(big);
+    let n = _mm256_sub_pd(big, _mm256_set1_pd(TOINT));
+    // Cody–Waite cascade with compensated residuals
+    let r1 = _mm256_fnmadd_pd(n, _mm256_set1_pd(PIO2_1), t); // t − n·PIO2_1
+    let w1 = _mm256_mul_pd(n, _mm256_set1_pd(PIO2_2));
+    let r2 = _mm256_sub_pd(r1, w1);
+    let e2 = _mm256_sub_pd(_mm256_sub_pd(r1, r2), w1);
+    let w2 = _mm256_mul_pd(n, _mm256_set1_pd(PIO2_3));
+    let r3 = _mm256_sub_pd(r2, w2);
+    let e3 = _mm256_sub_pd(_mm256_sub_pd(r2, r3), w2);
+    let lo = _mm256_fnmadd_pd(n, _mm256_set1_pd(PIO2_3T), _mm256_add_pd(e2, e3));
+    let y0 = _mm256_add_pd(r3, lo);
+    let y1 = _mm256_add_pd(_mm256_sub_pd(r3, y0), lo);
+    // k_sin(y0, y1)
+    let z = _mm256_mul_pd(y0, y0);
+    let v = _mm256_mul_pd(z, y0);
+    let mut rs = _mm256_fmadd_pd(z, _mm256_set1_pd(S6), _mm256_set1_pd(S5));
+    rs = _mm256_fmadd_pd(z, rs, _mm256_set1_pd(S4));
+    rs = _mm256_fmadd_pd(z, rs, _mm256_set1_pd(S3));
+    rs = _mm256_fmadd_pd(z, rs, _mm256_set1_pd(S2));
+    let t1 = _mm256_fnmadd_pd(v, rs, _mm256_mul_pd(_mm256_set1_pd(0.5), y1)); // 0.5·y1 − v·rs
+    let t2 = _mm256_fmsub_pd(z, t1, y1); // z·t1 − y1
+    let t3 = _mm256_fnmadd_pd(v, _mm256_set1_pd(S1), t2); // t2 − v·S1
+    let sn = _mm256_sub_pd(y0, t3);
+    // k_cos(y0, y1)
+    let mut p = _mm256_fmadd_pd(z, _mm256_set1_pd(C6), _mm256_set1_pd(C5));
+    p = _mm256_fmadd_pd(z, p, _mm256_set1_pd(C4));
+    p = _mm256_fmadd_pd(z, p, _mm256_set1_pd(C3));
+    p = _mm256_fmadd_pd(z, p, _mm256_set1_pd(C2));
+    p = _mm256_fmadd_pd(z, p, _mm256_set1_pd(C1));
+    let rc = _mm256_mul_pd(z, p);
+    let hz = _mm256_mul_pd(_mm256_set1_pd(0.5), z);
+    let w = _mm256_sub_pd(_mm256_set1_pd(1.0), hz);
+    let xy = _mm256_mul_pd(y0, y1);
+    let tc = _mm256_fmsub_pd(z, rc, xy); // z·rc − y0·y1
+    let cs = _mm256_add_pd(
+        w,
+        _mm256_add_pd(_mm256_sub_pd(_mm256_sub_pd(_mm256_set1_pd(1.0), w), hz), tc),
+    );
+    // quadrant reconstruction on raw bits (same mask algebra as scalar)
+    let one = _mm256_set1_epi64x(1);
+    let swap = _mm256_sub_epi64(_mm256_setzero_si256(), _mm256_and_si256(qq, one));
+    let sn_b = _mm256_castpd_si256(sn);
+    let cs_b = _mm256_castpd_si256(cs);
+    let sin_b = _mm256_or_si256(_mm256_andnot_si256(swap, sn_b), _mm256_and_si256(swap, cs_b));
+    let cos_b = _mm256_or_si256(_mm256_andnot_si256(swap, cs_b), _mm256_and_si256(swap, sn_b));
+    let s_flip = _mm256_slli_epi64::<63>(_mm256_and_si256(_mm256_srli_epi64::<1>(qq), one));
+    let qq1 = _mm256_add_epi64(qq, one);
+    let c_flip = _mm256_slli_epi64::<63>(_mm256_and_si256(_mm256_srli_epi64::<1>(qq1), one));
+    let s = _mm256_castsi256_pd(_mm256_xor_si256(sin_b, s_flip));
+    let c = _mm256_castsi256_pd(_mm256_xor_si256(cos_b, c_flip));
+    (s, c)
+}
+
+/// # Safety
+/// Requires AVX2+FMA; slice lengths must match (the dispatch methods
+/// assert before calling).
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn sincos_sweep(theta: &[f64], sin_out: &mut [f64], cos_out: &mut [f64]) {
+    let n = theta.len();
+    let mut i = 0;
+    while i + W <= n {
+        let t = _mm256_loadu_pd(theta.as_ptr().add(i));
+        if chunk_in_range(t) {
+            let (s, c) = sincos4(t);
+            _mm256_storeu_pd(sin_out.as_mut_ptr().add(i), s);
+            _mm256_storeu_pd(cos_out.as_mut_ptr().add(i), c);
+        } else {
+            for j in i..i + W {
+                let (s, c) = sincos_fast(theta[j]);
+                sin_out[j] = s;
+                cos_out[j] = c;
+            }
+        }
+        i += W;
+    }
+    for j in i..n {
+        let (s, c) = sincos_fast(theta[j]);
+        sin_out[j] = s;
+        cos_out[j] = c;
+    }
+}
+
+/// # Safety
+/// Requires AVX2+FMA; slice lengths must match.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn atom_sweep(theta: &[f64], re: &mut [f64], im: &mut [f64]) {
+    let sign = _mm256_set1_pd(-0.0);
+    let n = theta.len();
+    let mut i = 0;
+    while i + W <= n {
+        let t = _mm256_loadu_pd(theta.as_ptr().add(i));
+        if chunk_in_range(t) {
+            let (s, c) = sincos4(t);
+            _mm256_storeu_pd(re.as_mut_ptr().add(i), c);
+            _mm256_storeu_pd(im.as_mut_ptr().add(i), _mm256_xor_pd(s, sign)); // −s (exact)
+        } else {
+            for j in i..i + W {
+                let (s, c) = sincos_fast(theta[j]);
+                re[j] = c;
+                im[j] = -s;
+            }
+        }
+        i += W;
+    }
+    for j in i..n {
+        let (s, c) = sincos_fast(theta[j]);
+        re[j] = c;
+        im[j] = -s;
+    }
+}
+
+/// # Safety
+/// Requires AVX2+FMA; slice lengths must match.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn accum_sweep(theta: &[f64], acc_re: &mut [f64], acc_im: &mut [f64]) {
+    let n = theta.len();
+    let mut i = 0;
+    while i + W <= n {
+        let t = _mm256_loadu_pd(theta.as_ptr().add(i));
+        if chunk_in_range(t) {
+            let (s, c) = sincos4(t);
+            let ar = _mm256_loadu_pd(acc_re.as_ptr().add(i));
+            let ai = _mm256_loadu_pd(acc_im.as_ptr().add(i));
+            _mm256_storeu_pd(acc_re.as_mut_ptr().add(i), _mm256_add_pd(ar, c));
+            _mm256_storeu_pd(acc_im.as_mut_ptr().add(i), _mm256_sub_pd(ai, s));
+        } else {
+            for j in i..i + W {
+                let (s, c) = sincos_fast(theta[j]);
+                acc_re[j] += c;
+                acc_im[j] -= s;
+            }
+        }
+        i += W;
+    }
+    for j in i..n {
+        let (s, c) = sincos_fast(theta[j]);
+        acc_re[j] += c;
+        acc_im[j] -= s;
+    }
+}
+
+/// # Safety
+/// Requires AVX2+FMA; slice lengths must match.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn accum_weighted_sweep(theta: &[f64], beta: f64, acc_re: &mut [f64], acc_im: &mut [f64]) {
+    let b = _mm256_set1_pd(beta);
+    let n = theta.len();
+    let mut i = 0;
+    while i + W <= n {
+        let t = _mm256_loadu_pd(theta.as_ptr().add(i));
+        if chunk_in_range(t) {
+            let (s, c) = sincos4(t);
+            let ar = _mm256_loadu_pd(acc_re.as_ptr().add(i));
+            let ai = _mm256_loadu_pd(acc_im.as_ptr().add(i));
+            _mm256_storeu_pd(acc_re.as_mut_ptr().add(i), _mm256_fmadd_pd(b, c, ar)); // ar + β·c
+            _mm256_storeu_pd(acc_im.as_mut_ptr().add(i), _mm256_fnmadd_pd(b, s, ai)); // ai − β·s
+        } else {
+            for j in i..i + W {
+                let (s, c) = sincos_fast(theta[j]);
+                acc_re[j] = beta.mul_add(c, acc_re[j]);
+                acc_im[j] = beta.mul_add(-s, acc_im[j]);
+            }
+        }
+        i += W;
+    }
+    for j in i..n {
+        let (s, c) = sincos_fast(theta[j]);
+        acc_re[j] = beta.mul_add(c, acc_re[j]);
+        acc_im[j] = beta.mul_add(-s, acc_im[j]);
+    }
+}

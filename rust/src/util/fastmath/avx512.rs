@@ -1,0 +1,236 @@
+//! AVX-512F sweep kernels: 8 × f64 per `__m512d` register via
+//! `core::arch::x86_64`.
+//!
+//! Same operation DAG as the scalar semantic kernel and the AVX2 path —
+//! every `mul_add` is one `vfmadd`/`vfnmadd`/`vfmsub`, the `t·(2/π) +
+//! TOINT` quadrant step stays separate mul + add, and the quadrant
+//! reconstruction is the identical integer mask algebra (here on
+//! `__m512i` via the AVX512F `_mm512_*_epi64` logic ops — note
+//! `_mm512_andnot_pd` needs AVX512DQ, so all the bit work is done in the
+//! integer domain, and `|t|` comes from `_mm512_abs_pd`). Chunks of 8
+//! whose lanes are all finite and in range run the vector kernel; mixed
+//! chunks and tails take the per-element gate, so elementwise purity
+//! makes the 8-vs-4-vs-1 chunk width unobservable.
+//!
+//! # Safety
+//!
+//! Requires AVX-512F (plus FMA, implied on every AVX-512 part but
+//! detected explicitly anyway). The only safe entry is [`KERNELS`],
+//! exposed by the dispatch registry strictly after
+//! `is_x86_feature_detected!("avx512f")` && `...("fma")` both pass.
+
+use core::arch::x86_64::*;
+
+use super::dispatch::SweepKernels;
+use super::{
+    C1, C2, C3, C4, C5, C6, FAST_TRIG_LIMIT, INV_PIO2, PIO2_1, PIO2_2, PIO2_3, PIO2_3T, S1, S2,
+    S3, S4, S5, S6, sincos_fast, TOINT,
+};
+
+const W: usize = 8;
+
+/// Safe wrappers around the AVX-512F sweeps. Sound to call only because
+/// the dispatch registry lists this set strictly after feature detection.
+pub(super) static KERNELS: SweepKernels = SweepKernels {
+    name: "avx512",
+    sincos: |theta, sin_out, cos_out| unsafe { sincos_sweep(theta, sin_out, cos_out) },
+    atom: |theta, re, im| unsafe { atom_sweep(theta, re, im) },
+    accum: |theta, re, im| unsafe { accum_sweep(theta, re, im) },
+    accum_weighted: |theta, beta, re, im| unsafe { accum_weighted_sweep(theta, beta, re, im) },
+};
+
+/// True when all 8 lanes are finite and `|t| ≤ FAST_TRIG_LIMIT` (NaN
+/// compares false, demoting the chunk to the scalar gate).
+///
+/// # Safety
+/// Requires AVX-512F.
+#[target_feature(enable = "avx512f")]
+unsafe fn chunk_in_range(t: __m512d) -> bool {
+    let abs = _mm512_abs_pd(t);
+    let m = _mm512_cmp_pd_mask::<_CMP_LE_OQ>(abs, _mm512_set1_pd(FAST_TRIG_LIMIT));
+    m == 0xff
+}
+
+/// 8-lane `sincos_reduced` — same fused-op DAG as the scalar definition.
+/// Valid only when every lane passed [`chunk_in_range`].
+///
+/// # Safety
+/// Requires AVX-512F.
+#[target_feature(enable = "avx512f")]
+unsafe fn sincos8(t: __m512d) -> (__m512d, __m512d) {
+    // quadrant: separate mul + add, never fused
+    let big = _mm512_add_pd(_mm512_mul_pd(t, _mm512_set1_pd(INV_PIO2)), _mm512_set1_pd(TOINT));
+    let qq = _mm512_castpd_si512(big);
+    let n = _mm512_sub_pd(big, _mm512_set1_pd(TOINT));
+    // Cody–Waite cascade with compensated residuals
+    let r1 = _mm512_fnmadd_pd(n, _mm512_set1_pd(PIO2_1), t); // t − n·PIO2_1
+    let w1 = _mm512_mul_pd(n, _mm512_set1_pd(PIO2_2));
+    let r2 = _mm512_sub_pd(r1, w1);
+    let e2 = _mm512_sub_pd(_mm512_sub_pd(r1, r2), w1);
+    let w2 = _mm512_mul_pd(n, _mm512_set1_pd(PIO2_3));
+    let r3 = _mm512_sub_pd(r2, w2);
+    let e3 = _mm512_sub_pd(_mm512_sub_pd(r2, r3), w2);
+    let lo = _mm512_fnmadd_pd(n, _mm512_set1_pd(PIO2_3T), _mm512_add_pd(e2, e3));
+    let y0 = _mm512_add_pd(r3, lo);
+    let y1 = _mm512_add_pd(_mm512_sub_pd(r3, y0), lo);
+    // k_sin(y0, y1)
+    let z = _mm512_mul_pd(y0, y0);
+    let v = _mm512_mul_pd(z, y0);
+    let mut rs = _mm512_fmadd_pd(z, _mm512_set1_pd(S6), _mm512_set1_pd(S5));
+    rs = _mm512_fmadd_pd(z, rs, _mm512_set1_pd(S4));
+    rs = _mm512_fmadd_pd(z, rs, _mm512_set1_pd(S3));
+    rs = _mm512_fmadd_pd(z, rs, _mm512_set1_pd(S2));
+    let t1 = _mm512_fnmadd_pd(v, rs, _mm512_mul_pd(_mm512_set1_pd(0.5), y1)); // 0.5·y1 − v·rs
+    let t2 = _mm512_fmsub_pd(z, t1, y1); // z·t1 − y1
+    let t3 = _mm512_fnmadd_pd(v, _mm512_set1_pd(S1), t2); // t2 − v·S1
+    let sn = _mm512_sub_pd(y0, t3);
+    // k_cos(y0, y1)
+    let mut p = _mm512_fmadd_pd(z, _mm512_set1_pd(C6), _mm512_set1_pd(C5));
+    p = _mm512_fmadd_pd(z, p, _mm512_set1_pd(C4));
+    p = _mm512_fmadd_pd(z, p, _mm512_set1_pd(C3));
+    p = _mm512_fmadd_pd(z, p, _mm512_set1_pd(C2));
+    p = _mm512_fmadd_pd(z, p, _mm512_set1_pd(C1));
+    let rc = _mm512_mul_pd(z, p);
+    let hz = _mm512_mul_pd(_mm512_set1_pd(0.5), z);
+    let w = _mm512_sub_pd(_mm512_set1_pd(1.0), hz);
+    let xy = _mm512_mul_pd(y0, y1);
+    let tc = _mm512_fmsub_pd(z, rc, xy); // z·rc − y0·y1
+    let cs = _mm512_add_pd(
+        w,
+        _mm512_add_pd(_mm512_sub_pd(_mm512_sub_pd(_mm512_set1_pd(1.0), w), hz), tc),
+    );
+    // quadrant reconstruction on raw bits (same mask algebra as scalar)
+    let one = _mm512_set1_epi64(1);
+    let swap = _mm512_sub_epi64(_mm512_setzero_si512(), _mm512_and_epi64(qq, one));
+    let sn_b = _mm512_castpd_si512(sn);
+    let cs_b = _mm512_castpd_si512(cs);
+    let sin_b = _mm512_or_epi64(_mm512_andnot_epi64(swap, sn_b), _mm512_and_epi64(swap, cs_b));
+    let cos_b = _mm512_or_epi64(_mm512_andnot_epi64(swap, cs_b), _mm512_and_epi64(swap, sn_b));
+    let s_flip = _mm512_slli_epi64::<63>(_mm512_and_epi64(_mm512_srli_epi64::<1>(qq), one));
+    let qq1 = _mm512_add_epi64(qq, one);
+    let c_flip = _mm512_slli_epi64::<63>(_mm512_and_epi64(_mm512_srli_epi64::<1>(qq1), one));
+    let s = _mm512_castsi512_pd(_mm512_xor_epi64(sin_b, s_flip));
+    let c = _mm512_castsi512_pd(_mm512_xor_epi64(cos_b, c_flip));
+    (s, c)
+}
+
+/// # Safety
+/// Requires AVX-512F+FMA; slice lengths must match (the dispatch methods
+/// assert before calling).
+#[target_feature(enable = "avx512f")]
+unsafe fn sincos_sweep(theta: &[f64], sin_out: &mut [f64], cos_out: &mut [f64]) {
+    let n = theta.len();
+    let mut i = 0;
+    while i + W <= n {
+        let t = _mm512_loadu_pd(theta.as_ptr().add(i));
+        if chunk_in_range(t) {
+            let (s, c) = sincos8(t);
+            _mm512_storeu_pd(sin_out.as_mut_ptr().add(i), s);
+            _mm512_storeu_pd(cos_out.as_mut_ptr().add(i), c);
+        } else {
+            for j in i..i + W {
+                let (s, c) = sincos_fast(theta[j]);
+                sin_out[j] = s;
+                cos_out[j] = c;
+            }
+        }
+        i += W;
+    }
+    for j in i..n {
+        let (s, c) = sincos_fast(theta[j]);
+        sin_out[j] = s;
+        cos_out[j] = c;
+    }
+}
+
+/// # Safety
+/// Requires AVX-512F+FMA; slice lengths must match.
+#[target_feature(enable = "avx512f")]
+unsafe fn atom_sweep(theta: &[f64], re: &mut [f64], im: &mut [f64]) {
+    let sign = _mm512_set1_epi64(i64::MIN);
+    let n = theta.len();
+    let mut i = 0;
+    while i + W <= n {
+        let t = _mm512_loadu_pd(theta.as_ptr().add(i));
+        if chunk_in_range(t) {
+            let (s, c) = sincos8(t);
+            _mm512_storeu_pd(re.as_mut_ptr().add(i), c);
+            // −s via sign-bit xor (exact, matches the scalar unary neg)
+            let neg_s = _mm512_castsi512_pd(_mm512_xor_epi64(_mm512_castpd_si512(s), sign));
+            _mm512_storeu_pd(im.as_mut_ptr().add(i), neg_s);
+        } else {
+            for j in i..i + W {
+                let (s, c) = sincos_fast(theta[j]);
+                re[j] = c;
+                im[j] = -s;
+            }
+        }
+        i += W;
+    }
+    for j in i..n {
+        let (s, c) = sincos_fast(theta[j]);
+        re[j] = c;
+        im[j] = -s;
+    }
+}
+
+/// # Safety
+/// Requires AVX-512F+FMA; slice lengths must match.
+#[target_feature(enable = "avx512f")]
+unsafe fn accum_sweep(theta: &[f64], acc_re: &mut [f64], acc_im: &mut [f64]) {
+    let n = theta.len();
+    let mut i = 0;
+    while i + W <= n {
+        let t = _mm512_loadu_pd(theta.as_ptr().add(i));
+        if chunk_in_range(t) {
+            let (s, c) = sincos8(t);
+            let ar = _mm512_loadu_pd(acc_re.as_ptr().add(i));
+            let ai = _mm512_loadu_pd(acc_im.as_ptr().add(i));
+            _mm512_storeu_pd(acc_re.as_mut_ptr().add(i), _mm512_add_pd(ar, c));
+            _mm512_storeu_pd(acc_im.as_mut_ptr().add(i), _mm512_sub_pd(ai, s));
+        } else {
+            for j in i..i + W {
+                let (s, c) = sincos_fast(theta[j]);
+                acc_re[j] += c;
+                acc_im[j] -= s;
+            }
+        }
+        i += W;
+    }
+    for j in i..n {
+        let (s, c) = sincos_fast(theta[j]);
+        acc_re[j] += c;
+        acc_im[j] -= s;
+    }
+}
+
+/// # Safety
+/// Requires AVX-512F+FMA; slice lengths must match.
+#[target_feature(enable = "avx512f")]
+unsafe fn accum_weighted_sweep(theta: &[f64], beta: f64, acc_re: &mut [f64], acc_im: &mut [f64]) {
+    let b = _mm512_set1_pd(beta);
+    let n = theta.len();
+    let mut i = 0;
+    while i + W <= n {
+        let t = _mm512_loadu_pd(theta.as_ptr().add(i));
+        if chunk_in_range(t) {
+            let (s, c) = sincos8(t);
+            let ar = _mm512_loadu_pd(acc_re.as_ptr().add(i));
+            let ai = _mm512_loadu_pd(acc_im.as_ptr().add(i));
+            _mm512_storeu_pd(acc_re.as_mut_ptr().add(i), _mm512_fmadd_pd(b, c, ar)); // ar + β·c
+            _mm512_storeu_pd(acc_im.as_mut_ptr().add(i), _mm512_fnmadd_pd(b, s, ai)); // ai − β·s
+        } else {
+            for j in i..i + W {
+                let (s, c) = sincos_fast(theta[j]);
+                acc_re[j] = beta.mul_add(c, acc_re[j]);
+                acc_im[j] = beta.mul_add(-s, acc_im[j]);
+            }
+        }
+        i += W;
+    }
+    for j in i..n {
+        let (s, c) = sincos_fast(theta[j]);
+        acc_re[j] = beta.mul_add(c, acc_re[j]);
+        acc_im[j] = beta.mul_add(-s, acc_im[j]);
+    }
+}

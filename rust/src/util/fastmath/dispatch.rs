@@ -1,0 +1,187 @@
+//! Runtime CPU-feature dispatch for the fast sweep kernels.
+//!
+//! Detection runs once (`OnceLock`): the best kernel set the host supports
+//! becomes [`active_kernels`], and every `TrigBackend::Fast` sweep routes
+//! through its function pointers — one indirect call per sweep (a full θ
+//! row), so dispatch overhead is unmeasurable against the trig itself.
+//! One binary therefore serves any fleet node: AVX-512F hosts run 8-wide,
+//! AVX2+FMA hosts 4-wide, aarch64 2-wide NEON, and anything else the
+//! portable `lanes`/`scalar` paths.
+//!
+//! `CKM_SIMD={scalar,lanes,avx2,avx512,neon,auto}` overrides the choice
+//! (read once, at first dispatch). Asking for a path the CPU cannot run
+//! logs a warning and falls back to the best available one — it never
+//! crashes and never silently changes results, because all paths are
+//! bit-identical by contract. [`available_kernels`] exposes every runnable
+//! path so tests and benches can exercise each one directly without
+//! touching the environment.
+
+use std::sync::OnceLock;
+
+use super::portable;
+
+/// One dispatch path: a name plus the four sweep entry points. The raw
+/// function pointers are private — the methods add the slice-length
+/// guards that make the SIMD paths' raw-pointer loops sound.
+pub struct SweepKernels {
+    pub(super) name: &'static str,
+    pub(super) sincos: fn(&[f64], &mut [f64], &mut [f64]),
+    pub(super) atom: fn(&[f64], &mut [f64], &mut [f64]),
+    pub(super) accum: fn(&[f64], &mut [f64], &mut [f64]),
+    pub(super) accum_weighted: fn(&[f64], f64, &mut [f64], &mut [f64]),
+}
+
+impl SweepKernels {
+    /// Path name as used by `CKM_SIMD` and the bench records.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// `sin/cos` sweep through this path (see `fastmath::sincos_sweep`).
+    pub fn sincos_sweep(&self, theta: &[f64], sin_out: &mut [f64], cos_out: &mut [f64]) {
+        assert_eq!(theta.len(), sin_out.len());
+        assert_eq!(theta.len(), cos_out.len());
+        (self.sincos)(theta, sin_out, cos_out);
+    }
+
+    /// Atom-layout sweep through this path (see `fastmath::atom_sweep`).
+    pub fn atom_sweep(&self, theta: &[f64], re: &mut [f64], im: &mut [f64]) {
+        assert_eq!(theta.len(), re.len());
+        assert_eq!(theta.len(), im.len());
+        (self.atom)(theta, re, im);
+    }
+
+    /// Accumulation sweep through this path (see `fastmath::accum_sweep`).
+    pub fn accum_sweep(&self, theta: &[f64], acc_re: &mut [f64], acc_im: &mut [f64]) {
+        assert_eq!(theta.len(), acc_re.len());
+        assert_eq!(theta.len(), acc_im.len());
+        (self.accum)(theta, acc_re, acc_im);
+    }
+
+    /// Weighted accumulation sweep through this path (see
+    /// `fastmath::accum_sweep_weighted`).
+    pub fn accum_sweep_weighted(
+        &self,
+        theta: &[f64],
+        beta: f64,
+        acc_re: &mut [f64],
+        acc_im: &mut [f64],
+    ) {
+        assert_eq!(theta.len(), acc_re.len());
+        assert_eq!(theta.len(), acc_im.len());
+        (self.accum_weighted)(theta, beta, acc_re, acc_im);
+    }
+}
+
+static SCALAR: SweepKernels = SweepKernels {
+    name: "scalar",
+    sincos: portable::sincos_scalar,
+    atom: portable::atom_scalar,
+    accum: portable::accum_scalar,
+    accum_weighted: portable::accum_weighted_scalar,
+};
+
+static LANES_KERNELS: SweepKernels = SweepKernels {
+    name: "lanes",
+    sincos: portable::sincos_lanes,
+    atom: portable::atom_lanes,
+    accum: portable::accum_lanes,
+    accum_weighted: portable::accum_weighted_lanes,
+};
+
+/// Every dispatch path this host can actually run, best first. The
+/// portable `lanes` and `scalar` paths are always present; the explicit
+/// SIMD paths appear only after `is_x86_feature_detected!` (or the
+/// aarch64 equivalent) confirms the ISA, which is what makes the safe
+/// wrappers around the `#[target_feature]` kernels sound.
+pub fn available_kernels() -> &'static [&'static SweepKernels] {
+    static AVAIL: OnceLock<Vec<&'static SweepKernels>> = OnceLock::new();
+    AVAIL.get_or_init(|| {
+        let mut v: Vec<&'static SweepKernels> = Vec::new();
+        #[cfg(target_arch = "x86_64")]
+        {
+            if std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                v.push(&super::avx512::KERNELS);
+            }
+            if std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+            {
+                v.push(&super::avx2::KERNELS);
+            }
+        }
+        #[cfg(target_arch = "aarch64")]
+        {
+            if std::arch::is_aarch64_feature_detected!("neon") {
+                v.push(&super::neon::KERNELS);
+            }
+        }
+        v.push(&LANES_KERNELS);
+        v.push(&SCALAR);
+        v
+    })
+}
+
+/// The dispatch path every `TrigBackend::Fast` sweep uses: the best
+/// available one, unless a valid `CKM_SIMD` override picks another.
+/// Resolved once at first use.
+pub fn active_kernels() -> &'static SweepKernels {
+    static ACTIVE: OnceLock<&'static SweepKernels> = OnceLock::new();
+    ACTIVE.get_or_init(|| {
+        let avail = available_kernels();
+        let best = avail[0];
+        match std::env::var("CKM_SIMD") {
+            Err(_) => best,
+            Ok(want) if want.is_empty() || want.eq_ignore_ascii_case("auto") => best,
+            Ok(want) => {
+                let w = want.to_ascii_lowercase();
+                if let Some(k) = avail.iter().find(|k| k.name == w) {
+                    k
+                } else {
+                    let here: Vec<&str> = avail.iter().map(|k| k.name).collect();
+                    log::warn!(
+                        "CKM_SIMD={want}: not a dispatch path this CPU can run \
+                         (valid: scalar|lanes|avx2|avx512|neon|auto; available here: {}); \
+                         using {}",
+                        here.join("|"),
+                        best.name
+                    );
+                    best
+                }
+            }
+        }
+    })
+}
+
+/// Name of the active dispatch path (`Status`, daemon logs, `ckm info`).
+pub fn active_path() -> &'static str {
+    active_kernels().name
+}
+
+/// Space-separated list of the detected CPU features the dispatcher
+/// looks at (for job logs and `ckm info`); `"none"` when the host has
+/// no SIMD path beyond the portable ones.
+pub fn detected_cpu_features() -> String {
+    #[allow(unused_mut)]
+    let mut feats: Vec<&str> = Vec::new();
+    #[cfg(target_arch = "x86_64")]
+    for (name, on) in [
+        ("avx2", std::arch::is_x86_feature_detected!("avx2")),
+        ("fma", std::arch::is_x86_feature_detected!("fma")),
+        ("avx512f", std::arch::is_x86_feature_detected!("avx512f")),
+    ] {
+        if on {
+            feats.push(name);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        feats.push("neon");
+    }
+    if feats.is_empty() {
+        "none".to_string()
+    } else {
+        feats.join(" ")
+    }
+}

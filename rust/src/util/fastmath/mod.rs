@@ -1,0 +1,700 @@
+//! Vectorized `sincos` with runtime CPU dispatch — the ECF evaluation hot
+//! loop at whatever SIMD width the host actually has.
+//!
+//! Every sketched point costs `m` sin/cos evaluations (`e^{-iω_j^T x}` for
+//! each frequency), so at paper scale (N = 10⁷, m = 1000) the trig sweep —
+//! not the `X·Wᵀ` GEMM — dominates ingest. Scalar libm calls serialize
+//! that sweep. This module tree provides one *semantic kernel* and several
+//! interchangeable executions of it:
+//!
+//! - [`sincos_reduced`] (here) — the straight-line scalar definition:
+//!   3-part Cody–Waite reduction mod π/2 (`PIO2_1/2/3` each carry 33
+//!   significant bits, so every `n·part` product is exact for `|n| < 2²⁰`)
+//!   with compensated residuals, fdlibm/musl minimax kernel polynomials,
+//!   and branch-free quadrant reconstruction through integer bit masks.
+//!   The polynomial and residual steps are written with `f64::mul_add`
+//!   (IEEE fused multiply-add, one rounding), because that is the shape
+//!   the hardware paths execute;
+//! - [`portable`] — `scalar` (plain per-element loop) and `lanes` (the
+//!   8-wide chunk-gated loop LLVM can autovectorize) sweeps over the same
+//!   scalar kernel;
+//! - [`avx2`] / [`avx512`] / [`neon`] — explicit `core::arch` kernels at
+//!   4/8/2 × f64 per register with hardware FMA;
+//! - [`dispatch`] — runtime CPU-feature detection resolved once into a
+//!   function-pointer table ([`active_kernels`]), overridable with
+//!   `CKM_SIMD={scalar,lanes,avx2,avx512,neon,auto}` for testing.
+//!
+//! **Bit-identity across paths is a hard contract.** Every SIMD kernel
+//! computes the exact operation DAG of [`sincos_reduced`] — each fused op
+//! maps to one vector FMA, each separately-rounded op (notably the
+//! `t·(2/π) + TOINT` quadrant step, which must *not* be fused or the
+//! quadrant seams move) maps to separate vector mul/add — and IEEE-754
+//! arithmetic is deterministic per lane, so all paths produce identical
+//! bits for identical inputs. The suite below pins that, which is what
+//! lets dispatch (a per-host decision) stay invisible to provenance:
+//! artifacts record only [`TrigBackend`], never the SIMD path, and
+//! quantized (QCKM) re-derivability survives any mix of fleet hardware.
+//!
+//! Accuracy contract (enforced by the tests below, per dispatch path):
+//! `sincos_fast` is within **2 ULP** of libm `sin_cos` everywhere in the
+//! fast range `|θ| ≤ FAST_TRIG_LIMIT`, and *bitwise equal* to libm outside
+//! it and for non-finite θ (NaN/±∞ compare false against the limit and
+//! take the fallback). The kernel is **elementwise pure** — each lane's
+//! output depends only on its own θ, never on its position within a sweep,
+//! its neighbours, or the chunk width of the path that computed it.
+//!
+//! [`TrigBackend`] is the user-facing knob: `Exact` (default) routes every
+//! sweep through libm and keeps all golden fixtures and scalar-parity
+//! property tests bit-identical; `Fast` routes sweeps through the
+//! dispatched kernel. The backend travels with the operator provenance
+//! (see `api::OpSpec`), so artifacts sketched under different backends
+//! refuse to merge.
+
+// The minimax/Cody–Waite constants are transcribed from fdlibm at full
+// printed precision; clippy's shortest-round-trip preference would lose
+// the documentation value of the canonical digits.
+#![allow(clippy::excessive_precision)]
+
+#[cfg(target_arch = "x86_64")]
+mod avx2;
+#[cfg(target_arch = "x86_64")]
+mod avx512;
+mod dispatch;
+#[cfg(target_arch = "aarch64")]
+mod neon;
+mod portable;
+
+pub use dispatch::{
+    active_kernels, active_path, available_kernels, detected_cpu_features, SweepKernels,
+};
+
+/// Which trig implementation the sketch/solve hot loops use.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TrigBackend {
+    /// libm `sin_cos` everywhere — bit-identical to the historical paths.
+    #[default]
+    Exact,
+    /// Vectorized Cody–Waite + minimax kernel (≤ 2 ULP vs libm) for
+    /// `|θ| ≤ FAST_TRIG_LIMIT`, dispatched to the best SIMD path the CPU
+    /// supports; scalar libm fallback beyond.
+    Fast,
+}
+
+impl TrigBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TrigBackend::Exact => "exact",
+            TrigBackend::Fast => "fast",
+        }
+    }
+
+    /// Parse `exact` / `libm` or `fast` / `simd`.
+    pub fn parse(s: &str) -> anyhow::Result<TrigBackend> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" | "libm" => Ok(TrigBackend::Exact),
+            "fast" | "simd" => Ok(TrigBackend::Fast),
+            other => anyhow::bail!(
+                "unknown trig backend '{other}': valid values are exact|libm \
+                 (bitwise libm) and fast|simd (vectorized ≤2-ULP kernel)"
+            ),
+        }
+    }
+}
+
+/// Lane width the portable `lanes` sweep is written for (4 × f64 per AVX2
+/// register; 8 gives the vectorizer a two-register unroll).
+pub const LANES: usize = 8;
+
+/// `|θ|` bound of the polynomial fast path: 2²⁰ · π/2 (the fdlibm
+/// medium-range cutoff, inside which every Cody–Waite product `n·PIO2_k`
+/// is exact). Beyond it `sincos_fast` falls back to libm.
+pub const FAST_TRIG_LIMIT: f64 = (1u64 << 20) as f64 * std::f64::consts::FRAC_PI_2;
+
+/// 1.5 · 2⁵² — adding and subtracting this rounds to the nearest integer
+/// (ties-to-even) for any |x| < 2⁵¹, and the low mantissa bits of the
+/// intermediate sum hold that integer in two's complement (the standard
+/// SIMD quadrant-extraction trick; no f64→i64 vector cast needed).
+pub(super) const TOINT: f64 = 6_755_399_441_055_744.0;
+
+/// 2/π (the correctly rounded double — bitwise identical to fdlibm's
+/// `invpio2`).
+pub(super) const INV_PIO2: f64 = std::f64::consts::FRAC_2_PI;
+
+// π/2 = PIO2_1 + PIO2_2 + PIO2_3 + PIO2_3T − δ, |δ| ≈ 1e-47. The first
+// three parts carry 33 significant bits each, so n·part is exact for
+// |n| < 2²⁰ (fdlibm e_rem_pio2 constants).
+pub(super) const PIO2_1: f64 = 1.570_796_326_734_125_614_17e0;
+pub(super) const PIO2_2: f64 = 6.077_100_506_303_965_976_60e-11;
+pub(super) const PIO2_3: f64 = 2.022_266_248_711_166_455_80e-21;
+pub(super) const PIO2_3T: f64 = 8.478_427_660_368_899_569_97e-32;
+
+// fdlibm __kernel_sin minimax coefficients (|r| ≤ π/4, ≤ 1 ULP).
+pub(super) const S1: f64 = -1.666_666_666_666_663_243_48e-1;
+pub(super) const S2: f64 = 8.333_333_333_322_489_461_24e-3;
+pub(super) const S3: f64 = -1.984_126_982_985_794_931_34e-4;
+pub(super) const S4: f64 = 2.755_731_370_707_006_767_89e-6;
+pub(super) const S5: f64 = -2.505_076_025_340_686_341_95e-8;
+pub(super) const S6: f64 = 1.589_690_995_211_550_102_21e-10;
+
+// fdlibm __kernel_cos minimax coefficients.
+pub(super) const C1: f64 = 4.166_666_666_666_660_190_37e-2;
+pub(super) const C2: f64 = -1.388_888_888_887_410_957_49e-3;
+pub(super) const C3: f64 = 2.480_158_728_947_672_941_78e-5;
+pub(super) const C4: f64 = -2.755_731_435_139_066_330_35e-7;
+pub(super) const C5: f64 = 2.087_572_321_298_174_827_90e-9;
+pub(super) const C6: f64 = -1.135_964_755_778_819_482_65e-11;
+
+/// fdlibm `__kernel_sin(x, y, 1)` retuned for fused rounding: sin of the
+/// hi/lo pair `x + y`, `|x| ≤ π/4`. Each `mul_add` is one IEEE rounding
+/// and maps 1:1 onto a vector FMA in the SIMD paths.
+#[inline(always)]
+fn k_sin(x: f64, y: f64) -> f64 {
+    let z = x * x;
+    let v = z * x;
+    let mut r = z.mul_add(S6, S5);
+    r = z.mul_add(r, S4);
+    r = z.mul_add(r, S3);
+    r = z.mul_add(r, S2);
+    // x − ((z·(v·r − 0.5·y) + y·(−1) ... ) — the fdlibm tail, fused:
+    let t1 = v.mul_add(-r, 0.5 * y); // 0.5·y − v·r   (one rounding)
+    let t2 = z.mul_add(t1, -y); //      z·t1 − y      (one rounding)
+    let t3 = v.mul_add(-S1, t2); //     t2 − v·S1     (one rounding)
+    x - t3
+}
+
+/// musl `__cos(x, y)` retuned for fused rounding: cos of the hi/lo pair
+/// `x + y`, `|x| ≤ π/4`. (`1 − hz` is compensated exactly — Fast2Sum
+/// applies since `hz < 1` — which is what keeps the kernel ≤ 1 ULP
+/// without fdlibm's `qx` branch.)
+#[inline(always)]
+fn k_cos(x: f64, y: f64) -> f64 {
+    let z = x * x;
+    let mut p = z.mul_add(C6, C5);
+    p = z.mul_add(p, C4);
+    p = z.mul_add(p, C3);
+    p = z.mul_add(p, C2);
+    p = z.mul_add(p, C1);
+    let r = z * p;
+    let hz = 0.5 * z;
+    let w = 1.0 - hz;
+    let xy = x * y;
+    let t = z.mul_add(r, -xy); // z·r − x·y (one rounding)
+    w + (((1.0 - w) - hz) + t)
+}
+
+/// The straight-line fast kernel — the *semantic definition* every SIMD
+/// path must reproduce bit-for-bit: reduce mod π/2 with residual tracking,
+/// evaluate both minimax kernels, reconstruct the quadrant through bit
+/// masks. Valid only for finite `|t| ≤ FAST_TRIG_LIMIT` — callers gate.
+/// Branch-free by construction.
+#[inline(always)]
+fn sincos_reduced(t: f64) -> (f64, f64) {
+    // Nearest-integer multiple of π/2 + its low bits, via the TOINT trick.
+    // Deliberately NOT fused: the separately-rounded product is part of
+    // the quadrant definition (an FMA here would move the seams), and
+    // every SIMD path mirrors it with separate vector mul + add.
+    let big = t * INV_PIO2 + TOINT;
+    let qq = big.to_bits(); // low mantissa bits ≡ n (mod 2^52), two's complement
+    let n = big - TOINT;
+    // 3-part Cody–Waite with compensated residuals. The n·PIO2_1 product
+    // is exact (33-bit constant, |n| < 2²⁰), so the fused form is bitwise
+    // the two-op form; e2/e3 recover the rounding of each cascade
+    // subtraction; the PIO2_3T product mops up the remaining tail of π/2.
+    let r1 = (-n).mul_add(PIO2_1, t); // t − n·PIO2_1
+    let w1 = n * PIO2_2;
+    let r2 = r1 - w1;
+    let e2 = (r1 - r2) - w1;
+    let w2 = n * PIO2_3;
+    let r3 = r2 - w2;
+    let e3 = (r2 - r3) - w2;
+    let lo = (-n).mul_add(PIO2_3T, e2 + e3); // (e2+e3) − n·PIO2_3T
+    let y0 = r3 + lo;
+    let y1 = (r3 - y0) + lo;
+    let sn = k_sin(y0, y1);
+    let cs = k_cos(y0, y1);
+    // Quadrant n mod 4: odd n swaps sin/cos; bits 1 of n and n+1 flip the
+    // signs. Pure integer lane ops on the raw bit patterns.
+    let swap = (qq & 1).wrapping_neg(); // 0 or all-ones
+    let sin_bits = (sn.to_bits() & !swap) | (cs.to_bits() & swap);
+    let cos_bits = (cs.to_bits() & !swap) | (sn.to_bits() & swap);
+    let s = f64::from_bits(sin_bits ^ (((qq >> 1) & 1) << 63));
+    let c = f64::from_bits(cos_bits ^ (((qq.wrapping_add(1) >> 1) & 1) << 63));
+    (s, c)
+}
+
+/// `(sin θ, cos θ)` through the fast kernel, falling back to libm for
+/// non-finite θ and `|θ| > FAST_TRIG_LIMIT`. Elementwise pure: the result
+/// for a given θ never depends on neighbours, sweep position, chunking,
+/// or which dispatch path ran it.
+#[inline]
+pub fn sincos_fast(t: f64) -> (f64, f64) {
+    if t.abs() <= FAST_TRIG_LIMIT {
+        sincos_reduced(t)
+    } else {
+        t.sin_cos() // also the NaN/±∞ path: the comparison above is false
+    }
+}
+
+/// `(sin θ, cos θ)` under the given backend (scalar call sites).
+#[inline]
+pub fn sincos(backend: TrigBackend, t: f64) -> (f64, f64) {
+    match backend {
+        TrigBackend::Exact => t.sin_cos(),
+        TrigBackend::Fast => sincos_fast(t),
+    }
+}
+
+/// True when every lane is finite and inside the polynomial range (NaN
+/// compares false and correctly demotes the chunk to the scalar path).
+#[inline(always)]
+fn all_in_range(chunk: &[f64; LANES]) -> bool {
+    let mut ok = true;
+    for &t in chunk {
+        ok &= t.abs() <= FAST_TRIG_LIMIT;
+    }
+    ok
+}
+
+/// Sweep `sin_out[i] = sin θ_i, cos_out[i] = cos θ_i` under `backend`.
+pub fn sincos_sweep(backend: TrigBackend, theta: &[f64], sin_out: &mut [f64], cos_out: &mut [f64]) {
+    match backend {
+        TrigBackend::Exact => {
+            debug_assert_eq!(theta.len(), sin_out.len());
+            debug_assert_eq!(theta.len(), cos_out.len());
+            for (i, &t) in theta.iter().enumerate() {
+                let (s, c) = t.sin_cos();
+                sin_out[i] = s;
+                cos_out[i] = c;
+            }
+        }
+        TrigBackend::Fast => active_kernels().sincos_sweep(theta, sin_out, cos_out),
+    }
+}
+
+/// Atom-layout sweep: `re[i] = cos θ_i`, `im[i] = −sin θ_i` (the
+/// `e^{-iθ}` component layout of `sketch::kernels::atoms_batch`).
+pub fn atom_sweep(backend: TrigBackend, theta: &[f64], re: &mut [f64], im: &mut [f64]) {
+    match backend {
+        TrigBackend::Exact => {
+            debug_assert_eq!(theta.len(), re.len());
+            debug_assert_eq!(theta.len(), im.len());
+            for (i, &t) in theta.iter().enumerate() {
+                let (s, c) = t.sin_cos();
+                re[i] = c;
+                im[i] = -s;
+            }
+        }
+        TrigBackend::Fast => active_kernels().atom_sweep(theta, re, im),
+    }
+}
+
+/// Fused ECF accumulation sweep: `acc_re[i] += cos θ_i`, `acc_im[i] −=
+/// sin θ_i` — one row of the raw (unnormalized, unit-weight) sketch sum,
+/// with no per-element β multiply (callers scale once per pass).
+pub fn accum_sweep(backend: TrigBackend, theta: &[f64], acc_re: &mut [f64], acc_im: &mut [f64]) {
+    match backend {
+        TrigBackend::Exact => {
+            debug_assert_eq!(theta.len(), acc_re.len());
+            debug_assert_eq!(theta.len(), acc_im.len());
+            for (i, &t) in theta.iter().enumerate() {
+                let (s, c) = t.sin_cos();
+                acc_re[i] += c;
+                acc_im[i] -= s;
+            }
+        }
+        TrigBackend::Fast => active_kernels().accum_sweep(theta, acc_re, acc_im),
+    }
+}
+
+/// Weighted ECF accumulation sweep: `acc_re[i] += β·cos θ_i`,
+/// `acc_im[i] −= β·sin θ_i` (one weighted point's row). Under `Exact` the
+/// multiply and add round separately (the historical bits); under `Fast`
+/// they are fused — one rounding, matching the vector FMA every SIMD path
+/// uses.
+pub fn accum_sweep_weighted(
+    backend: TrigBackend,
+    theta: &[f64],
+    beta: f64,
+    acc_re: &mut [f64],
+    acc_im: &mut [f64],
+) {
+    match backend {
+        TrigBackend::Exact => {
+            debug_assert_eq!(theta.len(), acc_re.len());
+            debug_assert_eq!(theta.len(), acc_im.len());
+            for (i, &t) in theta.iter().enumerate() {
+                let (s, c) = t.sin_cos();
+                acc_re[i] += beta * c;
+                acc_im[i] -= beta * s;
+            }
+        }
+        TrigBackend::Fast => active_kernels().accum_sweep_weighted(theta, beta, acc_re, acc_im),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{self, Config};
+    use crate::util::rng::Rng;
+
+    /// Distance in representable f64 steps (monotone bit mapping); equal
+    /// values (including −0 vs +0) and NaN-vs-NaN are distance 0.
+    fn ulp_dist(a: f64, b: f64) -> u64 {
+        if a == b || (a.is_nan() && b.is_nan()) {
+            return 0;
+        }
+        if a.is_nan() || b.is_nan() {
+            return u64::MAX;
+        }
+        // monotone map: sign-magnitude bits → offset binary
+        let map = |x: f64| -> u64 {
+            let b = x.to_bits();
+            if b >> 63 == 1 {
+                !b
+            } else {
+                b | (1u64 << 63)
+            }
+        };
+        map(a).abs_diff(map(b))
+    }
+
+    /// The accuracy contract: ≤ 2 ULP vs libm in the fast range (with a
+    /// vanishing absolute-error escape for values within ~1e-25 of zero
+    /// crossings, where libm itself is the moving target).
+    fn assert_close_to_libm(t: f64) {
+        let (fs, fc) = sincos_fast(t);
+        let (ls, lc) = t.sin_cos();
+        for (name, f, l) in [("sin", fs, ls), ("cos", fc, lc)] {
+            let d = ulp_dist(f, l);
+            assert!(
+                d <= 2 || (f - l).abs() <= 1e-25,
+                "{name}({t:e}) = {f:e} vs libm {l:e}: {d} ulp"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_fast_within_2_ulp_of_libm() {
+        testing::check("sincos_fast ulp", Config::default().cases(64).max_size(100), |rng, _| {
+            // magnitudes spanning subnormal-ish to the reduction limit
+            for scale in [1e-12, 1e-6, 1e-2, 1.0, 10.0, 1e3, 1e6] {
+                let t = (rng.uniform() * 2.0 - 1.0) * scale;
+                let (fs, fc) = sincos_fast(t);
+                let (ls, lc) = t.sin_cos();
+                for (f, l) in [(fs, ls), (fc, lc)] {
+                    let d = ulp_dist(f, l);
+                    if d > 2 && (f - l).abs() > 1e-25 {
+                        return Err(format!("sincos({t:e}): {d} ulp off libm"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn range_reduction_boundaries_multiples_of_pi_over_4() {
+        // The quadrant seams: doubles at and adjacent to k·π/4, where the
+        // reduction flips n and the kernels hand off between sin and cos.
+        for k in -1024i64..=1024 {
+            let base = k as f64 * std::f64::consts::FRAC_PI_4;
+            for delta in [-2i64, -1, 0, 1, 2] {
+                let t = f64::from_bits((base.to_bits() as i64 + delta) as u64);
+                assert_close_to_libm(t);
+            }
+        }
+        // ... and the same seams out at large |θ| near the fast limit.
+        for k in [100_000i64, 1_000_000, 2_097_149, 2_097_150] {
+            let base = k as f64 * std::f64::consts::FRAC_PI_4;
+            if base.abs() <= FAST_TRIG_LIMIT {
+                assert_close_to_libm(base);
+                assert_close_to_libm(-base);
+            }
+        }
+    }
+
+    #[test]
+    fn large_theta_beyond_limit_is_bitwise_libm() {
+        for t in [
+            FAST_TRIG_LIMIT * 1.000001,
+            -FAST_TRIG_LIMIT * 1.000001,
+            1e9,
+            -3.7e12,
+            1e300,
+        ] {
+            let (fs, fc) = sincos_fast(t);
+            let (ls, lc) = t.sin_cos();
+            assert_eq!(fs.to_bits(), ls.to_bits(), "sin({t:e}) must be the libm fallback");
+            assert_eq!(fc.to_bits(), lc.to_bits(), "cos({t:e}) must be the libm fallback");
+        }
+        // just inside the limit stays on the polynomial path and accurate
+        assert_close_to_libm(FAST_TRIG_LIMIT * 0.9999999);
+        assert_close_to_libm(-FAST_TRIG_LIMIT * 0.9999999);
+    }
+
+    #[test]
+    fn special_values_zero_subnormal_inf_nan() {
+        // ±0: values agree with libm (sign of the zero sine is not part of
+        // the contract — ulp_dist treats −0 == +0).
+        for t in [0.0f64, -0.0] {
+            let (s, c) = sincos_fast(t);
+            assert_eq!(s, 0.0);
+            assert_eq!(c, 1.0);
+        }
+        // subnormals: sin x = x exactly, cos x = 1
+        for t in [5e-324f64, -5e-324, 2.2e-308, -2.2e-308] {
+            let (s, c) = sincos_fast(t);
+            assert_eq!(s, t, "sin of subnormal {t:e}");
+            assert_eq!(c, 1.0);
+        }
+        // non-finite: bitwise libm behavior (NaN results)
+        for t in [f64::INFINITY, f64::NEG_INFINITY, f64::NAN] {
+            let (s, c) = sincos_fast(t);
+            assert!(s.is_nan() && c.is_nan(), "sincos({t}) must be NaN");
+        }
+    }
+
+    #[test]
+    fn sweep_is_elementwise_pure_under_any_alignment() {
+        // The same θ must produce the same bits regardless of sweep offset,
+        // slice length, or neighbours (this is what preserves quantized
+        // re-derivability under TrigBackend::Fast).
+        let mut rng = Rng::new(99);
+        let n = 3 * LANES + 5;
+        let mut theta: Vec<f64> = (0..n).map(|_| (rng.uniform() * 2.0 - 1.0) * 50.0).collect();
+        theta[4] = FAST_TRIG_LIMIT * 2.0; // forces one chunk onto the fallback
+        theta[n - 1] = f64::NAN;
+        let (mut s_all, mut c_all) = (vec![0.0; n], vec![0.0; n]);
+        sincos_sweep(TrigBackend::Fast, &theta, &mut s_all, &mut c_all);
+        for start in 0..n {
+            let len = (n - start).min(LANES + 3);
+            let (mut s, mut c) = (vec![0.0; len], vec![0.0; len]);
+            sincos_sweep(TrigBackend::Fast, &theta[start..start + len], &mut s, &mut c);
+            for j in 0..len {
+                let (se, ce) = sincos_fast(theta[start + j]);
+                assert_eq!(
+                    s[j].to_bits(),
+                    se.to_bits(),
+                    "sweep sin impure at offset {start}+{j}"
+                );
+                assert_eq!(c[j].to_bits(), ce.to_bits());
+                assert_eq!(s[j].to_bits(), s_all[start + j].to_bits());
+                assert_eq!(c[j].to_bits(), c_all[start + j].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn exact_backend_sweeps_are_bitwise_libm() {
+        let mut rng = Rng::new(5);
+        let theta: Vec<f64> = (0..37).map(|_| (rng.uniform() * 2.0 - 1.0) * 30.0).collect();
+        let (mut s, mut c) = (vec![0.0; 37], vec![0.0; 37]);
+        sincos_sweep(TrigBackend::Exact, &theta, &mut s, &mut c);
+        let (mut re, mut im) = (vec![0.0; 37], vec![0.0; 37]);
+        atom_sweep(TrigBackend::Exact, &theta, &mut re, &mut im);
+        let (mut ar, mut ai) = (vec![0.0; 37], vec![0.0; 37]);
+        accum_sweep(TrigBackend::Exact, &theta, &mut ar, &mut ai);
+        for (i, &t) in theta.iter().enumerate() {
+            let (ls, lc) = t.sin_cos();
+            assert_eq!(s[i].to_bits(), ls.to_bits());
+            assert_eq!(c[i].to_bits(), lc.to_bits());
+            assert_eq!(re[i].to_bits(), lc.to_bits());
+            assert_eq!(im[i].to_bits(), (-ls).to_bits());
+            assert_eq!(ar[i].to_bits(), lc.to_bits());
+            assert_eq!(ai[i].to_bits(), (-ls).to_bits());
+        }
+    }
+
+    #[test]
+    fn accum_sweeps_match_manual_accumulation() {
+        let mut rng = Rng::new(7);
+        let theta: Vec<f64> = (0..2 * LANES + 3).map(|_| rng.normal() * 8.0).collect();
+        let n = theta.len();
+        for backend in [TrigBackend::Exact, TrigBackend::Fast] {
+            let (mut re, mut im) = (vec![0.25; n], vec![-0.5; n]);
+            accum_sweep(backend, &theta, &mut re, &mut im);
+            let (mut wre, mut wim) = (vec![0.25; n], vec![-0.5; n]);
+            accum_sweep_weighted(backend, &theta, 0.3, &mut wre, &mut wim);
+            for (i, &t) in theta.iter().enumerate() {
+                let (s, c) = sincos(backend, t);
+                assert_eq!(re[i].to_bits(), (0.25 + c).to_bits(), "{backend:?} re[{i}]");
+                assert_eq!(im[i].to_bits(), (-0.5 - s).to_bits());
+                // Exact keeps the historical two-rounding accumulation;
+                // Fast fuses β·c into the add (one rounding, = vector FMA).
+                let (ewre, ewim) = match backend {
+                    TrigBackend::Exact => (0.25 + 0.3 * c, -0.5 - 0.3 * s),
+                    TrigBackend::Fast => (0.3f64.mul_add(c, 0.25), 0.3f64.mul_add(-s, -0.5)),
+                };
+                assert_eq!(wre[i].to_bits(), ewre.to_bits(), "{backend:?} wre[{i}]");
+                assert_eq!(wim[i].to_bits(), ewim.to_bits(), "{backend:?} wim[{i}]");
+            }
+        }
+    }
+
+    #[test]
+    fn pythagorean_identity_holds_on_fast_path() {
+        let mut rng = Rng::new(13);
+        for _ in 0..2000 {
+            let t = (rng.uniform() * 2.0 - 1.0) * 1e5;
+            let (s, c) = sincos_fast(t);
+            assert!((s * s + c * c - 1.0).abs() < 1e-14, "identity broke at {t}");
+        }
+    }
+
+    #[test]
+    fn backend_parse_and_name() {
+        assert_eq!(TrigBackend::parse("exact").unwrap(), TrigBackend::Exact);
+        assert_eq!(TrigBackend::parse("libm").unwrap(), TrigBackend::Exact);
+        assert_eq!(TrigBackend::parse("Fast").unwrap(), TrigBackend::Fast);
+        assert_eq!(TrigBackend::parse("simd").unwrap(), TrigBackend::Fast);
+        assert!(TrigBackend::parse("quantum").is_err());
+        assert_eq!(TrigBackend::Exact.name(), "exact");
+        assert_eq!(TrigBackend::Fast.name(), "fast");
+        assert_eq!(TrigBackend::default(), TrigBackend::Exact);
+    }
+
+    #[test]
+    fn backend_parse_error_enumerates_valid_values() {
+        let err = TrigBackend::parse("quantum").unwrap_err().to_string();
+        for token in ["quantum", "exact", "libm", "fast", "simd"] {
+            assert!(err.contains(token), "parse error {err:?} should mention '{token}'");
+        }
+    }
+
+    /// Satellite: dispatch-boundary purity. Every available path must
+    /// produce bit-identical output for the same buffer — including
+    /// unaligned slices, odd-length tails, θ straddling FAST_TRIG_LIMIT
+    /// (mixed vector/fallback chunks), and non-finite lanes.
+    #[test]
+    fn prop_sweeps_bit_identical_across_all_dispatch_paths() {
+        let kernels = available_kernels();
+        assert!(kernels.iter().any(|k| k.name() == "scalar"));
+        assert!(kernels.iter().any(|k| k.name() == "lanes"));
+        testing::check(
+            "cross-path bit identity",
+            Config::default().cases(24).max_size(4 * LANES + 7),
+            |rng, size| {
+                let n = size.max(1);
+                let mut theta: Vec<f64> = (0..n + 3)
+                    .map(|_| {
+                        let scale = [1e-6, 1.0, 1e3, 1e6][(rng.uniform() * 4.0) as usize % 4];
+                        (rng.uniform() * 2.0 - 1.0) * scale
+                    })
+                    .collect();
+                // sprinkle fallback-forcing lanes: straddle the limit + NaN
+                if n > 2 {
+                    theta[1] = FAST_TRIG_LIMIT * (1.0 + rng.uniform());
+                    theta[n / 2] = f64::NAN;
+                }
+                // unaligned view with an odd-length tail
+                let off = (rng.uniform() * 3.0) as usize % 3;
+                let theta = &theta[off..off + n];
+                let scalar = kernels.iter().find(|k| k.name() == "scalar").unwrap();
+                let (mut s0, mut c0) = (vec![0.0; n], vec![0.0; n]);
+                scalar.sincos_sweep(theta, &mut s0, &mut c0);
+                let (mut re0, mut im0) = (vec![0.0; n], vec![0.0; n]);
+                scalar.atom_sweep(theta, &mut re0, &mut im0);
+                let (mut ar0, mut ai0) = (vec![0.25; n], vec![-0.5; n]);
+                scalar.accum_sweep(theta, &mut ar0, &mut ai0);
+                let (mut wr0, mut wi0) = (vec![0.25; n], vec![-0.5; n]);
+                scalar.accum_sweep_weighted(theta, 0.7, &mut wr0, &mut wi0);
+                for k in kernels {
+                    let (mut s, mut c) = (vec![0.0; n], vec![0.0; n]);
+                    k.sincos_sweep(theta, &mut s, &mut c);
+                    let (mut re, mut im) = (vec![0.0; n], vec![0.0; n]);
+                    k.atom_sweep(theta, &mut re, &mut im);
+                    let (mut ar, mut ai) = (vec![0.25; n], vec![-0.5; n]);
+                    k.accum_sweep(theta, &mut ar, &mut ai);
+                    let (mut wr, mut wi) = (vec![0.25; n], vec![-0.5; n]);
+                    k.accum_sweep_weighted(theta, 0.7, &mut wr, &mut wi);
+                    for i in 0..n {
+                        for (what, got, want) in [
+                            ("sin", s[i], s0[i]),
+                            ("cos", c[i], c0[i]),
+                            ("atom re", re[i], re0[i]),
+                            ("atom im", im[i], im0[i]),
+                            ("accum re", ar[i], ar0[i]),
+                            ("accum im", ai[i], ai0[i]),
+                            ("weighted re", wr[i], wr0[i]),
+                            ("weighted im", wi[i], wi0[i]),
+                        ] {
+                            if got.to_bits() != want.to_bits() {
+                                return Err(format!(
+                                    "path '{}' {what}[{i}] = {got:e} ({:#018x}) differs from \
+                                     scalar {want:e} ({:#018x}) at θ={:e}",
+                                    k.name(),
+                                    got.to_bits(),
+                                    want.to_bits(),
+                                    theta[i]
+                                ));
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Every dispatch path independently meets the ULP and bitwise-libm
+    /// fallback contracts (not just the one `auto` happened to select).
+    #[test]
+    fn every_dispatch_path_meets_ulp_and_fallback_contract() {
+        let mut rng = Rng::new(4242);
+        let n = 4 * LANES + 5;
+        let mut theta: Vec<f64> =
+            (0..n).map(|_| (rng.uniform() * 2.0 - 1.0) * 1e6).collect();
+        theta[3] = FAST_TRIG_LIMIT * 3.0; // fallback lanes mixed in
+        theta[n - 2] = -1e300;
+        for k in available_kernels() {
+            let (mut s, mut c) = (vec![0.0; n], vec![0.0; n]);
+            k.sincos_sweep(&theta, &mut s, &mut c);
+            for (i, &t) in theta.iter().enumerate() {
+                let (ls, lc) = t.sin_cos();
+                if t.abs() > FAST_TRIG_LIMIT {
+                    assert_eq!(s[i].to_bits(), ls.to_bits(), "{}: fallback sin", k.name());
+                    assert_eq!(c[i].to_bits(), lc.to_bits(), "{}: fallback cos", k.name());
+                } else {
+                    for (f, l) in [(s[i], ls), (c[i], lc)] {
+                        let d = ulp_dist(f, l);
+                        assert!(
+                            d <= 2 || (f - l).abs() <= 1e-25,
+                            "path '{}': sincos({t:e}) {d} ulp off libm",
+                            k.name()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// The dispatcher always lands on an available path, and a valid
+    /// `CKM_SIMD` override is honored (CI forces each path through the
+    /// environment and re-runs this suite).
+    #[test]
+    fn dispatch_resolves_to_available_path_and_honors_env() {
+        let active = active_kernels();
+        assert!(
+            available_kernels().iter().any(|k| std::ptr::eq(*k, active)),
+            "active path '{}' not in the available set",
+            active.name()
+        );
+        assert_eq!(active.name(), active_path());
+        if let Ok(want) = std::env::var("CKM_SIMD") {
+            let want = want.to_ascii_lowercase();
+            if !want.is_empty()
+                && want != "auto"
+                && available_kernels().iter().any(|k| k.name() == want)
+            {
+                assert_eq!(active.name(), want, "CKM_SIMD={want} override not honored");
+            }
+        }
+        // the portable paths are unconditionally available, in priority order
+        let names: Vec<&str> = available_kernels().iter().map(|k| k.name()).collect();
+        let lanes_at = names.iter().position(|n| *n == "lanes").unwrap();
+        let scalar_at = names.iter().position(|n| *n == "scalar").unwrap();
+        assert!(lanes_at < scalar_at, "lanes must outrank scalar: {names:?}");
+        assert!(!detected_cpu_features().is_empty());
+    }
+}

@@ -1,0 +1,228 @@
+//! NEON sweep kernels: 2 × f64 per `float64x2_t` register via
+//! `core::arch::aarch64`.
+//!
+//! Same operation DAG as the scalar semantic kernel: each `mul_add` maps
+//! to one NEON fused op — `vfmaq_f64(a, b, c) = a + b·c` gives fmadd,
+//! `vfmsq_f64(a, b, c) = a − b·c` gives fnmadd. NEON has no
+//! `a·b − c` primitive, and negating the *output* of `c − a·b` is wrong
+//! at exact zeros (`−(+0.0) = −0.0`), so fmsub is spelled
+//! `vfmaq_f64(vnegq_f64(c), a, b)` — the input negation is exact and the
+//! single fused rounding is preserved, so the result is bit-identical to
+//! the scalar `a.mul_add(b, -c)`… which is exactly how the scalar kernel
+//! spells those steps too. The `t·(2/π) + TOINT` quadrant step stays
+//! separate mul + add.
+//!
+//! # Safety
+//!
+//! Requires NEON (asimd). The only safe entry is [`KERNELS`], exposed by
+//! the dispatch registry strictly after
+//! `is_aarch64_feature_detected!("neon")` passes.
+
+use core::arch::aarch64::*;
+
+use super::dispatch::SweepKernels;
+use super::{
+    C1, C2, C3, C4, C5, C6, FAST_TRIG_LIMIT, INV_PIO2, PIO2_1, PIO2_2, PIO2_3, PIO2_3T, S1, S2,
+    S3, S4, S5, S6, sincos_fast, TOINT,
+};
+
+const W: usize = 2;
+
+/// Safe wrappers around the NEON sweeps. Sound to call only because the
+/// dispatch registry lists this set strictly after feature detection.
+pub(super) static KERNELS: SweepKernels = SweepKernels {
+    name: "neon",
+    sincos: |theta, sin_out, cos_out| unsafe { sincos_sweep(theta, sin_out, cos_out) },
+    atom: |theta, re, im| unsafe { atom_sweep(theta, re, im) },
+    accum: |theta, re, im| unsafe { accum_sweep(theta, re, im) },
+    accum_weighted: |theta, beta, re, im| unsafe { accum_weighted_sweep(theta, beta, re, im) },
+};
+
+/// True when both lanes are finite and `|t| ≤ FAST_TRIG_LIMIT` (NaN
+/// compares false, demoting the chunk to the scalar gate).
+///
+/// # Safety
+/// Requires NEON.
+#[target_feature(enable = "neon")]
+unsafe fn chunk_in_range(t: float64x2_t) -> bool {
+    let m = vcleq_f64(vabsq_f64(t), vdupq_n_f64(FAST_TRIG_LIMIT));
+    (vgetq_lane_u64::<0>(m) & vgetq_lane_u64::<1>(m)) == u64::MAX
+}
+
+/// 2-lane `sincos_reduced` — same fused-op DAG as the scalar definition.
+/// Valid only when both lanes passed [`chunk_in_range`].
+///
+/// # Safety
+/// Requires NEON.
+#[target_feature(enable = "neon")]
+unsafe fn sincos2(t: float64x2_t) -> (float64x2_t, float64x2_t) {
+    // quadrant: separate mul + add, never fused
+    let big = vaddq_f64(vmulq_f64(t, vdupq_n_f64(INV_PIO2)), vdupq_n_f64(TOINT));
+    let qq = vreinterpretq_u64_f64(big);
+    let n = vsubq_f64(big, vdupq_n_f64(TOINT));
+    // Cody–Waite cascade with compensated residuals
+    let r1 = vfmsq_f64(t, n, vdupq_n_f64(PIO2_1)); // t − n·PIO2_1
+    let w1 = vmulq_f64(n, vdupq_n_f64(PIO2_2));
+    let r2 = vsubq_f64(r1, w1);
+    let e2 = vsubq_f64(vsubq_f64(r1, r2), w1);
+    let w2 = vmulq_f64(n, vdupq_n_f64(PIO2_3));
+    let r3 = vsubq_f64(r2, w2);
+    let e3 = vsubq_f64(vsubq_f64(r2, r3), w2);
+    let lo = vfmsq_f64(vaddq_f64(e2, e3), n, vdupq_n_f64(PIO2_3T));
+    let y0 = vaddq_f64(r3, lo);
+    let y1 = vaddq_f64(vsubq_f64(r3, y0), lo);
+    // k_sin(y0, y1)
+    let z = vmulq_f64(y0, y0);
+    let v = vmulq_f64(z, y0);
+    let mut rs = vfmaq_f64(vdupq_n_f64(S5), z, vdupq_n_f64(S6));
+    rs = vfmaq_f64(vdupq_n_f64(S4), z, rs);
+    rs = vfmaq_f64(vdupq_n_f64(S3), z, rs);
+    rs = vfmaq_f64(vdupq_n_f64(S2), z, rs);
+    let t1 = vfmsq_f64(vmulq_f64(vdupq_n_f64(0.5), y1), v, rs); // 0.5·y1 − v·rs
+    let t2 = vfmaq_f64(vnegq_f64(y1), z, t1); // z·t1 − y1 (fmsub via exact input neg)
+    let t3 = vfmsq_f64(t2, v, vdupq_n_f64(S1)); // t2 − v·S1
+    let sn = vsubq_f64(y0, t3);
+    // k_cos(y0, y1)
+    let mut p = vfmaq_f64(vdupq_n_f64(C5), z, vdupq_n_f64(C6));
+    p = vfmaq_f64(vdupq_n_f64(C4), z, p);
+    p = vfmaq_f64(vdupq_n_f64(C3), z, p);
+    p = vfmaq_f64(vdupq_n_f64(C2), z, p);
+    p = vfmaq_f64(vdupq_n_f64(C1), z, p);
+    let rc = vmulq_f64(z, p);
+    let hz = vmulq_f64(vdupq_n_f64(0.5), z);
+    let w = vsubq_f64(vdupq_n_f64(1.0), hz);
+    let xy = vmulq_f64(y0, y1);
+    let tc = vfmaq_f64(vnegq_f64(xy), z, rc); // z·rc − y0·y1
+    let cs = vaddq_f64(w, vaddq_f64(vsubq_f64(vsubq_f64(vdupq_n_f64(1.0), w), hz), tc));
+    // quadrant reconstruction on raw bits (same mask algebra as scalar)
+    let one = vdupq_n_u64(1);
+    let swap = vsubq_u64(vdupq_n_u64(0), vandq_u64(qq, one));
+    let sn_b = vreinterpretq_u64_f64(sn);
+    let cs_b = vreinterpretq_u64_f64(cs);
+    let sin_b = vorrq_u64(vbicq_u64(sn_b, swap), vandq_u64(cs_b, swap));
+    let cos_b = vorrq_u64(vbicq_u64(cs_b, swap), vandq_u64(sn_b, swap));
+    let s_flip = vshlq_n_u64::<63>(vandq_u64(vshrq_n_u64::<1>(qq), one));
+    let qq1 = vaddq_u64(qq, one);
+    let c_flip = vshlq_n_u64::<63>(vandq_u64(vshrq_n_u64::<1>(qq1), one));
+    let s = vreinterpretq_f64_u64(veorq_u64(sin_b, s_flip));
+    let c = vreinterpretq_f64_u64(veorq_u64(cos_b, c_flip));
+    (s, c)
+}
+
+/// # Safety
+/// Requires NEON; slice lengths must match (the dispatch methods assert
+/// before calling).
+#[target_feature(enable = "neon")]
+unsafe fn sincos_sweep(theta: &[f64], sin_out: &mut [f64], cos_out: &mut [f64]) {
+    let n = theta.len();
+    let mut i = 0;
+    while i + W <= n {
+        let t = vld1q_f64(theta.as_ptr().add(i));
+        if chunk_in_range(t) {
+            let (s, c) = sincos2(t);
+            vst1q_f64(sin_out.as_mut_ptr().add(i), s);
+            vst1q_f64(cos_out.as_mut_ptr().add(i), c);
+        } else {
+            for j in i..i + W {
+                let (s, c) = sincos_fast(theta[j]);
+                sin_out[j] = s;
+                cos_out[j] = c;
+            }
+        }
+        i += W;
+    }
+    for j in i..n {
+        let (s, c) = sincos_fast(theta[j]);
+        sin_out[j] = s;
+        cos_out[j] = c;
+    }
+}
+
+/// # Safety
+/// Requires NEON; slice lengths must match.
+#[target_feature(enable = "neon")]
+unsafe fn atom_sweep(theta: &[f64], re: &mut [f64], im: &mut [f64]) {
+    let n = theta.len();
+    let mut i = 0;
+    while i + W <= n {
+        let t = vld1q_f64(theta.as_ptr().add(i));
+        if chunk_in_range(t) {
+            let (s, c) = sincos2(t);
+            vst1q_f64(re.as_mut_ptr().add(i), c);
+            vst1q_f64(im.as_mut_ptr().add(i), vnegq_f64(s)); // −s (exact)
+        } else {
+            for j in i..i + W {
+                let (s, c) = sincos_fast(theta[j]);
+                re[j] = c;
+                im[j] = -s;
+            }
+        }
+        i += W;
+    }
+    for j in i..n {
+        let (s, c) = sincos_fast(theta[j]);
+        re[j] = c;
+        im[j] = -s;
+    }
+}
+
+/// # Safety
+/// Requires NEON; slice lengths must match.
+#[target_feature(enable = "neon")]
+unsafe fn accum_sweep(theta: &[f64], acc_re: &mut [f64], acc_im: &mut [f64]) {
+    let n = theta.len();
+    let mut i = 0;
+    while i + W <= n {
+        let t = vld1q_f64(theta.as_ptr().add(i));
+        if chunk_in_range(t) {
+            let (s, c) = sincos2(t);
+            let ar = vld1q_f64(acc_re.as_ptr().add(i));
+            let ai = vld1q_f64(acc_im.as_ptr().add(i));
+            vst1q_f64(acc_re.as_mut_ptr().add(i), vaddq_f64(ar, c));
+            vst1q_f64(acc_im.as_mut_ptr().add(i), vsubq_f64(ai, s));
+        } else {
+            for j in i..i + W {
+                let (s, c) = sincos_fast(theta[j]);
+                acc_re[j] += c;
+                acc_im[j] -= s;
+            }
+        }
+        i += W;
+    }
+    for j in i..n {
+        let (s, c) = sincos_fast(theta[j]);
+        acc_re[j] += c;
+        acc_im[j] -= s;
+    }
+}
+
+/// # Safety
+/// Requires NEON; slice lengths must match.
+#[target_feature(enable = "neon")]
+unsafe fn accum_weighted_sweep(theta: &[f64], beta: f64, acc_re: &mut [f64], acc_im: &mut [f64]) {
+    let b = vdupq_n_f64(beta);
+    let n = theta.len();
+    let mut i = 0;
+    while i + W <= n {
+        let t = vld1q_f64(theta.as_ptr().add(i));
+        if chunk_in_range(t) {
+            let (s, c) = sincos2(t);
+            let ar = vld1q_f64(acc_re.as_ptr().add(i));
+            let ai = vld1q_f64(acc_im.as_ptr().add(i));
+            vst1q_f64(acc_re.as_mut_ptr().add(i), vfmaq_f64(ar, b, c)); // ar + β·c
+            vst1q_f64(acc_im.as_mut_ptr().add(i), vfmsq_f64(ai, b, s)); // ai − β·s
+        } else {
+            for j in i..i + W {
+                let (s, c) = sincos_fast(theta[j]);
+                acc_re[j] = beta.mul_add(c, acc_re[j]);
+                acc_im[j] = beta.mul_add(-s, acc_im[j]);
+            }
+        }
+        i += W;
+    }
+    for j in i..n {
+        let (s, c) = sincos_fast(theta[j]);
+        acc_re[j] = beta.mul_add(c, acc_re[j]);
+        acc_im[j] = beta.mul_add(-s, acc_im[j]);
+    }
+}

@@ -1,0 +1,123 @@
+//! Portable sweep paths: `scalar` (plain per-element loop) and `lanes`
+//! (the 8-wide chunk-gated loop LLVM can autovectorize when the build
+//! target has the ISA for it).
+//!
+//! Both execute the scalar semantic kernel per element, so they are
+//! trivially bit-identical to each other and to the explicit SIMD paths
+//! (which reproduce the same operation DAG). `lanes` is the portable
+//! throughput shape: full in-range chunks run the branch-free
+//! `sincos_reduced` back to back; mixed/tail elements take the gated
+//! `sincos_fast`. Note the semantic kernel uses `f64::mul_add`, so on
+//! build targets whose *baseline* ISA has no FMA instruction (plain
+//! x86-64 without `-C target-cpu`) these paths lean on libm's `fma` and
+//! the explicit runtime-dispatched paths are the ones that go fast —
+//! which is exactly why the dispatcher exists.
+
+use super::{all_in_range, LANES, sincos_fast};
+
+/// Per-element loop — the reference execution of the semantic kernel.
+#[inline(always)]
+fn sweep_scalar<E: FnMut(usize, f64, f64)>(theta: &[f64], mut emit: E) {
+    for (i, &t) in theta.iter().enumerate() {
+        let (s, c) = sincos_fast(t);
+        emit(i, s, c);
+    }
+}
+
+/// Chunk-gated 8-lane loop: full in-range chunks run the branch-free
+/// kernel (autovectorizable), mixed/tail elements take the per-element
+/// gate (same pure function, so results are independent of alignment).
+#[inline(always)]
+fn sweep_lanes<E: FnMut(usize, f64, f64)>(theta: &[f64], mut emit: E) {
+    let mut i = 0;
+    while i + LANES <= theta.len() {
+        let chunk: &[f64; LANES] = theta[i..i + LANES].try_into().unwrap();
+        if all_in_range(chunk) {
+            for j in 0..LANES {
+                let (s, c) = super::sincos_reduced(chunk[j]);
+                emit(i + j, s, c);
+            }
+        } else {
+            for j in 0..LANES {
+                let (s, c) = sincos_fast(chunk[j]);
+                emit(i + j, s, c);
+            }
+        }
+        i += LANES;
+    }
+    for j in i..theta.len() {
+        let (s, c) = sincos_fast(theta[j]);
+        emit(j, s, c);
+    }
+}
+
+// The four emit shapes × two loop shapes, monomorphized here so the
+// dispatch table holds plain `fn` pointers. The weighted accumulation
+// fuses β·trig into the add (`mul_add`, one rounding) to mirror the
+// vector FMA in the explicit SIMD paths.
+
+pub(super) fn sincos_scalar(theta: &[f64], sin_out: &mut [f64], cos_out: &mut [f64]) {
+    sweep_scalar(theta, |i, s, c| {
+        sin_out[i] = s;
+        cos_out[i] = c;
+    });
+}
+
+pub(super) fn atom_scalar(theta: &[f64], re: &mut [f64], im: &mut [f64]) {
+    sweep_scalar(theta, |i, s, c| {
+        re[i] = c;
+        im[i] = -s;
+    });
+}
+
+pub(super) fn accum_scalar(theta: &[f64], acc_re: &mut [f64], acc_im: &mut [f64]) {
+    sweep_scalar(theta, |i, s, c| {
+        acc_re[i] += c;
+        acc_im[i] -= s;
+    });
+}
+
+pub(super) fn accum_weighted_scalar(
+    theta: &[f64],
+    beta: f64,
+    acc_re: &mut [f64],
+    acc_im: &mut [f64],
+) {
+    sweep_scalar(theta, |i, s, c| {
+        acc_re[i] = beta.mul_add(c, acc_re[i]);
+        acc_im[i] = beta.mul_add(-s, acc_im[i]);
+    });
+}
+
+pub(super) fn sincos_lanes(theta: &[f64], sin_out: &mut [f64], cos_out: &mut [f64]) {
+    sweep_lanes(theta, |i, s, c| {
+        sin_out[i] = s;
+        cos_out[i] = c;
+    });
+}
+
+pub(super) fn atom_lanes(theta: &[f64], re: &mut [f64], im: &mut [f64]) {
+    sweep_lanes(theta, |i, s, c| {
+        re[i] = c;
+        im[i] = -s;
+    });
+}
+
+pub(super) fn accum_lanes(theta: &[f64], acc_re: &mut [f64], acc_im: &mut [f64]) {
+    sweep_lanes(theta, |i, s, c| {
+        acc_re[i] += c;
+        acc_im[i] -= s;
+    });
+}
+
+pub(super) fn accum_weighted_lanes(
+    theta: &[f64],
+    beta: f64,
+    acc_re: &mut [f64],
+    acc_im: &mut [f64],
+) {
+    sweep_lanes(theta, |i, s, c| {
+        acc_re[i] = beta.mul_add(c, acc_re[i]);
+        acc_im[i] = beta.mul_add(-s, acc_im[i]);
+    });
+}

@@ -6,13 +6,42 @@
 
 /// Number of worker threads to use by default: `CKM_THREADS` env var, else
 /// available parallelism, clamped to [1, 64].
+///
+/// Resolved once into a `OnceLock` — callers sit in per-batch hot loops,
+/// and re-reading the environment on every call was measurable noise.
+/// Invalid values (unparseable, `0`, or beyond the clamp range) log a
+/// warning naming the value actually used instead of falling back
+/// silently.
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("CKM_THREADS") {
-        if let Ok(t) = v.parse::<usize>() {
-            return t.clamp(1, 64);
-        }
+    static THREADS: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *THREADS.get_or_init(resolve_threads)
+}
+
+fn resolve_threads() -> usize {
+    let detected =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 64);
+    match std::env::var("CKM_THREADS") {
+        Err(_) => detected,
+        Ok(v) if v.is_empty() => detected,
+        Ok(v) => match v.parse::<usize>() {
+            Ok(0) => {
+                log::warn!("CKM_THREADS=0 is invalid (need 1..=64); using detected {detected}");
+                detected
+            }
+            Ok(t) if t > 64 => {
+                log::warn!("CKM_THREADS={t} exceeds the supported maximum; clamping to 64");
+                64
+            }
+            Ok(t) => t,
+            Err(_) => {
+                log::warn!(
+                    "CKM_THREADS={v:?} is not a thread count (need an integer in 1..=64); \
+                     using detected {detected}"
+                );
+                detected
+            }
+        },
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 64)
 }
 
 /// Split `[0, n)` into at most `parts` contiguous non-empty ranges.
@@ -134,6 +163,30 @@ mod tests {
             }
         });
         assert_eq!(v, (0..57).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn thread_resolution_is_cached_and_validated() {
+        // the public entry is cached: two calls agree and are in range
+        let t = default_threads();
+        assert_eq!(t, default_threads());
+        assert!((1..=64).contains(&t));
+        // resolution rules, driven through the env (single test, so the
+        // set/remove pairs don't race another CKM_THREADS reader — the
+        // cached public value above is already resolved)
+        std::env::set_var("CKM_THREADS", "3");
+        assert_eq!(resolve_threads(), 3);
+        std::env::set_var("CKM_THREADS", "9000");
+        assert_eq!(resolve_threads(), 64);
+        let detected = {
+            std::env::remove_var("CKM_THREADS");
+            resolve_threads()
+        };
+        for bad in ["0", "lots", "-2", ""] {
+            std::env::set_var("CKM_THREADS", bad);
+            assert_eq!(resolve_threads(), detected, "CKM_THREADS={bad:?}");
+        }
+        std::env::remove_var("CKM_THREADS");
     }
 
     #[test]
