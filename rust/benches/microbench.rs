@@ -299,6 +299,60 @@ fn main() {
         }
     }
 
+    // -- Checkpoint codecs: JSON (debug) vs CKMC (binary container) -------
+    // A 24-epoch 1-bit ring — the shape a ckmd shard checkpoints on
+    // rotation. Encode goes through the public file API (atomic_write
+    // included: that is what a daemon --save pays); decode sniffs the
+    // codec by magic, so both sides call the same entry point.
+    {
+        let ckm_q = ckm::api::Ckm::builder()
+            .frequencies(m)
+            .sigma2(1.0)
+            .seed(7)
+            .window(24)
+            .quantization(ckm::sketch::QuantizationMode::OneBit)
+            .build()
+            .unwrap();
+        let mut ring = ckm_q.store(n_dims).unwrap();
+        for e in 0..24 {
+            if e > 0 {
+                ring.rotate();
+            }
+            ring.ingest(&pts[(e * 512) * n_dims..(e * 512 + 512) * n_dims]);
+        }
+        let dir = std::env::temp_dir();
+        let json_path = dir.join(format!("ckm_bench_ckpt_{}.json", std::process::id()));
+        let ckmc_path = dir.join(format!("ckm_bench_ckpt_{}.ckmc", std::process::id()));
+        let ck_size = format!("epochs=24 m={m}");
+        let meas = measure("checkpoint_encode/json", warm, 3 * samp, || {
+            ring.to_file(&json_path).unwrap();
+        });
+        report.add("checkpoint_encode", "json", &ck_size, &meas);
+        let enc_json = meas;
+        let meas = measure("checkpoint_encode/ckmc", warm, 3 * samp, || {
+            ring.to_binary_file(&ckmc_path).unwrap();
+        });
+        report.add("checkpoint_encode", "ckmc", &ck_size, &meas);
+        report.speedup("checkpoint_encode", &enc_json, &meas);
+        let jb = std::fs::metadata(&json_path).unwrap().len();
+        let cb = std::fs::metadata(&ckmc_path).unwrap().len();
+        println!("  -> checkpoint bytes: json={jb} ckmc={cb} ({:.2}x smaller)", jb as f64 / cb as f64);
+        let meas = measure("checkpoint_decode/json", warm, 3 * samp, || {
+            let s = ckm::store::SketchStore::from_file(&json_path).unwrap();
+            std::hint::black_box(s.rows_ingested());
+        });
+        report.add("checkpoint_decode", "json", &ck_size, &meas);
+        let dec_json = meas;
+        let meas = measure("checkpoint_decode/ckmc", warm, 3 * samp, || {
+            let s = ckm::store::SketchStore::from_file(&ckmc_path).unwrap();
+            std::hint::black_box(s.rows_ingested());
+        });
+        report.add("checkpoint_decode", "ckmc", &ck_size, &meas);
+        report.speedup("checkpoint_decode", &dec_json, &meas);
+        std::fs::remove_file(&json_path).ok();
+        std::fs::remove_file(&ckmc_path).ok();
+    }
+
     // -- Sketch service: loopback ingest + cached solve -------------------
     // A real ckmd daemon on an ephemeral loopback port, driven through
     // ServiceClient: each ingest iteration pays reserve + client-side

@@ -469,18 +469,35 @@ impl SketchArtifact {
         Ok(SketchArtifact { op, sum, count, bounds, quant })
     }
 
-    /// Write the artifact as pretty-printed versioned JSON.
+    /// Write the artifact as pretty-printed versioned JSON (atomically:
+    /// temp + fsync + rename — a crash never tears an existing file).
     pub fn to_file<P: AsRef<Path>>(&self, path: P) -> Result<(), ApiError> {
-        std::fs::write(path, self.to_json().to_pretty())?;
+        crate::util::fs::atomic_write(path, self.to_json().to_pretty().as_bytes())?;
         Ok(())
     }
 
-    /// Load an artifact, validating the format version, structure, and the
-    /// operator checksum (the frequency matrix is re-derived and compared,
-    /// so an artifact from an incompatible build fails here, loudly).
+    /// Write the artifact as a binary CKMC container — the compact codec:
+    /// dense sums as raw f64, quantized payloads bit-packed, no hex.
+    pub fn to_binary_file<P: AsRef<Path>>(&self, path: P) -> Result<(), ApiError> {
+        let image = binary::artifact_image(self);
+        crate::util::fs::atomic_write(path, &image.to_bytes())?;
+        Ok(())
+    }
+
+    /// Load an artifact from either codec, sniffing the container magic:
+    /// `CKMC` means binary, anything else is parsed as JSON. Validates the
+    /// format version, structure, and the operator checksum (the frequency
+    /// matrix is re-derived and compared, so an artifact from an
+    /// incompatible build fails here, loudly).
     pub fn from_file<P: AsRef<Path>>(path: P) -> Result<SketchArtifact, ApiError> {
-        let text = std::fs::read_to_string(path)?;
-        let art = SketchArtifact::from_json(&Json::parse(&text)?)?;
+        let bytes = std::fs::read(path)?;
+        let art = if crate::util::container::is_container(&bytes) {
+            binary::artifact_from_container(&bytes)?
+        } else {
+            let text = std::str::from_utf8(&bytes)
+                .map_err(|_| bad("artifact file is neither a CKMC container nor UTF-8 JSON"))?;
+            SketchArtifact::from_json(&Json::parse(text)?)?
+        };
         art.op.materialize()?; // verify checksum eagerly: fail at load time
         Ok(art)
     }
@@ -508,6 +525,235 @@ fn w_checksum(w: &Mat) -> String {
         h.update(&x.to_bits().to_le_bytes());
     }
     format!("fnv1a:{:016x}", h.digest())
+}
+
+/// Binary (CKMC) codec for artifacts and operator specs.
+///
+/// The section vocabulary lives here (the lowest layer that knows the
+/// payload shapes); `store::checkpoint` composes these codecs into store
+/// and store-set documents. Dense sums travel as raw little-endian f64,
+/// quantized payloads bit-packed — no hex round-trip anywhere.
+pub(crate) mod binary {
+    use super::*;
+    use crate::util::container::{ContainerImage, ContainerReader};
+    use crate::util::framing::{ByteReader, ByteWriter};
+
+    // Section kinds shared by every CKMC document.
+    /// Document header: doc kind byte + spec + store/set configuration.
+    pub(crate) const SEC_META: u8 = 1;
+    /// One dense epoch of a store (id, start_row, span, dense body).
+    pub(crate) const SEC_EPOCH_DENSE: u8 = 2;
+    /// One quantized epoch of a store (id, start_row, span, packed body).
+    pub(crate) const SEC_EPOCH_QUANT: u8 = 3;
+    /// A standalone artifact body (artifact documents only).
+    pub(crate) const SEC_ARTIFACT: u8 = 4;
+
+    // Document kinds (first byte of every SEC_META payload).
+    pub(crate) const DOC_ARTIFACT: u8 = 1;
+    pub(crate) const DOC_STORE: u8 = 2;
+    pub(crate) const DOC_STORE_SET: u8 = 3;
+
+    fn radius_code(r: RadiusKind) -> u8 {
+        match r {
+            RadiusKind::Gaussian => 0,
+            RadiusKind::FoldedGaussian => 1,
+            RadiusKind::AdaptedRadius => 2,
+        }
+    }
+
+    fn radius_from_code(c: u8) -> Result<RadiusKind, ApiError> {
+        match c {
+            0 => Ok(RadiusKind::Gaussian),
+            1 => Ok(RadiusKind::FoldedGaussian),
+            2 => Ok(RadiusKind::AdaptedRadius),
+            other => Err(bad(&format!("unknown radius code {other}"))),
+        }
+    }
+
+    fn trig_code(t: TrigBackend) -> u8 {
+        match t {
+            TrigBackend::Exact => 0,
+            TrigBackend::Fast => 1,
+        }
+    }
+
+    fn trig_from_code(c: u8) -> Result<TrigBackend, ApiError> {
+        match c {
+            0 => Ok(TrigBackend::Exact),
+            1 => Ok(TrigBackend::Fast),
+            other => Err(bad(&format!("unknown trig code {other}"))),
+        }
+    }
+
+    /// Encode an [`OpSpec`] (fixed-layout provenance block).
+    pub(crate) fn encode_spec(w: &mut ByteWriter, op: &OpSpec) {
+        w.u64(op.seed);
+        w.u8(radius_code(op.radius));
+        w.f64(op.sigma2);
+        w.u64(op.m as u64);
+        w.u64(op.n_dims as u64);
+        w.u8(trig_code(op.trig));
+        w.str(&op.checksum);
+    }
+
+    pub(crate) fn decode_spec(r: &mut ByteReader) -> Result<OpSpec, ApiError> {
+        let seed = r.u64()?;
+        let radius = radius_from_code(r.u8()?)?;
+        let sigma2 = r.f64()?;
+        if !(sigma2.is_finite() && sigma2 > 0.0) {
+            return Err(bad("op.sigma2 must be finite and positive"));
+        }
+        let m = r.usize_capped(1 << 32, "op.m")?;
+        let n_dims = r.usize_capped(1 << 32, "op.n_dims")?;
+        if m == 0 || n_dims == 0 {
+            return Err(bad("op.m and op.n_dims must be >= 1"));
+        }
+        let trig = trig_from_code(r.u8()?)?;
+        let checksum = r.str()?;
+        if !checksum.starts_with("fnv1a:") {
+            return Err(bad("op.checksum malformed"));
+        }
+        Ok(OpSpec { seed, radius, sigma2, m, n_dims, trig, checksum })
+    }
+
+    /// Encode an artifact body *without* its operator spec (the enclosing
+    /// document's meta section carries the spec exactly once).
+    pub(crate) fn encode_artifact_body(w: &mut ByteWriter, art: &SketchArtifact) {
+        w.u64(art.count as u64);
+        let valid = art.bounds.is_valid();
+        w.bool(valid);
+        if valid {
+            w.f64_slice(&art.bounds.lo);
+            w.f64_slice(&art.bounds.hi);
+        }
+        match &art.quant {
+            None => {
+                w.u8(0); // dense
+                w.f64_slice(&art.sum.re);
+                w.f64_slice(&art.sum.im);
+            }
+            Some(q) => {
+                w.u8(1); // quantized, bit-packed
+                w.u8(q.mode.bits() as u8);
+                let width = quantize::width_for(art.count, q.mode);
+                w.u32(width);
+                w.u64_slice(&quantize::pack_values(&q.level_sums, width));
+            }
+        }
+    }
+
+    /// Decode an artifact body against the document's spec. Mirrors every
+    /// validation `SketchArtifact::from_json` performs (the quantized path
+    /// reuses [`quantize::PackedPartial::unpack`] so file load and worker
+    /// unpack stay provably identical).
+    pub(crate) fn decode_artifact_body(
+        r: &mut ByteReader,
+        op: &OpSpec,
+    ) -> Result<SketchArtifact, ApiError> {
+        let count = r.usize_capped(u64::MAX as usize >> 1, "artifact.count")?;
+        let bounds = if r.bool()? {
+            let lo = r.f64_slice()?;
+            let hi = r.f64_slice()?;
+            if lo.len() != op.n_dims || hi.len() != op.n_dims {
+                return Err(bad("bounds length != op.n_dims"));
+            }
+            Bounds { lo, hi }
+        } else {
+            Bounds::empty(op.n_dims)
+        };
+        if count > 0 && !bounds.is_valid() {
+            return Err(bad("non-empty artifact with invalid bounds"));
+        }
+        let (sum, quant) = match r.u8()? {
+            0 => {
+                let re = r.f64_slice()?;
+                let im = r.f64_slice()?;
+                if re.len() != op.m || im.len() != op.m {
+                    return Err(bad(&format!(
+                        "sum length {}/{} != op.m {}",
+                        re.len(),
+                        im.len(),
+                        op.m
+                    )));
+                }
+                (CVec::from_parts(re, im), None)
+            }
+            1 => {
+                let bits = r.u8()?;
+                if !(1..=16).contains(&bits) {
+                    return Err(bad(&format!("quant bits {bits} out of range 1..=16")));
+                }
+                let mode = QuantizationMode::Bits(bits).normalized();
+                let width = r.u32()?;
+                if width > 64 {
+                    return Err(bad("quant width out of range"));
+                }
+                let words = r.u64_slice()?;
+                let packed = quantize::PackedPartial {
+                    mode,
+                    dither_seed: 0, // not serialized; irrelevant to unpacking
+                    m: op.m,
+                    count,
+                    bounds: Bounds::empty(op.n_dims),
+                    width,
+                    words,
+                };
+                let acc = packed.unpack().map_err(|e| bad(&format!("quant payload: {e}")))?;
+                let sum = acc.dequantized_sum();
+                (sum, Some(QuantSpec { mode, level_sums: acc.level_sums }))
+            }
+            other => return Err(bad(&format!("unknown artifact payload kind {other}"))),
+        };
+        Ok(SketchArtifact { op: op.clone(), sum, count, bounds, quant })
+    }
+
+    /// Build the container image of a standalone artifact document:
+    /// `SEC_META` (doc kind + spec) then `SEC_ARTIFACT` (body).
+    pub(crate) fn artifact_image(art: &SketchArtifact) -> ContainerImage {
+        let mut meta = ByteWriter::new();
+        meta.u8(DOC_ARTIFACT);
+        encode_spec(&mut meta, &art.op);
+        let mut body = ByteWriter::new();
+        encode_artifact_body(&mut body, art);
+        let mut img = ContainerImage::new(Vec::new());
+        img.push_section(SEC_META, 0, meta.into_vec());
+        img.push_section(SEC_ARTIFACT, 0, body.into_vec());
+        img
+    }
+
+    /// Parse a container and hand back its leading meta section: the doc
+    /// kind byte plus a reader positioned after it.
+    pub(crate) fn open_meta<'a>(
+        c: &ContainerReader<'a>,
+    ) -> Result<(u8, ByteReader<'a>), ApiError> {
+        if !matches!(c.entries().first(), Some(e) if e.kind == SEC_META) {
+            return Err(bad("container has no leading meta section"));
+        }
+        let mut r = ByteReader::new(c.section(0)?);
+        let doc = r.u8()?;
+        Ok((doc, r))
+    }
+
+    /// Decode a standalone artifact document.
+    pub(crate) fn artifact_from_container(bytes: &[u8]) -> Result<SketchArtifact, ApiError> {
+        let c = ContainerReader::parse(bytes)?;
+        let (doc, mut meta) = open_meta(&c)?;
+        if doc != DOC_ARTIFACT {
+            return Err(bad(&format!(
+                "container holds doc kind {doc}, not a standalone artifact"
+            )));
+        }
+        let op = decode_spec(&mut meta)?;
+        meta.finish().map_err(ApiError::from)?;
+        let entries = c.entries();
+        if entries.len() != 2 || entries[1].kind != SEC_ARTIFACT {
+            return Err(bad("artifact container must hold exactly meta + artifact sections"));
+        }
+        let mut body = ByteReader::new(c.section(1)?);
+        let art = decode_artifact_body(&mut body, &op)?;
+        body.finish().map_err(ApiError::from)?;
+        Ok(art)
+    }
 }
 
 #[cfg(test)]

@@ -182,3 +182,16 @@ impl From<crate::util::framing::WireError> for ApiError {
         ApiError::ServiceProtocol(e.to_string())
     }
 }
+
+impl From<crate::util::container::ContainerError> for ApiError {
+    fn from(e: crate::util::container::ContainerError) -> ApiError {
+        use crate::util::container::ContainerError;
+        match e {
+            ContainerError::UnsupportedVersion { found, supported } => {
+                ApiError::UnsupportedVersion { found: found as usize, supported }
+            }
+            ContainerError::Io(io) => ApiError::Io(io),
+            other => ApiError::Format(other.to_string()),
+        }
+    }
+}

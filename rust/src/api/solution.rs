@@ -74,7 +74,7 @@ impl Solution {
 
     /// Write as pretty-printed versioned JSON.
     pub fn to_file<P: AsRef<Path>>(&self, path: P) -> Result<(), ApiError> {
-        std::fs::write(path, self.to_json().to_pretty())?;
+        crate::util::fs::atomic_write(path, self.to_json().to_pretty().as_bytes())?;
         Ok(())
     }
 

@@ -69,7 +69,10 @@
 //! the daemon reserves dither row ranges, merges exactly, rotates epochs
 //! in shard lockstep, and solves merged cross-shard snapshots behind a
 //! generation-keyed cache with background refresh on rotation.
-//! Checkpoints stream with an FNV digest computed while transferring.
+//! Checkpoints stream the CKMC binary container ([`util::container`])
+//! section-by-section in bounded chunks, with an FNV digest computed
+//! while transferring; `ckmd --save set.ckmc` appends rotated epochs to
+//! an existing checkpoint without rewriting its bytes (a restart WAL).
 //!
 //! ## Layers
 //!
@@ -77,7 +80,9 @@
 //!   protocol, the `ServiceClient`/`ckm-client` producers.
 //! - **L4 ([`store`])** — the serving layer: epoch-bucketed windowed /
 //!   decayed sketch stores (optionally exponentially compacted), key-
-//!   sharded store sets, concurrent ingest and cached solves.
+//!   sharded store sets, concurrent ingest and cached solves; persisted
+//!   as either pretty JSON (debug) or the CKMC binary container
+//!   (production — sniffed by magic, converted with `ckm convert`).
 //! - **L3 (this crate)** — the coordinator: streaming sharded sketching of
 //!   the dataset, the CLOMPR centroid solver, baselines, metrics, a CLI and
 //!   the experiment/benchmark drivers for every figure in the paper.

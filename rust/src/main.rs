@@ -6,6 +6,7 @@
 //!   merge   merge shard artifacts (exact; operator-checked)
 //!   solve   recover centroids from a sketch artifact (any K, repeatedly)
 //!   window  epoch replay through the windowed sketch store (drift demo)
+//!   convert flip a checkpoint between the JSON and binary (CKMC) codecs
 //!   exp     regenerate a paper figure: fig1 | fig2 | fig3 | fig4 | ablate
 //!   gen     generate a synthetic dataset file
 //!   info    show version, artifact manifest and backends
@@ -34,6 +35,7 @@ fn main() {
         Some("merge") => cmd_merge(&args),
         Some("solve") => cmd_solve(&args),
         Some("window") => cmd_window(&args),
+        Some("convert") => cmd_convert(&args),
         Some("client") => cmd_client(&args),
         Some("bench") => cmd_bench(&args),
         Some("info") => cmd_info(&args),
@@ -76,6 +78,9 @@ fn usage() {
                    [--decay 0.2] [--drift 4.0] [--quantize 1bit|..|16bit]\n\
                    [--trig exact|fast] [--save-store store.json]\n\
                    (epoch replay through the store)\n\
+           convert <input> <output>  flip a sketch / store / store-set\n\
+                   checkpoint between JSON and the binary CKMC container\n\
+                   (direction sniffed from the input's codec)\n\
            client  ingest|solve|rotate|status|checkpoint|shutdown\n\
                    --connect tcp:HOST:PORT|unix:PATH [--producer NAME] ...\n\
                    (talk to a ckmd sketch daemon; same verbs as ckm-client)\n\
@@ -548,6 +553,28 @@ fn cmd_window(args: &Args) -> anyhow::Result<()> {
         server.save(&path)?;
         println!("store checkpointed to {path} (resume with SketchStore::from_file)");
     }
+    Ok(())
+}
+
+/// `ckm convert <in> <out>`: flip a checkpoint file between the JSON and
+/// binary (CKMC) codecs. The target codec is the opposite of the input's
+/// (sniffed by magic); the document kind — sketch artifact, store, or
+/// store set — is preserved, and the input is fully re-validated before
+/// the output is written.
+fn cmd_convert(args: &Args) -> anyhow::Result<()> {
+    args.finish()?;
+    let pos = args.positionals();
+    anyhow::ensure!(pos.len() == 2, "usage: ckm convert <input> <output>");
+    let report = ckm::store::convert_file(&pos[0], &pos[1])?;
+    println!(
+        "converted {} ({} -> {}): {} -> {} bytes ({:.2}x)",
+        report.doc.name(),
+        report.from.name(),
+        report.to.name(),
+        report.bytes_in,
+        report.bytes_out,
+        report.bytes_in as f64 / report.bytes_out.max(1) as f64
+    );
     Ok(())
 }
 

@@ -22,12 +22,14 @@ pub fn daemon_usage() {
                 [--quantize 1bit|..|16bit] [--trig exact|fast]\n\
                 [--radius adapted|gaussian|folded] [--compaction none|exp]\n\
                 [--base-shard 0] [--chunk-rows 4096]\n\
-                [--restore set.json] [--save set.json]\n\
+                [--restore set.json|set.ckmc] [--save set.json|set.ckmc]\n\
          \n\
          The daemon fronts N key-sharded sketch stores (producer → shard by\n\
          FNV-1a of the producer id). All sketch math runs client-side; the\n\
          daemon reserves dither row ranges, merges exactly, and solves\n\
-         merged snapshots. --save checkpoints the store set on shutdown."
+         merged snapshots. --save checkpoints the store set on shutdown\n\
+         (a .ckmc extension selects the binary container codec); --restore\n\
+         accepts either codec, sniffed by magic."
     );
 }
 
@@ -43,7 +45,9 @@ pub fn client_usage() {
            solve       --k K [--window E] [--decay LAMBDA] [--out solution.json]\n\
            rotate      seal the current epoch on every shard\n\
            status      print shard and cache counters\n\
-           checkpoint  --out set.json  digest-verified streamed checkpoint\n\
+           checkpoint  [--out set.ckmc]  digest-verified streamed binary\n\
+                       checkpoint (restorable via ckmd --restore; use\n\
+                       'ckm convert' for a JSON view)\n\
            shutdown    ask the daemon to drain and exit\n\
          \n\
          every verb also takes --producer NAME (default 'ckm-client')"
@@ -169,7 +173,9 @@ pub fn run_client(verb: &str, args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         "checkpoint" => {
-            let out = args.str_or("out", "ckm-store-set.json");
+            // The daemon streams the binary container codec, so the
+            // default output name carries its extension.
+            let out = args.str_or("out", "ckm-store-set.ckmc");
             let mut c = connect(args)?;
             args.finish()?;
             let (bytes, digest) = c.checkpoint_to(&out)?;

@@ -204,7 +204,7 @@ impl ServiceClient {
         }
         let (bytes, digest) = asm.finish()?;
         let len = bytes.len() as u64;
-        std::fs::write(path, bytes)?;
+        crate::util::fs::atomic_write(path, &bytes)?;
         Ok((len, digest))
     }
 

@@ -259,8 +259,16 @@ impl Daemon {
     }
 
     /// Checkpoint the store set to a file (used by `ckmd serve --save`).
+    /// A `.ckmc` extension selects the binary container codec; anything
+    /// else writes the JSON debug codec. Restore sniffs by magic either way.
     pub fn save<P: AsRef<std::path::Path>>(&self, path: P) -> Result<(), ApiError> {
-        self.state.store.to_file(path)
+        let path = path.as_ref();
+        let binary = path.extension().is_some_and(|e| e.eq_ignore_ascii_case("ckmc"));
+        if binary {
+            self.state.store.to_binary_file(path)
+        } else {
+            self.state.store.to_file(path)
+        }
     }
 
     /// Daemon-wide counters (also served over the wire as `Status`).
@@ -352,6 +360,48 @@ impl Drop for ConnGuard<'_> {
 
 fn send(stream: &mut dyn Conn, resp: &Response) -> Result<(), FrameError> {
     write_frame(stream, &protocol::encode_response(resp))
+}
+
+/// Adapts the framed connection into an [`Write`] sink for
+/// [`crate::util::container::ContainerImage::write_to`]: bytes accumulate
+/// into at most [`CHECKPOINT_CHUNK_BYTES`] and each full buffer goes out
+/// as one `CheckpointChunk` frame, folded into the running digest — no
+/// monolithic copy of the checkpoint is ever built for framing.
+struct ChunkSender<'a> {
+    stream: &'a mut dyn Conn,
+    digest: Fnv1a,
+    buf: Vec<u8>,
+}
+
+impl ChunkSender<'_> {
+    fn flush_chunk(&mut self) -> std::io::Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        self.digest.update(&self.buf);
+        let bytes = std::mem::replace(&mut self.buf, Vec::with_capacity(CHECKPOINT_CHUNK_BYTES));
+        send(self.stream, &Response::CheckpointChunk { bytes })
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::BrokenPipe, e.to_string()))
+    }
+}
+
+impl Write for ChunkSender<'_> {
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        let mut rest = data;
+        while !rest.is_empty() {
+            let take = (CHECKPOINT_CHUNK_BYTES - self.buf.len()).min(rest.len());
+            self.buf.extend_from_slice(&rest[..take]);
+            rest = &rest[take..];
+            if self.buf.len() == CHECKPOINT_CHUNK_BYTES {
+                self.flush_chunk()?;
+            }
+        }
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
 }
 
 /// Serve one connection: a `Hello` handshake assigning the shard, then a
@@ -501,22 +551,33 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                 }
             }
             Request::Checkpoint => {
-                let bytes = state.store.to_json().to_pretty().into_bytes();
-                let total_len = bytes.len() as u64;
+                // Consistent cut = N shard clones under their locks; the
+                // expensive half (encoding + streaming) runs on the clones
+                // with **no** store lock held, so producers on other
+                // connections keep ingesting while the checkpoint goes out.
+                let image = {
+                    let snapshot = state.store.snapshot();
+                    crate::store::checkpoint::store_set_image(state.store.base_shard(), &snapshot)
+                };
+                let total_len = image.total_len();
                 if send(&mut stream, &Response::CheckpointBegin { total_len }).is_err() {
                     return;
                 }
-                // Digest computed while streaming — the trailer's digest
-                // covers exactly the bytes that went over the wire.
-                let mut digest = Fnv1a::new();
-                for chunk in bytes.chunks(CHECKPOINT_CHUNK_BYTES) {
-                    digest.update(chunk);
-                    let resp = Response::CheckpointChunk { bytes: chunk.to_vec() };
-                    if send(&mut stream, &resp).is_err() {
+                // Stream section-by-section through a bounded chunker; the
+                // digest is computed while streaming, so the trailer covers
+                // exactly the bytes that went over the wire.
+                let digest = {
+                    let mut sender = ChunkSender {
+                        stream: &mut *stream,
+                        digest: Fnv1a::new(),
+                        buf: Vec::with_capacity(CHECKPOINT_CHUNK_BYTES),
+                    };
+                    if image.write_to(&mut sender).and_then(|()| sender.flush_chunk()).is_err() {
                         return;
                     }
-                }
-                let end = Response::CheckpointEnd { digest: digest.digest(), total_len };
+                    sender.digest.digest()
+                };
+                let end = Response::CheckpointEnd { digest, total_len };
                 if send(&mut stream, &end).is_err() {
                     return;
                 }

@@ -231,23 +231,74 @@ pub fn words_to_hex(words: &[u64]) -> String {
     s
 }
 
-/// Inverse of [`words_to_hex`].
-pub fn hex_to_words(s: &str) -> Result<Vec<u64>, String> {
-    if s.len() % 16 != 0 {
-        return Err(format!("packed payload length {} is not a multiple of 16", s.len()));
+/// A rejected packed-hex payload: every variant names exactly what was
+/// wrong, so a corrupt artifact fails loudly instead of parsing to a
+/// silently truncated or re-interpreted word vector.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HexPayloadError {
+    /// Hex encodes whole bytes; an odd character count cannot.
+    OddLength { len: usize },
+    /// Whole bytes but not whole little-endian u64 words — a truncated or
+    /// padded payload, never a shorter valid one.
+    NotWordAligned { len: usize },
+    /// A character outside `[0-9a-f]` at `pos` (0-based). Uppercase hex is
+    /// rejected too: [`words_to_hex`] emits lowercase only, so accepting
+    /// `A`–`F` would let two different strings decode to the same words
+    /// and break canonical round-trip checks.
+    BadDigit { pos: usize, byte: u8 },
+}
+
+impl std::fmt::Display for HexPayloadError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            HexPayloadError::OddLength { len } => {
+                write!(f, "packed payload length {len} is odd (hex encodes whole bytes)")
+            }
+            HexPayloadError::NotWordAligned { len } => {
+                write!(f, "packed payload length {len} is not a multiple of 16 (whole u64 words)")
+            }
+            HexPayloadError::BadDigit { pos, byte } => {
+                if byte.is_ascii_graphic() {
+                    write!(
+                        f,
+                        "bad hex digit '{}' at offset {pos} (lowercase [0-9a-f] only)",
+                        *byte as char
+                    )
+                } else {
+                    write!(f, "bad hex byte 0x{byte:02x} at offset {pos} (lowercase [0-9a-f] only)")
+                }
+            }
+        }
     }
-    let nibble = |c: u8| -> Result<u64, String> {
-        (c as char)
-            .to_digit(16)
-            .map(|d| d as u64)
-            .ok_or_else(|| format!("bad hex digit '{}'", c as char))
-    };
+}
+
+impl std::error::Error for HexPayloadError {}
+
+/// Inverse of [`words_to_hex`]. Strictly canonical: only lowercase
+/// `[0-9a-f]`, only whole-word lengths — anything else is a typed
+/// [`HexPayloadError`], never a panic and never a shortened result
+/// (`Ok(words)` always has exactly `s.len() / 16` entries).
+pub fn hex_to_words(s: &str) -> Result<Vec<u64>, HexPayloadError> {
+    if s.len() % 2 != 0 {
+        return Err(HexPayloadError::OddLength { len: s.len() });
+    }
+    if s.len() % 16 != 0 {
+        return Err(HexPayloadError::NotWordAligned { len: s.len() });
+    }
     let bytes = s.as_bytes();
+    let nibble = |pos: usize| -> Result<u64, HexPayloadError> {
+        match bytes[pos] {
+            b @ b'0'..=b'9' => Ok((b - b'0') as u64),
+            b @ b'a'..=b'f' => Ok((b - b'a' + 10) as u64),
+            byte => Err(HexPayloadError::BadDigit { pos, byte }),
+        }
+    };
     let mut words = Vec::with_capacity(s.len() / 16);
-    for chunk in bytes.chunks_exact(16) {
+    for word_start in (0..s.len()).step_by(16) {
         let mut w = 0u64;
-        for (i, pair) in chunk.chunks_exact(2).enumerate() {
-            let byte = (nibble(pair[0])? << 4) | nibble(pair[1])?;
+        for i in 0..8 {
+            let pos = word_start + 2 * i;
+            let byte = (nibble(pos)? << 4) | nibble(pos + 1)?;
             w |= byte << (8 * i);
         }
         words.push(w);
@@ -504,6 +555,83 @@ mod tests {
             // hex encoding round-trips too
             if hex_to_words(&words_to_hex(&words)).as_deref() != Ok(&words[..]) {
                 return Err("hex corrupted".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn hex_rejections_are_typed() {
+        assert_eq!(hex_to_words("abc"), Err(HexPayloadError::OddLength { len: 3 }));
+        assert_eq!(hex_to_words("abcdef"), Err(HexPayloadError::NotWordAligned { len: 6 }));
+        // Uppercase is valid hex but not *our* hex: words_to_hex emits
+        // lowercase only, so the overlong/aliased spelling is rejected.
+        assert_eq!(
+            hex_to_words("00000000000000AB"),
+            Err(HexPayloadError::BadDigit { pos: 14, byte: b'A' })
+        );
+        assert_eq!(
+            hex_to_words("000000000000000g"),
+            Err(HexPayloadError::BadDigit { pos: 15, byte: b'g' })
+        );
+        assert_eq!(hex_to_words(""), Ok(vec![]));
+    }
+
+    #[test]
+    fn prop_corrupt_hex_never_panics_or_truncates() {
+        let cfg = Config::default().cases(64).max_size(64);
+        testing::check("corrupt hex is rejected, never truncated", cfg, |rng, size| {
+            // Start from a valid payload, then corrupt it one of several
+            // ways; whatever comes back must be a typed error or a
+            // full-length decode — never a panic, never fewer words.
+            let words: Vec<u64> = (0..1 + size / 8).map(|_| rng.next_u64()).collect();
+            let mut s = words_to_hex(&words).into_bytes();
+            match rng.below(4) {
+                0 => {
+                    // truncate at an arbitrary boundary
+                    let cut = rng.below(s.len() + 1);
+                    s.truncate(cut);
+                }
+                1 => {
+                    // flip one byte to arbitrary ASCII
+                    let pos = rng.below(s.len());
+                    s[pos] = (rng.below(94) + 33) as u8;
+                }
+                2 => {
+                    // uppercase one digit (aliased spelling of same value)
+                    let pos = rng.below(s.len());
+                    s[pos] = s[pos].to_ascii_uppercase();
+                }
+                _ => {
+                    // append garbage
+                    let extra = 1 + rng.below(17);
+                    for _ in 0..extra {
+                        s.push((rng.below(94) + 33) as u8);
+                    }
+                }
+            }
+            let s = String::from_utf8(s).map_err(|e| e.to_string())?;
+            match hex_to_words(&s) {
+                Ok(decoded) => {
+                    // Only reachable when the corruption happened to keep
+                    // the string canonical (e.g. uppercasing '7'); the
+                    // decode must still cover every word.
+                    if decoded.len() != s.len() / 16 {
+                        return Err(format!(
+                            "silent truncation: {} chars -> {} words",
+                            s.len(),
+                            decoded.len()
+                        ));
+                    }
+                    if words_to_hex(&decoded) != s {
+                        return Err("accepted a non-canonical payload".into());
+                    }
+                }
+                Err(
+                    HexPayloadError::OddLength { .. }
+                    | HexPayloadError::NotWordAligned { .. }
+                    | HexPayloadError::BadDigit { .. },
+                ) => {}
             }
             Ok(())
         });

@@ -1,0 +1,696 @@
+//! Binary (CKMC) checkpoint codec for stores and store sets, plus the
+//! append-without-rewrite path the `ckmd` daemon uses as a restart WAL.
+//!
+//! Layout (see [`crate::util::container`] for the envelope): every store
+//! document is one container whose leading `SEC_META` section carries the
+//! doc kind, the operator spec and the ring configuration; each surviving
+//! epoch is its own `SEC_EPOCH_DENSE` / `SEC_EPOCH_QUANT` section (tag =
+//! epoch id, payload = shard index + id + start_row + span + artifact
+//! body); the mutable counters (`next_epoch_id`, `rows_ingested` per
+//! shard) live in the footer's state blob, which every append rewrites.
+//!
+//! [`append_store_to_file`] turns that layout into a WAL: sealed epochs
+//! re-encode byte-identically, so their existing sections are matched by
+//! (kind, tag, len, checksum) and *kept* — only changed sections (the
+//! open epoch, freshly sealed epochs, compacted buckets) are appended and
+//! the footer rewritten. Bytes of kept sections are never touched, so a
+//! long-lived checkpoint file grows by roughly one epoch per rotation
+//! instead of being rewritten wholesale.
+
+use super::ring::{CompactionPolicy, RestoredEpoch, RestoredHeader, SketchStore};
+use super::sharded::ShardedStore;
+use crate::api::artifact::binary::{
+    decode_artifact_body, decode_spec, encode_artifact_body, encode_spec, open_meta,
+    DOC_ARTIFACT, DOC_STORE, DOC_STORE_SET, SEC_EPOCH_DENSE, SEC_EPOCH_QUANT, SEC_META,
+};
+use crate::api::{ApiError, OpSpec, QuantizationMode, SketchArtifact};
+use crate::util::container::{
+    is_container, ContainerError, ContainerImage, ContainerReader, SectionEntry,
+};
+use crate::util::digest::Fnv1a;
+use crate::util::framing::{ByteReader, ByteWriter};
+use crate::util::json::Json;
+use std::path::Path;
+
+fn bad(msg: &str) -> ApiError {
+    ApiError::Format(format!("checkpoint: {msg}"))
+}
+
+// -- shared header / state codecs -----------------------------------------
+
+/// Per-store configuration block inside a meta section: spec + quant bits
+/// (0 = dense) + shard salt + capacity (0 = unbounded) + compaction code.
+fn encode_store_header(w: &mut ByteWriter, store: &SketchStore) {
+    encode_spec(w, store.spec());
+    w.u8(store.quantization().map(|m| m.bits() as u8).unwrap_or(0));
+    w.u64(store.shard());
+    w.u64(store.capacity().map(|c| c as u64).unwrap_or(0));
+    w.u8(match store.compaction() {
+        CompactionPolicy::None => 0,
+        CompactionPolicy::Exponential => 1,
+    });
+}
+
+fn decode_store_header(r: &mut ByteReader) -> Result<(OpSpec, RestoredHeader), ApiError> {
+    let spec = decode_spec(r)?;
+    let quantization = match r.u8()? {
+        0 => None,
+        bits @ 1..=16 => Some(QuantizationMode::Bits(bits).normalized()),
+        other => return Err(bad(&format!("quant bits {other} out of range 0..=16"))),
+    };
+    let shard = r.u64()?;
+    let capacity = match r.usize_capped(u64::MAX as usize >> 1, "store.capacity")? {
+        0 => None,
+        c => Some(c),
+    };
+    let compaction = match r.u8()? {
+        0 => CompactionPolicy::None,
+        1 => CompactionPolicy::Exponential,
+        other => return Err(bad(&format!("unknown compaction code {other}"))),
+    };
+    Ok((spec, RestoredHeader { shard, quantization, capacity, compaction }))
+}
+
+/// The footer state blob: shard count + per-shard mutable counters. This
+/// is the only part of a store document an append rewrites, so the whole
+/// ring's progress survives without touching any section bytes.
+fn encode_state(shards: &[&SketchStore]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.u32(shards.len() as u32);
+    for s in shards {
+        w.u64(s.next_epoch_id());
+        w.u64(s.rows_ingested() as u64);
+    }
+    w.into_vec()
+}
+
+fn decode_state(bytes: &[u8], expect: usize) -> Result<Vec<(u64, usize)>, ApiError> {
+    let mut r = ByteReader::new(bytes);
+    let n = r.u32()? as usize;
+    if n != expect {
+        return Err(bad(&format!("state carries {n} shard counters, meta declares {expect}")));
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let next_epoch_id = r.u64()?;
+        let rows_ingested = r.usize_capped(u64::MAX as usize >> 1, "state.rows_ingested")?;
+        out.push((next_epoch_id, rows_ingested));
+    }
+    r.finish().map_err(ApiError::from)?;
+    Ok(out)
+}
+
+// -- epoch sections --------------------------------------------------------
+
+/// Encode every surviving epoch of one store as `(kind, tag, payload)`
+/// sections, oldest first. Deterministic: a sealed epoch re-encodes to the
+/// same bytes on every call, which is what lets appends keep old sections
+/// by checksum instead of decoding them.
+fn epoch_sections(shard_idx: u32, store: &SketchStore) -> Vec<(u8, u64, Vec<u8>)> {
+    store
+        .epoch_stats()
+        .iter()
+        .zip(store.epoch_artifacts())
+        .map(|(st, art)| {
+            let mut w = ByteWriter::new();
+            w.u32(shard_idx);
+            w.u64(st.id);
+            w.u64(st.start_row as u64);
+            w.u64(st.span);
+            encode_artifact_body(&mut w, &art);
+            let kind = if art.quant.is_some() { SEC_EPOCH_QUANT } else { SEC_EPOCH_DENSE };
+            (kind, st.id, w.into_vec())
+        })
+        .collect()
+}
+
+/// Decode an epoch payload after its leading shard index has been read.
+fn decode_epoch_body(
+    r: &mut ByteReader,
+    entry_kind: u8,
+    spec: &OpSpec,
+) -> Result<RestoredEpoch, ApiError> {
+    let id = r.u64()?;
+    let start_row = r.usize_capped(u64::MAX as usize >> 1, "epoch.start_row")?;
+    let span = r.u64()?;
+    let artifact = decode_artifact_body(r, spec)?;
+    r.finish().map_err(ApiError::from)?;
+    let expect = if artifact.quant.is_some() { SEC_EPOCH_QUANT } else { SEC_EPOCH_DENSE };
+    if entry_kind != expect {
+        return Err(bad("epoch section kind disagrees with its payload"));
+    }
+    Ok(RestoredEpoch { id, start_row, span, artifact })
+}
+
+fn epoch_kind_ok(kind: u8) -> Result<(), ApiError> {
+    if kind == SEC_EPOCH_DENSE || kind == SEC_EPOCH_QUANT {
+        Ok(())
+    } else {
+        Err(bad(&format!("unexpected section kind {kind} in a store checkpoint")))
+    }
+}
+
+// -- single store ----------------------------------------------------------
+
+/// Build the full container image of one store: meta, every epoch,
+/// counters in the state blob.
+pub(crate) fn store_image(store: &SketchStore) -> ContainerImage {
+    let mut img = ContainerImage::new(encode_state(&[store]));
+    let mut meta = ByteWriter::new();
+    meta.u8(DOC_STORE);
+    encode_store_header(&mut meta, store);
+    img.push_section(SEC_META, 0, meta.into_vec());
+    for (kind, tag, payload) in epoch_sections(0, store) {
+        img.push_section(kind, tag, payload);
+    }
+    img
+}
+
+/// Decode a single-store container, re-validating every ring invariant
+/// through [`SketchStore::restore`] (operator checksum included).
+pub(crate) fn store_from_container(bytes: &[u8]) -> Result<SketchStore, ApiError> {
+    let c = ContainerReader::parse(bytes)?;
+    let (doc, mut meta) = open_meta(&c)?;
+    if doc != DOC_STORE {
+        return Err(bad(&format!("container holds doc kind {doc}, not a single-store checkpoint")));
+    }
+    let (spec, header) = decode_store_header(&mut meta)?;
+    meta.finish().map_err(ApiError::from)?;
+    let (next_epoch_id, rows_ingested) = decode_state(c.state(), 1)?[0];
+    let mut parts = Vec::with_capacity(c.entries().len().saturating_sub(1));
+    for i in 1..c.entries().len() {
+        let kind = c.entries()[i].kind;
+        epoch_kind_ok(kind)?;
+        let mut r = ByteReader::new(c.section(i)?);
+        if r.u32()? != 0 {
+            return Err(bad("single-store checkpoint carries a nonzero shard index"));
+        }
+        parts.push(decode_epoch_body(&mut r, kind, &spec)?);
+    }
+    SketchStore::restore(header, next_epoch_id, rows_ingested, parts)
+}
+
+// -- sharded store set -----------------------------------------------------
+
+/// Build the container image of a whole store set (one consistent
+/// snapshot of every shard, e.g. from [`ShardedStore::snapshot`]).
+pub(crate) fn store_set_image(base_shard: u64, shards: &[SketchStore]) -> ContainerImage {
+    let refs: Vec<&SketchStore> = shards.iter().collect();
+    let mut img = ContainerImage::new(encode_state(&refs));
+    let mut meta = ByteWriter::new();
+    meta.u8(DOC_STORE_SET);
+    meta.u64(base_shard);
+    meta.u32(shards.len() as u32);
+    for s in shards {
+        encode_store_header(&mut meta, s);
+    }
+    img.push_section(SEC_META, 0, meta.into_vec());
+    for (i, s) in shards.iter().enumerate() {
+        for (kind, tag, payload) in epoch_sections(i as u32, s) {
+            img.push_section(kind, tag, payload);
+        }
+    }
+    img
+}
+
+/// Decode a store-set container: per-shard headers from the meta section,
+/// epoch sections routed to their shard by the leading index, then the
+/// usual restore + uniform-provenance validation.
+pub(crate) fn store_set_from_container(bytes: &[u8]) -> Result<ShardedStore, ApiError> {
+    let c = ContainerReader::parse(bytes)?;
+    let (doc, mut meta) = open_meta(&c)?;
+    if doc != DOC_STORE_SET {
+        return Err(bad(&format!("container holds doc kind {doc}, not a store-set checkpoint")));
+    }
+    let base_shard = meta.u64()?;
+    let n_shards = meta.u32()? as usize;
+    if n_shards == 0 || n_shards > 1 << 20 {
+        return Err(bad(&format!("implausible shard count {n_shards}")));
+    }
+    let mut headers = Vec::with_capacity(n_shards);
+    for _ in 0..n_shards {
+        headers.push(decode_store_header(&mut meta)?);
+    }
+    meta.finish().map_err(ApiError::from)?;
+    let state = decode_state(c.state(), n_shards)?;
+    let mut parts: Vec<Vec<RestoredEpoch>> = vec![Vec::new(); n_shards];
+    for i in 1..c.entries().len() {
+        let kind = c.entries()[i].kind;
+        epoch_kind_ok(kind)?;
+        let mut r = ByteReader::new(c.section(i)?);
+        let shard_idx = r.u32()? as usize;
+        if shard_idx >= n_shards {
+            return Err(bad(&format!("epoch section addresses shard {shard_idx} of {n_shards}")));
+        }
+        let ep = decode_epoch_body(&mut r, kind, &headers[shard_idx].0)?;
+        parts[shard_idx].push(ep);
+    }
+    let mut stores = Vec::with_capacity(n_shards);
+    for (i, ((_, header), (next_epoch_id, rows_ingested))) in
+        headers.into_iter().zip(state).enumerate()
+    {
+        stores.push(
+            SketchStore::restore(header, next_epoch_id, rows_ingested, std::mem::take(&mut parts[i]))
+                .map_err(|e| match e {
+                    ApiError::Format(msg) => ApiError::Format(format!("shard {i}: {msg}")),
+                    other => other,
+                })?,
+        );
+    }
+    ShardedStore::from_stores(base_shard, stores)
+}
+
+// -- append-without-rewrite (the ckmd restart WAL) -------------------------
+
+/// What one [`append_store_to_file`] call did to the file.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AppendStats {
+    /// Sections carried over untouched from the existing table.
+    pub kept: usize,
+    /// Sections whose payload bytes were appended this call.
+    pub appended: usize,
+    /// True when the file was (re)written wholesale instead of appended:
+    /// it was missing, or its tail was torn by a crashed previous append.
+    pub rewritten: bool,
+}
+
+/// Checkpoint one store into `path` by appending: sections whose fresh
+/// encoding matches an existing table entry (kind, tag, len, FNV-1a) are
+/// kept verbatim — their bytes are never rewritten — and only changed
+/// sections (at minimum the open epoch) plus a fresh footer go to disk.
+///
+/// A missing file becomes a full atomic write; a torn tail (crashed
+/// previous append) is healed the same way. A file that parses but whose
+/// meta disagrees with this store's configuration is *not* overwritten —
+/// that is a typed error, because it means the path belongs to a
+/// different store lineage.
+pub fn append_store_to_file<P: AsRef<Path>>(
+    store: &SketchStore,
+    path: P,
+) -> Result<AppendStats, ApiError> {
+    let path = path.as_ref();
+    let mut meta = ByteWriter::new();
+    meta.u8(DOC_STORE);
+    encode_store_header(&mut meta, store);
+    let meta_payload = meta.into_vec();
+    let state = encode_state(&[store]);
+    let fresh = epoch_sections(0, store);
+
+    let rewrite = |stats_appended: usize| -> Result<AppendStats, ApiError> {
+        store.to_binary_file(path)?;
+        Ok(AppendStats { kept: 0, appended: stats_appended, rewritten: true })
+    };
+
+    let bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return rewrite(fresh.len() + 1);
+        }
+        Err(e) => return Err(e.into()),
+    };
+    let reader = match ContainerReader::parse(&bytes) {
+        Ok(r) => r,
+        // A torn tail from a crashed append parses as a typed error; the
+        // store in hand *is* the recovery state, so heal by full rewrite.
+        Err(ContainerError::Io(e)) => return Err(e.into()),
+        Err(_) => return rewrite(fresh.len() + 1),
+    };
+    let old_entries = reader.entries();
+    if old_entries.first().map(|e| e.kind) != Some(SEC_META)
+        || reader.section(0)? != &meta_payload[..]
+    {
+        return Err(bad("existing container belongs to a different store or configuration"));
+    }
+
+    let mut kept: Vec<SectionEntry> = vec![old_entries[0].clone()];
+    let mut new_sections = Vec::new();
+    for (kind, tag, payload) in fresh {
+        let checksum = Fnv1a::hash(&payload);
+        let hit = old_entries[1..].iter().find(|e| {
+            e.kind == kind && e.tag == tag && e.len == payload.len() as u64 && e.checksum == checksum
+        });
+        match hit {
+            Some(e) => kept.push(e.clone()),
+            None => new_sections.push((kind, tag, payload)),
+        }
+    }
+    let stats = AppendStats {
+        kept: kept.len(),
+        appended: new_sections.len(),
+        rewritten: false,
+    };
+    drop(reader);
+    drop(bytes);
+    crate::util::container::append_sections(path, &state, &kept, &new_sections)?;
+    Ok(stats)
+}
+
+// -- document detection & conversion (the `ckm convert` entry point) -------
+
+/// What a checkpoint file holds, independent of codec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DocKind {
+    /// A standalone sketch artifact (`ckm-sketch`).
+    Artifact,
+    /// A single epoch-ring store (`ckm-store`).
+    Store,
+    /// A sharded store set (`ckm-store-set`).
+    StoreSet,
+}
+
+impl DocKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            DocKind::Artifact => "sketch artifact",
+            DocKind::Store => "store",
+            DocKind::StoreSet => "store set",
+        }
+    }
+}
+
+/// Which codec a checkpoint file uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Codec {
+    Json,
+    Binary,
+}
+
+impl Codec {
+    pub fn name(self) -> &'static str {
+        match self {
+            Codec::Json => "json",
+            Codec::Binary => "ckmc",
+        }
+    }
+}
+
+/// Sniff a checkpoint's codec (by magic) and document kind (meta doc byte
+/// for binary, `format` tag for JSON) without decoding the payload.
+pub fn detect(bytes: &[u8]) -> Result<(DocKind, Codec), ApiError> {
+    if is_container(bytes) {
+        let c = ContainerReader::parse(bytes)?;
+        let (doc, _) = open_meta(&c)?;
+        let kind = match doc {
+            DOC_ARTIFACT => DocKind::Artifact,
+            DOC_STORE => DocKind::Store,
+            DOC_STORE_SET => DocKind::StoreSet,
+            other => return Err(bad(&format!("unknown container doc kind {other}"))),
+        };
+        return Ok((kind, Codec::Binary));
+    }
+    let text = std::str::from_utf8(bytes)
+        .map_err(|_| bad("file is neither a CKMC container nor UTF-8 JSON"))?;
+    let j = Json::parse(text)?;
+    let kind = match j.get("format").as_str() {
+        Some("ckm-sketch") => DocKind::Artifact,
+        Some("ckm-store") => DocKind::Store,
+        Some("ckm-store-set") => DocKind::StoreSet,
+        Some(other) => return Err(bad(&format!("unknown format tag {other:?}"))),
+        None => return Err(bad("JSON file carries no format tag")),
+    };
+    Ok((kind, Codec::Json))
+}
+
+/// What [`convert_file`] did.
+#[derive(Clone, Debug)]
+pub struct ConvertReport {
+    pub doc: DocKind,
+    pub from: Codec,
+    pub to: Codec,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// Convert a checkpoint file to the *other* codec (JSON ⇄ CKMC),
+/// preserving the document kind. The input is fully decoded and
+/// re-validated (operator checksum included) before the output is
+/// written atomically, so a convert can never launder a corrupt file.
+pub fn convert_file<P: AsRef<Path>, Q: AsRef<Path>>(
+    input: P,
+    output: Q,
+) -> Result<ConvertReport, ApiError> {
+    let input = input.as_ref();
+    let output = output.as_ref();
+    let bytes = std::fs::read(input)?;
+    let (doc, from) = detect(&bytes)?;
+    let to = match from {
+        Codec::Json => Codec::Binary,
+        Codec::Binary => Codec::Json,
+    };
+    match (doc, to) {
+        (DocKind::Artifact, Codec::Binary) => {
+            SketchArtifact::from_file(input)?.to_binary_file(output)?
+        }
+        (DocKind::Artifact, Codec::Json) => SketchArtifact::from_file(input)?.to_file(output)?,
+        (DocKind::Store, Codec::Binary) => SketchStore::from_file(input)?.to_binary_file(output)?,
+        (DocKind::Store, Codec::Json) => SketchStore::from_file(input)?.to_file(output)?,
+        (DocKind::StoreSet, Codec::Binary) => {
+            ShardedStore::from_file(input)?.to_binary_file(output)?
+        }
+        (DocKind::StoreSet, Codec::Json) => ShardedStore::from_file(input)?.to_file(output)?,
+    }
+    let bytes_out = std::fs::metadata(output)?.len();
+    Ok(ConvertReport { doc, from, to, bytes_in: bytes.len() as u64, bytes_out })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::RadiusKind;
+    use crate::testing::gen;
+    use crate::util::rng::Rng;
+
+    fn spec(seed: u64, m: usize, n: usize) -> OpSpec {
+        OpSpec::derive(seed, RadiusKind::AdaptedRadius, 1.0, m, n).0
+    }
+
+    fn tempdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("ckm_ckpt_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// A quantized multi-epoch store with a partially filled open epoch.
+    fn quantized_store(seed: u64, epochs: usize) -> SketchStore {
+        let mut store = SketchStore::create(
+            spec(seed, 64, 3),
+            Some(QuantizationMode::Bits(2)),
+            5,
+            Some(16),
+        )
+        .unwrap();
+        let mut rng = Rng::new(seed ^ 0xABCD);
+        for _ in 0..epochs {
+            store.ingest(&gen::mat_normal(&mut rng, 17, 3));
+            store.rotate();
+        }
+        store.ingest(&gen::mat_normal(&mut rng, 9, 3));
+        store
+    }
+
+    fn assert_stores_identical(a: &SketchStore, b: &SketchStore) {
+        assert_eq!(a.epoch_stats(), b.epoch_stats());
+        assert_eq!(a.epoch_artifacts(), b.epoch_artifacts());
+        assert_eq!(a.rows_ingested(), b.rows_ingested());
+        assert_eq!(a.next_epoch_id(), b.next_epoch_id());
+        assert_eq!(a.shard(), b.shard());
+        assert_eq!(a.dither_seed(), b.dither_seed());
+        assert_eq!(a.quantization(), b.quantization());
+        assert_eq!(a.capacity(), b.capacity());
+        assert_eq!(a.compaction(), b.compaction());
+        assert_eq!(a.window_all(), b.window_all());
+    }
+
+    #[test]
+    fn quantized_store_roundtrips_bit_identically() {
+        let store = quantized_store(11, 4);
+        let bytes = store_image(&store).to_bytes();
+        let mut back = store_from_container(&bytes).unwrap();
+        assert_stores_identical(&store, &back);
+
+        // Resumed ingest stays bit-compatible with an uninterrupted run:
+        // the dither row counter survives the binary codec too.
+        let mut store = store;
+        let mut rng = Rng::new(99);
+        let extra = gen::mat_normal(&mut rng, 12, 3);
+        store.ingest(&extra);
+        back.ingest(&extra);
+        assert_eq!(store.window_all(), back.window_all());
+    }
+
+    #[test]
+    fn dense_store_roundtrips() {
+        let mut store = SketchStore::create(spec(3, 32, 2), None, 0, None).unwrap();
+        let mut rng = Rng::new(4);
+        store.ingest(&gen::mat_normal(&mut rng, 10, 2));
+        store.rotate();
+        store.ingest(&gen::mat_normal(&mut rng, 6, 2));
+        let bytes = store_image(&store).to_bytes();
+        let back = store_from_container(&bytes).unwrap();
+        assert_stores_identical(&store, &back);
+    }
+
+    #[test]
+    fn binary_is_at_least_4x_smaller_than_json() {
+        let store = quantized_store(21, 6);
+        let json = store.to_json().to_pretty();
+        let binary = store_image(&store).to_bytes();
+        assert!(
+            json.len() >= 4 * binary.len(),
+            "json {} bytes vs binary {} bytes",
+            json.len(),
+            binary.len()
+        );
+    }
+
+    #[test]
+    fn store_set_roundtrips_bit_identically() {
+        let set = ShardedStore::create(
+            spec(7, 32, 2),
+            Some(QuantizationMode::OneBit),
+            3,
+            2,
+            Some(8),
+            CompactionPolicy::None,
+        )
+        .unwrap();
+        let mut rng = Rng::new(8);
+        for _ in 0..3 {
+            set.ingest(0, &gen::mat_normal(&mut rng, 7, 2));
+            set.ingest(1, &gen::mat_normal(&mut rng, 5, 2));
+            set.rotate_all();
+        }
+        let bytes = store_set_image(set.base_shard(), &set.snapshot()).to_bytes();
+        let back = store_set_from_container(&bytes).unwrap();
+        assert_eq!(back.n_shards(), 2);
+        assert_eq!(back.base_shard(), 3);
+        assert_eq!(back.quantization(), set.quantization());
+        let (a, _) = set.merged_window(None).unwrap();
+        let (b, _) = back.merged_window(None).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn append_keeps_sealed_epoch_bytes_untouched() {
+        let dir = tempdir("append");
+        let path = dir.join("wal.ckmc");
+        let _ = std::fs::remove_file(&path);
+
+        let mut store = SketchStore::create(
+            spec(31, 48, 2),
+            Some(QuantizationMode::Bits(2)),
+            0,
+            None,
+        )
+        .unwrap();
+        let mut rng = Rng::new(32);
+        store.ingest(&gen::mat_normal(&mut rng, 11, 2));
+        store.rotate();
+        store.ingest(&gen::mat_normal(&mut rng, 5, 2));
+
+        // First call: file missing, full write.
+        let s0 = append_store_to_file(&store, &path).unwrap();
+        assert!(s0.rewritten);
+        let b0 = std::fs::read(&path).unwrap();
+        let cut = ContainerReader::parse(&b0).unwrap().append_offset() as usize;
+
+        // Seal the open epoch and grow: the next checkpoint must append.
+        store.rotate();
+        store.ingest(&gen::mat_normal(&mut rng, 8, 2));
+        let s1 = append_store_to_file(&store, &path).unwrap();
+        assert!(!s1.rewritten);
+        // meta + first sealed epoch kept; previously-open epoch changed
+        // (it sealed), so it and the new open epoch were appended.
+        assert!(s1.kept >= 2, "kept {}", s1.kept);
+        assert!(s1.appended >= 1, "appended {}", s1.appended);
+
+        let b1 = std::fs::read(&path).unwrap();
+        assert!(b1.len() > b0.len());
+        // Every byte up to the old footer start is untouched.
+        assert_eq!(&b1[..cut], &b0[..cut]);
+
+        let back = store_from_container(&b1).unwrap();
+        assert_stores_identical(&store, &back);
+    }
+
+    #[test]
+    fn append_heals_a_torn_tail_by_rewriting() {
+        let dir = tempdir("torn");
+        let path = dir.join("wal.ckmc");
+        let store = quantized_store(41, 2);
+        append_store_to_file(&store, &path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 7]).unwrap();
+
+        let stats = append_store_to_file(&store, &path).unwrap();
+        assert!(stats.rewritten);
+        let back = store_from_container(&std::fs::read(&path).unwrap()).unwrap();
+        assert_stores_identical(&store, &back);
+    }
+
+    #[test]
+    fn append_refuses_a_foreign_stores_file() {
+        let dir = tempdir("foreign");
+        let path = dir.join("wal.ckmc");
+        append_store_to_file(&quantized_store(51, 2), &path).unwrap();
+        let other = quantized_store(52, 2);
+        let err = append_store_to_file(&other, &path).unwrap_err();
+        assert!(matches!(err, ApiError::Format(_)), "got {err}");
+        // the original file is intact
+        store_from_container(&std::fs::read(&path).unwrap()).unwrap();
+    }
+
+    #[test]
+    fn detect_classifies_every_doc_and_codec() {
+        let store = quantized_store(61, 2);
+        let art = store.window_all();
+        let set = ShardedStore::create(spec(7, 8, 2), None, 0, 1, None, CompactionPolicy::None)
+            .unwrap();
+        set.ingest(0, &gen::mat_normal(&mut Rng::new(1), 3, 2));
+
+        let cases: Vec<(Vec<u8>, DocKind, Codec)> = vec![
+            (art.to_json().to_pretty().into_bytes(), DocKind::Artifact, Codec::Json),
+            (
+                crate::api::artifact::binary::artifact_image(&art).to_bytes(),
+                DocKind::Artifact,
+                Codec::Binary,
+            ),
+            (store.to_json().to_pretty().into_bytes(), DocKind::Store, Codec::Json),
+            (store_image(&store).to_bytes(), DocKind::Store, Codec::Binary),
+            (set.to_json().to_pretty().into_bytes(), DocKind::StoreSet, Codec::Json),
+            (
+                store_set_image(set.base_shard(), &set.snapshot()).to_bytes(),
+                DocKind::StoreSet,
+                Codec::Binary,
+            ),
+        ];
+        for (bytes, doc, codec) in cases {
+            assert_eq!(detect(&bytes).unwrap(), (doc, codec), "{doc:?}/{codec:?}");
+        }
+        assert!(detect(b"not a checkpoint").is_err());
+    }
+
+    #[test]
+    fn convert_roundtrips_through_both_codecs() {
+        let dir = tempdir("convert");
+        let json_path = dir.join("store.json");
+        let ckmc_path = dir.join("store.ckmc");
+        let json2_path = dir.join("store2.json");
+
+        let store = quantized_store(71, 3);
+        store.to_file(&json_path).unwrap();
+
+        let r1 = convert_file(&json_path, &ckmc_path).unwrap();
+        assert_eq!((r1.doc, r1.from, r1.to), (DocKind::Store, Codec::Json, Codec::Binary));
+        assert!(r1.bytes_in >= 4 * r1.bytes_out, "{} vs {}", r1.bytes_in, r1.bytes_out);
+
+        let r2 = convert_file(&ckmc_path, &json2_path).unwrap();
+        assert_eq!((r2.from, r2.to), (Codec::Binary, Codec::Json));
+
+        let a = SketchStore::from_file(&json_path).unwrap();
+        let b = SketchStore::from_file(&ckmc_path).unwrap();
+        let c = SketchStore::from_file(&json2_path).unwrap();
+        assert_stores_identical(&a, &b);
+        assert_stores_identical(&a, &c);
+    }
+}

@@ -42,22 +42,27 @@
 //! buckets while window merges stay exact (they widen to bucket
 //! boundaries, never split one).
 //!
-//! A whole store serializes to one versioned JSON file whose epoch entries
-//! are ordinary format-v2 artifacts ([`SketchStore::to_file`] /
-//! [`SketchStore::from_file`]), so a service can checkpoint and resume —
-//! including the quantized dither row counter, which keeps resumed ingest
-//! bit-compatible with an uninterrupted run. A [`ShardedStore`] checkpoints
-//! all shards into one `ckm-store-set` file.
+//! A whole store serializes through two codecs sharing one restore path:
+//! versioned JSON (the debug codec; epoch entries are ordinary format-v2
+//! artifacts) and the binary CKMC container ([`checkpoint`] — compact,
+//! per-section checksummed, append-without-rewrite for the `ckmd` restart
+//! WAL). [`SketchStore::from_file`] / [`ShardedStore::from_file`] sniff
+//! the codec by magic, so a service can checkpoint and resume from either
+//! — including the quantized dither row counter, which keeps resumed
+//! ingest bit-compatible with an uninterrupted run. A [`ShardedStore`]
+//! checkpoints all shards into one `ckm-store-set` document.
 //!
 //! Entry points live on the facade: `Ckm::builder().window(epochs)` sets
 //! the ring capacity, `.decay(lambda)` the default decay, and
 //! [`crate::api::Ckm::store`] / [`crate::api::Ckm::server`] construct the
 //! pieces with the builder's validated operator provenance.
 
+pub mod checkpoint;
 pub mod ring;
 pub mod server;
 pub mod sharded;
 
+pub use checkpoint::{append_store_to_file, convert_file, AppendStats, Codec, ConvertReport, DocKind};
 pub use ring::{
     ChunkSketch, CompactionPolicy, EpochStats, SketchContext, SketchStore, STORE_FORMAT_VERSION,
 };

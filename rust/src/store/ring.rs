@@ -136,6 +136,25 @@ impl EpochSketch {
     }
 }
 
+/// Checkpoint-header parts shared by the JSON and binary store codecs
+/// (everything [`SketchStore::restore`] needs besides the epochs).
+#[derive(Clone, Debug)]
+pub(crate) struct RestoredHeader {
+    pub shard: u64,
+    pub quantization: Option<QuantizationMode>,
+    pub capacity: Option<usize>,
+    pub compaction: CompactionPolicy,
+}
+
+/// One decoded epoch headed into [`SketchStore::restore`].
+#[derive(Clone, Debug)]
+pub(crate) struct RestoredEpoch {
+    pub id: u64,
+    pub start_row: usize,
+    pub span: u64,
+    pub artifact: SketchArtifact,
+}
+
 /// Introspection record for one epoch of the ring.
 #[derive(Clone, Debug, PartialEq)]
 pub struct EpochStats {
@@ -690,6 +709,11 @@ impl SketchStore {
         self.epochs.back().expect("store holds at least one epoch").id
     }
 
+    /// The id the next rotation will open (strictly above every live id).
+    pub fn next_epoch_id(&self) -> u64 {
+        self.next_epoch_id
+    }
+
     pub fn oldest_epoch_id(&self) -> u64 {
         self.epochs.front().expect("store holds at least one epoch").id
     }
@@ -825,10 +849,7 @@ impl SketchStore {
             return Err(bad("a store holds at least one epoch"));
         }
 
-        let mut spec: Option<OpSpec> = None;
-        let mut epochs = VecDeque::with_capacity(epochs_j.len());
-        let mut last_id: Option<u64> = None;
-        let mut last_start = 0usize;
+        let mut epochs = Vec::with_capacity(epochs_j.len());
         for ej in epochs_j {
             let id = ej.get("id").as_usize().ok_or_else(|| bad("epoch id missing"))? as u64;
             let start_row =
@@ -843,6 +864,43 @@ impl SketchStore {
             if span > 1 && version < 2 {
                 return Err(bad("epoch spans require store format version >= 2"));
             }
+            let art = SketchArtifact::from_json(ej.get("artifact"))?;
+            epochs.push(RestoredEpoch { id, start_row, span, artifact: art });
+        }
+        SketchStore::restore(
+            RestoredHeader { shard, quantization, capacity, compaction },
+            next_epoch_id,
+            rows_ingested,
+            epochs,
+        )
+    }
+
+    /// Rebuild a store from checkpoint parts — the shared tail of both the
+    /// JSON and binary (CKMC) codecs. Validates every ring invariant:
+    /// uniform operator and quantization across epochs, strictly
+    /// increasing ids, non-decreasing start rows, `next_epoch_id` above
+    /// every live id, the newest epoch accounting for `rows_ingested`,
+    /// capacity respected — then re-derives and checksum-verifies the
+    /// operator.
+    pub(crate) fn restore(
+        header: RestoredHeader,
+        next_epoch_id: u64,
+        rows_ingested: usize,
+        parts: Vec<RestoredEpoch>,
+    ) -> Result<SketchStore, ApiError> {
+        let bad = |msg: &str| ApiError::Format(format!("store: {msg}"));
+        let RestoredHeader { shard, quantization, capacity, compaction } = header;
+        if parts.is_empty() {
+            return Err(bad("a store holds at least one epoch"));
+        }
+        let mut spec: Option<OpSpec> = None;
+        let mut epochs = VecDeque::with_capacity(parts.len());
+        let mut last_id: Option<u64> = None;
+        let mut last_start = 0usize;
+        for RestoredEpoch { id, start_row, span, artifact: art } in parts {
+            if span < 1 {
+                return Err(bad("epoch span must be >= 1"));
+            }
             if let Some(prev) = last_id {
                 if id <= prev {
                     return Err(bad("epoch ids must be strictly increasing"));
@@ -853,7 +911,6 @@ impl SketchStore {
             }
             last_id = Some(id);
             last_start = start_row;
-            let art = SketchArtifact::from_json(ej.get("artifact"))?;
             match spec.as_ref() {
                 None => {}
                 Some(s) if *s == art.op => {}
@@ -926,16 +983,33 @@ impl SketchStore {
         })
     }
 
-    /// Write the store as pretty-printed versioned JSON.
+    /// Write the store as pretty-printed versioned JSON (atomically: a
+    /// crash mid-checkpoint leaves the previous file intact).
     pub fn to_file<P: AsRef<Path>>(&self, path: P) -> Result<(), ApiError> {
-        std::fs::write(path, self.to_json().to_pretty())?;
+        crate::util::fs::atomic_write(path, self.to_json().to_pretty().as_bytes())?;
         Ok(())
     }
 
-    /// Load a checkpointed store (operator checksum verified at load time).
+    /// Write the store as a binary CKMC container (the compact codec; see
+    /// [`crate::store::checkpoint`]). Full rewrite, atomic; for in-place
+    /// epoch appends use [`crate::store::checkpoint::append_store_to_file`].
+    pub fn to_binary_file<P: AsRef<Path>>(&self, path: P) -> Result<(), ApiError> {
+        let image = crate::store::checkpoint::store_image(self);
+        crate::util::fs::atomic_write(path, &image.to_bytes())?;
+        Ok(())
+    }
+
+    /// Load a checkpointed store from either codec, sniffed by magic:
+    /// `CKMC` means binary, anything else is parsed as JSON (operator
+    /// checksum verified at load time in both).
     pub fn from_file<P: AsRef<Path>>(path: P) -> Result<SketchStore, ApiError> {
-        let text = std::fs::read_to_string(path)?;
-        SketchStore::from_json(&Json::parse(&text)?)
+        let bytes = std::fs::read(path)?;
+        if crate::util::container::is_container(&bytes) {
+            return crate::store::checkpoint::store_from_container(&bytes);
+        }
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|_| ApiError::Format("store file is neither CKMC nor UTF-8 JSON".into()))?;
+        SketchStore::from_json(&Json::parse(text)?)
     }
 }
 

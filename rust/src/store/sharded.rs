@@ -362,14 +362,26 @@ impl ShardedStore {
             .and_then(|s| s.parse::<u64>().ok())
             .ok_or_else(|| bad("base_shard must be a decimal u64 string"))?;
         let shards_j = j.get("shards").as_arr().ok_or_else(|| bad("shards missing"))?;
-        if shards_j.is_empty() {
+        let stores =
+            shards_j.iter().map(SketchStore::from_json).collect::<Result<Vec<_>, _>>()?;
+        ShardedStore::from_stores(base_shard, stores)
+    }
+
+    /// Assemble a set from already-restored per-shard stores — the shared
+    /// tail of the JSON and binary codecs. Validates uniform provenance
+    /// across shards and the `base_shard + i` salt layout.
+    pub(crate) fn from_stores(
+        base_shard: u64,
+        stores: Vec<SketchStore>,
+    ) -> Result<ShardedStore, ApiError> {
+        let bad = |msg: &str| ApiError::Format(format!("store-set: {msg}"));
+        if stores.is_empty() {
             return Err(bad("a store set holds at least one shard"));
         }
-        let mut shards = Vec::with_capacity(shards_j.len());
+        let mut shards = Vec::with_capacity(stores.len());
         let mut spec: Option<OpSpec> = None;
         let mut quantization = None;
-        for (i, sj) in shards_j.iter().enumerate() {
-            let store = SketchStore::from_json(sj)?;
+        for (i, store) in stores.into_iter().enumerate() {
             if store.shard() != base_shard + i as u64 {
                 return Err(bad(&format!(
                     "shard {i} carries salt {} (expected base {base_shard} + {i})",
@@ -399,14 +411,39 @@ impl ShardedStore {
         })
     }
 
+    /// A consistent point-in-time copy of every shard, taken under all
+    /// shard locks in index order and released immediately — the cheap
+    /// first half of a checkpoint. Serialization (the expensive half)
+    /// runs on the clones with **no** store lock held, so producers keep
+    /// ingesting while a checkpoint encodes and streams.
+    pub fn snapshot(&self) -> Vec<SketchStore> {
+        self.lock_all().iter().map(|g| (**g).clone()).collect()
+    }
+
+    /// Checkpoint as pretty-printed JSON (atomic write — a crash never
+    /// tears the previous checkpoint).
     pub fn to_file<P: AsRef<Path>>(&self, path: P) -> Result<(), ApiError> {
-        std::fs::write(path, self.to_json().to_pretty())?;
+        crate::util::fs::atomic_write(path, self.to_json().to_pretty().as_bytes())?;
         Ok(())
     }
 
+    /// Checkpoint as a binary CKMC container (the compact codec).
+    pub fn to_binary_file<P: AsRef<Path>>(&self, path: P) -> Result<(), ApiError> {
+        let image = crate::store::checkpoint::store_set_image(self.base_shard, &self.snapshot());
+        crate::util::fs::atomic_write(path, &image.to_bytes())?;
+        Ok(())
+    }
+
+    /// Load a checkpoint from either codec, sniffed by magic (`CKMC` =
+    /// binary container, else JSON).
     pub fn from_file<P: AsRef<Path>>(path: P) -> Result<ShardedStore, ApiError> {
-        let text = std::fs::read_to_string(path)?;
-        ShardedStore::from_json(&Json::parse(&text)?)
+        let bytes = std::fs::read(path)?;
+        if crate::util::container::is_container(&bytes) {
+            return crate::store::checkpoint::store_set_from_container(&bytes);
+        }
+        let text = std::str::from_utf8(&bytes)
+            .map_err(|_| ApiError::Format("store file is neither CKMC nor UTF-8 JSON".into()))?;
+        ShardedStore::from_json(&Json::parse(text)?)
     }
 }
 

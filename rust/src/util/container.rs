@@ -1,0 +1,582 @@
+//! CKMC: the versioned binary checkpoint container.
+//!
+//! JSON-with-hex is the debug codec; this is the production one. A
+//! container is a header, a run of immutable section payloads, and a
+//! footer that indexes them:
+//!
+//! ```text
+//! +--------+-------+===========+===========+     +-------------+---------+
+//! | "CKMC" | v:u32 | section 0 | section 1 | ... | footer body | trailer |
+//! +--------+-------+===========+===========+     +-------------+---------+
+//!   8-byte header    raw payload bytes            state + table   20 B
+//! ```
+//!
+//! - **Header** (8 B): magic `CKMC` + format version (u32 LE).
+//! - **Sections**: opaque payload bytes, written back to back starting at
+//!   offset 8. Section bytes are *never* rewritten once on disk.
+//! - **Footer body**: a document-level `state` blob (u64-length-prefixed),
+//!   then the section table — `n: u32`, then per section
+//!   `{kind: u8, tag: u64, offset: u64, len: u64, checksum: u64}` where
+//!   `checksum` is FNV-1a (64-bit) over the payload bytes. Table order is
+//!   the *logical* order (readers iterate the table, not file offsets).
+//! - **Trailer** (20 B, fixed, at EOF): `footer_len: u64`,
+//!   `footer_checksum: u64` (FNV-1a over the footer body), magic `CKMF`.
+//!
+//! The fixed-size trailer makes the footer findable from the end of the
+//! file, which is what buys **append-without-rewrite**: to add sections,
+//! truncate at the old footer, append the new payload bytes, and write a
+//! fresh footer + trailer ([`append_sections`]). Existing section bytes
+//! are untouched — the container is a natural WAL. Dropping a section is
+//! just omitting its table entry (the payload bytes become dead space
+//! until the next full rewrite); a section whose content changed is
+//! appended as a new section and its old entry dropped.
+//!
+//! Durability contract: full-image writes go through
+//! [`crate::util::fs::atomic_write`] (old-or-new, never torn). An append
+//! is *not* atomic — a crash mid-append leaves a file whose trailer or
+//! footer checksum no longer validates, which [`ContainerReader::parse`]
+//! reports as a typed error so the caller can fall back to its previous
+//! full checkpoint. Torn appends are detected, not silently absorbed.
+
+use crate::util::digest::Fnv1a;
+use crate::util::framing::{ByteReader, ByteWriter, WireError};
+use std::io::Write;
+use std::path::Path;
+
+/// Container magic (file head). `is_container` sniffs this to pick the
+/// codec on load, so it must never prefix a valid JSON document.
+pub const CONTAINER_MAGIC: [u8; 4] = *b"CKMC";
+
+/// Footer magic (last 4 bytes of the file).
+pub const FOOTER_MAGIC: [u8; 4] = *b"CKMF";
+
+/// Current format version. Readers reject anything newer with
+/// [`ContainerError::UnsupportedVersion`].
+pub const CONTAINER_VERSION: u32 = 1;
+
+/// Header length: magic + version.
+pub const HEADER_LEN: usize = 8;
+
+/// Trailer length: footer_len (u64) + footer checksum (u64) + magic.
+pub const TRAILER_LEN: usize = 20;
+
+/// Does this byte buffer look like a CKMC container (vs JSON)?
+pub fn is_container(bytes: &[u8]) -> bool {
+    bytes.len() >= 4 && bytes[..4] == CONTAINER_MAGIC
+}
+
+/// Typed container failures. Corrupt or truncated inputs always land
+/// here — never a panic, never a silently partial decode.
+#[derive(Debug)]
+pub enum ContainerError {
+    /// The file does not start with `CKMC`.
+    BadMagic([u8; 4]),
+    /// The header version is newer than this build understands.
+    UnsupportedVersion { found: u32, supported: u32 },
+    /// The file ends before a structurally required region.
+    Truncated { what: &'static str },
+    /// A checksum over `what` did not match its table/trailer entry.
+    ChecksumMismatch { what: String, expected: u64, actual: u64 },
+    /// A structurally well-formed field violated a format constraint.
+    Invalid(String),
+    /// Underlying file I/O failed.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for ContainerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ContainerError::BadMagic(m) => write!(f, "not a CKMC container (magic {m:02x?})"),
+            ContainerError::UnsupportedVersion { found, supported } => {
+                write!(f, "container version {found} (this build supports <= {supported})")
+            }
+            ContainerError::Truncated { what } => write!(f, "container truncated: {what}"),
+            ContainerError::ChecksumMismatch { what, expected, actual } => write!(
+                f,
+                "container checksum mismatch on {what}: expected {expected:016x}, got {actual:016x}"
+            ),
+            ContainerError::Invalid(msg) => write!(f, "invalid container: {msg}"),
+            ContainerError::Io(e) => write!(f, "container io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ContainerError {}
+
+impl From<std::io::Error> for ContainerError {
+    fn from(e: std::io::Error) -> ContainerError {
+        ContainerError::Io(e)
+    }
+}
+
+impl From<WireError> for ContainerError {
+    fn from(e: WireError) -> ContainerError {
+        match e {
+            WireError::Truncated => ContainerError::Truncated { what: "footer field" },
+            WireError::Invalid(msg) => ContainerError::Invalid(msg),
+        }
+    }
+}
+
+/// One section table entry: where a payload lives and what it claims to be.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SectionEntry {
+    /// Document-defined discriminant (see `store::checkpoint` for kinds).
+    pub kind: u8,
+    /// Document-defined identity (e.g. the epoch id) — lets an appender
+    /// match table entries against live state without decoding payloads.
+    pub tag: u64,
+    /// Absolute file offset of the payload's first byte.
+    pub offset: u64,
+    /// Payload length in bytes.
+    pub len: u64,
+    /// FNV-1a (64-bit) over the payload bytes.
+    pub checksum: u64,
+}
+
+/// An in-memory container being assembled: the state blob plus sections
+/// in logical order. Serialize with [`ContainerImage::to_bytes`] (or
+/// stream with [`ContainerImage::write_to`] — identical bytes).
+#[derive(Clone, Debug, Default)]
+pub struct ContainerImage {
+    /// Document-level state blob stored in the footer (small; rewritten on
+    /// every append — epoch counters and the like belong here, payloads
+    /// do not).
+    pub state: Vec<u8>,
+    /// `(kind, tag, payload)` in logical order.
+    pub sections: Vec<(u8, u64, Vec<u8>)>,
+}
+
+impl ContainerImage {
+    pub fn new(state: Vec<u8>) -> ContainerImage {
+        ContainerImage { state, sections: Vec::new() }
+    }
+
+    pub fn push_section(&mut self, kind: u8, tag: u64, payload: Vec<u8>) {
+        self.sections.push((kind, tag, payload));
+    }
+
+    /// The footer body: state blob + section table for the given entries.
+    fn footer_body(state: &[u8], entries: &[SectionEntry]) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.bytes(state);
+        w.u32(entries.len() as u32);
+        for e in entries {
+            w.u8(e.kind);
+            w.u64(e.tag);
+            w.u64(e.offset);
+            w.u64(e.len);
+            w.u64(e.checksum);
+        }
+        w.into_vec()
+    }
+
+    fn entries(&self) -> Vec<SectionEntry> {
+        let mut offset = HEADER_LEN as u64;
+        self.sections
+            .iter()
+            .map(|(kind, tag, payload)| {
+                let e = SectionEntry {
+                    kind: *kind,
+                    tag: *tag,
+                    offset,
+                    len: payload.len() as u64,
+                    checksum: Fnv1a::hash(payload),
+                };
+                offset += payload.len() as u64;
+                e
+            })
+            .collect()
+    }
+
+    /// Exact serialized size in bytes (header + payloads + footer +
+    /// trailer) — known before any byte is produced, so a streamer can
+    /// announce the total length up front.
+    pub fn total_len(&self) -> u64 {
+        let payloads: u64 = self.sections.iter().map(|(_, _, p)| p.len() as u64).sum();
+        // footer body: state (8 + len) + n (4) + 33 per entry
+        let footer = 8 + self.state.len() as u64 + 4 + 33 * self.sections.len() as u64;
+        HEADER_LEN as u64 + payloads + footer + TRAILER_LEN as u64
+    }
+
+    /// Stream the container to `w` section by section — the writer never
+    /// holds more than one section's payload beyond what it already owns.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
+        w.write_all(&CONTAINER_MAGIC)?;
+        w.write_all(&CONTAINER_VERSION.to_le_bytes())?;
+        for (_, _, payload) in &self.sections {
+            w.write_all(payload)?;
+        }
+        let footer = Self::footer_body(&self.state, &self.entries());
+        w.write_all(&footer)?;
+        w.write_all(&(footer.len() as u64).to_le_bytes())?;
+        w.write_all(&Fnv1a::hash(&footer).to_le_bytes())?;
+        w.write_all(&FOOTER_MAGIC)?;
+        Ok(())
+    }
+
+    /// Serialize to a byte vector (see [`ContainerImage::write_to`]).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(self.total_len() as usize);
+        self.write_to(&mut buf).expect("Vec write cannot fail");
+        debug_assert_eq!(buf.len() as u64, self.total_len());
+        buf
+    }
+}
+
+/// A parsed (but lazily verified) container over a byte buffer. `parse`
+/// validates the header, trailer, and footer checksum; each section's
+/// payload checksum is verified when the section is read.
+#[derive(Debug)]
+pub struct ContainerReader<'a> {
+    bytes: &'a [u8],
+    version: u32,
+    state: Vec<u8>,
+    entries: Vec<SectionEntry>,
+    /// File offset where the footer body starts (= where appended
+    /// sections would go).
+    footer_start: u64,
+}
+
+impl<'a> ContainerReader<'a> {
+    pub fn parse(bytes: &'a [u8]) -> Result<ContainerReader<'a>, ContainerError> {
+        if bytes.len() < 4 {
+            return Err(ContainerError::Truncated { what: "header magic" });
+        }
+        if bytes[..4] != CONTAINER_MAGIC {
+            return Err(ContainerError::BadMagic([bytes[0], bytes[1], bytes[2], bytes[3]]));
+        }
+        if bytes.len() < HEADER_LEN {
+            return Err(ContainerError::Truncated { what: "header version" });
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().expect("4 bytes"));
+        if version == 0 || version > CONTAINER_VERSION {
+            return Err(ContainerError::UnsupportedVersion {
+                found: version,
+                supported: CONTAINER_VERSION,
+            });
+        }
+        if bytes.len() < HEADER_LEN + TRAILER_LEN {
+            return Err(ContainerError::Truncated { what: "trailer" });
+        }
+        let trailer = &bytes[bytes.len() - TRAILER_LEN..];
+        if trailer[16..20] != FOOTER_MAGIC {
+            return Err(ContainerError::Truncated { what: "footer magic (torn append?)" });
+        }
+        let footer_len = u64::from_le_bytes(trailer[0..8].try_into().expect("8 bytes"));
+        let footer_checksum = u64::from_le_bytes(trailer[8..16].try_into().expect("8 bytes"));
+        let body_end = bytes.len() - TRAILER_LEN;
+        let footer_start = (body_end as u64)
+            .checked_sub(footer_len)
+            .filter(|&s| s >= HEADER_LEN as u64)
+            .ok_or(ContainerError::Truncated { what: "footer (declared length too large)" })?;
+        let footer = &bytes[footer_start as usize..body_end];
+        let actual = Fnv1a::hash(footer);
+        if actual != footer_checksum {
+            return Err(ContainerError::ChecksumMismatch {
+                what: "footer".to_string(),
+                expected: footer_checksum,
+                actual,
+            });
+        }
+        let mut r = ByteReader::new(footer);
+        let state = r.bytes()?;
+        let n = r.u32()? as usize;
+        let mut entries = Vec::with_capacity(n.min(1 << 16));
+        for i in 0..n {
+            let e = SectionEntry {
+                kind: r.u8()?,
+                tag: r.u64()?,
+                offset: r.u64()?,
+                len: r.u64()?,
+                checksum: r.u64()?,
+            };
+            let end = e.offset.checked_add(e.len).ok_or_else(|| {
+                ContainerError::Invalid(format!("section {i}: offset+len overflows"))
+            })?;
+            if e.offset < HEADER_LEN as u64 || end > footer_start {
+                return Err(ContainerError::Invalid(format!(
+                    "section {i}: byte range {}..{end} outside payload region {}..{footer_start}",
+                    e.offset, HEADER_LEN,
+                )));
+            }
+            entries.push(e);
+        }
+        r.finish()?;
+        Ok(ContainerReader { bytes, version, state, entries, footer_start })
+    }
+
+    pub fn version(&self) -> u32 {
+        self.version
+    }
+
+    pub fn state(&self) -> &[u8] {
+        &self.state
+    }
+
+    pub fn entries(&self) -> &[SectionEntry] {
+        &self.entries
+    }
+
+    /// File offset where appended sections would begin (the footer start).
+    pub fn append_offset(&self) -> u64 {
+        self.footer_start
+    }
+
+    /// The payload of table entry `i`, checksum-verified.
+    pub fn section(&self, i: usize) -> Result<&'a [u8], ContainerError> {
+        let e = self
+            .entries
+            .get(i)
+            .ok_or_else(|| ContainerError::Invalid(format!("no section {i}")))?;
+        let payload = &self.bytes[e.offset as usize..(e.offset + e.len) as usize];
+        let actual = Fnv1a::hash(payload);
+        if actual != e.checksum {
+            return Err(ContainerError::ChecksumMismatch {
+                what: format!("section {i} (kind {}, tag {})", e.kind, e.tag),
+                expected: e.checksum,
+                actual,
+            });
+        }
+        Ok(payload)
+    }
+
+    /// Verify every section checksum (a full-file integrity sweep).
+    pub fn verify_all(&self) -> Result<(), ContainerError> {
+        for i in 0..self.entries.len() {
+            self.section(i)?;
+        }
+        Ok(())
+    }
+}
+
+/// Append sections to an existing container file **without rewriting any
+/// existing payload bytes**: the file is truncated at its footer, `new`
+/// payloads are appended, and a fresh footer + trailer is written indexing
+/// `kept` (entries carried over from the old table, in logical order
+/// relative to `new`) plus the new sections.
+///
+/// `kept` entries must come verbatim from the file's current table
+/// ([`ContainerReader::entries`]); any old entry *not* listed is dropped
+/// (its payload bytes become dead space). The new table lists `kept`
+/// first, then `new`, and table order is the logical order readers see —
+/// the store codec keeps epochs table-ordered regardless of where their
+/// bytes sit in the file.
+///
+/// Crash semantics: not atomic. A crash mid-append leaves a torn tail that
+/// `parse` rejects with a typed error; the caller's recovery is its last
+/// full checkpoint. On success the file is fsynced before returning.
+pub fn append_sections<P: AsRef<Path>>(
+    path: P,
+    state: &[u8],
+    kept: &[SectionEntry],
+    new: &[(u8, u64, Vec<u8>)],
+) -> Result<(), ContainerError> {
+    use std::io::{Seek, SeekFrom};
+    let bytes = std::fs::read(&path)?;
+    let reader = ContainerReader::parse(&bytes)?;
+    let old_entries = reader.entries();
+    for (i, k) in kept.iter().enumerate() {
+        if !old_entries.contains(k) {
+            return Err(ContainerError::Invalid(format!(
+                "kept entry {i} (kind {}, tag {}) is not in the existing table",
+                k.kind, k.tag
+            )));
+        }
+    }
+    let append_at = reader.append_offset();
+    drop(reader);
+
+    let mut table: Vec<SectionEntry> = kept.to_vec();
+    let mut offset = append_at;
+    let mut tail = Vec::new();
+    for (kind, tag, payload) in new {
+        table.push(SectionEntry {
+            kind: *kind,
+            tag: *tag,
+            offset,
+            len: payload.len() as u64,
+            checksum: Fnv1a::hash(payload),
+        });
+        tail.extend_from_slice(payload);
+        offset += payload.len() as u64;
+    }
+    let footer = ContainerImage::footer_body(state, &table);
+    tail.extend_from_slice(&footer);
+    tail.extend_from_slice(&(footer.len() as u64).to_le_bytes());
+    tail.extend_from_slice(&Fnv1a::hash(&footer).to_le_bytes());
+    tail.extend_from_slice(&FOOTER_MAGIC);
+
+    let mut f = std::fs::OpenOptions::new().write(true).open(&path)?;
+    f.set_len(append_at)?;
+    f.seek(SeekFrom::Start(append_at))?;
+    f.write_all(&tail)?;
+    f.sync_all()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn image() -> ContainerImage {
+        let mut img = ContainerImage::new(b"state-blob".to_vec());
+        img.push_section(1, 0, b"meta payload".to_vec());
+        img.push_section(2, 7, vec![0xAA; 100]);
+        img.push_section(3, 8, vec![0x55; 33]);
+        img
+    }
+
+    #[test]
+    fn roundtrip_and_total_len() {
+        let img = image();
+        let bytes = img.to_bytes();
+        assert_eq!(bytes.len() as u64, img.total_len());
+        assert!(is_container(&bytes));
+        let r = ContainerReader::parse(&bytes).unwrap();
+        assert_eq!(r.version(), CONTAINER_VERSION);
+        assert_eq!(r.state(), b"state-blob");
+        assert_eq!(r.entries().len(), 3);
+        assert_eq!(r.section(0).unwrap(), b"meta payload");
+        assert_eq!(r.section(1).unwrap(), &[0xAA; 100][..]);
+        assert_eq!(r.section(2).unwrap(), &[0x55; 33][..]);
+        assert_eq!(r.entries()[1].tag, 7);
+        r.verify_all().unwrap();
+    }
+
+    #[test]
+    fn empty_container_parses() {
+        let img = ContainerImage::new(Vec::new());
+        let bytes = img.to_bytes();
+        let r = ContainerReader::parse(&bytes).unwrap();
+        assert!(r.entries().is_empty());
+        assert!(r.state().is_empty());
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let mut bytes = image().to_bytes();
+        bytes[0] = b'X';
+        assert!(matches!(ContainerReader::parse(&bytes), Err(ContainerError::BadMagic(_))));
+        assert!(!is_container(&bytes));
+        // JSON never sniffs as a container.
+        assert!(!is_container(b"{\"format\": \"ckm-store\"}"));
+    }
+
+    #[test]
+    fn future_version_is_typed() {
+        let mut bytes = image().to_bytes();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        assert!(matches!(
+            ContainerReader::parse(&bytes),
+            Err(ContainerError::UnsupportedVersion { found: 99, supported: CONTAINER_VERSION })
+        ));
+    }
+
+    #[test]
+    fn every_truncation_is_typed_never_panics() {
+        let bytes = image().to_bytes();
+        for cut in 0..bytes.len() {
+            let r = ContainerReader::parse(&bytes[..cut]);
+            assert!(r.is_err(), "cut at {cut} parsed");
+        }
+    }
+
+    #[test]
+    fn corrupt_section_detected_on_access() {
+        let img = image();
+        let mut bytes = img.to_bytes();
+        // Flip one bit inside section 1's payload.
+        let r = ContainerReader::parse(&bytes).unwrap();
+        let off = r.entries()[1].offset as usize;
+        drop(r);
+        bytes[off + 10] ^= 1;
+        let r = ContainerReader::parse(&bytes).unwrap(); // footer still fine
+        assert!(r.section(0).is_ok());
+        assert!(matches!(r.section(1), Err(ContainerError::ChecksumMismatch { .. })));
+        assert!(matches!(r.verify_all(), Err(ContainerError::ChecksumMismatch { .. })));
+    }
+
+    #[test]
+    fn corrupt_footer_detected_at_parse() {
+        let mut bytes = image().to_bytes();
+        let n = bytes.len();
+        bytes[n - TRAILER_LEN - 3] ^= 1; // inside the footer body
+        assert!(matches!(
+            ContainerReader::parse(&bytes),
+            Err(ContainerError::ChecksumMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn lying_footer_len_is_typed() {
+        let mut bytes = image().to_bytes();
+        let n = bytes.len();
+        bytes[n - TRAILER_LEN..n - TRAILER_LEN + 8]
+            .copy_from_slice(&(u64::MAX / 2).to_le_bytes());
+        assert!(matches!(ContainerReader::parse(&bytes), Err(ContainerError::Truncated { .. })));
+    }
+
+    #[test]
+    fn append_preserves_existing_bytes() {
+        let dir = std::env::temp_dir().join(format!("ckm_container_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("append.ckmc");
+        let img = image();
+        crate::util::fs::atomic_write(&path, &img.to_bytes()).unwrap();
+
+        let before = std::fs::read(&path).unwrap();
+        let reader_entries = {
+            let r = ContainerReader::parse(&before).unwrap();
+            r.entries().to_vec()
+        };
+        let frozen = reader_entries[..2].to_vec(); // drop entry 2, keep 0 and 1
+        append_sections(&path, b"state-v2", &frozen, &[(3, 9, vec![0x0F; 40])]).unwrap();
+
+        let after = std::fs::read(&path).unwrap();
+        let r = ContainerReader::parse(&after).unwrap();
+        assert_eq!(r.state(), b"state-v2");
+        assert_eq!(r.entries().len(), 3);
+        // Kept entries are verbatim; the new one sits past the old footer.
+        assert_eq!(&r.entries()[..2], &frozen[..]);
+        assert_eq!(r.section(2).unwrap(), &[0x0F; 40][..]);
+        r.verify_all().unwrap();
+        // The pinned guarantee: no byte below the old footer changed
+        // (dropped entry 2's payload bytes are still there, just dead).
+        let old_footer_start = {
+            let r0 = ContainerReader::parse(&before).unwrap();
+            r0.append_offset() as usize
+        };
+        assert_eq!(&after[..old_footer_start], &before[..old_footer_start]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_append_is_detected() {
+        let dir = std::env::temp_dir().join(format!("ckm_container_torn_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("torn.ckmc");
+        let img = image();
+        crate::util::fs::atomic_write(&path, &img.to_bytes()).unwrap();
+        append_sections(&path, b"s2", &[], &[(2, 42, vec![1, 2, 3, 4])]).unwrap();
+        // Simulate the crash: chop bytes off the appended tail.
+        let full = std::fs::read(&path).unwrap();
+        for cut in [full.len() - 1, full.len() - TRAILER_LEN, full.len() - TRAILER_LEN - 5] {
+            assert!(ContainerReader::parse(&full[..cut]).is_err(), "cut {cut} parsed");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn append_rejects_foreign_kept_entry() {
+        let dir = std::env::temp_dir().join(format!("ckm_container_kept_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("kept.ckmc");
+        crate::util::fs::atomic_write(&path, &image().to_bytes()).unwrap();
+        let bogus =
+            SectionEntry { kind: 2, tag: 99, offset: 8, len: 4, checksum: 0xdead_beef };
+        let r = append_sections(&path, b"s", &[bogus], &[]);
+        assert!(matches!(r, Err(ContainerError::Invalid(_))));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,135 @@
+//! Crash-safe file persistence.
+//!
+//! Every checkpoint and artifact writer in the crate goes through
+//! [`atomic_write`]: the bytes land in a temporary file in the *same
+//! directory* as the destination, are fsynced, and only then renamed over
+//! the target. A crash at any point leaves either the previous complete
+//! file or the new complete file on disk — never a torn half-checkpoint
+//! that a restarting daemon would refuse to load.
+
+use std::fs::{File, OpenOptions};
+use std::io::{self, Write};
+use std::path::Path;
+
+/// Atomically replace `path` with `bytes`.
+///
+/// Write-temp → fsync → rename, with the temp file created in the
+/// destination's directory so the final rename never crosses a filesystem
+/// boundary (cross-device renames are not atomic). The directory itself is
+/// fsynced best-effort afterwards so the rename survives a power cut on
+/// filesystems that require it.
+///
+/// The temp name is keyed by pid + address-derived nonce, so concurrent
+/// writers in one process (or across processes) never collide on the
+/// scratch file; last rename wins on the destination, which is the same
+/// guarantee `std::fs::write` gave, minus the torn-file failure mode.
+pub fn atomic_write<P: AsRef<Path>>(path: P, bytes: &[u8]) -> io::Result<()> {
+    let path = path.as_ref();
+    let dir = match path.parent() {
+        Some(d) if !d.as_os_str().is_empty() => d.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!("atomic_write: '{}' has no file name", path.display()),
+            )
+        })?
+        .to_os_string();
+
+    // Unique-enough scratch name: pid disambiguates processes, the stack
+    // address of `bytes` disambiguates threads within one process.
+    let nonce = bytes.as_ptr() as usize as u64 ^ (bytes.len() as u64).rotate_left(32);
+    let tmp_name = format!(
+        ".{}.tmp-{}-{:x}",
+        file_name.to_string_lossy(),
+        std::process::id(),
+        nonce
+    );
+    let tmp_path = dir.join(&tmp_name);
+
+    let result = (|| -> io::Result<()> {
+        let mut f = OpenOptions::new()
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(&tmp_path)?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+        drop(f);
+        std::fs::rename(&tmp_path, path)?;
+        // Persist the rename itself. Failure here is ignored: the data is
+        // already durable in the file, and some platforms/filesystems
+        // refuse to open or fsync directories.
+        if let Ok(d) = File::open(&dir) {
+            let _ = d.sync_all();
+        }
+        Ok(())
+    })();
+
+    if result.is_err() {
+        let _ = std::fs::remove_file(&tmp_path);
+    }
+    result
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ckm_fs_{}_{}", tag, std::process::id()))
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let path = temp_path("basic");
+        atomic_write(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        atomic_write(&path, b"second, longer payload").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer payload");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn bare_filename_resolves_to_cwd() {
+        // `path.parent()` is Some("") for a bare name; the helper must not
+        // try to create a temp file under an empty directory path.
+        let name = format!("ckm_fs_bare_{}.tmp", std::process::id());
+        atomic_write(&name, b"cwd").unwrap();
+        assert_eq!(std::fs::read(&name).unwrap(), b"cwd");
+        std::fs::remove_file(&name).unwrap();
+    }
+
+    #[test]
+    fn no_temp_litter_on_success() {
+        let dir = temp_path("litter_dir");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.bin");
+        atomic_write(&path, &[7u8; 1024]).unwrap();
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["out.bin".to_string()], "scratch file left behind: {names:?}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn simulated_partial_write_keeps_previous_file() {
+        // A crashed writer is simulated by a stray temp file containing
+        // garbage: the destination must still hold the old complete
+        // payload, and a subsequent atomic_write must succeed over it.
+        let dir = temp_path("partial_dir");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.json");
+        atomic_write(&path, b"{\"v\":1}").unwrap();
+        std::fs::write(dir.join(".ckpt.json.tmp-dead-beef"), b"{\"v\":2, TRUNC").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"v\":1}", "destination was torn");
+        atomic_write(&path, b"{\"v\":3}").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"{\"v\":3}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

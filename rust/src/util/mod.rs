@@ -4,9 +4,11 @@
 //! §3 for the substitution table.
 
 pub mod cli;
+pub mod container;
 pub mod digest;
 pub mod fastmath;
 pub mod framing;
+pub mod fs;
 pub mod json;
 pub mod logging;
 pub mod parallel;

@@ -259,6 +259,76 @@ fn corrupted_checkpoint_stream_is_rejected() {
     server.join().unwrap().unwrap();
 }
 
+/// The checkpoint verb snapshots under the shard locks (N clones) and
+/// encodes + streams on the clones with no lock held — so a producer on a
+/// second connection keeps ingesting while a checkpoint transfer is in
+/// flight (even one whose receiver has not drained a single frame). Also
+/// pins that the stream now carries the binary CKMC container.
+#[test]
+fn checkpoint_streaming_does_not_block_ingest() {
+    // Dense with a few thousand frequencies: each epoch section is tens of
+    // KB, so the stream spans multiple chunks and fills socket buffers.
+    let ckm = Ckm::builder().frequencies(2048).sigma2(1.0).seed(11).build().unwrap();
+    let (addr, server) = spawn_daemon(&ckm, 2);
+    let mut producer = ServiceClient::connect_tcp(&addr, "producer-a").unwrap();
+    let mut rng = Rng::new(13);
+    let mut rows = vec![0.0; 400 * N_DIMS];
+    rng.fill_normal(&mut rows);
+    producer.ingest(&rows).unwrap();
+    for _ in 0..4 {
+        producer.rotate().unwrap();
+        producer.ingest(&rows).unwrap();
+    }
+
+    // Start a checkpoint but do NOT read any frame yet: the daemon is now
+    // mid-stream (or blocked writing into our socket buffer).
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    write_frame(&mut raw, &protocol::encode_request(&Request::Hello { producer: "slow".into() }))
+        .unwrap();
+    let ack = read_frame(&mut raw).unwrap().unwrap();
+    assert!(matches!(protocol::decode_response(&ack).unwrap(), Response::HelloAck(_)));
+    write_frame(&mut raw, &protocol::encode_request(&Request::Checkpoint)).unwrap();
+    thread::sleep(Duration::from_millis(100));
+
+    // A second connection must ingest while that transfer is pending.
+    let start = Instant::now();
+    let receipt = producer.ingest(&rows).unwrap();
+    assert_eq!(receipt.rows, 400);
+    assert!(
+        start.elapsed() < Duration::from_secs(5),
+        "ingest stalled behind an undrained checkpoint ({:?})",
+        start.elapsed()
+    );
+
+    // Now drain the checkpoint: digest-verified, and binary (CKMC).
+    let mut assembler = CheckpointAssembler::new();
+    let (bytes, _digest) = loop {
+        let payload = read_frame(&mut raw).unwrap().expect("stream closed mid-checkpoint");
+        let resp = protocol::decode_response(&payload).unwrap();
+        let done = matches!(resp, Response::CheckpointEnd { .. });
+        assembler.feed(resp).unwrap();
+        if done {
+            break assembler.finish().unwrap();
+        }
+    };
+    drop(raw);
+    assert!(ckm::util::container::is_container(&bytes), "checkpoint is not a CKMC container");
+
+    // The container restores to a consistent store-set cut.
+    let dir = std::env::temp_dir().join(format!("ckm_service_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("live.ckmc");
+    std::fs::write(&path, &bytes).unwrap();
+    let restored = ShardedStore::from_file(&path).unwrap();
+    assert_eq!(restored.n_shards(), 2);
+    let (win, _) = restored.merged_window(None).unwrap();
+    assert!(win.count >= 5 * 400, "snapshot lost pre-checkpoint rows: {}", win.count);
+
+    producer.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[cfg(unix)]
 #[test]
 fn unix_socket_handshake_and_ingest() {

@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Regenerate the golden CKMC container fixtures under rust/tests/fixtures/.
+
+These files pin the *container envelope* byte layout (magic, version,
+section table, FNV-1a checksums, footer + trailer, and the append-without-
+rewrite tail format) independently of the Rust implementation, so an
+accidental format change breaks `rust/tests/container_fixtures.rs` loudly.
+
+The payload bytes are deterministic synthetic patterns, not real sketch
+artifacts: document-level decoding re-derives and verifies the sketching
+operator's checksum, which only the Rust library can produce. Document
+roundtrips are covered by unit tests in rust/src/store/checkpoint.rs; the
+fixtures cover the layer below.
+
+Must be byte-for-byte in sync with rust/src/util/container.rs and the
+expectations hard-coded in rust/tests/container_fixtures.rs.
+"""
+
+import os
+import struct
+
+CONTAINER_MAGIC = b"CKMC"
+FOOTER_MAGIC = b"CKMF"
+VERSION = 1
+
+FNV_OFFSET = 0xCBF29CE484222325
+FNV_PRIME = 0x100000001B3
+MASK64 = (1 << 64) - 1
+
+
+def fnv1a(data: bytes) -> int:
+    h = FNV_OFFSET
+    for b in data:
+        h = ((h ^ b) * FNV_PRIME) & MASK64
+    return h
+
+
+def pattern(n: int, mul: int, mod: int) -> bytes:
+    return bytes((mul * i) % mod for i in range(n))
+
+
+def footer_body(state: bytes, entries) -> bytes:
+    out = struct.pack("<Q", len(state)) + state
+    out += struct.pack("<I", len(entries))
+    for kind, tag, offset, length, checksum in entries:
+        out += struct.pack("<BQQQQ", kind, tag, offset, length, checksum)
+    return out
+
+
+def container(state: bytes, sections) -> bytes:
+    """sections: list of (kind, tag, payload)."""
+    body = CONTAINER_MAGIC + struct.pack("<I", VERSION)
+    entries = []
+    for kind, tag, payload in sections:
+        entries.append((kind, tag, len(body), len(payload), fnv1a(payload)))
+        body += payload
+    footer = footer_body(state, entries)
+    body += footer
+    body += struct.pack("<QQ", len(footer), fnv1a(footer))
+    body += FOOTER_MAGIC
+    return body
+
+
+def parse_entries(blob: bytes):
+    """Minimal reader: footer entries + the footer start offset."""
+    footer_len, footer_fnv = struct.unpack("<QQ", blob[-20:-4])
+    assert blob[-4:] == FOOTER_MAGIC
+    footer_start = len(blob) - 20 - footer_len
+    footer = blob[footer_start : len(blob) - 20]
+    assert fnv1a(footer) == footer_fnv
+    state_len = struct.unpack("<Q", footer[:8])[0]
+    pos = 8 + state_len
+    n = struct.unpack("<I", footer[pos : pos + 4])[0]
+    pos += 4
+    entries = []
+    for _ in range(n):
+        entries.append(struct.unpack("<BQQQQ", footer[pos : pos + 33]))
+        pos += 33
+    return entries, footer_start
+
+
+def append(blob: bytes, state: bytes, new_sections) -> bytes:
+    """Mirror util::container::append_sections: truncate at the footer,
+    append the new payloads, rewrite footer + trailer keeping every old
+    entry. Existing payload bytes are never touched."""
+    entries, footer_start = parse_entries(blob)
+    body = blob[:footer_start]
+    table = list(entries)
+    for kind, tag, payload in new_sections:
+        table.append((kind, tag, len(body), len(payload), fnv1a(payload)))
+        body += payload
+    footer = footer_body(state, table)
+    body += footer
+    body += struct.pack("<QQ", len(footer), fnv1a(footer))
+    body += FOOTER_MAGIC
+    return body
+
+
+def main():
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "rust", "tests", "fixtures")
+    os.makedirs(out_dir, exist_ok=True)
+
+    # Section kinds as in api::artifact::binary: 1 = meta,
+    # 2 = dense epoch, 3 = quantized epoch.
+    dense = container(
+        b"dense-state-v1",
+        [
+            (1, 0, b"meta:dense"),
+            (2, 1, pattern(64, 1, 251)),
+            (2, 2, pattern(48, 3, 253)),
+        ],
+    )
+    quant = container(
+        b"quant-state-v1",
+        [
+            (1, 0, b"meta:quant"),
+            (3, 1, pattern(80, 5, 241)),
+            (3, 2, pattern(56, 7, 239)),
+        ],
+    )
+    # A rotated epoch appended to the dense container: the WAL shape the
+    # ckmd daemon writes on restart checkpoints.
+    appended = append(dense, b"dense-state-v2", [(2, 3, pattern(32, 11, 233))])
+
+    for name, blob in [
+        ("dense.ckmc", dense),
+        ("quant.ckmc", quant),
+        ("appended.ckmc", appended),
+    ]:
+        path = os.path.join(out_dir, name)
+        with open(path, "wb") as f:
+            f.write(blob)
+        print(f"{name}: {len(blob)} bytes, fnv1a {fnv1a(blob):016x}")
+
+
+if __name__ == "__main__":
+    main()
