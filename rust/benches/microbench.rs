@@ -1,8 +1,9 @@
 //! Microbenchmarks of the hot paths, before/after the batched kernel layer:
 //! native + PJRT sketch throughput, CLOMPR fit_weights / step-1 / step-5
-//! (scalar oracle vs GEMM-backed batched), Lloyd assignment (dist2 sweep vs
-//! GEMM formulation), NNLS, and the windowed store (ingest rows/s, window
-//! and decayed snapshot latency, dense vs 1-bit). Emits machine-readable
+//! (scalar oracle vs GEMM-backed batched), full decoder latency (CLOMPR vs
+//! sketch-and-shift through the `Decoder` trait), Lloyd assignment (dist2
+//! sweep vs GEMM formulation), NNLS, and the windowed store (ingest rows/s,
+//! window and decayed snapshot latency, dense vs 1-bit). Emits machine-readable
 //! `BENCH.json` so the perf trajectory is tracked across PRs.
 //!
 //! Flags: `--quick` (smoke mode: smaller N, fewer samples — the CI setting),
@@ -209,6 +210,37 @@ fn main() {
     });
     report.add("step5_value_grads", "batched", &solver_size, &s5_batched);
     report.speedup("step5_value_grads", &s5_scalar, &s5_batched);
+
+    // -- Decoder layer: full decode latency per registered decoder --------
+    // The whole trait-object path the facade and daemon pay per solve —
+    // CLOMPR's greedy support growth vs sketch-and-shift's pooled mode
+    // seeks — at paper shape (n=10, K=10, m=1000) on the native engine.
+    {
+        use ckm::ckm::CkmOptions;
+        use ckm::decoder::{DecodeInput, DecoderSpec};
+        let mut bounds = ckm::data::dataset::Bounds::empty(n_dims);
+        for row in pts.chunks_exact(n_dims) {
+            bounds.update(row);
+        }
+        let opts = CkmOptions { seed: 5, ..CkmOptions::default() };
+        let engine = ckm::engine::NativeEngine::with_options(
+            op.clone(),
+            opts.step1.clone(),
+            opts.step5.clone(),
+        );
+        let input = DecodeInput { z: &z, bounds: &bounds, data: None };
+        let dec_size = format!("n={n_dims} K={kk} m={m}");
+        for (name, spec) in
+            [("decode_clompr", DecoderSpec::Clompr), ("decode_sketch_shift", DecoderSpec::SketchShift)]
+        {
+            let dec = spec.instantiate();
+            let meas = measure(name, warm, samp, || {
+                let sol = dec.decode(&input, kk, &engine, &opts);
+                std::hint::black_box(sol.cost);
+            });
+            report.add(name, "native", &dec_size, &meas);
+        }
+    }
 
     // -- Lloyd assignment: dist2 sweep (the seed) vs GEMM formulation ----
     let centroids = lloyd::seed(pts, n_dims, kk, lloyd::KmInit::Sample, &mut rng);

@@ -15,13 +15,14 @@
 use super::artifact::{OpSpec, SketchArtifact};
 use super::ApiError;
 use crate::ckm::optim::OptimOptions;
-use crate::ckm::{solve_with_engine, CkmOptions, InitStrategy, Solution};
+use crate::ckm::{CkmOptions, InitStrategy, Solution};
 use crate::coordinator::sketcher::{
     distributed_sketch, distributed_sketch_quantized, SketchStats, SketcherConfig,
 };
 use crate::coordinator::state::ReplicateManager;
 use crate::coordinator::Backend;
 use crate::data::dataset::{PointSource, SliceSource};
+use crate::decoder::{DecodeInput, DecoderSpec};
 use crate::engine::{
     CkmEngine, EngineFactory, NativeEngine, NativeFactory, PjrtEngine, PjrtFactory,
 };
@@ -74,6 +75,10 @@ pub struct CkmConfig {
     /// Default decay λ for [`crate::store::SketchServer::solve`] (`None` =
     /// undecayed window over every surviving epoch).
     pub decay: Option<f64>,
+    /// Which decoder recovers centroids from the sketch (default: CLOMPR).
+    /// See [`crate::decoder`] for the registry; stamped into every
+    /// [`Solution`] as provenance and part of every solve-cache key.
+    pub decoder: DecoderSpec,
     /// Independent solver replicates; best sketch cost wins (paper §4.4).
     pub replicates: usize,
     /// Step-1 ascent initialization strategy.
@@ -105,6 +110,7 @@ impl Default for CkmConfig {
             window_epochs: None,
             compaction: crate::store::CompactionPolicy::None,
             decay: None,
+            decoder: DecoderSpec::Clompr,
             replicates: 1,
             strategy: InitStrategy::Range,
             seed: 0,
@@ -250,6 +256,14 @@ impl CkmBuilder {
     /// Set or clear the default decay (convenience for plumbing).
     pub fn decay_opt(mut self, lambda: Option<f64>) -> Self {
         self.cfg.decay = lambda;
+        self
+    }
+
+    /// Decoder recovering centroids from the sketch (default: CLOMPR).
+    /// `DecoderSpec::SketchShift` is the robust small-sketch choice; see
+    /// [`crate::decoder`] for the registry and trade-offs.
+    pub fn decoder(mut self, decoder: DecoderSpec) -> Self {
+        self.cfg.decoder = decoder;
         self
     }
 
@@ -580,14 +594,37 @@ impl Ckm {
         self.solve_detailed(artifact, k, Some(data)).map(|r| r.solution)
     }
 
+    /// Solve with an explicit decoder, overriding the builder's
+    /// `.decoder(..)` for this request only — the per-request path the
+    /// in-process server and the `ckmd` daemon route wire-selected
+    /// decoders through. Pure sketch decoding (no data access).
+    pub fn solve_with_decoder(
+        &self,
+        artifact: &SketchArtifact,
+        k: usize,
+        decoder: DecoderSpec,
+    ) -> Result<Solution, ApiError> {
+        self.solve_report(artifact, k, None, decoder).map(|r| r.solution)
+    }
+
     /// Full solve: re-derives and verifies the operator from the
-    /// artifact's provenance, runs `replicates` independent CLOMPR decodes
-    /// and keeps the best by sketch cost.
+    /// artifact's provenance, runs `replicates` independent decodes with
+    /// the configured decoder and keeps the best by sketch cost.
     pub fn solve_detailed(
         &self,
         artifact: &SketchArtifact,
         k: usize,
         data: Option<(&[f64], usize)>,
+    ) -> Result<SolveReport, ApiError> {
+        self.solve_report(artifact, k, data, self.cfg.decoder)
+    }
+
+    fn solve_report(
+        &self,
+        artifact: &SketchArtifact,
+        k: usize,
+        data: Option<(&[f64], usize)>,
+        decoder: DecoderSpec,
     ) -> Result<SolveReport, ApiError> {
         if k == 0 {
             return Err(ApiError::InvalidConfig {
@@ -643,6 +680,8 @@ impl Ckm {
             }
         };
         let z = artifact.z();
+        let dec = decoder.instantiate();
+        let input = DecodeInput { z: &z, bounds: &artifact.bounds, data };
         let mut rm = ReplicateManager::new();
         let mut rep_rng = Rng::new(self.cfg.seed ^ 0x5EED);
         for _ in 0..self.cfg.replicates.max(1) {
@@ -653,7 +692,7 @@ impl Ckm {
                 replicates: 1,
                 seed: rep_rng.next_u64(),
             };
-            rm.offer(solve_with_engine(&z, engine.as_ref(), &artifact.bounds, k, data, &opts));
+            rm.offer(dec.decode(&input, k, engine.as_ref(), &opts));
         }
         let replicate_costs = rm.costs.clone();
         let solution = rm.into_best().expect("at least one replicate ran");
@@ -714,6 +753,7 @@ mod tests {
         assert_eq!(cfg.backend, Backend::Native);
         assert_eq!(cfg.replicates, 1);
         assert_eq!(cfg.strategy, InitStrategy::Range);
+        assert_eq!(cfg.decoder, DecoderSpec::Clompr);
         assert_eq!(cfg.seed, 0);
         let sk = SketcherConfig::default();
         assert_eq!(cfg.sketcher.n_workers, sk.n_workers);
@@ -803,6 +843,34 @@ mod tests {
         ));
         let sol = sampling.solve_with_data(&art, 2, (&g.dataset.points, 3)).unwrap();
         assert_eq!(sol.centroids.rows, 2);
+    }
+
+    #[test]
+    fn decoder_knob_threads_through_solves() {
+        let mut rng = Rng::new(60);
+        let mut cfg = GmmConfig::paper_default(3, 4, 4000);
+        cfg.separation = 3.0;
+        let g = cfg.generate(&mut rng);
+        let clompr = Ckm::builder().frequencies(128).sigma2(1.0).seed(6).build().unwrap();
+        let art = clompr.sketch_slice(&g.dataset.points, 4).unwrap();
+        let base = clompr.solve(&art, 3).unwrap();
+        assert_eq!(base.decoder, DecoderSpec::Clompr);
+        let shift = Ckm::builder()
+            .frequencies(128)
+            .sigma2(1.0)
+            .seed(6)
+            .decoder(DecoderSpec::SketchShift)
+            .build()
+            .unwrap();
+        let s = shift.solve(&art, 3).unwrap();
+        assert_eq!(s.decoder, DecoderSpec::SketchShift);
+        // per-request override without rebuilding the facade...
+        let h = clompr.solve_with_decoder(&art, 3, DecoderSpec::Hierarchical).unwrap();
+        assert_eq!(h.decoder, DecoderSpec::Hierarchical);
+        // ...and it agrees bit-for-bit with the configured-decoder path
+        let s2 = clompr.solve_with_decoder(&art, 3, DecoderSpec::SketchShift).unwrap();
+        assert_eq!(s.centroids.data, s2.centroids.data);
+        assert_eq!(s.alpha, s2.alpha);
     }
 
     #[test]

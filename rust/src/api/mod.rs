@@ -41,11 +41,12 @@
 //! before any solve.
 //!
 //! - [`builder`] — [`Ckm`], [`CkmBuilder`]: one validated configuration for
-//!   every pipeline/sketcher/solver knob (replaces juggling
-//!   `PipelineConfig` + `CkmOptions` + `SketcherConfig` by hand).
+//!   every sketcher/solver knob, including which
+//!   [`crate::decoder::DecoderSpec`] solves go through.
 //! - [`artifact`] — [`SketchArtifact`], [`OpSpec`]: versioned, serializable,
 //!   exactly-mergeable sketches.
-//! - [`solution`] — versioned (de)serialization for [`crate::ckm::Solution`].
+//! - [`solution`] — versioned (de)serialization for [`crate::ckm::Solution`],
+//!   stamped with the decoder that produced it.
 
 //! ## Quantized artifacts (QCKM)
 //!

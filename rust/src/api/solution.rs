@@ -4,6 +4,7 @@
 
 use super::ApiError;
 use crate::ckm::Solution;
+use crate::decoder::DecoderSpec;
 use crate::linalg::Mat;
 use crate::util::json::Json;
 use std::path::Path;
@@ -13,11 +14,13 @@ pub const SOLUTION_FORMAT_VERSION: u32 = 1;
 
 impl Solution {
     /// Serialize as versioned JSON (centroids row-major, one array per
-    /// centroid; floats round-trip bit-for-bit).
+    /// centroid; floats round-trip bit-for-bit). The decoder that produced
+    /// the solution is recorded only when it is not the default CLOMPR —
+    /// historical CLOMPR documents stay byte-identical.
     pub fn to_json(&self) -> Json {
         let rows: Vec<Json> =
             (0..self.centroids.rows).map(|r| Json::arr_f64(self.centroids.row(r))).collect();
-        Json::obj(vec![
+        let mut fields = vec![
             ("format", Json::Str("ckm-solution".to_string())),
             ("version", Json::Num(SOLUTION_FORMAT_VERSION as f64)),
             ("k", Json::Num(self.centroids.rows as f64)),
@@ -25,7 +28,11 @@ impl Solution {
             ("centroids", Json::Arr(rows)),
             ("alpha", Json::arr_f64(&self.alpha)),
             ("cost", Json::Num(self.cost)),
-        ])
+        ];
+        if self.decoder != DecoderSpec::Clompr {
+            fields.push(("decoder", Json::Str(self.decoder.name().to_string())));
+        }
+        Json::obj(fields)
     }
 
     /// Parse a [`Solution::to_json`] document, validating version/shape.
@@ -69,7 +76,11 @@ impl Solution {
             return Err(bad("alpha length != k"));
         }
         let cost = j.get("cost").as_f64().ok_or_else(|| bad("cost missing"))?;
-        Ok(Solution { centroids: Mat::from_vec(k, n_dims, data), alpha, cost })
+        let decoder = match j.get("decoder").as_str() {
+            Some(name) => DecoderSpec::parse(name).map_err(|e| bad(&e.to_string()))?,
+            None => DecoderSpec::Clompr,
+        };
+        Ok(Solution { centroids: Mat::from_vec(k, n_dims, data), alpha, cost, decoder })
     }
 
     /// Write as pretty-printed versioned JSON.
@@ -94,6 +105,7 @@ mod tests {
             centroids: Mat::from_vec(2, 3, vec![1.5, -2.25, 0.0, 3.0, 4.5, -6.75]),
             alpha: vec![0.6, 0.4],
             cost: 1.25e-3,
+            decoder: DecoderSpec::Clompr,
         }
     }
 
@@ -104,6 +116,29 @@ mod tests {
         assert_eq!(back.centroids.data, sol.centroids.data);
         assert_eq!(back.alpha, sol.alpha);
         assert_eq!(back.cost, sol.cost);
+        assert_eq!(back.decoder, DecoderSpec::Clompr);
+    }
+
+    #[test]
+    fn decoder_field_written_only_when_non_default() {
+        // CLOMPR documents carry no decoder field (byte compatibility with
+        // pre-decoder releases)...
+        let text = toy().to_json().to_pretty();
+        assert!(!text.contains("decoder"));
+        // ...while non-default decoders are recorded and round-trip.
+        let mut sol = toy();
+        sol.decoder = DecoderSpec::SketchShift;
+        let text = sol.to_json().to_pretty();
+        assert!(text.contains("\"decoder\""));
+        assert!(text.contains("sketch-shift"));
+        let back = Solution::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.decoder, DecoderSpec::SketchShift);
+        // unknown decoder names are a format error, not a silent default
+        let mut j = toy().to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("decoder".to_string(), Json::Str("amp".to_string()));
+        }
+        assert!(Solution::from_json(&j).is_err());
     }
 
     #[test]

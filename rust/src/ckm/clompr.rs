@@ -17,9 +17,10 @@
 use super::init::{draw_init, InitStrategy};
 use super::optim::OptimOptions;
 use crate::data::dataset::Bounds;
+use crate::decoder::DecoderSpec;
 use crate::engine::{CkmEngine, NativeEngine};
 use crate::linalg::{CVec, Mat};
-use crate::sketch::{DatasetSketch, SketchOp};
+use crate::sketch::DatasetSketch;
 use crate::util::rng::Rng;
 
 /// Options for the CKM solver.
@@ -50,12 +51,15 @@ impl Default for CkmOptions {
 }
 
 /// A recovered mixture of Diracs: centroids (row-major `K × n`), weights,
-/// and the sketch-domain cost `‖ẑ − Sk(C, α)‖²`.
+/// the sketch-domain cost `‖ẑ − Sk(C, α)‖²`, and the identity of the
+/// decoder that produced it (provenance: every solver stamps its own
+/// [`DecoderSpec`]).
 #[derive(Clone, Debug)]
 pub struct Solution {
     pub centroids: Mat,
     pub alpha: Vec<f64>,
     pub cost: f64,
+    pub decoder: DecoderSpec,
 }
 
 impl Solution {
@@ -74,24 +78,14 @@ impl Solution {
     }
 }
 
-/// Solve CKM from a dataset sketch (convenience wrapper).
+/// Solve CKM from a dataset sketch (convenience wrapper; native engine).
 pub fn solve(sketch: &DatasetSketch, k: usize, opts: &CkmOptions) -> Solution {
-    solve_full(&sketch.z, &sketch.op, &sketch.bounds, k, None, opts)
-}
-
-/// Full-control solve: `data` enables the Sample/K++ init strategies.
-/// Runs on the native engine; see [`solve_with_engine`] for PJRT.
-pub fn solve_full(
-    z_hat: &CVec,
-    op: &SketchOp,
-    bounds: &Bounds,
-    k: usize,
-    data: Option<(&[f64], usize)>,
-    opts: &CkmOptions,
-) -> Solution {
-    let engine =
-        NativeEngine::with_options(op.clone(), opts.step1.clone(), opts.step5.clone());
-    solve_with_engine(z_hat, &engine, bounds, k, data, opts)
+    let engine = NativeEngine::with_options(
+        sketch.op.clone(),
+        opts.step1.clone(),
+        opts.step5.clone(),
+    );
+    solve_with_engine(&sketch.z, &engine, &sketch.bounds, k, None, opts)
 }
 
 /// Solve CKM on an arbitrary compute engine (native or PJRT).
@@ -186,10 +180,10 @@ fn clompr_once(
 
     // Final cost (4).
     let cost = residual.norm2_sq();
-    Solution { centroids, alpha, cost }
+    Solution { centroids, alpha, cost, decoder: DecoderSpec::Clompr }
 }
 
-fn top_k_indices(vals: &[f64], k: usize) -> Vec<usize> {
+pub(crate) fn top_k_indices(vals: &[f64], k: usize) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..vals.len()).collect();
     // total_cmp: NNLS weights should never be NaN, but a panicking sort on a
     // pathological fit would take the whole solve down with it.
@@ -199,13 +193,13 @@ fn top_k_indices(vals: &[f64], k: usize) -> Vec<usize> {
     idx
 }
 
-fn push_row(m: &mut Mat, row: &[f64]) {
+pub(crate) fn push_row(m: &mut Mat, row: &[f64]) {
     assert_eq!(row.len(), m.cols);
     m.data.extend_from_slice(row);
     m.rows += 1;
 }
 
-fn select_rows(m: &Mat, rows: &[usize]) -> Mat {
+pub(crate) fn select_rows(m: &Mat, rows: &[usize]) -> Mat {
     let mut out = Mat::zeros(0, m.cols);
     for &r in rows {
         push_row(&mut out, m.row(r));
@@ -309,9 +303,13 @@ mod tests {
         let g = GmmConfig::paper_default(3, 4, 3000).generate(&mut rng);
         let sk = sketch_dataset(&g.dataset.points, 4, 200, 19, None);
         let opts = CkmOptions { strategy: InitStrategy::Sample, ..CkmOptions::default() };
-        let sol = solve_full(&sk.z, &sk.op, &sk.bounds, 3, Some((&g.dataset.points, 4)), &opts);
+        let engine =
+            NativeEngine::with_options(sk.op.clone(), opts.step1.clone(), opts.step5.clone());
+        let sol =
+            solve_with_engine(&sk.z, &engine, &sk.bounds, 3, Some((&g.dataset.points, 4)), &opts);
         assert_eq!(sol.centroids.rows, 3);
         assert!(sol.cost.is_finite());
+        assert_eq!(sol.decoder, DecoderSpec::Clompr);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 
 use super::clompr::{CkmOptions, Solution};
 use crate::data::dataset::Bounds;
+use crate::decoder::DecoderSpec;
 use crate::engine::CkmEngine;
 use crate::linalg::{CVec, Mat};
 use crate::util::rng::Rng;
@@ -183,7 +184,7 @@ pub fn solve_hierarchical(
 
     let final_atoms = engine.atoms_batch(&centroids);
     let cost = z_hat.sub(&engine.mixture_sketch_batch(&final_atoms, &alpha)).norm2_sq();
-    Solution { centroids, alpha, cost }
+    Solution { centroids, alpha, cost, decoder: DecoderSpec::Hierarchical }
 }
 
 #[cfg(test)]

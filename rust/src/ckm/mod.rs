@@ -14,9 +14,3 @@ pub mod optim;
 pub use clompr::{solve, solve_with_engine, CkmOptions, Solution};
 pub use hierarchical::solve_hierarchical;
 pub use init::InitStrategy;
-
-#[deprecated(
-    since = "0.2.0",
-    note = "use `api::Ckm::builder()` + `Ckm::solve_with_data` (sketch artifacts carry the operator and bounds for you)"
-)]
-pub use clompr::solve_full;

@@ -4,21 +4,43 @@
 //! - [`sketcher`] — leader/worker sharded sketching over bounded queues
 //!   (backpressure), exact merge of partial sketches.
 //! - [`state`] — job phase tracking + the replicate manager (paper §4.4).
-//! - [`pipeline`] — the legacy end-to-end driver, now a thin delegate of
-//!   the [`crate::api::Ckm`] facade.
+//!
+//! End-to-end runs (sketch → solve) go through the [`crate::api::Ckm`]
+//! facade, which composes these pieces over durable sketch artifacts.
 
 pub mod batcher;
-pub mod pipeline;
 pub mod sketcher;
 pub mod state;
 
-pub use pipeline::{Backend, PipelineConfig, PipelineResult};
 pub use sketcher::{
     distributed_sketch, distributed_sketch_quantized, SketchStats, SketcherConfig,
 };
 
-#[deprecated(
-    since = "0.2.0",
-    note = "use `api::Ckm::builder()` — `.sketch_from(..)` then `.solve_detailed(..)` — for durable, mergeable sketch artifacts"
-)]
-pub use pipeline::run_pipeline;
+/// Compute backend selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Native,
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> anyhow::Result<Backend> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            _ => anyhow::bail!("unknown backend '{s}' (native|pjrt)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_parse_round_trip() {
+        assert_eq!(Backend::parse("native").unwrap(), Backend::Native);
+        assert_eq!(Backend::parse("pjrt").unwrap(), Backend::Pjrt);
+        assert!(Backend::parse("tpu").is_err());
+    }
+}

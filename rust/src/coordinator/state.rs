@@ -117,7 +117,7 @@ mod tests {
     use crate::linalg::Mat;
 
     fn sol(cost: f64) -> Solution {
-        Solution { centroids: Mat::zeros(1, 1), alpha: vec![1.0], cost }
+        Solution { centroids: Mat::zeros(1, 1), alpha: vec![1.0], cost, decoder: Default::default() }
     }
 
     /// Block until at least `d` of *monotonic* time has provably passed.

@@ -1,0 +1,236 @@
+//! Pluggable sketch decoders — the "decode" half of sketch-then-decode.
+//!
+//! The paper's pipeline is *sketch, then decode*: the sketch layer is
+//! settled (quantized, windowed, sharded, checkpointed), while the
+//! related work shows decoding is where quality is won or lost —
+//! "When compressive learning fails" (arXiv 2009.08273) separates
+//! sketch-induced from decoder-induced failure, and "Sketch and shift"
+//! (arXiv 2312.09940) repairs CLOMPR's small-sketch failure modes with a
+//! mean-shift-style decoder. This module makes the decoder a first-class
+//! axis:
+//!
+//! - [`Decoder`] — the trait every decoder implements: consume a
+//!   [`SketchView`], produce a [`Solution`] through the shared
+//!   [`CkmEngine`] batched atom kernels (`atoms_batch` / `fit_weights` /
+//!   `step5_optimize` — the primitive layer all decoders build on).
+//! - [`DecoderSpec`] — the *stable identity* of a decoder, used for
+//!   solution provenance, solve-cache keys and the wire encoding. Adding
+//!   a decoder means adding a variant here; the spec, not the trait
+//!   object, is what travels through configs, caches and the protocol.
+//! - [`ClomprDecoder`] / [`HierarchicalDecoder`] — the existing solvers
+//!   behind the trait, bit-identical to `ckm::solve_with_engine` /
+//!   `ckm::solve_hierarchical` (pinned by parity tests).
+//! - [`SketchShiftDecoder`] — the mean-shift-style decoder
+//!   (arXiv 2312.09940): a pool of independent mode-seeking ascents on
+//!   the full sketch objective, merge-and-reseek rounds, then one global
+//!   NNLS prune to `K` — no greedy support growth, so one early bad atom
+//!   cannot poison the solve the way it can in CLOMPR at small `m`.
+//!
+//! CL-AMP (arXiv 1712.02849) is the named remaining plug-in
+//! (ROADMAP item 4): it would be one more variant + impl here, with no
+//! change to the facade, store, service or cache layers.
+
+pub mod sketch_shift;
+
+use crate::ckm::{solve_hierarchical, solve_with_engine, CkmOptions, Solution};
+use crate::data::dataset::Bounds;
+use crate::engine::CkmEngine;
+use crate::linalg::CVec;
+
+pub use sketch_shift::SketchShiftDecoder;
+
+/// The stable identity of a decoder: provenance stamp on every
+/// [`Solution`], part of every solve-cache key, and a single byte on the
+/// wire (protocol v3). `Clompr` is the default everywhere — old clients
+/// and old artifacts decode exactly as before.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum DecoderSpec {
+    /// Greedy sparse recovery (paper Algorithm 1) — the default.
+    #[default]
+    Clompr,
+    /// Geometric support growth by atom splitting (paper §3.3).
+    Hierarchical,
+    /// Mean-shift-style mode seeking + global prune (arXiv 2312.09940).
+    SketchShift,
+}
+
+impl DecoderSpec {
+    /// Every decoder this build can instantiate, in registry order.
+    pub fn all() -> [DecoderSpec; 3] {
+        [DecoderSpec::Clompr, DecoderSpec::Hierarchical, DecoderSpec::SketchShift]
+    }
+
+    /// The canonical CLI / JSON / `Status` name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            DecoderSpec::Clompr => "clompr",
+            DecoderSpec::Hierarchical => "hierarchical",
+            DecoderSpec::SketchShift => "sketch-shift",
+        }
+    }
+
+    /// Parse a CLI / JSON name (the inverse of [`DecoderSpec::name`]).
+    pub fn parse(s: &str) -> anyhow::Result<DecoderSpec> {
+        match s {
+            "clompr" => Ok(DecoderSpec::Clompr),
+            "hierarchical" => Ok(DecoderSpec::Hierarchical),
+            "sketch-shift" | "sketchshift" => Ok(DecoderSpec::SketchShift),
+            _ => anyhow::bail!(
+                "unknown decoder '{s}' (available: {})",
+                DecoderSpec::available_names().join("|")
+            ),
+        }
+    }
+
+    /// Registry names, for `ckm info` / daemon `Status` introspection.
+    pub fn available_names() -> Vec<&'static str> {
+        DecoderSpec::all().iter().map(|d| d.name()).collect()
+    }
+
+    /// One-byte wire encoding (protocol v3 solve verbs).
+    pub fn wire_code(&self) -> u8 {
+        match self {
+            DecoderSpec::Clompr => 0,
+            DecoderSpec::Hierarchical => 1,
+            DecoderSpec::SketchShift => 2,
+        }
+    }
+
+    /// Decode the wire byte; `None` for codes this build does not know.
+    pub fn from_wire(code: u8) -> Option<DecoderSpec> {
+        match code {
+            0 => Some(DecoderSpec::Clompr),
+            1 => Some(DecoderSpec::Hierarchical),
+            2 => Some(DecoderSpec::SketchShift),
+            _ => None,
+        }
+    }
+
+    /// Instantiate the decoder this spec names.
+    pub fn instantiate(&self) -> Box<dyn Decoder> {
+        match self {
+            DecoderSpec::Clompr => Box::new(ClomprDecoder),
+            DecoderSpec::Hierarchical => Box::new(HierarchicalDecoder),
+            DecoderSpec::SketchShift => Box::new(SketchShiftDecoder),
+        }
+    }
+}
+
+/// What a decoder may see of the problem: the sketch, the data bounds the
+/// box constraints come from, and — optionally — raw data rows for the
+/// data-assisted init strategies (Sample / K++).
+pub trait SketchView {
+    /// The (debiased, averaged) sketch `ẑ`.
+    fn sketch(&self) -> &CVec;
+    /// Per-dimension data bounds (the step-1/step-5 box).
+    fn bounds(&self) -> &Bounds;
+    /// Raw data rows `(row-major points, n_dims)` when available.
+    fn data(&self) -> Option<(&[f64], usize)> {
+        None
+    }
+}
+
+/// A borrowed [`SketchView`] — what the facade (and tests) hand decoders.
+pub struct DecodeInput<'a> {
+    pub z: &'a CVec,
+    pub bounds: &'a Bounds,
+    pub data: Option<(&'a [f64], usize)>,
+}
+
+impl SketchView for DecodeInput<'_> {
+    fn sketch(&self) -> &CVec {
+        self.z
+    }
+
+    fn bounds(&self) -> &Bounds {
+        self.bounds
+    }
+
+    fn data(&self) -> Option<(&[f64], usize)> {
+        self.data
+    }
+}
+
+/// A sketch decoder: recover `k` weighted centroids from a sketch through
+/// an engine's batched atom kernels. Implementations must be
+/// deterministic given `opts.seed` and must stamp the returned
+/// [`Solution`] with their own [`DecoderSpec`].
+pub trait Decoder {
+    /// The stable identity of this decoder.
+    fn spec(&self) -> DecoderSpec;
+
+    /// Decode `k` centroids from `sketch` on `engine`.
+    fn decode(
+        &self,
+        sketch: &dyn SketchView,
+        k: usize,
+        engine: &dyn CkmEngine,
+        opts: &CkmOptions,
+    ) -> Solution;
+}
+
+/// CLOMPR behind the trait — a direct delegate of
+/// [`crate::ckm::solve_with_engine`], bit-identical by construction.
+pub struct ClomprDecoder;
+
+impl Decoder for ClomprDecoder {
+    fn spec(&self) -> DecoderSpec {
+        DecoderSpec::Clompr
+    }
+
+    fn decode(
+        &self,
+        sketch: &dyn SketchView,
+        k: usize,
+        engine: &dyn CkmEngine,
+        opts: &CkmOptions,
+    ) -> Solution {
+        solve_with_engine(sketch.sketch(), engine, sketch.bounds(), k, sketch.data(), opts)
+    }
+}
+
+/// The hierarchical (splitting) solver behind the trait — a direct
+/// delegate of [`crate::ckm::solve_hierarchical`], bit-identical by
+/// construction. Sketch-only: ignores [`SketchView::data`].
+pub struct HierarchicalDecoder;
+
+impl Decoder for HierarchicalDecoder {
+    fn spec(&self) -> DecoderSpec {
+        DecoderSpec::Hierarchical
+    }
+
+    fn decode(
+        &self,
+        sketch: &dyn SketchView,
+        k: usize,
+        engine: &dyn CkmEngine,
+        opts: &CkmOptions,
+    ) -> Solution {
+        solve_hierarchical(sketch.sketch(), engine, sketch.bounds(), k, opts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_names_round_trip() {
+        for spec in DecoderSpec::all() {
+            assert_eq!(DecoderSpec::parse(spec.name()).unwrap(), spec);
+            assert_eq!(DecoderSpec::from_wire(spec.wire_code()), Some(spec));
+            assert_eq!(spec.instantiate().spec(), spec);
+        }
+        assert!(DecoderSpec::parse("amp").is_err());
+        assert_eq!(DecoderSpec::from_wire(200), None);
+        assert_eq!(DecoderSpec::default(), DecoderSpec::Clompr);
+    }
+
+    #[test]
+    fn registry_lists_every_decoder() {
+        assert_eq!(
+            DecoderSpec::available_names(),
+            vec!["clompr", "hierarchical", "sketch-shift"]
+        );
+    }
+}

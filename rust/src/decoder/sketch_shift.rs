@@ -1,0 +1,293 @@
+//! Sketch-and-shift decoding (arXiv 2312.09940): mode seeking on the
+//! sketch objective instead of greedy support growth.
+//!
+//! CLOMPR's small-sketch failure mode is structural: each of its 2K
+//! iterations ascends the *residual* correlation and then hard-thresholds,
+//! so at small `m` (noisy sketch landscape) one spurious early atom drags
+//! the weights, the residual, and every later iteration with it. Sketch
+//! and shift removes the greedy coupling:
+//!
+//! 1. **Seek** — a pool of `8K` independent gradient ascents on the *full*
+//!    sketch objective (the same `step1` kernel CLOMPR uses, aimed at `ẑ`
+//!    instead of a residual). Ascents started anywhere in a mode's basin
+//!    shift into that mode, so dominant modes attract many candidates.
+//! 2. **Shift rounds** — coincident candidates (within 5% of the data box
+//!    per dimension) are merged by averaging, which denoises each mode
+//!    estimate; the freed slots are refilled with ascents against the
+//!    residual of the merged mixture so masked modes surface.
+//! 3. **Prune** — one global NNLS on normalized atoms ranks every
+//!    surviving mode at once; the top `K` are kept, re-fit (unnormalized
+//!    NNLS), and polished by a single joint `step5` descent,
+//!    accept-if-improved.
+//!
+//! Every numeric step runs through the shared [`CkmEngine`] batched atom
+//! kernels; nothing here touches raw data except the init strategy.
+//! Deterministic given `opts.seed` (stream `seed ^ 0x51F7`, split per
+//! replicate like CLOMPR).
+
+use super::{Decoder, DecoderSpec, SketchView};
+use crate::ckm::clompr::{push_row, select_rows, top_k_indices};
+use crate::ckm::init::draw_init;
+use crate::ckm::{CkmOptions, Solution};
+use crate::data::dataset::Bounds;
+use crate::engine::CkmEngine;
+use crate::linalg::matrix::dist2;
+use crate::linalg::{CVec, Mat};
+use crate::util::rng::Rng;
+
+/// Mode-seeking ascents per requested centroid in the initial pool.
+const RESTARTS_PER_K: usize = 8;
+
+/// Merge-and-reseek rounds after the initial sweep.
+const ROUNDS: usize = 2;
+
+/// Candidates within this fraction of the box span (per dimension,
+/// Euclidean) are the same mode and merge by averaging.
+const MERGE_SPAN_FRAC: f64 = 0.05;
+
+/// The mean-shift-style decoder (see module docs).
+pub struct SketchShiftDecoder;
+
+impl Decoder for SketchShiftDecoder {
+    fn spec(&self) -> DecoderSpec {
+        DecoderSpec::SketchShift
+    }
+
+    fn decode(
+        &self,
+        sketch: &dyn SketchView,
+        k: usize,
+        engine: &dyn CkmEngine,
+        opts: &CkmOptions,
+    ) -> Solution {
+        let z = sketch.sketch();
+        assert!(k >= 1, "need at least one centroid");
+        assert!(opts.replicates >= 1);
+        assert_eq!(
+            z.len(),
+            engine.m(),
+            "sketch length {} != engine m {}",
+            z.len(),
+            engine.m()
+        );
+        let mut master = Rng::new(opts.seed ^ 0x51F7);
+        let mut best: Option<Solution> = None;
+        for _rep in 0..opts.replicates {
+            let mut rng = master.split();
+            let sol =
+                sketch_shift_once(z, engine, sketch.bounds(), k, sketch.data(), opts, &mut rng);
+            if best.as_ref().map(|b| sol.cost < b.cost).unwrap_or(true) {
+                best = Some(sol);
+            }
+        }
+        best.unwrap()
+    }
+}
+
+fn sketch_shift_once(
+    z_hat: &CVec,
+    engine: &dyn CkmEngine,
+    bounds: &Bounds,
+    k: usize,
+    data: Option<(&[f64], usize)>,
+    opts: &CkmOptions,
+    rng: &mut Rng,
+) -> Solution {
+    let n_dims = engine.n_dims();
+    let pool = (RESTARTS_PER_K * k).max(k + 1);
+    // Reseek target: enough slack over K that the prune has real choices,
+    // without re-running the whole pool every round.
+    let target = (2 * k).max(k + 1);
+    let merge_r2: f64 = bounds
+        .lo
+        .iter()
+        .zip(&bounds.hi)
+        .map(|(l, h)| (MERGE_SPAN_FRAC * (h - l).max(1e-12)).powi(2))
+        .sum();
+
+    // -- Seek: independent ascents on the full sketch objective. Many
+    // starts shift into the same dominant mode — that redundancy is the
+    // denoising signal the merge step averages over.
+    let mut cands = Mat::zeros(0, n_dims);
+    for _ in 0..pool {
+        let c0 = draw_init(opts.strategy, bounds, data, &cands, rng);
+        push_row(&mut cands, &engine.step1_optimize(&c0, z_hat, bounds));
+    }
+
+    // -- Shift rounds: merge coincident modes, refill freed slots against
+    // the residual of the merged mixture (modes masked by dominant ones
+    // only become visible once those are explained away).
+    for _ in 0..ROUNDS {
+        cands = merge_modes(&cands, merge_r2);
+        if cands.rows >= target {
+            continue;
+        }
+        let atoms = engine.atoms_batch(&cands);
+        let alpha = engine.fit_weights(z_hat, &atoms, false);
+        let residual = z_hat.sub(&engine.mixture_sketch_batch(&atoms, &alpha));
+        while cands.rows < target {
+            let c0 = draw_init(opts.strategy, bounds, data, &cands, rng);
+            push_row(&mut cands, &engine.step1_optimize(&c0, &residual, bounds));
+        }
+    }
+    cands = merge_modes(&cands, merge_r2);
+    // Degenerate data (every mode coincides) can merge below K: pad with
+    // raw draws so the solution always has exactly K rows.
+    while cands.rows < k {
+        let c0 = draw_init(opts.strategy, bounds, data, &cands, rng);
+        push_row(&mut cands, &c0);
+    }
+
+    // -- Prune: one global normalized-NNLS ranking over every surviving
+    // mode (the same kernel as CLOMPR's step 3, but applied once, jointly,
+    // instead of per greedy iteration).
+    let mut atoms = engine.atoms_batch(&cands);
+    if cands.rows > k {
+        let beta = engine.fit_weights(z_hat, &atoms, true);
+        let keep = top_k_indices(&beta, k);
+        cands = select_rows(&cands, &keep);
+        atoms = atoms.select_rows(&keep);
+    }
+
+    // -- Final fit + one joint polish, accept-if-improved (same
+    // convention as CLOMPR's step 5).
+    let mut alpha = engine.fit_weights(z_hat, &atoms, false);
+    let r_before = z_hat.sub(&engine.mixture_sketch_batch(&atoms, &alpha));
+    let cost_before = r_before.norm2_sq();
+    let (c_opt, a_opt) = engine.step5_optimize(&cands, &alpha, z_hat, bounds);
+    let opt_atoms = engine.atoms_batch(&c_opt);
+    let r_after = z_hat.sub(&engine.mixture_sketch_batch(&opt_atoms, &a_opt));
+    let cost;
+    let mut centroids = cands;
+    if r_after.norm2_sq() <= cost_before {
+        centroids = c_opt;
+        alpha = a_opt;
+        cost = r_after.norm2_sq();
+    } else {
+        cost = cost_before;
+    }
+    Solution { centroids, alpha, cost, decoder: DecoderSpec::SketchShift }
+}
+
+/// Greedy single-pass mode merge: each candidate joins the first cluster
+/// whose *anchor* (first member) lies within `r2`, else founds a new
+/// cluster; representatives are member averages. First-wins anchoring
+/// keeps the pass deterministic and order-stable.
+fn merge_modes(cands: &Mat, r2: f64) -> Mat {
+    let n = cands.cols;
+    let mut anchors: Vec<usize> = Vec::new();
+    let mut sums: Vec<Vec<f64>> = Vec::new();
+    let mut counts: Vec<usize> = Vec::new();
+    for r in 0..cands.rows {
+        let row = cands.row(r);
+        let mut joined = false;
+        for ci in 0..anchors.len() {
+            if dist2(row, cands.row(anchors[ci])) < r2 {
+                for d in 0..n {
+                    sums[ci][d] += row[d];
+                }
+                counts[ci] += 1;
+                joined = true;
+                break;
+            }
+        }
+        if !joined {
+            anchors.push(r);
+            sums.push(row.to_vec());
+            counts.push(1);
+        }
+    }
+    let mut out = Mat::zeros(0, n);
+    for (s, &c) in sums.iter().zip(&counts) {
+        let avg: Vec<f64> = s.iter().map(|v| v / c as f64).collect();
+        push_row(&mut out, &avg);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decoder::DecodeInput;
+    use crate::data::gmm::GmmConfig;
+    use crate::engine::NativeEngine;
+    use crate::sketch::sketch_dataset;
+
+    fn decode(sk: &crate::sketch::DatasetSketch, k: usize, opts: &CkmOptions) -> Solution {
+        let engine =
+            NativeEngine::with_options(sk.op.clone(), opts.step1.clone(), opts.step5.clone());
+        let input = DecodeInput { z: &sk.z, bounds: &sk.bounds, data: None };
+        SketchShiftDecoder.decode(&input, k, &engine, opts)
+    }
+
+    #[test]
+    fn recovers_well_separated_clusters() {
+        let mut rng = Rng::new(21);
+        let mut cfg = GmmConfig::paper_default(4, 5, 8000);
+        cfg.separation = 4.0;
+        let g = cfg.generate(&mut rng);
+        let sk = sketch_dataset(&g.dataset.points, 5, 400, 7, None);
+        let sol = decode(&sk, 4, &CkmOptions::default());
+        assert_eq!(sol.centroids.rows, 4);
+        assert_eq!(sol.decoder, DecoderSpec::SketchShift);
+        let worst = g
+            .means
+            .iter()
+            .map(|mu| {
+                (0..sol.centroids.rows)
+                    .map(|k| dist2(mu, sol.centroids.row(k)).sqrt())
+                    .fold(f64::INFINITY, f64::min)
+            })
+            .fold(0.0, f64::max);
+        assert!(worst < 0.8, "worst centroid-mean distance {worst}");
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_distinct_from_clompr_stream() {
+        let mut rng = Rng::new(22);
+        let g = GmmConfig::paper_default(2, 3, 2000).generate(&mut rng);
+        let sk = sketch_dataset(&g.dataset.points, 3, 100, 17, None);
+        let opts = CkmOptions { seed: 9, ..CkmOptions::default() };
+        let a = decode(&sk, 2, &opts);
+        let b = decode(&sk, 2, &opts);
+        assert_eq!(a.centroids.data, b.centroids.data);
+        assert_eq!(a.alpha, b.alpha);
+        assert_eq!(a.cost, b.cost);
+    }
+
+    #[test]
+    fn k_equals_one_and_bounds_respected() {
+        let mut rng = Rng::new(23);
+        let mut cfg = GmmConfig::paper_default(1, 2, 4000);
+        cfg.separation = 1.0;
+        let g = cfg.generate(&mut rng);
+        let sk = sketch_dataset(&g.dataset.points, 2, 100, 13, None);
+        let sol = decode(&sk, 1, &CkmOptions::default());
+        assert_eq!(sol.centroids.rows, 1);
+        let d = dist2(sol.centroids.row(0), &g.means[0]).sqrt();
+        assert!(d < 0.5, "centroid off by {d}");
+        for d in 0..2 {
+            let v = sol.centroids.at(0, d);
+            assert!(v >= sk.bounds.lo[d] - 1e-12 && v <= sk.bounds.hi[d] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn replicates_never_worsen_cost() {
+        let mut rng = Rng::new(24);
+        let g = GmmConfig::paper_default(3, 4, 4000).generate(&mut rng);
+        let sk = sketch_dataset(&g.dataset.points, 4, 200, 3, None);
+        let one = decode(&sk, 3, &CkmOptions { replicates: 1, seed: 5, ..CkmOptions::default() });
+        let four = decode(&sk, 3, &CkmOptions { replicates: 4, seed: 5, ..CkmOptions::default() });
+        assert!(four.cost <= one.cost + 1e-12);
+    }
+
+    #[test]
+    fn merge_modes_averages_within_radius() {
+        let m = Mat::from_vec(3, 2, vec![0.0, 0.0, 0.01, 0.01, 5.0, 5.0]);
+        let merged = merge_modes(&m, 0.1 * 0.1);
+        assert_eq!(merged.rows, 2);
+        assert!((merged.at(0, 0) - 0.005).abs() < 1e-12);
+        assert_eq!(merged.row(1), &[5.0, 5.0]);
+    }
+}

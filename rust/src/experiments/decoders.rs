@@ -1,0 +1,104 @@
+//! Decoder ablation: CLOMPR vs hierarchical vs sketch-and-shift across
+//! sketch budgets.
+//!
+//! Sweeps m/(Kn) — the compression ratio the paper's §4.2 phase diagrams
+//! are drawn over — on the §4.1 Gaussian workload, solving each sketch
+//! with every registered decoder from the same artifact. The interesting
+//! regime is the small-sketch end (m/(Kn) ≤ 2): CLOMPR's greedy
+//! residual-chasing degrades there because each hard-thresholding step
+//! commits to atoms fit against a noisy residual, while sketch-and-shift
+//! pools many independent full-sketch mode seeks, merges coincident
+//! modes, and prunes *once* globally. `ckm exp decoders` renders this
+//! table.
+
+use super::common::{Row, Stats, Table};
+use super::workloads::gaussian_workload;
+use crate::api::Ckm;
+use crate::decoder::DecoderSpec;
+use crate::metrics::sse;
+
+#[derive(Clone, Debug)]
+pub struct DecodersConfig {
+    pub k: usize,
+    pub n_dims: usize,
+    pub n_points: usize,
+    /// m/(Kn) compression ratios to sweep.
+    pub ratios: Vec<f64>,
+    pub runs: usize,
+    pub seed: u64,
+}
+
+impl Default for DecodersConfig {
+    fn default() -> Self {
+        DecodersConfig {
+            k: 5,
+            n_dims: 5,
+            n_points: 20_000,
+            ratios: vec![1.0, 1.5, 2.0, 4.0, 8.0],
+            runs: 3,
+            seed: 33,
+        }
+    }
+}
+
+/// One row per (ratio, decoder): SSE/N and the sketch-domain cost, every
+/// decoder reading the identical artifact at each (ratio, run).
+pub fn run(cfg: &DecodersConfig) -> Table {
+    let mut table = Table::new("Ablation: decoder vs sketch budget m/(Kn)");
+    for &ratio in &cfg.ratios {
+        let m = ((ratio * (cfg.k * cfg.n_dims) as f64).round() as usize).max(2);
+        for decoder in DecoderSpec::all() {
+            let mut sses = Vec::new();
+            let mut costs = Vec::new();
+            for run in 0..cfg.runs {
+                let g = gaussian_workload(cfg.k, cfg.n_dims, cfg.n_points, cfg.seed + run as u64);
+                let pts = &g.dataset.points;
+                let ckm = Ckm::builder()
+                    .frequencies(m)
+                    .seed(cfg.seed + run as u64)
+                    .decoder(decoder)
+                    .build()
+                    .expect("valid config");
+                let art = ckm.sketch_slice(pts, cfg.n_dims).expect("sketch");
+                let sol = ckm.solve(&art, cfg.k).expect("solve");
+                sses.push(sse(pts, cfg.n_dims, &sol.centroids) / cfg.n_points as f64);
+                costs.push(sol.cost);
+            }
+            table.push(
+                Row::new()
+                    .num("m/(Kn)", ratio)
+                    .num("m", m as f64)
+                    .cell("decoder", decoder.name().to_string())
+                    .stat("SSE/N", &Stats::from(&sses))
+                    .stat("sketch cost", &Stats::from(&costs)),
+            );
+        }
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> DecodersConfig {
+        DecodersConfig {
+            k: 2,
+            n_dims: 3,
+            n_points: 2000,
+            ratios: vec![1.0, 4.0],
+            runs: 1,
+            seed: 5,
+        }
+    }
+
+    #[test]
+    fn table_covers_every_ratio_and_decoder_with_finite_sse() {
+        let t = run(&tiny());
+        assert_eq!(t.rows.len(), 2 * DecoderSpec::all().len());
+        for r in &t.rows {
+            assert!(r.raw["SSE/N.mean"].is_finite());
+            assert!(r.raw["m"] >= 2.0);
+        }
+    }
+}

@@ -9,8 +9,8 @@
 use super::common::{Row, Stats, Table};
 use super::workloads::{digits_spectral_workload, gaussian_workload};
 use crate::baselines::{kmeans, KmInit, KmOptions};
-use crate::ckm::clompr::solve_full;
-use crate::ckm::{CkmOptions, InitStrategy};
+use crate::ckm::{solve_with_engine, CkmOptions, InitStrategy};
+use crate::engine::NativeEngine;
 use crate::metrics::sse;
 use crate::sketch::sketch_dataset;
 
@@ -56,7 +56,10 @@ pub fn run(cfg: &Fig1Config) -> Table {
                 seed: cfg.seed + 1000 + run as u64,
                 ..CkmOptions::default()
             };
-            let sol = solve_full(&sk.z, &sk.op, &sk.bounds, cfg.k, Some((pts, cfg.n_dims)), &opts);
+            let engine =
+                NativeEngine::with_options(sk.op.clone(), opts.step1.clone(), opts.step5.clone());
+            let sol =
+                solve_with_engine(&sk.z, &engine, &sk.bounds, cfg.k, Some((pts, cfg.n_dims)), &opts);
             per_cell[si].0.push(sse(pts, cfg.n_dims, &sol.centroids) / cfg.n_points as f64);
             let km = kmeans(
                 pts,
@@ -90,7 +93,10 @@ pub fn run(cfg: &Fig1Config) -> Table {
                 seed: cfg.seed + 3000 + run as u64,
                 ..CkmOptions::default()
             };
-            let sol = solve_full(&sk.z, &sk.op, &sk.bounds, cfg.k, Some((&feats, nd)), &opts);
+            let engine =
+                NativeEngine::with_options(sk.op.clone(), opts.step1.clone(), opts.step5.clone());
+            let sol =
+                solve_with_engine(&sk.z, &engine, &sk.bounds, cfg.k, Some((&feats, nd)), &opts);
             per_cell[si].0.push(sse(&feats, nd, &sol.centroids) / n as f64);
             let km = kmeans(
                 &feats,

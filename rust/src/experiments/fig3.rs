@@ -8,8 +8,8 @@
 use super::common::{Row, Stats, Table};
 use super::workloads::digits_spectral_workload;
 use crate::baselines::{kmeans, KmInit, KmOptions};
-use crate::ckm::clompr::solve_full;
-use crate::ckm::CkmOptions;
+use crate::ckm::{solve_with_engine, CkmOptions};
+use crate::engine::NativeEngine;
 use crate::metrics::{adjusted_rand_index, labels_for, sse};
 use crate::sketch::sketch_dataset;
 
@@ -54,18 +54,18 @@ pub fn run(cfg: &Fig3Config) -> Table {
             let mut km_ari = Vec::new();
             for run in 0..cfg.runs {
                 let sk = sketch_dataset(&feats, nd, cfg.m, cfg.seed + (run as u64) << 5, None);
-                let sol = solve_full(
-                    &sk.z,
-                    &sk.op,
-                    &sk.bounds,
-                    cfg.k,
-                    Some((&feats, nd)),
-                    &CkmOptions {
-                        replicates: reps,
-                        seed: cfg.seed + 100 + run as u64,
-                        ..CkmOptions::default()
-                    },
+                let opts = CkmOptions {
+                    replicates: reps,
+                    seed: cfg.seed + 100 + run as u64,
+                    ..CkmOptions::default()
+                };
+                let engine = NativeEngine::with_options(
+                    sk.op.clone(),
+                    opts.step1.clone(),
+                    opts.step5.clone(),
                 );
+                let sol =
+                    solve_with_engine(&sk.z, &engine, &sk.bounds, cfg.k, Some((&feats, nd)), &opts);
                 ckm_sse.push(sse(&feats, nd, &sol.centroids) / n as f64);
                 ckm_ari.push(adjusted_rand_index(&labels_for(&feats, nd, &sol.centroids), &labels));
                 let km = kmeans(

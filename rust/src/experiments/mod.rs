@@ -5,6 +5,7 @@
 
 pub mod ablate;
 pub mod common;
+pub mod decoders;
 pub mod fig1;
 pub mod fig2;
 pub mod fig3;

@@ -84,8 +84,11 @@
 //!   as either pretty JSON (debug) or the CKMC binary container
 //!   (production — sniffed by magic, converted with `ckm convert`).
 //! - **L3 (this crate)** — the coordinator: streaming sharded sketching of
-//!   the dataset, the CLOMPR centroid solver, baselines, metrics, a CLI and
-//!   the experiment/benchmark drivers for every figure in the paper.
+//!   the dataset, the pluggable decoder layer ([`decoder`]: CLOMPR,
+//!   hierarchical, sketch-and-shift behind one [`decoder::Decoder`] trait
+//!   with a stable [`decoder::DecoderSpec`] identity), baselines, metrics,
+//!   a CLI and the experiment/benchmark drivers for every figure in the
+//!   paper.
 //! - **L2 (`python/compile/model.py`)** — JAX compute graphs (sketch chunk,
 //!   CLOMPR gradient steps), AOT-lowered once to HLO text.
 //! - **L1 (`python/compile/kernels/`)** — the Pallas sketch kernel, the
@@ -130,9 +133,9 @@
 //!
 //! The facade is a thin composition of public pieces you can use directly:
 //! [`sketch`] (operator, frequency laws, streaming accumulator),
-//! [`ckm`] (CLOMPR), [`coordinator`] (sharded sketcher, legacy pipeline),
-//! [`engine`] (native/PJRT compute), [`baselines`], [`metrics`],
-//! [`spectral`], [`experiments`].
+//! [`ckm`] (CLOMPR), [`decoder`] (the pluggable decoder registry),
+//! [`coordinator`] (sharded sketcher), [`engine`] (native/PJRT compute),
+//! [`baselines`], [`metrics`], [`spectral`], [`experiments`].
 
 // The numeric kernels are written as explicit indexed loops (accumulation
 // order is part of the scalar/batched parity contract) and the JSON layer
@@ -151,6 +154,7 @@ pub mod bench;
 pub mod ckm;
 pub mod coordinator;
 pub mod data;
+pub mod decoder;
 pub mod engine;
 pub mod experiments;
 pub mod linalg;
@@ -167,6 +171,7 @@ pub mod prelude {
     pub use crate::api::{ApiError, Ckm, CkmBuilder, SketchArtifact, SolveReport};
     pub use crate::ckm::{solve, CkmOptions, InitStrategy, Solution};
     pub use crate::coordinator::Backend;
+    pub use crate::decoder::DecoderSpec;
     pub use crate::service::{Daemon, ServiceClient, ServiceListener};
     pub use crate::sketch::{QuantizationMode, RadiusKind};
     pub use crate::store::{CompactionPolicy, IngestSession, ShardedStore, SketchServer, SketchStore};

@@ -8,8 +8,9 @@
 //!   window  epoch replay through the windowed sketch store (drift demo)
 //!   convert flip a checkpoint between the JSON and binary (CKMC) codecs
 //!   exp     regenerate a paper figure: fig1 | fig2 | fig3 | fig4 | ablate
+//!           (plus the quantize and decoders ablations)
 //!   gen     generate a synthetic dataset file
-//!   info    show version, artifact manifest and backends
+//!   info    show version, artifact manifest, decoder registry, backends
 
 use ckm::api::{Ckm, CkmBuilder, QuantizationMode, SketchArtifact};
 use ckm::baselines::{kmeans, KmInit, KmOptions};
@@ -65,6 +66,7 @@ fn usage() {
            run     --k 10 --m 1000 --n 10 --npoints 300000 [--file data.bin]\n\
                    [--backend native|pjrt] [--trig exact|fast] [--workers 4]\n\
                    [--replicates 1] [--strategy range|sample|k++] [--sigma2 X]\n\
+                   [--decoder clompr|hierarchical|sketch-shift]\n\
                    [--seed S] [--quantize 1bit|..|16bit]\n\
                    [--save-sketch sketch.json] [--compare-kmeans]\n\
            sketch  --file data.bin --m 1000 --out sketch.json [--sigma2 X] [--seed S]\n\
@@ -72,6 +74,7 @@ fn usage() {
                    [--shard I  (one id per site)]\n\
            merge   --out merged.json shard1.json shard2.json ...\n\
            solve   --sketch sketch.json --k 10 [--replicates R] [--seed S]\n\
+                   [--decoder clompr|hierarchical|sketch-shift]\n\
                    [--trig exact|fast  (must match the sketch's provenance)]\n\
                    [--out solution.json]\n\
            window  --epochs 6 --epoch-rows 20000 --k 5 [--retain E] [--window W]\n\
@@ -84,7 +87,8 @@ fn usage() {
            client  ingest|solve|rotate|status|checkpoint|shutdown\n\
                    --connect tcp:HOST:PORT|unix:PATH [--producer NAME] ...\n\
                    (talk to a ckmd sketch daemon; same verbs as ckm-client)\n\
-           exp     fig1|fig2|fig3|fig4|ablate|quantize [--runs R] [--full] [--persist]\n\
+           exp     fig1|fig2|fig3|fig4|ablate|quantize|decoders\n\
+                   [--runs R] [--full] [--persist]\n\
            bench   diff <baseline.json> <candidate.json> [--threshold 1.5]\n\
                    (fails on tracked-op ns_per_iter regressions beyond the threshold)\n\
            gen     --out data.bin --k 10 --n 10 --npoints 100000 [--seed S]\n\
@@ -123,6 +127,9 @@ fn builder_from_args(args: &Args) -> anyhow::Result<CkmBuilder> {
         .chunk_rows(args.usize_or("chunk-rows", 4096))
         .queue_depth(args.usize_or("queue-depth", 8))
         .shard(args.u64_or("shard", 0));
+    if let Some(d) = args.opt("decoder") {
+        b = b.decoder(ckm::decoder::DecoderSpec::parse(d)?);
+    }
     if let Some(s2) = args.opt("sigma2") {
         b = b.sigma2(s2.parse()?);
     }
@@ -242,7 +249,9 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
         .positionals()
         .first()
         .cloned()
-        .ok_or_else(|| anyhow::anyhow!("exp needs a figure: fig1|fig2|fig3|fig4|ablate|quantize"))?;
+        .ok_or_else(|| {
+            anyhow::anyhow!("exp needs a figure: fig1|fig2|fig3|fig4|ablate|quantize|decoders")
+        })?;
     let persist = args.flag("persist");
     let full = args.flag("full");
     let runs = args.opt("runs").map(|r| r.parse::<usize>()).transpose()?;
@@ -323,6 +332,18 @@ fn cmd_exp(args: &Args) -> anyhow::Result<()> {
             }
             args.finish()?;
             exp::quantize::run(&cfg).emit("quantize", persist);
+        }
+        "decoders" => {
+            let mut cfg = exp::decoders::DecodersConfig { seed, ..Default::default() };
+            if let Some(r) = runs {
+                cfg.runs = r;
+            }
+            if full {
+                cfg.n_points = 100_000;
+                cfg.runs = 10;
+            }
+            args.finish()?;
+            exp::decoders::run(&cfg).emit("decoders", persist);
         }
         other => anyhow::bail!("unknown experiment '{other}'"),
     }
@@ -637,6 +658,10 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
         avail.join(" ")
     );
     println!("cpu features: {}", ckm::util::fastmath::detected_cpu_features());
+    println!(
+        "decoders: {} (select with --decoder)",
+        ckm::decoder::DecoderSpec::available_names().join(" ")
+    );
     let dir = ckm::runtime::PjrtRuntime::default_dir();
     println!("artifacts dir: {dir:?}");
     match ckm::runtime::Manifest::load(&dir) {

@@ -6,6 +6,7 @@ use super::client::ServiceClient;
 use super::daemon::{Daemon, ServiceListener};
 use crate::api::{Ckm, QuantizationMode};
 use crate::data::dataset::Dataset;
+use crate::decoder::DecoderSpec;
 use crate::sketch::RadiusKind;
 use crate::store::{CompactionPolicy, ShardedStore};
 use crate::util::cli::Args;
@@ -42,7 +43,9 @@ pub fn client_usage() {
          verbs:\n\
            ingest      --producer NAME (--file data.bin | --gen N --gen-seed S)\n\
                        [--chunk-rows 4096]  two-phase ingest; sketches locally\n\
-           solve       --k K [--window E] [--decay LAMBDA] [--out solution.json]\n\
+           solve       --k K [--window E] [--decay LAMBDA]\n\
+                       [--decoder clompr|hierarchical|sketch-shift]\n\
+                       [--out solution.json]\n\
            rotate      seal the current epoch on every shard\n\
            status      print shard and cache counters\n\
            checkpoint  [--out set.ckmc]  digest-verified streamed binary\n\
@@ -125,6 +128,7 @@ pub fn run_daemon(args: &Args) -> anyhow::Result<()> {
         crate::util::fastmath::active_path(),
         crate::util::fastmath::detected_cpu_features()
     );
+    println!("ckmd: decoders {}", DecoderSpec::available_names().join(", "));
     let daemon = Daemon::new(store, ckm);
     daemon.serve(listener)?;
     if let Some(path) = save {
@@ -170,6 +174,9 @@ pub fn run_client(verb: &str, args: &Args) -> anyhow::Result<()> {
                 s.cache_hits, s.cache_misses, s.refreshed_solves, s.connections
             );
             println!("simd: {}", s.simd_path);
+            if !s.decoders.is_empty() {
+                println!("decoders: {}", s.decoders.join(", "));
+            }
             Ok(())
         }
         "checkpoint" => {
@@ -239,16 +246,23 @@ fn client_solve(args: &Args) -> anyhow::Result<()> {
     let k = args.usize_or("k", 10);
     let window = args.opt("window").map(|s| s.parse::<usize>()).transpose()?;
     let decay = args.opt("decay").map(|s| s.parse::<f64>()).transpose()?;
+    let decoder = match args.opt("decoder") {
+        Some(name) => DecoderSpec::parse(name)?,
+        None => DecoderSpec::Clompr,
+    };
     let out = args.opt("out").map(|s| s.to_string());
     let mut c = connect(args)?;
     args.finish()?;
     let solution = match decay {
-        Some(lambda) => c.solve_decayed(lambda, k)?,
-        None => c.solve_window(window, k)?,
+        Some(lambda) => c.solve_decayed_with(lambda, k, decoder)?,
+        None => c.solve_window_with(window, k, decoder)?,
     };
     println!(
-        "solved k={k}: cost {:.6e}, {} centroids x {} dims",
-        solution.cost, solution.centroids.rows, solution.centroids.cols
+        "solved k={k} ({}): cost {:.6e}, {} centroids x {} dims",
+        solution.decoder.name(),
+        solution.cost,
+        solution.centroids.rows,
+        solution.centroids.cols
     );
     if let Some(path) = out {
         solution.to_file(&path)?;

@@ -15,6 +15,7 @@ use super::protocol::{
 };
 use crate::api::ApiError;
 use crate::ckm::Solution;
+use crate::decoder::DecoderSpec;
 use crate::store::SketchContext;
 use crate::util::digest::Fnv1a;
 use crate::util::framing::{read_frame, write_frame};
@@ -80,6 +81,7 @@ impl ServiceClient {
         let mut stream = stream;
         write_frame(&mut stream, &protocol::encode_request(&Request::Hello {
             producer: producer.to_string(),
+            protocol: protocol::PROTOCOL_VERSION,
         }))?;
         let ack = match read_response(&mut stream)? {
             Response::HelloAck(ack) => ack,
@@ -92,10 +94,13 @@ impl ServiceClient {
                 )))
             }
         };
-        if ack.protocol != protocol::PROTOCOL_VERSION {
+        // The ack carries the *negotiated* session version (≤ ours).
+        if !(protocol::MIN_PROTOCOL_VERSION..=protocol::PROTOCOL_VERSION).contains(&ack.protocol)
+        {
             return Err(ApiError::ServiceProtocol(format!(
-                "daemon speaks protocol {}, this build speaks {}",
+                "daemon negotiated protocol {}, this build speaks {}..={}",
                 ack.protocol,
+                protocol::MIN_PROTOCOL_VERSION,
                 protocol::PROTOCOL_VERSION
             )));
         }
@@ -164,19 +169,40 @@ impl ServiceClient {
     }
 
     /// Solve the merged newest-`last_e`-epochs window (`None` = all
-    /// surviving epochs) for `k` centroids.
+    /// surviving epochs) for `k` centroids with the default CLOMPR decoder.
     pub fn solve_window(&mut self, last_e: Option<usize>, k: usize) -> Result<Solution, ApiError> {
-        let req = Request::SolveWindow { last_e: last_e.unwrap_or(0) as u64, k: k as u64 };
+        self.solve_window_with(last_e, k, DecoderSpec::Clompr)
+    }
+
+    /// Solve the merged window with an explicit decoder (protocol v3).
+    pub fn solve_window_with(
+        &mut self,
+        last_e: Option<usize>,
+        k: usize,
+        decoder: DecoderSpec,
+    ) -> Result<Solution, ApiError> {
+        let req = Request::SolveWindow { last_e: last_e.unwrap_or(0) as u64, k: k as u64, decoder };
         match self.call(&req)? {
-            Response::Solved(s) => Ok(s.into_solution()?),
+            Response::Solved(s) => Ok(stamped(s.into_solution()?, decoder)),
             other => Err(ApiError::ServiceProtocol(format!("expected Solved, got {other:?}"))),
         }
     }
 
-    /// Solve the merged λ-decayed snapshot for `k` centroids.
+    /// Solve the merged λ-decayed snapshot for `k` centroids with the
+    /// default CLOMPR decoder.
     pub fn solve_decayed(&mut self, lambda: f64, k: usize) -> Result<Solution, ApiError> {
-        match self.call(&Request::SolveDecayed { lambda, k: k as u64 })? {
-            Response::Solved(s) => Ok(s.into_solution()?),
+        self.solve_decayed_with(lambda, k, DecoderSpec::Clompr)
+    }
+
+    /// Solve the λ-decayed snapshot with an explicit decoder (protocol v3).
+    pub fn solve_decayed_with(
+        &mut self,
+        lambda: f64,
+        k: usize,
+        decoder: DecoderSpec,
+    ) -> Result<Solution, ApiError> {
+        match self.call(&Request::SolveDecayed { lambda, k: k as u64, decoder })? {
+            Response::Solved(s) => Ok(stamped(s.into_solution()?, decoder)),
             other => Err(ApiError::ServiceProtocol(format!("expected Solved, got {other:?}"))),
         }
     }
@@ -217,6 +243,13 @@ impl ServiceClient {
             }
         }
     }
+}
+
+/// `WireSolution` doesn't carry the decoder (the requester already knows
+/// it); stamp the requested identity on the received solution.
+fn stamped(mut sol: Solution, decoder: DecoderSpec) -> Solution {
+    sol.decoder = decoder;
+    sol
 }
 
 fn read_response(stream: &mut dyn Transport) -> Result<Response, ApiError> {

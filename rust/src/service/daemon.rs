@@ -21,6 +21,7 @@ use super::protocol::{
 };
 use crate::api::{ApiError, Ckm};
 use crate::ckm::Solution;
+use crate::decoder::DecoderSpec;
 use crate::store::ShardedStore;
 use crate::util::digest::Fnv1a;
 use crate::util::framing::{read_frame, write_frame, FrameError};
@@ -47,13 +48,24 @@ const POLL_INTERVAL: Duration = Duration::from_millis(25);
 /// How long `serve` waits for in-flight connections to drain on shutdown.
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
 
-/// A solve request's identity (λ compared by bit pattern so the key is
-/// `Eq`-safe).
+/// A solve request's identity: the snapshot shape plus the decoder that
+/// answers it (λ compared by bit pattern so the key is `Eq`-safe). The
+/// decoder is part of the identity everywhere a `Query` flows — the solve
+/// cache, the hot list, and the background refresh — so a CLOMPR answer
+/// is never served for (or refreshed into) a sketch-shift request.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 enum Query {
     /// Newest `e` epochs; 0 = everything surviving.
-    Window(u64),
-    Decayed(u64),
+    Window(u64, DecoderSpec),
+    Decayed(u64, DecoderSpec),
+}
+
+impl Query {
+    fn decoder(&self) -> DecoderSpec {
+        match self {
+            Query::Window(_, d) | Query::Decayed(_, d) => *d,
+        }
+    }
 }
 
 /// One listening endpoint. `bind` parses `tcp:HOST:PORT` or `unix:PATH`
@@ -120,16 +132,16 @@ struct ServiceState {
 impl ServiceState {
     fn artifact_for(&self, q: Query) -> Result<(crate::api::SketchArtifact, Vec<u64>), ApiError> {
         match q {
-            Query::Window(0) => self.store.merged_window(None),
-            Query::Window(e) => self.store.merged_window(Some(e as usize)),
-            Query::Decayed(bits) => self.store.merged_decayed(f64::from_bits(bits)),
+            Query::Window(0, _) => self.store.merged_window(None),
+            Query::Window(e, _) => self.store.merged_window(Some(e as usize)),
+            Query::Decayed(bits, _) => self.store.merged_decayed(f64::from_bits(bits)),
         }
     }
 
     /// Serve a solve: merge a consistent snapshot (cheap, O(shards·m)),
     /// then answer from the cache when the generation vector is unchanged
-    /// — the CLOMPR decode is the expensive part and never re-runs for an
-    /// unchanged store.
+    /// — the decode is the expensive part and never re-runs for an
+    /// unchanged store and an unchanged decoder.
     fn solve_query(&self, q: Query, k: u64, counted: bool) -> Result<Solution, ApiError> {
         let (artifact, generations) = self.artifact_for(q)?;
         {
@@ -147,7 +159,7 @@ impl ServiceState {
         if counted {
             self.cache_misses.fetch_add(1, Ordering::Relaxed);
         }
-        let solution = self.solver.solve(&artifact, k as usize)?;
+        let solution = self.solver.solve_with_decoder(&artifact, k as usize, q.decoder())?;
         let mut cache = self.cache.lock().unwrap();
         // Another thread may have solved the same snapshot meanwhile;
         // last write wins, both computed the identical solution.
@@ -188,6 +200,7 @@ impl ServiceState {
             refreshed_solves: self.refreshed_solves.load(Ordering::Relaxed),
             connections: self.connections.load(Ordering::Relaxed),
             simd_path: crate::util::fastmath::active_path().to_string(),
+            decoders: DecoderSpec::available_names().iter().map(|s| s.to_string()).collect(),
         }
     }
 
@@ -358,8 +371,14 @@ impl Drop for ConnGuard<'_> {
     }
 }
 
-fn send(stream: &mut dyn Conn, resp: &Response) -> Result<(), FrameError> {
-    write_frame(stream, &protocol::encode_response(resp))
+/// Frame a response for a session negotiated at `session_protocol` (only
+/// `Status` encodes differently across supported versions).
+fn send(
+    stream: &mut dyn Conn,
+    resp: &Response,
+    session_protocol: u32,
+) -> Result<(), FrameError> {
+    write_frame(stream, &protocol::encode_response_versioned(resp, session_protocol))
 }
 
 /// Adapts the framed connection into an [`Write`] sink for
@@ -380,7 +399,8 @@ impl ChunkSender<'_> {
         }
         self.digest.update(&self.buf);
         let bytes = std::mem::replace(&mut self.buf, Vec::with_capacity(CHECKPOINT_CHUNK_BYTES));
-        send(self.stream, &Response::CheckpointChunk { bytes })
+        // chunk frames encode identically across supported versions
+        send(self.stream, &Response::CheckpointChunk { bytes }, protocol::PROTOCOL_VERSION)
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::BrokenPipe, e.to_string()))
     }
 }
@@ -412,16 +432,20 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
     state.connections.fetch_add(1, Ordering::SeqCst);
     let _guard = ConnGuard(&state.connections);
 
-    // Handshake: the first frame must be Hello; it keys the shard.
-    let shard = match read_frame(&mut stream) {
+    // Handshake: the first frame must be Hello; it keys the shard and
+    // pins the session protocol (the ack echoes the negotiated version,
+    // so a v2 client's strict version check keeps passing).
+    let (shard, proto) = match read_frame(&mut stream) {
         Ok(Some(payload)) => match protocol::decode_request(&payload) {
-            Ok(Request::Hello { producer }) => {
-                let ack = state.hello_ack(&producer);
+            Ok(Request::Hello { producer, protocol: peer }) => {
+                let proto = peer.min(protocol::PROTOCOL_VERSION);
+                let mut ack = state.hello_ack(&producer);
+                ack.protocol = proto;
                 let shard = ack.shard_index as usize;
-                if send(&mut stream, &Response::HelloAck(ack)).is_err() {
+                if send(&mut stream, &Response::HelloAck(ack), proto).is_err() {
                     return;
                 }
-                shard
+                (shard, proto)
             }
             Ok(other) => {
                 let _ = send(
@@ -430,6 +454,7 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                         code: error_code::PROTOCOL,
                         message: format!("expected Hello first, got {other:?}"),
                     },
+                    protocol::PROTOCOL_VERSION,
                 );
                 return;
             }
@@ -437,6 +462,7 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                 let _ = send(
                     &mut stream,
                     &Response::Error { code: error_code::PROTOCOL, message: e.to_string() },
+                    protocol::PROTOCOL_VERSION,
                 );
                 return;
             }
@@ -455,6 +481,7 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                 let _ = send(
                     &mut stream,
                     &Response::Error { code: error_code::PROTOCOL, message: e.to_string() },
+                    proto,
                 );
                 return;
             }
@@ -467,6 +494,7 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                 if send(
                     &mut stream,
                     &Response::Error { code: error_code::PROTOCOL, message: e.to_string() },
+                    proto,
                 )
                 .is_err()
                 {
@@ -482,6 +510,7 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                     code: error_code::SHUTTING_DOWN,
                     message: "daemon is shutting down".to_string(),
                 },
+                proto,
             );
             return;
         }
@@ -493,6 +522,7 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                         code: error_code::PROTOCOL,
                         message: "session already established".to_string(),
                     },
+                    proto,
                 )
                 .is_err()
                 {
@@ -501,7 +531,7 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
             }
             Request::ReserveRows { n_rows } => {
                 let offset = state.store.reserve(shard, n_rows as usize) as u64;
-                if send(&mut stream, &Response::Reserved { offset }).is_err() {
+                if send(&mut stream, &Response::Reserved { offset }, proto).is_err() {
                     return;
                 }
             }
@@ -516,7 +546,7 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                         message: e.to_string(),
                     },
                 };
-                if send(&mut stream, &resp).is_err() {
+                if send(&mut stream, &resp, proto).is_err() {
                     return;
                 }
             }
@@ -528,25 +558,26 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                     .flat_map(|(s, ids)| ids.into_iter().map(move |id| (s as u32, id)))
                     .collect();
                 state.ring_refresh_bell();
-                if send(&mut stream, &Response::Rotated { evicted }).is_err() {
+                if send(&mut stream, &Response::Rotated { evicted }, proto).is_err() {
                     return;
                 }
             }
-            Request::SolveWindow { last_e, k } => {
-                let resp = match state.solve_query(Query::Window(last_e), k, true) {
+            Request::SolveWindow { last_e, k, decoder } => {
+                let resp = match state.solve_query(Query::Window(last_e, decoder), k, true) {
                     Ok(sol) => Response::Solved(WireSolution::from_solution(&sol)),
                     Err(e) => error_response(&e),
                 };
-                if send(&mut stream, &resp).is_err() {
+                if send(&mut stream, &resp, proto).is_err() {
                     return;
                 }
             }
-            Request::SolveDecayed { lambda, k } => {
-                let resp = match state.solve_query(Query::Decayed(lambda.to_bits()), k, true) {
-                    Ok(sol) => Response::Solved(WireSolution::from_solution(&sol)),
-                    Err(e) => error_response(&e),
-                };
-                if send(&mut stream, &resp).is_err() {
+            Request::SolveDecayed { lambda, k, decoder } => {
+                let resp =
+                    match state.solve_query(Query::Decayed(lambda.to_bits(), decoder), k, true) {
+                        Ok(sol) => Response::Solved(WireSolution::from_solution(&sol)),
+                        Err(e) => error_response(&e),
+                    };
+                if send(&mut stream, &resp, proto).is_err() {
                     return;
                 }
             }
@@ -560,7 +591,7 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                     crate::store::checkpoint::store_set_image(state.store.base_shard(), &snapshot)
                 };
                 let total_len = image.total_len();
-                if send(&mut stream, &Response::CheckpointBegin { total_len }).is_err() {
+                if send(&mut stream, &Response::CheckpointBegin { total_len }, proto).is_err() {
                     return;
                 }
                 // Stream section-by-section through a bounded chunker; the
@@ -578,17 +609,19 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                     sender.digest.digest()
                 };
                 let end = Response::CheckpointEnd { digest, total_len };
-                if send(&mut stream, &end).is_err() {
+                if send(&mut stream, &end, proto).is_err() {
                     return;
                 }
             }
             Request::Status => {
-                if send(&mut stream, &Response::Status(state.status())).is_err() {
+                // the one version-sensitive response: v2 sessions get the
+                // frame without the trailing decoder registry
+                if send(&mut stream, &Response::Status(state.status()), proto).is_err() {
                     return;
                 }
             }
             Request::Shutdown => {
-                let _ = send(&mut stream, &Response::ShutdownAck);
+                let _ = send(&mut stream, &Response::ShutdownAck, proto);
                 state.shutdown.store(true, Ordering::SeqCst);
                 state.refresh_cv.notify_all();
                 return;

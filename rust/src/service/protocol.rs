@@ -18,6 +18,7 @@
 use crate::api::{ApiError, OpSpec, QuantizationMode};
 use crate::ckm::Solution;
 use crate::data::dataset::Bounds;
+use crate::decoder::DecoderSpec;
 use crate::linalg::{CVec, Mat};
 use crate::sketch::quantize::PackedPartial;
 use crate::sketch::streaming::SketchAccumulator;
@@ -28,7 +29,15 @@ use crate::util::framing::{ByteReader, ByteWriter, WireError};
 
 /// Wire protocol version; bumped on any incompatible message change.
 /// v2: `StatusInfo` carries the daemon's active SIMD dispatch path.
-pub const PROTOCOL_VERSION: u32 = 2;
+/// v3: solve verbs name their decoder (trailing byte; absent = CLOMPR),
+///     `StatusInfo` lists the daemon's decoder registry. v2 peers are
+///     still accepted: `Hello` carries the peer's version and the ack
+///     echoes the negotiated one, so old clients keep working and
+///     implicitly solve with CLOMPR.
+pub const PROTOCOL_VERSION: u32 = 3;
+
+/// Oldest peer protocol this build still speaks.
+pub const MIN_PROTOCOL_VERSION: u32 = 2;
 
 /// Sanity cap on decoded shape fields (m, dims, k, counts). Far above any
 /// real configuration, far below anything that could exhaust memory when
@@ -81,8 +90,9 @@ const CHUNK_PACKED: u8 = 1;
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     /// Open a session: identify the producer (its id keys the shard
-    /// assignment) and negotiate capabilities.
-    Hello { producer: String },
+    /// assignment) and negotiate capabilities. `protocol` is the peer's
+    /// version; the ack echoes the negotiated session version.
+    Hello { producer: String, protocol: u32 },
     /// Phase 1: reserve `n_rows` global row indices on this session's
     /// shard. The returned offset keys the dither stream client-side.
     ReserveRows { n_rows: u64 },
@@ -91,10 +101,11 @@ pub enum Request {
     /// Seal the current epoch on every shard (lockstep time).
     Rotate,
     /// Solve the merged newest-`last_e`-epochs window (`0` = everything
-    /// surviving) for `k` centroids.
-    SolveWindow { last_e: u64, k: u64 },
+    /// surviving) for `k` centroids with `decoder` (v2 peers omit the
+    /// trailing decoder byte and get CLOMPR).
+    SolveWindow { last_e: u64, k: u64, decoder: DecoderSpec },
     /// Solve the merged λ-decayed snapshot for `k` centroids.
-    SolveDecayed { lambda: f64, k: u64 },
+    SolveDecayed { lambda: f64, k: u64, decoder: DecoderSpec },
     /// Stream the whole store-set checkpoint back, digest-while-transfer.
     Checkpoint,
     Status,
@@ -253,10 +264,13 @@ impl WireSolution {
                 self.alpha.len()
             )));
         }
+        // The wire carries no decoder (WireSolution is shape-stable across
+        // protocol versions); the client stamps the decoder it requested.
         Ok(Solution {
             centroids: Mat { rows: k, cols: n, data: self.centroids },
             alpha: self.alpha,
             cost: self.cost,
+            decoder: DecoderSpec::default(),
         })
     }
 }
@@ -287,6 +301,9 @@ pub struct StatusInfo {
     /// or `neon`. Introspection only — provenance records `TrigBackend`,
     /// never this (all paths are bit-identical). New in protocol v2.
     pub simd_path: String,
+    /// Decoder names the daemon's registry can solve with (trailing
+    /// field, new in protocol v3; empty when the peer speaks v2).
+    pub decoders: Vec<String>,
 }
 
 // -- encoding ------------------------------------------------------------
@@ -379,9 +396,9 @@ fn get_chunk(r: &mut ByteReader) -> Result<WireChunk, WireError> {
 pub fn encode_request(req: &Request) -> Vec<u8> {
     let mut w = ByteWriter::new();
     match req {
-        Request::Hello { producer } => {
+        Request::Hello { producer, protocol } => {
             w.u8(T_HELLO);
-            w.u32(PROTOCOL_VERSION);
+            w.u32(*protocol);
             w.str(producer);
         }
         Request::ReserveRows { n_rows } => {
@@ -393,21 +410,35 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             put_chunk(&mut w, chunk);
         }
         Request::Rotate => w.u8(T_ROTATE),
-        Request::SolveWindow { last_e, k } => {
+        Request::SolveWindow { last_e, k, decoder } => {
             w.u8(T_SOLVE_WINDOW);
             w.u64(*last_e);
             w.u64(*k);
+            w.u8(decoder.wire_code());
         }
-        Request::SolveDecayed { lambda, k } => {
+        Request::SolveDecayed { lambda, k, decoder } => {
             w.u8(T_SOLVE_DECAYED);
             w.f64(*lambda);
             w.u64(*k);
+            w.u8(decoder.wire_code());
         }
         Request::Checkpoint => w.u8(T_CHECKPOINT),
         Request::Status => w.u8(T_STATUS),
         Request::Shutdown => w.u8(T_SHUTDOWN),
     }
     w.into_vec()
+}
+
+/// Read the optional trailing decoder byte of a v3 solve verb. A v2 peer
+/// stops after `k` — that is a valid frame and means CLOMPR; a present
+/// byte must name a registered decoder.
+fn get_decoder(r: &mut ByteReader) -> Result<DecoderSpec, WireError> {
+    if r.remaining() == 0 {
+        return Ok(DecoderSpec::Clompr);
+    }
+    let code = r.u8()?;
+    DecoderSpec::from_wire(code)
+        .ok_or_else(|| WireError::Invalid(format!("unknown decoder code {code}")))
 }
 
 /// Decode a request payload. Strict: unknown tags, short fields and
@@ -417,18 +448,25 @@ pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
     let req = match r.u8()? {
         T_HELLO => {
             let protocol = r.u32()?;
-            if protocol != PROTOCOL_VERSION {
+            if !(MIN_PROTOCOL_VERSION..=PROTOCOL_VERSION).contains(&protocol) {
                 return Err(WireError::Invalid(format!(
-                    "peer speaks protocol {protocol}, this build speaks {PROTOCOL_VERSION}"
+                    "peer speaks protocol {protocol}, this build speaks \
+                     {MIN_PROTOCOL_VERSION}..={PROTOCOL_VERSION}"
                 )));
             }
-            Request::Hello { producer: r.str()? }
+            Request::Hello { producer: r.str()?, protocol }
         }
         T_RESERVE => Request::ReserveRows { n_rows: r.u64()? },
         T_ABSORB => Request::Absorb { chunk: get_chunk(&mut r)? },
         T_ROTATE => Request::Rotate,
-        T_SOLVE_WINDOW => Request::SolveWindow { last_e: r.u64()?, k: r.u64()? },
-        T_SOLVE_DECAYED => Request::SolveDecayed { lambda: r.f64()?, k: r.u64()? },
+        T_SOLVE_WINDOW => {
+            let (last_e, k) = (r.u64()?, r.u64()?);
+            Request::SolveWindow { last_e, k, decoder: get_decoder(&mut r)? }
+        }
+        T_SOLVE_DECAYED => {
+            let (lambda, k) = (r.f64()?, r.u64()?);
+            Request::SolveDecayed { lambda, k, decoder: get_decoder(&mut r)? }
+        }
         T_CHECKPOINT => Request::Checkpoint,
         T_STATUS => Request::Status,
         T_SHUTDOWN => Request::Shutdown,
@@ -438,8 +476,16 @@ pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
     Ok(req)
 }
 
-/// Encode a response into one frame payload.
+/// Encode a response at the current protocol version.
 pub fn encode_response(resp: &Response) -> Vec<u8> {
+    encode_response_versioned(resp, PROTOCOL_VERSION)
+}
+
+/// Encode a response for a session negotiated at `protocol`. The only
+/// version-sensitive message is `Status`: its trailing `decoders` list is
+/// a v3 field, and a v2 peer's strict decoder would reject the extra
+/// bytes, so it is written only for v3 sessions.
+pub fn encode_response_versioned(resp: &Response, protocol: u32) -> Vec<u8> {
     let mut w = ByteWriter::new();
     match resp {
         Response::HelloAck(a) => {
@@ -512,6 +558,12 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
             w.u64(s.refreshed_solves);
             w.u64(s.connections);
             w.str(&s.simd_path);
+            if protocol >= 3 {
+                w.u64(s.decoders.len() as u64);
+                for d in &s.decoders {
+                    w.str(d);
+                }
+            }
         }
         Response::Error { code, message } => {
             w.u8(T_ERROR);
@@ -576,13 +628,27 @@ pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
                     current_epoch_id: r.u64()?,
                 });
             }
+            let cache_hits = r.u64()?;
+            let cache_misses = r.u64()?;
+            let refreshed_solves = r.u64()?;
+            let connections = r.u64()?;
+            let simd_path = r.str()?;
+            // v3 trailing field; a v2 daemon simply stops here.
+            let mut decoders = Vec::new();
+            if r.remaining() > 0 {
+                let n = r.usize_capped(MAX_SHAPE, "decoder count")?;
+                for _ in 0..n {
+                    decoders.push(r.str()?);
+                }
+            }
             Response::Status(StatusInfo {
                 shards,
-                cache_hits: r.u64()?,
-                cache_misses: r.u64()?,
-                refreshed_solves: r.u64()?,
-                connections: r.u64()?,
-                simd_path: r.str()?,
+                cache_hits,
+                cache_misses,
+                refreshed_solves,
+                connections,
+                simd_path,
+                decoders,
             })
         }
         T_ERROR => {
@@ -615,12 +681,13 @@ mod tests {
             bounds: bounds(2),
         });
         let reqs = vec![
-            Request::Hello { producer: "edge-7".to_string() },
+            Request::Hello { producer: "edge-7".to_string(), protocol: PROTOCOL_VERSION },
             Request::ReserveRows { n_rows: 4096 },
             Request::Absorb { chunk: dense },
             Request::Rotate,
-            Request::SolveWindow { last_e: 0, k: 10 },
-            Request::SolveDecayed { lambda: 0.5, k: 3 },
+            Request::SolveWindow { last_e: 0, k: 10, decoder: DecoderSpec::Clompr },
+            Request::SolveWindow { last_e: 2, k: 4, decoder: DecoderSpec::SketchShift },
+            Request::SolveDecayed { lambda: 0.5, k: 3, decoder: DecoderSpec::Hierarchical },
             Request::Checkpoint,
             Request::Status,
             Request::Shutdown,
@@ -677,6 +744,7 @@ mod tests {
                 refreshed_solves: 1,
                 connections: 3,
                 simd_path: "avx2".to_string(),
+                decoders: vec!["clompr".to_string(), "sketch-shift".to_string()],
             }),
             Response::Error { code: error_code::PROTOCOL, message: "nope".to_string() },
             Response::ShutdownAck,
@@ -699,10 +767,77 @@ mod tests {
 
     #[test]
     fn hello_rejects_protocol_mismatch() {
-        let mut bytes = encode_request(&Request::Hello { producer: "p".to_string() });
+        let hello = Request::Hello { producer: "p".to_string(), protocol: PROTOCOL_VERSION };
+        let mut bytes = encode_request(&hello);
         // protocol version lives right after the tag byte
         bytes[1..5].copy_from_slice(&99u32.to_le_bytes());
         assert!(matches!(decode_request(&bytes), Err(WireError::Invalid(_))));
+        // ...but a v2 peer is in the supported range and decodes fine
+        bytes[1..5].copy_from_slice(&2u32.to_le_bytes());
+        assert_eq!(
+            decode_request(&bytes).unwrap(),
+            Request::Hello { producer: "p".to_string(), protocol: 2 }
+        );
+    }
+
+    #[test]
+    fn v2_solve_frames_default_to_clompr() {
+        // A v2 peer's SolveWindow/SolveDecayed stop after `k` — no decoder
+        // byte. The new daemon must decode them as CLOMPR requests.
+        let v3 = encode_request(&Request::SolveWindow {
+            last_e: 1,
+            k: 4,
+            decoder: DecoderSpec::Clompr,
+        });
+        let v2 = &v3[..v3.len() - 1]; // strip the trailing decoder byte
+        assert_eq!(
+            decode_request(v2).unwrap(),
+            Request::SolveWindow { last_e: 1, k: 4, decoder: DecoderSpec::Clompr }
+        );
+        let v3 = encode_request(&Request::SolveDecayed {
+            lambda: 0.25,
+            k: 2,
+            decoder: DecoderSpec::Clompr,
+        });
+        let v2 = &v3[..v3.len() - 1];
+        assert_eq!(
+            decode_request(v2).unwrap(),
+            Request::SolveDecayed { lambda: 0.25, k: 2, decoder: DecoderSpec::Clompr }
+        );
+        // a present-but-unknown decoder byte is a typed error
+        let mut bad = encode_request(&Request::SolveWindow {
+            last_e: 1,
+            k: 4,
+            decoder: DecoderSpec::Clompr,
+        });
+        *bad.last_mut().unwrap() = 200;
+        assert!(matches!(decode_request(&bad), Err(WireError::Invalid(_))));
+    }
+
+    #[test]
+    fn status_decoders_field_is_version_gated() {
+        let status = Response::Status(StatusInfo {
+            shards: vec![],
+            cache_hits: 0,
+            cache_misses: 0,
+            refreshed_solves: 0,
+            connections: 1,
+            simd_path: "scalar".to_string(),
+            decoders: vec!["clompr".to_string()],
+        });
+        // a v2 session gets the v2 frame: no trailing list, decodes empty
+        let v2_bytes = encode_response_versioned(&status, 2);
+        let Response::Status(back) = decode_response(&v2_bytes).unwrap() else {
+            panic!("wrong verb")
+        };
+        assert!(back.decoders.is_empty());
+        // a v3 session round-trips the registry
+        let v3_bytes = encode_response_versioned(&status, 3);
+        assert!(v3_bytes.len() > v2_bytes.len());
+        let Response::Status(back) = decode_response(&v3_bytes).unwrap() else {
+            panic!("wrong verb")
+        };
+        assert_eq!(back.decoders, vec!["clompr".to_string()]);
     }
 
     #[test]

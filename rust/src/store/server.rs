@@ -11,11 +11,13 @@
 //! plus one `m`-length merge per chunk, so producers scale instead of
 //! serializing on the sketch math. Solves snapshot the requested
 //! window/decay artifact under the lock (cheap: a merge over ≤
-//! ring-capacity epochs) and run CLOMPR *outside* it, so a long decode
-//! never stalls ingest. Repeated queries against an unchanged store are
-//! answered from a small solve cache keyed by `(query, K, store
-//! generation)` — any ingest or rotation bumps the generation and
-//! implicitly invalidates every cached solution.
+//! ring-capacity epochs) and run the decoder *outside* it, so a long
+//! decode never stalls ingest. Repeated queries against an unchanged
+//! store are answered from a small solve cache keyed by `(query, K,
+//! decoder, store generation)` — any ingest or rotation bumps the
+//! generation and implicitly invalidates every cached solution, and a
+//! solution decoded by one algorithm is never served for a request that
+//! named another.
 //!
 //! Concurrency semantics: rows belong to whichever epoch is current when
 //! their chunk's *merge* reaches the store, and the sketch value is
@@ -30,17 +32,21 @@ use super::ring::{SketchContext, SketchStore};
 use crate::api::{ApiError, Ckm, SketchArtifact};
 use crate::ckm::Solution;
 use crate::coordinator::batcher::Batcher;
+use crate::decoder::DecoderSpec;
 use std::sync::Mutex;
 
-/// How many `(query, K)` solutions the server keeps per store generation.
+/// How many `(query, K, decoder)` solutions the server keeps per store
+/// generation.
 const SOLVE_CACHE_CAP: usize = 16;
 
-/// A solve-cache key: the query shape plus `K`.
+/// A solve-cache key: the query shape, `K`, and the decoder that produced
+/// the cached solution — two decoders legitimately return different
+/// centroids for the same snapshot, so they must never share an entry.
 #[derive(Clone, Debug, PartialEq)]
 enum SolveKey {
-    Window { last_e: usize, k: usize },
+    Window { last_e: usize, k: usize, decoder: DecoderSpec },
     /// λ keyed by bit pattern (exact: the caller's f64 is the key).
-    Decayed { lambda_bits: u64, k: usize },
+    Decayed { lambda_bits: u64, k: usize, decoder: DecoderSpec },
 }
 
 #[derive(Debug, Default)]
@@ -239,23 +245,47 @@ impl SketchServer {
         Ok(())
     }
 
-    /// Solve `k` centroids over the newest `last_e` epochs (cached).
+    /// Solve `k` centroids over the newest `last_e` epochs (cached) with
+    /// the facade's configured decoder.
     pub fn solve_window(&self, last_e: usize, k: usize) -> Result<Solution, ApiError> {
+        self.solve_window_with(last_e, k, self.solver.config().decoder)
+    }
+
+    /// Solve `k` centroids over the newest `last_e` epochs with an explicit
+    /// decoder (cached; the decoder is part of the cache key).
+    pub fn solve_window_with(
+        &self,
+        last_e: usize,
+        k: usize,
+        decoder: DecoderSpec,
+    ) -> Result<Solution, ApiError> {
         let (generation, artifact) = {
             let store = self.store.lock().unwrap();
             (store.generation(), store.window(last_e)?)
         };
-        self.solve_cached(generation, SolveKey::Window { last_e, k }, &artifact, k)
+        self.solve_cached(generation, SolveKey::Window { last_e, k, decoder }, &artifact, k, decoder)
     }
 
-    /// Solve `k` centroids over the λ-decayed sketch (cached).
+    /// Solve `k` centroids over the λ-decayed sketch (cached) with the
+    /// facade's configured decoder.
     pub fn solve_decayed(&self, lambda: f64, k: usize) -> Result<Solution, ApiError> {
+        self.solve_decayed_with(lambda, k, self.solver.config().decoder)
+    }
+
+    /// Solve `k` centroids over the λ-decayed sketch with an explicit
+    /// decoder (cached; the decoder is part of the cache key).
+    pub fn solve_decayed_with(
+        &self,
+        lambda: f64,
+        k: usize,
+        decoder: DecoderSpec,
+    ) -> Result<Solution, ApiError> {
         let (generation, artifact) = {
             let store = self.store.lock().unwrap();
             (store.generation(), store.decayed(lambda)?)
         };
-        let key = SolveKey::Decayed { lambda_bits: lambda.to_bits(), k };
-        self.solve_cached(generation, key, &artifact, k)
+        let key = SolveKey::Decayed { lambda_bits: lambda.to_bits(), k, decoder };
+        self.solve_cached(generation, key, &artifact, k, decoder)
     }
 
     /// Solve with the facade's defaults: the builder's `.decay(λ)` when
@@ -273,12 +303,13 @@ impl SketchServer {
         key: SolveKey,
         artifact: &SketchArtifact,
         k: usize,
+        decoder: DecoderSpec,
     ) -> Result<Solution, ApiError> {
         if let Some(sol) = self.cache.lock().unwrap().get(generation, &key) {
             return Ok(sol);
         }
-        // CLOMPR runs outside both locks: ingest keeps flowing.
-        let sol = self.solver.solve(artifact, k)?;
+        // The decoder runs outside both locks: ingest keeps flowing.
+        let sol = self.solver.solve_with_decoder(artifact, k, decoder)?;
         self.cache.lock().unwrap().put(generation, key, &sol);
         Ok(sol)
     }
@@ -388,6 +419,37 @@ mod tests {
         let s = srv.stats();
         assert_eq!(s.cache_hits, 1);
         assert!(s.cache_misses >= 3);
+    }
+
+    #[test]
+    fn solve_cache_never_crosses_decoders() {
+        // A cached CLOMPR answer must not be served for a sketch-shift
+        // request against the same (query, K, generation) — the decoder is
+        // part of the key, not a post-hoc label.
+        let srv = server(64, 2);
+        let mut rng = Rng::new(9);
+        srv.ingest(&gen::mat_normal(&mut rng, 400, 2));
+        let clompr = srv.solve_window(1, 2).unwrap();
+        assert_eq!(clompr.decoder, DecoderSpec::Clompr);
+        assert_eq!(srv.stats().cache_misses, 1);
+        // same query + K, different decoder: must MISS and re-solve
+        let shift = srv.solve_window_with(1, 2, DecoderSpec::SketchShift).unwrap();
+        assert_eq!(shift.decoder, DecoderSpec::SketchShift);
+        let s = srv.stats();
+        assert_eq!(s.cache_hits, 0);
+        assert_eq!(s.cache_misses, 2);
+        // each decoder now hits its own entry
+        let clompr2 = srv.solve_window(1, 2).unwrap();
+        let shift2 = srv.solve_window_with(1, 2, DecoderSpec::SketchShift).unwrap();
+        assert_eq!(srv.stats().cache_hits, 2);
+        assert_eq!(clompr2.centroids.data, clompr.centroids.data);
+        assert_eq!(shift2.centroids.data, shift.centroids.data);
+        // decayed queries key on the decoder too
+        let d1 = srv.solve_decayed_with(0.5, 2, DecoderSpec::Clompr).unwrap();
+        let d2 = srv.solve_decayed_with(0.5, 2, DecoderSpec::Hierarchical).unwrap();
+        assert_eq!(d1.decoder, DecoderSpec::Clompr);
+        assert_eq!(d2.decoder, DecoderSpec::Hierarchical);
+        assert_eq!(srv.stats().cache_misses, 4);
     }
 
     #[test]

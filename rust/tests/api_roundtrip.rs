@@ -1,13 +1,15 @@
 //! Integration tests for the sketch-as-artifact API: durable round trips,
-//! exact merges, builder-default parity with the legacy pipeline,
-//! operator-mismatch rejection, and golden-fixture coverage of the v1/v2
-//! on-disk formats (so format regressions are caught by CI, not by users).
+//! exact merges, pinned builder defaults, operator-mismatch rejection,
+//! and golden-fixture coverage of the v1/v2 on-disk formats (so format
+//! regressions are caught by CI, not by users).
 
 use ckm::api::{ApiError, Ckm, QuantizationMode, SketchArtifact};
-use ckm::coordinator::pipeline::run_pipeline;
-use ckm::coordinator::{PipelineConfig, SketcherConfig};
+use ckm::ckm::InitStrategy;
+use ckm::coordinator::{Backend, SketcherConfig};
 use ckm::data::dataset::SliceSource;
 use ckm::data::gmm::GmmConfig;
+use ckm::decoder::DecoderSpec;
+use ckm::sketch::RadiusKind;
 use ckm::util::json::Json;
 use ckm::util::rng::Rng;
 
@@ -97,58 +99,48 @@ fn artifact_save_load_merge_bit_for_bit() {
     assert!(sol.cost.is_finite());
 }
 
-/// `Ckm::builder()` defaults carry the `PipelineConfig::new` +
-/// `CkmOptions::default` knob values, and the `run_pipeline` shim is a
-/// faithful delegate: shim and direct facade calls agree bit-for-bit.
-///
-/// (This proves shim ≡ facade and default-knob parity — NOT bit-parity
-/// with pre-artifact releases: the operator draw moved to a dedicated
-/// provenance-derived RNG stream, which changes seeded numerical output
-/// by design; see the note on `run_pipeline`.)
+/// `Ckm::builder()` defaults are pinned to the knob values the retired
+/// `run_pipeline` shim delegated (and deployed artifacts were produced
+/// under), so they cannot drift silently; the default-configured facade
+/// still runs stream → sketch → solve end to end and stamps CLOMPR.
 #[test]
-fn builder_defaults_reproduce_legacy_pipeline() {
+fn builder_defaults_are_pinned_and_run_end_to_end() {
     let (k, m, n_dims) = (3usize, 128usize, 4usize);
-    // ≤ one default chunk (4096 rows): the sketch is then bit-reproducible
-    // across runs (multi-chunk runs vary in fp addition order with worker
-    // scheduling), so legacy and facade outputs can be compared exactly.
     let data_cfg = GmmConfig::paper_default(k, n_dims, 4000);
     let mut sample = vec![0.0; 1000 * n_dims];
     let got = data_cfg.stream(0).next_chunk(&mut sample);
     sample.truncate(got * n_dims);
 
-    // Legacy config surface, untouched defaults.
-    let legacy_cfg = PipelineConfig::new(k, m);
-    let mut src = data_cfg.stream(0);
-    let legacy = run_pipeline(&legacy_cfg, &mut src, Some(&sample)).unwrap();
-
-    // Facade with builder defaults (only m set, as PipelineConfig::new does).
+    // Facade with builder defaults (only m set, as the shim's
+    // `PipelineConfig::new(k, m)` did).
     let ckm = Ckm::builder().frequencies(m).build().unwrap();
-    let mut src2 = data_cfg.stream(0);
-    let (artifact, _) = ckm.sketch_from(&mut src2, Some(&sample)).unwrap();
-    let report = ckm.solve_detailed(&artifact, k, None).unwrap();
 
-    assert_eq!(artifact.op.sigma2, legacy.sigma2);
-    assert_eq!(artifact.count, legacy.n_points);
-    assert_eq!(artifact.z().re, legacy.z.re);
-    assert_eq!(artifact.z().im, legacy.z.im);
-    assert_eq!(artifact.bounds, legacy.bounds);
-    assert_eq!(report.solution.centroids.data, legacy.solution.centroids.data);
-    assert_eq!(report.solution.alpha, legacy.solution.alpha);
-    assert_eq!(report.solution.cost, legacy.solution.cost);
-    assert_eq!(report.replicate_costs, legacy.replicate_costs);
-
-    // The default knob values themselves match the legacy structs.
+    // The default knob values are pinned.
     let cfg = ckm.config();
     let sk = SketcherConfig::default();
-    assert_eq!(cfg.sigma2, legacy_cfg.sigma2);
-    assert_eq!(cfg.radius, legacy_cfg.radius);
-    assert_eq!(cfg.backend, legacy_cfg.backend);
-    assert_eq!(cfg.replicates, legacy_cfg.replicates);
-    assert_eq!(cfg.strategy, legacy_cfg.strategy);
-    assert_eq!(cfg.seed, legacy_cfg.seed);
+    assert_eq!(cfg.m, m);
+    assert_eq!(cfg.sigma2, None, "default σ² is estimated from the sample");
+    assert_eq!(cfg.radius, RadiusKind::AdaptedRadius);
+    assert_eq!(cfg.backend, Backend::Native);
+    assert_eq!(cfg.replicates, 1);
+    assert_eq!(cfg.strategy, InitStrategy::Range);
+    assert_eq!(cfg.seed, 0);
+    assert_eq!(cfg.decoder, DecoderSpec::Clompr);
     assert_eq!(cfg.sketcher.n_workers, sk.n_workers);
     assert_eq!(cfg.sketcher.chunk_rows, sk.chunk_rows);
     assert_eq!(cfg.sketcher.queue_depth, sk.queue_depth);
+
+    // Default facade runs end to end from a stream, σ² estimated from the
+    // sample, and the solution carries the default decoder identity.
+    let mut src = data_cfg.stream(0);
+    let (artifact, _) = ckm.sketch_from(&mut src, Some(&sample)).unwrap();
+    assert_eq!(artifact.count, 4000);
+    assert!(artifact.op.sigma2.is_finite() && artifact.op.sigma2 > 0.0);
+    let report = ckm.solve_detailed(&artifact, k, None).unwrap();
+    assert_eq!(report.solution.centroids.rows, k);
+    assert!(report.solution.cost.is_finite());
+    assert_eq!(report.solution.decoder, DecoderSpec::Clompr);
+    assert_eq!(report.replicate_costs.len(), 1);
 }
 
 /// A sketch cannot be merged with, or solved against, a mismatched

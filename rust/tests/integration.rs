@@ -1,8 +1,8 @@
-//! Cross-module integration tests: native-vs-PJRT parity, pipeline
+//! Cross-module integration tests: native-vs-PJRT parity via the facade
 //! end-to-end on both backends, CLOMPR recovery quality.
 
-use ckm::coordinator::pipeline::run_pipeline;
-use ckm::coordinator::{Backend, PipelineConfig, SketcherConfig};
+use ckm::api::Ckm;
+use ckm::coordinator::{Backend, SketcherConfig};
 use ckm::data::gmm::GmmConfig;
 use ckm::metrics::sse;
 use ckm::util::rng::Rng;
@@ -12,7 +12,7 @@ fn artifacts_ready() -> bool {
 }
 
 #[test]
-fn pipeline_native_vs_pjrt_similar_quality() {
+fn facade_native_vs_pjrt_similar_quality() {
     if !artifacts_ready() {
         eprintln!("skipping: run `make artifacts`");
         return;
@@ -25,17 +25,21 @@ fn pipeline_native_vs_pjrt_similar_quality() {
 
     let mut results = Vec::new();
     for backend in [Backend::Native, Backend::Pjrt] {
-        let mut cfg = PipelineConfig::new(5, 256);
-        cfg.backend = backend;
-        cfg.sigma2 = Some(1.0);
-        cfg.seed = 9;
-        cfg.replicates = 2;
-        cfg.sketcher = SketcherConfig { n_workers: 2, chunk_rows: 4096, queue_depth: 4 };
+        let ckm = Ckm::builder()
+            .frequencies(256)
+            .sigma2(1.0)
+            .backend(backend)
+            .seed(9)
+            .replicates(2)
+            .sketcher(SketcherConfig { n_workers: 2, chunk_rows: 4096, queue_depth: 4 })
+            .build()
+            .unwrap();
         let mut src = ckm::data::dataset::SliceSource::new(&g.dataset.points, 8);
-        let res = run_pipeline(&cfg, &mut src, None).unwrap();
-        assert_eq!(res.n_points, 30_000);
-        let s = sse(&g.dataset.points, 8, &res.solution.centroids) / 30_000.0;
-        eprintln!("{backend:?}: SSE/N = {s:.4} (cost {:.3e})", res.solution.cost);
+        let (artifact, _) = ckm.sketch_from(&mut src, None).unwrap();
+        assert_eq!(artifact.count, 30_000);
+        let sol = ckm.solve(&artifact, 5).unwrap();
+        let s = sse(&g.dataset.points, 8, &sol.centroids) / 30_000.0;
+        eprintln!("{backend:?}: SSE/N = {s:.4} (cost {:.3e})", sol.cost);
         results.push(s);
     }
     // Both backends solve the same problem to similar quality: per-point

@@ -193,6 +193,56 @@ fn solve_cache_hits_and_rotation_triggers_background_refresh() {
     server.join().unwrap().unwrap();
 }
 
+/// Decoder selection rides the wire (protocol v3): solves with different
+/// decoders occupy distinct cache entries, solutions come back stamped
+/// with the decoder that produced them, and Status advertises the
+/// registry.
+#[test]
+fn daemon_solve_keys_cache_on_decoder() {
+    use ckm::decoder::DecoderSpec;
+    let ckm = dense_ckm();
+    let (addr, server) = spawn_daemon(&ckm, 2);
+    let mut client = ServiceClient::connect_tcp(&addr, "producer-a").unwrap();
+    let mut rng = Rng::new(21);
+    let mut rows = vec![0.0; 500 * N_DIMS];
+    rng.fill_normal(&mut rows);
+    client.ingest(&rows).unwrap();
+
+    // Status lists every registered decoder by name.
+    let status = client.status().unwrap();
+    assert_eq!(status.decoders, DecoderSpec::available_names());
+
+    // Same query, different decoders: both are cache misses, and each
+    // solution carries the identity of the decoder that produced it.
+    let clompr = client.solve_window(None, 3).unwrap();
+    assert_eq!(clompr.decoder, DecoderSpec::Clompr);
+    let shifted = client.solve_window_with(None, 3, DecoderSpec::SketchShift).unwrap();
+    assert_eq!(shifted.decoder, DecoderSpec::SketchShift);
+    let after_misses = client.status().unwrap();
+    assert!(after_misses.cache_misses >= 2, "decoders shared a cache entry: {after_misses:?}");
+
+    // Repeats hit their own per-decoder entries and reproduce exactly.
+    let clompr2 = client.solve_window(None, 3).unwrap();
+    assert_eq!(clompr2.centroids.data, clompr.centroids.data);
+    assert_eq!(clompr2.cost, clompr.cost);
+    let shifted2 = client.solve_window_with(None, 3, DecoderSpec::SketchShift).unwrap();
+    assert_eq!(shifted2.centroids.data, shifted.centroids.data);
+    assert_eq!(shifted2.cost, shifted.cost);
+    let after_hits = client.status().unwrap();
+    assert!(after_hits.cache_hits >= 2, "per-decoder entries not reused: {after_hits:?}");
+
+    // Decayed solves key on the decoder too.
+    let d1 = client.solve_decayed(0.5, 2).unwrap();
+    let d2 = client.solve_decayed_with(0.5, 2, DecoderSpec::Hierarchical).unwrap();
+    assert_eq!(d1.decoder, DecoderSpec::Clompr);
+    assert_eq!(d2.decoder, DecoderSpec::Hierarchical);
+    let end = client.status().unwrap();
+    assert!(end.cache_misses >= after_misses.cache_misses + 2);
+
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
 /// A corrupted checkpoint stream is rejected at the digest trailer — run
 /// against a real daemon by speaking the wire protocol by hand and
 /// flipping one byte of one `CheckpointChunk` before feeding the verifier.
@@ -207,8 +257,9 @@ fn corrupted_checkpoint_stream_is_rejected() {
     client.ingest(&rows).unwrap();
 
     let mut raw = TcpStream::connect(&addr).unwrap();
-    write_frame(&mut raw, &protocol::encode_request(&Request::Hello { producer: "raw".into() }))
-        .unwrap();
+    let hello =
+        Request::Hello { producer: "raw".into(), protocol: protocol::PROTOCOL_VERSION };
+    write_frame(&mut raw, &protocol::encode_request(&hello)).unwrap();
     let ack = read_frame(&mut raw).unwrap().unwrap();
     assert!(matches!(protocol::decode_response(&ack).unwrap(), Response::HelloAck(_)));
     write_frame(&mut raw, &protocol::encode_request(&Request::Checkpoint)).unwrap();
@@ -283,8 +334,9 @@ fn checkpoint_streaming_does_not_block_ingest() {
     // Start a checkpoint but do NOT read any frame yet: the daemon is now
     // mid-stream (or blocked writing into our socket buffer).
     let mut raw = TcpStream::connect(&addr).unwrap();
-    write_frame(&mut raw, &protocol::encode_request(&Request::Hello { producer: "slow".into() }))
-        .unwrap();
+    let hello =
+        Request::Hello { producer: "slow".into(), protocol: protocol::PROTOCOL_VERSION };
+    write_frame(&mut raw, &protocol::encode_request(&hello)).unwrap();
     let ack = read_frame(&mut raw).unwrap().unwrap();
     assert!(matches!(protocol::decode_response(&ack).unwrap(), Response::HelloAck(_)));
     write_frame(&mut raw, &protocol::encode_request(&Request::Checkpoint)).unwrap();

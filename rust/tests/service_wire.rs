@@ -7,9 +7,10 @@
 
 use ckm::api::Ckm;
 use ckm::data::dataset::Bounds;
+use ckm::decoder::DecoderSpec;
 use ckm::linalg::CVec;
 use ckm::service::protocol::{
-    decode_request, decode_response, encode_request, encode_response, Request, Response,
+    self, decode_request, decode_response, encode_request, encode_response, Request, Response,
     WireChunk, WireSolution,
 };
 use ckm::sketch::{QuantizationMode, SketchAccumulator};
@@ -43,14 +44,30 @@ fn random_dense_absorb(rng: &mut Rng, size: usize) -> Request {
     }
 }
 
+fn random_decoder(rng: &mut Rng) -> DecoderSpec {
+    let all = DecoderSpec::all();
+    all[rng.below(all.len())]
+}
+
 fn random_request(rng: &mut Rng, size: usize) -> Request {
     match rng.below(7) {
-        0 => Request::Hello { producer: format!("producer-{}", rng.next_u64()) },
+        0 => Request::Hello {
+            producer: format!("producer-{}", rng.next_u64()),
+            protocol: protocol::MIN_PROTOCOL_VERSION + rng.below(2) as u32,
+        },
         1 => Request::ReserveRows { n_rows: rng.next_u64() >> 20 },
         2 => random_dense_absorb(rng, size),
         3 => Request::Rotate,
-        4 => Request::SolveWindow { last_e: rng.below(8) as u64, k: 1 + rng.below(16) as u64 },
-        5 => Request::SolveDecayed { lambda: rng.uniform(), k: 1 + rng.below(16) as u64 },
+        4 => Request::SolveWindow {
+            last_e: rng.below(8) as u64,
+            k: 1 + rng.below(16) as u64,
+            decoder: random_decoder(rng),
+        },
+        5 => Request::SolveDecayed {
+            lambda: rng.uniform(),
+            k: 1 + rng.below(16) as u64,
+            decoder: random_decoder(rng),
+        },
         _ => [Request::Checkpoint, Request::Status, Request::Shutdown][rng.below(3)].clone(),
     }
 }

@@ -3,8 +3,8 @@
 //! checking classification quality (the Fig-3 code path).
 
 use ckm::baselines::{kmeans, KmInit, KmOptions};
-use ckm::ckm::clompr::solve_full;
-use ckm::ckm::CkmOptions;
+use ckm::ckm::{solve_with_engine, CkmOptions};
+use ckm::engine::NativeEngine;
 use ckm::data::digits::DigitConfig;
 use ckm::metrics::{adjusted_rand_index, labels_for};
 use ckm::sketch::sketch_dataset;
@@ -29,7 +29,9 @@ fn digits_spectral_clustering_beats_chance_by_far() {
 
     // CKM on the same features.
     let sk = sketch_dataset(&feats, 10, 800, 3, None);
-    let sol = solve_full(&sk.z, &sk.op, &sk.bounds, 10, Some((&feats, 10)), &CkmOptions::default());
+    let opts = CkmOptions::default();
+    let engine = NativeEngine::with_options(sk.op.clone(), opts.step1.clone(), opts.step5.clone());
+    let sol = solve_with_engine(&sk.z, &engine, &sk.bounds, 10, Some((&feats, 10)), &opts);
     let ari_ckm = adjusted_rand_index(&labels_for(&feats, 10, &sol.centroids), &ds.labels);
 
     eprintln!("digits spectral: ARI kmeans={ari_km:.3} ckm={ari_ckm:.3}");
