@@ -432,6 +432,106 @@ fn main() {
         server.join().unwrap().unwrap();
     }
 
+    // -- Fault-tolerant service path: ingest through a fault proxy --------
+    // The same loopback ingest, but every frame crosses a seeded
+    // fault-injection proxy (light weather: duplicated and delayed frames,
+    // no kills — the schedule perturbs each iteration without changing
+    // what it does) and the client runs a real retry policy. The delta
+    // against service_ingest_loopback/1bit is the price of the
+    // exactly-once guarantee on a misbehaving wire.
+    {
+        use ckm::service::{Daemon, DaemonConfig, RetryPolicy, ServiceClient, ServiceListener};
+        use ckm::testing::faultproxy::{FaultPlan, FaultProxy};
+        use std::time::Duration;
+        let svc = ckm::api::Ckm::builder()
+            .frequencies(m)
+            .sigma2(1.0)
+            .seed(7)
+            .window(24)
+            .quantization(ckm::sketch::QuantizationMode::OneBit)
+            .build()
+            .unwrap();
+        let store = svc.sharded_store(n_dims, 2).unwrap();
+        let config = DaemonConfig {
+            idle_timeout: Some(Duration::from_secs(5)),
+            io_timeout: Some(Duration::from_secs(5)),
+            ..DaemonConfig::default()
+        };
+        let daemon = Daemon::with_config(store, svc.clone(), config);
+        let listener = ServiceListener::bind("tcp:127.0.0.1:0").unwrap();
+        let addr = listener.tcp_addr().unwrap();
+        let server = std::thread::spawn(move || daemon.serve(listener));
+        let mut proxy = FaultProxy::spawn(
+            addr,
+            FaultPlan {
+                seed: 0xBE_4C_11,
+                drop: 0.0,
+                duplicate: 0.02,
+                truncate: 0.0,
+                delay: 0.05,
+                max_delay: Duration::from_micros(200),
+                skip_first: 2,
+            },
+        )
+        .unwrap();
+        let policy = RetryPolicy {
+            retries: 20,
+            backoff: Duration::from_millis(2),
+            max_backoff: Duration::from_millis(20),
+            timeout: Some(Duration::from_millis(500)),
+        };
+        let mut client =
+            ServiceClient::connect_with(&format!("tcp:{}", proxy.addr()), "bench-faulty", policy)
+                .unwrap();
+        let meas = measure("service_ingest_faulty/1bit", warm, samp, || {
+            let r = client.ingest(svc_block).unwrap();
+            std::hint::black_box(r.rows);
+        });
+        println!("  -> {:.2} Mrows/s through the fault proxy", throughput(&meas, svc_rows) / 1e6);
+        report.add("service_ingest_faulty", "1bit", &svc_size, &meas);
+        drop(client);
+        proxy.stop();
+        let mut admin = ServiceClient::connect_tcp(&addr.to_string(), "bench-admin").unwrap();
+        admin.shutdown().unwrap();
+        server.join().unwrap().unwrap();
+    }
+
+    // -- WAL replay: restoring a multi-epoch appended container -----------
+    // The startup cost of `ckmd --wal` recovery: a store set WALed across
+    // 6 rotations (each append adds only the sealed epochs since the
+    // last one), then replayed from the file — parse, validate, restore.
+    {
+        use ckm::store::{append_store_set_to_file, load_store_set_wal};
+        let svc = ckm::api::Ckm::builder()
+            .frequencies(m)
+            .sigma2(1.0)
+            .seed(7)
+            .window(24)
+            .quantization(ckm::sketch::QuantizationMode::OneBit)
+            .build()
+            .unwrap();
+        let set = svc.sharded_store(n_dims, 2).unwrap();
+        let wal_path =
+            std::env::temp_dir().join(format!("ckm_bench_wal_{}.ckmc", std::process::id()));
+        std::fs::remove_file(&wal_path).ok();
+        let epochs = 6;
+        for e in 0..epochs {
+            if e > 0 {
+                set.rotate_all();
+            }
+            let rows = &pts[(e * 512) * n_dims..(e * 512 + 512) * n_dims];
+            let chunk = set.context(0).sketch_chunk(rows, e * 512);
+            set.try_absorb(0, chunk).unwrap();
+            append_store_set_to_file(&set, &wal_path).unwrap();
+        }
+        let meas = measure("wal_replay/ckmc", warm, 3 * samp, || {
+            let (s, healed) = load_store_set_wal(&wal_path).unwrap();
+            std::hint::black_box((s.n_shards(), healed));
+        });
+        report.add("wal_replay", "ckmc", &format!("epochs={epochs} m={m} shards=2"), &meas);
+        std::fs::remove_file(&wal_path).ok();
+    }
+
     report.write(&out_path).expect("failed to write BENCH.json");
     println!("wrote {out_path}");
 }

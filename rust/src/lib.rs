@@ -74,10 +74,27 @@
 //! while transferring; `ckmd --save set.ckmc` appends rotated epochs to
 //! an existing checkpoint without rewriting its bytes (a restart WAL).
 //!
+//! The service layer is fault-tolerant (protocol v4): the daemon bounds
+//! every resource (connection cap with typed `BUSY` rejection, socket
+//! deadlines reaping idle/stalled peers) and makes ingest idempotent —
+//! `ReserveRows` issues a lease, each `Absorb` carries `(lease, seq)`,
+//! and replays are re-acked without re-merging, so client retries can
+//! never double-count (which would silently corrupt the exactly-merged
+//! integer state of a quantized sketch). `ckmd --wal` appends the store
+//! set to a crash-recoverable container after every rotation (torn tails
+//! heal to the previous append on restart), so `kill -9` loses at most
+//! the in-flight tail. [`service::RetryPolicy`] gives clients reconnect
+//! + jittered exponential backoff with per-verb replay-safety; the
+//! seeded frame-level fault proxy ([`testing::faultproxy`]) drives the
+//! chaos tests that pin recovered state to a clean replay, bit-for-bit
+//! in quantized mode.
+//!
 //! ## Layers
 //!
 //! - **L5 ([`service`])** — the wire layer: the `ckmd` daemon, the binary
-//!   protocol, the `ServiceClient`/`ckm-client` producers.
+//!   protocol, the `ServiceClient`/`ckm-client` producers; fault-tolerant
+//!   end to end (deadlines, backpressure, idempotent ingest, WAL crash
+//!   recovery, client retry).
 //! - **L4 ([`store`])** — the serving layer: epoch-bucketed windowed /
 //!   decayed sketch stores (optionally exponentially compacted), key-
 //!   sharded store sets, concurrent ingest and cached solves; persisted

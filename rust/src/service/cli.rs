@@ -2,17 +2,18 @@
 //! `ckmd` binary, the `ckm-client` binary, and the `ckm client`
 //! subcommand — one implementation, three front doors.
 
-use super::client::ServiceClient;
-use super::daemon::{Daemon, ServiceListener};
+use super::client::{RetryPolicy, ServiceClient};
+use super::daemon::{Daemon, DaemonConfig, ServiceListener, WalConfig};
 use crate::api::{Ckm, QuantizationMode};
 use crate::data::dataset::Dataset;
 use crate::decoder::DecoderSpec;
 use crate::sketch::RadiusKind;
-use crate::store::{CompactionPolicy, ShardedStore};
+use crate::store::{load_store_set_wal, CompactionPolicy, ShardedStore};
 use crate::util::cli::Args;
 use crate::util::fastmath::TrigBackend;
 use crate::util::rng::Rng;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
 
 pub fn daemon_usage() {
     println!(
@@ -24,13 +25,25 @@ pub fn daemon_usage() {
                 [--radius adapted|gaussian|folded] [--compaction none|exp]\n\
                 [--base-shard 0] [--chunk-rows 4096]\n\
                 [--restore set.json|set.ckmc] [--save set.json|set.ckmc]\n\
+                [--wal FILE.ckmc] [--wal-interval-ms 2000]\n\
+                [--max-connections 1024] [--idle-timeout-ms 300000]\n\
+                [--io-timeout-ms 30000]\n\
          \n\
          The daemon fronts N key-sharded sketch stores (producer → shard by\n\
          FNV-1a of the producer id). All sketch math runs client-side; the\n\
          daemon reserves dither row ranges, merges exactly, and solves\n\
          merged snapshots. --save checkpoints the store set on shutdown\n\
          (a .ckmc extension selects the binary container codec); --restore\n\
-         accepts either codec, sniffed by magic."
+         accepts either codec, sniffed by magic.\n\
+         \n\
+         fault tolerance: --wal appends the store set to a crash-\n\
+         recoverable container after every rotation (and at least every\n\
+         --wal-interval-ms); on startup an existing WAL is replayed (a\n\
+         torn tail heals to the previous append) and takes precedence\n\
+         over --restore. --max-connections answers extra connections\n\
+         with a typed BUSY frame (0 = unlimited); --idle-timeout-ms\n\
+         reaps silent connections and --io-timeout-ms bounds stalled\n\
+         reads/writes (0 = disabled)."
     );
 }
 
@@ -53,7 +66,13 @@ pub fn client_usage() {
                        'ckm convert' for a JSON view)\n\
            shutdown    ask the daemon to drain and exit\n\
          \n\
-         every verb also takes --producer NAME (default 'ckm-client')"
+         every verb also takes --producer NAME (default 'ckm-client') and\n\
+         the retry flags [--retries 0] [--backoff-ms 100] [--timeout-ms 0]:\n\
+         transient failures (connection loss, BUSY at the daemon's cap)\n\
+         reconnect and retry with jittered exponential backoff. Absorbs\n\
+         replay under a daemon-issued lease, so a retried ingest is\n\
+         exactly-once; rotate and shutdown never retry. --timeout-ms sets\n\
+         a socket read/write deadline (0 = block forever)."
     );
 }
 
@@ -114,8 +133,42 @@ pub fn run_daemon(args: &Args) -> anyhow::Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--listen tcp:HOST:PORT or unix:PATH is required"))?
         .to_string();
     let save = args.opt("save").map(|s| s.to_string());
-    let (store, ckm) = daemon_parts(args)?;
+    let wal_path = args.opt("wal").map(|s| s.to_string());
+    let wal_interval = Duration::from_millis(args.u64_or("wal-interval-ms", 2000).max(1));
+    let max_connections = args.u64_or("max-connections", 1024);
+    let idle_timeout_ms = args.u64_or("idle-timeout-ms", 300_000);
+    let io_timeout_ms = args.u64_or("io-timeout-ms", 30_000);
+    let (mut store, ckm) = daemon_parts(args)?;
     args.finish()?;
+    // An existing WAL is the newest durable state — replay it, healing a
+    // torn tail from a crash mid-append back to the previous append. It
+    // takes precedence over --restore (the WAL is written after any
+    // restore, so it is never older). A missing WAL file is a fresh
+    // start, not an error.
+    if let Some(p) = &wal_path {
+        if Path::new(p).exists() {
+            let (recovered, healed) = load_store_set_wal(p)?;
+            anyhow::ensure!(
+                recovered.spec() == store.spec()
+                    && recovered.quantization() == store.quantization()
+                    && recovered.n_shards() == store.n_shards()
+                    && recovered.base_shard() == store.base_shard(),
+                "WAL '{p}' was written under a different configuration \
+                 (operator / quantization / shard layout)"
+            );
+            if healed {
+                println!("ckmd: WAL {p} had a torn tail; healed to the previous append");
+            }
+            println!("ckmd: recovered {} shards from WAL {p}", recovered.n_shards());
+            store = recovered;
+        }
+    }
+    let config = DaemonConfig {
+        max_connections,
+        io_timeout: (io_timeout_ms > 0).then(|| Duration::from_millis(io_timeout_ms)),
+        idle_timeout: (idle_timeout_ms > 0).then(|| Duration::from_millis(idle_timeout_ms)),
+        wal: wal_path.map(|p| WalConfig { path: PathBuf::from(p), interval: wal_interval }),
+    };
     let shards = store.n_shards();
     let listener = ServiceListener::bind(&listen)?;
     if let Some(addr) = listener.tcp_addr() {
@@ -129,7 +182,14 @@ pub fn run_daemon(args: &Args) -> anyhow::Result<()> {
         crate::util::fastmath::detected_cpu_features()
     );
     println!("ckmd: decoders {}", DecoderSpec::available_names().join(", "));
-    let daemon = Daemon::new(store, ckm);
+    if let Some(w) = &config.wal {
+        println!(
+            "ckmd: WAL -> {} (interval {} ms)",
+            w.path.display(),
+            w.interval.as_millis()
+        );
+    }
+    let daemon = Daemon::with_config(store, ckm, config);
     daemon.serve(listener)?;
     if let Some(path) = save {
         daemon.save(&path)?;
@@ -144,7 +204,15 @@ fn connect(args: &Args) -> anyhow::Result<ServiceClient> {
         .opt("connect")
         .ok_or_else(|| anyhow::anyhow!("--connect tcp:HOST:PORT or unix:PATH is required"))?;
     let producer = args.str_or("producer", "ckm-client");
-    Ok(ServiceClient::connect(addr, &producer)?)
+    let backoff = Duration::from_millis(args.u64_or("backoff-ms", 100).max(1));
+    let timeout_ms = args.u64_or("timeout-ms", 0);
+    let policy = RetryPolicy {
+        retries: args.u64_or("retries", 0) as u32,
+        backoff,
+        max_backoff: backoff.max(Duration::from_secs(2)),
+        timeout: (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms)),
+    };
+    Ok(ServiceClient::connect_with(addr, &producer, policy)?)
 }
 
 /// One `ckm-client <verb>` / `ckm client <verb>` invocation.
@@ -173,6 +241,13 @@ pub fn run_client(verb: &str, args: &Args) -> anyhow::Result<()> {
                 "cache: {} hits / {} misses; refreshed solves: {}; connections: {}",
                 s.cache_hits, s.cache_misses, s.refreshed_solves, s.connections
             );
+            println!(
+                "uptime: {}s; connections peak {}, rejected busy {}; replayed absorbs: {}",
+                s.uptime_secs, s.peak_connections, s.rejected_busy, s.replayed_absorbs
+            );
+            if s.wal_appends > 0 || s.wal_lag_rows > 0 {
+                println!("wal: {} append(s), lag {} row(s)", s.wal_appends, s.wal_lag_rows);
+            }
             println!("simd: {}", s.simd_path);
             if !s.decoders.is_empty() {
                 println!("decoders: {}", s.decoders.join(", "));

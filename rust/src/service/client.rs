@@ -7,11 +7,21 @@
 //! sketching happens on this process's CPU with the dither keys the
 //! daemon reserved. The daemon only merges.
 //!
+//! Fault tolerance ([`RetryPolicy`]): transient failures — socket errors,
+//! framing desync, a checkpoint digest mismatch, or a `BUSY` rejection at
+//! the daemon's connection cap — are retried with exponential backoff and
+//! decorrelated jitter, reconnecting and re-handshaking when the client
+//! owns the address. Retries are **per-verb**: reserve, absorb (only
+//! under a v4 lease, where the daemon's dedup window makes a replay
+//! exactly-once), solve, status, and checkpoint (restarting the stream)
+//! retry; rotate and shutdown never do — replaying either would change
+//! daemon state a second time.
+//!
 //! One type serves the thin `ckm-client` binary, the `ckm client`
 //! subcommand, the examples, and the integration tests.
 
 use super::protocol::{
-    self, HelloAck, Request, Response, StatusInfo, WireChunk,
+    self, error_code, HelloAck, Request, Response, StatusInfo, WireChunk,
 };
 use crate::api::ApiError;
 use crate::ckm::Solution;
@@ -19,9 +29,11 @@ use crate::decoder::DecoderSpec;
 use crate::store::SketchContext;
 use crate::util::digest::Fnv1a;
 use crate::util::framing::{read_frame, write_frame};
+use crate::util::rng::Rng;
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::path::Path;
+use std::time::Duration;
 
 /// Object-safe client transport (TCP, unix socket, or an in-memory pipe
 /// in tests).
@@ -37,77 +49,229 @@ pub struct IngestReceipt {
     pub rows: u64,
 }
 
+/// Client-side fault-tolerance knobs. The `Default` is the pre-v4
+/// behavior — no retries, no socket deadlines — so embedded and test
+/// callers are unchanged; `ckm-client` turns retries on via flags.
+#[derive(Clone, Debug)]
+pub struct RetryPolicy {
+    /// Extra attempts after the first failure (0 = fail fast).
+    pub retries: u32,
+    /// First backoff sleep; later sleeps use decorrelated jitter
+    /// (`uniform(backoff, 3·prev)`, capped at `max_backoff`).
+    pub backoff: Duration,
+    pub max_backoff: Duration,
+    /// Socket read/write timeout for client sockets (`None` = block
+    /// forever). A stalled daemon then surfaces as a transient
+    /// [`ApiError::Io`] instead of hanging the producer.
+    pub timeout: Option<Duration>,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            retries: 0,
+            backoff: Duration::from_millis(100),
+            max_backoff: Duration::from_secs(2),
+            timeout: None,
+        }
+    }
+}
+
+/// Errors worth a retry: the transport died or desynced, a checkpoint
+/// arrived corrupted, or the daemon turned us away at its connection cap.
+/// Remote application errors (bad argument, solve failure, shutting
+/// down) are deterministic and never retried.
+fn is_transient(e: &ApiError) -> bool {
+    match e {
+        ApiError::Io(_) | ApiError::ServiceProtocol(_) | ApiError::ServiceDigestMismatch { .. } => {
+            true
+        }
+        ApiError::ServiceRemote { code, .. } => *code == error_code::BUSY,
+        _ => false,
+    }
+}
+
+/// Open a socket for `tcp:HOST:PORT` / `unix:PATH`, applying the
+/// policy's deadlines to the concrete socket before boxing.
+fn open_transport(addr: &str, timeout: Option<Duration>) -> Result<Box<dyn Transport>, ApiError> {
+    if let Some(hostport) = addr.strip_prefix("tcp:") {
+        let stream = TcpStream::connect(hostport)?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(timeout).ok();
+        stream.set_write_timeout(timeout).ok();
+        return Ok(Box::new(stream));
+    }
+    #[cfg(unix)]
+    if let Some(path) = addr.strip_prefix("unix:") {
+        let stream = std::os::unix::net::UnixStream::connect(path)?;
+        stream.set_read_timeout(timeout).ok();
+        stream.set_write_timeout(timeout).ok();
+        return Ok(Box::new(stream));
+    }
+    Err(ApiError::InvalidConfig {
+        field: "connect",
+        reason: format!("expected tcp:HOST:PORT or unix:PATH, got '{addr}'"),
+    })
+}
+
+/// Run the Hello exchange and validate the negotiated version.
+fn handshake(stream: &mut dyn Transport, producer: &str) -> Result<HelloAck, ApiError> {
+    write_frame(
+        stream,
+        &protocol::encode_request(&Request::Hello {
+            producer: producer.to_string(),
+            protocol: protocol::PROTOCOL_VERSION,
+        }),
+    )?;
+    let ack = match read_response(stream)? {
+        Response::HelloAck(ack) => ack,
+        Response::Error { code, message } => return Err(ApiError::ServiceRemote { code, message }),
+        other => {
+            return Err(ApiError::ServiceProtocol(format!("expected HelloAck, got {other:?}")))
+        }
+    };
+    // The ack carries the *negotiated* session version (≤ ours).
+    if !(protocol::MIN_PROTOCOL_VERSION..=protocol::PROTOCOL_VERSION).contains(&ack.protocol) {
+        return Err(ApiError::ServiceProtocol(format!(
+            "daemon negotiated protocol {}, this build speaks {}..={}",
+            ack.protocol,
+            protocol::MIN_PROTOCOL_VERSION,
+            protocol::PROTOCOL_VERSION
+        )));
+    }
+    Ok(ack)
+}
+
+/// Sleep with decorrelated jitter; returns the slept duration (the next
+/// call's `prev`). Spreads a thundering herd of producers retrying
+/// against one recovering daemon.
+fn backoff_sleep(jitter: &mut Rng, policy: &RetryPolicy, prev: Duration) -> Duration {
+    let base = policy.backoff.as_secs_f64();
+    let hi = (prev.as_secs_f64() * 3.0).max(base);
+    let secs = jitter.uniform_in(base, hi).min(policy.max_backoff.as_secs_f64());
+    let sleep = Duration::from_secs_f64(secs.max(0.0));
+    std::thread::sleep(sleep);
+    sleep
+}
+
 /// A connected, handshaken `ckmd` session.
 pub struct ServiceClient {
     stream: Box<dyn Transport>,
     ack: HelloAck,
     ctx: SketchContext,
+    policy: RetryPolicy,
+    /// Reconnect target (`tcp:...`/`unix:...`); `None` for caller-owned
+    /// streams, which cannot be rebuilt and therefore never retry past a
+    /// dead transport.
+    addr: Option<String>,
+    producer: String,
+    /// Client-side absorb sequence (the `seq` half of the dedup key).
+    next_seq: u64,
+    jitter: Rng,
 }
 
 impl ServiceClient {
     /// Connect over TCP (`HOST:PORT`) and handshake as `producer`.
     pub fn connect_tcp(addr: &str, producer: &str) -> Result<ServiceClient, ApiError> {
-        let stream = TcpStream::connect(addr)?;
-        stream.set_nodelay(true).ok();
-        ServiceClient::from_stream(Box::new(stream), producer)
+        ServiceClient::connect_tcp_with(addr, producer, RetryPolicy::default())
+    }
+
+    /// [`ServiceClient::connect_tcp`] with an explicit retry policy.
+    pub fn connect_tcp_with(
+        addr: &str,
+        producer: &str,
+        policy: RetryPolicy,
+    ) -> Result<ServiceClient, ApiError> {
+        ServiceClient::connect_with(&format!("tcp:{addr}"), producer, policy)
     }
 
     /// Connect over a unix socket and handshake as `producer`.
     #[cfg(unix)]
     pub fn connect_unix(path: &str, producer: &str) -> Result<ServiceClient, ApiError> {
-        let stream = std::os::unix::net::UnixStream::connect(path)?;
-        ServiceClient::from_stream(Box::new(stream), producer)
+        ServiceClient::connect_unix_with(path, producer, RetryPolicy::default())
+    }
+
+    /// [`ServiceClient::connect_unix`] with an explicit retry policy.
+    #[cfg(unix)]
+    pub fn connect_unix_with(
+        path: &str,
+        producer: &str,
+        policy: RetryPolicy,
+    ) -> Result<ServiceClient, ApiError> {
+        ServiceClient::connect_with(&format!("unix:{path}"), producer, policy)
     }
 
     /// Parse `tcp:HOST:PORT` or `unix:PATH` and connect.
     pub fn connect(addr: &str, producer: &str) -> Result<ServiceClient, ApiError> {
-        if let Some(hostport) = addr.strip_prefix("tcp:") {
-            return ServiceClient::connect_tcp(hostport, producer);
+        ServiceClient::connect_with(addr, producer, RetryPolicy::default())
+    }
+
+    /// Connect with an explicit retry policy: transient connect and
+    /// handshake failures (daemon restarting, `BUSY` at the cap) back
+    /// off and retry up to `policy.retries` times.
+    pub fn connect_with(
+        addr: &str,
+        producer: &str,
+        policy: RetryPolicy,
+    ) -> Result<ServiceClient, ApiError> {
+        // Deterministic per-producer jitter stream: distinct producers
+        // decorrelate, one producer's behavior stays reproducible.
+        let mut jitter = Rng::new(Fnv1a::hash(producer.as_bytes()) ^ 0x9e37_79b9_7f4a_7c15);
+        let mut left = policy.retries;
+        let mut prev = policy.backoff;
+        loop {
+            let attempt = open_transport(addr, policy.timeout).and_then(|mut stream| {
+                let ack = handshake(&mut *stream, producer)?;
+                Ok((stream, ack))
+            });
+            match attempt {
+                Ok((stream, ack)) => {
+                    let spec = ack.op_spec()?;
+                    // from_parts materializes the operator and verifies
+                    // the checksum — a client never sketches under an
+                    // unverified operator.
+                    let ctx = SketchContext::from_parts(&spec, ack.quantization()?, ack.dither_seed)?;
+                    return Ok(ServiceClient {
+                        stream,
+                        ack,
+                        ctx,
+                        policy,
+                        addr: Some(addr.to_string()),
+                        producer: producer.to_string(),
+                        next_seq: 0,
+                        jitter,
+                    });
+                }
+                Err(e) if left > 0 && is_transient(&e) => {
+                    left -= 1;
+                    prev = backoff_sleep(&mut jitter, &policy, prev);
+                }
+                Err(e) => return Err(e),
+            }
         }
-        #[cfg(unix)]
-        if let Some(path) = addr.strip_prefix("unix:") {
-            return ServiceClient::connect_unix(path, producer);
-        }
-        Err(ApiError::InvalidConfig {
-            field: "connect",
-            reason: format!("expected tcp:HOST:PORT or unix:PATH, got '{addr}'"),
-        })
     }
 
     /// Handshake over an already-open stream. Re-derives the operator
     /// from the daemon's provenance and verifies its checksum before
     /// returning — a client never sketches under an unverified operator.
+    /// A caller-owned stream has no reconnect address, so the session
+    /// never retries past a dead transport.
     pub fn from_stream(stream: Box<dyn Transport>, producer: &str) -> Result<ServiceClient, ApiError> {
         let mut stream = stream;
-        write_frame(&mut stream, &protocol::encode_request(&Request::Hello {
-            producer: producer.to_string(),
-            protocol: protocol::PROTOCOL_VERSION,
-        }))?;
-        let ack = match read_response(&mut stream)? {
-            Response::HelloAck(ack) => ack,
-            Response::Error { code, message } => {
-                return Err(ApiError::ServiceRemote { code, message })
-            }
-            other => {
-                return Err(ApiError::ServiceProtocol(format!(
-                    "expected HelloAck, got {other:?}"
-                )))
-            }
-        };
-        // The ack carries the *negotiated* session version (≤ ours).
-        if !(protocol::MIN_PROTOCOL_VERSION..=protocol::PROTOCOL_VERSION).contains(&ack.protocol)
-        {
-            return Err(ApiError::ServiceProtocol(format!(
-                "daemon negotiated protocol {}, this build speaks {}..={}",
-                ack.protocol,
-                protocol::MIN_PROTOCOL_VERSION,
-                protocol::PROTOCOL_VERSION
-            )));
-        }
+        let ack = handshake(&mut *stream, producer)?;
         let spec = ack.op_spec()?;
-        // from_parts materializes the operator and verifies the checksum.
         let ctx = SketchContext::from_parts(&spec, ack.quantization()?, ack.dither_seed)?;
-        Ok(ServiceClient { stream, ack, ctx })
+        let jitter = Rng::new(Fnv1a::hash(producer.as_bytes()) ^ 0x9e37_79b9_7f4a_7c15);
+        Ok(ServiceClient {
+            stream,
+            ack,
+            ctx,
+            policy: RetryPolicy::default(),
+            addr: None,
+            producer: producer.to_string(),
+            next_seq: 0,
+            jitter,
+        })
     }
 
     /// The daemon's handshake (shard assignment, provenance, capacities).
@@ -120,6 +284,30 @@ impl ServiceClient {
         self.ack.n_dims as usize
     }
 
+    /// Rebuild the session after a transport failure: reopen the socket,
+    /// re-handshake, and verify the daemon still serves the *same* store
+    /// identity (operator checksum, shard assignment, dither seed) so the
+    /// existing sketch context — and any reserved offsets — stay valid.
+    fn reconnect(&mut self) -> Result<(), ApiError> {
+        let addr = self.addr.clone().ok_or_else(|| {
+            ApiError::ServiceProtocol("cannot reconnect a caller-owned stream".to_string())
+        })?;
+        let mut stream = open_transport(&addr, self.policy.timeout)?;
+        let ack = handshake(&mut *stream, &self.producer)?;
+        if ack.checksum != self.ack.checksum
+            || ack.shard_index != self.ack.shard_index
+            || ack.dither_seed != self.ack.dither_seed
+        {
+            return Err(ApiError::ServiceProtocol(
+                "daemon identity changed across reconnect (operator checksum, shard, or dither seed mismatch)"
+                    .to_string(),
+            ));
+        }
+        self.stream = stream;
+        self.ack = ack;
+        Ok(())
+    }
+
     fn call(&mut self, req: &Request) -> Result<Response, ApiError> {
         write_frame(&mut self.stream, &protocol::encode_request(req))?;
         let resp = read_response(&mut self.stream)?;
@@ -129,11 +317,60 @@ impl ServiceClient {
         Ok(resp)
     }
 
+    /// One request with the policy's retry loop. `map` converts the wire
+    /// response into the verb's typed result *inside* the loop, so a
+    /// desynced stream — e.g. a duplicated response shifting the
+    /// request/response pairing, which shows up as the wrong response
+    /// type — is a transient protocol error and retries over a fresh
+    /// session like any transport fault. `retryable` is the per-verb
+    /// safety verdict — callers pass `false` for verbs whose replay
+    /// would mutate daemon state a second time (rotate, absorb without
+    /// a lease, shutdown).
+    fn call_retry<T>(
+        &mut self,
+        req: &Request,
+        retryable: bool,
+        map: impl Fn(Response) -> Result<T, ApiError>,
+    ) -> Result<T, ApiError> {
+        let mut left = if retryable { self.policy.retries } else { 0 };
+        let mut prev = self.policy.backoff;
+        let mut rebuild = false;
+        loop {
+            let result = if rebuild {
+                self.reconnect().and_then(|()| self.call(req))
+            } else {
+                self.call(req)
+            }
+            .and_then(&map);
+            let err = match result {
+                Ok(v) => return Ok(v),
+                Err(e) => e,
+            };
+            if left == 0 || !is_transient(&err) || self.addr.is_none() {
+                return Err(err);
+            }
+            left -= 1;
+            // A transient failure means the framed stream can no longer
+            // be trusted (half-written request, half-read response) —
+            // every retry goes through a fresh handshake.
+            rebuild = true;
+            prev = backoff_sleep(&mut self.jitter, &self.policy, prev);
+        }
+    }
+
     /// Two-phase ingest of a row-major chunk: reserve the row range on
     /// the daemon (phase 1, short lock there), sketch locally under the
     /// reserved dither keys (phase 2, no lock anywhere), ship the chunk
     /// for exact merging (phase 3). Bit-identical to ingesting the same
     /// rows synchronously into the shard's store.
+    ///
+    /// Retry semantics: reserve is always safe to retry (a lost ack
+    /// merely leaves a gap in the shard's row space — dither keys are
+    /// position-keyed, so gaps don't perturb later rows). The absorb is
+    /// retried only when the daemon issued a lease (protocol ≥ 4): its
+    /// dedup window then acks a replayed `(lease, seq)` without
+    /// re-merging, making the retried ingest exactly-once. Against a v3
+    /// daemon the absorb fails fast rather than risk a double-count.
     pub fn ingest(&mut self, rows: &[f64]) -> Result<IngestReceipt, ApiError> {
         let n = self.n_dims();
         if n == 0 || rows.len() % n != 0 {
@@ -143,29 +380,33 @@ impl ServiceClient {
             });
         }
         let n_rows = (rows.len() / n) as u64;
-        let offset = match self.call(&Request::ReserveRows { n_rows })? {
-            Response::Reserved { offset } => offset,
-            other => {
-                return Err(ApiError::ServiceProtocol(format!(
-                    "expected Reserved, got {other:?}"
-                )))
-            }
-        };
+        let (offset, lease) =
+            self.call_retry(&Request::ReserveRows { n_rows }, true, |resp| match resp {
+                Response::Reserved { offset, lease } => Ok((offset, lease)),
+                other => {
+                    Err(ApiError::ServiceProtocol(format!("expected Reserved, got {other:?}")))
+                }
+            })?;
         let chunk = self.ctx.sketch_chunk(rows, offset as usize);
         let wire = WireChunk::from_chunk(&chunk);
-        match self.call(&Request::Absorb { chunk: wire })? {
-            Response::Absorbed { rows } => Ok(IngestReceipt { offset, rows }),
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let req = Request::Absorb { chunk: wire, lease, seq };
+        let rows = self.call_retry(&req, lease != 0, |resp| match resp {
+            Response::Absorbed { rows } => Ok(rows),
             other => Err(ApiError::ServiceProtocol(format!("expected Absorbed, got {other:?}"))),
-        }
+        })?;
+        Ok(IngestReceipt { offset, rows })
     }
 
     /// Seal the current epoch on every shard; returns `(shard, epoch id)`
-    /// eviction pairs.
+    /// eviction pairs. Never retried: a replayed rotate whose first send
+    /// actually landed would seal a second (empty) epoch.
     pub fn rotate(&mut self) -> Result<Vec<(u32, u64)>, ApiError> {
-        match self.call(&Request::Rotate)? {
+        self.call_retry(&Request::Rotate, false, |resp| match resp {
             Response::Rotated { evicted } => Ok(evicted),
             other => Err(ApiError::ServiceProtocol(format!("expected Rotated, got {other:?}"))),
-        }
+        })
     }
 
     /// Solve the merged newest-`last_e`-epochs window (`None` = all
@@ -182,10 +423,10 @@ impl ServiceClient {
         decoder: DecoderSpec,
     ) -> Result<Solution, ApiError> {
         let req = Request::SolveWindow { last_e: last_e.unwrap_or(0) as u64, k: k as u64, decoder };
-        match self.call(&req)? {
+        self.call_retry(&req, true, |resp| match resp {
             Response::Solved(s) => Ok(stamped(s.into_solution()?, decoder)),
             other => Err(ApiError::ServiceProtocol(format!("expected Solved, got {other:?}"))),
-        }
+        })
     }
 
     /// Solve the merged λ-decayed snapshot for `k` centroids with the
@@ -201,22 +442,21 @@ impl ServiceClient {
         k: usize,
         decoder: DecoderSpec,
     ) -> Result<Solution, ApiError> {
-        match self.call(&Request::SolveDecayed { lambda, k: k as u64, decoder })? {
+        let req = Request::SolveDecayed { lambda, k: k as u64, decoder };
+        self.call_retry(&req, true, |resp| match resp {
             Response::Solved(s) => Ok(stamped(s.into_solution()?, decoder)),
             other => Err(ApiError::ServiceProtocol(format!("expected Solved, got {other:?}"))),
-        }
+        })
     }
 
     pub fn status(&mut self) -> Result<StatusInfo, ApiError> {
-        match self.call(&Request::Status)? {
+        self.call_retry(&Request::Status, true, |resp| match resp {
             Response::Status(s) => Ok(s),
             other => Err(ApiError::ServiceProtocol(format!("expected Status, got {other:?}"))),
-        }
+        })
     }
 
-    /// Stream the daemon's store-set checkpoint into `path`, verifying
-    /// the FNV-1a digest while receiving. Returns `(bytes, digest)`.
-    pub fn checkpoint_to<P: AsRef<Path>>(&mut self, path: P) -> Result<(u64, u64), ApiError> {
+    fn checkpoint_once(&mut self) -> Result<(Vec<u8>, u64), ApiError> {
         write_frame(&mut self.stream, &protocol::encode_request(&Request::Checkpoint))?;
         let mut asm = CheckpointAssembler::new();
         loop {
@@ -228,20 +468,51 @@ impl ServiceClient {
                 break;
             }
         }
-        let (bytes, digest) = asm.finish()?;
-        let len = bytes.len() as u64;
-        crate::util::fs::atomic_write(path, &bytes)?;
-        Ok((len, digest))
+        asm.finish()
     }
 
-    /// Ask the daemon to drain and exit.
+    /// Stream the daemon's store-set checkpoint into `path`, verifying
+    /// the FNV-1a digest while receiving. Returns `(bytes, digest)`.
+    /// Transient failures (including a digest mismatch from a corrupted
+    /// transfer) restart the whole stream over a fresh session — partial
+    /// downloads are never resumed, and the file is written atomically
+    /// only after a fully verified transfer.
+    pub fn checkpoint_to<P: AsRef<Path>>(&mut self, path: P) -> Result<(u64, u64), ApiError> {
+        let mut left = self.policy.retries;
+        let mut prev = self.policy.backoff;
+        let mut rebuild = false;
+        loop {
+            let result = if rebuild {
+                self.reconnect().and_then(|()| self.checkpoint_once())
+            } else {
+                self.checkpoint_once()
+            };
+            match result {
+                Ok((bytes, digest)) => {
+                    let len = bytes.len() as u64;
+                    crate::util::fs::atomic_write(path, &bytes)?;
+                    return Ok((len, digest));
+                }
+                Err(e) if left > 0 && is_transient(&e) && self.addr.is_some() => {
+                    left -= 1;
+                    rebuild = true;
+                    prev = backoff_sleep(&mut self.jitter, &self.policy, prev);
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Ask the daemon to drain and exit. Never retried: after a lost
+    /// ack the daemon may already be gone, and a reconnect-replay would
+    /// race its listener teardown for no benefit.
     pub fn shutdown(&mut self) -> Result<(), ApiError> {
-        match self.call(&Request::Shutdown)? {
+        self.call_retry(&Request::Shutdown, false, |resp| match resp {
             Response::ShutdownAck => Ok(()),
             other => {
                 Err(ApiError::ServiceProtocol(format!("expected ShutdownAck, got {other:?}")))
             }
-        }
+        })
     }
 }
 
@@ -339,6 +610,47 @@ pub use super::protocol::error_code as remote_error_code;
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn transient_classification_matches_the_retry_table() {
+        assert!(is_transient(&ApiError::Io(std::io::Error::new(
+            std::io::ErrorKind::TimedOut,
+            "read timed out"
+        ))));
+        assert!(is_transient(&ApiError::ServiceProtocol("desync".to_string())));
+        assert!(is_transient(&ApiError::ServiceDigestMismatch { expected: 1, actual: 2 }));
+        assert!(is_transient(&ApiError::ServiceRemote {
+            code: error_code::BUSY,
+            message: String::new()
+        }));
+        // deterministic remote failures are not worth a replay
+        assert!(!is_transient(&ApiError::ServiceRemote {
+            code: error_code::SOLVE,
+            message: String::new()
+        }));
+        assert!(!is_transient(&ApiError::ServiceRemote {
+            code: error_code::SHUTTING_DOWN,
+            message: String::new()
+        }));
+        assert!(!is_transient(&ApiError::EmptySketch));
+    }
+
+    #[test]
+    fn backoff_sleep_stays_within_the_policy_bounds() {
+        let policy = RetryPolicy {
+            retries: 3,
+            backoff: Duration::from_micros(10),
+            max_backoff: Duration::from_micros(80),
+            timeout: None,
+        };
+        let mut rng = Rng::new(7);
+        let mut prev = policy.backoff;
+        for _ in 0..32 {
+            prev = backoff_sleep(&mut rng, &policy, prev);
+            assert!(prev.as_secs_f64() >= policy.backoff.as_secs_f64() * 0.999);
+            assert!(prev <= policy.max_backoff);
+        }
+    }
 
     fn stream_frames(bytes: &[u8]) -> Vec<Response> {
         let mut out = Vec::new();

@@ -22,11 +22,14 @@ use super::protocol::{
 use crate::api::{ApiError, Ckm};
 use crate::ckm::Solution;
 use crate::decoder::DecoderSpec;
-use crate::store::ShardedStore;
+use crate::store::{append_store_set_to_file, ShardedStore};
 use crate::util::digest::Fnv1a;
 use crate::util::framing::{read_frame, write_frame, FrameError};
+use crate::util::sync::{lock_recover, wait_recover, wait_timeout_recover};
+use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::TcpListener;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -47,6 +50,75 @@ const POLL_INTERVAL: Duration = Duration::from_millis(25);
 
 /// How long `serve` waits for in-flight connections to drain on shutdown.
 const DRAIN_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// How many `(lease, seq)` receipts the absorb dedup window remembers.
+/// Sized far above any realistic in-flight count (a producer retries one
+/// absorb at a time), so eviction only ever drops receipts whose acks the
+/// client has long since consumed.
+const DEDUP_WINDOW_CAP: usize = 4096;
+
+/// Runtime fault-tolerance knobs for a [`Daemon`]. The `Default` is the
+/// fully permissive pre-v4 behavior — no connection cap, no socket
+/// deadlines, no WAL — so embedding tests and existing callers are
+/// unchanged; `ckmd serve` turns the production values on via flags.
+#[derive(Clone, Debug, Default)]
+pub struct DaemonConfig {
+    /// Accepted-connection cap; `0` = unlimited. A connection arriving at
+    /// the cap is answered with one [`error_code::BUSY`] error frame and
+    /// dropped before its handler thread ever spawns.
+    pub max_connections: u64,
+    /// Socket write timeout (and the bound on how long a response send
+    /// may stall on a slow reader). `None` = block forever.
+    pub io_timeout: Option<Duration>,
+    /// Socket read timeout between requests: a connection silent this
+    /// long is reaped (the handler returns; no error frame — the peer is
+    /// gone or stalled). Also bounds a peer stalling mid-frame.
+    /// `None` = connections may idle forever.
+    pub idle_timeout: Option<Duration>,
+    /// Crash-recovery WAL: when set, a background thread appends the
+    /// store set to this file after rotations (and at least every
+    /// `interval`), and a restarted daemon replays it. See
+    /// [`crate::store::append_store_set_to_file`].
+    pub wal: Option<WalConfig>,
+}
+
+/// Where and how often the daemon WALs its store set.
+#[derive(Clone, Debug)]
+pub struct WalConfig {
+    pub path: PathBuf,
+    /// Upper bound between WAL appends while rows are arriving (the WAL
+    /// thread also wakes immediately on every rotation).
+    pub interval: Duration,
+}
+
+/// The absorb dedup window: remembers the row count acked for recent
+/// `(lease, seq)` pairs so a retried absorb (client resent after a lost
+/// ack) is acked again **without re-merging** — the double-count guard
+/// that makes `Absorb` idempotent. Bounded FIFO; not persisted across
+/// restarts (a restarted daemon issues fresh lease ids, so stale pairs
+/// can never collide).
+#[derive(Default)]
+struct DedupWindow {
+    seen: HashMap<(u64, u64), u64>,
+    order: VecDeque<(u64, u64)>,
+}
+
+impl DedupWindow {
+    fn get(&self, lease: u64, seq: u64) -> Option<u64> {
+        self.seen.get(&(lease, seq)).copied()
+    }
+
+    fn record(&mut self, lease: u64, seq: u64, rows: u64) {
+        if self.seen.insert((lease, seq), rows).is_none() {
+            self.order.push_back((lease, seq));
+            if self.order.len() > DEDUP_WINDOW_CAP {
+                if let Some(old) = self.order.pop_front() {
+                    self.seen.remove(&old);
+                }
+            }
+        }
+    }
+}
 
 /// A solve request's identity: the snapshot shape plus the decoder that
 /// answers it (λ compared by bit pattern so the key is `Eq`-safe). The
@@ -115,6 +187,7 @@ struct SolveCacheEntry {
 struct ServiceState {
     store: ShardedStore,
     solver: Ckm,
+    config: DaemonConfig,
     cache: Mutex<Vec<SolveCacheEntry>>,
     /// Most-recently-solved `(query, k)` pairs, warmest first.
     hot: Mutex<Vec<(Query, u64)>>,
@@ -122,11 +195,29 @@ struct ServiceState {
     cache_misses: AtomicU64,
     refreshed_solves: AtomicU64,
     connections: AtomicU64,
+    /// High-water mark of `connections`.
+    peak_connections: AtomicU64,
+    /// Connections answered with `BUSY` at the cap.
+    rejected_busy: AtomicU64,
+    /// Absorbs answered from the dedup window.
+    replayed_absorbs: AtomicU64,
+    /// Lease id allocator; starts at 1 so `0` always means "no lease".
+    next_lease: AtomicU64,
+    dedup: Mutex<DedupWindow>,
+    started: Instant,
     shutdown: AtomicBool,
     /// Refresh-thread doorbell: `true` = a rotation happened since the
     /// last refresh pass.
     refresh_pending: Mutex<bool>,
     refresh_cv: Condvar,
+    /// WAL-thread doorbell (same shape as the refresh doorbell).
+    wal_pending: Mutex<bool>,
+    wal_cv: Condvar,
+    /// Completed WAL appends.
+    wal_appends: AtomicU64,
+    /// Total ingested rows covered by the last completed WAL append (a
+    /// lower bound — see `wal_append_if_dirty`).
+    wal_rows: AtomicU64,
 }
 
 impl ServiceState {
@@ -145,7 +236,11 @@ impl ServiceState {
     fn solve_query(&self, q: Query, k: u64, counted: bool) -> Result<Solution, ApiError> {
         let (artifact, generations) = self.artifact_for(q)?;
         {
-            let cache = self.cache.lock().unwrap();
+            // Recovering locks throughout: a handler panicking with a
+            // cache/hot/dedup guard held must not poison every other
+            // connection (entries are inserted whole, so the recovered
+            // state is always consistent — see `util::sync`).
+            let cache = lock_recover(&self.cache);
             if let Some(e) = cache
                 .iter()
                 .find(|e| e.query == q && e.k == k && e.generations == generations)
@@ -160,14 +255,14 @@ impl ServiceState {
             self.cache_misses.fetch_add(1, Ordering::Relaxed);
         }
         let solution = self.solver.solve_with_decoder(&artifact, k as usize, q.decoder())?;
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = lock_recover(&self.cache);
         // Another thread may have solved the same snapshot meanwhile;
         // last write wins, both computed the identical solution.
         cache.retain(|e| !(e.query == q && e.k == k));
         cache.insert(0, SolveCacheEntry { query: q, k, generations, solution: solution.clone() });
         cache.truncate(SOLVE_CACHE_CAP);
         drop(cache);
-        let mut hot = self.hot.lock().unwrap();
+        let mut hot = lock_recover(&self.hot);
         hot.retain(|&(hq, hk)| !(hq == q && hk == k));
         hot.insert(0, (q, k));
         hot.truncate(HOT_QUERY_CAP);
@@ -175,8 +270,70 @@ impl ServiceState {
     }
 
     fn ring_refresh_bell(&self) {
-        *self.refresh_pending.lock().unwrap() = true;
+        *lock_recover(&self.refresh_pending) = true;
         self.refresh_cv.notify_all();
+    }
+
+    fn ring_wal_bell(&self) {
+        *lock_recover(&self.wal_pending) = true;
+        self.wal_cv.notify_all();
+    }
+
+    /// Store-lifetime rows across all shards (the WAL-coverage yardstick).
+    fn total_rows(&self) -> u64 {
+        self.store.shard_stats().iter().map(|s| s.rows_ingested as u64).sum()
+    }
+
+    /// Append the store set to the WAL if anything changed since the last
+    /// append. `wal_rows` is measured *before* the internal snapshot, so
+    /// it is a lower bound on what the append actually persisted — lag
+    /// can over-report briefly, never under-report.
+    fn wal_append_if_dirty(&self, path: &std::path::Path) {
+        let rows = self.total_rows();
+        if rows == self.wal_rows.load(Ordering::SeqCst) && self.wal_appends.load(Ordering::SeqCst) > 0
+        {
+            return;
+        }
+        match append_store_set_to_file(&self.store, path) {
+            Ok(_) => {
+                self.wal_rows.store(rows, Ordering::SeqCst);
+                self.wal_appends.fetch_add(1, Ordering::SeqCst);
+            }
+            Err(e) => {
+                // Serving continues; the lag counter in Status surfaces
+                // the growing exposure to operators.
+                eprintln!("ckmd: WAL append to {} failed: {e}", path.display());
+            }
+        }
+    }
+
+    /// Serve one absorb, deduplicating by `(lease, seq)` when the client
+    /// holds a lease. The check-merge-record sequence is not atomic
+    /// across *different* connections replaying the same pair
+    /// concurrently — a producer retries sequentially on one connection
+    /// at a time, which is the contract this window is sized for.
+    fn absorb(&self, shard: usize, chunk: super::protocol::WireChunk, lease: u64, seq: u64) -> Response {
+        let c = match chunk.into_chunk() {
+            Ok(c) => c,
+            Err(e) => {
+                return Response::Error { code: error_code::PROTOCOL, message: e.to_string() }
+            }
+        };
+        if lease != 0 {
+            if let Some(rows) = lock_recover(&self.dedup).get(lease, seq) {
+                self.replayed_absorbs.fetch_add(1, Ordering::Relaxed);
+                return Response::Absorbed { rows };
+            }
+        }
+        match self.store.try_absorb(shard, c) {
+            Ok(rows) => {
+                if lease != 0 {
+                    lock_recover(&self.dedup).record(lease, seq, rows as u64);
+                }
+                Response::Absorbed { rows: rows as u64 }
+            }
+            Err(e) => error_response(&e),
+        }
     }
 
     fn status(&self) -> StatusInfo {
@@ -193,6 +350,11 @@ impl ServiceState {
                 current_epoch_id: s.current_epoch_id,
             })
             .collect();
+        let wal_lag_rows = if self.config.wal.is_some() {
+            self.total_rows().saturating_sub(self.wal_rows.load(Ordering::SeqCst))
+        } else {
+            0
+        };
         StatusInfo {
             shards,
             cache_hits: self.cache_hits.load(Ordering::Relaxed),
@@ -201,6 +363,12 @@ impl ServiceState {
             connections: self.connections.load(Ordering::Relaxed),
             simd_path: crate::util::fastmath::active_path().to_string(),
             decoders: DecoderSpec::available_names().iter().map(|s| s.to_string()).collect(),
+            uptime_secs: self.started.elapsed().as_secs(),
+            peak_connections: self.peak_connections.load(Ordering::Relaxed),
+            rejected_busy: self.rejected_busy.load(Ordering::Relaxed),
+            replayed_absorbs: self.replayed_absorbs.load(Ordering::Relaxed),
+            wal_appends: self.wal_appends.load(Ordering::SeqCst),
+            wal_lag_rows,
         }
     }
 
@@ -246,20 +414,37 @@ pub struct Daemon {
 }
 
 impl Daemon {
+    /// A daemon with the permissive [`DaemonConfig::default`] (no cap, no
+    /// deadlines, no WAL) — the pre-v4 behavior.
     pub fn new(store: ShardedStore, solver: Ckm) -> Daemon {
+        Daemon::with_config(store, solver, DaemonConfig::default())
+    }
+
+    pub fn with_config(store: ShardedStore, solver: Ckm, config: DaemonConfig) -> Daemon {
         Daemon {
             state: Arc::new(ServiceState {
                 store,
                 solver,
+                config,
                 cache: Mutex::new(Vec::new()),
                 hot: Mutex::new(Vec::new()),
                 cache_hits: AtomicU64::new(0),
                 cache_misses: AtomicU64::new(0),
                 refreshed_solves: AtomicU64::new(0),
                 connections: AtomicU64::new(0),
+                peak_connections: AtomicU64::new(0),
+                rejected_busy: AtomicU64::new(0),
+                replayed_absorbs: AtomicU64::new(0),
+                next_lease: AtomicU64::new(1),
+                dedup: Mutex::new(DedupWindow::default()),
+                started: Instant::now(),
                 shutdown: AtomicBool::new(false),
                 refresh_pending: Mutex::new(false),
                 refresh_cv: Condvar::new(),
+                wal_pending: Mutex::new(false),
+                wal_cv: Condvar::new(),
+                wal_appends: AtomicU64::new(0),
+                wal_rows: AtomicU64::new(0),
             }),
         }
     }
@@ -269,6 +454,7 @@ impl Daemon {
     pub fn request_shutdown(&self) {
         self.state.shutdown.store(true, Ordering::SeqCst);
         self.state.refresh_cv.notify_all();
+        self.state.wal_cv.notify_all();
     }
 
     /// Checkpoint the store set to a file (used by `ckmd serve --save`).
@@ -291,22 +477,37 @@ impl Daemon {
 
     /// Accept and serve connections until a `Shutdown` request (or
     /// [`Daemon::request_shutdown`]) arrives, then drain in-flight
-    /// connections and stop the refresh thread. Blocks the caller.
+    /// connections and stop the background threads (the WAL thread, when
+    /// configured, takes one final append on the way out). Blocks the
+    /// caller.
     pub fn serve(&self, listener: ServiceListener) -> Result<(), ApiError> {
         let refresh = spawn_refresh_thread(Arc::clone(&self.state));
+        let wal = self
+            .state
+            .config
+            .wal
+            .clone()
+            .map(|w| spawn_wal_thread(Arc::clone(&self.state), w));
+        let (io_timeout, idle_timeout) =
+            (self.state.config.io_timeout, self.state.config.idle_timeout);
         let mut handlers = Vec::new();
-        match &listener {
+        let result = match &listener {
             ServiceListener::Tcp(l) => {
                 l.set_nonblocking(true)?;
                 self.accept_loop(&mut handlers, || match l.accept() {
                     Ok((s, _)) => {
                         s.set_nonblocking(false).ok();
                         s.set_nodelay(true).ok();
+                        // Deadlines live on the concrete socket (the
+                        // `Conn` trait stays object-safe and blanket-
+                        // implemented for in-memory test pipes).
+                        s.set_read_timeout(idle_timeout).ok();
+                        s.set_write_timeout(io_timeout).ok();
                         Some(Ok(Box::new(s) as Box<dyn Conn>))
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
                     Err(e) => Some(Err(e)),
-                })?;
+                })
             }
             #[cfg(unix)]
             ServiceListener::Unix(l) => {
@@ -314,13 +515,15 @@ impl Daemon {
                 self.accept_loop(&mut handlers, || match l.accept() {
                     Ok((s, _)) => {
                         s.set_nonblocking(false).ok();
+                        s.set_read_timeout(idle_timeout).ok();
+                        s.set_write_timeout(io_timeout).ok();
                         Some(Ok(Box::new(s) as Box<dyn Conn>))
                     }
                     Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => None,
                     Err(e) => Some(Err(e)),
-                })?;
+                })
             }
-        }
+        };
         // Drain: connected producers get DRAIN_TIMEOUT to finish their
         // in-flight request/response exchanges.
         let deadline = Instant::now() + DRAIN_TIMEOUT;
@@ -328,7 +531,11 @@ impl Daemon {
             std::thread::sleep(POLL_INTERVAL);
         }
         self.state.refresh_cv.notify_all();
+        self.state.wal_cv.notify_all();
         let _ = refresh.join();
+        if let Some(w) = wal {
+            let _ = w.join();
+        }
         for h in handlers {
             // Handlers see the shutdown flag at their next request; only
             // join the ones that already finished to avoid blocking on a
@@ -337,7 +544,7 @@ impl Daemon {
                 let _ = h.join();
             }
         }
-        Ok(())
+        result
     }
 
     fn accept_loop(
@@ -345,11 +552,36 @@ impl Daemon {
         handlers: &mut Vec<std::thread::JoinHandle<()>>,
         mut accept: impl FnMut() -> Option<std::io::Result<Box<dyn Conn>>>,
     ) -> Result<(), ApiError> {
+        let cap = self.state.config.max_connections;
         while !self.state.shutdown.load(Ordering::SeqCst) {
             match accept() {
-                Some(Ok(stream)) => {
+                Some(Ok(mut stream)) => {
+                    // Backpressure at the door: over the cap, the peer
+                    // gets one typed BUSY frame (bounded by the socket's
+                    // write timeout) and the connection is dropped before
+                    // a handler thread ever exists for it.
+                    if cap != 0 && self.state.connections.load(Ordering::SeqCst) >= cap {
+                        self.state.rejected_busy.fetch_add(1, Ordering::Relaxed);
+                        let _ = send(
+                            &mut *stream,
+                            &Response::Error {
+                                code: error_code::BUSY,
+                                message: format!("connection cap ({cap}) reached"),
+                            },
+                            protocol::PROTOCOL_VERSION,
+                        );
+                        continue;
+                    }
+                    // Counted here, not in the handler, so the cap check
+                    // above never races a just-spawned handler that has
+                    // not incremented yet.
+                    let active = self.state.connections.fetch_add(1, Ordering::SeqCst) + 1;
+                    self.state.peak_connections.fetch_max(active, Ordering::Relaxed);
+                    let guard = ConnGuard(Arc::clone(&self.state));
                     let state = Arc::clone(&self.state);
-                    handlers.push(std::thread::spawn(move || handle_connection(state, stream)));
+                    handlers.push(std::thread::spawn(move || {
+                        handle_connection(state, stream, guard)
+                    }));
                 }
                 Some(Err(e)) => return Err(ApiError::Io(e)),
                 None => std::thread::sleep(POLL_INTERVAL),
@@ -364,10 +596,12 @@ pub trait Conn: Read + Write + Send {}
 impl<T: Read + Write + Send> Conn for T {}
 
 /// Decrements the live-connection counter even if the handler panics.
-struct ConnGuard<'a>(&'a AtomicU64);
-impl Drop for ConnGuard<'_> {
+/// Owns its `Arc` so the accept loop can increment *before* spawning the
+/// handler thread (the cap check must never race an uncounted handler).
+struct ConnGuard(Arc<ServiceState>);
+impl Drop for ConnGuard {
     fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
+        self.0.connections.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
@@ -428,10 +662,7 @@ impl Write for ChunkSender<'_> {
 /// sequential request/response loop. Every malformed input becomes a typed
 /// error frame (or a dropped connection) — never a panic, never a partial
 /// merge.
-fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
-    state.connections.fetch_add(1, Ordering::SeqCst);
-    let _guard = ConnGuard(&state.connections);
-
+fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>, _guard: ConnGuard) {
     // Handshake: the first frame must be Hello; it keys the shard and
     // pins the session protocol (the ack echoes the negotiated version,
     // so a v2 client's strict version check keeps passing).
@@ -474,6 +705,9 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
         let payload = match read_frame(&mut stream) {
             Ok(Some(p)) => p,
             Ok(None) => return, // clean close between frames
+            // Io covers a socket read timeout (WouldBlock/TimedOut), so
+            // this arm *is* the idle-connection reaper when
+            // `DaemonConfig::idle_timeout` is set.
             Err(FrameError::Io(_)) | Err(FrameError::Truncated) => return,
             Err(e) => {
                 // Bad magic / oversized header: the stream is unframed
@@ -531,21 +765,20 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
             }
             Request::ReserveRows { n_rows } => {
                 let offset = state.store.reserve(shard, n_rows as usize) as u64;
-                if send(&mut stream, &Response::Reserved { offset }, proto).is_err() {
+                // Leases exist from v4 on; a v3 session gets lease 0 and
+                // its absorbs bypass the dedup window (the pre-v4
+                // at-most-once-per-send contract).
+                let lease = if proto >= 4 {
+                    state.next_lease.fetch_add(1, Ordering::Relaxed)
+                } else {
+                    0
+                };
+                if send(&mut stream, &Response::Reserved { offset, lease }, proto).is_err() {
                     return;
                 }
             }
-            Request::Absorb { chunk } => {
-                let resp = match chunk.into_chunk() {
-                    Ok(c) => match state.store.try_absorb(shard, c) {
-                        Ok(rows) => Response::Absorbed { rows: rows as u64 },
-                        Err(e) => error_response(&e),
-                    },
-                    Err(e) => Response::Error {
-                        code: error_code::PROTOCOL,
-                        message: e.to_string(),
-                    },
-                };
+            Request::Absorb { chunk, lease, seq } => {
+                let resp = state.absorb(shard, chunk, lease, seq);
                 if send(&mut stream, &resp, proto).is_err() {
                     return;
                 }
@@ -558,6 +791,10 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                     .flat_map(|(s, ids)| ids.into_iter().map(move |id| (s as u32, id)))
                     .collect();
                 state.ring_refresh_bell();
+                // Rotation seals an epoch — the natural durability point,
+                // so the WAL thread wakes immediately instead of waiting
+                // out its interval.
+                state.ring_wal_bell();
                 if send(&mut stream, &Response::Rotated { evicted }, proto).is_err() {
                     return;
                 }
@@ -624,6 +861,7 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
                 let _ = send(&mut stream, &Response::ShutdownAck, proto);
                 state.shutdown.store(true, Ordering::SeqCst);
                 state.refresh_cv.notify_all();
+                state.wal_cv.notify_all();
                 return;
             }
         }
@@ -632,22 +870,24 @@ fn handle_connection(state: Arc<ServiceState>, mut stream: Box<dyn Conn>) {
 
 /// The solve-refresh thread: woken by every rotation, re-solves the hot
 /// `(query, k)` pairs so the next interactive solve hits the cache at the
-/// new generation vector.
+/// new generation vector. Purely event-driven: it sleeps on the condvar
+/// until a rotation rings the bell or shutdown notifies — no periodic
+/// timeout wakeups (every bell-ringer also notifies, so a lost-wakeup
+/// backstop timer is unnecessary), and a poisoned doorbell mutex is
+/// recovered rather than crashing the thread.
 fn spawn_refresh_thread(state: Arc<ServiceState>) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || loop {
         {
-            let mut pending = state.refresh_pending.lock().unwrap();
+            let mut pending = lock_recover(&state.refresh_pending);
             while !*pending && !state.shutdown.load(Ordering::SeqCst) {
-                let (p, _timeout) =
-                    state.refresh_cv.wait_timeout(pending, Duration::from_millis(200)).unwrap();
-                pending = p;
+                pending = wait_recover(&state.refresh_cv, &state.refresh_pending, pending);
             }
             if state.shutdown.load(Ordering::SeqCst) {
                 return;
             }
             *pending = false;
         }
-        let hot: Vec<(Query, u64)> = state.hot.lock().unwrap().clone();
+        let hot: Vec<(Query, u64)> = lock_recover(&state.hot).clone();
         for (q, k) in hot {
             if state.shutdown.load(Ordering::SeqCst) {
                 return;
@@ -658,5 +898,39 @@ fn spawn_refresh_thread(state: Arc<ServiceState>) -> std::thread::JoinHandle<()>
                 state.refreshed_solves.fetch_add(1, Ordering::Relaxed);
             }
         }
+    })
+}
+
+/// The WAL thread: appends the store set to the WAL file on startup (so
+/// the file exists and lag reads zero before the first rotation), then
+/// after every rotation (the doorbell) and at least every
+/// `WalConfig::interval` while rows are arriving, and once more on the
+/// way out so a graceful shutdown is always fully persisted.
+fn spawn_wal_thread(state: Arc<ServiceState>, wal: WalConfig) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        state.wal_append_if_dirty(&wal.path);
+        loop {
+            {
+                let mut pending = lock_recover(&state.wal_pending);
+                while !*pending && !state.shutdown.load(Ordering::SeqCst) {
+                    let (p, timeout) = wait_timeout_recover(
+                        &state.wal_cv,
+                        &state.wal_pending,
+                        pending,
+                        wal.interval,
+                    );
+                    pending = p;
+                    if timeout.timed_out() {
+                        break; // interval append: cover un-rotated rows too
+                    }
+                }
+                if state.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                *pending = false;
+            }
+            state.wal_append_if_dirty(&wal.path);
+        }
+        state.wal_append_if_dirty(&wal.path);
     })
 }

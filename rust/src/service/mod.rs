@@ -19,12 +19,27 @@
 //! state to the same rows sketched in-process, and the daemon's CPU cost
 //! stays O(m) per request regardless of data volume.
 //!
+//! Fault tolerance (protocol v4): the daemon bounds every resource — a
+//! connection cap answered with typed `BUSY` frames, socket read/write
+//! deadlines that reap idle or stalled peers, a bounded absorb-dedup
+//! window — and optionally WALs its store set to a crash-recoverable
+//! CKMC container (append-only at the byte level, torn tails heal to the
+//! previous append), so a `kill -9` loses at most the not-yet-appended
+//! tail. Ingest is *exactly-once under retry*: `ReserveRows` hands out a
+//! lease, each `Absorb` carries `(lease, seq)`, and a replayed pair is
+//! re-acked without re-merging. The client pairs this with
+//! [`client::RetryPolicy`] — reconnect, re-handshake (verifying the
+//! daemon identity is unchanged), exponential backoff with decorrelated
+//! jitter, and per-verb replay-safety classification.
+//!
 //! - [`protocol`] — wire messages + strict binary codec (unknown tags,
 //!   lying lengths, trailing bytes, forged packed payloads: all typed
 //!   errors, never panics or partial merges).
 //! - [`daemon`] — [`daemon::Daemon`]: listener (TCP / unix socket),
 //!   thread-per-connection handlers, background solve-refresh on
-//!   rotation, digest-while-streaming checkpoints.
+//!   rotation, digest-while-streaming checkpoints, and the
+//!   [`daemon::DaemonConfig`] fault-tolerance knobs (cap, deadlines,
+//!   [`daemon::WalConfig`] crash-recovery WAL).
 //! - [`client`] — [`client::ServiceClient`]: the library type behind the
 //!   `ckm-client` binary, the `ckm client` subcommand, and the examples;
 //!   plus [`client::CheckpointAssembler`] (digest-verified checkpoint
@@ -36,6 +51,6 @@ pub mod client;
 pub mod daemon;
 pub mod protocol;
 
-pub use client::{CheckpointAssembler, IngestReceipt, ServiceClient};
-pub use daemon::{Daemon, ServiceListener, CHECKPOINT_CHUNK_BYTES};
+pub use client::{CheckpointAssembler, IngestReceipt, RetryPolicy, ServiceClient};
+pub use daemon::{Daemon, DaemonConfig, ServiceListener, WalConfig, CHECKPOINT_CHUNK_BYTES};
 pub use protocol::{HelloAck, StatusInfo, PROTOCOL_VERSION};

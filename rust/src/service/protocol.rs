@@ -34,7 +34,16 @@ use crate::util::framing::{ByteReader, ByteWriter, WireError};
 ///     still accepted: `Hello` carries the peer's version and the ack
 ///     echoes the negotiated one, so old clients keep working and
 ///     implicitly solve with CLOMPR.
-pub const PROTOCOL_VERSION: u32 = 3;
+/// v4: idempotent ingest — `Reserved` carries a daemon-issued lease id
+///     (trailing u64, sessions ≥ v4 only) and `Absorb` echoes it with a
+///     per-lease sequence number (trailing `(lease, seq)` u64 pair,
+///     written only when lease ≠ 0) so a retried absorb after a lost ack
+///     is deduplicated instead of double-merged; `StatusInfo` grows an
+///     operational block (uptime, peak connections, busy rejections,
+///     replayed absorbs, WAL counters). Down-negotiation is byte-exact:
+///     a v3 session never sees a lease, so its client sends absorbs in
+///     the v3 byte layout.
+pub const PROTOCOL_VERSION: u32 = 4;
 
 /// Oldest peer protocol this build still speaks.
 pub const MIN_PROTOCOL_VERSION: u32 = 2;
@@ -56,6 +65,10 @@ pub mod error_code {
     pub const INTERNAL: u16 = 4;
     /// The daemon is draining and accepts no new work.
     pub const SHUTTING_DOWN: u16 = 5;
+    /// The daemon is at its connection cap; try again later (safe to
+    /// retry with backoff — no work was started). New in protocol v4,
+    /// but sent to any peer since error frames are version-stable.
+    pub const BUSY: u16 = 6;
 }
 
 // request tags
@@ -97,7 +110,17 @@ pub enum Request {
     /// shard. The returned offset keys the dither stream client-side.
     ReserveRows { n_rows: u64 },
     /// Phase 3: ship a client-sketched chunk for exact merging.
-    Absorb { chunk: WireChunk },
+    ///
+    /// `lease` is the id [`Response::Reserved`] issued for this
+    /// reservation (v4 sessions; 0 = no lease, legacy non-idempotent
+    /// path) and `seq` numbers the absorbs under that lease. The pair is
+    /// the daemon's dedup key: a replayed `(lease, seq)` is acked from
+    /// the dedup window without re-merging. On the wire the pair is a
+    /// trailing field written **only when `lease ≠ 0`**, which makes a
+    /// v4 client byte-compatible with a v3 daemon automatically (a v3
+    /// `Reserved` carries no lease, so the client sends none back).
+    /// `lease == 0` implies `seq == 0`.
+    Absorb { chunk: WireChunk, lease: u64, seq: u64 },
     /// Seal the current epoch on every shard (lockstep time).
     Rotate,
     /// Solve the merged newest-`last_e`-epochs window (`0` = everything
@@ -117,7 +140,11 @@ pub enum Request {
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
     HelloAck(HelloAck),
-    Reserved { offset: u64 },
+    /// Reservation ack. `lease` is a daemon-unique id for this
+    /// reservation, echoed by the absorbs that fill it so retries
+    /// deduplicate; trailing u64 written on v4 sessions only (decoded as
+    /// 0 from a v3 daemon, which disables idempotent retry).
+    Reserved { offset: u64, lease: u64 },
     Absorbed { rows: u64 },
     /// `(shard, epoch id)` pairs evicted by the rotation.
     Rotated { evicted: Vec<(u32, u64)> },
@@ -304,6 +331,21 @@ pub struct StatusInfo {
     /// Decoder names the daemon's registry can solve with (trailing
     /// field, new in protocol v3; empty when the peer speaks v2).
     pub decoders: Vec<String>,
+    /// Seconds since the daemon started serving. Part of the v4 trailing
+    /// operational block (all-zero when the peer speaks ≤ v3).
+    pub uptime_secs: u64,
+    /// High-water mark of concurrently open connections.
+    pub peak_connections: u64,
+    /// Connections refused with [`error_code::BUSY`] at the cap.
+    pub rejected_busy: u64,
+    /// Absorbs answered from the dedup window instead of re-merged.
+    pub replayed_absorbs: u64,
+    /// Completed WAL appends since startup (0 when no WAL is configured).
+    pub wal_appends: u64,
+    /// Rows ingested but not yet covered by a WAL append — what a crash
+    /// right now would lose (0 when no WAL is configured... and also when
+    /// it is perfectly caught up, so read it together with `wal_appends`).
+    pub wal_lag_rows: u64,
 }
 
 // -- encoding ------------------------------------------------------------
@@ -405,9 +447,16 @@ pub fn encode_request(req: &Request) -> Vec<u8> {
             w.u8(T_RESERVE);
             w.u64(*n_rows);
         }
-        Request::Absorb { chunk } => {
+        Request::Absorb { chunk, lease, seq } => {
             w.u8(T_ABSORB);
             put_chunk(&mut w, chunk);
+            // Trailing idempotency pair, only under a live lease: a v3
+            // daemon never issues a lease, so the frames it receives stay
+            // byte-identical to the v3 layout its strict decoder expects.
+            if *lease != 0 {
+                w.u64(*lease);
+                w.u64(*seq);
+            }
         }
         Request::Rotate => w.u8(T_ROTATE),
         Request::SolveWindow { last_e, k, decoder } => {
@@ -457,7 +506,14 @@ pub fn decode_request(payload: &[u8]) -> Result<Request, WireError> {
             Request::Hello { producer: r.str()?, protocol }
         }
         T_RESERVE => Request::ReserveRows { n_rows: r.u64()? },
-        T_ABSORB => Request::Absorb { chunk: get_chunk(&mut r)? },
+        T_ABSORB => {
+            let chunk = get_chunk(&mut r)?;
+            // v4 trailing pair; a v3 frame (or a lease-less v4 client)
+            // stops after the chunk.
+            let (lease, seq) =
+                if r.remaining() > 0 { (r.u64()?, r.u64()?) } else { (0, 0) };
+            Request::Absorb { chunk, lease, seq }
+        }
         T_ROTATE => Request::Rotate,
         T_SOLVE_WINDOW => {
             let (last_e, k) = (r.u64()?, r.u64()?);
@@ -481,10 +537,11 @@ pub fn encode_response(resp: &Response) -> Vec<u8> {
     encode_response_versioned(resp, PROTOCOL_VERSION)
 }
 
-/// Encode a response for a session negotiated at `protocol`. The only
-/// version-sensitive message is `Status`: its trailing `decoders` list is
-/// a v3 field, and a v2 peer's strict decoder would reject the extra
-/// bytes, so it is written only for v3 sessions.
+/// Encode a response for a session negotiated at `protocol`. The
+/// version-sensitive messages are `Status` (trailing `decoders` list is
+/// v3; trailing operational block is v4) and `Reserved` (trailing lease
+/// id is v4): an older peer's strict decoder would reject the extra
+/// bytes, so each trailing field is written only at its own version.
 pub fn encode_response_versioned(resp: &Response, protocol: u32) -> Vec<u8> {
     let mut w = ByteWriter::new();
     match resp {
@@ -505,9 +562,12 @@ pub fn encode_response_versioned(resp: &Response, protocol: u32) -> Vec<u8> {
             w.u64(a.window_capacity);
             w.u64(a.chunk_rows);
         }
-        Response::Reserved { offset } => {
+        Response::Reserved { offset, lease } => {
             w.u8(T_RESERVED);
             w.u64(*offset);
+            if protocol >= 4 {
+                w.u64(*lease);
+            }
         }
         Response::Absorbed { rows } => {
             w.u8(T_ABSORBED);
@@ -564,6 +624,14 @@ pub fn encode_response_versioned(resp: &Response, protocol: u32) -> Vec<u8> {
                     w.str(d);
                 }
             }
+            if protocol >= 4 {
+                w.u64(s.uptime_secs);
+                w.u64(s.peak_connections);
+                w.u64(s.rejected_busy);
+                w.u64(s.replayed_absorbs);
+                w.u64(s.wal_appends);
+                w.u64(s.wal_lag_rows);
+            }
         }
         Response::Error { code, message } => {
             w.u8(T_ERROR);
@@ -595,7 +663,12 @@ pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
             window_capacity: r.u64()?,
             chunk_rows: r.u64()?,
         }),
-        T_RESERVED => Response::Reserved { offset: r.u64()? },
+        T_RESERVED => {
+            let offset = r.u64()?;
+            // v4 trailing lease; a v3 daemon stops after the offset.
+            let lease = if r.remaining() > 0 { r.u64()? } else { 0 };
+            Response::Reserved { offset, lease }
+        }
         T_ABSORBED => Response::Absorbed { rows: r.u64()? },
         T_ROTATED => {
             let n = r.usize_capped(MAX_SHAPE, "evicted count")?;
@@ -641,6 +714,14 @@ pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
                     decoders.push(r.str()?);
                 }
             }
+            // v4 trailing operational block (all six or none); a v3
+            // daemon stops here and the fields default to zero.
+            let [uptime_secs, peak_connections, rejected_busy, replayed_absorbs, wal_appends, wal_lag_rows] =
+                if r.remaining() > 0 {
+                    [r.u64()?, r.u64()?, r.u64()?, r.u64()?, r.u64()?, r.u64()?]
+                } else {
+                    [0; 6]
+                };
             Response::Status(StatusInfo {
                 shards,
                 cache_hits,
@@ -649,6 +730,12 @@ pub fn decode_response(payload: &[u8]) -> Result<Response, WireError> {
                 connections,
                 simd_path,
                 decoders,
+                uptime_secs,
+                peak_connections,
+                rejected_busy,
+                replayed_absorbs,
+                wal_appends,
+                wal_lag_rows,
             })
         }
         T_ERROR => {
@@ -683,7 +770,9 @@ mod tests {
         let reqs = vec![
             Request::Hello { producer: "edge-7".to_string(), protocol: PROTOCOL_VERSION },
             Request::ReserveRows { n_rows: 4096 },
-            Request::Absorb { chunk: dense },
+            // lease == 0 (legacy, implies seq == 0) and a live v4 lease
+            Request::Absorb { chunk: dense.clone(), lease: 0, seq: 0 },
+            Request::Absorb { chunk: dense, lease: 0xfeed_beef, seq: 17 },
             Request::Rotate,
             Request::SolveWindow { last_e: 0, k: 10, decoder: DecoderSpec::Clompr },
             Request::SolveWindow { last_e: 2, k: 4, decoder: DecoderSpec::SketchShift },
@@ -717,7 +806,7 @@ mod tests {
                 window_capacity: 8,
                 chunk_rows: 4096,
             }),
-            Response::Reserved { offset: 12345 },
+            Response::Reserved { offset: 12345, lease: 77 },
             Response::Absorbed { rows: 512 },
             Response::Rotated { evicted: vec![(0, 3), (1, 3)] },
             Response::Solved(WireSolution {
@@ -745,6 +834,12 @@ mod tests {
                 connections: 3,
                 simd_path: "avx2".to_string(),
                 decoders: vec!["clompr".to_string(), "sketch-shift".to_string()],
+                uptime_secs: 3600,
+                peak_connections: 9,
+                rejected_busy: 2,
+                replayed_absorbs: 4,
+                wal_appends: 11,
+                wal_lag_rows: 512,
             }),
             Response::Error { code: error_code::PROTOCOL, message: "nope".to_string() },
             Response::ShutdownAck,
@@ -815,7 +910,7 @@ mod tests {
     }
 
     #[test]
-    fn status_decoders_field_is_version_gated() {
+    fn status_trailing_fields_are_version_gated() {
         let status = Response::Status(StatusInfo {
             shards: vec![],
             cache_hits: 0,
@@ -824,6 +919,12 @@ mod tests {
             connections: 1,
             simd_path: "scalar".to_string(),
             decoders: vec!["clompr".to_string()],
+            uptime_secs: 120,
+            peak_connections: 7,
+            rejected_busy: 1,
+            replayed_absorbs: 3,
+            wal_appends: 5,
+            wal_lag_rows: 64,
         });
         // a v2 session gets the v2 frame: no trailing list, decodes empty
         let v2_bytes = encode_response_versioned(&status, 2);
@@ -831,13 +932,68 @@ mod tests {
             panic!("wrong verb")
         };
         assert!(back.decoders.is_empty());
-        // a v3 session round-trips the registry
+        assert_eq!(back.uptime_secs, 0);
+        // a v3 session round-trips the registry but not the v4 block
         let v3_bytes = encode_response_versioned(&status, 3);
         assert!(v3_bytes.len() > v2_bytes.len());
         let Response::Status(back) = decode_response(&v3_bytes).unwrap() else {
             panic!("wrong verb")
         };
         assert_eq!(back.decoders, vec!["clompr".to_string()]);
+        assert_eq!((back.uptime_secs, back.peak_connections, back.wal_lag_rows), (0, 0, 0));
+        // a v4 session round-trips the whole operational block
+        let v4_bytes = encode_response_versioned(&status, 4);
+        assert!(v4_bytes.len() > v3_bytes.len());
+        let Response::Status(back) = decode_response(&v4_bytes).unwrap() else {
+            panic!("wrong verb")
+        };
+        assert_eq!(back.uptime_secs, 120);
+        assert_eq!(back.peak_connections, 7);
+        assert_eq!(back.rejected_busy, 1);
+        assert_eq!(back.replayed_absorbs, 3);
+        assert_eq!(back.wal_appends, 5);
+        assert_eq!(back.wal_lag_rows, 64);
+    }
+
+    #[test]
+    fn reserved_lease_is_version_gated() {
+        let resp = Response::Reserved { offset: 4096, lease: 9 };
+        // a v3 session's frame carries no lease: same bytes a v3 daemon
+        // would send, and it decodes with lease = 0 (idempotency off)
+        let v3_bytes = encode_response_versioned(&resp, 3);
+        assert_eq!(
+            decode_response(&v3_bytes).unwrap(),
+            Response::Reserved { offset: 4096, lease: 0 }
+        );
+        // a v4 session round-trips the lease
+        let v4_bytes = encode_response_versioned(&resp, 4);
+        assert_eq!(v4_bytes.len(), v3_bytes.len() + 8);
+        assert_eq!(decode_response(&v4_bytes).unwrap(), resp);
+    }
+
+    #[test]
+    fn leaseless_absorb_matches_the_v3_byte_layout() {
+        // The v4 idempotency pair rides behind `lease != 0`: a client
+        // that never got a lease (v3 daemon) emits frames bit-identical
+        // to the v3 encoder's, so a strict v3 decoder accepts them.
+        let dense = WireChunk::Dense(SketchAccumulator {
+            sum: CVec { re: vec![0.25], im: vec![0.5] },
+            count: 1,
+            bounds: bounds(1),
+        });
+        let with = encode_request(&Request::Absorb {
+            chunk: dense.clone(),
+            lease: 3,
+            seq: 1,
+        });
+        let without = encode_request(&Request::Absorb { chunk: dense, lease: 0, seq: 0 });
+        assert_eq!(with.len(), without.len() + 16);
+        assert_eq!(&with[..without.len()], &without[..]);
+        // and the trailing pair is all-or-nothing: a frame cut inside it
+        // is a typed error, never a panic or a misparse
+        for cut in without.len() + 1..with.len() {
+            assert!(decode_request(&with[..cut]).is_err(), "cut at {cut} parsed");
+        }
     }
 
     #[test]
@@ -848,10 +1004,12 @@ mod tests {
         acc.level_sums = vec![1, 2, 3, 0, 1, 2, 3, 0];
         acc.bounds = bounds(2);
         let packed = acc.pack();
-        let req = Request::Absorb { chunk: WireChunk::Packed(packed) };
+        let req = Request::Absorb { chunk: WireChunk::Packed(packed), lease: 5, seq: 0 };
         let bytes = encode_request(&req);
         let decoded = decode_request(&bytes).unwrap();
-        let Request::Absorb { chunk } = decoded else { panic!("wrong verb") };
+        let Request::Absorb { chunk, lease: 5, seq: 0 } = decoded else {
+            panic!("wrong verb")
+        };
         // honest payload unpacks to the identical accumulator
         let ChunkSketch::Quantized(back) = chunk.clone().into_chunk().unwrap() else {
             panic!("wrong kind")

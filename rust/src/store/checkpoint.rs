@@ -25,7 +25,8 @@ use crate::api::artifact::binary::{
 };
 use crate::api::{ApiError, OpSpec, QuantizationMode, SketchArtifact};
 use crate::util::container::{
-    is_container, ContainerError, ContainerImage, ContainerReader, SectionEntry,
+    append_sections_recoverable, is_container, recover_valid_prefix, ContainerError,
+    ContainerImage, ContainerReader, SectionEntry,
 };
 use crate::util::digest::Fnv1a;
 use crate::util::framing::{ByteReader, ByteWriter};
@@ -324,14 +325,27 @@ pub fn append_store_to_file<P: AsRef<Path>>(
 
     let mut kept: Vec<SectionEntry> = vec![old_entries[0].clone()];
     let mut new_sections = Vec::new();
+    let mut max_kept_id: Option<u64> = None;
     for (kind, tag, payload) in fresh {
         let checksum = Fnv1a::hash(&payload);
         let hit = old_entries[1..].iter().find(|e| {
             e.kind == kind && e.tag == tag && e.len == payload.len() as u64 && e.checksum == checksum
         });
         match hit {
-            Some(e) => kept.push(e.clone()),
+            Some(e) => {
+                kept.push(e.clone());
+                max_kept_id = Some(tag);
+            }
             None => new_sections.push((kind, tag, payload)),
+        }
+    }
+    // The appended table lists kept sections before new ones, and restore
+    // requires strictly increasing epoch ids in table order. If an *old*
+    // epoch changed (a compaction merge rewrote a bucket below a kept
+    // one), appending would put it out of order — heal by full rewrite.
+    if let Some(max_kept) = max_kept_id {
+        if new_sections.iter().any(|(_, tag, _)| *tag <= max_kept) {
+            return rewrite(new_sections.len());
         }
     }
     let stats = AppendStats {
@@ -343,6 +357,144 @@ pub fn append_store_to_file<P: AsRef<Path>>(
     drop(bytes);
     crate::util::container::append_sections(path, &state, &kept, &new_sections)?;
     Ok(stats)
+}
+
+// -- store-set WAL (the ckmd crash-recovery log) ---------------------------
+
+/// Truncate `path` to exactly `len` bytes (WAL torn-tail healing).
+fn truncate_file(path: &Path, len: u64) -> std::io::Result<()> {
+    let f = std::fs::OpenOptions::new().write(true).open(path)?;
+    f.set_len(len)?;
+    f.sync_all()
+}
+
+/// Checkpoint a whole store set into `path` as a **crash-recoverable
+/// WAL append**: unchanged epoch sections are kept by checksum match,
+/// changed ones are appended, and — unlike [`append_store_to_file`] —
+/// the superseded footer is left in place
+/// ([`append_sections_recoverable`]), so a `kill -9` at any instant
+/// leaves the previous append fully loadable. A torn tail found on entry
+/// is healed to its longest valid prefix and the append continues on
+/// top of the recovered state; a file from a different store lineage is
+/// a typed error, never overwritten.
+pub fn append_store_set_to_file<P: AsRef<Path>>(
+    set: &ShardedStore,
+    path: P,
+) -> Result<AppendStats, ApiError> {
+    let path = path.as_ref();
+    let shards = set.snapshot();
+    let base_shard = set.base_shard();
+    let mut meta = ByteWriter::new();
+    meta.u8(DOC_STORE_SET);
+    meta.u64(base_shard);
+    meta.u32(shards.len() as u32);
+    for s in &shards {
+        encode_store_header(&mut meta, s);
+    }
+    let meta_payload = meta.into_vec();
+    let refs: Vec<&SketchStore> = shards.iter().collect();
+    let state = encode_state(&refs);
+    let mut fresh: Vec<(usize, (u8, u64, Vec<u8>))> = Vec::new();
+    for (i, s) in shards.iter().enumerate() {
+        for sec in epoch_sections(i as u32, s) {
+            fresh.push((i, sec));
+        }
+    }
+
+    let rewrite = |appended: usize| -> Result<AppendStats, ApiError> {
+        let img = store_set_image(base_shard, &shards);
+        crate::util::fs::atomic_write(path, &img.to_bytes())?;
+        Ok(AppendStats { kept: 0, appended, rewritten: true })
+    };
+
+    let mut bytes = match std::fs::read(path) {
+        Ok(b) => b,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+            return rewrite(fresh.len() + 1);
+        }
+        Err(e) => return Err(e.into()),
+    };
+    match ContainerReader::parse(&bytes) {
+        Ok(_) => {}
+        Err(ContainerError::Io(e)) => return Err(e.into()),
+        // Torn tail from a crashed append: the recoverable-append
+        // invariant guarantees the previous append survives as a valid
+        // prefix — truncate back to it and append on top.
+        Err(_) => match recover_valid_prefix(&bytes) {
+            Some(len) => {
+                truncate_file(path, len as u64)?;
+                bytes.truncate(len);
+            }
+            None => return rewrite(fresh.len() + 1),
+        },
+    }
+    let reader = ContainerReader::parse(&bytes).expect("prefix validated above");
+    let old_entries = reader.entries();
+    if old_entries.first().map(|e| e.kind) != Some(SEC_META)
+        || reader.section(0)? != &meta_payload[..]
+    {
+        return Err(bad("existing container belongs to a different store set or configuration"));
+    }
+
+    let mut kept: Vec<SectionEntry> = vec![old_entries[0].clone()];
+    let mut new_sections: Vec<(u8, u64, Vec<u8>)> = Vec::new();
+    let mut new_shards: Vec<usize> = Vec::new();
+    let mut max_kept_id: Vec<Option<u64>> = vec![None; shards.len()];
+    for (shard_idx, (kind, tag, payload)) in fresh {
+        let checksum = Fnv1a::hash(&payload);
+        let hit = old_entries[1..].iter().find(|e| {
+            e.kind == kind && e.tag == tag && e.len == payload.len() as u64 && e.checksum == checksum
+        });
+        match hit {
+            Some(e) => {
+                kept.push(e.clone());
+                max_kept_id[shard_idx] = Some(tag);
+            }
+            None => {
+                new_sections.push((kind, tag, payload));
+                new_shards.push(shard_idx);
+            }
+        }
+    }
+    // Same ordering guard as the single-store append, per shard: kept
+    // sections precede appended ones in the table, and restore demands
+    // ascending epoch ids per shard in table order.
+    let out_of_order = new_sections
+        .iter()
+        .zip(&new_shards)
+        .any(|((_, tag, _), &sh)| max_kept_id[sh].is_some_and(|m| *tag <= m));
+    if out_of_order {
+        return rewrite(new_sections.len());
+    }
+    let stats = AppendStats {
+        kept: kept.len(),
+        appended: new_sections.len(),
+        rewritten: false,
+    };
+    drop(reader);
+    drop(bytes);
+    append_sections_recoverable(path, &state, &kept, &new_sections)?;
+    Ok(stats)
+}
+
+/// Load a store set from a WAL file written by
+/// [`append_store_set_to_file`], healing a torn tail. Returns the
+/// restored set and whether healing happened (`true` = the file was
+/// truncated back to its last valid append). A file with no valid
+/// prefix at all surfaces the original typed decode error.
+pub fn load_store_set_wal<P: AsRef<Path>>(path: P) -> Result<(ShardedStore, bool), ApiError> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)?;
+    match store_set_from_container(&bytes) {
+        Ok(set) => Ok((set, false)),
+        Err(ApiError::Io(e)) => Err(e.into()),
+        Err(first) => {
+            let len = recover_valid_prefix(&bytes).ok_or(first)?;
+            let set = store_set_from_container(&bytes[..len])?;
+            truncate_file(path, len as u64)?;
+            Ok((set, true))
+        }
+    }
 }
 
 // -- document detection & conversion (the `ckm convert` entry point) -------
@@ -638,6 +790,113 @@ mod tests {
         assert!(matches!(err, ApiError::Format(_)), "got {err}");
         // the original file is intact
         store_from_container(&std::fs::read(&path).unwrap()).unwrap();
+    }
+
+    /// A 2-shard quantized set with a few rotated epochs per shard.
+    fn quantized_set(seed: u64, rounds: usize) -> ShardedStore {
+        let set = ShardedStore::create(
+            spec(seed, 32, 2),
+            Some(QuantizationMode::OneBit),
+            3,
+            2,
+            Some(16),
+            CompactionPolicy::None,
+        )
+        .unwrap();
+        let mut rng = Rng::new(seed ^ 0x5E7);
+        for _ in 0..rounds {
+            set.ingest(0, &gen::mat_normal(&mut rng, 7, 2));
+            set.ingest(1, &gen::mat_normal(&mut rng, 5, 2));
+            set.rotate_all();
+        }
+        set
+    }
+
+    fn assert_sets_identical(a: &ShardedStore, b: &ShardedStore) {
+        assert_eq!(a.n_shards(), b.n_shards());
+        assert_eq!(a.base_shard(), b.base_shard());
+        assert_eq!(a.shard_stats(), b.shard_stats());
+        let (wa, _) = a.merged_window(None).unwrap();
+        let (wb, _) = b.merged_window(None).unwrap();
+        assert_eq!(wa, wb);
+    }
+
+    #[test]
+    fn set_wal_appends_without_touching_any_existing_byte() {
+        let dir = tempdir("set_wal");
+        let path = dir.join("set.wal.ckmc");
+        let _ = std::fs::remove_file(&path);
+        let set = quantized_set(81, 2);
+
+        let s0 = append_store_set_to_file(&set, &path).unwrap();
+        assert!(s0.rewritten);
+        let b0 = std::fs::read(&path).unwrap();
+
+        let mut rng = Rng::new(4242);
+        set.ingest(0, &gen::mat_normal(&mut rng, 6, 2));
+        set.rotate_all();
+        let s1 = append_store_set_to_file(&set, &path).unwrap();
+        assert!(!s1.rewritten);
+        assert!(s1.kept >= 3, "kept {}", s1.kept); // meta + sealed epochs
+        assert!(s1.appended >= 1, "appended {}", s1.appended);
+
+        let b1 = std::fs::read(&path).unwrap();
+        // The recoverable append's whole point: *every* byte of the
+        // previous file — its footer and trailer included — is intact.
+        assert_eq!(&b1[..b0.len()], &b0[..]);
+
+        let (back, healed) = load_store_set_wal(&path).unwrap();
+        assert!(!healed);
+        assert_sets_identical(&set, &back);
+    }
+
+    #[test]
+    fn set_wal_torn_tail_heals_to_the_previous_append() {
+        let dir = tempdir("set_wal_torn");
+        let path = dir.join("set.wal.ckmc");
+        let _ = std::fs::remove_file(&path);
+        let set = quantized_set(91, 2);
+        append_store_set_to_file(&set, &path).unwrap();
+        let snapshot_rows: usize =
+            set.shard_stats().iter().map(|s| s.rows_ingested).sum();
+        let b0 = std::fs::read(&path).unwrap();
+
+        let mut rng = Rng::new(7);
+        set.ingest(1, &gen::mat_normal(&mut rng, 9, 2));
+        append_store_set_to_file(&set, &path).unwrap();
+        let b1 = std::fs::read(&path).unwrap();
+
+        // kill -9 mid-append: cut anywhere inside the appended tail.
+        for cut in [b0.len() + 1, b1.len() - TRAILER_SPOT, b1.len() - 1] {
+            std::fs::write(&path, &b1[..cut]).unwrap();
+            let (back, healed) = load_store_set_wal(&path).unwrap();
+            assert!(healed, "cut {cut}");
+            let rows: usize = back.shard_stats().iter().map(|s| s.rows_ingested).sum();
+            assert_eq!(rows, snapshot_rows, "cut {cut}");
+            // healing truncated the file back to the valid prefix
+            assert_eq!(std::fs::read(&path).unwrap(), b0, "cut {cut}");
+        }
+
+        // ...and the next append proceeds on the healed file.
+        std::fs::write(&path, &b1[..b1.len() - 3]).unwrap();
+        let stats = append_store_set_to_file(&set, &path).unwrap();
+        assert!(!stats.rewritten);
+        let (back, _) = load_store_set_wal(&path).unwrap();
+        assert_sets_identical(&set, &back);
+    }
+
+    const TRAILER_SPOT: usize = 9; // a cut landing inside the new trailer
+
+    #[test]
+    fn set_wal_refuses_a_foreign_file() {
+        let dir = tempdir("set_wal_foreign");
+        let path = dir.join("set.wal.ckmc");
+        let _ = std::fs::remove_file(&path);
+        append_store_set_to_file(&quantized_set(101, 1), &path).unwrap();
+        let other = quantized_set(102, 1);
+        let err = append_store_set_to_file(&other, &path).unwrap_err();
+        assert!(matches!(err, ApiError::Format(_)), "got {err}");
+        load_store_set_wal(&path).unwrap();
     }
 
     #[test]

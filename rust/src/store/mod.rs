@@ -62,7 +62,10 @@ pub mod ring;
 pub mod server;
 pub mod sharded;
 
-pub use checkpoint::{append_store_to_file, convert_file, AppendStats, Codec, ConvertReport, DocKind};
+pub use checkpoint::{
+    append_store_set_to_file, append_store_to_file, convert_file, load_store_set_wal,
+    AppendStats, Codec, ConvertReport, DocKind,
+};
 pub use ring::{
     ChunkSketch, CompactionPolicy, EpochStats, SketchContext, SketchStore, STORE_FORMAT_VERSION,
 };

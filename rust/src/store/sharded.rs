@@ -21,6 +21,7 @@ use crate::data::dataset::Bounds;
 use crate::linalg::CVec;
 use crate::util::digest::Fnv1a;
 use crate::util::json::Json;
+use crate::util::sync::lock_recover;
 use std::path::Path;
 use std::sync::{Mutex, MutexGuard};
 
@@ -106,8 +107,12 @@ impl ShardedStore {
         (Fnv1a::hash(producer.as_bytes()) % self.shards.len() as u64) as usize
     }
 
+    /// Lock one shard, recovering from poison: shard mutations are
+    /// validate-then-write (a panicking absorber bails before touching
+    /// the ring), so a poisoned guard still protects consistent state —
+    /// see [`crate::util::sync`].
     fn shard(&self, idx: usize) -> MutexGuard<'_, SketchStore> {
-        self.shards[idx].lock().unwrap()
+        lock_recover(&self.shards[idx])
     }
 
     /// The immutable phase-2 sketch context for one shard (operator,
@@ -210,7 +215,7 @@ impl ShardedStore {
     pub fn rotate_all(&self) -> Vec<(usize, Vec<u64>)> {
         let mut out = Vec::new();
         for (i, s) in self.shards.iter().enumerate() {
-            let evicted = s.lock().unwrap().rotate();
+            let evicted = lock_recover(s).rotate();
             if !evicted.is_empty() {
                 out.push((i, evicted));
             }
@@ -228,7 +233,7 @@ impl ShardedStore {
     /// Lock every shard in index order (the only multi-lock path, so the
     /// fixed order makes deadlock impossible).
     fn lock_all(&self) -> Vec<MutexGuard<'_, SketchStore>> {
-        self.shards.iter().map(|m| m.lock().unwrap()).collect()
+        self.shards.iter().map(lock_recover).collect()
     }
 
     /// Exact cross-shard window merge: each shard's `window(last_e)`
@@ -304,7 +309,7 @@ impl ShardedStore {
             .iter()
             .enumerate()
             .map(|(i, s)| {
-                let g = s.lock().unwrap();
+                let g = lock_recover(s);
                 ShardStats {
                     shard: i,
                     rows_ingested: g.rows_ingested(),

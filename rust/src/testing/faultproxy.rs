@@ -1,0 +1,333 @@
+//! Frame-aware fault-injection TCP proxy for chaos tests.
+//!
+//! Sits between a [`crate::service::ServiceClient`] and a `ckmd` daemon
+//! and perturbs the framed stream with a **deterministic, seeded**
+//! schedule: per frame it may forward, drop, duplicate, delay, or
+//! truncate-and-kill. Because every decision is a pure function of
+//! `(seed, connection index, direction, frame index)`, a failing chaos
+//! run replays exactly from its seed — the same discipline as
+//! [`crate::testing::check`].
+//!
+//! The proxy is frame-aware (it re-frames with
+//! [`crate::util::framing`]), so injected faults land on protocol
+//! message boundaries — except `Truncate`, which deliberately cuts
+//! *inside* a frame (a torn write) and then severs the connection. Both
+//! sides of the proxied connection are always either a valid framed
+//! stream or a visibly broken one; the proxy never fabricates bytes, so
+//! any corruption a test observes past the framing layer is a bug in the
+//! system under test, not the harness.
+//!
+//! What each fault exercises end to end:
+//! - `Drop` of a request → the client stalls until its socket deadline,
+//!   reconnects, and replays (absorb replays are deduplicated by
+//!   `(lease, seq)` on the daemon).
+//! - `Drop`/`Duplicate` of a response → the client's request/response
+//!   pairing desyncs; the next exchange fails typed and triggers the
+//!   same reconnect path.
+//! - `Duplicate` of an absorb request → the daemon's dedup window must
+//!   ack without re-merging (the double-count guard).
+//! - `Truncate` → both peers see a torn frame / dead socket mid-verb.
+//! - `Delay` → reordering pressure on timeouts without breaking framing.
+
+use crate::util::digest::Fnv1a;
+use crate::util::framing::{read_frame, write_frame};
+use crate::util::rng::Rng;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Client-to-daemon direction index (requests).
+pub const DIR_C2S: u8 = 0;
+/// Daemon-to-client direction index (responses).
+pub const DIR_S2C: u8 = 1;
+
+/// What the proxy does with one observed frame.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Action {
+    Forward,
+    /// Swallow the frame; keep the connection alive.
+    Drop,
+    /// Forward the frame twice back-to-back.
+    Duplicate,
+    /// Forward this fraction (in `(0, 1)`) of the *encoded* frame bytes,
+    /// then sever the connection — a torn write.
+    Truncate(f64),
+    /// Sleep, then forward.
+    Delay(Duration),
+}
+
+/// Seeded per-frame fault schedule. Probabilities are independent knobs
+/// in `[0, 1]`; they are consulted in a fixed order (drop, duplicate,
+/// truncate, delay) against a single uniform draw, so their sum should
+/// stay ≤ 1 (the remainder is the forward probability).
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub drop: f64,
+    pub duplicate: f64,
+    pub truncate: f64,
+    pub delay: f64,
+    /// Upper bound for `Delay` sleeps.
+    pub max_delay: Duration,
+    /// Protect the first N frames of each direction of each connection
+    /// (lets the Hello/HelloAck handshake through so sessions establish
+    /// before the weather starts).
+    pub skip_first: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan {
+            seed: 0xFA_17_F0_07,
+            drop: 0.05,
+            duplicate: 0.05,
+            truncate: 0.03,
+            delay: 0.10,
+            max_delay: Duration::from_millis(10),
+            skip_first: 2,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// A plan that forwards everything (useful as a plumbing check).
+    pub fn transparent(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            drop: 0.0,
+            duplicate: 0.0,
+            truncate: 0.0,
+            delay: 0.0,
+            max_delay: Duration::ZERO,
+            skip_first: 0,
+        }
+    }
+
+    /// The deterministic verdict for frame `idx` of direction `dir` of
+    /// connection `conn`.
+    pub fn action(&self, conn: u64, dir: u8, idx: u64) -> Action {
+        if idx < self.skip_first {
+            return Action::Forward;
+        }
+        let mut h = Fnv1a::new();
+        h.update(&self.seed.to_le_bytes());
+        h.update(&conn.to_le_bytes());
+        h.update(&[dir]);
+        h.update(&idx.to_le_bytes());
+        let mut rng = Rng::new(h.digest());
+        let draw = rng.uniform();
+        let mut edge = self.drop;
+        if draw < edge {
+            return Action::Drop;
+        }
+        edge += self.duplicate;
+        if draw < edge {
+            return Action::Duplicate;
+        }
+        edge += self.truncate;
+        if draw < edge {
+            // strictly inside the frame: never 0 bytes, never all of them
+            return Action::Truncate(rng.uniform_in(0.1, 0.9));
+        }
+        edge += self.delay;
+        if draw < edge {
+            let secs = rng.uniform_in(0.0, self.max_delay.as_secs_f64());
+            return Action::Delay(Duration::from_secs_f64(secs));
+        }
+        Action::Forward
+    }
+}
+
+/// A running fault proxy: listens on an ephemeral localhost port and
+/// shuttles framed traffic to `upstream` through the plan's weather.
+/// Stops (and severs every proxied connection) on [`FaultProxy::stop`]
+/// or drop.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl FaultProxy {
+    pub fn spawn(upstream: SocketAddr, plan: FaultPlan) -> std::io::Result<FaultProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let plan = Arc::new(plan);
+        let accept_thread = std::thread::spawn(move || {
+            let mut conn_idx = 0u64;
+            while !stop_flag.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((client, _)) => {
+                        client.set_nonblocking(false).ok();
+                        client.set_nodelay(true).ok();
+                        let upstream_sock = match TcpStream::connect(upstream) {
+                            Ok(u) => u,
+                            Err(_) => continue, // daemon down: refuse by dropping
+                        };
+                        upstream_sock.set_nodelay(true).ok();
+                        let conn = conn_idx;
+                        conn_idx += 1;
+                        let (c_dup, u_dup) = match (client.try_clone(), upstream_sock.try_clone())
+                        {
+                            (Ok(c), Ok(u)) => (c, u),
+                            _ => continue,
+                        };
+                        let (p_req, p_resp) = (Arc::clone(&plan), Arc::clone(&plan));
+                        std::thread::spawn(move || {
+                            shuttle(client, u_dup, &p_req, conn, DIR_C2S)
+                        });
+                        std::thread::spawn(move || {
+                            shuttle(upstream_sock, c_dup, &p_resp, conn, DIR_S2C)
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+        });
+        Ok(FaultProxy { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The proxy's listening address (point clients at `tcp:<this>`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One direction of one proxied connection. Exits (severing both
+/// sockets) on EOF, any transport error, or a `Truncate` verdict —
+/// shuttle threads therefore never outlive their connection by more
+/// than the bounded read timeout.
+fn shuttle(mut src: TcpStream, mut dst: TcpStream, plan: &FaultPlan, conn: u64, dir: u8) {
+    // Backstop so a shuttle blocked on a silent peer still unwinds after
+    // the proxy stops.
+    src.set_read_timeout(Some(Duration::from_secs(30))).ok();
+    let mut idx = 0u64;
+    'frames: loop {
+        let payload = match read_frame(&mut src) {
+            Ok(Some(p)) => p,
+            _ => break, // clean close, torn frame, or timeout: sever
+        };
+        let action = plan.action(conn, dir, idx);
+        idx += 1;
+        let copies = match action {
+            Action::Drop => continue,
+            Action::Duplicate => 2,
+            Action::Delay(d) => {
+                std::thread::sleep(d);
+                1
+            }
+            Action::Truncate(frac) => {
+                let mut encoded = Vec::new();
+                if write_frame(&mut encoded, &payload).is_err() {
+                    break;
+                }
+                let cut = ((encoded.len() as f64 * frac) as usize).clamp(1, encoded.len() - 1);
+                let _ = dst.write_all(&encoded[..cut]);
+                break;
+            }
+            Action::Forward => 1,
+        };
+        for _ in 0..copies {
+            if write_frame(&mut dst, &payload).is_err() {
+                break 'frames;
+            }
+        }
+    }
+    let _ = src.shutdown(Shutdown::Both);
+    let _ = dst.shutdown(Shutdown::Both);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_seed_sensitive() {
+        let plan = FaultPlan::default();
+        let replay = FaultPlan::default();
+        let mut differs_from_reseed = false;
+        let reseeded = FaultPlan { seed: plan.seed ^ 1, ..FaultPlan::default() };
+        for conn in 0..4 {
+            for dir in [DIR_C2S, DIR_S2C] {
+                for idx in 0..64 {
+                    assert_eq!(plan.action(conn, dir, idx), replay.action(conn, dir, idx));
+                    if plan.action(conn, dir, idx) != reseeded.action(conn, dir, idx) {
+                        differs_from_reseed = true;
+                    }
+                }
+            }
+        }
+        assert!(differs_from_reseed, "seed must actually steer the schedule");
+    }
+
+    #[test]
+    fn transparent_plan_always_forwards_and_handshake_frames_are_protected() {
+        let clear = FaultPlan::transparent(7);
+        let stormy = FaultPlan { drop: 1.0, ..FaultPlan::default() };
+        for idx in 0..32 {
+            assert_eq!(clear.action(0, DIR_C2S, idx), Action::Forward);
+        }
+        for idx in 0..stormy.skip_first {
+            assert_eq!(stormy.action(3, DIR_S2C, idx), Action::Forward);
+        }
+        assert_eq!(stormy.action(3, DIR_S2C, stormy.skip_first), Action::Drop);
+    }
+
+    #[test]
+    fn truncate_fraction_stays_strictly_inside_the_frame() {
+        let plan = FaultPlan { truncate: 1.0, drop: 0.0, duplicate: 0.0, ..FaultPlan::default() };
+        for idx in plan.skip_first..plan.skip_first + 64 {
+            match plan.action(0, DIR_C2S, idx) {
+                Action::Truncate(f) => assert!(f > 0.0 && f < 1.0, "fraction {f}"),
+                other => panic!("expected Truncate, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn transparent_proxy_passes_framed_traffic_through_unchanged() {
+        // A tiny framed echo server stands in for the daemon.
+        let upstream = TcpListener::bind("127.0.0.1:0").unwrap();
+        let upstream_addr = upstream.local_addr().unwrap();
+        let echo = std::thread::spawn(move || {
+            let (mut s, _) = upstream.accept().unwrap();
+            while let Ok(Some(payload)) = read_frame(&mut s) {
+                if write_frame(&mut s, &payload).is_err() {
+                    break;
+                }
+            }
+        });
+        let mut proxy = FaultProxy::spawn(upstream_addr, FaultPlan::transparent(1)).unwrap();
+        let mut client = TcpStream::connect(proxy.addr()).unwrap();
+        for i in 0..8u8 {
+            let msg = vec![i; 3 + i as usize];
+            write_frame(&mut client, &msg).unwrap();
+            let back = read_frame(&mut client).unwrap().expect("echo reply");
+            assert_eq!(back, msg);
+        }
+        drop(client);
+        let _ = echo.join();
+        proxy.stop();
+    }
+}

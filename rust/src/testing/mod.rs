@@ -37,6 +37,8 @@
 
 use crate::util::rng::Rng;
 
+pub mod faultproxy;
+
 /// Property-test configuration.
 #[derive(Clone, Debug)]
 pub struct Config {

@@ -37,6 +37,17 @@
 //! footer checksum no longer validates, which [`ContainerReader::parse`]
 //! reports as a typed error so the caller can fall back to its previous
 //! full checkpoint. Torn appends are detected, not silently absorbed.
+//!
+//! For WAL use there is a second append flavor,
+//! [`append_sections_recoverable`]: instead of truncating at the old
+//! footer it appends *after* the current EOF, leaving the superseded
+//! footer + trailer in place as dead bytes. A crash mid-append then
+//! leaves the previous fully-valid container intact as a prefix of the
+//! file, and [`recover_valid_prefix`] finds it by scanning backward for
+//! trailer magics and try-parsing each candidate prefix — so a WAL torn
+//! by `kill -9` heals to its last durable state instead of being
+//! abandoned. The cost is dead space (one stale footer per append) that
+//! the next full rewrite reclaims.
 
 use crate::util::digest::Fnv1a;
 use crate::util::framing::{ByteReader, ByteWriter, WireError};
@@ -415,6 +426,98 @@ pub fn append_sections<P: AsRef<Path>>(
     Ok(())
 }
 
+/// Append sections like [`append_sections`], but **never truncate**: the
+/// new payloads, footer and trailer are written after the current EOF and
+/// the superseded footer + trailer stay in the file as dead bytes.
+///
+/// This is the WAL flavor. Because the old trailer is still intact until
+/// the new one is fully on disk, a crash at *any* point mid-append leaves
+/// the previous valid container as a recoverable prefix of the file —
+/// [`recover_valid_prefix`] finds it and the caller truncates back to it.
+/// Each append costs one stale footer of dead space (reclaimed by the
+/// next full rewrite), which is the price of crash recoverability.
+pub fn append_sections_recoverable<P: AsRef<Path>>(
+    path: P,
+    state: &[u8],
+    kept: &[SectionEntry],
+    new: &[(u8, u64, Vec<u8>)],
+) -> Result<(), ContainerError> {
+    use std::io::{Seek, SeekFrom};
+    let bytes = std::fs::read(&path)?;
+    let reader = ContainerReader::parse(&bytes)?;
+    let old_entries = reader.entries();
+    for (i, k) in kept.iter().enumerate() {
+        if !old_entries.contains(k) {
+            return Err(ContainerError::Invalid(format!(
+                "kept entry {i} (kind {}, tag {}) is not in the existing table",
+                k.kind, k.tag
+            )));
+        }
+    }
+    drop(reader);
+    let append_at = bytes.len() as u64;
+
+    let mut table: Vec<SectionEntry> = kept.to_vec();
+    let mut offset = append_at;
+    let mut tail = Vec::new();
+    for (kind, tag, payload) in new {
+        table.push(SectionEntry {
+            kind: *kind,
+            tag: *tag,
+            offset,
+            len: payload.len() as u64,
+            checksum: Fnv1a::hash(payload),
+        });
+        tail.extend_from_slice(payload);
+        offset += payload.len() as u64;
+    }
+    let footer = ContainerImage::footer_body(state, &table);
+    tail.extend_from_slice(&footer);
+    tail.extend_from_slice(&(footer.len() as u64).to_le_bytes());
+    tail.extend_from_slice(&Fnv1a::hash(&footer).to_le_bytes());
+    tail.extend_from_slice(&FOOTER_MAGIC);
+
+    let mut f = std::fs::OpenOptions::new().write(true).open(&path)?;
+    f.seek(SeekFrom::Start(append_at))?;
+    f.write_all(&tail)?;
+    f.sync_all()?;
+    Ok(())
+}
+
+/// Find the longest prefix of `bytes` that is a fully valid container
+/// (footer *and* every section checksum verify). Returns the prefix
+/// length, or `None` if no valid prefix exists.
+///
+/// This is the recovery half of [`append_sections_recoverable`]: a torn
+/// tail leaves the pre-append container intact below it, terminated by
+/// its own `CKMF` trailer. The scan walks trailer-magic candidates from
+/// the end of the buffer backward and try-parses each one — payload bytes
+/// that coincidentally contain `CKMF` simply fail the parse and the scan
+/// continues. Full-image (truncating) writes should *not* use this:
+/// there, a torn file has no valid prefix by design and the caller's
+/// recovery is its previous atomic checkpoint.
+pub fn recover_valid_prefix(bytes: &[u8]) -> Option<usize> {
+    let min_len = HEADER_LEN + TRAILER_LEN;
+    if bytes.len() < min_len {
+        return None;
+    }
+    let mut search_end = bytes.len();
+    while search_end >= min_len {
+        let pos = bytes[..search_end].windows(4).rposition(|w| w == FOOTER_MAGIC)?;
+        let cand = pos + 4;
+        if cand >= min_len {
+            if let Ok(r) = ContainerReader::parse(&bytes[..cand]) {
+                if r.verify_all().is_ok() {
+                    return Some(cand);
+                }
+            }
+        }
+        // Exclude this magic occurrence and keep scanning backward.
+        search_end = pos + 3;
+    }
+    None
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -565,6 +668,75 @@ mod tests {
             assert!(ContainerReader::parse(&full[..cut]).is_err(), "cut {cut} parsed");
         }
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recoverable_append_keeps_the_old_container_as_a_prefix() {
+        let dir =
+            std::env::temp_dir().join(format!("ckm_container_recov_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("recov.ckmc");
+        let img = image();
+        crate::util::fs::atomic_write(&path, &img.to_bytes()).unwrap();
+        let before = std::fs::read(&path).unwrap();
+        let kept = ContainerReader::parse(&before).unwrap().entries().to_vec();
+
+        append_sections_recoverable(&path, b"state-v2", &kept, &[(4, 11, vec![0x33; 25])])
+            .unwrap();
+        let after = std::fs::read(&path).unwrap();
+
+        // Every pre-append byte — footer and trailer included — is intact.
+        assert_eq!(&after[..before.len()], &before[..]);
+        let r = ContainerReader::parse(&after).unwrap();
+        assert_eq!(r.state(), b"state-v2");
+        assert_eq!(r.entries().len(), 4);
+        assert_eq!(&r.entries()[..3], &kept[..]);
+        assert_eq!(r.section(3).unwrap(), &[0x33; 25][..]);
+        r.verify_all().unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_recoverable_append_recovers_to_the_previous_container() {
+        let img = image();
+        let v1 = img.to_bytes();
+        let dir =
+            std::env::temp_dir().join(format!("ckm_container_recov2_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("recov2.ckmc");
+        crate::util::fs::atomic_write(&path, &v1).unwrap();
+        let kept = ContainerReader::parse(&v1).unwrap().entries().to_vec();
+        append_sections_recoverable(&path, b"v2", &kept, &[(4, 11, vec![0x33; 25])]).unwrap();
+        let v2 = std::fs::read(&path).unwrap();
+
+        // Chop the appended tail at every possible point: the scan must
+        // land exactly on the *latest* still-complete container.
+        for cut in v1.len()..=v2.len() {
+            let got = recover_valid_prefix(&v2[..cut]);
+            let expect = if cut == v2.len() { v2.len() } else { v1.len() };
+            assert_eq!(got, Some(expect), "cut at {cut}");
+        }
+        // A cut inside v1 itself is unrecoverable: full-image writes are
+        // atomic, so there is no earlier trailer to fall back to.
+        assert_eq!(recover_valid_prefix(&v2[..v1.len() - 1]), None);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn recovery_scan_skips_payloads_that_contain_the_trailer_magic() {
+        // A payload whose bytes embed "CKMF" must not fool the scan.
+        let mut img = ContainerImage::new(b"s".to_vec());
+        let mut tricky = b"xxCKMF".to_vec();
+        tricky.extend_from_slice(&[0u8; 40]);
+        tricky.extend_from_slice(b"CKMF");
+        img.push_section(1, 0, tricky);
+        let bytes = img.to_bytes();
+        assert_eq!(recover_valid_prefix(&bytes), Some(bytes.len()));
+        // Torn right after the payload: only fake magics remain -> None.
+        let r = ContainerReader::parse(&bytes).unwrap();
+        let payload_end = (r.entries()[0].offset + r.entries()[0].len) as usize;
+        drop(r);
+        assert_eq!(recover_valid_prefix(&bytes[..payload_end]), None);
     }
 
     #[test]

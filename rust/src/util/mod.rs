@@ -13,3 +13,4 @@ pub mod json;
 pub mod logging;
 pub mod parallel;
 pub mod rng;
+pub mod sync;

@@ -1,0 +1,116 @@
+//! Poison-recovering lock helpers.
+//!
+//! A panic inside one daemon connection handler must not take the whole
+//! service down. With bare `Mutex::lock().unwrap()`, it does: the panic
+//! poisons the mutex and every later locker — other connections, the
+//! refresh thread, the WAL thread — panics in turn, cascading one bad
+//! request into a daemon-wide outage.
+//!
+//! [`lock_recover`] (and the condvar companions [`wait_recover`] /
+//! [`wait_timeout_recover`]) instead clear the poison and hand back the
+//! guard. That is sound here because every shared structure in this crate
+//! is mutated validate-then-write: `ShardedStore::try_absorb` fully
+//! validates a chunk (shape, kind, finiteness, dither seed, level sums)
+//! *before* touching the store, the solve/hot caches are plain maps whose
+//! entries are inserted whole, and counters are atomics. A panic while a
+//! guard is held therefore leaves the protected value in a state some
+//! earlier successful operation produced — consistent, just possibly
+//! stale — so continuing is strictly better than cascading the panic.
+//!
+//! Writers with multi-step invariants should keep `.lock().unwrap()`.
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock `m`, recovering (and clearing) poison instead of panicking.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| {
+        m.clear_poison();
+        poisoned.into_inner()
+    })
+}
+
+/// `Condvar::wait` that recovers poison instead of panicking. Takes the
+/// mutex alongside the guard so the poison flag can be cleared.
+pub fn wait_recover<'a, T>(
+    cv: &Condvar,
+    m: &'a Mutex<T>,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|poisoned| {
+        m.clear_poison();
+        poisoned.into_inner()
+    })
+}
+
+/// `Condvar::wait_timeout` that recovers poison instead of panicking.
+pub fn wait_timeout_recover<'a, T>(
+    cv: &Condvar,
+    m: &'a Mutex<T>,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(|poisoned| {
+        m.clear_poison();
+        poisoned.into_inner()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recover_survives_a_poisoning_panic() {
+        let m = Arc::new(Mutex::new(41));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let mut g = m2.lock().unwrap();
+            *g = 42; // completed mutation — the recovered value below
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_recover(&m), 42);
+        // Poison is cleared: a plain lock works again afterwards.
+        assert!(!m.is_poisoned());
+        assert_eq!(*m.lock().unwrap(), 42);
+    }
+
+    #[test]
+    fn wait_timeout_recover_times_out_on_a_clean_mutex() {
+        let m = Mutex::new(false);
+        let cv = Condvar::new();
+        let g = m.lock().unwrap();
+        let (g, res) = wait_timeout_recover(&cv, &m, g, Duration::from_millis(5));
+        assert!(res.timed_out());
+        assert!(!*g);
+    }
+
+    #[test]
+    fn wait_recover_wakes_on_notify_after_poison() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        // Poison the mutex first.
+        let p2 = Arc::clone(&pair);
+        let _ = std::thread::spawn(move || {
+            let _g = p2.0.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(pair.0.is_poisoned());
+        // A waiter using the recovering helpers still works end to end.
+        let p3 = Arc::clone(&pair);
+        let waiter = std::thread::spawn(move || {
+            let (m, cv) = (&p3.0, &p3.1);
+            let mut g = lock_recover(m);
+            while !*g {
+                g = wait_recover(cv, m, g);
+            }
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        *lock_recover(&pair.0) = true;
+        pair.1.notify_all();
+        waiter.join().unwrap();
+    }
+}

@@ -1,0 +1,462 @@
+//! Chaos tests: the fault-tolerance contract under injected failure.
+//!
+//! The service's promise is stronger than "survives faults": after any
+//! seeded schedule of dropped, duplicated, delayed, and torn frames —
+//! plus client reconnects and replays — the daemon's merged window must
+//! be **bit-identical** (quantized) / within 1e-12 (dense) to a clean
+//! single-process replay of exactly the receipts the clients hold. A
+//! double-counted absorb or a lost acked chunk is a silent correctness
+//! bug in the sketch's exactly-merged state, so these tests pin the
+//! algebra, not just liveness.
+//!
+//! Every schedule is deterministic from its seed (see
+//! [`ckm::testing::faultproxy`]), so a red run replays verbatim.
+
+use ckm::api::{ApiError, Ckm};
+use ckm::service::protocol::{self, error_code, Request, Response, WireChunk};
+use ckm::service::{Daemon, DaemonConfig, RetryPolicy, ServiceClient, ServiceListener, WalConfig};
+use ckm::sketch::QuantizationMode;
+use ckm::store::load_store_set_wal;
+use ckm::testing::faultproxy::{FaultPlan, FaultProxy};
+use ckm::util::framing::{read_frame, write_frame};
+use ckm::util::rng::Rng;
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::thread;
+use std::time::{Duration, Instant};
+
+const N_DIMS: usize = 4;
+
+fn quantized_ckm() -> Ckm {
+    Ckm::builder()
+        .frequencies(96)
+        .sigma2(1.0)
+        .seed(11)
+        .quantization(QuantizationMode::OneBit)
+        .build()
+        .unwrap()
+}
+
+fn dense_ckm() -> Ckm {
+    Ckm::builder().frequencies(96).sigma2(1.0).seed(11).build().unwrap()
+}
+
+fn spawn_daemon_with(
+    ckm: &Ckm,
+    shards: usize,
+    config: DaemonConfig,
+) -> (String, thread::JoinHandle<Result<(), ApiError>>) {
+    let store = ckm.sharded_store(N_DIMS, shards).unwrap();
+    let daemon = Daemon::with_config(store, ckm.clone(), config);
+    let listener = ServiceListener::bind("tcp:127.0.0.1:0").unwrap();
+    let addr = listener.tcp_addr().unwrap().to_string();
+    (addr, thread::spawn(move || daemon.serve(listener)))
+}
+
+/// The retry policy the chaos producers run under: aggressive enough to
+/// outlast the weather, with a short socket deadline so a swallowed
+/// frame costs milliseconds, not a hang.
+fn chaos_policy() -> RetryPolicy {
+    RetryPolicy {
+        retries: 60,
+        backoff: Duration::from_millis(5),
+        max_backoff: Duration::from_millis(60),
+        timeout: Some(Duration::from_millis(250)),
+    }
+}
+
+/// Producer names guaranteed to cover both shards, two each.
+fn producer_names(reference: &ckm::store::ShardedStore) -> Vec<String> {
+    let mut names = Vec::new();
+    let mut per_shard = vec![0usize; reference.n_shards()];
+    let mut i = 0u32;
+    while names.len() < 4 {
+        let cand = format!("chaos-producer-{i}");
+        let s = reference.shard_for_producer(&cand);
+        if per_shard[s] < 2 {
+            per_shard[s] += 1;
+            names.push(cand);
+        }
+        i += 1;
+    }
+    names
+}
+
+/// Ingest through a seeded fault proxy, then prove the daemon's merged
+/// window equals a clean replay of exactly the receipts the producers
+/// hold — the retried absorbs must have merged exactly once each.
+fn faulty_ingest_exactness(ckm: Ckm, max_z_diff: f64, proxy_seed: u64) {
+    let config = DaemonConfig {
+        // reap handler threads stranded by swallowed request frames
+        idle_timeout: Some(Duration::from_secs(2)),
+        io_timeout: Some(Duration::from_secs(2)),
+        ..DaemonConfig::default()
+    };
+    let (addr, server) = spawn_daemon_with(&ckm, 2, config);
+    let mut proxy = FaultProxy::spawn(
+        addr.parse().unwrap(),
+        FaultPlan {
+            seed: proxy_seed,
+            drop: 0.06,
+            duplicate: 0.08,
+            truncate: 0.04,
+            delay: 0.10,
+            max_delay: Duration::from_millis(5),
+            skip_first: 2,
+            // the handshake frames are protected so every reconnect can
+            // establish; all later frames face the weather
+        },
+    )
+    .unwrap();
+    let proxied = format!("tcp:{}", proxy.addr());
+
+    let reference = ckm.sharded_store(N_DIMS, 2).unwrap();
+    let names = producer_names(&reference);
+    let producers: Vec<_> = names
+        .iter()
+        .enumerate()
+        .map(|(p, name)| {
+            let (proxied, name) = (proxied.clone(), name.clone());
+            thread::spawn(move || -> (u32, Vec<(usize, Vec<f64>)>) {
+                let mut client =
+                    ServiceClient::connect_with(&proxied, &name, chaos_policy()).unwrap();
+                let shard = client.hello().shard_index;
+                let mut rng = Rng::new(900 + p as u64);
+                let rows_per_chunk = 17 + 5 * p;
+                let mut receipts = Vec::new();
+                for _ in 0..6 {
+                    let mut rows = vec![0.0; rows_per_chunk * N_DIMS];
+                    rng.fill_normal(&mut rows);
+                    let r = client.ingest(&rows).unwrap();
+                    assert_eq!(r.rows as usize, rows_per_chunk);
+                    receipts.push((r.offset as usize, rows));
+                }
+                (shard, receipts)
+            })
+        })
+        .collect();
+
+    let mut total_rows = 0usize;
+    for (name, h) in names.iter().zip(producers) {
+        let (shard, receipts) = h.join().unwrap();
+        assert_eq!(shard as usize, reference.shard_for_producer(name), "{name} landed off-shard");
+        for (offset, rows) in receipts {
+            total_rows += rows.len() / N_DIMS;
+            // Replay with the daemon-assigned offset: same dither row
+            // keys, same chunk sketch, exact absorb.
+            let chunk = reference.context(shard as usize).sketch_chunk(&rows, offset);
+            reference.try_absorb(shard as usize, chunk).unwrap();
+        }
+    }
+    proxy.stop();
+
+    // Compare through a clean (unproxied) connection.
+    let mut analyst = ServiceClient::connect_tcp(&addr, "analyst").unwrap();
+    let status = analyst.status().unwrap();
+    let daemon_rows: u64 = status.shards.iter().map(|s| s.rows_ingested).sum();
+    assert_eq!(
+        daemon_rows as usize, total_rows,
+        "daemon row count differs from acked receipts (lost or double-counted absorb)"
+    );
+
+    let dir = std::env::temp_dir().join(format!(
+        "ckm_chaos_{}_{}",
+        std::process::id(),
+        if max_z_diff == 0.0 { "quant" } else { "dense" }
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("faulty.ckmc");
+    analyst.checkpoint_to(&path).unwrap();
+    let remote = ckm::store::ShardedStore::from_file(&path).unwrap();
+    let (got, _) = remote.merged_window(None).unwrap();
+    let (want, _) = reference.merged_window(None).unwrap();
+    assert_eq!(got.count, want.count);
+    assert_eq!(got.count, total_rows);
+    assert_eq!(got.bounds, want.bounds);
+    let diff = got.z().max_abs_diff(&want.z());
+    assert!(
+        diff <= max_z_diff,
+        "faulty-wire window differs from clean replay: max |Δz| = {diff:.3e} (cap {max_z_diff:.0e})"
+    );
+
+    analyst.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn quantized_ingest_through_a_faulty_wire_is_exactly_once() {
+    faulty_ingest_exactness(quantized_ckm(), 0.0, 0xC4A0_5001);
+}
+
+#[test]
+fn dense_ingest_through_a_faulty_wire_matches_a_clean_replay() {
+    faulty_ingest_exactness(dense_ckm(), 1e-12, 0xC4A0_5002);
+}
+
+/// A raw v4 session that duplicates its own absorb must get two acks and
+/// one merge: the `(lease, seq)` dedup window is the double-count guard.
+#[test]
+fn duplicated_absorb_is_acked_twice_but_merged_once() {
+    let ckm = quantized_ckm();
+    let (addr, server) = spawn_daemon_with(&ckm, 2, DaemonConfig::default());
+    let reference = ckm.sharded_store(N_DIMS, 2).unwrap();
+
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    let hello = Request::Hello { producer: "dup".into(), protocol: protocol::PROTOCOL_VERSION };
+    write_frame(&mut raw, &protocol::encode_request(&hello)).unwrap();
+    let ack = match protocol::decode_response(&read_frame(&mut raw).unwrap().unwrap()).unwrap() {
+        Response::HelloAck(a) => a,
+        other => panic!("expected HelloAck, got {other:?}"),
+    };
+    assert!(ack.protocol >= 4, "daemon should negotiate v4 with a v4 client");
+    let shard = ack.shard_index as usize;
+
+    let n_rows = 40usize;
+    let req = Request::ReserveRows { n_rows: n_rows as u64 };
+    write_frame(&mut raw, &protocol::encode_request(&req)).unwrap();
+    let (offset, lease) =
+        match protocol::decode_response(&read_frame(&mut raw).unwrap().unwrap()).unwrap() {
+            Response::Reserved { offset, lease } => (offset, lease),
+            other => panic!("expected Reserved, got {other:?}"),
+        };
+    assert_ne!(lease, 0, "a v4 session must be issued a lease");
+
+    let mut rng = Rng::new(3);
+    let mut rows = vec![0.0; n_rows * N_DIMS];
+    rng.fill_normal(&mut rows);
+    let chunk = reference.context(shard).sketch_chunk(&rows, offset as usize);
+    let absorb =
+        Request::Absorb { chunk: WireChunk::from_chunk(&chunk), lease, seq: 0 };
+    let encoded = protocol::encode_request(&absorb);
+    // the duplicate: same (lease, seq), byte-identical frame, sent twice
+    write_frame(&mut raw, &encoded).unwrap();
+    write_frame(&mut raw, &encoded).unwrap();
+    for _ in 0..2 {
+        match protocol::decode_response(&read_frame(&mut raw).unwrap().unwrap()).unwrap() {
+            Response::Absorbed { rows } => assert_eq!(rows as usize, n_rows),
+            other => panic!("expected Absorbed, got {other:?}"),
+        }
+    }
+
+    write_frame(&mut raw, &protocol::encode_request(&Request::Status)).unwrap();
+    let status = match protocol::decode_response(&read_frame(&mut raw).unwrap().unwrap()).unwrap()
+    {
+        Response::Status(s) => s,
+        other => panic!("expected Status, got {other:?}"),
+    };
+    assert_eq!(
+        status.shards.iter().map(|s| s.rows_ingested).sum::<u64>(),
+        n_rows as u64,
+        "duplicated absorb was merged twice"
+    );
+    assert!(status.replayed_absorbs >= 1, "replay was not served from the dedup window");
+
+    write_frame(&mut raw, &protocol::encode_request(&Request::Shutdown)).unwrap();
+    let _ = read_frame(&mut raw);
+    drop(raw);
+    server.join().unwrap().unwrap();
+}
+
+/// At the connection cap the daemon answers with one typed BUSY frame,
+/// counts the rejection, and a retrying client gets in once a slot
+/// frees.
+#[test]
+fn connection_cap_rejects_with_busy_and_retry_eventually_connects() {
+    let ckm = dense_ckm();
+    let config = DaemonConfig { max_connections: 1, ..DaemonConfig::default() };
+    let (addr, server) = spawn_daemon_with(&ckm, 2, config);
+
+    // Occupy the single slot.
+    let first = ServiceClient::connect_tcp(&addr, "occupant").unwrap();
+
+    // A second raw connection must be answered with BUSY and dropped.
+    let mut rejected = TcpStream::connect(&addr).unwrap();
+    rejected.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let payload = read_frame(&mut rejected).unwrap().expect("expected a BUSY frame");
+    match protocol::decode_response(&payload).unwrap() {
+        Response::Error { code, .. } => assert_eq!(code, error_code::BUSY),
+        other => panic!("expected a BUSY error frame, got {other:?}"),
+    }
+    drop(rejected);
+
+    // A no-retry client fails fast. Usually it reads the typed BUSY
+    // frame; if the daemon's close races the client's Hello write, the
+    // reset can surface as an Io error instead — both are transient.
+    match ServiceClient::connect_tcp(&addr, "impatient") {
+        Err(ApiError::ServiceRemote { code, .. }) => assert_eq!(code, error_code::BUSY),
+        Err(ApiError::Io(_)) => {}
+        other => panic!("expected a fast BUSY/reset failure, got {other:?}"),
+    }
+
+    // Free the slot shortly; a retrying client must win the race.
+    let freer = thread::spawn(move || {
+        thread::sleep(Duration::from_millis(200));
+        drop(first);
+    });
+    let policy = RetryPolicy {
+        retries: 40,
+        backoff: Duration::from_millis(25),
+        max_backoff: Duration::from_millis(100),
+        timeout: Some(Duration::from_secs(2)),
+    };
+    let mut patient = ServiceClient::connect_tcp_with(&addr, "patient", policy).unwrap();
+    freer.join().unwrap();
+    let status = patient.status().unwrap();
+    assert!(status.rejected_busy >= 2, "rejections not counted: {status:?}");
+    assert!(status.peak_connections >= 1);
+
+    patient.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}
+
+/// The WAL crash-recovery loop: ingest + rotate, wait until the WAL
+/// covers every acked row (lag 0), then prove the WAL file alone —
+/// without any shutdown handshake — restores state identical to a clean
+/// replay of the receipts. A `kill -9` at this point loses nothing.
+#[test]
+fn wal_covers_acked_rows_and_restores_them_bit_identically() {
+    let ckm = quantized_ckm();
+    let dir = std::env::temp_dir().join(format!("ckm_chaos_wal_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let wal_path: PathBuf = dir.join("daemon.wal.ckmc");
+    let config = DaemonConfig {
+        wal: Some(WalConfig { path: wal_path.clone(), interval: Duration::from_millis(40) }),
+        ..DaemonConfig::default()
+    };
+    let (addr, server) = spawn_daemon_with(&ckm, 2, config);
+    let reference = ckm.sharded_store(N_DIMS, 2).unwrap();
+
+    let mut client = ServiceClient::connect_tcp(&addr, "wal-producer").unwrap();
+    let shard = client.hello().shard_index as usize;
+    let mut rng = Rng::new(77);
+    let mut receipts = Vec::new();
+    for round in 0..3 {
+        for _ in 0..2 {
+            let mut rows = vec![0.0; (30 + round * 7) * N_DIMS];
+            rng.fill_normal(&mut rows);
+            let r = client.ingest(&rows).unwrap();
+            receipts.push((r.offset as usize, rows));
+        }
+        client.rotate().unwrap();
+    }
+
+    // Poll Status until the WAL covers everything acked so far.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let s = client.status().unwrap();
+        if s.wal_appends >= 1 && s.wal_lag_rows == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "WAL never caught up: {s:?}");
+        thread::sleep(Duration::from_millis(20));
+    }
+
+    // Crash-equivalent read: load the WAL *now*, daemon still running,
+    // no shutdown append — exactly what a restart after kill -9 sees.
+    let (recovered, healed) = load_store_set_wal(&wal_path).unwrap();
+    assert!(!healed, "a cleanly appended WAL should not need healing");
+    for (offset, rows) in &receipts {
+        let chunk = reference.context(shard).sketch_chunk(rows, *offset);
+        reference.try_absorb(shard, chunk).unwrap();
+    }
+    for _ in 0..3 {
+        reference.rotate_all();
+    }
+    let (got, _) = recovered.merged_window(None).unwrap();
+    let (want, _) = reference.merged_window(None).unwrap();
+    assert_eq!(got.count, want.count);
+    assert_eq!(got.bounds, want.bounds);
+    assert_eq!(
+        got.z().max_abs_diff(&want.z()),
+        0.0,
+        "quantized WAL recovery must be bit-identical to the clean replay"
+    );
+
+    // A torn tail (crash mid-append) heals back to this same state.
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    let clean = std::fs::read(&wal_path).unwrap();
+    let mut torn = clean.clone();
+    torn.extend_from_slice(b"CKMC\x03\x00\x00\x00partial-next-append-cut-by-the-crash");
+    std::fs::write(&wal_path, &torn).unwrap();
+    let (healed_set, was_healed) = load_store_set_wal(&wal_path).unwrap();
+    assert!(was_healed, "garbage tail should trigger healing");
+    let (healed_win, _) = healed_set.merged_window(None).unwrap();
+    assert_eq!(healed_win.count, want.count);
+    assert_eq!(healed_win.z().max_abs_diff(&want.z()), 0.0);
+    assert_eq!(
+        std::fs::read(&wal_path).unwrap().len(),
+        clean.len(),
+        "healing should truncate the file back to the last valid append"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// End-to-end chaos: ingest through the fault proxy INTO a WAL-ing
+/// daemon, rotate, wait for lag 0, recover from the WAL alone, and
+/// compare against the clean replay of the acked receipts — the full
+/// acked-and-durable contract under weather.
+#[test]
+fn faulty_ingest_plus_wal_restart_recovers_the_acked_receipts() {
+    let ckm = quantized_ckm();
+    let dir = std::env::temp_dir().join(format!("ckm_chaos_walstorm_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let wal_path: PathBuf = dir.join("storm.wal.ckmc");
+    let config = DaemonConfig {
+        idle_timeout: Some(Duration::from_secs(2)),
+        io_timeout: Some(Duration::from_secs(2)),
+        wal: Some(WalConfig { path: wal_path.clone(), interval: Duration::from_millis(40) }),
+        ..DaemonConfig::default()
+    };
+    let (addr, server) = spawn_daemon_with(&ckm, 2, config);
+    let mut proxy = FaultProxy::spawn(
+        addr.parse().unwrap(),
+        FaultPlan { seed: 0x57_02_11, ..FaultPlan::default() },
+    )
+    .unwrap();
+    let proxied = format!("tcp:{}", proxy.addr());
+
+    let reference = ckm.sharded_store(N_DIMS, 2).unwrap();
+    let mut client = ServiceClient::connect_with(&proxied, "storm-producer", chaos_policy()).unwrap();
+    let shard = client.hello().shard_index as usize;
+    let mut rng = Rng::new(41);
+    let mut receipts = Vec::new();
+    for _ in 0..8 {
+        let mut rows = vec![0.0; 25 * N_DIMS];
+        rng.fill_normal(&mut rows);
+        let r = client.ingest(&rows).unwrap();
+        receipts.push((r.offset as usize, rows));
+    }
+    proxy.stop();
+
+    // Rotate and watch the WAL through a clean connection (rotate is
+    // never retried, so it must not face the weather).
+    let mut analyst = ServiceClient::connect_tcp(&addr, "analyst").unwrap();
+    analyst.rotate().unwrap();
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let s = analyst.status().unwrap();
+        if s.wal_appends >= 1 && s.wal_lag_rows == 0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "WAL never caught up: {s:?}");
+        thread::sleep(Duration::from_millis(20));
+    }
+
+    let (recovered, _healed) = load_store_set_wal(&wal_path).unwrap();
+    for (offset, rows) in &receipts {
+        let chunk = reference.context(shard).sketch_chunk(rows, *offset);
+        reference.try_absorb(shard, chunk).unwrap();
+    }
+    reference.rotate_all();
+    let (got, _) = recovered.merged_window(None).unwrap();
+    let (want, _) = reference.merged_window(None).unwrap();
+    assert_eq!(got.count, want.count, "recovered WAL lost or double-counted acked rows");
+    assert_eq!(got.bounds, want.bounds);
+    assert_eq!(got.z().max_abs_diff(&want.z()), 0.0, "WAL recovery after faulty ingest not bit-identical");
+
+    analyst.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}

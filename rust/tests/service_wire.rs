@@ -39,8 +39,14 @@ fn random_dense_absorb(rng: &mut Rng, size: usize) -> Request {
         bounds.lo[d] = a;
         bounds.hi[d] = b;
     }
+    // Half the absorbs run leaseless (the v3 byte layout), half under a
+    // live v4 lease with a real sequence number.
+    let lease = if rng.below(2) == 0 { 0 } else { 1 + (rng.next_u64() >> 33) };
+    let seq = if lease == 0 { 0 } else { rng.next_u64() >> 20 };
     Request::Absorb {
         chunk: WireChunk::Dense(SketchAccumulator { sum, count: rng.below(1000), bounds }),
+        lease,
+        seq,
     }
 }
 
@@ -53,7 +59,7 @@ fn random_request(rng: &mut Rng, size: usize) -> Request {
     match rng.below(7) {
         0 => Request::Hello {
             producer: format!("producer-{}", rng.next_u64()),
-            protocol: protocol::MIN_PROTOCOL_VERSION + rng.below(2) as u32,
+            protocol: protocol::MIN_PROTOCOL_VERSION + rng.below(3) as u32,
         },
         1 => Request::ReserveRows { n_rows: rng.next_u64() >> 20 },
         2 => random_dense_absorb(rng, size),
@@ -74,7 +80,7 @@ fn random_request(rng: &mut Rng, size: usize) -> Request {
 
 fn random_response(rng: &mut Rng, size: usize) -> Response {
     match rng.below(6) {
-        0 => Response::Reserved { offset: rng.next_u64() >> 8 },
+        0 => Response::Reserved { offset: rng.next_u64() >> 8, lease: rng.next_u64() >> 32 },
         1 => Response::Rotated {
             evicted: (0..rng.below(size.max(1)))
                 .map(|_| (rng.below(4) as u32, rng.next_u64() >> 32))
@@ -231,10 +237,10 @@ fn quantized_chunks_roundtrip_via_packing() {
     rng.fill_normal(&mut rows);
 
     let chunk = store.context(1).sketch_chunk(&rows, 0);
-    let req = Request::Absorb { chunk: WireChunk::from_chunk(&chunk) };
+    let req = Request::Absorb { chunk: WireChunk::from_chunk(&chunk), lease: 9, seq: 2 };
     let back = decode_request(&encode_request(&req)).unwrap();
     assert_eq!(back, req);
-    let Request::Absorb { chunk: wire } = back else { unreachable!() };
+    let Request::Absorb { chunk: wire, lease: 9, seq: 2 } = back else { unreachable!() };
     // Raising back into a mergeable chunk revalidates the canonical form.
     let raised = wire.into_chunk().unwrap();
     assert_eq!(raised.count(), 40);
@@ -282,6 +288,68 @@ fn trailing_bytes_after_a_message_are_rejected() {
     let mut bytes = encode_response(&Response::ShutdownAck);
     bytes.push(0);
     assert!(decode_response(&bytes).is_err(), "response accepted a trailing byte");
+}
+
+// -- fault-tolerance wire properties (protocol v4) -----------------------
+
+/// An absorb frame cut anywhere mid-stream — header, chunk body, or
+/// inside the trailing `(lease, seq)` idempotency pair — surfaces as a
+/// typed framing/decoding error, never a panic and never a misparse that
+/// could merge a partial chunk.
+#[test]
+fn prop_truncated_absorb_frames_fail_typed() {
+    testing::check("truncated absorb", Config::default().cases(64).max_size(24), |rng, size| {
+        let req = random_dense_absorb(rng, size);
+        let payload = encode_request(&req);
+        let mut framed = Vec::new();
+        write_frame(&mut framed, &payload).map_err(|e| e.to_string())?;
+        let cut = 1 + rng.below(framed.len() - 1);
+        match read_frame(&mut Cursor::new(&framed[..cut])) {
+            Err(FrameError::Truncated) => {}
+            other => return Err(format!("cut at {cut}/{}: got {other:?}", framed.len())),
+        }
+        // Cutting the *payload* (a torn frame the proxy re-framed, or a
+        // buggy peer lying about its length) must also fail typed.
+        let inner_cut = rng.below(payload.len());
+        let _ = decode_request(&payload[..inner_cut]);
+        Ok(())
+    });
+}
+
+/// A replayed absorb is byte-identical to its first send and decodes to
+/// the same `(lease, seq)` — exactly the key the daemon's dedup window
+/// matches on, so a duplicate on the wire can never look like fresh data.
+#[test]
+fn prop_replayed_absorbs_carry_an_identical_dedup_key() {
+    testing::check("absorb replay identity", Config::default().cases(48).max_size(16), |rng, size| {
+        let req = random_dense_absorb(rng, size);
+        let (first, replay) = (encode_request(&req), encode_request(&req));
+        if first != replay {
+            return Err("re-encoding the same absorb changed its bytes".to_string());
+        }
+        let (a, b) = (
+            decode_request(&first).map_err(|e| e.to_string())?,
+            decode_request(&replay).map_err(|e| e.to_string())?,
+        );
+        match (&a, &b) {
+            (
+                Request::Absorb { lease: l1, seq: s1, .. },
+                Request::Absorb { lease: l2, seq: s2, .. },
+            ) => {
+                if (l1, s1) != (l2, s2) {
+                    return Err(format!("dedup keys diverged: ({l1},{s1}) vs ({l2},{s2})"));
+                }
+                if *l1 == 0 && *s1 != 0 {
+                    return Err("leaseless absorb must carry seq 0".to_string());
+                }
+            }
+            _ => return Err("decoded to a different verb".to_string()),
+        }
+        if a != b {
+            return Err("replay decoded differently".to_string());
+        }
+        Ok(())
+    });
 }
 
 #[test]
